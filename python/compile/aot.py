@@ -1,0 +1,181 @@
+"""AOT exporter — lowers every L2 graph to HLO **text** artifacts.
+
+Run once via `make artifacts`; Python never appears on the request path.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out-dir, default ../artifacts):
+  <variant>_<graph>_<mode>.hlo.txt   lowered computations
+  <variant>_init_{w,alpha,beta}.bin  raw little-endian f32 init vectors
+  manifest.json                      segment tables + artifact registry
+  golden_fp8.json                    quantizer golden vectors for the
+                                     Rust codec parity tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+
+# ---- model-variant registry -----------------------------------------
+# kind-level defaults chosen so one artifact set serves the whole bench
+# suite; server_p / u_steps / batch are baked into artifact shapes and
+# recorded in the manifest (the Rust config validates against them).
+VISION = dict(u_steps=10, batch=32, eval_batch=256, server_p=10,
+              optimizer="sgd")
+SPEECH = dict(u_steps=10, batch=16, eval_batch=256, server_p=8,
+              optimizer="adamw")
+
+VARIANTS = {
+    "mlp_c10": dict(model="mlp", classes=10, **VISION),
+    "lenet_c10": dict(model="lenet", classes=10, **VISION),
+    "lenet_c100": dict(model="lenet", classes=100, **VISION),
+    "resnet8_c10": dict(model="resnet8", classes=10, **VISION),
+    "resnet8_c100": dict(model="resnet8", classes=100, **VISION),
+    "matchbox": dict(model="matchbox", classes=12, **SPEECH),
+    "kwt": dict(model="kwt", classes=12, **SPEECH),
+}
+
+# QAT modes per variant: det + none everywhere (Table 1 / Fig 2);
+# rand additionally for the Table 2 ablation variants.
+RAND_QAT_VARIANTS = ("lenet_c100", "resnet8_c100", "lenet_c10")
+
+BETA_INIT = 4.0
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_variant(vname: str, cfg: dict, out_dir: str) -> dict:
+    from . import model as M
+
+    entry = {}
+    files = {}
+    for mode in ("det", "none") + (("rand",) if vname in RAND_QAT_VARIANTS
+                                   else ()):
+        mdl, _, lows = M.lowered_graphs(
+            cfg["model"], cfg["classes"], mode,
+            u_steps=cfg["u_steps"], batch=cfg["batch"],
+            eval_batch=cfg["eval_batch"], server_p=cfg["server_p"],
+            optimizer=cfg["optimizer"])
+        for gname, low in lows.items():
+            fname = f"{vname}_{gname}_{mode}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(low))
+            files[f"{gname}_{mode}"] = fname
+        entry["mdl"] = mdl
+
+    mdl = entry["mdl"]
+    spec = mdl["spec"]
+    # deterministic across processes (python's hash() is salted)
+    import zlib
+    rng = np.random.default_rng(zlib.crc32(vname.encode()))
+    w0, alpha0 = spec.init_flat(rng)
+    beta0 = np.full(mdl["n_act"], BETA_INIT, np.float32)
+    init = {}
+    for tag, arr in (("w", w0), ("alpha", alpha0), ("beta", beta0)):
+        fname = f"{vname}_init_{tag}.bin"
+        arr.astype("<f4").tofile(os.path.join(out_dir, fname))
+        init[tag] = fname
+
+    man = spec.to_manifest()
+    man.update(
+        n_act=mdl["n_act"], classes=cfg["classes"], kind=mdl["kind"],
+        input_shape=list(mdl["input_shape"]), u_steps=cfg["u_steps"],
+        batch=cfg["batch"], eval_batch=cfg["eval_batch"],
+        server_p=cfg["server_p"], optimizer=cfg["optimizer"],
+        artifacts=files, init=init)
+    return man
+
+
+def export_quant_demo(out_dir: str) -> dict:
+    """Standalone L1-kernel artifact: lets Rust integration tests run the
+    Pallas quantizer directly and compare it against the wire codec."""
+    import jax
+    import jax.numpy as jnp
+
+    from .kernels import fp8_quant
+
+    n = 1024
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def f(x, alpha, u):
+        return fp8_quant.fp8_quantize(x, alpha, u)
+
+    low = jax.jit(f).lower(s, s, s)
+    fname = "quant_demo.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as fh:
+        fh.write(to_hlo_text(low))
+    return {"file": fname, "n": n}
+
+
+def export_goldens(out_dir: str) -> None:
+    """Golden vectors: Rust codec must reproduce quantize_np (f64 math,
+    f32 result) and the 256-entry decode tables."""
+    from .kernels import ref
+
+    rng = np.random.default_rng(7)
+    cases = []
+    for alpha in (1.0, 0.6455, 3.7, 17.0, 0.015625):
+        x = (rng.normal(size=256) * alpha * 0.7).astype(np.float32)
+        # include exact edge cases
+        x[:8] = [0.0, alpha, -alpha, alpha * 2, -alpha * 2,
+                 alpha * 1e-6, np.float32(alpha) / 2, -np.float32(alpha) / 3]
+        u_det = np.full(x.shape, 0.5)
+        u_rnd = rng.random(size=x.shape)
+        q_det = ref.quantize_np(x, np.float32(alpha), u_det)
+        q_rnd = ref.quantize_np(x, np.float32(alpha), u_rnd)
+        cases.append({
+            "alpha": float(alpha),
+            "x": [float(v) for v in x],
+            "u": [float(v) for v in u_rnd],
+            "q_det": [float(v) for v in q_det],
+            "q_rand": [float(v) for v in q_rnd],
+        })
+    # decode tables: non-negative grid, 128 points per alpha
+    tables = {}
+    for alpha in (1.0, 3.7):
+        tables[str(alpha)] = [float(v) for v in
+                              ref.grid_points(alpha).astype(np.float32)]
+    with open(os.path.join(out_dir, "golden_fp8.json"), "w") as f:
+        json.dump({"m": ref.M_BITS, "e": ref.E_BITS, "cases": cases,
+                   "grids": tables}, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="all",
+                    help="comma-separated variant names or 'all'")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = (list(VARIANTS) if args.variants == "all"
+             else args.variants.split(","))
+    manifest = {"format": {"m": 3, "e": 4}, "models": {}}
+    for vname in names:
+        print(f"[aot] exporting {vname} ...", flush=True)
+        manifest["models"][vname] = export_variant(
+            vname, VARIANTS[vname], args.out_dir)
+    manifest["quant_demo"] = export_quant_demo(args.out_dir)
+    export_goldens(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} variants "
+          f"to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

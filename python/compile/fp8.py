@@ -1,0 +1,80 @@
+"""L2 glue — differentiable FP8 quantization-aware-training ops.
+
+Wraps the L1 Pallas kernel in `jax.custom_vjp` rules implementing the
+paper's gradient conventions (§2, "On-Device Quantization-Aware
+Training"):
+
+  * straight-through estimator through the rounding:   d round(z)/dz = 1
+  * `floor(log2|x| + b)` treated as a CONSTANT (Kuzmin et al.), so the
+    scale s does not contribute to dQ/dx;
+  * learnable clipping value alpha with the LSQ-style gradient that the
+    constant-c convention induces (s is proportional to alpha with c
+    frozen, hence Q(x) - x scales linearly in alpha locally):
+
+        dQ/dalpha = (Q(x) - x) / alpha      for |x| <= alpha
+                  =  sign(x)                for |x| >  alpha  (clipped)
+
+        dQ/dx     =  1                      for |x| <= alpha   (STE)
+                  =  0                      for |x| >  alpha
+
+The rounding threshold u is a non-differentiable input (0.5 for Q_det,
+uniform random for Q_rand), so one pair of fns serves both quantizers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fp8_quant
+
+
+@jax.custom_vjp
+def quantize_ste(x, alpha, u):
+    """FP8-quantize x with per-element clipping alpha; STE gradients."""
+    return fp8_quant.fp8_quantize_whole(x, alpha, u)
+
+
+def _quantize_fwd(x, alpha, u):
+    alpha_b = jnp.broadcast_to(jnp.asarray(alpha, x.dtype), x.shape)
+    q = fp8_quant.fp8_quantize_whole(x, alpha_b, u)
+    return q, (x, alpha_b, q)
+
+
+def _quantize_bwd(res, g):
+    x, alpha_b, q = res
+    inside = jnp.abs(x) <= alpha_b
+    dx = jnp.where(inside, g, jnp.zeros_like(g))
+    dalpha_elem = jnp.where(inside, (q - x) / alpha_b, jnp.sign(x)) * g
+    # alpha may have been broadcast from a scalar/smaller shape; jax sums
+    # the cotangent back automatically only if we return the broadcast
+    # shape and the caller used jnp.broadcast_to explicitly. We return the
+    # per-element cotangent; callers pass alpha already expanded.
+    return dx, dalpha_elem, None
+
+
+quantize_ste.defvjp(_quantize_fwd, _quantize_bwd)
+
+
+def quantize_weights(w_flat, alpha_elem, qmask, u):
+    """Quantize the full flat weight vector in one kernel launch.
+
+    alpha_elem: per-element clipping values (per-tensor alphas expanded
+    by the model's segment table). qmask: static bool vector — biases and
+    normalization parameters are NOT quantized (paper §4: <2% of params,
+    sent in FP32). Gradients flow to alpha_elem only through quantized
+    positions.
+    """
+    q = quantize_ste(w_flat, alpha_elem, u)
+    return jnp.where(qmask, q, w_flat)
+
+
+def quantize_act(a, beta, u_scalar):
+    """Activation fake-quant with scalar learnable clip beta.
+
+    beta enters via broadcast; its cotangent is the sum over the tensor
+    (handled by broadcast_to's transpose).
+    """
+    beta_b = jnp.broadcast_to(beta, a.shape)
+    u = jnp.full(a.shape, u_scalar, a.dtype)
+    return quantize_ste(a, beta_b, u)

@@ -1,0 +1,120 @@
+"""L1 — Pallas kernel for flexible-bias FP8 quantization.
+
+The compute hot-spot of FP8FedAvg-UQ: every local training step quantizes
+the full (flat) weight vector and every activation tensor onto the FP8
+grid. The kernel is element-wise over (x, alpha, u):
+
+    x      values to quantize
+    alpha  per-element clipping value (per-tensor alphas are expanded to
+           per-element by the caller, so ONE kernel launch covers all
+           weight tensors of the network)
+    u      rounding threshold in [0,1): 0.5 = deterministic round-half-up,
+           uniform random = unbiased stochastic rounding
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper simulates
+FP8 on CUDA GPUs; on TPU this op is VPU-bound element-wise work. We tile
+the flat vector into (BLOCK_ROWS, 128)-shaped VMEM blocks — 128 is the TPU
+lane width — and sweep the row dimension with the grid so HBM<->VMEM
+transfers are double-buffered by the Mosaic pipeline. On CPU (this repo's
+execution substrate) the kernel MUST run with interpret=True: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Under jit, interpret mode inlines into plain HLO, so the exported artifact
+is self-contained.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANES = 128  # TPU vector lane width; last-dim tile size.
+DEFAULT_BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KiB VMEM per operand.
+
+
+def _quant_kernel(x_ref, a_ref, u_ref, o_ref):
+    """Element-wise FP8 quantization of one VMEM block."""
+    x = x_ref[...]
+    alpha = a_ref[...]
+    u = u_ref[...]
+    b = 2.0**ref.E_BITS - jnp.log2(alpha) + ref.LOG2_TOP - 1.0
+    absx = jnp.abs(x)
+    safe = jnp.where(absx > 0, absx, jnp.ones_like(absx))
+    c = jnp.floor(jnp.log2(safe) + b)
+    log2s = jnp.where(c > 1.0, c, jnp.ones_like(c)) - b - ref.M_BITS
+    s = jnp.exp2(log2s)
+    z = x / s
+    f = jnp.floor(z)
+    q = (f + (z - f >= u).astype(x.dtype)) * s
+    q = jnp.clip(q, -alpha, alpha)
+    o_ref[...] = jnp.where(absx > 0, q, jnp.zeros_like(q))
+
+
+def fp8_quantize(x, alpha, u, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = True):
+    """Quantize an arbitrary-shape array onto the FP8(alpha) grid.
+
+    alpha and u are broadcast to x's shape. The array is flattened,
+    padded to a whole number of (block_rows, LANES) tiles and swept by a
+    1-D grid; per-block VMEM footprint is 4 tiles (x, alpha, u, out).
+    """
+    orig_shape = x.shape
+    dtype = x.dtype
+    xf = jnp.ravel(x)
+    af = jnp.broadcast_to(jnp.asarray(alpha, dtype), x.shape).ravel()
+    uf = jnp.broadcast_to(jnp.asarray(u, dtype), x.shape).ravel()
+
+    n = xf.shape[0]
+    tile = block_rows * LANES
+    rows = -(-n // LANES)  # ceil-div: rows of 128 lanes
+    grid_rows = -(-rows // block_rows) * block_rows
+    pad = grid_rows * LANES - n
+    # Pad with ones: log2(1) is finite, keeps the kernel free of special
+    # cases for the padding tail.
+    xf = jnp.concatenate([xf, jnp.ones((pad,), dtype)])
+    af = jnp.concatenate([af, jnp.ones((pad,), dtype)])
+    uf = jnp.concatenate([uf, jnp.full((pad,), 0.5, dtype)])
+
+    x2 = xf.reshape(grid_rows, LANES)
+    a2 = af.reshape(grid_rows, LANES)
+    u2 = uf.reshape(grid_rows, LANES)
+
+    grid = (grid_rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((grid_rows, LANES), dtype),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(x2, a2, u2)
+    return out.ravel()[:n].reshape(orig_shape)
+
+
+def fp8_quantize_whole(x, alpha, u, *, interpret: bool = True):
+    """Single-block variant (no grid): whole array as one VMEM block.
+
+    Used for small tensors (activations) where tiling overhead dominates;
+    also the fallback exercised by the shape-sweep hypothesis tests.
+    """
+    orig_shape = x.shape
+    dtype = x.dtype
+    xf = jnp.ravel(x)
+    af = jnp.broadcast_to(jnp.asarray(alpha, dtype), x.shape).ravel()
+    uf = jnp.broadcast_to(jnp.asarray(u, dtype), x.shape).ravel()
+    n = xf.shape[0]
+    pad = (-n) % LANES
+    xf = jnp.concatenate([xf, jnp.ones((pad,), dtype)])
+    af = jnp.concatenate([af, jnp.ones((pad,), dtype)])
+    uf = jnp.concatenate([uf, jnp.full((pad,), 0.5, dtype)])
+    rows = (n + pad) // LANES
+    out = pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), dtype),
+        interpret=interpret,
+    )(xf.reshape(rows, LANES), af.reshape(rows, LANES),
+      uf.reshape(rows, LANES))
+    return out.ravel()[:n].reshape(orig_shape)

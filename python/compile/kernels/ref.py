@@ -1,0 +1,114 @@
+"""Pure-jnp / numpy oracle for the flexible-bias FP8 quantizer.
+
+This is the single written-out source of truth for the number format used
+by all three layers (Pallas kernel, JAX QAT graphs, Rust wire codec):
+
+    1 sign bit, e=4 exponent bits, m=3 mantissa bits, *real-valued*
+    exponent bias derived from the per-tensor clipping value alpha
+    (Kuzmin et al., "FP8 quantization: the power of the exponent"):
+
+        b = 2^e - log2(alpha) + log2(2 - 2^-m) - 1
+
+    so that the largest finite code (E=15, M=7) decodes exactly to alpha.
+
+Quantization of x (paper Eq. 2):
+
+        c      = floor(log2|x| + b)
+        log2 s = c - b - m         if c > 1      (normal range)
+               = 1 - b - m         otherwise     (subnormal range)
+        q      = s * rnd(x / s),   clipped to [-alpha, alpha]
+
+`rnd` is parameterised by a uniform sample u in [0, 1):
+
+        rnd(z) = floor(z) + [frac(z) >= u]
+
+    u = 0.5        -> deterministic round-half-up        (Q_det)
+    u ~ U[0, 1)    -> unbiased stochastic rounding       (Q_rand)
+                      (P[round up] = frac(z), Lemma 3 of the paper)
+
+Two implementations live here:
+  * `quantize` — jnp, float32, traceable; the oracle the Pallas kernel is
+    tested against.
+  * `quantize_np` — numpy, float64 internal math, float32 in/out; the
+    oracle the Rust codec is tested against (the Rust codec also computes
+    in f64 and casts the dequantized result to f32).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+M_BITS = 3
+E_BITS = 4
+# log2(2 - 2^-m): offset making the top code land exactly on alpha.
+LOG2_TOP = float(np.log2(2.0 - 2.0 ** (-M_BITS)))
+
+
+def bias_from_alpha(alpha):
+    """Real-valued exponent bias b for clipping value alpha (jnp)."""
+    return 2.0**E_BITS - jnp.log2(alpha) + LOG2_TOP - 1.0
+
+
+def scale(x, alpha):
+    """Element-wise quantization scale s_i (paper Eq. 2), jnp."""
+    b = bias_from_alpha(alpha)
+    absx = jnp.abs(x)
+    safe = jnp.where(absx > 0, absx, jnp.ones_like(absx))
+    c = jnp.floor(jnp.log2(safe) + b)
+    log2s = jnp.where(c > 1.0, c, jnp.ones_like(c)) - b - M_BITS
+    return jnp.exp2(log2s)
+
+
+def quantize(x, alpha, u):
+    """Quantize x onto the FP8(alpha) grid; u parameterises the rounding.
+
+    x, u: same-shape arrays. alpha: scalar or broadcastable array of
+    per-element clipping values. u = 0.5 gives Q_det; u ~ U[0,1) gives
+    Q_rand. Output is float32 values lying exactly on the grid.
+    """
+    s = scale(x, alpha)
+    z = x / s
+    f = jnp.floor(z)
+    up = (z - f >= u).astype(x.dtype)
+    q = (f + up) * s
+    q = jnp.clip(q, -alpha, alpha)
+    return jnp.where(jnp.abs(x) > 0, q, jnp.zeros_like(q))
+
+
+def quantize_np(x, alpha, u):
+    """float64-internal numpy twin of `quantize` (Rust-codec oracle)."""
+    x64 = np.asarray(x, dtype=np.float64)
+    a64 = np.asarray(alpha, dtype=np.float64)
+    u64 = np.asarray(u, dtype=np.float64)
+    b = 2.0**E_BITS - np.log2(a64) + LOG2_TOP - 1.0
+    absx = np.abs(x64)
+    safe = np.where(absx > 0, absx, 1.0)
+    c = np.floor(np.log2(safe) + b)
+    log2s = np.where(c > 1.0, c, 1.0) - b - M_BITS
+    s = np.exp2(log2s)
+    z = x64 / s
+    f = np.floor(z)
+    q = (f + (z - f >= u64)) * s
+    q = np.clip(q, -a64, a64)
+    q = np.where(absx > 0, q, 0.0)
+    return q.astype(np.float32)
+
+
+def grid_points(alpha: float) -> np.ndarray:
+    """All non-negative representable values for a given alpha (float64).
+
+    Used by property tests: every quantizer output must be a grid member;
+    grid spacing must be monotone non-decreasing away from zero (the
+    condition under which the paper's Lemma 5 holds).
+    """
+    b = 2.0**E_BITS - np.log2(float(alpha)) + LOG2_TOP - 1.0
+    pts = []
+    for enc in range(2**E_BITS):
+        for man in range(2**M_BITS):
+            if enc == 0:
+                v = 2.0 ** (1.0 - b) * man / 2.0**M_BITS
+            else:
+                v = 2.0 ** (enc - b) * (1.0 + man / 2.0**M_BITS)
+            pts.append(v)
+    return np.array(sorted(set(pts)))

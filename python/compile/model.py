@@ -1,0 +1,256 @@
+"""L2 — the jax compute graphs exported as AOT artifacts.
+
+For every model variant four graph families are built (per QAT mode
+det / rand / none):
+
+  local_update   one full client round: `lax.scan` over U local
+                 SGD/AdamW steps of quantization-aware training. Scanning
+                 inside the artifact (instead of one-step dispatch from
+                 Rust) amortizes dispatch overhead U-fold and lets XLA
+                 fuse the optimizer update into the backward pass — this
+                 is the L2 perf deliverable (see EXPERIMENTS.md §Perf).
+  evaluate       test loss-sum + correct-count on one batch (quantized
+                 weights for FP8 modes — the paper evaluates the
+                 quantized server model).
+  server_opt     one gradient-descent step of ServerOptimize Eq. (4):
+                 min_w sum_k (n_k/m_t) ||Q_rand(w; abar) - w_hat_k||^2
+                 with STE gradients through Q_rand; the Eq. (5) alpha
+                 grid search runs in Rust on the wire codec.
+  forward        logits only (debug / example use).
+
+ABI (all f32 unless noted): flat weights w[D], per-tensor clips
+alpha[A], activation clips beta[n_act]; batches xs[U,B,...]/ys[U,B] i32;
+scalars lr, wd; seed i32 (only read by `rand` variants).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fp8
+from .models import BUILDERS, common
+
+ALPHA_MIN = 1e-3
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def build_model(name: str, classes: int, **kw):
+    return BUILDERS[name](classes, **kw)
+
+
+def _act_sizes(model) -> list:
+    """Per-site activation element counts per example (for LSQ-style
+    gradient normalization of beta), recorded via an abstract dry run."""
+    sizes = {}
+
+    def qact(site, a):
+        sizes[site] = int(np.prod(a.shape[1:]))
+        return a
+
+    spec = model["spec"]
+    x = jnp.zeros((2,) + tuple(model["input_shape"]), jnp.float32)
+    w = jnp.zeros((spec.dim,), jnp.float32)
+    jax.eval_shape(lambda w, x: model["apply"](spec.unflatten(w), x, qact),
+                   w, x)
+    return [sizes.get(i, 1) for i in range(model["n_act"])]
+
+
+class Graphs:
+    """Traced-graph factory for one (model, qat_mode) pair."""
+
+    def __init__(self, model: dict, qat_mode: str):
+        assert qat_mode in ("det", "rand", "none")
+        self.model = model
+        self.spec = model["spec"]
+        self.mode = qat_mode
+        self.qmask = jnp.asarray(self.spec.qmask)
+        self.alpha_gscale = jnp.sqrt(
+            jnp.asarray(self.spec.alpha_sizes, jnp.float32))
+        sizes = _act_sizes(model)
+        self.beta_gscale = jnp.sqrt(jnp.asarray(sizes, jnp.float32))
+
+    # ---- forward / loss -------------------------------------------
+    def forward(self, w, alpha, beta, x, key):
+        spec, mode = self.spec, self.mode
+        if mode == "none":
+            params = spec.unflatten(w)
+            return self.model["apply"](params, x, lambda s, a: a)
+        alpha_el = spec.alpha_elem(alpha)
+        if mode == "det":
+            u_w = jnp.full(w.shape, 0.5, w.dtype)
+        else:
+            u_w = jax.random.uniform(jax.random.fold_in(key, 0xFFFF),
+                                     w.shape, w.dtype)
+        wq = fp8.quantize_weights(w, alpha_el, self.qmask, u_w)
+        params = spec.unflatten(wq)
+
+        def qact(site, a):
+            if mode == "det":
+                u = jnp.full(a.shape, 0.5, a.dtype)
+            else:
+                u = jax.random.uniform(jax.random.fold_in(key, site),
+                                       a.shape, a.dtype)
+            return fp8.quantize_act(a, beta[site], u)
+
+        return self.model["apply"](params, x, qact)
+
+    def loss(self, w, alpha, beta, x, y, key):
+        logits = self.forward(w, alpha, beta, x, key)
+        return common.cross_entropy(logits, y)
+
+    # ---- local updates ---------------------------------------------
+    def local_update_sgd(self, w, alpha, beta, xs, ys, lr, wd, seed):
+        """U steps of local SGD with weight decay (image tasks)."""
+        u_steps = xs.shape[0]
+        base = jax.random.PRNGKey(seed)
+        keys = jax.random.split(base, u_steps)
+
+        def step(carry, inp):
+            w, alpha, beta = carry
+            x, y, key = inp
+            l, grads = jax.value_and_grad(
+                lambda w, a, b: self.loss(w, a, b, x, y, key),
+                argnums=(0, 1, 2))(w, alpha, beta)
+            gw, ga, gb = grads
+            w = w - lr * (gw + wd * w)
+            alpha = jnp.maximum(alpha - lr * ga / self.alpha_gscale,
+                                ALPHA_MIN)
+            beta = jnp.maximum(beta - lr * gb / self.beta_gscale,
+                               ALPHA_MIN)
+            return (w, alpha, beta), l
+
+        (w, alpha, beta), losses = jax.lax.scan(
+            step, (w, alpha, beta), (xs, ys, keys))
+        return w, alpha, beta, losses.mean()
+
+    def local_update_adamw(self, w, alpha, beta, xs, ys, lr, wd, seed):
+        """U steps of local AdamW (speech tasks); optimizer state is
+        reset at round start (standard FL practice)."""
+        u_steps = xs.shape[0]
+        base = jax.random.PRNGKey(seed)
+        keys = jax.random.split(base, u_steps)
+        zeros = lambda v: jnp.zeros_like(v)
+        state0 = ((w, alpha, beta),
+                  (zeros(w), zeros(alpha), zeros(beta)),
+                  (zeros(w), zeros(alpha), zeros(beta)),
+                  jnp.zeros((), jnp.float32))
+
+        def step(carry, inp):
+            (w, alpha, beta), ms, vs, t = carry
+            x, y, key = inp
+            l, grads = jax.value_and_grad(
+                lambda w, a, b: self.loss(w, a, b, x, y, key),
+                argnums=(0, 1, 2))(w, alpha, beta)
+            gw, ga, gb = grads
+            ga = ga / self.alpha_gscale
+            gb = gb / self.beta_gscale
+            t = t + 1.0
+            c1 = 1.0 - ADAM_B1 ** t
+            c2 = 1.0 - ADAM_B2 ** t
+
+            def upd(p, m, v, g, decay):
+                m = ADAM_B1 * m + (1 - ADAM_B1) * g
+                v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+                p = p - lr * ((m / c1) / (jnp.sqrt(v / c2) + ADAM_EPS)
+                              + decay * p)
+                return p, m, v
+
+            w, mw, vw = upd(w, ms[0], vs[0], gw, wd)
+            alpha, ma, va = upd(alpha, ms[1], vs[1], ga, 0.0)
+            beta, mb, vb = upd(beta, ms[2], vs[2], gb, 0.0)
+            alpha = jnp.maximum(alpha, ALPHA_MIN)
+            beta = jnp.maximum(beta, ALPHA_MIN)
+            return (((w, alpha, beta), (mw, ma, mb), (vw, va, vb), t), l)
+
+        (params, _, _, _), losses = jax.lax.scan(
+            step, state0, (xs, ys, keys))
+        w, alpha, beta = params
+        return w, alpha, beta, losses.mean()
+
+    # ---- evaluation -------------------------------------------------
+    def evaluate(self, w, alpha, beta, x, y):
+        """Deterministic (u=0.5) quantized eval for FP8 modes."""
+        key = jax.random.PRNGKey(0)
+        mode = self.mode
+        if mode == "rand":
+            # evaluation is always deterministic
+            g = Graphs.__new__(Graphs)
+            g.__dict__.update(self.__dict__)
+            g.mode = "det"
+            logits = g.forward(w, alpha, beta, x, key)
+        else:
+            logits = self.forward(w, alpha, beta, x, key)
+        logz = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=logz.dtype)
+        nll = -(logz * onehot).sum()
+        correct = (jnp.argmax(logits, axis=1) == y).sum().astype(jnp.int32)
+        return nll, correct
+
+    # ---- ServerOptimize Eq. (4) -------------------------------------
+    def server_opt_step(self, w, alpha, clients, kweights, u, lr):
+        """One GD step on sum_k kw_k ||Q_rand(w; alpha) - what_k||^2.
+
+        clients: dequantized client uplinks [P, D] (already on their own
+        grids); u: the round's stochastic-rounding draw for Q_rand(w),
+        supplied by the Rust coordinator's RNG.
+        """
+        alpha_el = self.spec.alpha_elem(alpha)
+
+        def mse(w):
+            qw = fp8.quantize_weights(w, alpha_el, self.qmask, u)
+            d = qw[None, :] - clients
+            return jnp.sum(kweights * jnp.sum(d * d, axis=1))
+
+        val, gw = jax.value_and_grad(mse)(w)
+        return w - lr * gw, val
+
+
+# ---- export-ready jitted signatures --------------------------------
+
+def lowered_graphs(name: str, classes: int, qat_mode: str, *,
+                   u_steps: int, batch: int, eval_batch: int,
+                   server_p: int, optimizer: str, model_kw=None):
+    """Build all lowered (not yet serialized) computations for a model
+    variant; returns (model, {artifact_name: lowered})."""
+    model = build_model(name, classes, **(model_kw or {}))
+    g = Graphs(model, qat_mode)
+    spec = model["spec"]
+    ishape = tuple(model["input_shape"])
+    f32 = jnp.float32
+    s_w = jax.ShapeDtypeStruct((spec.dim,), f32)
+    s_a = jax.ShapeDtypeStruct((spec.alpha_dim,), f32)
+    s_b = jax.ShapeDtypeStruct((model["n_act"],), f32)
+    s_xs = jax.ShapeDtypeStruct((u_steps, batch) + ishape, f32)
+    s_ys = jax.ShapeDtypeStruct((u_steps, batch), jnp.int32)
+    s_x = jax.ShapeDtypeStruct((eval_batch,) + ishape, f32)
+    s_y = jax.ShapeDtypeStruct((eval_batch,), jnp.int32)
+    s_s = jax.ShapeDtypeStruct((), f32)
+    s_seed = jax.ShapeDtypeStruct((), jnp.int32)
+    s_cl = jax.ShapeDtypeStruct((server_p, spec.dim), f32)
+    s_kw = jax.ShapeDtypeStruct((server_p,), f32)
+
+    upd = (g.local_update_adamw if optimizer == "adamw"
+           else g.local_update_sgd)
+
+    def local_update(w, alpha, beta, xs, ys, lr, wd, seed):
+        return upd(w, alpha, beta, xs, ys, lr, wd, seed)
+
+    def evaluate(w, alpha, beta, x, y):
+        return g.evaluate(w, alpha, beta, x, y)
+
+    def server_opt(w, alpha, clients, kweights, u, lr):
+        return g.server_opt_step(w, alpha, clients, kweights, u, lr)
+
+    out = {
+        "local_update": jax.jit(local_update, keep_unused=True).lower(
+            s_w, s_a, s_b, s_xs, s_ys, s_s, s_s, s_seed),
+        "evaluate": jax.jit(evaluate, keep_unused=True).lower(s_w, s_a, s_b, s_x, s_y),
+    }
+    if qat_mode != "none":
+        out["server_opt"] = jax.jit(server_opt, keep_unused=True).lower(
+            s_w, s_a, s_cl, s_kw, s_w, s_s)
+    return model, g, out

@@ -1,0 +1,20 @@
+"""Model zoo: reduced-scale stand-ins for the paper's architectures.
+
+| paper model        | here       |
+|--------------------|------------|
+| LeNet              | `lenet`    |
+| ResNet18 (GN)      | `resnet8`  |
+| MatchboxNet 3x1x64 | `matchbox` |
+| KWT-1              | `kwt`      |
+| (quickstart)       | `mlp`      |
+"""
+
+from . import kwt, lenet, matchbox, mlp, resnet8  # noqa: F401
+
+BUILDERS = {
+    "mlp": mlp.build,
+    "lenet": lenet.build,
+    "resnet8": resnet8.build,
+    "matchbox": matchbox.build,
+    "kwt": kwt.build,
+}

@@ -1,0 +1,199 @@
+"""Flat-parameter-vector model framework shared by the model zoo.
+
+The L3 <-> L2 ABI is a single flat f32 vector `w[D]` plus a per-tensor
+clipping vector `alpha[A]` (weights) and `beta[n_act]` (activations).
+Each model declares an ordered list of named parameter segments; the
+builder derives
+
+  * `qmask[D]`      — static bool, True where the element is quantized
+                      (biases and normalization parameters are excluded,
+                      paper §4),
+  * `alpha_index[D]`— static int32 mapping each element to its tensor's
+                      alpha entry (A == dummy for unquantized elements),
+  * `sizes[A]`      — quantized-segment sizes (for LSQ-style alpha
+                      gradient scaling),
+
+and init routines (He/Glorot for weights, alpha_0 = max|w_seg| as in the
+paper, "alpha is first initialized using the maximum absolute value of
+each weight range").
+
+Everything here is build-time Python; the segment table is serialized to
+`manifest.json` so the Rust coordinator can drive its wire codec
+per-tensor without any pytree logic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str
+    shape: tuple
+    quant: bool
+    init: str
+    offset: int = 0
+    size: int = 0
+    alpha_idx: Optional[int] = None
+    fan_in: int = 1
+
+
+class SpecBuilder:
+    def __init__(self):
+        self.segs: list[Segment] = []
+
+    def add(self, name: str, shape, *, quant: bool = True,
+            init: str = "he", fan_in: int = 0) -> str:
+        shape = tuple(int(s) for s in shape)
+        if fan_in == 0:
+            # conv HWIO / dense IO: everything but the last dim feeds in
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        self.segs.append(Segment(name, shape, quant, init, fan_in=fan_in))
+        return name
+
+    def build(self) -> "ParamSpec":
+        off, aidx = 0, 0
+        for s in self.segs:
+            s.offset = off
+            s.size = int(np.prod(s.shape))
+            off += s.size
+            if s.quant:
+                s.alpha_idx = aidx
+                aidx += 1
+        return ParamSpec(self.segs, off, aidx)
+
+
+class ParamSpec:
+    def __init__(self, segs, dim, alpha_dim):
+        self.segs = segs
+        self.dim = dim
+        self.alpha_dim = alpha_dim
+        qmask = np.zeros(dim, dtype=bool)
+        aindex = np.full(dim, alpha_dim, dtype=np.int32)
+        sizes = np.ones(alpha_dim, dtype=np.float32)
+        for s in segs:
+            if s.quant:
+                qmask[s.offset:s.offset + s.size] = True
+                aindex[s.offset:s.offset + s.size] = s.alpha_idx
+                sizes[s.alpha_idx] = s.size
+        self.qmask = qmask
+        self.alpha_index = aindex
+        self.alpha_sizes = sizes
+
+    # ---- init ------------------------------------------------------
+    def init_flat(self, rng: np.random.Generator):
+        w = np.zeros(self.dim, dtype=np.float32)
+        for s in self.segs:
+            if s.init == "zeros":
+                part = np.zeros(s.shape, np.float32)
+            elif s.init == "ones":
+                part = np.ones(s.shape, np.float32)
+            elif s.init == "normal02":
+                part = rng.normal(0, 0.02, s.shape).astype(np.float32)
+            else:  # he
+                std = float(np.sqrt(2.0 / max(s.fan_in, 1)))
+                part = rng.normal(0, std, s.shape).astype(np.float32)
+            w[s.offset:s.offset + s.size] = part.ravel()
+        alpha = np.ones(self.alpha_dim, dtype=np.float32)
+        for s in self.segs:
+            if s.quant:
+                seg = w[s.offset:s.offset + s.size]
+                alpha[s.alpha_idx] = max(float(np.abs(seg).max()), 1e-3)
+        return w, alpha
+
+    # ---- traced helpers --------------------------------------------
+    def unflatten(self, w_flat) -> dict:
+        return {s.name: jax.lax.dynamic_slice_in_dim(
+                    w_flat, s.offset, s.size).reshape(s.shape)
+                for s in self.segs}
+
+    def alpha_elem(self, alpha_vec):
+        """Expand per-tensor alphas to per-element values.
+
+        Built from static slices + broadcasts + one concatenate — NOT
+        `jnp.take`: xla_extension 0.5.1 (the AOT runtime) mis-executes
+        the gather-with-NaN-fill pattern modern jax emits for take,
+        poisoning the whole graph (see DESIGN.md §Gotchas).
+        Unquantized segments get the dummy clip 1.0.
+        """
+        parts = []
+        for s in self.segs:
+            if s.quant:
+                a = jax.lax.slice(alpha_vec, (s.alpha_idx,),
+                                  (s.alpha_idx + 1,))
+                parts.append(jnp.broadcast_to(a, (s.size,)))
+            else:
+                parts.append(jnp.ones((s.size,), alpha_vec.dtype))
+        return jnp.concatenate(parts)
+
+    def to_manifest(self) -> dict:
+        return {
+            "dim": self.dim,
+            "alpha_dim": self.alpha_dim,
+            "segments": [
+                {"name": s.name, "shape": list(s.shape), "offset": s.offset,
+                 "size": s.size, "quantized": s.quant,
+                 "alpha_idx": s.alpha_idx}
+                for s in self.segs
+            ],
+        }
+
+
+# ---- shared layer helpers (traced) ---------------------------------
+
+def conv2d(x, w, stride=1):
+    """NHWC x HWIO 'SAME' conv."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv1d(x, w, stride=1, groups=1):
+    """NTC x TIO 'SAME' 1-D conv."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,), "SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=groups)
+
+
+def group_norm(x, gamma, bias, groups, eps=1e-5):
+    """GroupNorm over the channel (last) axis of NHWC / NTC tensors.
+
+    The paper replaces BatchNorm with GroupNorm (Hsieh et al.: BN breaks
+    under skewed federated splits); gamma/bias are NOT quantized.
+    """
+    orig = x.shape
+    c = orig[-1]
+    g = min(groups, c)
+    xg = x.reshape(orig[:-1] + (g, c // g))
+    red = tuple(range(1, len(orig) - 1)) + (len(orig),)
+    mean = xg.mean(axis=red, keepdims=True)
+    var = xg.var(axis=red, keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(orig)
+    return xn * gamma + bias
+
+
+def layer_norm(x, gamma, bias, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + bias
+
+
+def avg_pool2(x):
+    """2x2 average pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+def cross_entropy(logits, labels):
+    """Mean CE via one-hot mask (no take_along_axis: its gather form
+    breaks on the xla_extension 0.5.1 runtime — see `alpha_elem`)."""
+    logz = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logz.dtype)
+    return -(logz * onehot).sum(axis=-1).mean()

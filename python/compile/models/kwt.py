@@ -1,0 +1,75 @@
+"""KWT-style tiny keyword-spotting transformer.
+
+Patchify the (T, F) spectrogram along time (patch = `patch_t` frames),
+linear-embed to `dim`, prepend a CLS token, add learned positional
+embeddings, run `depth` pre-LN transformer blocks (MHA + MLP), classify
+from the CLS token. LayerNorm parameters are NOT quantized (paper §4);
+all linear weights are.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def build(classes: int, t: int = 32, f: int = 16, patch_t: int = 4,
+          dim: int = 32, depth: int = 2, heads: int = 2):
+    n_tok = t // patch_t
+    d_patch = patch_t * f
+    sb = common.SpecBuilder()
+    sb.add("embed.w", (d_patch, dim))
+    sb.add("embed.b", (dim,), quant=False, init="zeros")
+    sb.add("cls", (1, dim), quant=False, init="normal02")
+    sb.add("pos", (n_tok + 1, dim), quant=False, init="normal02")
+    for i in range(depth):
+        pre = f"l{i}."
+        sb.add(pre + "ln1.g", (dim,), quant=False, init="ones")
+        sb.add(pre + "ln1.b", (dim,), quant=False, init="zeros")
+        sb.add(pre + "qkv.w", (dim, 3 * dim))
+        sb.add(pre + "qkv.b", (3 * dim,), quant=False, init="zeros")
+        sb.add(pre + "proj.w", (dim, dim))
+        sb.add(pre + "proj.b", (dim,), quant=False, init="zeros")
+        sb.add(pre + "ln2.g", (dim,), quant=False, init="ones")
+        sb.add(pre + "ln2.b", (dim,), quant=False, init="zeros")
+        sb.add(pre + "mlp1.w", (dim, 2 * dim))
+        sb.add(pre + "mlp1.b", (2 * dim,), quant=False, init="zeros")
+        sb.add(pre + "mlp2.w", (2 * dim, dim))
+        sb.add(pre + "mlp2.b", (dim,), quant=False, init="zeros")
+    sb.add("head.ln.g", (dim,), quant=False, init="ones")
+    sb.add("head.ln.b", (dim,), quant=False, init="zeros")
+    sb.add("head.w", (dim, classes))
+    sb.add("head.b", (classes,), quant=False, init="zeros")
+    spec = sb.build()
+    dh = dim // heads
+
+    def apply(p, x, qact):
+        site = 0
+        bsz = x.shape[0]
+        tok = x.reshape(bsz, n_tok, d_patch) @ p["embed.w"] + p["embed.b"]
+        cls = jnp.broadcast_to(p["cls"], (bsz, 1, dim))
+        a = jnp.concatenate([cls, tok], axis=1) + p["pos"]
+        a = qact(site, a); site += 1
+        n = n_tok + 1
+        for i in range(depth):
+            pre = f"l{i}."
+            h = common.layer_norm(a, p[pre + "ln1.g"], p[pre + "ln1.b"])
+            qkv = h @ p[pre + "qkv.w"] + p[pre + "qkv.b"]
+            qkv = qkv.reshape(bsz, n, 3, heads, dh)
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            att = jnp.einsum("bnhd,bmhd->bhnm", q, k) / jnp.sqrt(float(dh))
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhnm,bmhd->bnhd", att, v).reshape(bsz, n, dim)
+            a = a + qact(site, o @ p[pre + "proj.w"] + p[pre + "proj.b"])
+            site += 1
+            h = common.layer_norm(a, p[pre + "ln2.g"], p[pre + "ln2.b"])
+            h = jax.nn.gelu(h @ p[pre + "mlp1.w"] + p[pre + "mlp1.b"])
+            a = a + qact(site, h @ p[pre + "mlp2.w"] + p[pre + "mlp2.b"])
+            site += 1
+        h = common.layer_norm(a[:, 0], p["head.ln.g"], p["head.ln.b"])
+        return h @ p["head.w"] + p["head.b"]
+
+    return dict(spec=spec, apply=apply, n_act=1 + 2 * depth,
+                input_shape=(t, f), kind="speech", classes=classes)

@@ -1,0 +1,44 @@
+"""LeNet-style conv net with GroupNorm (paper's small vision model).
+
+conv3x3(3->8) GN relu Q pool | conv3x3(8->16) GN relu Q pool |
+fc(16*h/4*w/4 -> 32) relu Q | fc(32 -> classes)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def build(classes: int, h: int = 8, w: int = 8, c: int = 3,
+          c1: int = 8, c2: int = 16, fc: int = 32):
+    flat = (h // 4) * (w // 4) * c2
+    sb = common.SpecBuilder()
+    sb.add("conv1.w", (3, 3, c, c1))
+    sb.add("gn1.g", (c1,), quant=False, init="ones")
+    sb.add("gn1.b", (c1,), quant=False, init="zeros")
+    sb.add("conv2.w", (3, 3, c1, c2))
+    sb.add("gn2.g", (c2,), quant=False, init="ones")
+    sb.add("gn2.b", (c2,), quant=False, init="zeros")
+    sb.add("fc1.w", (flat, fc))
+    sb.add("fc1.b", (fc,), quant=False, init="zeros")
+    sb.add("fc2.w", (fc, classes))
+    sb.add("fc2.b", (classes,), quant=False, init="zeros")
+    spec = sb.build()
+
+    def apply(p, x, qact):
+        a = common.conv2d(x, p["conv1.w"])
+        a = common.group_norm(a, p["gn1.g"], p["gn1.b"], 2)
+        a = qact(0, jnp.maximum(a, 0.0))
+        a = common.avg_pool2(a)
+        a = common.conv2d(a, p["conv2.w"])
+        a = common.group_norm(a, p["gn2.g"], p["gn2.b"], 4)
+        a = qact(1, jnp.maximum(a, 0.0))
+        a = common.avg_pool2(a)
+        a = a.reshape(a.shape[0], -1)
+        a = qact(2, jnp.maximum(a @ p["fc1.w"] + p["fc1.b"], 0.0))
+        return a @ p["fc2.w"] + p["fc2.b"]
+
+    return dict(spec=spec, apply=apply, n_act=3,
+                input_shape=(h, w, c), kind="vision", classes=classes)

@@ -1,0 +1,46 @@
+"""MatchboxNet-style 1-D time-channel-separable CNN (keyword spotting).
+
+pointwise(F->ch) GN relu Q, then `blocks` x [depthwise k=5 + pointwise +
+GN + relu + Q], global average pool over time, fc. Input is an
+MFCC-like (T, F) sequence.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def build(classes: int, t: int = 32, f: int = 16, ch: int = 32,
+          blocks: int = 2, k: int = 5):
+    sb = common.SpecBuilder()
+    sb.add("pw0.w", (1, f, ch))
+    sb.add("gn0.g", (ch,), quant=False, init="ones")
+    sb.add("gn0.b", (ch,), quant=False, init="zeros")
+    for i in range(blocks):
+        pre = f"b{i}."
+        sb.add(pre + "dw.w", (k, 1, ch), fan_in=k)
+        sb.add(pre + "pw.w", (1, ch, ch))
+        sb.add(pre + "gn.g", (ch,), quant=False, init="ones")
+        sb.add(pre + "gn.b", (ch,), quant=False, init="zeros")
+    sb.add("fc.w", (ch, classes))
+    sb.add("fc.b", (classes,), quant=False, init="zeros")
+    spec = sb.build()
+
+    def apply(p, x, qact):
+        site = 0
+        a = common.conv1d(x, p["pw0.w"])
+        a = common.group_norm(a, p["gn0.g"], p["gn0.b"], 4)
+        a = qact(site, jnp.maximum(a, 0.0)); site += 1
+        for i in range(blocks):
+            pre = f"b{i}."
+            a = common.conv1d(a, p[pre + "dw.w"], groups=ch)
+            a = common.conv1d(a, p[pre + "pw.w"])
+            a = common.group_norm(a, p[pre + "gn.g"], p[pre + "gn.b"], 4)
+            a = qact(site, jnp.maximum(a, 0.0)); site += 1
+        a = a.mean(axis=1)
+        return a @ p["fc.w"] + p["fc.b"]
+
+    return dict(spec=spec, apply=apply, n_act=1 + blocks,
+                input_shape=(t, f), kind="speech", classes=classes)

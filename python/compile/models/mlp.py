@@ -1,0 +1,26 @@
+"""2-layer MLP — the quickstart model (LeNet-scale dense stand-in)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def build(classes: int, h: int = 8, w: int = 8, c: int = 3, hidden: int = 64):
+    d_in = h * w * c
+    sb = common.SpecBuilder()
+    sb.add("fc1.w", (d_in, hidden))
+    sb.add("fc1.b", (hidden,), quant=False, init="zeros")
+    sb.add("fc2.w", (hidden, classes))
+    sb.add("fc2.b", (classes,), quant=False, init="zeros")
+    spec = sb.build()
+
+    def apply(p, x, qact):
+        z = x.reshape(x.shape[0], -1)
+        a = jnp.maximum(z @ p["fc1.w"] + p["fc1.b"], 0.0)
+        a = qact(0, a)
+        return a @ p["fc2.w"] + p["fc2.b"]
+
+    return dict(spec=spec, apply=apply, n_act=1,
+                input_shape=(h, w, c), kind="vision", classes=classes)

@@ -1,0 +1,62 @@
+"""ResNet-8 with GroupNorm — the reduced-width ResNet18 stand-in.
+
+stem conv3x3(3->w) GN relu Q, then three residual stages of one basic
+block each (widths w, 2w, 2w; strides 1, 2, 2), global average pool, fc.
+Projection shortcuts (1x1 conv) where shape changes; all conv/fc weights
+quantized, GN parameters not (paper §4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def build(classes: int, h: int = 8, w: int = 8, c: int = 3, width: int = 16):
+    widths = [width, 2 * width, 2 * width]
+    strides = [1, 2, 2]
+    sb = common.SpecBuilder()
+    sb.add("stem.w", (3, 3, c, width))
+    sb.add("stem.gn.g", (width,), quant=False, init="ones")
+    sb.add("stem.gn.b", (width,), quant=False, init="zeros")
+    c_in = width
+    for i, (c_out, st) in enumerate(zip(widths, strides)):
+        pre = f"b{i}."
+        sb.add(pre + "c1.w", (3, 3, c_in, c_out))
+        sb.add(pre + "gn1.g", (c_out,), quant=False, init="ones")
+        sb.add(pre + "gn1.b", (c_out,), quant=False, init="zeros")
+        sb.add(pre + "c2.w", (3, 3, c_out, c_out))
+        sb.add(pre + "gn2.g", (c_out,), quant=False, init="ones")
+        sb.add(pre + "gn2.b", (c_out,), quant=False, init="zeros")
+        if st != 1 or c_in != c_out:
+            sb.add(pre + "proj.w", (1, 1, c_in, c_out))
+        c_in = c_out
+    sb.add("fc.w", (c_in, classes))
+    sb.add("fc.b", (classes,), quant=False, init="zeros")
+    spec = sb.build()
+
+    def apply(p, x, qact):
+        site = 0
+        a = common.conv2d(x, p["stem.w"])
+        a = common.group_norm(a, p["stem.gn.g"], p["stem.gn.b"], 4)
+        a = qact(site, jnp.maximum(a, 0.0)); site += 1
+        cin = width
+        for i, (c_out, st) in enumerate(zip(widths, strides)):
+            pre = f"b{i}."
+            r = common.conv2d(a, p[pre + "c1.w"], stride=st)
+            r = common.group_norm(r, p[pre + "gn1.g"], p[pre + "gn1.b"], 4)
+            r = qact(site, jnp.maximum(r, 0.0)); site += 1
+            r = common.conv2d(r, p[pre + "c2.w"])
+            r = common.group_norm(r, p[pre + "gn2.g"], p[pre + "gn2.b"], 4)
+            if (pre + "proj.w") in p:
+                skip = common.conv2d(a, p[pre + "proj.w"], stride=st)
+            else:
+                skip = a
+            a = qact(site, jnp.maximum(r + skip, 0.0)); site += 1
+            cin = c_out
+        a = a.mean(axis=(1, 2))
+        return a @ p["fc.w"] + p["fc.b"]
+
+    return dict(spec=spec, apply=apply, n_act=7,
+                input_shape=(h, w, c), kind="vision", classes=classes)

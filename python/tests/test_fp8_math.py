@@ -1,0 +1,129 @@
+"""Number-format properties — the empirically checkable content of the
+paper's Appendix A-C lemmas.
+
+  * outputs lie on the FP8(alpha) grid
+  * the grid is symmetric and its bin size grows monotonically away from
+    zero (precondition of Lemma 5)
+  * Q_rand is unbiased (Lemma 3); Q_det is biased but smaller-error
+    (Remark 4/5)
+  * variance bound E|r|^2 <= S|x| (Lemma 4)
+  * max code decodes to alpha exactly
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(42)
+
+
+def _grid(alpha):
+    return ref.grid_points(alpha)
+
+
+class TestGrid:
+    @pytest.mark.parametrize("alpha", [0.1, 1.0, 2.5, 33.0])
+    def test_top_code_is_alpha(self, alpha):
+        g = _grid(alpha)
+        assert np.isclose(g[-1], alpha, rtol=1e-12)
+
+    @pytest.mark.parametrize("alpha", [0.5, 1.0, 7.3])
+    def test_bin_size_monotone(self, alpha):
+        """Bin size must increase monotonically from zero — the condition
+        under which the paper's Lemma 5 decomposition holds for FP8."""
+        g = _grid(alpha)
+        d = np.diff(g)
+        assert np.all(np.diff(d) >= -1e-15 * alpha)
+
+    @pytest.mark.parametrize("alpha", [1.0, 3.0])
+    def test_grid_membership(self, alpha):
+        g = _grid(alpha).astype(np.float32)
+        x = (RNG.normal(size=2000) * alpha * 0.6).astype(np.float32)
+        q = ref.quantize_np(x, np.float32(alpha), np.full(x.shape, 0.5))
+        for v in np.abs(q):
+            assert np.any(np.isclose(v, g, rtol=2e-6, atol=1e-30)), v
+
+    def test_grid_has_128_nonneg_points(self):
+        assert len(_grid(1.0)) == 128  # 16 exponents x 8 mantissas
+
+    def test_det_idempotent(self):
+        """Q(Q(x)) == Q(x): grid points are fixed points."""
+        x = (RNG.normal(size=500) * 2.0).astype(np.float32)
+        u = np.full(x.shape, 0.5)
+        q1 = ref.quantize_np(x, np.float32(2.0), u)
+        q2 = ref.quantize_np(q1, np.float32(2.0), u)
+        np.testing.assert_allclose(q1, q2, rtol=1e-6)
+
+
+class TestLemmas:
+    def test_lemma3_unbiased(self):
+        """E[Q_rand(x)] == x for in-range x (stochastic rounding)."""
+        n_draw = 4000
+        x = (RNG.normal(size=32) * 0.3).astype(np.float32)
+        alpha = np.float32(1.0)
+        xs = np.broadcast_to(x, (n_draw, 32))
+        us = RNG.random(size=(n_draw, 32))
+        qs = ref.quantize_np(xs, alpha, us).astype(np.float64)
+        err = qs.mean(axis=0) - x
+        # std of the mean ~ binsize/sqrt(n); binsize <= 2^-3 * |x| * 2
+        tol = 4 * (np.abs(x) * 2 ** -3 + 2.0 ** -10) / np.sqrt(n_draw)
+        assert np.all(np.abs(err) < tol + 1e-6)
+
+    def test_det_is_biased(self):
+        """Q_det has nonzero mean error on a generic point cloud."""
+        x = np.full(1000, 0.3711, np.float32)
+        q = ref.quantize_np(x, np.float32(1.0), np.full(1000, 0.5))
+        assert abs(float(q.mean()) - 0.3711) > 1e-4
+
+    def test_remark4_det_smaller_error(self):
+        """deterministic per-sample |error| <= stochastic expected
+        |error| (motivates det QAT during training)."""
+        x = (RNG.normal(size=5000) * 0.5).astype(np.float32)
+        alpha = np.float32(1.5)
+        qd = ref.quantize_np(x, alpha, np.full(x.shape, 0.5))
+        ed = np.abs(qd.astype(np.float64) - x).mean()
+        us = RNG.random(size=(50,) + x.shape)
+        qr = ref.quantize_np(np.broadcast_to(x, us.shape), alpha, us)
+        er = np.abs(qr.astype(np.float64) - x).mean()
+        assert ed <= er + 1e-9
+
+    def test_lemma4_variance_bound(self):
+        """E|r_Qrand(x)|^2 <= S |x| element-wise, S = max scale."""
+        alpha = 1.0
+        g = _grid(alpha)
+        s_max = np.max(np.diff(g))  # largest bin == largest scale
+        x = (RNG.normal(size=200) * 0.5).astype(np.float32)
+        x = np.clip(x, -alpha, alpha)
+        us = RNG.random(size=(3000, 200))
+        qs = ref.quantize_np(np.broadcast_to(x, us.shape),
+                             np.float32(alpha), us).astype(np.float64)
+        var = ((qs - x) ** 2).mean(axis=0)
+        assert np.all(var <= s_max * np.abs(x) * 1.15 + 1e-9)
+
+    def test_scale_bounded_by_alpha_fraction(self):
+        """Assumption 3: scales uniformly bounded; for FP8(alpha) the
+        largest scale is alpha * 2^-m / (2 - 2^-m)."""
+        alpha = 2.0
+        g = _grid(alpha)
+        s_theory = alpha * 2.0 ** -3 / (2 - 2.0 ** -3)
+        assert np.isclose(np.max(np.diff(g)), s_theory, rtol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(min_value=0.05, max_value=50.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_below_one_bin(alpha, seed):
+    """|Q(x) - x| < bin(x) for unclipped x, any rounding draw."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=64) * alpha * 0.5).astype(np.float32)
+    x = np.clip(x, -alpha * 0.99, alpha * 0.99)
+    u = rng.random(size=64)
+    q = ref.quantize_np(x, np.float32(alpha), u).astype(np.float64)
+    b = 2.0**ref.E_BITS - np.log2(alpha) + ref.LOG2_TOP - 1.0
+    absx = np.maximum(np.abs(x.astype(np.float64)), 1e-300)
+    c = np.floor(np.log2(absx) + b)
+    s = np.exp2(np.where(c > 1, c, 1.0) - b - ref.M_BITS)
+    assert np.all(np.abs(q - x) <= s * (1 + 1e-9))

@@ -1,0 +1,102 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+The kernel and oracle must agree bit-for-bit (both are f32 math on the
+same op sequence); hypothesis sweeps shapes, dtypes are fixed to f32
+(the wire format's de-quantized domain).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8_quant, ref
+
+
+RNG = np.random.default_rng(0)
+
+
+def _check(x, alpha, u):
+    """Kernel and oracle compute the same f32 formula, but XLA may fuse
+    log2/exp2 differently between the two graphs — allow 1-2 ulp."""
+    xq = fp8_quant.fp8_quantize(jnp.asarray(x), jnp.asarray(alpha),
+                                jnp.asarray(u))
+    xr = ref.quantize(jnp.asarray(x), jnp.asarray(alpha), jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(xr),
+                               rtol=3e-6, atol=1e-30)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n", [1, 7, 127, 128, 129, 4096, 5000])
+    def test_sizes_det(self, n):
+        x = RNG.normal(size=n).astype(np.float32)
+        _check(x, np.float32(1.3), np.full(n, 0.5, np.float32))
+
+    @pytest.mark.parametrize("n", [63, 1024])
+    def test_sizes_rand(self, n):
+        x = RNG.normal(size=n).astype(np.float32)
+        u = RNG.random(size=n).astype(np.float32)
+        _check(x, np.float32(0.77), u)
+
+    @pytest.mark.parametrize("alpha", [0.01, 0.25, 1.0, 3.7, 64.0])
+    def test_alphas(self, alpha):
+        x = (RNG.normal(size=512) * alpha).astype(np.float32)
+        _check(x, np.float32(alpha), np.full(512, 0.5, np.float32))
+
+    def test_per_element_alpha(self):
+        x = RNG.normal(size=256).astype(np.float32)
+        alpha = RNG.uniform(0.1, 4.0, size=256).astype(np.float32)
+        _check(x, alpha, np.full(256, 0.5, np.float32))
+
+    def test_2d_shape_roundtrips(self):
+        x = RNG.normal(size=(17, 31)).astype(np.float32)
+        q = fp8_quant.fp8_quantize(jnp.asarray(x), 2.0, 0.5)
+        assert q.shape == x.shape
+
+    def test_zero_maps_to_zero(self):
+        x = np.zeros(130, np.float32)
+        q = fp8_quant.fp8_quantize(jnp.asarray(x), 1.0, 0.5)
+        assert np.all(np.asarray(q) == 0.0)
+
+    def test_clipping(self):
+        x = np.array([10.0, -10.0, 1e9, -1e9], np.float32)
+        q = np.asarray(fp8_quant.fp8_quantize(jnp.asarray(x), 1.5, 0.5))
+        np.testing.assert_allclose(q, [1.5, -1.5, 1.5, -1.5], rtol=1e-6)
+
+    def test_whole_block_variant_matches(self):
+        x = RNG.normal(size=777).astype(np.float32)
+        u = np.full(777, 0.5, np.float32)
+        a = np.full(777, 1.9, np.float32)
+        q1 = fp8_quant.fp8_quantize(jnp.asarray(x), jnp.asarray(a),
+                                    jnp.asarray(u))
+        q2 = fp8_quant.fp8_quantize_whole(jnp.asarray(x), jnp.asarray(a),
+                                          jnp.asarray(u))
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                                   rtol=3e-6, atol=1e-30)
+
+    @pytest.mark.parametrize("block_rows", [8, 64, 256])
+    def test_block_size_invariance(self, block_rows):
+        """Tiling is a schedule, not semantics: results must not depend
+        on the BlockSpec."""
+        x = RNG.normal(size=3000).astype(np.float32)
+        u = np.full(3000, 0.5, np.float32)
+        q = fp8_quant.fp8_quantize(jnp.asarray(x), 1.0, jnp.asarray(u),
+                                   block_rows=block_rows)
+        qr = ref.quantize(jnp.asarray(x), 1.0, jnp.asarray(u))
+        np.testing.assert_allclose(np.asarray(q), np.asarray(qr),
+                                   rtol=3e-6, atol=1e-30)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    alpha=st.floats(min_value=1e-2, max_value=100.0),
+    scale=st.floats(min_value=1e-3, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    det=st.booleans(),
+)
+def test_kernel_hypothesis_sweep(n, alpha, scale, seed, det):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=n) * scale).astype(np.float32)
+    u = (np.full(n, 0.5) if det else rng.random(size=n)).astype(np.float32)
+    _check(x, np.float32(alpha), u)

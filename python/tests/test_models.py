@@ -1,0 +1,143 @@
+"""L2 model-zoo tests: shapes, segment tables, init, gradient flow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.models import BUILDERS
+
+
+ALL = [("mlp", 10), ("lenet", 10), ("lenet", 100), ("resnet8", 10),
+       ("matchbox", 12), ("kwt", 12)]
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+class TestSpec:
+    @pytest.mark.parametrize("name,classes", ALL)
+    def test_segments_tile_the_vector(self, name, classes):
+        spec = BUILDERS[name](classes)["spec"]
+        off = 0
+        for s in spec.segs:
+            assert s.offset == off
+            off += s.size
+        assert off == spec.dim
+
+    @pytest.mark.parametrize("name,classes", ALL)
+    def test_alpha_indices_dense(self, name, classes):
+        spec = BUILDERS[name](classes)["spec"]
+        idx = [s.alpha_idx for s in spec.segs if s.quant]
+        assert idx == list(range(spec.alpha_dim))
+
+    @pytest.mark.parametrize("name,classes", ALL)
+    def test_unquantized_fraction_small(self, name, classes):
+        """Paper §4: non-quantized params (biases, norm) are < ~2-6% of
+        the total at full scale; at our reduced widths allow 12%."""
+        spec = BUILDERS[name](classes)["spec"]
+        unq = sum(s.size for s in spec.segs if not s.quant)
+        assert unq / spec.dim < 0.12
+
+    @pytest.mark.parametrize("name,classes", ALL)
+    def test_init_alpha_covers_weights(self, name, classes, rng):
+        spec = BUILDERS[name](classes)["spec"]
+        w, alpha = spec.init_flat(rng)
+        for s in spec.segs:
+            if s.quant:
+                seg = w[s.offset:s.offset + s.size]
+                assert alpha[s.alpha_idx] >= np.abs(seg).max() - 1e-7
+
+    def test_alpha_elem_expansion(self, rng):
+        spec = BUILDERS["mlp"](10)["spec"]
+        alpha = jnp.asarray(np.array([2.0, 3.0], np.float32))
+        ae = np.asarray(spec.alpha_elem(alpha))
+        s0, s1 = spec.segs[0], spec.segs[2]
+        assert np.all(ae[s0.offset:s0.offset + s0.size] == 2.0)
+        assert np.all(ae[s1.offset:s1.offset + s1.size] == 3.0)
+        b = spec.segs[1]
+        assert np.all(ae[b.offset:b.offset + b.size] == 1.0)
+
+
+class TestForward:
+    @pytest.mark.parametrize("name,classes", ALL)
+    @pytest.mark.parametrize("mode", ["det", "none"])
+    def test_logit_shapes(self, name, classes, mode, rng):
+        mdl = M.build_model(name, classes)
+        g = M.Graphs(mdl, mode)
+        spec = mdl["spec"]
+        w, alpha = spec.init_flat(rng)
+        beta = np.full(mdl["n_act"], 4.0, np.float32)
+        x = rng.normal(size=(3,) + tuple(mdl["input_shape"])).astype(
+            np.float32)
+        logits = g.forward(jnp.asarray(w), jnp.asarray(alpha),
+                           jnp.asarray(beta), jnp.asarray(x),
+                           jax.random.PRNGKey(0))
+        assert logits.shape == (3, classes)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_rand_mode_stochastic(self, rng):
+        mdl = M.build_model("mlp", 10)
+        g = M.Graphs(mdl, "rand")
+        spec = mdl["spec"]
+        w, alpha = spec.init_flat(rng)
+        beta = np.full(mdl["n_act"], 4.0, np.float32)
+        x = rng.normal(size=(2, 8, 8, 3)).astype(np.float32)
+        l1 = g.forward(w, alpha, beta, x, jax.random.PRNGKey(1))
+        l2 = g.forward(w, alpha, beta, x, jax.random.PRNGKey(2))
+        assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+    def test_det_mode_deterministic(self, rng):
+        mdl = M.build_model("mlp", 10)
+        g = M.Graphs(mdl, "det")
+        spec = mdl["spec"]
+        w, alpha = spec.init_flat(rng)
+        beta = np.full(mdl["n_act"], 4.0, np.float32)
+        x = rng.normal(size=(2, 8, 8, 3)).astype(np.float32)
+        l1 = g.forward(w, alpha, beta, x, jax.random.PRNGKey(1))
+        l2 = g.forward(w, alpha, beta, x, jax.random.PRNGKey(2))
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestGradients:
+    @pytest.mark.parametrize("name,classes", [("mlp", 10), ("lenet", 10)])
+    def test_alpha_beta_receive_gradients(self, name, classes, rng):
+        mdl = M.build_model(name, classes)
+        g = M.Graphs(mdl, "det")
+        spec = mdl["spec"]
+        w, alpha = spec.init_flat(rng)
+        beta = np.full(mdl["n_act"], 0.5, np.float32)  # force clipping
+        x = rng.normal(size=(8,) + tuple(mdl["input_shape"])).astype(
+            np.float32)
+        y = rng.integers(0, classes, 8).astype(np.int32)
+        grads = jax.grad(
+            lambda w, a, b: g.loss(w, a, b, x, y, jax.random.PRNGKey(0)),
+            argnums=(0, 1, 2))(jnp.asarray(w), jnp.asarray(alpha),
+                               jnp.asarray(beta))
+        gw, ga, gb = (np.asarray(v) for v in grads)
+        assert np.any(gw != 0)
+        assert np.any(ga != 0)
+        assert np.any(gb != 0)
+        assert all(np.all(np.isfinite(v)) for v in (gw, ga, gb))
+
+    def test_ste_masks_clipped_weights(self, rng):
+        """dL/dw must be zero where |w| > alpha (STE clip mask)."""
+        from compile import fp8
+        x = jnp.asarray(np.array([0.3, 2.0, -3.0, 0.9], np.float32))
+        a = jnp.full((4,), 1.0, jnp.float32)
+        u = jnp.full((4,), 0.5, jnp.float32)
+        gx = jax.grad(lambda x: fp8.quantize_ste(x, a, u).sum())(x)
+        np.testing.assert_array_equal(np.asarray(gx), [1.0, 0.0, 0.0, 1.0])
+
+    def test_alpha_gradient_sign_for_clipped(self):
+        """Clipped elements push alpha up when loss wants larger values
+        (dQ/dalpha = sign(x) on the clipped set)."""
+        from compile import fp8
+        x = jnp.asarray(np.array([5.0, -5.0], np.float32))
+        a = jnp.full((2,), 1.0, jnp.float32)
+        u = jnp.full((2,), 0.5, jnp.float32)
+        ga = jax.grad(lambda a: fp8.quantize_ste(x, a, u).sum())(a)
+        np.testing.assert_allclose(np.asarray(ga), [1.0, -1.0])

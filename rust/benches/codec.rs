@@ -1,0 +1,144 @@
+//! L3 hot-path microbenchmarks: FP8 wire codec, aggregation, and the
+//! ServerOptimize Eq.(5) grid-search kernel.
+//!
+//! Run: `cargo bench --bench codec`
+//! Targets (DESIGN.md §Perf): encode >= 200 MB/s on one core; decode
+//! (LUT) faster than encode; coordinator overhead << HLO exec time.
+
+use fedfp8::coordinator::aggregate;
+use fedfp8::coordinator::comm::Uplink;
+use fedfp8::fp8::codec::{self, Rounding, Segment};
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::util::bench::{bench, header};
+
+fn segments(dim: usize, tensors: usize) -> Vec<Segment> {
+    let per = dim / tensors;
+    (0..tensors)
+        .map(|i| Segment {
+            name: format!("t{i}"),
+            offset: i * per,
+            size: per,
+            quantized: true,
+            alpha_idx: Some(i),
+        })
+        .collect()
+}
+
+fn main() {
+    const DIM: usize = 39_514; // resnet8 variant size
+    let segs = segments(DIM, 10);
+    let alphas: Vec<f32> = (0..10).map(|i| 0.5 + i as f32 * 0.1).collect();
+    let mut rng = Pcg32::new(1, 0);
+    let w: Vec<f32> = (0..DIM).map(|_| (rng.uniform() - 0.5) * 2.0).collect();
+
+    header();
+
+    let mut r = Pcg32::new(2, 0);
+    let enc_det = bench("codec/encode_det 39.5k params", 400, || {
+        std::hint::black_box(codec::encode(
+            &w, &alphas, &[], &segs, Rounding::Deterministic, &mut r,
+        ));
+    });
+    let enc_rand = bench("codec/encode_stochastic 39.5k params", 400, || {
+        std::hint::black_box(codec::encode(
+            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+        ));
+    });
+
+    let payload = codec::encode(
+        &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+    );
+    let mut out = vec![0.0f32; DIM];
+    let dec = bench("codec/decode_lut 39.5k params", 400, || {
+        codec::decode(&payload, &segs, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    let mut qout = vec![0.0f32; DIM];
+    bench("codec/quantize_vec_det (eq5 inner)", 400, || {
+        codec::quantize_vec(
+            &w, &alphas, &segs, Rounding::Deterministic, &mut r, &mut qout,
+        );
+        std::hint::black_box(&qout);
+    });
+
+    // scalar-level primitives
+    let p = Fp8Params::new(1.3);
+    bench("format/encode scalar x1000", 200, || {
+        let mut acc = 0u32;
+        for i in 0..1000 {
+            acc = acc.wrapping_add(p.encode(w[i], 0.5) as u32);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // §Perf before/after: per-element exp2 (baseline) vs exponent LUT
+    bench("format/scale exp2 baseline x4096", 200, || {
+        let mut acc = 0f64;
+        for &v in w.iter().take(4096) {
+            acc += p.scale_exp2((v as f64).abs() + 1e-9);
+        }
+        std::hint::black_box(acc);
+    });
+    bench("format/scale LUT optimized x4096", 200, || {
+        let mut acc = 0f64;
+        for &v in w.iter().take(4096) {
+            acc += p.scale((v as f64).abs() + 1e-9);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // aggregation of P=10 uplinks
+    let uplinks: Vec<Uplink> = (0..10)
+        .map(|c| Uplink {
+            payload: codec::encode(
+                &w, &alphas, &[4.0; 7], &segs, Rounding::Stochastic,
+                &mut r,
+            ),
+            client: c,
+            n_k: 100,
+            mean_loss: 1.0,
+        })
+        .collect();
+    let agg = bench("aggregate/fedavg P=10 x 39.5k", 400, || {
+        std::hint::black_box(
+            aggregate::fedavg(&uplinks, &segs, DIM, 10, 7).unwrap(),
+        );
+    });
+
+    // Eq. (5) grid-search scoring: one segment, 50 candidates
+    let seg = &segs[0];
+    let clients: Vec<&[f32]> = vec![&w; 10];
+    let kw = [0.1f32; 10];
+    let us: Vec<f64> = (0..seg.size).map(|_| 0.37).collect();
+    bench("server_opt/eq5_mse 1 seg x 50 cands", 400, || {
+        let mut best = f64::MAX;
+        for gi in 0..50 {
+            let cand = 0.5 + gi as f32 * 0.01;
+            best = best.min(codec::segment_quant_mse(
+                &w, seg, cand, &clients, &kw, &us,
+            ));
+        }
+        std::hint::black_box(best);
+    });
+
+    println!("\nthroughput:");
+    println!(
+        "  encode det    {:>8.1} M params/s ({:.0} MB/s in)",
+        enc_det.throughput(DIM as f64) / 1e6,
+        enc_det.throughput(DIM as f64 * 4.0) / 1e6
+    );
+    println!(
+        "  encode rand   {:>8.1} M params/s",
+        enc_rand.throughput(DIM as f64) / 1e6
+    );
+    println!(
+        "  decode        {:>8.1} M params/s",
+        dec.throughput(DIM as f64) / 1e6
+    );
+    println!(
+        "  fedavg P=10   {:>8.1} M param-accums/s",
+        agg.throughput(10.0 * DIM as f64) / 1e6
+    );
+}

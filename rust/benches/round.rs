@@ -1,0 +1,60 @@
+//! End-to-end round benchmark: one full FP8FedAvg-UQ(+) communication
+//! round per iteration (client sampling + downlink + P local updates
+//! via HLO + uplinks + aggregation [+ ServerOptimize]).
+//!
+//! This is the paper-system equivalent of a serving framework's
+//! request benchmark; it splits coordinator overhead from HLO compute
+//! using the engine's internal timers.
+//!
+//! Run: `cargo bench --bench round` (requires `make artifacts`).
+
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::Server;
+use fedfp8::runtime::{default_dir, Engine, Manifest};
+use fedfp8::util::bench::{bench, header};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+
+    header();
+    for (preset, budget_ms) in [
+        ("mlp_c10:uq:iid", 4000),
+        ("lenet_c10:uq:iid", 4000),
+        ("lenet_c10:uq+:iid", 4000),
+        ("lenet_c10:fp32:iid", 4000),
+        ("resnet8_c10:uq:iid", 6000),
+        ("matchbox:uq:speaker", 6000),
+    ] {
+        let mut cfg = ExperimentConfig::preset(preset)?;
+        cfg.n_train = 2000;
+        cfg.n_test = 256;
+        let mut server = Server::new(&engine, &manifest, cfg)?;
+        // warm the executable cache before timing
+        server.round(0)?;
+        let mut t = 1usize;
+        bench(&format!("round/{preset}"), budget_ms, || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+
+    let st = engine.stats();
+    let total = st.execute_ns + st.marshal_ns;
+    println!(
+        "\nengine totals: {} execs, exec {:.2}s, marshal {:.2}s \
+         ({:.1}% marshal), compile {:.2}s ({} modules)",
+        st.executions,
+        st.execute_ns as f64 * 1e-9,
+        st.marshal_ns as f64 * 1e-9,
+        100.0 * st.marshal_ns as f64 / total.max(1) as f64,
+        st.compile_ns as f64 * 1e-9,
+        st.compilations
+    );
+    Ok(())
+}

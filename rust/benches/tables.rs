@@ -1,0 +1,38 @@
+//! Smoke-scale regeneration of every paper table/figure — `cargo bench
+//! --bench tables` runs Table 1 (subset), Table 2 and Figure 2 at a
+//! reduced round budget so the full evaluation pipeline is exercised
+//! in minutes. For the real (longer) runs use the `fedfp8` binary:
+//!
+//! ```sh
+//! cargo run --release -- table1 --rounds 60 --seeds 3
+//! cargo run --release -- table2 --rounds 60 --seeds 3
+//! cargo run --release -- fig2   --rounds 60 --model lenet_c10
+//! ```
+
+use fedfp8::bench_tables::{fig2, table1, table2};
+use fedfp8::runtime::default_dir;
+use fedfp8::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    if !default_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let smoke = |extra: &str| {
+        Args::parse(
+            format!(
+                "--rounds 12 --seeds 1 --n-train 1200 --eval-every 2 \
+                 {extra}"
+            )
+            .split_whitespace()
+            .map(String::from),
+        )
+    };
+    println!("=== Table 1 (smoke subset: lenet_c10 + matchbox) ===");
+    table1::run(&smoke("--models lenet_c10,matchbox"))?;
+    println!("\n=== Table 2 (smoke: lenet_c100) ===");
+    table2::run(&smoke("--models lenet_c100"))?;
+    println!("\n=== Figure 2 (smoke: mlp_c10) ===");
+    fig2::run(&smoke("--model mlp_c10"))?;
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Figure 2 — server test accuracy versus cumulative communication
+//! cost for FP32 FedAvg, FP8 QAT with biased (BQ) / unbiased (UQ)
+//! communication, and UQ+ (ServerOptimize).
+//!
+//! Emits one CSV per method under `artifacts/results/fig2_*.csv`
+//! (columns: cum_bytes, accuracy) plus a coarse ASCII rendering so the
+//! crossover structure is visible straight from the terminal.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::RunResult;
+use crate::runtime::{default_dir, Engine, Manifest};
+use crate::util::cli::Args;
+
+use super::{run_one, scaled};
+
+pub const METHODS: [&str; 4] = ["fp32", "bq", "uq", "uq+"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let model = args.get_or("model", "lenet_c10");
+    let split = args.get_or("split", "iid");
+    let seed: u64 = args.parse_or("seed", 1u64)?;
+
+    let mut results: Vec<RunResult> = Vec::new();
+    for method in METHODS {
+        let mut cfg = scaled(
+            ExperimentConfig::base(&model)?
+                .with_method(method)?
+                .with_split(&split)?,
+            args,
+            50,
+        )?;
+        cfg.seed = seed;
+        cfg.eval_every = 1; // dense curve
+        eprintln!("[fig2] running {} ...", cfg.name);
+        let r = run_one(&engine, &manifest, cfg, false)?;
+        let csv = dir
+            .join("results")
+            .join(format!("fig2_{model}_{split}_{method}.csv"));
+        r.to_csv(&csv)?;
+        results.push(r);
+    }
+
+    render_ascii(&results);
+    println!(
+        "\nCSV curves written to {}/results/fig2_{model}_{split}_*.csv",
+        dir.display()
+    );
+    Ok(())
+}
+
+/// Coarse terminal plot: accuracy (y) vs log-scaled cum bytes (x).
+pub fn render_ascii(results: &[RunResult]) {
+    const W: usize = 72;
+    const H: usize = 18;
+    let max_b = results
+        .iter()
+        .flat_map(|r| r.curve().last().map(|c| c.0))
+        .max()
+        .unwrap_or(1) as f64;
+    let min_b = results
+        .iter()
+        .flat_map(|r| r.curve().first().map(|c| c.0))
+        .min()
+        .unwrap_or(1)
+        .max(1) as f64;
+    let max_a = results
+        .iter()
+        .map(|r| r.best_accuracy())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut grid = vec![vec![' '; W]; H];
+    let marks = ['o', 'x', '+', '*'];
+    for (ri, r) in results.iter().enumerate() {
+        for (b, a) in r.curve() {
+            let xf = ((b as f64).ln() - min_b.ln())
+                / (max_b.ln() - min_b.ln()).max(1e-9);
+            let x = ((W - 1) as f64 * xf).round() as usize;
+            let y = ((H - 1) as f64 * (1.0 - a / max_a)).round() as usize;
+            grid[y.min(H - 1)][x.min(W - 1)] = marks[ri % marks.len()];
+        }
+    }
+    println!(
+        "\nFigure 2 — accuracy vs communication (log bytes) \
+         [o=fp32 x=bq +=uq *=uq+]"
+    );
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{:5.2}", max_a)
+        } else if i == H - 1 {
+            "0.00 ".into()
+        } else {
+            "     ".into()
+        };
+        println!("{label}|{}", row.iter().collect::<String>());
+    }
+    println!(
+        "     +{}",
+        "-".repeat(W)
+    );
+    println!(
+        "      {:.1} KiB {: >60.1} MiB",
+        min_b / 1024.0,
+        max_b / (1 << 20) as f64
+    );
+}

@@ -1,0 +1,58 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§4): Table 1 (accuracy + communication gain), Table 2 (quantizer
+//! ablation), Figure 2 (accuracy vs communication cost).
+//!
+//! Scale note: the paper trains R=1000/500 rounds on CIFAR/Speech with
+//! K=100/2112 clients on GPU clusters; defaults here are reduced
+//! presets sized for the CPU testbed (override with --rounds/--seeds/
+//! --clients). The comparisons — who wins, roughly by what factor —
+//! are what transfer; see EXPERIMENTS.md.
+
+pub mod fig2;
+pub mod table1;
+pub mod table2;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{RunResult, Server};
+use crate::runtime::{Engine, Manifest};
+use crate::util::cli::Args;
+
+/// Run one config to completion, writing its CSV curve.
+pub fn run_one(
+    engine: &Engine,
+    manifest: &Manifest,
+    cfg: ExperimentConfig,
+    verbose: bool,
+) -> Result<RunResult> {
+    let name = cfg.name.clone();
+    let mut server = Server::new(engine, manifest, cfg)?;
+    server.set_verbose(verbose);
+    let result = server.run()?;
+    let csv = manifest
+        .dir
+        .join("results")
+        .join(format!("{name}_s{}.csv", server.cfg.seed));
+    result.to_csv(&csv)?;
+    Ok(result)
+}
+
+/// Common experiment-scale overrides shared by the regenerators.
+pub fn scaled(
+    mut cfg: ExperimentConfig,
+    args: &Args,
+    default_rounds: usize,
+) -> Result<ExperimentConfig> {
+    cfg.rounds = args.parse_or("rounds", default_rounds)?;
+    cfg.clients = args.parse_or("clients", cfg.clients)?;
+    cfg.n_train = args.parse_or("n-train", cfg.n_train)?;
+    cfg.n_test = args.parse_or("n-test", cfg.n_test)?;
+    cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
+    Ok(cfg)
+}
+
+pub fn seeds_from(args: &Args) -> Result<Vec<u64>> {
+    let n: usize = args.parse_or("seeds", 2usize)?;
+    Ok((1..=n as u64).collect())
+}

@@ -1,0 +1,110 @@
+//! Table 1 — final test accuracy and communication gain vs FP32
+//! FedAvg for FP8FedAvg-UQ and FP8FedAvg-UQ+ across the model/dataset/
+//! split grid.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{comm_gain, mean_std};
+use crate::runtime::{default_dir, Engine, Manifest};
+use crate::util::cli::Args;
+
+use super::{run_one, scaled, seeds_from};
+
+/// The paper's grid, mapped onto our reduced-scale variants.
+pub fn default_rows() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("lenet_c10", "iid"),
+        ("lenet_c10", "dir03"),
+        ("resnet8_c10", "iid"),
+        ("resnet8_c10", "dir03"),
+        ("lenet_c100", "iid"),
+        ("lenet_c100", "dir03"),
+        ("resnet8_c100", "iid"),
+        ("resnet8_c100", "dir03"),
+        ("matchbox", "iid"),
+        ("matchbox", "speaker"),
+        ("kwt", "iid"),
+        ("kwt", "speaker"),
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let seeds = seeds_from(args)?;
+    let rows: Vec<(String, String)> = match args.get("models") {
+        Some(list) => list
+            .split(',')
+            .flat_map(|m| {
+                ["iid", "dir03"].iter().filter_map(move |s| {
+                    let speech = m == "matchbox" || m == "kwt";
+                    let split = if speech && *s == "dir03" {
+                        "speaker"
+                    } else {
+                        s
+                    };
+                    Some((m.to_string(), split.to_string()))
+                })
+            })
+            .collect(),
+        None => default_rows()
+            .into_iter()
+            .map(|(a, b)| (a.to_string(), b.to_string()))
+            .collect(),
+    };
+
+    println!(
+        "\nTable 1 — final accuracy / comm gain vs FP32 \
+         (seeds={}, reduced scale)\n",
+        seeds.len()
+    );
+    println!(
+        "{:<14} {:<8} {:>16} {:>20} {:>20}",
+        "model", "split", "FP32 FedAvg", "FP8FedAvg-UQ", "FP8FedAvg-UQ+"
+    );
+    println!("{}", "-".repeat(84));
+
+    for (model, split) in rows {
+        let mut acc = vec![vec![]; 3];
+        let mut gains = vec![vec![]; 3];
+        for &seed in &seeds {
+            let mut results = Vec::new();
+            for method in ["fp32", "uq", "uq+"] {
+                let mut cfg = scaled(
+                    ExperimentConfig::base(&model)?
+                        .with_method(method)?
+                        .with_split(&split)?,
+                    args,
+                    40,
+                )?;
+                cfg.seed = seed;
+                results.push(run_one(&engine, &manifest, cfg, false)?);
+            }
+            for (i, r) in results.iter().enumerate() {
+                acc[i].push(r.best_accuracy() * 100.0);
+                let (_, g) = comm_gain(&results[0], r);
+                gains[i].push(g);
+            }
+        }
+        let cell = |i: usize| {
+            let (am, astd) = mean_std(&acc[i]);
+            let (gm, _) = mean_std(&gains[i]);
+            format!("{am:5.1}±{astd:3.1}/{gm:4.1}x")
+        };
+        println!(
+            "{:<14} {:<8} {:>16} {:>20} {:>20}",
+            model,
+            split,
+            cell(0),
+            cell(1),
+            cell(2)
+        );
+    }
+    println!(
+        "\n(gain = FP32 bytes-to-acc* / method bytes-to-acc*, acc* = \
+         best accuracy reached by both; paper Table 1 definition)"
+    );
+    Ok(())
+}

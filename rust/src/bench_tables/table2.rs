@@ -1,0 +1,80 @@
+//! Table 2 — ablation of deterministic/stochastic quantization in
+//! on-device QAT and in client<->server communication (CIFAR100-iid
+//! stand-in). Validates Remarks 3-5: det QAT > rand QAT, and rand CQ
+//! >> det CQ (biased communication hurts convergence).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::mean_std;
+use crate::runtime::{default_dir, Engine, Manifest};
+use crate::util::cli::Args;
+
+use super::{run_one, scaled, seeds_from};
+
+/// The four ablation arms, in the paper's column order:
+/// (det QAT, no CQ), (rand QAT, no CQ), (det QAT, det CQ),
+/// (det QAT, rand CQ).
+pub const ARMS: [(&str, &str); 4] = [
+    ("nocq_det", "det. QAT"),
+    ("nocq_rand", "rand. QAT"),
+    ("bq", "det. CQ"),
+    ("uq", "rand. CQ"),
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let seeds = seeds_from(args)?;
+    let models: Vec<String> = args
+        .get_or("models", "lenet_c100,resnet8_c100")
+        .split(',')
+        .map(String::from)
+        .collect();
+
+    println!(
+        "\nTable 2 — det/rand QAT x det/rand CQ, final accuracy \
+         (iid, seeds={})\n",
+        seeds.len()
+    );
+    println!(
+        "{:<14} | {:>12} {:>12} | {:>12} {:>12}",
+        "", "FP8 QAT", "without CQ", "FP8 det. QAT", "with CQ"
+    );
+    println!(
+        "{:<14} | {:>12} {:>12} | {:>12} {:>12}",
+        "model", ARMS[0].1, ARMS[1].1, ARMS[2].1, ARMS[3].1
+    );
+    println!("{}", "-".repeat(72));
+
+    for model in &models {
+        let mut cells = Vec::new();
+        for (method, _) in ARMS {
+            let mut accs = Vec::new();
+            for &seed in &seeds {
+                let mut cfg = scaled(
+                    ExperimentConfig::base(model)?
+                        .with_method(method)?
+                        .with_split("iid")?,
+                    args,
+                    40,
+                )?;
+                cfg.seed = seed;
+                let r = run_one(&engine, &manifest, cfg, false)?;
+                accs.push(r.best_accuracy() * 100.0);
+            }
+            let (m, s) = mean_std(&accs);
+            cells.push(format!("{m:5.1}±{s:3.1}"));
+        }
+        println!(
+            "{:<14} | {:>12} {:>12} | {:>12} {:>12}",
+            model, cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+    println!(
+        "\n(expected shape per paper: det QAT >= rand QAT; \
+         rand CQ >> det CQ)"
+    );
+    Ok(())
+}

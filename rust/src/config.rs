@@ -1,0 +1,324 @@
+//! Experiment configuration + named presets for every paper table row.
+//!
+//! A config fully determines a run: model variant, data generator,
+//! client split, FL hyperparameters, quantizer switches and the
+//! ServerOptimize settings. The Table-2 ablation grid and the Figure-2
+//! method family are all *config switches* on the same coordinator —
+//! no code forks (DESIGN.md §7).
+
+use anyhow::{bail, Result};
+
+use crate::fp8::Rounding;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SplitCfg {
+    Iid,
+    /// Dirichlet label skew with the given concentration (paper: 0.3).
+    Dirichlet(f64),
+    /// One client per synthetic speaker (speech tasks).
+    Speaker,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QatMode {
+    /// Deterministic FP8 QAT (the paper's training default).
+    Det,
+    /// Stochastic FP8 QAT (Table 2 ablation arm).
+    Rand,
+    /// No quantization: FP32 baseline.
+    None,
+}
+
+impl QatMode {
+    pub fn artifact_suffix(&self) -> &'static str {
+        match self {
+            QatMode::Det => "det",
+            QatMode::Rand => "rand",
+            QatMode::None => "none",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const,
+    /// Cosine decay over rounds to `final_frac * lr` (speech setup).
+    Cosine { final_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, base: f32, round: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Const => base,
+            LrSchedule::Cosine { final_frac } => {
+                let t = round as f32 / total.max(1) as f32;
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                base * (final_frac + (1.0 - final_frac) * cos)
+            }
+        }
+    }
+}
+
+/// ServerOptimize (UQ+) settings — Eq. (4) GD steps + Eq. (5) grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerOptCfg {
+    pub gd_steps: usize,
+    pub gd_lr: f32,
+    pub grid_points: usize,
+}
+
+impl Default for ServerOptCfg {
+    fn default() -> Self {
+        // paper §4: 5 GD steps, lr grid-searched in {0.01,0.1,1},
+        // 50 grid points for alpha
+        Self {
+            gd_steps: 5,
+            gd_lr: 0.1,
+            grid_points: 50,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Manifest model-variant name (e.g. "lenet_c10").
+    pub model: String,
+    pub split: SplitCfg,
+    /// K — total client count.
+    pub clients: usize,
+    /// P — participating clients per round (must equal the artifact's
+    /// baked `server_p` when ServerOptimize is enabled).
+    pub participation: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub schedule: LrSchedule,
+    /// QAT quantizer during local training.
+    pub qat: QatMode,
+    /// Communication quantizer (uplink + downlink).
+    pub comm: Rounding,
+    pub server_opt: Option<ServerOptCfg>,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Synthetic speakers (speech tasks).
+    pub speakers: usize,
+    pub flip_aug: bool,
+    /// Extension (paper Remark 3): error-feedback memory on both
+    /// links, making *biased* communication viable (EF à la
+    /// Richtárik et al.; the paper cites EF21 as the fix for BQ).
+    pub error_feedback: bool,
+    /// Extension (paper §5 future work): fraction of clients training
+    /// in full FP32 (heterogeneous hardware fleets); all clients still
+    /// communicate through the configured wire quantizer.
+    pub fp32_client_frac: f32,
+}
+
+impl ExperimentConfig {
+    /// Base config per model variant (scaled-down counterpart of the
+    /// paper's §4 setup; see DESIGN.md §Substitutions for the mapping).
+    pub fn base(model: &str) -> Result<ExperimentConfig> {
+        let vision = ExperimentConfig {
+            name: String::new(),
+            model: model.to_string(),
+            split: SplitCfg::Iid,
+            clients: 40,
+            participation: 10,
+            rounds: 60,
+            lr: 0.1,
+            weight_decay: 1e-3,
+            schedule: LrSchedule::Const,
+            qat: QatMode::Det,
+            comm: Rounding::Stochastic,
+            server_opt: None,
+            eval_every: 2,
+            seed: 1,
+            n_train: 4000,
+            n_test: 1024,
+            speakers: 0,
+            flip_aug: true,
+            error_feedback: false,
+            fp32_client_frac: 0.0,
+        };
+        Ok(match model {
+            "mlp_c10" | "lenet_c10" | "lenet_c100" | "resnet8_c10"
+            | "resnet8_c100" => vision,
+            "matchbox" | "kwt" => ExperimentConfig {
+                clients: 64,
+                participation: 8,
+                rounds: 50,
+                lr: 1e-3,
+                weight_decay: 0.1,
+                schedule: LrSchedule::Cosine { final_frac: 0.05 },
+                split: SplitCfg::Speaker,
+                n_train: 3200,
+                n_test: 768,
+                speakers: 64,
+                flip_aug: false,
+                ..vision
+            },
+            _ => bail!("unknown model variant '{model}'"),
+        })
+    }
+
+    /// Apply a named method arm (the Figure-2 family / Table columns).
+    pub fn with_method(mut self, method: &str) -> Result<ExperimentConfig> {
+        match method {
+            // FP32 FedAvg baseline
+            "fp32" => {
+                self.qat = QatMode::None;
+                self.comm = Rounding::None;
+                self.server_opt = None;
+            }
+            // FP8FedAvg-UQ (paper's main method)
+            "uq" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::Stochastic;
+                self.server_opt = None;
+            }
+            // FP8FedAvg-UQ+ (with ServerOptimize)
+            "uq+" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::Stochastic;
+                self.server_opt = Some(ServerOptCfg::default());
+            }
+            // biased communication ablation (Fig. 2 "BQ", Table 2 det CQ)
+            "bq" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::Deterministic;
+                self.server_opt = None;
+            }
+            // Table 2: stochastic QAT with (rand) CQ
+            "randqat" => {
+                self.qat = QatMode::Rand;
+                self.comm = Rounding::Stochastic;
+                self.server_opt = None;
+            }
+            // Table 2: FP8 QAT without communication quantization
+            "nocq_det" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::None;
+                self.server_opt = None;
+            }
+            "nocq_rand" => {
+                self.qat = QatMode::Rand;
+                self.comm = Rounding::None;
+                self.server_opt = None;
+            }
+            // extension: biased CQ rescued by error feedback
+            "bq_ef" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::Deterministic;
+                self.server_opt = None;
+                self.error_feedback = true;
+            }
+            // extension: half the fleet trains in FP32 (heterogeneous
+            // hardware), everyone communicates in FP8-UQ
+            "mixed" => {
+                self.qat = QatMode::Det;
+                self.comm = Rounding::Stochastic;
+                self.server_opt = None;
+                self.fp32_client_frac = 0.5;
+            }
+            _ => bail!(
+                "unknown method '{method}' (fp32|uq|uq+|bq|randqat|\
+                 nocq_det|nocq_rand|bq_ef|mixed)"
+            ),
+        }
+        self.name = format!("{}_{}", self.model, method);
+        Ok(self)
+    }
+
+    pub fn with_split(mut self, split: &str) -> Result<ExperimentConfig> {
+        self.split = match split {
+            "iid" => SplitCfg::Iid,
+            "dir03" => SplitCfg::Dirichlet(0.3),
+            "speaker" => SplitCfg::Speaker,
+            _ => bail!("unknown split '{split}' (iid|dir03|speaker)"),
+        };
+        if !self.name.is_empty() {
+            self.name = format!("{}_{}", self.name, split);
+        }
+        Ok(self)
+    }
+
+    /// Parse "model:method:split" preset notation.
+    pub fn preset(spec: &str) -> Result<ExperimentConfig> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            [model, method, split] => Self::base(model)?
+                .with_method(method)?
+                .with_split(split),
+            [model, method] => Self::base(model)?.with_method(method),
+            _ => bail!("preset must be model:method[:split], got '{spec}'"),
+        }
+    }
+
+    /// Uplink+downlink payload cost is FP32 iff comm == None.
+    pub fn is_fp32_comm(&self) -> bool {
+        self.comm == Rounding::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_roundtrip() {
+        let c = ExperimentConfig::preset("lenet_c10:uq+:dir03").unwrap();
+        assert_eq!(c.model, "lenet_c10");
+        assert_eq!(c.qat, QatMode::Det);
+        assert_eq!(c.comm, Rounding::Stochastic);
+        assert!(c.server_opt.is_some());
+        assert_eq!(c.split, SplitCfg::Dirichlet(0.3));
+        assert_eq!(c.name, "lenet_c10_uq+_dir03");
+    }
+
+    #[test]
+    fn fp32_preset_has_no_quant() {
+        let c = ExperimentConfig::preset("resnet8_c10:fp32:iid").unwrap();
+        assert_eq!(c.qat, QatMode::None);
+        assert_eq!(c.comm, Rounding::None);
+        assert!(c.is_fp32_comm());
+    }
+
+    #[test]
+    fn speech_defaults() {
+        let c = ExperimentConfig::preset("kwt:uq:speaker").unwrap();
+        assert_eq!(c.split, SplitCfg::Speaker);
+        assert!(matches!(c.schedule, LrSchedule::Cosine { .. }));
+        assert_eq!(c.participation, 8);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(ExperimentConfig::preset("nope:uq:iid").is_err());
+        assert!(ExperimentConfig::preset("lenet_c10:nope:iid").is_err());
+        assert!(ExperimentConfig::preset("lenet_c10:uq:nope").is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_decays() {
+        let s = LrSchedule::Cosine { final_frac: 0.1 };
+        let l0 = s.lr_at(1.0, 0, 100);
+        let l50 = s.lr_at(1.0, 50, 100);
+        let l100 = s.lr_at(1.0, 100, 100);
+        assert!((l0 - 1.0).abs() < 1e-6);
+        assert!(l50 < l0 && l100 < l50);
+        assert!((l100 - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table2_arms_differ_only_in_quantizers() {
+        let a = ExperimentConfig::preset("lenet_c100:nocq_det:iid").unwrap();
+        let b = ExperimentConfig::preset("lenet_c100:nocq_rand:iid").unwrap();
+        assert_eq!(a.comm, Rounding::None);
+        assert_eq!(b.comm, Rounding::None);
+        assert_eq!(a.qat, QatMode::Det);
+        assert_eq!(b.qat, QatMode::Rand);
+        assert_eq!(a.rounds, b.rounds);
+    }
+}

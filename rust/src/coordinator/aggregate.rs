@@ -1,0 +1,135 @@
+//! Server-side aggregation: federated averaging over decoded uplinks.
+//!
+//! `w_{t+1} = sum_{k in P_t} (n_k / m_t) dequant(uplink_k)` — the
+//! uplinks are already on each client's FP8 grid (Q_rand applied by the
+//! client codec), so averaging the dequantized values in FP32 is
+//! exactly Algorithm 1's aggregation step. Alphas and betas are
+//! averaged unquantized (they travel as f32 side channels).
+
+use anyhow::{ensure, Result};
+
+use crate::fp8::codec::{self, Segment};
+
+use super::comm::Uplink;
+
+/// Result of one aggregation: FP32 master model + averaged clips.
+pub struct Aggregate {
+    pub w: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// Per-client dequantized weight vectors (kept for ServerOptimize).
+    pub client_ws: Vec<Vec<f32>>,
+    /// Per-client alpha side channels (Eq. (5) search range).
+    pub client_alphas: Vec<Vec<f32>>,
+    /// Per-client FedAvg weights n_k/m_t.
+    pub kweights: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+pub fn fedavg(
+    uplinks: &[Uplink],
+    segments: &[Segment],
+    dim: usize,
+    alpha_dim: usize,
+    beta_dim: usize,
+) -> Result<Aggregate> {
+    ensure!(!uplinks.is_empty(), "no uplinks to aggregate");
+    let m_t: u64 = uplinks.iter().map(|u| u.n_k).sum();
+    ensure!(m_t > 0, "zero total samples");
+    let mut w = vec![0.0f32; dim];
+    let mut alpha = vec![0.0f32; alpha_dim];
+    let mut beta = vec![0.0f32; beta_dim];
+    let mut client_ws = Vec::with_capacity(uplinks.len());
+    let mut client_alphas = Vec::with_capacity(uplinks.len());
+    let mut kweights = Vec::with_capacity(uplinks.len());
+    let mut mean_loss = 0.0f32;
+    let mut buf = vec![0.0f32; dim];
+    for up in uplinks {
+        let kw = up.n_k as f32 / m_t as f32;
+        codec::decode(&up.payload, segments, &mut buf);
+        for (acc, &v) in w.iter_mut().zip(&buf) {
+            *acc += kw * v;
+        }
+        for (acc, &v) in alpha.iter_mut().zip(&up.payload.alphas) {
+            *acc += kw * v;
+        }
+        for (acc, &v) in beta.iter_mut().zip(&up.payload.betas) {
+            *acc += kw * v;
+        }
+        mean_loss += kw * up.mean_loss;
+        client_ws.push(buf.clone());
+        client_alphas.push(up.payload.alphas.clone());
+        kweights.push(kw);
+    }
+    Ok(Aggregate {
+        w,
+        alpha,
+        beta,
+        client_ws,
+        client_alphas,
+        kweights,
+        mean_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::codec::{encode, Rounding};
+    use crate::fp8::rng::Pcg32;
+
+    fn segs() -> Vec<Segment> {
+        vec![Segment {
+            name: "w".into(),
+            offset: 0,
+            size: 8,
+            quantized: true,
+            alpha_idx: Some(0),
+        }]
+    }
+
+    fn uplink(vals: &[f32], alpha: f32, n_k: u64) -> Uplink {
+        let mut rng = Pcg32::new(1, 0);
+        Uplink {
+            payload: encode(vals, &[alpha], &[2.0], &segs(),
+                            Rounding::Deterministic, &mut rng),
+            client: 0,
+            n_k,
+            mean_loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn equal_weights_average() {
+        // values already exactly on the grid for alpha=1 -> lossless
+        let a = uplink(&[0.5; 8], 1.0, 10);
+        let b = uplink(&[1.0; 8], 1.0, 10);
+        let agg = fedavg(&[a, b], &segs(), 8, 1, 1).unwrap();
+        assert!(agg.w.iter().all(|&v| (v - 0.75).abs() < 1e-6));
+        assert_eq!(agg.kweights, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn nk_weighting() {
+        let a = uplink(&[0.0; 8], 1.0, 30);
+        let b = uplink(&[1.0; 8], 1.0, 10);
+        let agg = fedavg(&[a, b], &segs(), 8, 1, 1).unwrap();
+        assert!(agg.w.iter().all(|&v| (v - 0.25).abs() < 1e-6));
+        // alpha averaged with same weights
+        assert!((agg.alpha[0] - 1.0).abs() < 1e-6);
+        assert!((agg.beta[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(fedavg(&[], &segs(), 8, 1, 1).is_err());
+    }
+
+    #[test]
+    fn keeps_client_vectors_for_server_opt() {
+        let a = uplink(&[0.5; 8], 1.0, 1);
+        let agg = fedavg(&[a], &segs(), 8, 1, 1).unwrap();
+        assert_eq!(agg.client_ws.len(), 1);
+        assert_eq!(agg.client_ws[0], agg.w);
+    }
+}

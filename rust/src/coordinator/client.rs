@@ -1,0 +1,118 @@
+//! Client-side executor: runs one client's full local round (`U` QAT
+//! steps) by dispatching the AOT `local_update_*` artifact.
+//!
+//! A real deployment would run this on-device; here the coordinator
+//! simulates every client on the shared PJRT CPU engine. The *state
+//! contract* matches the paper exactly: the client hard-resets its
+//! master weights to the dequantized downlink (already on the FP8
+//! grid), trains `U` steps of quantization-aware training, and ships
+//! its new master weights through the stochastic wire codec.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::QatMode;
+use crate::runtime::{engine, Engine, In, ModelInfo};
+
+/// Outcome of one client's local round.
+pub struct LocalUpdate {
+    pub w: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+pub struct ClientRunner<'a> {
+    pub engine: &'a Engine,
+    pub model: &'a ModelInfo,
+}
+
+impl<'a> ClientRunner<'a> {
+    /// Execute `local_update_<mode>` for one client.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_update(
+        &self,
+        mode: QatMode,
+        w: &[f32],
+        alpha: &[f32],
+        beta: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+        wd: f32,
+        seed: i32,
+    ) -> Result<LocalUpdate> {
+        let m = self.model;
+        ensure!(w.len() == m.dim, "w dim mismatch");
+        ensure!(alpha.len() == m.alpha_dim, "alpha dim mismatch");
+        ensure!(beta.len() == m.n_act, "beta dim mismatch");
+        ensure!(ys.len() == m.u_steps * m.batch, "label count mismatch");
+        ensure!(
+            xs.len() == ys.len() * m.feat_len(),
+            "feature count mismatch"
+        );
+        let mut xdims: Vec<i64> =
+            vec![m.u_steps as i64, m.batch as i64];
+        xdims.extend(m.input_shape.iter().map(|&d| d as i64));
+        let ydims = [m.u_steps as i64, m.batch as i64];
+        let file = m.artifact("local_update", mode.artifact_suffix())?;
+        let out = self
+            .engine
+            .execute(
+                file,
+                &[
+                    In::F32(w, &[m.dim as i64]),
+                    In::F32(alpha, &[m.alpha_dim as i64]),
+                    In::F32(beta, &[m.n_act as i64]),
+                    In::F32(xs, &xdims),
+                    In::I32(ys, &ydims),
+                    In::ScalarF32(lr),
+                    In::ScalarF32(wd),
+                    In::ScalarI32(seed),
+                ],
+            )
+            .with_context(|| format!("local_update on {}", m.name))?;
+        ensure!(out.len() == 4, "expected 4 outputs, got {}", out.len());
+        Ok(LocalUpdate {
+            w: engine::f32_vec(&out[0])?,
+            alpha: engine::f32_vec(&out[1])?,
+            beta: engine::f32_vec(&out[2])?,
+            mean_loss: engine::f32_scalar(&out[3])?,
+        })
+    }
+
+    /// Execute `evaluate_<mode>` on one test batch; returns
+    /// (nll_sum, correct_count).
+    pub fn evaluate(
+        &self,
+        mode: QatMode,
+        w: &[f32],
+        alpha: &[f32],
+        beta: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, i32)> {
+        let m = self.model;
+        ensure!(y.len() == m.eval_batch, "eval batch mismatch");
+        let mut xdims: Vec<i64> = vec![m.eval_batch as i64];
+        xdims.extend(m.input_shape.iter().map(|&d| d as i64));
+        // rand-QAT runs evaluate deterministically; aot exports eval
+        // only for det/none, so map rand -> det.
+        let suffix = match mode {
+            QatMode::None => "none",
+            _ => "det",
+        };
+        let file = m.artifact("evaluate", suffix)?;
+        let out = self.engine.execute(
+            file,
+            &[
+                In::F32(w, &[m.dim as i64]),
+                In::F32(alpha, &[m.alpha_dim as i64]),
+                In::F32(beta, &[m.n_act as i64]),
+                In::F32(x, &xdims),
+                In::I32(y, &[m.eval_batch as i64]),
+            ],
+        )?;
+        ensure!(out.len() == 2, "expected 2 outputs");
+        Ok((engine::f32_scalar(&out[0])?, engine::i32_scalar(&out[1])?))
+    }
+}

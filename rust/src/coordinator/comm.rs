@@ -1,0 +1,72 @@
+//! Wire messages + communication accounting.
+//!
+//! Both link directions carry real packed payloads ([`crate::fp8::codec`]);
+//! the byte counters here feed the paper's communication-gain metric
+//! (Table 1) and the Figure-2 accuracy-vs-bytes curves.
+
+use crate::fp8::codec::WirePayload;
+
+/// Downlink: server -> client (global model + clip side channels).
+#[derive(Clone, Debug)]
+pub struct Downlink {
+    pub payload: WirePayload,
+    pub round: usize,
+}
+
+/// Uplink: client -> server (updated local model + clips + weighting).
+#[derive(Clone, Debug)]
+pub struct Uplink {
+    pub payload: WirePayload,
+    pub client: usize,
+    /// n_k — local dataset size (FedAvg weighting).
+    pub n_k: u64,
+    pub mean_loss: f32,
+}
+
+/// Running totals of bytes that crossed each link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub up_msgs: u64,
+    pub down_msgs: u64,
+}
+
+impl CommStats {
+    pub fn record_up(&mut self, p: &WirePayload) {
+        self.up_bytes += p.wire_bytes();
+        self.up_msgs += 1;
+    }
+
+    pub fn record_down(&mut self, p: &WirePayload) {
+        self.down_bytes += p.wire_bytes();
+        self.down_msgs += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let p = WirePayload {
+            codes: vec![0u8; 100],
+            raw: vec![0.0; 10],
+            alphas: vec![1.0; 2],
+            betas: vec![1.0; 3],
+        };
+        let mut s = CommStats::default();
+        s.record_up(&p);
+        s.record_down(&p);
+        s.record_down(&p);
+        assert_eq!(s.up_bytes, 100 + 4 * 15);
+        assert_eq!(s.down_bytes, 2 * (100 + 4 * 15));
+        assert_eq!(s.total_bytes(), 3 * (100 + 4 * 15));
+        assert_eq!((s.up_msgs, s.down_msgs), (1, 2));
+    }
+}

@@ -1,0 +1,197 @@
+//! Run metrics: per-round records, CSV export, and the paper's
+//! communication-gain metric.
+//!
+//! Table 1 reports "final accuracy / communication gain vs FP32",
+//! where the gain is computed *per method* as the ratio of cumulative
+//! communicated bytes needed to first reach acc* — acc* being the
+//! best accuracy reached by BOTH the FP32 baseline and the method
+//! (§4 "Results"). Figure 2 plots accuracy against cumulative bytes;
+//! `to_csv` emits exactly that series.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Centralized test accuracy (NaN when not evaluated this round).
+    pub accuracy: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+    /// Cumulative bytes (uplink + downlink) after this round.
+    pub cum_bytes: u64,
+    /// Wall time of the round in milliseconds.
+    pub round_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub records: Vec<RoundRecord>,
+    pub final_accuracy: f64,
+    pub total_bytes: u64,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    pub fn best_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| !r.accuracy.is_nan())
+            .map(|r| r.accuracy)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Cumulative bytes when accuracy first reached `target`.
+    pub fn bytes_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| !r.accuracy.is_nan() && r.accuracy >= target)
+            .map(|r| r.cum_bytes)
+    }
+
+    /// Accuracy-vs-bytes series (Figure 2 axis pair).
+    pub fn curve(&self) -> Vec<(u64, f64)> {
+        self.records
+            .iter()
+            .filter(|r| !r.accuracy.is_nan())
+            .map(|r| (r.cum_bytes, r.accuracy))
+            .collect()
+    }
+
+    pub fn to_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,accuracy,test_loss,train_loss,cum_bytes,round_ms"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                r.round,
+                r.accuracy,
+                r.test_loss,
+                r.train_loss,
+                r.cum_bytes,
+                r.round_ms
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Communication gain of `method` over `fp32` at the shared-best
+/// accuracy (paper Table 1 definition). Returns (acc_star, gain).
+pub fn comm_gain(fp32: &RunResult, method: &RunResult) -> (f64, f64) {
+    let acc_star = fp32.best_accuracy().min(method.best_accuracy());
+    if acc_star.is_nan() {
+        return (f64::NAN, f64::NAN);
+    }
+    match (
+        fp32.bytes_to_accuracy(acc_star),
+        method.bytes_to_accuracy(acc_star),
+    ) {
+        (Some(b32), Some(bm)) if bm > 0 => {
+            (acc_star, b32 as f64 / bm as f64)
+        }
+        _ => (acc_star, f64::NAN),
+    }
+}
+
+/// Mean and sample standard deviation over seeds (table cells report
+/// "mean ± std / gain" across 3 seeds).
+pub fn mean_std(vals: &[f64]) -> (f64, f64) {
+    let n = vals.len() as f64;
+    if vals.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let m = vals.iter().sum::<f64>() / n;
+    if vals.len() < 2 {
+        return (m, 0.0);
+    }
+    let v = vals.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (n - 1.0);
+    (m, v.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(name: &str, accs: &[f64], bytes_per_round: u64) -> RunResult {
+        let records: Vec<RoundRecord> = accs
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| RoundRecord {
+                round: i,
+                accuracy: a,
+                test_loss: 0.0,
+                train_loss: 0.0,
+                cum_bytes: bytes_per_round * (i as u64 + 1),
+                round_ms: 1.0,
+            })
+            .collect();
+        RunResult {
+            name: name.into(),
+            final_accuracy: *accs.last().unwrap(),
+            total_bytes: bytes_per_round * accs.len() as u64,
+            wall_secs: 0.0,
+            records,
+        }
+    }
+
+    #[test]
+    fn gain_is_byte_ratio_at_shared_acc() {
+        // fp32 reaches 0.8 at round 3 (4 * 400 bytes); method reaches
+        // 0.8 at round 3 too but rounds cost 100 bytes -> gain 4x
+        let f = run("fp32", &[0.2, 0.5, 0.7, 0.8, 0.81], 400);
+        let m = run("uq", &[0.2, 0.5, 0.7, 0.8, 0.82], 100);
+        let (acc, gain) = comm_gain(&f, &m);
+        assert!((acc - 0.81).abs() < 1e-9);
+        // acc* = min(0.81, 0.82) = 0.81: fp32 hits it at round 4
+        // (2000 B), method at round 4 (500 B) -> 4x
+        assert!((gain - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_counts_fewer_rounds_too() {
+        // method converges faster AND cheaper
+        let f = run("fp32", &[0.3, 0.5, 0.6, 0.7], 400);
+        let m = run("uq", &[0.7, 0.7, 0.7, 0.7], 100);
+        let (_, gain) = comm_gain(&f, &m);
+        // fp32 needs 4 rounds (1600 B), method 1 round (100 B)
+        assert!((gain - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_to_accuracy_none_when_unreached() {
+        let f = run("x", &[0.1, 0.2], 10);
+        assert!(f.bytes_to_accuracy(0.5).is_none());
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn csv_writes(){
+        let r = run("t", &[0.5], 10);
+        let p = std::env::temp_dir().join("fedfp8_metrics_test.csv");
+        r.to_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("round,accuracy"));
+        assert!(s.lines().count() == 2);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordination: the paper's federated-learning protocol.
+
+pub mod aggregate;
+pub mod client;
+pub mod comm;
+pub mod metrics;
+pub mod server;
+pub mod server_opt;
+
+pub use metrics::{comm_gain, mean_std, RoundRecord, RunResult};
+pub use server::Server;

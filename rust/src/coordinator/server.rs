@@ -1,0 +1,386 @@
+//! The federated server — Algorithm 1 (FP8FedAvg-UQ / -UQ+) round loop.
+//!
+//! Per round t:
+//!   1. sample P_t ⊂ [K] clients
+//!   2. downlink: Q_rand(w_t) packed by the wire codec, broadcast
+//!      (every client hard-resets its master weights to the decoded
+//!      grid values — the "hard reset" of §2)
+//!   3. each client: U local steps of FP8-QAT via the AOT artifact
+//!   4. uplink: Q_rand(w_{t+1}^k) + alpha/beta side channels
+//!   5. FedAvg aggregation in FP32 (unbiased: Lemma 3/6)
+//!   6. optional ServerOptimize (Eq. 4 + Eq. 5)
+//!   7. periodic centralized evaluation of the quantized server model
+//!
+//! The server master model stays FP32 throughout; FP8 exists only on
+//! the wire and inside the QAT graphs — exactly the paper's split.
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{ExperimentConfig, SplitCfg};
+use crate::data::{self, partition, speech, vision, Dataset};
+use crate::fp8::codec;
+use crate::fp8::rng::Pcg32;
+use crate::runtime::{Engine, Manifest, ModelInfo};
+
+use super::aggregate;
+use super::client::ClientRunner;
+use super::comm::{CommStats, Uplink};
+use super::metrics::{RoundRecord, RunResult};
+use super::server_opt;
+
+pub struct Server<'a> {
+    pub cfg: ExperimentConfig,
+    engine: &'a Engine,
+    model: &'a ModelInfo,
+    train: Dataset,
+    test: Dataset,
+    shards: Vec<Vec<usize>>,
+    // FP32 master state
+    w: Vec<f32>,
+    alpha: Vec<f32>,
+    beta: Vec<f32>,
+    comm: CommStats,
+    rng_sample: Pcg32,
+    rng_quant: Pcg32,
+    rng_data: Pcg32,
+    verbose: bool,
+    /// Error-feedback memories (extension, cfg.error_feedback):
+    /// server-side downlink residual + lazily allocated per-client
+    /// uplink residuals. EF keeps the quantization error at the
+    /// compressing node and adds it back before the next compression,
+    /// which restores convergence under *biased* compressors
+    /// (Richtárik et al., the fix the paper's Remark 3 points to).
+    ef_server: Vec<f32>,
+    ef_clients: Vec<Option<Vec<f32>>>,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        manifest: &'a Manifest,
+        cfg: ExperimentConfig,
+    ) -> Result<Server<'a>> {
+        let model = manifest.model(&cfg.model)?;
+        ensure!(
+            cfg.participation <= cfg.clients,
+            "participation {} > clients {}",
+            cfg.participation,
+            cfg.clients
+        );
+        if cfg.server_opt.is_some() {
+            ensure!(
+                cfg.participation <= model.server_p,
+                "ServerOptimize artifact baked for P={}, cfg has {}",
+                model.server_p,
+                cfg.participation
+            );
+        }
+        // ---- data ---------------------------------------------------
+        let mut rng_data = Pcg32::new(cfg.seed, 0xDA7A);
+        let (train, test) = match model.kind.as_str() {
+            "vision" => {
+                let vcfg = vision::VisionCfg::new(model.classes);
+                vision::generate(&vcfg, cfg.n_train, cfg.n_test, cfg.seed)
+            }
+            "speech" => {
+                let scfg =
+                    speech::SpeechCfg::new(model.classes, cfg.speakers);
+                speech::generate(&scfg, cfg.n_train, cfg.n_test, cfg.seed)
+            }
+            k => bail!("unknown data kind '{k}'"),
+        };
+        ensure!(
+            train.feat_shape == model.input_shape,
+            "data/model shape mismatch: {:?} vs {:?}",
+            train.feat_shape,
+            model.input_shape
+        );
+        // ---- split --------------------------------------------------
+        let shards = match cfg.split {
+            SplitCfg::Iid => {
+                partition::iid(train.len(), cfg.clients, &mut rng_data)
+            }
+            SplitCfg::Dirichlet(c) => {
+                partition::dirichlet(&train, cfg.clients, c, &mut rng_data)
+            }
+            SplitCfg::Speaker => {
+                let s = partition::by_group(&train);
+                ensure!(
+                    s.len() >= cfg.participation,
+                    "only {} speakers for P={}",
+                    s.len(),
+                    cfg.participation
+                );
+                s
+            }
+        };
+        // ---- init ---------------------------------------------------
+        let w = manifest.load_init(model, "w")?;
+        let alpha = manifest.load_init(model, "alpha")?;
+        let beta = manifest.load_init(model, "beta")?;
+        let n_clients = shards.len();
+        let ef_server = vec![0.0f32; if cfg.error_feedback { model.dim }
+                             else { 0 }];
+        Ok(Server {
+            engine,
+            model,
+            train,
+            test,
+            shards,
+            w,
+            alpha,
+            beta,
+            comm: CommStats::default(),
+            rng_sample: Pcg32::new(cfg.seed, 0x5A3F),
+            rng_quant: Pcg32::new(cfg.seed, 0x9B1C),
+            rng_data,
+            cfg,
+            verbose: false,
+            ef_server,
+            ef_clients: vec![None; n_clients],
+        })
+    }
+
+    pub fn set_verbose(&mut self, v: bool) {
+        self.verbose = v;
+    }
+
+    /// Effective client count (speaker split may differ from cfg).
+    pub fn n_clients(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn comm_stats(&self) -> CommStats {
+        self.comm
+    }
+
+    pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.w, &self.alpha, &self.beta)
+    }
+
+    /// Run the full experiment; returns the per-round record series.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut last_acc = f64::NAN;
+        for t in 0..self.cfg.rounds {
+            let rt = Instant::now();
+            let train_loss = self.round(t)?;
+            let evaluate = (t + 1) % self.cfg.eval_every == 0
+                || t + 1 == self.cfg.rounds;
+            let (acc, tl) = if evaluate {
+                let (a, l) = self.evaluate()?;
+                last_acc = a;
+                (a, l)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let rec = RoundRecord {
+                round: t,
+                accuracy: acc,
+                test_loss: tl,
+                train_loss: train_loss as f64,
+                cum_bytes: self.comm.total_bytes(),
+                round_ms: rt.elapsed().as_secs_f64() * 1e3,
+            };
+            if self.verbose && evaluate {
+                eprintln!(
+                    "[{}] round {t:>4}  acc {:.4}  train-loss {:.4}  \
+                     comm {:.2} MiB",
+                    self.cfg.name,
+                    acc,
+                    train_loss,
+                    rec.cum_bytes as f64 / (1 << 20) as f64
+                );
+            }
+            records.push(rec);
+        }
+        Ok(RunResult {
+            name: self.cfg.name.clone(),
+            final_accuracy: last_acc,
+            total_bytes: self.comm.total_bytes(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+            records,
+        })
+    }
+
+    /// One communication round; returns the mean client training loss.
+    pub fn round(&mut self, t: usize) -> Result<f32> {
+        let m = self.model;
+        let cfg = &self.cfg;
+        let runner = ClientRunner {
+            engine: self.engine,
+            model: m,
+        };
+        // 1. sample participants
+        let participants = self
+            .rng_sample
+            .sample_distinct(self.shards.len(), cfg.participation);
+        // 2. downlink: quantize once, broadcast to P clients (with the
+        // optional error-feedback residual folded in pre-compression)
+        let down_src: Vec<f32> = if cfg.error_feedback {
+            self.w
+                .iter()
+                .zip(&self.ef_server)
+                .map(|(w, e)| w + e)
+                .collect()
+        } else {
+            self.w.clone()
+        };
+        let down = codec::encode(
+            &down_src,
+            &self.alpha,
+            &self.beta,
+            &m.segments,
+            cfg.comm,
+            &mut self.rng_quant,
+        );
+        for _ in &participants {
+            self.comm.record_down(&down);
+        }
+        // hard reset: every participant starts from the decoded grid
+        let mut w_start = vec![0.0f32; m.dim];
+        codec::decode(&down, &m.segments, &mut w_start);
+        if cfg.error_feedback {
+            for ((e, src), dec) in self
+                .ef_server
+                .iter_mut()
+                .zip(&down_src)
+                .zip(&w_start)
+            {
+                *e = src - dec;
+            }
+        }
+        let alpha_start = down.alphas.clone();
+        let beta_start = down.betas.clone();
+
+        // 3-4. local updates + uplinks
+        let lr = cfg.schedule.lr_at(cfg.lr, t, cfg.rounds);
+        let mut uplinks = Vec::with_capacity(participants.len());
+        for &k in &participants {
+            let mut crng = self.rng_data.fork((t * 131071 + k) as u64);
+            let (xs, ys) = data::make_batches(
+                &self.train,
+                &self.shards[k],
+                m.u_steps,
+                m.batch,
+                &mut crng,
+                cfg.flip_aug,
+            );
+            // heterogeneous fleets: a fixed prefix of the client id
+            // space trains in FP32 (no on-device FP8 support)
+            let qat = if (k as f32)
+                < cfg.fp32_client_frac * self.shards.len() as f32
+            {
+                crate::config::QatMode::None
+            } else {
+                cfg.qat
+            };
+            let upd = runner
+                .local_update(
+                    qat,
+                    &w_start,
+                    &alpha_start,
+                    &beta_start,
+                    &xs,
+                    &ys,
+                    lr,
+                    cfg.weight_decay,
+                    (t as i32) << 12 | k as i32 & 0xFFF,
+                )
+                .with_context(|| format!("client {k} round {t}"))?;
+            // uplink (with optional per-client error feedback)
+            let up_src: Vec<f32> = if cfg.error_feedback {
+                let e = self.ef_clients[k]
+                    .get_or_insert_with(|| vec![0.0f32; m.dim]);
+                upd.w.iter().zip(e.iter()).map(|(w, e)| w + e).collect()
+            } else {
+                upd.w.clone()
+            };
+            let payload = codec::encode(
+                &up_src,
+                &upd.alpha,
+                &upd.beta,
+                &m.segments,
+                cfg.comm,
+                &mut self.rng_quant,
+            );
+            if cfg.error_feedback {
+                let mut dec = vec![0.0f32; m.dim];
+                codec::decode(&payload, &m.segments, &mut dec);
+                let e = self.ef_clients[k].as_mut().unwrap();
+                for ((e, src), d) in
+                    e.iter_mut().zip(&up_src).zip(&dec)
+                {
+                    *e = src - d;
+                }
+            }
+            self.comm.record_up(&payload);
+            uplinks.push(Uplink {
+                payload,
+                client: k,
+                n_k: self.shards[k].len() as u64,
+                mean_loss: upd.mean_loss,
+            });
+        }
+
+        // 5. aggregate
+        let mut agg = aggregate::fedavg(
+            &uplinks,
+            &m.segments,
+            m.dim,
+            m.alpha_dim,
+            m.n_act,
+        )?;
+
+        // 6. ServerOptimize (UQ+)
+        if let Some(so) = &cfg.server_opt {
+            server_opt::optimize(
+                self.engine,
+                m,
+                so,
+                &mut agg,
+                &mut self.rng_quant,
+            )?;
+        }
+        self.w = agg.w;
+        self.alpha = agg.alpha;
+        self.beta = agg.beta;
+        Ok(agg.mean_loss)
+    }
+
+    /// Centralized evaluation over the test set (full eval batches).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let m = self.model;
+        let runner = ClientRunner {
+            engine: self.engine,
+            model: m,
+        };
+        let fl = m.feat_len();
+        let nb = self.test.len() / m.eval_batch;
+        ensure!(nb > 0, "test set smaller than eval batch");
+        let mut correct = 0i64;
+        let mut nll = 0.0f64;
+        let mut n = 0usize;
+        for b in 0..nb {
+            let lo = b * m.eval_batch;
+            let hi = lo + m.eval_batch;
+            let x = &self.test.x[lo * fl..hi * fl];
+            let y = &self.test.y[lo..hi];
+            let (loss_sum, corr) = runner.evaluate(
+                self.cfg.qat,
+                &self.w,
+                &self.alpha,
+                &self.beta,
+                x,
+                y,
+            )?;
+            correct += corr as i64;
+            nll += loss_sum as f64;
+            n += m.eval_batch;
+        }
+        Ok((correct as f64 / n as f64, nll / n as f64))
+    }
+}

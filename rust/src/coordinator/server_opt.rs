@@ -1,0 +1,119 @@
+//! ServerOptimize (the "+" of FP8FedAvg-UQ+): replace plain federated
+//! averaging with explicit minimization of the quantized-MSE objective.
+//!
+//! Alternating minimization, exactly as §2 of the paper:
+//!   1. Eq. (4) — `gd_steps` gradient-descent steps on the weights
+//!      `min_w sum_k (n_k/m_t) ||Q_rand(w; abar) - what_k||^2` with
+//!      alpha fixed to the weighted average. Gradients (STE through
+//!      Q_rand) are computed by the AOT `server_opt_det` artifact; the
+//!      stochastic-rounding draw `u` comes from the coordinator RNG.
+//!   2. Eq. (5) — per-tensor grid search for alpha over `grid_points`
+//!      values spanning [min_k alpha_k, max_k alpha_k], scoring each
+//!      candidate with the wire codec (no HLO dispatch needed). Common
+//!      random numbers across candidates keep the comparison tight.
+
+use anyhow::{ensure, Result};
+
+use crate::config::ServerOptCfg;
+use crate::fp8::codec;
+use crate::fp8::rng::Pcg32;
+use crate::runtime::{engine, Engine, In, ModelInfo};
+
+use super::aggregate::Aggregate;
+
+/// Run ServerOptimize in place on the aggregate. Returns the final
+/// Eq. (4) objective value (for logging / tests).
+pub fn optimize(
+    eng: &Engine,
+    model: &ModelInfo,
+    cfg: &ServerOptCfg,
+    agg: &mut Aggregate,
+    rng: &mut Pcg32,
+) -> Result<f32> {
+    let p = model.server_p;
+    ensure!(
+        agg.client_ws.len() <= p,
+        "round had {} uplinks but artifact is baked for P={p}",
+        agg.client_ws.len()
+    );
+    // ---- Eq. (4): GD on w with alpha fixed --------------------------
+    // pad client set to P with zero-weight duplicates (kw=0 rows do not
+    // contribute to the objective or gradient)
+    let dim = model.dim;
+    let mut clients_flat = Vec::with_capacity(p * dim);
+    let mut kweights = Vec::with_capacity(p);
+    for (cw, &kw) in agg.client_ws.iter().zip(&agg.kweights) {
+        clients_flat.extend_from_slice(cw);
+        kweights.push(kw);
+    }
+    while kweights.len() < p {
+        clients_flat.extend_from_slice(&agg.client_ws[0]);
+        kweights.push(0.0);
+    }
+    let file = model.artifact("server_opt", "det")?;
+    let mut mse = f32::NAN;
+    let mut u = vec![0.0f32; dim];
+    for _ in 0..cfg.gd_steps {
+        for v in u.iter_mut() {
+            *v = rng.uniform();
+        }
+        let out = eng.execute(
+            file,
+            &[
+                In::F32(&agg.w, &[dim as i64]),
+                In::F32(&agg.alpha, &[model.alpha_dim as i64]),
+                In::F32(&clients_flat, &[p as i64, dim as i64]),
+                In::F32(&kweights, &[p as i64]),
+                In::F32(&u, &[dim as i64]),
+                In::ScalarF32(cfg.gd_lr),
+            ],
+        )?;
+        ensure!(out.len() == 2, "server_opt returns (w', mse)");
+        agg.w = engine::f32_vec(&out[0])?;
+        mse = engine::f32_scalar(&out[1])?;
+    }
+
+    // ---- Eq. (5): per-tensor alpha grid search ----------------------
+    let client_refs: Vec<&[f32]> =
+        agg.client_ws.iter().map(|v| v.as_slice()).collect();
+    for seg in model.segments.iter().filter(|s| s.quantized) {
+        let ai = seg.alpha_idx.unwrap();
+        // candidate range from the clients' transmitted alphas
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for up_alpha in agg.client_alphas.iter() {
+            lo = lo.min(up_alpha[ai]);
+            hi = hi.max(up_alpha[ai]);
+        }
+        if !(lo.is_finite() && hi.is_finite()) || lo <= 0.0 {
+            continue;
+        }
+        // common random numbers for all candidates of this segment
+        let us: Vec<f64> =
+            (0..seg.size).map(|_| rng.uniform_f64()).collect();
+        let mut best = (agg.alpha[ai], f64::MAX);
+        let n = cfg.grid_points.max(1);
+        for gi in 0..n {
+            let cand = if n == 1 {
+                lo
+            } else {
+                lo + (hi - lo) * gi as f32 / (n - 1) as f32
+            };
+            if cand <= 0.0 {
+                continue;
+            }
+            let mse = codec::segment_quant_mse(
+                &agg.w,
+                seg,
+                cand,
+                &client_refs,
+                &agg.kweights,
+                &us,
+            );
+            if mse < best.1 {
+                best = (cand, mse);
+            }
+        }
+        agg.alpha[ai] = best.0;
+    }
+    Ok(mse)
+}

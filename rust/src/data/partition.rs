@@ -1,0 +1,166 @@
+//! Federated partitioners: i.i.d., Dirichlet(beta) label-skew, and
+//! speaker-id grouping — the three client-split regimes of the paper's
+//! evaluation (§4: i.i.d., Dir(0.3), speaker-id).
+
+use super::Dataset;
+use crate::fp8::rng::Pcg32;
+
+/// Shuffle and split into `k` near-equal shards.
+pub fn iid(n: usize, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.below(i + 1);
+        idx.swap(i, j);
+    }
+    let mut shards = vec![Vec::with_capacity(n / k + 1); k];
+    for (i, v) in idx.into_iter().enumerate() {
+        shards[i % k].push(v);
+    }
+    shards
+}
+
+/// Label-skewed split: for each class, distribute its examples across
+/// clients with Dirichlet(concentration) proportions (the standard
+/// construction behind the paper's "Dir(0.3)" rows).
+pub fn dirichlet(
+    ds: &Dataset,
+    k: usize,
+    concentration: f64,
+    rng: &mut Pcg32,
+) -> Vec<Vec<usize>> {
+    let mut shards = vec![Vec::new(); k];
+    for class in 0..ds.classes {
+        let members: Vec<usize> = (0..ds.len())
+            .filter(|&i| ds.y[i] as usize == class)
+            .collect();
+        let props = rng.dirichlet(concentration, k);
+        // cumulative boundaries over the shuffled member list
+        let mut order = members;
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i + 1);
+            order.swap(i, j);
+        }
+        let n = order.len() as f64;
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (cl, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if cl + 1 == k {
+                order.len()
+            } else {
+                (acc * n).round() as usize
+            }
+            .min(order.len());
+            shards[cl].extend_from_slice(&order[start..end.max(start)]);
+            start = end.max(start);
+        }
+    }
+    // guarantee no empty shard (move one example from the largest)
+    for i in 0..k {
+        if shards[i].is_empty() {
+            let largest = (0..k)
+                .max_by_key(|&j| shards[j].len())
+                .unwrap();
+            if let Some(v) = shards[largest].pop() {
+                shards[i].push(v);
+            }
+        }
+    }
+    shards
+}
+
+/// One client per distinct group (speaker) id.
+pub fn by_group(ds: &Dataset) -> Vec<Vec<usize>> {
+    let k = ds.group.iter().copied().max().map(|m| m as usize + 1)
+        .unwrap_or(0);
+    let mut shards = vec![Vec::new(); k];
+    for (i, &g) in ds.group.iter().enumerate() {
+        shards[g as usize].push(i);
+    }
+    shards.retain(|s| !s.is_empty());
+    shards
+}
+
+/// Summary statistic used in tests / logs: mean per-client fraction of
+/// the majority label (1/classes for perfectly uniform shards).
+pub fn skew(ds: &Dataset, shards: &[Vec<usize>]) -> f64 {
+    let mut total = 0.0;
+    for shard in shards {
+        let mut counts = vec![0usize; ds.classes];
+        for &i in shard {
+            counts[ds.y[i] as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap_or(&0);
+        total += max as f64 / shard.len().max(1) as f64;
+    }
+    total / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vision::{generate, VisionCfg};
+
+    fn ds() -> Dataset {
+        generate(&VisionCfg::new(10), 1000, 10, 1).0
+    }
+
+    #[test]
+    fn iid_covers_everything_once() {
+        let mut rng = Pcg32::new(1, 0);
+        let shards = iid(100, 7, &mut rng);
+        let mut all: Vec<usize> =
+            shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        assert!(shards.iter().all(|s| s.len() >= 100 / 7));
+    }
+
+    #[test]
+    fn dirichlet_covers_everything_once() {
+        let d = ds();
+        let mut rng = Pcg32::new(2, 0);
+        let shards = dirichlet(&d, 20, 0.3, &mut rng);
+        let mut all: Vec<usize> =
+            shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), d.len());
+        all.dedup();
+        assert_eq!(all.len(), d.len());
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_more_skewed_than_iid() {
+        let d = ds();
+        let mut rng = Pcg32::new(3, 0);
+        let iid_shards = iid(d.len(), 20, &mut rng);
+        let dir_shards = dirichlet(&d, 20, 0.3, &mut rng);
+        let s_iid = skew(&d, &iid_shards);
+        let s_dir = skew(&d, &dir_shards);
+        assert!(
+            s_dir > s_iid + 0.1,
+            "dir skew {s_dir} vs iid skew {s_iid}"
+        );
+    }
+
+    #[test]
+    fn concentration_controls_skew() {
+        let d = ds();
+        let mut rng = Pcg32::new(4, 0);
+        let tight = dirichlet(&d, 20, 100.0, &mut rng);
+        let loose = dirichlet(&d, 20, 0.1, &mut rng);
+        assert!(skew(&d, &loose) > skew(&d, &tight) + 0.15);
+    }
+
+    #[test]
+    fn group_partition() {
+        let mut d = ds();
+        d.group = (0..d.len()).map(|i| (i % 13) as u32).collect();
+        let shards = by_group(&d);
+        assert_eq!(shards.len(), 13);
+        for (g, shard) in shards.iter().enumerate() {
+            assert!(shard.iter().all(|&i| d.group[i] as usize == g));
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! SyntheticSpeech — SpeechCommands stand-in (DESIGN.md §Substitutions).
+//!
+//! Each class is a frequency-modulated "formant" trajectory over a
+//! (T, F) MFCC-like grid; each synthetic *speaker* adds a fixed timbre
+//! offset, pitch shift and gain. Utterances carry their speaker id so
+//! the speaker-id partitioner reproduces the paper's realistic
+//! heterogeneity (each client = one speaker whose class mix and voice
+//! are idiosyncratic).
+
+use super::Dataset;
+use crate::fp8::rng::Pcg32;
+
+pub struct SpeechCfg {
+    pub classes: usize,
+    pub t: usize,
+    pub f: usize,
+    pub speakers: usize,
+    pub noise: f32,
+}
+
+impl SpeechCfg {
+    pub fn new(classes: usize, speakers: usize) -> Self {
+        Self {
+            classes,
+            t: 32,
+            f: 16,
+            speakers,
+            noise: 0.8,
+        }
+    }
+}
+
+struct ClassProto {
+    f0: f32,
+    fmod: f32,
+    rate: f32,
+    phase: f32,
+    width: f32,
+    second_formant: f32,
+}
+
+fn class_protos(cfg: &SpeechCfg, rng: &mut Pcg32) -> Vec<ClassProto> {
+    (0..cfg.classes)
+        .map(|_| ClassProto {
+            f0: 2.0 + rng.uniform() * (cfg.f as f32 - 6.0),
+            fmod: 1.0 + rng.uniform() * 4.0,
+            rate: 0.5 + rng.uniform() * 2.5,
+            phase: rng.uniform() * std::f32::consts::TAU,
+            width: 0.8 + rng.uniform() * 1.6,
+            second_formant: rng.uniform() * cfg.f as f32,
+        })
+        .collect()
+}
+
+struct Speaker {
+    timbre: Vec<f32>,
+    pitch_shift: f32,
+    gain: f32,
+    tempo: f32,
+}
+
+fn speakers(cfg: &SpeechCfg, rng: &mut Pcg32) -> Vec<Speaker> {
+    let mut cache = None;
+    (0..cfg.speakers)
+        .map(|_| Speaker {
+            timbre: (0..cfg.f)
+                .map(|_| 0.25 * rng.normal(&mut cache))
+                .collect(),
+            pitch_shift: 1.2 * rng.normal(&mut cache),
+            gain: 1.0 + 0.2 * rng.normal(&mut cache),
+            tempo: 1.0 + 0.15 * rng.normal(&mut cache),
+        })
+        .collect()
+}
+
+/// Generate train + test. Utterances are distributed round-robin over
+/// speakers with per-speaker class preferences (speakers do not say
+/// every word equally often — mirrors SpeechCommands).
+pub fn generate(
+    cfg: &SpeechCfg,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let mut rng = Pcg32::new(seed, 0x5350_4545_4348); // "SPEECH" stream
+    let protos = class_protos(cfg, &mut rng);
+    let spk = speakers(cfg, &mut rng);
+    // per-speaker class preference (Dirichlet over classes)
+    let prefs: Vec<Vec<f64>> = (0..cfg.speakers)
+        .map(|_| rng.dirichlet(1.5, cfg.classes))
+        .collect();
+
+    let mut make = |n: usize, rng: &mut Pcg32| -> Dataset {
+        let fl = cfg.t * cfg.f;
+        let mut x = Vec::with_capacity(n * fl);
+        let mut y = Vec::with_capacity(n);
+        let mut group = Vec::with_capacity(n);
+        let mut cache = None;
+        for i in 0..n {
+            let sid = i % cfg.speakers;
+            let s = &spk[sid];
+            // sample class from the speaker's preference
+            let r = rng.uniform_f64();
+            let mut acc = 0.0;
+            let mut cl = cfg.classes - 1;
+            for (c, &p) in prefs[sid].iter().enumerate() {
+                acc += p;
+                if r < acc {
+                    cl = c;
+                    break;
+                }
+            }
+            let pr = &protos[cl];
+            for tt in 0..cfg.t {
+                let tf = tt as f32 * s.tempo;
+                let center = pr.f0
+                    + s.pitch_shift
+                    + pr.fmod
+                        * (pr.rate * tf * std::f32::consts::TAU
+                            / cfg.t as f32
+                            + pr.phase)
+                            .sin();
+                let env = (std::f32::consts::PI * (tt as f32 + 0.5)
+                    / cfg.t as f32)
+                    .sin();
+                for ff in 0..cfg.f {
+                    let d1 = (ff as f32 - center) / pr.width;
+                    let d2 = (ff as f32 - pr.second_formant) / 2.0;
+                    let v = s.gain
+                        * env
+                        * (2.0 * (-0.5 * d1 * d1).exp()
+                            + 0.7 * (-0.5 * d2 * d2).exp())
+                        + s.timbre[ff]
+                        + cfg.noise * rng.normal(&mut cache);
+                    x.push(v);
+                }
+            }
+            y.push(cl as i32);
+            group.push(sid as u32);
+        }
+        Dataset {
+            x,
+            y,
+            feat_shape: vec![cfg.t, cfg.f],
+            classes: cfg.classes,
+            group,
+        }
+    };
+    let train = make(n_train, &mut rng);
+    let test = make(n_test, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let cfg = SpeechCfg::new(12, 16);
+        let (tr, te) = generate(&cfg, 128, 32, 1);
+        assert_eq!(tr.len(), 128);
+        assert_eq!(tr.feat_len(), 32 * 16);
+        assert_eq!(te.feat_shape, vec![32, 16]);
+        assert!(tr.y.iter().all(|&v| (0..12).contains(&v)));
+    }
+
+    #[test]
+    fn speakers_cover_dataset() {
+        let cfg = SpeechCfg::new(12, 16);
+        let (tr, _) = generate(&cfg, 160, 16, 2);
+        let mut seen = vec![false; 16];
+        for &g in &tr.group {
+            seen[g as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = SpeechCfg::new(12, 8);
+        let (a, _) = generate(&cfg, 64, 8, 7);
+        let (b, _) = generate(&cfg, 64, 8, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.group, b.group);
+    }
+
+    #[test]
+    fn class_signal_present() {
+        // energy-weighted frequency centroid should differ across classes
+        let cfg = SpeechCfg::new(4, 8);
+        let (tr, _) = generate(&cfg, 400, 8, 3);
+        let mut cent = vec![0.0f64; 4];
+        let mut cnt = vec![0.0f64; 4];
+        for i in 0..tr.len() {
+            let ex = tr.example(i);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for tt in 0..cfg.t {
+                for ff in 0..cfg.f {
+                    let e = (ex[tt * cfg.f + ff] as f64).max(0.0);
+                    num += e * ff as f64;
+                    den += e;
+                }
+            }
+            cent[tr.y[i] as usize] += num / den.max(1e-9);
+            cnt[tr.y[i] as usize] += 1.0;
+        }
+        let c: Vec<f64> = cent
+            .iter()
+            .zip(&cnt)
+            .map(|(s, n)| s / n.max(1.0))
+            .collect();
+        let spread = c.iter().cloned().fold(f64::MIN, f64::max)
+            - c.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.3, "centroid spread {spread}");
+    }
+}

@@ -1,0 +1,196 @@
+//! SyntheticVision — CIFAR10/100 stand-in (DESIGN.md §Substitutions).
+//!
+//! Class-conditional generator: each class has a smooth random
+//! prototype image; samples are prototype + i.i.d. Gaussian pixel
+//! noise + a global brightness jitter, standardized to ~N(0,1) pixels.
+//! With C=100 the prototypes crowd the 192-dim feature space, so the
+//! task gets genuinely harder (mirroring CIFAR100 vs CIFAR10), which
+//! is what drives the paper's per-dataset differences.
+
+use super::Dataset;
+use crate::fp8::rng::Pcg32;
+
+pub struct VisionCfg {
+    pub classes: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub noise: f32,
+    pub label_noise: f32,
+}
+
+impl VisionCfg {
+    pub fn new(classes: usize) -> Self {
+        Self {
+            classes,
+            h: 8,
+            w: 8,
+            c: 3,
+            noise: 1.3,
+            label_noise: 0.04,
+        }
+    }
+}
+
+fn prototypes(cfg: &VisionCfg, rng: &mut Pcg32) -> Vec<f32> {
+    let f = cfg.h * cfg.w * cfg.c;
+    let mut protos = vec![0.0f32; cfg.classes * f];
+    let mut cache = None;
+    for cl in 0..cfg.classes {
+        // raw noise, then 3x3 spatial box-blur per channel for smooth,
+        // image-like structure
+        let raw: Vec<f32> =
+            (0..f).map(|_| rng.normal(&mut cache)).collect();
+        let dst = &mut protos[cl * f..(cl + 1) * f];
+        for hh in 0..cfg.h {
+            for ww in 0..cfg.w {
+                for cc in 0..cfg.c {
+                    let mut acc = 0.0f32;
+                    let mut n = 0.0f32;
+                    for dh in -1i64..=1 {
+                        for dw in -1i64..=1 {
+                            let nh = hh as i64 + dh;
+                            let nw = ww as i64 + dw;
+                            if nh >= 0
+                                && nh < cfg.h as i64
+                                && nw >= 0
+                                && nw < cfg.w as i64
+                            {
+                                acc += raw[((nh as usize * cfg.w
+                                    + nw as usize)
+                                    * cfg.c)
+                                    + cc];
+                                n += 1.0;
+                            }
+                        }
+                    }
+                    dst[(hh * cfg.w + ww) * cfg.c + cc] =
+                        acc / n * 2.2; // re-amplify post-blur
+                }
+            }
+        }
+    }
+    protos
+}
+
+/// Generate train + test splits from one seed.
+pub fn generate(
+    cfg: &VisionCfg,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let mut rng = Pcg32::new(seed, 0x5649_5349_4f4e); // "VISION" stream
+    let protos = prototypes(cfg, &mut rng);
+    let make = |n: usize, rng: &mut Pcg32| -> Dataset {
+        let f = cfg.h * cfg.w * cfg.c;
+        let mut x = Vec::with_capacity(n * f);
+        let mut y = Vec::with_capacity(n);
+        let mut cache = None;
+        for _ in 0..n {
+            let mut cl = rng.below(cfg.classes);
+            let bright = 1.0 + 0.1 * rng.normal(&mut cache);
+            let proto = &protos[cl * f..(cl + 1) * f];
+            for &p in proto {
+                x.push(p * bright + cfg.noise * rng.normal(&mut cache));
+            }
+            if rng.uniform() < cfg.label_noise {
+                cl = rng.below(cfg.classes);
+            }
+            y.push(cl as i32);
+        }
+        Dataset {
+            x,
+            y,
+            feat_shape: vec![cfg.h, cfg.w, cfg.c],
+            classes: cfg.classes,
+            group: vec![0; n],
+        }
+    };
+    let train = make(n_train, &mut rng);
+    let test = make(n_test, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let cfg = VisionCfg::new(10);
+        let (tr, te) = generate(&cfg, 100, 40, 1);
+        assert_eq!(tr.len(), 100);
+        assert_eq!(te.len(), 40);
+        assert_eq!(tr.feat_len(), 192);
+        assert!(tr.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = VisionCfg::new(10);
+        let (a, _) = generate(&cfg, 50, 10, 42);
+        let (b, _) = generate(&cfg, 50, 10, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let cfg = VisionCfg::new(10);
+        let (a, _) = generate(&cfg, 50, 10, 1);
+        let (b, _) = generate(&cfg, 50, 10, 2);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn class_structure_is_learnable() {
+        // nearest-prototype classifier must beat chance comfortably
+        let cfg = VisionCfg::new(10);
+        let (tr, te) = generate(&cfg, 500, 200, 3);
+        let f = tr.feat_len();
+        // class means from train
+        let mut means = vec![0.0f64; 10 * f];
+        let mut counts = vec![0.0f64; 10];
+        for i in 0..tr.len() {
+            let cl = tr.y[i] as usize;
+            counts[cl] += 1.0;
+            for (j, &v) in tr.example(i).iter().enumerate() {
+                means[cl * f + j] += v as f64;
+            }
+        }
+        for cl in 0..10 {
+            for j in 0..f {
+                means[cl * f + j] /= counts[cl].max(1.0);
+            }
+        }
+        let mut correct = 0;
+        for i in 0..te.len() {
+            let ex = te.example(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = ex
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &v)| {
+                            (v as f64 - means[a * f + j]).powi(2)
+                        })
+                        .sum();
+                    let db: f64 = ex
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &v)| {
+                            (v as f64 - means[b * f + j]).powi(2)
+                        })
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == te.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.len() as f64;
+        assert!(acc > 0.5, "nearest-prototype acc {acc}");
+    }
+}

@@ -1,0 +1,334 @@
+//! Wire codec — the *physical* 8-bit payloads of FP8FedAvg-UQ.
+//!
+//! Unlike simulation-style FL codebases that merely *count* hypothetical
+//! bytes, the coordinator really packs every quantized tensor into
+//! `1 byte/param` codes (+ a 4-byte alpha side channel per tensor) and
+//! unpacks them on the other side, so the communication accounting in
+//! EXPERIMENTS.md is physical. Unquantized segments (biases, norm
+//! parameters — <2% of params, paper §4) travel as raw little-endian
+//! f32.
+//!
+//! Decode is a 256-entry LUT per tensor (one `Fp8Params::decode_table`
+//! per alpha), making the downlink/uplink decode path branch-free.
+
+use super::format::Fp8Params;
+use super::rng::Pcg32;
+
+/// One named parameter segment of the flat weight vector (mirrors the
+/// manifest's segment table produced by `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub quantized: bool,
+    pub alpha_idx: Option<usize>,
+}
+
+/// Rounding mode for communication quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Q_det — biased round-half-up (the BQ ablation arm).
+    Deterministic,
+    /// Q_rand — unbiased stochastic rounding (the paper's UQ).
+    Stochastic,
+    /// No quantization: raw f32 (the FP32 FedAvg baseline).
+    None,
+}
+
+/// A packed model update as it would travel over the network.
+#[derive(Clone, Debug)]
+pub struct WirePayload {
+    /// 8-bit codes for quantized segments, concatenated in segment order.
+    pub codes: Vec<u8>,
+    /// Raw f32 values for unquantized segments, in segment order.
+    pub raw: Vec<f32>,
+    /// Per-tensor clipping values (alpha side channel).
+    pub alphas: Vec<f32>,
+    /// Activation clipping values (beta side channel).
+    pub betas: Vec<f32>,
+}
+
+impl WirePayload {
+    /// Bytes on the wire: 1 per code, 4 per raw f32 / alpha / beta.
+    pub fn wire_bytes(&self) -> u64 {
+        self.codes.len() as u64
+            + 4 * (self.raw.len() + self.alphas.len() + self.betas.len())
+                as u64
+    }
+}
+
+/// Encode a flat weight vector into a wire payload.
+///
+/// `u_draw` supplies the stochastic-rounding randomness; deterministic
+/// mode uses u = 0.5 everywhere. With `Rounding::None` the full vector
+/// is shipped as f32 (codes empty).
+pub fn encode(
+    w: &[f32],
+    alphas: &[f32],
+    betas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+) -> WirePayload {
+    let mut codes = Vec::new();
+    let mut raw = Vec::new();
+    if mode == Rounding::None {
+        raw.extend_from_slice(w);
+        return WirePayload {
+            codes,
+            raw,
+            alphas: alphas.to_vec(),
+            betas: betas.to_vec(),
+        };
+    }
+    codes.reserve(w.len());
+    for seg in segments {
+        let vals = &w[seg.offset..seg.offset + seg.size];
+        match seg.alpha_idx {
+            Some(ai) if seg.quantized => {
+                let p = Fp8Params::new(alphas[ai]);
+                match mode {
+                    Rounding::Deterministic => {
+                        for &x in vals {
+                            codes.push(p.encode(x, 0.5));
+                        }
+                    }
+                    Rounding::Stochastic => {
+                        for &x in vals {
+                            codes.push(p.encode(x, rng.uniform_f64()));
+                        }
+                    }
+                    Rounding::None => unreachable!(),
+                }
+            }
+            _ => raw.extend_from_slice(vals),
+        }
+    }
+    WirePayload {
+        codes,
+        raw,
+        alphas: alphas.to_vec(),
+        betas: betas.to_vec(),
+    }
+}
+
+/// Decode a wire payload back into a flat weight vector.
+pub fn decode(payload: &WirePayload, segments: &[Segment], out: &mut [f32]) {
+    if payload.codes.is_empty() && !payload.raw.is_empty() {
+        // FP32 passthrough
+        out.copy_from_slice(&payload.raw);
+        return;
+    }
+    let mut ci = 0usize;
+    let mut ri = 0usize;
+    for seg in segments {
+        let dst = &mut out[seg.offset..seg.offset + seg.size];
+        match seg.alpha_idx {
+            Some(ai) if seg.quantized => {
+                let table =
+                    Fp8Params::new(payload.alphas[ai]).decode_table();
+                for d in dst.iter_mut() {
+                    *d = table[payload.codes[ci] as usize];
+                    ci += 1;
+                }
+            }
+            _ => {
+                dst.copy_from_slice(&payload.raw[ri..ri + seg.size]);
+                ri += seg.size;
+            }
+        }
+    }
+}
+
+/// Quantize a full weight vector in place on the FP8 grid *without*
+/// packing (ServerOptimize Eq. (5) inner loop: grid-search over alpha
+/// candidates only needs the dequantized values).
+pub fn quantize_vec(
+    w: &[f32],
+    alphas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+    out: &mut [f32],
+) {
+    out.copy_from_slice(w);
+    if mode == Rounding::None {
+        return;
+    }
+    for seg in segments {
+        if let (true, Some(ai)) = (seg.quantized, seg.alpha_idx) {
+            let p = Fp8Params::new(alphas[ai]);
+            let dst = &mut out[seg.offset..seg.offset + seg.size];
+            match mode {
+                Rounding::Deterministic => {
+                    for d in dst.iter_mut() {
+                        *d = p.quantize(*d, 0.5);
+                    }
+                }
+                Rounding::Stochastic => {
+                    for d in dst.iter_mut() {
+                        *d = p.quantize(*d, rng.uniform_f64());
+                    }
+                }
+                Rounding::None => unreachable!(),
+            }
+        }
+    }
+}
+
+/// Weighted MSE between Q(w; alpha) and a set of client vectors —
+/// the ServerOptimize Eq. (5) objective, evaluated for one alpha
+/// candidate on one segment.
+pub fn segment_quant_mse(
+    w: &[f32],
+    seg: &Segment,
+    alpha: f32,
+    clients: &[&[f32]],
+    kweights: &[f32],
+    us: &[f64],
+) -> f64 {
+    let p = Fp8Params::new(alpha);
+    let mut total = 0.0f64;
+    let base = seg.offset;
+    for i in 0..seg.size {
+        let q = p.quantize(w[base + i], us[i]) as f64;
+        for (c, &kw) in clients.iter().zip(kweights) {
+            let d = q - c[base + i] as f64;
+            total += kw as f64 * d * d;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn segs() -> Vec<Segment> {
+        vec![
+            Segment {
+                name: "w1".into(),
+                offset: 0,
+                size: 100,
+                quantized: true,
+                alpha_idx: Some(0),
+            },
+            Segment {
+                name: "b1".into(),
+                offset: 100,
+                size: 10,
+                quantized: false,
+                alpha_idx: None,
+            },
+            Segment {
+                name: "w2".into(),
+                offset: 110,
+                size: 50,
+                quantized: true,
+                alpha_idx: Some(1),
+            },
+        ]
+    }
+
+    fn test_vec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 0);
+        (0..n).map(|_| (rng.uniform() - 0.5) * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_preserves_unquantized() {
+        let w = test_vec(160, 1, 2.0);
+        let alphas = vec![1.0, 0.5];
+        let mut rng = Pcg32::new(2, 0);
+        let p = encode(&w, &alphas, &[], &segs(), Rounding::Deterministic,
+                       &mut rng);
+        let mut out = vec![0.0; 160];
+        decode(&p, &segs(), &mut out);
+        assert_eq!(&out[100..110], &w[100..110]); // bias exact
+    }
+
+    #[test]
+    fn roundtrip_equals_quantize_vec() {
+        let w = test_vec(160, 3, 2.0);
+        let alphas = vec![0.9, 1.7];
+        let mut r1 = Pcg32::new(7, 1);
+        let mut r2 = Pcg32::new(7, 1);
+        let p = encode(&w, &alphas, &[], &segs(), Rounding::Stochastic,
+                       &mut r1);
+        let mut via_wire = vec![0.0; 160];
+        decode(&p, &segs(), &mut via_wire);
+        let mut direct = vec![0.0; 160];
+        quantize_vec(&w, &alphas, &segs(), Rounding::Stochastic, &mut r2,
+                     &mut direct);
+        assert_eq!(via_wire, direct);
+    }
+
+    #[test]
+    fn fp32_mode_is_exact() {
+        let w = test_vec(160, 4, 3.0);
+        let mut rng = Pcg32::new(5, 0);
+        let p = encode(&w, &[1.0, 1.0], &[], &segs(), Rounding::None,
+                       &mut rng);
+        let mut out = vec![0.0; 160];
+        decode(&p, &segs(), &mut out);
+        assert_eq!(out, w);
+        assert_eq!(p.wire_bytes(), 160 * 4 + 2 * 4);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let w = test_vec(160, 6, 1.0);
+        let mut rng = Pcg32::new(6, 0);
+        let p = encode(&w, &[1.0, 1.0], &[4.0; 3], &segs(),
+                       Rounding::Deterministic, &mut rng);
+        // 150 quantized codes + 10 raw f32 + 2 alphas + 3 betas
+        assert_eq!(p.wire_bytes(), 150 + 40 + 8 + 12);
+    }
+
+    #[test]
+    fn stochastic_unbiased_statistically() {
+        let seg = vec![Segment {
+            name: "w".into(),
+            offset: 0,
+            size: 64,
+            quantized: true,
+            alpha_idx: Some(0),
+        }];
+        let w = test_vec(64, 8, 0.6);
+        let mut rng = Pcg32::new(9, 0);
+        let mut acc = vec![0.0f64; 64];
+        let n = 4000;
+        let mut out = vec![0.0; 64];
+        for _ in 0..n {
+            quantize_vec(&w, &[1.0], &seg, Rounding::Stochastic, &mut rng,
+                         &mut out);
+            for (a, &v) in acc.iter_mut().zip(&out) {
+                *a += v as f64;
+            }
+        }
+        let p = Fp8Params::new(1.0);
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / n as f64;
+            let bin = p.scale((w[i] as f64).abs());
+            let tol = 4.0 * bin / (n as f64).sqrt() + 1e-7;
+            assert!(
+                (mean - w[i] as f64).abs() < tol,
+                "i={i} mean={mean} x={} tol={tol}",
+                w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_encode_is_reproducible() {
+        let w = test_vec(160, 10, 1.5);
+        let mut r1 = Pcg32::new(1, 0);
+        let mut r2 = Pcg32::new(99, 7); // rng must not matter for det
+        let a = encode(&w, &[1.0, 1.0], &[], &segs(),
+                       Rounding::Deterministic, &mut r1);
+        let b = encode(&w, &[1.0, 1.0], &[], &segs(),
+                       Rounding::Deterministic, &mut r2);
+        assert_eq!(a.codes, b.codes);
+    }
+}

@@ -1,0 +1,306 @@
+//! The flexible-bias FP8 number format (1 sign, e=4 exponent, m=3
+//! mantissa bits) — bit-level twin of `python/compile/kernels/ref.py`.
+//!
+//! The per-tensor clipping value `alpha` fixes a *real-valued* exponent
+//! bias
+//!
+//! ```text
+//!     b = 2^e - log2(alpha) + log2(2 - 2^-m) - 1
+//! ```
+//!
+//! so the top code (E=15, M=7) decodes exactly to `alpha` (Kuzmin et
+//! al.). All internal math is f64 — identical to the `quantize_np`
+//! oracle that generates the golden vectors — and dequantized values
+//! are cast to f32 at the end.
+
+pub const M_BITS: u32 = 3;
+pub const E_BITS: u32 = 4;
+pub const E_MAX: i64 = (1 << E_BITS) - 1; // 15
+pub const M_MAX: u32 = (1 << M_BITS) - 1; // 7
+/// log2(2 - 2^-m)
+pub const LOG2_TOP: f64 = 0.9068905956085185; // ln(1.875)/ln(2)
+
+/// Per-tensor format parameters derived from alpha, precomputed once
+/// per tensor per round (hot path works only with these).
+#[derive(Clone, Copy, Debug)]
+pub struct Fp8Params {
+    pub alpha: f32,
+    /// real-valued exponent bias b
+    pub bias: f64,
+    /// 2^b (scales |x| into code space)
+    pub exp2_bias: f64,
+    /// subnormal scale 2^(1-b-m)
+    pub sub_scale: f64,
+    /// per-exponent scale LUT: scales[c] = 2^(c-b-m) for c in 0..=15
+    /// (§Perf: replaces a per-element exp2 in the encode hot loop;
+    /// for c > 15 the value clips to ±alpha regardless of scale, so
+    /// scales[15] is a safe stand-in)
+    scales: [f64; 16],
+}
+
+impl Fp8Params {
+    pub fn new(alpha: f32) -> Self {
+        let a = alpha as f64;
+        debug_assert!(a > 0.0, "alpha must be positive");
+        let bias = (1u64 << E_BITS) as f64 - a.log2() + LOG2_TOP - 1.0;
+        let mut scales = [0.0f64; 16];
+        for (c, s) in scales.iter_mut().enumerate() {
+            *s = (c as f64 - bias - M_BITS as f64).exp2();
+        }
+        Self {
+            alpha,
+            bias,
+            exp2_bias: bias.exp2(),
+            sub_scale: (1.0 - bias - M_BITS as f64).exp2(),
+            scales,
+        }
+    }
+
+    /// floor(log2|x| + b) without calling log2 per element: exact
+    /// binary exponent of u = |x| * 2^b via bit inspection.
+    #[inline]
+    pub fn code_exponent(&self, absx: f64) -> i64 {
+        let u = absx * self.exp2_bias;
+        // IEEE754 f64: exponent field gives floor(log2 u) exactly for
+        // normal u (and u is astronomically far from subnormal here).
+        let bits = u.to_bits();
+        ((bits >> 52) & 0x7FF) as i64 - 1023
+    }
+
+    /// Quantization scale for |x| (paper Eq. 2) — LUT fast path.
+    #[inline]
+    pub fn scale(&self, absx: f64) -> f64 {
+        let c = self.code_exponent(absx);
+        if c > 1 {
+            self.scales[(c.min(15)) as usize]
+        } else {
+            self.sub_scale
+        }
+    }
+
+    /// exp2-per-element variant kept for the §Perf before/after bench.
+    #[inline]
+    pub fn scale_exp2(&self, absx: f64) -> f64 {
+        let c = self.code_exponent(absx);
+        if c > 1 {
+            (c as f64 - self.bias - M_BITS as f64).exp2()
+        } else {
+            self.sub_scale
+        }
+    }
+
+    /// Quantize one value to the grid, returning the dequantized f32.
+    /// `u` in [0,1): 0.5 = deterministic round-half-up, random =
+    /// unbiased stochastic rounding.
+    #[inline]
+    pub fn quantize(&self, x: f32, u: f64) -> f32 {
+        if x == 0.0 {
+            return 0.0;
+        }
+        let x64 = x as f64;
+        let s = self.scale(x64.abs());
+        let z = x64 / s;
+        let f = z.floor();
+        let up = if z - f >= u { 1.0 } else { 0.0 };
+        let q = (f + up) * s;
+        let a = self.alpha as f64;
+        (q.clamp(-a, a)) as f32
+    }
+
+    /// Encode one value to its 8-bit code.
+    #[inline]
+    pub fn encode(&self, x: f32, u: f64) -> u8 {
+        if x == 0.0 || !x.is_finite() {
+            return if x.is_finite() {
+                0
+            } else {
+                // saturate infinities/NaN-free inputs defensively
+                ((x < 0.0) as u8) << 7 | 0x7F
+            };
+        }
+        let neg = x < 0.0;
+        let absx = (x as f64).abs();
+        // Rounding happens on the SIGNED z = x/s (matching quantize and
+        // the Python oracle): for negative x, "round toward +inf with
+        // probability frac(z)" is "round DOWN in magnitude when
+        // 1 - frac(|z|) >= u".
+        let round_up_mag = |z_abs: f64, f: f64| -> bool {
+            if neg {
+                1.0 - (z_abs - f) < u
+            } else {
+                z_abs - f >= u
+            }
+        };
+        let mut c = self.code_exponent(absx);
+        let n = if c > 1 {
+            if c > E_MAX {
+                return (neg as u8) << 7 | 0x7F; // clips to +-alpha
+            }
+            let s = self.scales[c as usize];
+            let z = absx / s;
+            let f = z.floor();
+            let mut n = f as i64 + (round_up_mag(z, f) as i64);
+            // mantissa overflow carries into the exponent
+            if n >= (1 << (M_BITS + 1)) {
+                c += 1;
+                n = 1 << M_BITS;
+            }
+            // defensive: boundary jitter from the f64 exponent extract
+            if n < (1 << M_BITS) {
+                c -= 1;
+                n = (1 << (M_BITS + 1)) - 1;
+            }
+            if c > E_MAX {
+                return (neg as u8) << 7 | 0x7F; // clip to +-alpha
+            }
+            return (neg as u8) << 7
+                | ((c as u8) << M_BITS)
+                | (n as u8 & M_MAX as u8);
+        } else {
+            let z = absx / self.sub_scale;
+            let f = z.floor();
+            (f as i64 + (round_up_mag(z, f) as i64))
+                .min((1 << (M_BITS + 1)) as i64)
+        };
+        // subnormal band: n in [0, 16]; n>=8 lands in E=1, n==16 in E=2
+        let (e, m) = (n >> M_BITS, n & M_MAX as i64);
+        (neg as u8) << 7 | ((e as u8) << M_BITS) | m as u8
+    }
+
+    /// Decode one 8-bit code to its f32 value.
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        let neg = code & 0x80 != 0;
+        let e = ((code >> M_BITS) & 0x0F) as i64;
+        let m = (code & M_MAX as u8) as f64;
+        let v = if e == 0 {
+            self.sub_scale * m
+        } else {
+            (e as f64 - self.bias).exp2() * (1.0 + m / (1u64 << M_BITS) as f64)
+        };
+        let v = v as f32;
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// 256-entry decode lookup table (hot-path decode is a byte index).
+    pub fn decode_table(&self) -> [f32; 256] {
+        let mut t = [0.0f32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            *slot = self.decode(i as u8);
+        }
+        t
+    }
+
+    /// Largest grid spacing (the scale bound S of Assumption 3):
+    /// alpha * 2^-m / (2 - 2^-m).
+    pub fn max_scale(&self) -> f64 {
+        self.alpha as f64 * (0.5f64.powi(M_BITS as i32))
+            / (2.0 - 0.5f64.powi(M_BITS as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_code_decodes_to_alpha() {
+        for alpha in [0.01f32, 0.5, 1.0, 3.7, 128.0] {
+            let p = Fp8Params::new(alpha);
+            let v = p.decode(0x7F);
+            assert!(
+                (v - alpha).abs() <= alpha * 1e-6,
+                "alpha={alpha} v={v}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_code_is_zero() {
+        let p = Fp8Params::new(1.0);
+        assert_eq!(p.decode(0x00), 0.0);
+        assert_eq!(p.decode(0x80), -0.0);
+        assert_eq!(p.encode(0.0, 0.5), 0);
+    }
+
+    #[test]
+    fn code_exponent_matches_log2() {
+        let p = Fp8Params::new(2.31);
+        for x in [1e-6f64, 0.013, 0.5, 1.0, 1.99, 2.3] {
+            let direct = (x.log2() + p.bias).floor() as i64;
+            assert_eq!(p.code_exponent(x), direct, "x={x}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_equals_quantize() {
+        let mut rng = crate::fp8::rng::Pcg32::new(11, 0);
+        for alpha in [0.3f32, 1.0, 5.5] {
+            let p = Fp8Params::new(alpha);
+            for _ in 0..5000 {
+                let x = (rng.uniform() - 0.5) * 4.0 * alpha;
+                let u = rng.uniform_f64();
+                let via_code = p.decode(p.encode(x, u));
+                let direct = p.quantize(x, u);
+                assert_eq!(via_code, direct, "x={x} alpha={alpha} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let p = Fp8Params::new(1.7);
+        let mut rng = crate::fp8::rng::Pcg32::new(12, 0);
+        for _ in 0..2000 {
+            let x = (rng.uniform() - 0.5) * 5.0;
+            let q = p.quantize(x, 0.5);
+            assert_eq!(p.quantize(q, 0.5), q, "x={x}");
+        }
+    }
+
+    #[test]
+    fn clips_to_alpha() {
+        let p = Fp8Params::new(1.5);
+        assert_eq!(p.quantize(10.0, 0.5), 1.5);
+        assert_eq!(p.quantize(-1e30, 0.5), -1.5);
+        assert_eq!(p.decode(p.encode(99.0, 0.1)), 1.5);
+    }
+
+    #[test]
+    fn decode_table_matches_decode() {
+        let p = Fp8Params::new(0.77);
+        let t = p.decode_table();
+        for c in 0..=255u8 {
+            assert_eq!(t[c as usize], p.decode(c));
+        }
+    }
+
+    #[test]
+    fn max_scale_is_top_bin() {
+        let p = Fp8Params::new(4.0);
+        // top bin: alpha - second-largest value
+        let second = p.decode(0x7E);
+        // f32 decode rounding allows ~1e-6 absolute slack at alpha=4
+        assert!(((p.alpha - second) as f64 - p.max_scale()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn error_below_one_bin() {
+        let p = Fp8Params::new(1.0);
+        let mut rng = crate::fp8::rng::Pcg32::new(13, 0);
+        for _ in 0..5000 {
+            let x = (rng.uniform() - 0.5) * 1.9;
+            let u = rng.uniform_f64();
+            let q = p.quantize(x, u);
+            let s = p.scale((x as f64).abs());
+            assert!(
+                ((q - x) as f64).abs() <= s * (1.0 + 1e-9),
+                "x={x} q={q} s={s}"
+            );
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! FP8 number format, wire codec and deterministic RNG substrate.
+
+pub mod codec;
+pub mod format;
+pub mod rng;
+
+pub use codec::{Rounding, Segment, WirePayload};
+pub use format::Fp8Params;
+pub use rng::{Pcg32, SplitMix64};

@@ -1,0 +1,234 @@
+//! Deterministic RNG substrate (no external `rand` crate offline).
+//!
+//! `SplitMix64` seeds, `Pcg32` generates. Every stochastic decision in
+//! the coordinator (client sampling, data synthesis, stochastic
+//! rounding draws) flows through these so whole experiments replay
+//! bit-identically from a single seed.
+
+/// SplitMix64 — used for seeding / key derivation.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32) — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.rotate_left(17));
+        let mut rng = Self {
+            state: sm.next_u64(),
+            inc: sm.next_u64() | 1,
+        };
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (for per-client / per-round RNGs).
+    pub fn fork(&mut self, tag: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of entropy.
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of entropy. Used by the FP8
+    /// codec so Rust-side stochastic rounding matches the f64 oracle.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Standard normal via Box-Muller (pairs cached).
+    pub fn normal(&mut self, cache: &mut Option<f32>) -> f32 {
+        if let Some(v) = cache.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            *cache = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// `n` uniform integers in [0, bound) (Lemire-style rejection-free
+    /// modulo is fine here; bias < 2^-32 * bound is irrelevant).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang (shape >= 0); used for
+    /// Dirichlet partitioning.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            let u = self.uniform_f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let mut cache = None;
+            let x = self.normal(&mut cache) as f64;
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform_f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(concentration * ones(k)).
+    pub fn dirichlet(&mut self, concentration: f64, k: usize) -> Vec<f64> {
+        let g: Vec<f64> = (0..k).map(|_| self.gamma(concentration)).collect();
+        let s: f64 = g.iter().sum::<f64>().max(1e-12);
+        g.into_iter().map(|v| v / s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(1, 2);
+        let mut b = Pcg32::new(1, 2);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg32::new(3, 0);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_half() {
+        let mut r = Pcg32::new(4, 0);
+        let m: f64 = (0..100_000).map(|_| r.uniform() as f64).sum::<f64>()
+            / 100_000.0;
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(5, 0);
+        let mut cache = None;
+        let xs: Vec<f64> =
+            (0..100_000).map(|_| r.normal(&mut cache) as f64).collect();
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Pcg32::new(6, 0);
+        let s = r.sample_distinct(100, 10);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 10);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg32::new(7, 0);
+        for conc in [0.1, 0.3, 1.0, 10.0] {
+            let d = r.dirichlet(conc, 10);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_low_concentration_is_skewed() {
+        let mut r = Pcg32::new(8, 0);
+        // With conc=0.1 most mass concentrates on few categories.
+        let mut max_sum = 0.0;
+        for _ in 0..50 {
+            let d = r.dirichlet(0.1, 10);
+            max_sum += d.iter().cloned().fold(0.0, f64::max);
+        }
+        assert!(max_sum / 50.0 > 0.5);
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Pcg32::new(9, 0);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 2);
+    }
+}

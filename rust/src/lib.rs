@@ -1,0 +1,30 @@
+//! # fedfp8 — FP8FedAvg-UQ
+//!
+//! Reproduction of *"Towards Federated Learning with On-device Training
+//! and Communication in 8-bit Floating Point"* (Wang, Berg, Acar, Zhou,
+//! 2024) as a three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the federated coordinator. It owns the
+//! round loop, client sampling, the *physical* 8-bit wire format
+//! ([`fp8`]), the synthetic data substrate ([`data`]), aggregation and
+//! ServerOptimize ([`coordinator`]), and the PJRT runtime that executes
+//! the AOT-compiled JAX/Pallas compute graphs ([`runtime`]). Python
+//! never runs at request time — `make artifacts` lowers the L2/L1
+//! graphs to HLO text once, and this crate loads them.
+//!
+//! ```text
+//! server (FP32 master) ──Q_rand──► 8-bit downlink ──► clients
+//!    ▲                                              local FP8-QAT
+//!    └── FedAvg / ServerOptimize ◄── 8-bit uplink ◄──┘   (U steps)
+//! ```
+
+pub mod bench_tables;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fp8;
+pub mod runtime;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{RoundRecord, RunResult, Server};

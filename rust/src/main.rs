@@ -1,0 +1,149 @@
+//! `fedfp8` — launcher for FP8FedAvg-UQ experiments.
+//!
+//! ```text
+//! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S] ...
+//! fedfp8 table1 [--rounds N] [--seeds 3] [--models lenet_c10,...]
+//! fedfp8 table2 [--rounds N] [--seeds 3]
+//! fedfp8 fig2   [--rounds N] [--model lenet_c10]
+//! fedfp8 info                      # artifact + platform inventory
+//! fedfp8 presets                   # list experiment presets
+//! ```
+//!
+//! Results land in `artifacts/results/*.csv` plus stdout tables.
+
+use anyhow::{bail, Result};
+
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::Server;
+use fedfp8::runtime::{default_dir, Engine, Manifest};
+use fedfp8::util::cli::Args;
+
+use fedfp8::bench_tables;
+
+fn apply_overrides(
+    mut cfg: ExperimentConfig,
+    args: &Args,
+) -> Result<ExperimentConfig> {
+    cfg.rounds = args.parse_or("rounds", cfg.rounds)?;
+    cfg.clients = args.parse_or("clients", cfg.clients)?;
+    cfg.participation =
+        args.parse_or("participation", cfg.participation)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    cfg.lr = args.parse_or("lr", cfg.lr)?;
+    cfg.weight_decay = args.parse_or("wd", cfg.weight_decay)?;
+    cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
+    cfg.n_train = args.parse_or("n-train", cfg.n_train)?;
+    cfg.n_test = args.parse_or("n-test", cfg.n_test)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let preset = args
+        .get("preset")
+        .unwrap_or("lenet_c10:uq:iid")
+        .to_string();
+    let cfg = apply_overrides(ExperimentConfig::preset(&preset)?, args)?;
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "platform={}  preset={preset}  rounds={}  K={}  P={}",
+        engine.platform(),
+        cfg.rounds,
+        cfg.clients,
+        cfg.participation
+    );
+    let mut server = Server::new(&engine, &manifest, cfg)?;
+    server.set_verbose(true);
+    let result = server.run()?;
+    let csv = dir.join("results").join(format!("{}.csv", result.name));
+    result.to_csv(&csv)?;
+    println!(
+        "final accuracy {:.4}  best {:.4}  total comm {:.2} MiB  \
+         wall {:.1}s\ncurve -> {}",
+        result.final_accuracy,
+        result.best_accuracy(),
+        result.total_bytes as f64 / (1 << 20) as f64,
+        result.wall_secs,
+        csv.display()
+    );
+    let st = engine.stats();
+    println!(
+        "engine: {} compilations ({:.1}s), {} executions ({:.1}s exec, \
+         {:.1}s marshal)",
+        st.compilations,
+        st.compile_ns as f64 * 1e-9,
+        st.executions,
+        st.execute_ns as f64 * 1e-9,
+        st.marshal_ns as f64 * 1e-9,
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = default_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::new(&dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", dir.display());
+    println!(
+        "{:<14} {:>8} {:>6} {:>6} {:>8} {:>7} {:>9}",
+        "model", "params", "alphas", "betas", "quant%", "U*B", "artifacts"
+    );
+    for (name, m) in &manifest.models {
+        println!(
+            "{:<14} {:>8} {:>6} {:>6} {:>7.1}% {:>7} {:>9}",
+            name,
+            m.dim,
+            m.alpha_dim,
+            m.n_act,
+            100.0 * m.quant_params() as f64 / m.dim as f64,
+            format!("{}x{}", m.u_steps, m.batch),
+            m.artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_presets() {
+    println!("preset notation: model:method[:split]");
+    println!("models : mlp_c10 lenet_c10 lenet_c100 resnet8_c10 \
+              resnet8_c100 matchbox kwt");
+    println!("methods: fp32 uq uq+ bq randqat nocq_det nocq_rand bq_ef mixed");
+    println!("splits : iid dir03 speaker");
+    println!();
+    println!("paper Table 1 rows, e.g.:");
+    for m in ["lenet_c10", "lenet_c100", "resnet8_c10", "resnet8_c100"] {
+        for s in ["iid", "dir03"] {
+            println!("  {m}:{{fp32|uq|uq+}}:{s}");
+        }
+    }
+    for m in ["matchbox", "kwt"] {
+        for s in ["iid", "speaker"] {
+            println!("  {m}:{{fp32|uq|uq+}}:{s}");
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("table1") => bench_tables::table1::run(&args),
+        Some("table2") => bench_tables::table2::run(&args),
+        Some("fig2") => bench_tables::fig2::run(&args),
+        Some("info") => cmd_info(),
+        Some("presets") => {
+            cmd_presets();
+            Ok(())
+        }
+        Some(other) => bail!(
+            "unknown command '{other}' \
+             (run|table1|table2|fig2|info|presets)"
+        ),
+        None => {
+            cmd_presets();
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT execution engine — loads AOT HLO-text artifacts, compiles each
+//! once per process, and executes them from the round loop.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serializes protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+/// Typed input argument for an artifact execution.
+pub enum In<'a> {
+    F32(&'a [f32], &'a [i64]),
+    I32(&'a [i32], &'a [i64]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> In<'a> {
+    fn literal(&self) -> Result<Literal> {
+        Ok(match self {
+            In::F32(v, dims) => Literal::vec1(v).reshape(dims)?,
+            In::I32(v, dims) => Literal::vec1(v).reshape(dims)?,
+            In::ScalarF32(v) => Literal::scalar(*v),
+            In::ScalarI32(v) => Literal::scalar(*v),
+        })
+    }
+}
+
+/// Cumulative execution statistics (perf accounting, §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compilations: u64,
+    pub executions: u64,
+    pub compile_ns: u64,
+    pub execute_ns: u64,
+    pub marshal_ns: u64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let client =
+            PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile-once artifact loading (keyed by file name).
+    fn ensure_compiled(&self, file: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(file) {
+            return Ok(());
+        }
+        let t = Instant::now();
+        let path = self.dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))?;
+        let mut st = self.stats.borrow_mut();
+        st.compilations += 1;
+        st.compile_ns += t.elapsed().as_nanos() as u64;
+        self.cache.borrow_mut().insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the flattened output tuple.
+    pub fn execute(&self, file: &str, inputs: &[In]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(file)?;
+        let tm = Instant::now();
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|i| i.literal())
+            .collect::<Result<_>>()?;
+        let marshal_ns = tm.elapsed().as_nanos() as u64;
+        let t = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(file).unwrap();
+        let result = exe.execute::<Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = result.to_tuple()?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_ns += t.elapsed().as_nanos() as u64;
+        st.marshal_ns += marshal_ns;
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Extract a f32 vector from an output literal.
+pub fn f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a f32 scalar.
+pub fn f32_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract an i32 scalar.
+pub fn i32_scalar(lit: &Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}

@@ -1,0 +1,207 @@
+//! `manifest.json` loader — the contract between `python/compile/aot.py`
+//! and the Rust coordinator: model dimensions, segment tables,
+//! artifact file names and baked-in batch shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fp8::codec::Segment;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub dim: usize,
+    pub alpha_dim: usize,
+    pub n_act: usize,
+    pub classes: usize,
+    pub kind: String,
+    pub input_shape: Vec<usize>,
+    pub u_steps: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub server_p: usize,
+    pub optimizer: String,
+    pub segments: Vec<Segment>,
+    pub artifacts: BTreeMap<String, String>,
+    pub init: BTreeMap<String, String>,
+}
+
+impl ModelInfo {
+    /// HLO file for a graph ("local_update"/"evaluate"/"server_opt")
+    /// and QAT mode ("det"/"rand"/"none").
+    pub fn artifact(&self, graph: &str, mode: &str) -> Result<&str> {
+        let key = format!("{graph}_{mode}");
+        match self.artifacts.get(&key) {
+            Some(f) => Ok(f),
+            None => bail!(
+                "model '{}' has no artifact '{key}' (exported: {:?})",
+                self.name,
+                self.artifacts.keys().collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Count of unquantized parameters (travel as f32 on the wire).
+    pub fn raw_params(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| !s.quantized)
+            .map(|s| s.size)
+            .sum()
+    }
+
+    /// Count of quantized parameters (travel as 1-byte codes).
+    pub fn quant_params(&self) -> usize {
+        self.dim - self.raw_params()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub quant_demo: Option<(String, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let mut segments = Vec::new();
+            for s in m.get("segments")?.as_arr()? {
+                segments.push(Segment {
+                    name: s.get("name")?.as_str()?.to_string(),
+                    offset: s.get("offset")?.as_usize()?,
+                    size: s.get("size")?.as_usize()?,
+                    quantized: s.get("quantized")?.as_bool()?,
+                    alpha_idx: s
+                        .opt("alpha_idx")
+                        .map(|v| v.as_usize())
+                        .transpose()?,
+                });
+            }
+            let strmap = |key: &str| -> Result<BTreeMap<String, String>> {
+                let mut out = BTreeMap::new();
+                for (k, v) in m.get(key)?.as_obj()? {
+                    out.insert(k.clone(), v.as_str()?.to_string());
+                }
+                Ok(out)
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    dim: m.get("dim")?.as_usize()?,
+                    alpha_dim: m.get("alpha_dim")?.as_usize()?,
+                    n_act: m.get("n_act")?.as_usize()?,
+                    classes: m.get("classes")?.as_usize()?,
+                    kind: m.get("kind")?.as_str()?.to_string(),
+                    input_shape: m
+                        .get("input_shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                    u_steps: m.get("u_steps")?.as_usize()?,
+                    batch: m.get("batch")?.as_usize()?,
+                    eval_batch: m.get("eval_batch")?.as_usize()?,
+                    server_p: m.get("server_p")?.as_usize()?,
+                    optimizer: m.get("optimizer")?.as_str()?.to_string(),
+                    segments,
+                    artifacts: strmap("artifacts")?,
+                    init: strmap("init")?,
+                },
+            );
+        }
+        let quant_demo = root.opt("quant_demo").and_then(|q| {
+            Some((
+                q.get("file").ok()?.as_str().ok()?.to_string(),
+                q.get("n").ok()?.as_usize().ok()?,
+            ))
+        });
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            quant_demo,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "unknown model '{name}' (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Read a little-endian f32 init file declared by the manifest.
+    pub fn load_init(&self, model: &ModelInfo, tag: &str) -> Result<Vec<f32>> {
+        let file = model
+            .init
+            .get(tag)
+            .with_context(|| format!("no init '{tag}'"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("init file {file} not a multiple of 4 bytes");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Default artifacts directory: $FEDFP8_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("FEDFP8_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.models.contains_key("lenet_c10"));
+        let m = man.model("lenet_c10").unwrap();
+        assert_eq!(
+            m.segments.iter().map(|s| s.size).sum::<usize>(),
+            m.dim
+        );
+        let w = man.load_init(m, "w").unwrap();
+        assert_eq!(w.len(), m.dim);
+        let a = man.load_init(m, "alpha").unwrap();
+        assert_eq!(a.len(), m.alpha_dim);
+        // alpha init covers the segment max-abs (paper init rule)
+        for seg in m.segments.iter().filter(|s| s.quantized) {
+            let mx = w[seg.offset..seg.offset + seg.size]
+                .iter()
+                .fold(0f32, |m, v| m.max(v.abs()));
+            assert!(a[seg.alpha_idx.unwrap()] >= mx - 1e-6);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: artifact registry (manifest) + execution engine.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, In};
+pub use manifest::{default_dir, Manifest, ModelInfo};

@@ -1,0 +1,108 @@
+//! Micro-benchmark harness (offline substrate; no criterion).
+//!
+//! Measures wall time with warmup + repeated timed batches, reporting
+//! median / p10 / p90 per-iteration latency and derived throughput.
+//! Used by `rust/benches/*` (registered with `harness = false`).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns)
+        );
+    }
+
+    /// items/second at the median latency.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "median", "p10", "p90"
+    );
+    println!("{}", "-".repeat(84));
+}
+
+/// Run `f` repeatedly for ~`budget_ms` after a short warmup; one sample
+/// per call. Suitable for ops in the microsecond-to-second range.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // warmup
+    let warm_until = Instant::now() + std::time::Duration::from_millis(
+        (budget_ms / 5).max(10),
+    );
+    while Instant::now() < warm_until {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let run_until =
+        Instant::now() + std::time::Duration::from_millis(budget_ms);
+    while Instant::now() < run_until || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let r = bench("noop-spin", 30, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2_500_000.0).contains("ms"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (offline substrate; no clap).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments; every experiment binary and the main launcher build on
+//! this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("invalid value for --{name}: {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NB: a bare `--flag` followed by a non-dashed token binds as
+        // an option (`--flag value`) — put positionals first or use
+        // `--flag=true`, like clap's greedy value binding.
+        let a = args("run pos1 --rounds 30 --model=lenet_c10 --verbose");
+        assert_eq!(a.positional, vec!["run", "pos1"]);
+        assert_eq!(a.get("rounds"), Some("30"));
+        assert_eq!(a.get("model"), Some("lenet_c10"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args("--rounds 25");
+        assert_eq!(a.parse_or("rounds", 10usize).unwrap(), 25);
+        assert_eq!(a.parse_or("seed", 7u64).unwrap(), 7);
+        assert!(args("--rounds x").parse_or("rounds", 1usize).is_err());
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = args("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline substrates: JSON, CLI, bench harness, property testing.
+//!
+//! This environment has no network access to crates.io; everything a
+//! production launcher would normally pull in (serde_json, clap,
+//! criterion, proptest) is implemented here from scratch — see
+//! DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;

@@ -1,0 +1,97 @@
+//! Seeded property-testing helper (offline substrate; no proptest crate).
+//!
+//! `forall` drives a closure over many generated cases from a
+//! deterministic RNG; on failure it reports the failing case index and
+//! seed so the case replays exactly. No shrinking — cases are kept
+//! small instead.
+
+use crate::fp8::rng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    /// Log-uniform positive float (good for alpha / scale parameters).
+    pub fn f32_log(&mut self, lo: f32, hi: f32) -> f32 {
+        (self.f32_in(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        let mut cache = None;
+        (0..n).map(|_| self.rng.normal(&mut cache) * scale).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Run `cases` property checks; the closure returns `Err(msg)` on
+/// violation. Panics with seed + case number for replay.
+pub fn forall<F>(name: &str, seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Pcg32::new(seed, case as u64),
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: seed={seed}, stream={case}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", 1, 50, |g| {
+            let v = g.f32_in(0.0, 1.0);
+            if (0.0..=1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failure() {
+        forall("fails", 1, 10, |g| {
+            let n = g.usize_in(0, 5);
+            if n < 5 {
+                Ok(())
+            } else {
+                Err("hit 5".into())
+            }
+        });
+    }
+
+    #[test]
+    fn log_uniform_in_range() {
+        forall("log-range", 2, 100, |g| {
+            let v = g.f32_log(0.01, 100.0);
+            if (0.0099..=101.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v}"))
+            }
+        });
+    }
+}

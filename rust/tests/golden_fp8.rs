@@ -1,0 +1,125 @@
+//! Cross-layer parity: the Rust wire codec must reproduce the Python
+//! oracle (`ref.quantize_np`, f64 math / f32 result) on the golden
+//! vectors exported by `aot.py`, and the 256-entry decode tables.
+//!
+//! Requires `make artifacts`. Bit-exactness is expected because both
+//! sides run the identical f64 op sequence; a tiny tolerance only
+//! covers libm log2 differences at exact bin boundaries.
+
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::runtime::default_dir;
+use fedfp8::util::json::Json;
+
+fn goldens() -> Option<Json> {
+    let p = default_dir().join("golden_fp8.json");
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+#[test]
+fn format_constants_match() {
+    let Some(g) = goldens() else {
+        eprintln!("skip: artifacts not built");
+        return;
+    };
+    assert_eq!(g.get("m").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(g.get("e").unwrap().as_usize().unwrap(), 4);
+}
+
+#[test]
+fn quantize_matches_python_oracle() {
+    let Some(g) = goldens() else {
+        eprintln!("skip: artifacts not built");
+        return;
+    };
+    let mut total = 0usize;
+    let mut exact = 0usize;
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let x = case.get("x").unwrap().f32_vec().unwrap();
+        let u = case.get("u").unwrap().f64_vec().unwrap();
+        let q_det = case.get("q_det").unwrap().f32_vec().unwrap();
+        let q_rand = case.get("q_rand").unwrap().f32_vec().unwrap();
+        let p = Fp8Params::new(alpha);
+        for i in 0..x.len() {
+            total += 2;
+            let rd = p.quantize(x[i], 0.5);
+            let rr = p.quantize(x[i], u[i]);
+            if rd == q_det[i] {
+                exact += 1;
+            } else {
+                // boundary jitter must stay within one grid bin
+                let bin = p.scale((x[i] as f64).abs()) as f32;
+                assert!(
+                    (rd - q_det[i]).abs() <= bin * 1.0001,
+                    "det mismatch beyond one bin: x={} alpha={alpha} \
+                     rust={rd} py={}",
+                    x[i],
+                    q_det[i]
+                );
+            }
+            if rr == q_rand[i] {
+                exact += 1;
+            } else {
+                let bin = p.scale((x[i] as f64).abs()) as f32;
+                assert!(
+                    (rr - q_rand[i]).abs() <= bin * 1.0001,
+                    "rand mismatch beyond one bin: x={} alpha={alpha}",
+                    x[i]
+                );
+            }
+        }
+    }
+    let frac = exact as f64 / total as f64;
+    assert!(
+        frac > 0.999,
+        "only {frac:.5} of golden cases bit-exact ({exact}/{total})"
+    );
+}
+
+#[test]
+fn encode_matches_python_oracle_via_wire() {
+    let Some(g) = goldens() else {
+        eprintln!("skip: artifacts not built");
+        return;
+    };
+    // decode(encode(x, u)) must equal quantize(x, u) AND the golden
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let x = case.get("x").unwrap().f32_vec().unwrap();
+        let u = case.get("u").unwrap().f64_vec().unwrap();
+        let p = Fp8Params::new(alpha);
+        for i in 0..x.len() {
+            let direct = p.quantize(x[i], u[i]);
+            let wire = p.decode(p.encode(x[i], u[i]));
+            assert_eq!(direct, wire, "x={} alpha={alpha}", x[i]);
+        }
+    }
+}
+
+#[test]
+fn decode_tables_match_python_grids() {
+    let Some(g) = goldens() else {
+        eprintln!("skip: artifacts not built");
+        return;
+    };
+    for (alpha_s, grid) in g.get("grids").unwrap().as_obj().unwrap() {
+        let alpha: f32 = alpha_s.parse().unwrap();
+        let expect = grid.f32_vec().unwrap();
+        let p = Fp8Params::new(alpha);
+        let table = p.decode_table();
+        // collect non-negative codes, sorted
+        let mut mine: Vec<f32> = (0..128u16)
+            .map(|c| table[c as usize])
+            .collect();
+        mine.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mine.dedup();
+        assert_eq!(mine.len(), expect.len(), "alpha={alpha}");
+        for (m, e) in mine.iter().zip(&expect) {
+            assert!(
+                (m - e).abs() <= e.abs() * 2e-7 + f32::MIN_POSITIVE,
+                "alpha={alpha}: {m} vs {e}"
+            );
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration tests over the full stack: PJRT runtime executing AOT
+//! artifacts, driven by the coordinator. All tests no-op gracefully if
+//! `make artifacts` has not been run.
+//!
+//! NOTE: each test builds its own Engine (PJRT CPU client); tests are
+//! threaded, so keep per-test work small.
+
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::Server;
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::runtime::{default_dir, engine, Engine, In, Manifest};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skip: artifacts not built");
+        return None;
+    }
+    Some((Engine::new(&dir).unwrap(), Manifest::load(&dir).unwrap()))
+}
+
+#[test]
+fn quant_demo_artifact_matches_codec() {
+    let Some((eng, man)) = setup() else { return };
+    let (file, n) = man.quant_demo.clone().expect("quant_demo exported");
+    let mut rng = Pcg32::new(3, 0);
+    let x: Vec<f32> =
+        (0..n).map(|_| (rng.uniform() - 0.5) * 3.0).collect();
+    let alpha = vec![0.9f32; n];
+    let u = vec![0.5f32; n];
+    let d = [n as i64];
+    let out = eng
+        .execute(&file, &[In::F32(&x, &d), In::F32(&alpha, &d),
+                          In::F32(&u, &d)])
+        .unwrap();
+    let q = engine::f32_vec(&out[0]).unwrap();
+    let p = Fp8Params::new(0.9);
+    for i in 0..n {
+        let r = p.quantize(x[i], 0.5);
+        assert!(
+            (q[i] - r).abs() <= r.abs() * 3e-6 + 1e-7,
+            "i={i} kernel={} codec={r}",
+            q[i]
+        );
+    }
+}
+
+#[test]
+fn uq_run_learns_and_counts_bytes() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg = ExperimentConfig::preset("mlp_c10:uq:iid").unwrap();
+    cfg.rounds = 8;
+    cfg.clients = 10;
+    cfg.participation = 4;
+    cfg.n_train = 1000;
+    cfg.n_test = 256;
+    cfg.eval_every = 8;
+    let mut server = Server::new(&eng, &man, cfg).unwrap();
+    let r = server.run().unwrap();
+    assert!(
+        r.final_accuracy > 0.3,
+        "uq failed to learn: {}",
+        r.final_accuracy
+    );
+    // byte accounting: 8 rounds x 4 clients x (up+down)
+    let m = man.model("mlp_c10").unwrap();
+    let msg = m.quant_params() as u64
+        + 4 * (m.raw_params() + m.alpha_dim + m.n_act) as u64;
+    assert_eq!(r.total_bytes, 8 * 4 * 2 * msg);
+}
+
+#[test]
+fn fp32_baseline_costs_about_4x() {
+    let Some((eng, man)) = setup() else { return };
+    let mut bytes = Vec::new();
+    for method in ["fp32", "uq"] {
+        let mut cfg = ExperimentConfig::base("mlp_c10")
+            .unwrap()
+            .with_method(method)
+            .unwrap()
+            .with_split("iid")
+            .unwrap();
+        cfg.rounds = 2;
+        cfg.clients = 6;
+        cfg.participation = 3;
+        cfg.n_train = 300;
+        cfg.n_test = 256;
+        cfg.eval_every = 100; // skip eval
+        let mut server = Server::new(&eng, &man, cfg).unwrap();
+        let r = server.run().unwrap();
+        bytes.push(r.total_bytes as f64);
+    }
+    let ratio = bytes[0] / bytes[1];
+    // mlp is 99.4% quantized -> per-message ratio just below 4x
+    assert!(
+        (3.5..4.0).contains(&ratio),
+        "fp32/uq byte ratio {ratio}"
+    );
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let Some((eng, man)) = setup() else { return };
+    let mut finals = Vec::new();
+    for _ in 0..2 {
+        let mut cfg = ExperimentConfig::preset("mlp_c10:uq:iid").unwrap();
+        cfg.rounds = 3;
+        cfg.clients = 6;
+        cfg.participation = 3;
+        cfg.n_train = 300;
+        cfg.n_test = 256;
+        cfg.eval_every = 3;
+        cfg.seed = 99;
+        let mut server = Server::new(&eng, &man, cfg).unwrap();
+        let r = server.run().unwrap();
+        finals.push((r.final_accuracy, r.total_bytes));
+    }
+    assert_eq!(finals[0], finals[1]);
+}
+
+#[test]
+fn server_opt_changes_master_weights() {
+    let Some((eng, man)) = setup() else { return };
+    let mut states = Vec::new();
+    for method in ["uq", "uq+"] {
+        let mut cfg = ExperimentConfig::base("mlp_c10")
+            .unwrap()
+            .with_method(method)
+            .unwrap()
+            .with_split("iid")
+            .unwrap();
+        cfg.rounds = 1;
+        cfg.clients = 6;
+        cfg.participation = 3;
+        cfg.n_train = 300;
+        cfg.n_test = 256;
+        cfg.eval_every = 100;
+        cfg.seed = 5;
+        let mut server = Server::new(&eng, &man, cfg).unwrap();
+        server.round(0).unwrap();
+        let (w, alpha, _) = server.state();
+        states.push((w.to_vec(), alpha.to_vec()));
+    }
+    // identical seeds -> identical client work; only ServerOptimize
+    // differs, and it must actually move the weights
+    assert_ne!(states[0].0, states[1].0, "ServerOptimize was a no-op");
+}
+
+#[test]
+fn speaker_split_runs_speech_model() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg = ExperimentConfig::preset("matchbox:uq:speaker").unwrap();
+    cfg.rounds = 2;
+    cfg.n_train = 640;
+    cfg.n_test = 256;
+    cfg.speakers = 16;
+    cfg.participation = 4;
+    cfg.eval_every = 2;
+    let mut server = Server::new(&eng, &man, cfg).unwrap();
+    assert_eq!(server.n_clients(), 16);
+    let r = server.run().unwrap();
+    assert!(r.final_accuracy.is_finite());
+    assert!(r.total_bytes > 0);
+}
+
+#[test]
+fn biased_comm_arm_runs() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg = ExperimentConfig::preset("mlp_c10:bq:iid").unwrap();
+    cfg.rounds = 2;
+    cfg.clients = 6;
+    cfg.participation = 3;
+    cfg.n_train = 300;
+    cfg.n_test = 256;
+    cfg.eval_every = 2;
+    let mut server = Server::new(&eng, &man, cfg).unwrap();
+    let r = server.run().unwrap();
+    assert!(r.final_accuracy.is_finite());
+}
+
+#[test]
+fn rand_qat_arm_runs_where_exported() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg =
+        ExperimentConfig::preset("lenet_c10:randqat:iid").unwrap();
+    cfg.rounds = 1;
+    cfg.clients = 6;
+    cfg.participation = 3;
+    cfg.n_train = 300;
+    cfg.n_test = 256;
+    cfg.eval_every = 1;
+    let mut server = Server::new(&eng, &man, cfg).unwrap();
+    let r = server.run().unwrap();
+    assert!(r.final_accuracy.is_finite());
+}
+
+#[test]
+fn eval_of_init_model_is_near_chance() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg = ExperimentConfig::preset("lenet_c100:uq:iid").unwrap();
+    cfg.rounds = 1;
+    cfg.n_train = 300;
+    cfg.n_test = 512;
+    cfg.clients = 6;
+    cfg.participation = 3;
+    let server = Server::new(&eng, &man, cfg).unwrap();
+    let (acc, loss) = server.evaluate().unwrap();
+    assert!(acc < 0.1, "init acc {acc} on 100 classes");
+    // CE of uniform prediction over 100 classes is ln(100) ~ 4.6
+    assert!((2.0..8.0).contains(&loss), "init loss {loss}");
+}
+
+#[test]
+fn error_feedback_reduces_biased_comm_drift() {
+    // EF extension: with deterministic (biased) communication, the
+    // accumulated residuals must keep the effective transmitted mean
+    // close to the true weights — measured as final accuracy not
+    // collapsing relative to plain BQ on the same seed/budget.
+    let Some((eng, man)) = setup() else { return };
+    let mut accs = Vec::new();
+    for method in ["bq", "bq_ef"] {
+        let mut cfg = ExperimentConfig::base("mlp_c10")
+            .unwrap()
+            .with_method(method)
+            .unwrap()
+            .with_split("iid")
+            .unwrap();
+        cfg.rounds = 6;
+        cfg.clients = 8;
+        cfg.participation = 4;
+        cfg.n_train = 800;
+        cfg.n_test = 256;
+        cfg.eval_every = 6;
+        cfg.seed = 3;
+        let mut server = Server::new(&eng, &man, cfg).unwrap();
+        let r = server.run().unwrap();
+        accs.push(r.final_accuracy);
+    }
+    assert!(
+        accs[1] >= accs[0] - 0.05,
+        "EF made biased comm worse: bq={} bq_ef={}",
+        accs[0],
+        accs[1]
+    );
+}
+
+#[test]
+fn mixed_precision_fleet_runs() {
+    let Some((eng, man)) = setup() else { return };
+    let mut cfg = ExperimentConfig::preset("mlp_c10:mixed:iid").unwrap();
+    assert!(cfg.fp32_client_frac > 0.0);
+    cfg.rounds = 4;
+    cfg.clients = 8;
+    cfg.participation = 4;
+    cfg.n_train = 800;
+    cfg.n_test = 256;
+    cfg.eval_every = 4;
+    let mut server = Server::new(&eng, &man, cfg).unwrap();
+    let r = server.run().unwrap();
+    assert!(r.final_accuracy > 0.2, "mixed fleet failed to learn");
+}

@@ -1,0 +1,288 @@
+//! Property-based tests (in-tree harness, `util::proptest`) over the
+//! coordinator's core invariants: codec round-trips, grid membership,
+//! aggregation weights, partitioner coverage.
+
+use fedfp8::coordinator::aggregate;
+use fedfp8::coordinator::comm::Uplink;
+use fedfp8::data::partition;
+use fedfp8::data::vision::{generate, VisionCfg};
+use fedfp8::fp8::codec::{self, Rounding, Segment};
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::util::proptest::forall;
+
+fn random_segments(g: &mut fedfp8::util::proptest::Gen) -> (Vec<Segment>, usize, usize) {
+    let n_seg = g.usize_in(1, 6);
+    let mut segs = Vec::new();
+    let mut off = 0usize;
+    let mut aidx = 0usize;
+    for i in 0..n_seg {
+        let size = g.usize_in(1, 200);
+        let quant = g.bool() || i == 0; // at least one quantized
+        segs.push(Segment {
+            name: format!("s{i}"),
+            offset: off,
+            size,
+            quantized: quant,
+            alpha_idx: if quant { Some(aidx) } else { None },
+        });
+        off += size;
+        if quant {
+            aidx += 1;
+        }
+    }
+    (segs, off, aidx)
+}
+
+#[test]
+fn prop_roundtrip_idempotent() {
+    // decode(encode(x)) lies on the grid: re-encoding deterministically
+    // must be lossless for every rounding draw.
+    forall("roundtrip-idempotent", 11, 150, |g| {
+        let alpha = g.f32_log(0.02, 50.0);
+        let p = Fp8Params::new(alpha);
+        let xs = g.vec_f32(64, alpha * 0.8);
+        for x in xs {
+            let u = g.rng.uniform_f64();
+            let q = p.decode(p.encode(x, u));
+            let q2 = p.decode(p.encode(q, 0.5));
+            if q2 != q {
+                return Err(format!(
+                    "not idempotent: x={x} alpha={alpha} q={q} q2={q2}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_bounded_by_alpha() {
+    forall("bounded-by-alpha", 12, 150, |g| {
+        let alpha = g.f32_log(0.02, 50.0);
+        let p = Fp8Params::new(alpha);
+        for _ in 0..128 {
+            let x = (g.rng.uniform() - 0.5) * alpha * 10.0;
+            let u = g.rng.uniform_f64();
+            let q = p.quantize(x, u);
+            if q.abs() > alpha * (1.0 + 1e-6) {
+                return Err(format!("|q|={} > alpha={alpha}", q.abs()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_brackets_value() {
+    // Q_rand(x) is always one of the two neighbouring grid points.
+    forall("rand-brackets", 13, 100, |g| {
+        let alpha = g.f32_log(0.05, 10.0);
+        let p = Fp8Params::new(alpha);
+        for _ in 0..64 {
+            let x = (g.rng.uniform() - 0.5) * 1.8 * alpha;
+            let lo = p.quantize(x, 1.0); // never round up (frac<1 always)
+            let hi = p.quantize(x, f64::MIN_POSITIVE); // ~always up
+            let u = g.rng.uniform_f64();
+            let q = p.quantize(x, u);
+            if q != lo && q != hi {
+                return Err(format!(
+                    "q={q} not in {{{lo},{hi}}} for x={x} alpha={alpha}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_preserves_unquantized_exactly() {
+    forall("codec-raw-exact", 14, 80, |g| {
+        let (segs, dim, adim) = random_segments(g);
+        let w = g.vec_f32(dim, 1.0);
+        let alphas: Vec<f32> =
+            (0..adim).map(|_| g.f32_log(0.1, 4.0)).collect();
+        let mode = if g.bool() {
+            Rounding::Deterministic
+        } else {
+            Rounding::Stochastic
+        };
+        let p = codec::encode(&w, &alphas, &[], &segs, mode, &mut g.rng);
+        let mut out = vec![0.0f32; dim];
+        codec::decode(&p, &segs, &mut out);
+        for seg in segs.iter().filter(|s| !s.quantized) {
+            for i in seg.offset..seg.offset + seg.size {
+                if out[i] != w[i] {
+                    return Err(format!("raw segment changed at {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_error_bounded() {
+    // after the wire, every quantized weight is within one bin of the
+    // original (for unclipped values)
+    forall("codec-error-bounded", 15, 80, |g| {
+        let (segs, dim, adim) = random_segments(g);
+        let alphas: Vec<f32> =
+            (0..adim).map(|_| g.f32_log(0.5, 4.0)).collect();
+        let w: Vec<f32> = (0..dim)
+            .map(|_| (g.rng.uniform() - 0.5) * 0.9)
+            .collect();
+        let p =
+            codec::encode(&w, &alphas, &[], &segs,
+                          Rounding::Stochastic, &mut g.rng);
+        let mut out = vec![0.0f32; dim];
+        codec::decode(&p, &segs, &mut out);
+        for seg in segs.iter().filter(|s| s.quantized) {
+            let fp = Fp8Params::new(alphas[seg.alpha_idx.unwrap()]);
+            for i in seg.offset..seg.offset + seg.size {
+                if w[i].abs() >= fp.alpha {
+                    continue;
+                }
+                let bin = fp.scale((w[i] as f64).abs()) as f32;
+                if (out[i] - w[i]).abs() > bin * 1.001 {
+                    return Err(format!(
+                        "error {} > bin {bin} at {i}",
+                        (out[i] - w[i]).abs()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fedavg_convex_combination() {
+    // aggregated weights stay inside the per-coordinate min/max of the
+    // client vectors (convexity of weighted averaging)
+    forall("fedavg-convex", 16, 60, |g| {
+        let seg = vec![Segment {
+            name: "w".into(),
+            offset: 0,
+            size: 32,
+            quantized: false, // exact passthrough isolates averaging
+            alpha_idx: None,
+        }];
+        let n_cl = g.usize_in(1, 8);
+        let mut ups = Vec::new();
+        for c in 0..n_cl {
+            let w = g.vec_f32(32, 2.0);
+            ups.push(Uplink {
+                payload: codec::encode(&w, &[], &[], &seg,
+                                       Rounding::None, &mut g.rng),
+                client: c,
+                n_k: g.usize_in(1, 100) as u64,
+                mean_loss: 0.0,
+            });
+        }
+        let agg = aggregate::fedavg(&ups, &seg, 32, 0, 0).unwrap();
+        for i in 0..32 {
+            let lo = ups
+                .iter()
+                .map(|u| u.payload.raw[i])
+                .fold(f32::MAX, f32::min);
+            let hi = ups
+                .iter()
+                .map(|u| u.payload.raw[i])
+                .fold(f32::MIN, f32::max);
+            if agg.w[i] < lo - 1e-5 || agg.w[i] > hi + 1e-5 {
+                return Err(format!(
+                    "avg {} outside [{lo},{hi}] at {i}",
+                    agg.w[i]
+                ));
+            }
+        }
+        // kweights sum to 1
+        let s: f32 = agg.kweights.iter().sum();
+        if (s - 1.0).abs() > 1e-5 {
+            return Err(format!("kweights sum {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_cover_exactly_once() {
+    forall("partition-exact-cover", 17, 25, |g| {
+        let classes = g.usize_in(2, 10);
+        let n = g.usize_in(50, 400);
+        let k = g.usize_in(2, 12);
+        let cfg = VisionCfg::new(classes);
+        let (ds, _) = generate(&cfg, n, 4, g.rng.next_u64());
+        let shards = if g.bool() {
+            partition::iid(n, k, &mut g.rng)
+        } else {
+            partition::dirichlet(&ds, k, 0.3, &mut g.rng)
+        };
+        let mut seen = vec![false; n];
+        for s in &shards {
+            for &i in s {
+                if seen[i] {
+                    return Err(format!("duplicate index {i}"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("missing index".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_accounting_matches_payload_sizes() {
+    forall("comm-bytes", 18, 60, |g| {
+        let (segs, dim, adim) = random_segments(g);
+        let w = g.vec_f32(dim, 1.0);
+        let alphas: Vec<f32> = (0..adim).map(|_| 1.0).collect();
+        let betas = vec![1.0f32; g.usize_in(0, 5)];
+        let p = codec::encode(&w, &alphas, &betas, &segs,
+                              Rounding::Stochastic, &mut g.rng);
+        let n_quant: usize = segs
+            .iter()
+            .filter(|s| s.quantized)
+            .map(|s| s.size)
+            .sum();
+        let n_raw = dim - n_quant;
+        let expect = n_quant as u64
+            + 4 * (n_raw + adim + betas.len()) as u64;
+        if p.wire_bytes() != expect {
+            return Err(format!(
+                "bytes {} != expected {expect}",
+                p.wire_bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_unbiased_mean() {
+    // statistical unbiasedness across a range of alphas (Lemma 3)
+    forall("rand-unbiased", 19, 12, |g| {
+        let alpha = g.f32_log(0.2, 8.0);
+        let p = Fp8Params::new(alpha);
+        let x = (g.rng.uniform() - 0.5) * alpha;
+        let n = 6000;
+        let mut acc = 0.0f64;
+        for _ in 0..n {
+            acc += p.quantize(x, g.rng.uniform_f64()) as f64;
+        }
+        let mean = acc / n as f64;
+        let bin = p.scale((x as f64).abs());
+        let tol = 5.0 * bin / (n as f64).sqrt() + 1e-7;
+        if (mean - x as f64).abs() > tol {
+            return Err(format!(
+                "bias {} > tol {tol} (x={x}, alpha={alpha})",
+                (mean - x as f64).abs()
+            ));
+        }
+        Ok(())
+    });
+}
