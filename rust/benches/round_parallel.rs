@@ -1,0 +1,182 @@
+//! Round latency vs. `parallelism` — measures the win of the parallel
+//! client pipeline on a synthetic 8-client cohort.
+//!
+//! Two sections:
+//!  * mock transport (always runs): each "client" burns a fixed chunk
+//!    of real FP8-quantization CPU work, so the scaling reflects
+//!    genuine parallel compute, not sleeps;
+//!  * real engine (artifact-gated): the same sweep through the PJRT
+//!    in-process transport when `make artifacts` has been run.
+//!
+//! Run: `cargo bench --bench round_parallel`
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::client::LocalUpdate;
+use fedfp8::coordinator::transport::{
+    finish_uplink, ClientJob, ClientOutcome, Transport, WorkBuffers,
+};
+use fedfp8::coordinator::Server;
+use fedfp8::fp8::codec::Segment;
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::runtime::{
+    artifacts_available, default_dir, Engine, Manifest, ModelInfo,
+};
+use fedfp8::util::bench::{bench, header};
+
+const DIM: usize = 4096;
+
+fn write_f32(path: &Path, vals: &[f32]) {
+    let bytes: Vec<u8> =
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes).unwrap();
+}
+
+fn mock_manifest() -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir()
+        .join(format!("fedfp8_bench_par_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let w: Vec<f32> =
+        (0..DIM).map(|i| (i as f32 * 0.37).sin() * 0.5).collect();
+    write_f32(&dir.join("w.bin"), &w);
+    write_f32(&dir.join("alpha.bin"), &[1.0]);
+    write_f32(&dir.join("beta.bin"), &[2.0]);
+    let segments = vec![
+        Segment {
+            name: "w".into(),
+            offset: 0,
+            size: DIM - 32,
+            quantized: true,
+            alpha_idx: Some(0),
+        },
+        Segment {
+            name: "bias".into(),
+            offset: DIM - 32,
+            size: 32,
+            quantized: false,
+            alpha_idx: None,
+        },
+    ];
+    let mut init = BTreeMap::new();
+    init.insert("w".to_string(), "w.bin".to_string());
+    init.insert("alpha".to_string(), "alpha.bin".to_string());
+    init.insert("beta".to_string(), "beta.bin".to_string());
+    let info = ModelInfo {
+        name: "mock".into(),
+        dim: DIM,
+        alpha_dim: 1,
+        n_act: 1,
+        classes: 4,
+        kind: "vision".into(),
+        input_shape: vec![8, 8, 3],
+        u_steps: 2,
+        batch: 4,
+        eval_batch: 8,
+        server_p: 0,
+        optimizer: "sgd".into(),
+        segments,
+        artifacts: BTreeMap::new(),
+        init,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("mock".to_string(), info);
+    (dir.clone(), Manifest { dir, models, quant_demo: None })
+}
+
+/// Burns ~`STEPS` passes of scalar FP8 quantization over the model —
+/// a deterministic stand-in for U local QAT steps.
+struct ComputeTransport;
+
+const STEPS: usize = 20;
+
+impl Transport for ComputeTransport {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome> {
+        let p = Fp8Params::new(job.alpha_start[0]);
+        let mut w: Vec<f32> = job.w_start.to_vec();
+        for s in 0..STEPS {
+            let u = 0.5 + (s as f64) * 1e-3;
+            for v in w.iter_mut() {
+                *v = 0.999 * p.quantize(*v, u);
+            }
+        }
+        let upd = LocalUpdate {
+            w,
+            alpha: job.alpha_start.to_vec(),
+            beta: job.beta_start.to_vec(),
+            mean_loss: 1.0,
+        };
+        Ok(finish_uplink(job, upd, buffers))
+    }
+}
+
+fn mock_sweep() -> Result<()> {
+    println!("mock transport, 8-client cohort, {DIM}-dim model:");
+    for par in [1usize, 2, 4, 8] {
+        let (dir, manifest) = mock_manifest();
+        let engine = Engine::new(&dir)?;
+        let mut cfg = ExperimentConfig::base("mlp_c10")?
+            .with_method("uq")?;
+        cfg.model = "mock".into();
+        cfg.name = format!("bench_par{par}");
+        cfg.clients = 8;
+        cfg.participation = 8;
+        cfg.n_train = 256;
+        cfg.n_test = 32;
+        cfg.parallelism = par;
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(ComputeTransport),
+        )?;
+        let mut t = 0usize;
+        bench(&format!("round/mock cohort=8 par={par}"), 1200, || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+    Ok(())
+}
+
+fn engine_sweep() -> Result<()> {
+    if !artifacts_available() {
+        println!(
+            "(real-engine sweep skipped: artifacts not built — run \
+             `make artifacts`)"
+        );
+        return Ok(());
+    }
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    println!("\nreal engine (PJRT), mlp_c10 K=16 P=8:");
+    for par in [1usize, 2, 4, 8] {
+        let mut cfg = ExperimentConfig::preset("mlp_c10:uq:iid")?;
+        cfg.clients = 16;
+        cfg.participation = 8;
+        cfg.n_train = 1000;
+        cfg.n_test = 256;
+        cfg.parallelism = par;
+        let mut server = Server::new(&engine, &manifest, cfg)?;
+        server.round(0)?; // warm the executable cache before timing
+        let mut t = 1usize;
+        bench(&format!("round/pjrt cohort=8 par={par}"), 3000, || {
+            server.round(t).unwrap();
+            t += 1;
+        });
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    header();
+    mock_sweep()?;
+    engine_sweep()
+}

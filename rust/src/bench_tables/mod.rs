@@ -49,6 +49,7 @@ pub fn scaled(
     cfg.n_train = args.parse_or("n-train", cfg.n_train)?;
     cfg.n_test = args.parse_or("n-test", cfg.n_test)?;
     cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
+    cfg.parallelism = args.parse_or("parallelism", cfg.parallelism)?;
     Ok(cfg)
 }
 

@@ -114,6 +114,12 @@ pub struct ExperimentConfig {
     /// in full FP32 (heterogeneous hardware fleets); all clients still
     /// communicate through the configured wire quantizer.
     pub fp32_client_frac: f32,
+    /// Worker threads for the per-round client fan-out (the cohort is
+    /// embarrassingly parallel). Results are bit-identical for every
+    /// value — per-client RNG streams are counter-derived and
+    /// aggregation applies uplinks in cohort order — so this is purely
+    /// a wall-clock knob. 1 = sequential (no threads spawned).
+    pub parallelism: usize,
 }
 
 impl ExperimentConfig {
@@ -141,6 +147,7 @@ impl ExperimentConfig {
             flip_aug: true,
             error_feedback: false,
             fp32_client_frac: 0.0,
+            parallelism: 1,
         };
         Ok(match model {
             "mlp_c10" | "lenet_c10" | "lenet_c100" | "resnet8_c10"
@@ -291,6 +298,12 @@ mod tests {
         assert_eq!(c.split, SplitCfg::Speaker);
         assert!(matches!(c.schedule, LrSchedule::Cosine { .. }));
         assert_eq!(c.participation, 8);
+    }
+
+    #[test]
+    fn parallelism_defaults_to_sequential() {
+        let c = ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
+        assert_eq!(c.parallelism, 1);
     }
 
     #[test]

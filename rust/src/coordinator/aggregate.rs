@@ -5,6 +5,15 @@
 //! client codec), so averaging the dequantized values in FP32 is
 //! exactly Algorithm 1's aggregation step. Alphas and betas are
 //! averaged unquantized (they travel as f32 side channels).
+//!
+//! [`FedAvgStream`] is the streaming form used by the parallel round
+//! loop: uplinks are folded into the weighted sums one at a time as
+//! the cohort delivers them (decode + accumulate + drop), so the
+//! server never buffers the whole cohort's decoded tensors. Per-client
+//! vectors are retained only when ServerOptimize needs them.
+//! Determinism note: FP32 accumulation is order-sensitive, so callers
+//! must push uplinks in cohort order — `transport::run_cohort`
+//! guarantees that ordering regardless of thread count.
 
 use anyhow::{ensure, Result};
 
@@ -17,7 +26,8 @@ pub struct Aggregate {
     pub w: Vec<f32>,
     pub alpha: Vec<f32>,
     pub beta: Vec<f32>,
-    /// Per-client dequantized weight vectors (kept for ServerOptimize).
+    /// Per-client dequantized weight vectors (kept for ServerOptimize;
+    /// empty when the stream was built with `keep_clients = false`).
     pub client_ws: Vec<Vec<f32>>,
     /// Per-client alpha side channels (Eq. (5) search range).
     pub client_alphas: Vec<Vec<f32>>,
@@ -26,6 +36,92 @@ pub struct Aggregate {
     pub mean_loss: f32,
 }
 
+/// Streaming weighted accumulator for one round's uplinks.
+///
+/// `m_t` (the cohort's total sample count) is known before any client
+/// finishes — the server samples the cohort and knows every `n_k` — so
+/// each uplink can be folded in with its final weight `n_k / m_t` the
+/// moment it arrives.
+pub struct FedAvgStream<'s> {
+    segments: &'s [Segment],
+    m_t: u64,
+    w: Vec<f32>,
+    alpha: Vec<f32>,
+    beta: Vec<f32>,
+    mean_loss: f32,
+    n_seen: usize,
+    keep_clients: bool,
+    client_ws: Vec<Vec<f32>>,
+    client_alphas: Vec<Vec<f32>>,
+    kweights: Vec<f32>,
+    /// Reused decode buffer — one allocation per round, not per uplink.
+    buf: Vec<f32>,
+}
+
+impl<'s> FedAvgStream<'s> {
+    pub fn new(
+        segments: &'s [Segment],
+        dim: usize,
+        alpha_dim: usize,
+        beta_dim: usize,
+        m_t: u64,
+        keep_clients: bool,
+    ) -> Result<FedAvgStream<'s>> {
+        ensure!(m_t > 0, "zero total samples");
+        Ok(FedAvgStream {
+            segments,
+            m_t,
+            w: vec![0.0f32; dim],
+            alpha: vec![0.0f32; alpha_dim],
+            beta: vec![0.0f32; beta_dim],
+            mean_loss: 0.0,
+            n_seen: 0,
+            keep_clients,
+            client_ws: Vec::new(),
+            client_alphas: Vec::new(),
+            kweights: Vec::new(),
+            buf: vec![0.0f32; dim],
+        })
+    }
+
+    /// Fold one uplink into the running weighted sums.
+    pub fn push(&mut self, up: &Uplink) {
+        let kw = up.n_k as f32 / self.m_t as f32;
+        codec::decode(&up.payload, self.segments, &mut self.buf);
+        for (acc, &v) in self.w.iter_mut().zip(&self.buf) {
+            *acc += kw * v;
+        }
+        for (acc, &v) in self.alpha.iter_mut().zip(&up.payload.alphas) {
+            *acc += kw * v;
+        }
+        for (acc, &v) in self.beta.iter_mut().zip(&up.payload.betas) {
+            *acc += kw * v;
+        }
+        self.mean_loss += kw * up.mean_loss;
+        self.n_seen += 1;
+        if self.keep_clients {
+            self.client_ws.push(self.buf.clone());
+            self.client_alphas.push(up.payload.alphas.clone());
+        }
+        self.kweights.push(kw);
+    }
+
+    pub fn finish(self) -> Result<Aggregate> {
+        ensure!(self.n_seen > 0, "no uplinks to aggregate");
+        Ok(Aggregate {
+            w: self.w,
+            alpha: self.alpha,
+            beta: self.beta,
+            client_ws: self.client_ws,
+            client_alphas: self.client_alphas,
+            kweights: self.kweights,
+            mean_loss: self.mean_loss,
+        })
+    }
+}
+
+/// Batch federated averaging over a buffered cohort — a thin wrapper
+/// around [`FedAvgStream`] (always retains per-client vectors).
 pub fn fedavg(
     uplinks: &[Uplink],
     segments: &[Segment],
@@ -35,41 +131,12 @@ pub fn fedavg(
 ) -> Result<Aggregate> {
     ensure!(!uplinks.is_empty(), "no uplinks to aggregate");
     let m_t: u64 = uplinks.iter().map(|u| u.n_k).sum();
-    ensure!(m_t > 0, "zero total samples");
-    let mut w = vec![0.0f32; dim];
-    let mut alpha = vec![0.0f32; alpha_dim];
-    let mut beta = vec![0.0f32; beta_dim];
-    let mut client_ws = Vec::with_capacity(uplinks.len());
-    let mut client_alphas = Vec::with_capacity(uplinks.len());
-    let mut kweights = Vec::with_capacity(uplinks.len());
-    let mut mean_loss = 0.0f32;
-    let mut buf = vec![0.0f32; dim];
+    let mut stream =
+        FedAvgStream::new(segments, dim, alpha_dim, beta_dim, m_t, true)?;
     for up in uplinks {
-        let kw = up.n_k as f32 / m_t as f32;
-        codec::decode(&up.payload, segments, &mut buf);
-        for (acc, &v) in w.iter_mut().zip(&buf) {
-            *acc += kw * v;
-        }
-        for (acc, &v) in alpha.iter_mut().zip(&up.payload.alphas) {
-            *acc += kw * v;
-        }
-        for (acc, &v) in beta.iter_mut().zip(&up.payload.betas) {
-            *acc += kw * v;
-        }
-        mean_loss += kw * up.mean_loss;
-        client_ws.push(buf.clone());
-        client_alphas.push(up.payload.alphas.clone());
-        kweights.push(kw);
+        stream.push(up);
     }
-    Ok(Aggregate {
-        w,
-        alpha,
-        beta,
-        client_ws,
-        client_alphas,
-        kweights,
-        mean_loss,
-    })
+    stream.finish()
 }
 
 #[cfg(test)]
@@ -123,6 +190,40 @@ mod tests {
     #[test]
     fn rejects_empty() {
         assert!(fedavg(&[], &segs(), 8, 1, 1).is_err());
+    }
+
+    #[test]
+    fn stream_matches_batch_bitwise() {
+        let ups = [
+            uplink(&[0.5; 8], 1.0, 30),
+            uplink(&[1.0; 8], 0.7, 10),
+            uplink(&[0.25; 8], 1.3, 5),
+        ];
+        let m_t = ups.iter().map(|u| u.n_k).sum();
+        let segs = segs();
+        let batch = fedavg(&ups, &segs, 8, 1, 1).unwrap();
+        let mut s =
+            FedAvgStream::new(&segs, 8, 1, 1, m_t, false).unwrap();
+        for up in &ups {
+            s.push(up);
+        }
+        let streamed = s.finish().unwrap();
+        assert_eq!(streamed.w, batch.w);
+        assert_eq!(streamed.alpha, batch.alpha);
+        assert_eq!(streamed.beta, batch.beta);
+        assert_eq!(streamed.kweights, batch.kweights);
+        assert_eq!(streamed.mean_loss, batch.mean_loss);
+        // memory contract: nothing retained unless asked
+        assert!(streamed.client_ws.is_empty());
+        assert!(!batch.client_ws.is_empty());
+    }
+
+    #[test]
+    fn stream_rejects_empty_cohort() {
+        let segs = segs();
+        assert!(FedAvgStream::new(&segs, 8, 1, 1, 0, false).is_err());
+        let s = FedAvgStream::new(&segs, 8, 1, 1, 10, false).unwrap();
+        assert!(s.finish().is_err());
     }
 
     #[test]

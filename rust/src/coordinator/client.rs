@@ -1,12 +1,14 @@
 //! Client-side executor: runs one client's full local round (`U` QAT
 //! steps) by dispatching the AOT `local_update_*` artifact.
 //!
-//! A real deployment would run this on-device; here the coordinator
-//! simulates every client on the shared PJRT CPU engine. The *state
-//! contract* matches the paper exactly: the client hard-resets its
-//! master weights to the dequantized downlink (already on the FP8
-//! grid), trains `U` steps of quantization-aware training, and ships
-//! its new master weights through the stochastic wire codec.
+//! A real deployment would run this on-device; here the in-process
+//! [`super::transport::Transport`] simulates every client on the
+//! shared thread-safe PJRT engine, potentially many at once (the
+//! runner holds only shared references, so one instance per worker is
+//! free). The *state contract* matches the paper exactly: the client
+//! hard-resets its master weights to the dequantized downlink (already
+//! on the FP8 grid), trains `U` steps of quantization-aware training,
+//! and ships its new master weights through the stochastic wire codec.
 
 use anyhow::{ensure, Context, Result};
 

@@ -6,6 +6,16 @@
 
 use crate::fp8::codec::WirePayload;
 
+/// Per-message framing charged on the downlink in addition to the
+/// packed payload: round id (u32) + destination client id (u32).
+/// Without framing the Table-1 communication gains are optimistic —
+/// every real transport sends *some* envelope around the tensor bytes.
+pub const DOWNLINK_HEADER_BYTES: u64 = 4 + 4;
+
+/// Per-message framing charged on the uplink: round id (u32) +
+/// client id (u32) + n_k (u64, FedAvg weighting) + mean_loss (f32).
+pub const UPLINK_HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
+
 /// Downlink: server -> client (global model + clip side channels).
 #[derive(Clone, Debug)]
 pub struct Downlink {
@@ -24,7 +34,7 @@ pub struct Uplink {
 }
 
 /// Running totals of bytes that crossed each link.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub up_bytes: u64,
     pub down_bytes: u64,
@@ -34,12 +44,12 @@ pub struct CommStats {
 
 impl CommStats {
     pub fn record_up(&mut self, p: &WirePayload) {
-        self.up_bytes += p.wire_bytes();
+        self.up_bytes += p.wire_bytes() + UPLINK_HEADER_BYTES;
         self.up_msgs += 1;
     }
 
     pub fn record_down(&mut self, p: &WirePayload) {
-        self.down_bytes += p.wire_bytes();
+        self.down_bytes += p.wire_bytes() + DOWNLINK_HEADER_BYTES;
         self.down_msgs += 1;
     }
 
@@ -64,9 +74,22 @@ mod tests {
         s.record_up(&p);
         s.record_down(&p);
         s.record_down(&p);
-        assert_eq!(s.up_bytes, 100 + 4 * 15);
-        assert_eq!(s.down_bytes, 2 * (100 + 4 * 15));
-        assert_eq!(s.total_bytes(), 3 * (100 + 4 * 15));
+        // payload = 100 codes + 4 B * (10 raw + 2 alphas + 3 betas)
+        let payload = 100 + 4 * 15;
+        assert_eq!(s.up_bytes, payload + UPLINK_HEADER_BYTES);
+        assert_eq!(s.down_bytes, 2 * (payload + DOWNLINK_HEADER_BYTES));
+        // independently computed: 1 up (20 B hdr) + 2 down (8 B hdr)
+        assert_eq!(s.total_bytes(), 3 * payload + 20 + 2 * 8);
         assert_eq!((s.up_msgs, s.down_msgs), (1, 2));
+    }
+
+    #[test]
+    fn framing_charges_fixed_header_per_message() {
+        let empty = WirePayload::default();
+        let mut s = CommStats::default();
+        s.record_up(&empty);
+        s.record_down(&empty);
+        assert_eq!(s.up_bytes, UPLINK_HEADER_BYTES);
+        assert_eq!(s.down_bytes, DOWNLINK_HEADER_BYTES);
     }
 }

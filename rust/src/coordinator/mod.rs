@@ -6,6 +6,10 @@ pub mod comm;
 pub mod metrics;
 pub mod server;
 pub mod server_opt;
+pub mod transport;
 
 pub use metrics::{comm_gain, mean_std, RoundRecord, RunResult};
 pub use server::Server;
+pub use transport::{
+    ClientJob, ClientOutcome, InProcessTransport, Transport, WorkBuffers,
+};

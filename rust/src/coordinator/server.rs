@@ -5,35 +5,53 @@
 //!   2. downlink: Q_rand(w_t) packed by the wire codec, broadcast
 //!      (every client hard-resets its master weights to the decoded
 //!      grid values — the "hard reset" of §2)
-//!   3. each client: U local steps of FP8-QAT via the AOT artifact
+//!   3. each client: U local steps of FP8-QAT via the AOT artifact —
+//!      dispatched through the [`Transport`] seam and executed by up
+//!      to `cfg.parallelism` workers concurrently (the cohort is
+//!      embarrassingly parallel)
 //!   4. uplink: Q_rand(w_{t+1}^k) + alpha/beta side channels
-//!   5. FedAvg aggregation in FP32 (unbiased: Lemma 3/6)
+//!   5. FedAvg aggregation in FP32 (unbiased: Lemma 3/6), streamed —
+//!      each uplink is decoded and folded into the weighted sums as it
+//!      is delivered, in cohort order so results are bit-identical for
+//!      every thread count
 //!   6. optional ServerOptimize (Eq. 4 + Eq. 5)
 //!   7. periodic centralized evaluation of the quantized server model
 //!
 //! The server master model stays FP32 throughout; FP8 exists only on
 //! the wire and inside the QAT graphs — exactly the paper's split.
+//!
+//! Determinism contract: every stochastic decision inside a round is
+//! drawn from a counter-derived stream `Pcg32::derive(seed, round,
+//! client, domain)` — never from shared mutable generator state — so
+//! the trajectory is a pure function of the config, independent of
+//! `parallelism` and of worker completion order.
 
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::config::{ExperimentConfig, SplitCfg};
-use crate::data::{self, partition, speech, vision, Dataset};
-use crate::fp8::codec;
+use crate::config::{ExperimentConfig, QatMode, SplitCfg};
+use crate::data::{partition, speech, vision, Dataset};
+use crate::fp8::codec::{self, WirePayload};
 use crate::fp8::rng::Pcg32;
 use crate::runtime::{Engine, Manifest, ModelInfo};
 
 use super::aggregate;
 use super::client::ClientRunner;
-use super::comm::{CommStats, Uplink};
+use super::comm::CommStats;
 use super::metrics::{RoundRecord, RunResult};
 use super::server_opt;
+use super::transport::{
+    self, streams, ClientJob, InProcessTransport, Transport,
+};
 
 pub struct Server<'a> {
     pub cfg: ExperimentConfig,
     engine: &'a Engine,
     model: &'a ModelInfo,
+    /// Where clients execute: in-process PJRT by default; injectable
+    /// for tests and future networked backends.
+    transport: Box<dyn Transport + 'a>,
     train: Dataset,
     test: Dataset,
     shards: Vec<Vec<usize>>,
@@ -43,8 +61,9 @@ pub struct Server<'a> {
     beta: Vec<f32>,
     comm: CommStats,
     rng_sample: Pcg32,
-    rng_quant: Pcg32,
-    rng_data: Pcg32,
+    /// Reused downlink payload buffer (`encode_into` target): one
+    /// allocation for the life of the run, not one per round.
+    down_buf: WirePayload,
     verbose: bool,
     /// Error-feedback memories (extension, cfg.error_feedback):
     /// server-side downlink residual + lazily allocated per-client
@@ -63,6 +82,20 @@ impl<'a> Server<'a> {
         cfg: ExperimentConfig,
     ) -> Result<Server<'a>> {
         let model = manifest.model(&cfg.model)?;
+        let transport = Box::new(InProcessTransport { engine, model });
+        Self::with_transport(engine, manifest, cfg, transport)
+    }
+
+    /// Build a server with an explicit client-execution transport —
+    /// the injection point for mock transports (engine-free tests) and
+    /// future networked backends.
+    pub fn with_transport(
+        engine: &'a Engine,
+        manifest: &'a Manifest,
+        cfg: ExperimentConfig,
+        transport: Box<dyn Transport + 'a>,
+    ) -> Result<Server<'a>> {
+        let model = manifest.model(&cfg.model)?;
         ensure!(
             cfg.participation <= cfg.clients,
             "participation {} > clients {}",
@@ -78,7 +111,10 @@ impl<'a> Server<'a> {
             );
         }
         // ---- data ---------------------------------------------------
-        let mut rng_data = Pcg32::new(cfg.seed, 0xDA7A);
+        // experiment-setup stream (partitioning); deliberately NOT
+        // 0xDA7A, which is transport::streams::DATA — distinct
+        // randomness domains must never share a tag
+        let mut rng_data = Pcg32::new(cfg.seed, 0x9A27_1710);
         let (train, test) = match model.kind.as_str() {
             "vision" => {
                 let vcfg = vision::VisionCfg::new(model.classes);
@@ -126,6 +162,7 @@ impl<'a> Server<'a> {
         Ok(Server {
             engine,
             model,
+            transport,
             train,
             test,
             shards,
@@ -134,8 +171,7 @@ impl<'a> Server<'a> {
             beta,
             comm: CommStats::default(),
             rng_sample: Pcg32::new(cfg.seed, 0x5A3F),
-            rng_quant: Pcg32::new(cfg.seed, 0x9B1C),
-            rng_data,
+            down_buf: WirePayload::default(),
             cfg,
             verbose: false,
             ef_server,
@@ -210,16 +246,15 @@ impl<'a> Server<'a> {
     pub fn round(&mut self, t: usize) -> Result<f32> {
         let m = self.model;
         let cfg = &self.cfg;
-        let runner = ClientRunner {
-            engine: self.engine,
-            model: m,
-        };
-        // 1. sample participants
+        // 1. sample participants (server-owned sequential stream:
+        // advances once per round, before any parallel work)
         let participants = self
             .rng_sample
             .sample_distinct(self.shards.len(), cfg.participation);
         // 2. downlink: quantize once, broadcast to P clients (with the
         // optional error-feedback residual folded in pre-compression)
+        let mut rng_down =
+            Pcg32::derive(cfg.seed, t as u64, 0, streams::DOWNLINK);
         let down_src: Vec<f32> = if cfg.error_feedback {
             self.w
                 .iter()
@@ -229,20 +264,21 @@ impl<'a> Server<'a> {
         } else {
             self.w.clone()
         };
-        let down = codec::encode(
+        codec::encode_into(
             &down_src,
             &self.alpha,
             &self.beta,
             &m.segments,
             cfg.comm,
-            &mut self.rng_quant,
+            &mut rng_down,
+            &mut self.down_buf,
         );
         for _ in &participants {
-            self.comm.record_down(&down);
+            self.comm.record_down(&self.down_buf);
         }
         // hard reset: every participant starts from the decoded grid
         let mut w_start = vec![0.0f32; m.dim];
-        codec::decode(&down, &m.segments, &mut w_start);
+        codec::decode(&self.down_buf, &m.segments, &mut w_start);
         if cfg.error_feedback {
             for ((e, src), dec) in self
                 .ef_server
@@ -253,96 +289,102 @@ impl<'a> Server<'a> {
                 *e = src - dec;
             }
         }
-        let alpha_start = down.alphas.clone();
-        let beta_start = down.betas.clone();
+        let alpha_start = self.down_buf.alphas.clone();
+        let beta_start = self.down_buf.betas.clone();
 
-        // 3-4. local updates + uplinks
+        // 3-4. local updates + uplinks, fanned out over the transport.
+        // m_t is known before dispatch (the server knows every n_k),
+        // so aggregation can stream with final weights.
         let lr = cfg.schedule.lr_at(cfg.lr, t, cfg.rounds);
-        let mut uplinks = Vec::with_capacity(participants.len());
+        let m_t: u64 = participants
+            .iter()
+            .map(|&k| self.shards[k].len() as u64)
+            .sum();
+        let n_clients = self.shards.len();
+        let mut jobs = Vec::with_capacity(participants.len());
         for &k in &participants {
-            let mut crng = self.rng_data.fork((t * 131071 + k) as u64);
-            let (xs, ys) = data::make_batches(
-                &self.train,
-                &self.shards[k],
-                m.u_steps,
-                m.batch,
-                &mut crng,
-                cfg.flip_aug,
-            );
             // heterogeneous fleets: a fixed prefix of the client id
             // space trains in FP32 (no on-device FP8 support)
             let qat = if (k as f32)
-                < cfg.fp32_client_frac * self.shards.len() as f32
+                < cfg.fp32_client_frac * n_clients as f32
             {
-                crate::config::QatMode::None
+                QatMode::None
             } else {
                 cfg.qat
             };
-            let upd = runner
-                .local_update(
-                    qat,
-                    &w_start,
-                    &alpha_start,
-                    &beta_start,
-                    &xs,
-                    &ys,
-                    lr,
-                    cfg.weight_decay,
-                    (t as i32) << 12 | k as i32 & 0xFFF,
-                )
-                .with_context(|| format!("client {k} round {t}"))?;
-            // uplink (with optional per-client error feedback)
-            let up_src: Vec<f32> = if cfg.error_feedback {
-                let e = self.ef_clients[k]
-                    .get_or_insert_with(|| vec![0.0f32; m.dim]);
-                upd.w.iter().zip(e.iter()).map(|(w, e)| w + e).collect()
+            // clone (not take) the residual: if the round fails
+            // mid-cohort, every undelivered client keeps its prior
+            // residual (under parallelism that can include cohort
+            // positions before the failing one — only the delivered
+            // in-order prefix is recorded, so callers should abandon
+            // a failed round rather than continue)
+            let ef = if cfg.error_feedback {
+                Some(self.ef_clients[k]
+                    .clone()
+                    .unwrap_or_else(|| vec![0.0f32; m.dim]))
             } else {
-                upd.w.clone()
+                None
             };
-            let payload = codec::encode(
-                &up_src,
-                &upd.alpha,
-                &upd.beta,
-                &m.segments,
-                cfg.comm,
-                &mut self.rng_quant,
-            );
-            if cfg.error_feedback {
-                let mut dec = vec![0.0f32; m.dim];
-                codec::decode(&payload, &m.segments, &mut dec);
-                let e = self.ef_clients[k].as_mut().unwrap();
-                for ((e, src), d) in
-                    e.iter_mut().zip(&up_src).zip(&dec)
-                {
-                    *e = src - d;
-                }
-            }
-            self.comm.record_up(&payload);
-            uplinks.push(Uplink {
-                payload,
+            jobs.push(ClientJob {
+                round: t,
                 client: k,
+                seed: cfg.seed,
+                qat,
+                lr,
+                weight_decay: cfg.weight_decay,
+                flip_aug: cfg.flip_aug,
+                comm: cfg.comm,
+                w_start: &w_start,
+                alpha_start: &alpha_start,
+                beta_start: &beta_start,
+                train: &self.train,
+                shard: &self.shards[k],
+                segments: &m.segments,
                 n_k: self.shards[k].len() as u64,
-                mean_loss: upd.mean_loss,
+                ef,
             });
         }
 
-        // 5. aggregate
-        let mut agg = aggregate::fedavg(
-            &uplinks,
+        // 5. streaming aggregation — uplinks are folded in as the
+        // cohort delivers them (cohort order, so FP32 sums are
+        // independent of thread count); per-client tensors are kept
+        // only when ServerOptimize will need them.
+        let mut stream = aggregate::FedAvgStream::new(
             &m.segments,
             m.dim,
             m.alpha_dim,
             m.n_act,
+            m_t,
+            cfg.server_opt.is_some(),
         )?;
+        let comm = &mut self.comm;
+        let ef_clients = &mut self.ef_clients;
+        transport::run_cohort(
+            self.transport.as_ref(),
+            jobs,
+            cfg.parallelism,
+            |pos, out| {
+                let k = participants[pos];
+                comm.record_up(&out.uplink.payload);
+                if let Some(e) = out.ef {
+                    ef_clients[k] = Some(e);
+                }
+                stream.push(&out.uplink);
+                Ok(())
+            },
+        )?;
+        let mut agg = stream.finish()?;
 
         // 6. ServerOptimize (UQ+)
         if let Some(so) = &cfg.server_opt {
+            let mut rng_so =
+                Pcg32::derive(cfg.seed, t as u64, 0, streams::SERVER_OPT);
             server_opt::optimize(
                 self.engine,
                 m,
                 so,
                 &mut agg,
-                &mut self.rng_quant,
+                &mut rng_so,
             )?;
         }
         self.w = agg.w;

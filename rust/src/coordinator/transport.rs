@@ -1,0 +1,326 @@
+//! Client-execution transport: the seam between the round loop and
+//! *where clients actually run*.
+//!
+//! The server describes one client's work order as a [`ClientJob`]
+//! (downlink state + shard + hyperparameters + an owned error-feedback
+//! residual) and hands it to a [`Transport`]. The in-process
+//! implementation ([`InProcessTransport`]) simulates the device on the
+//! shared thread-safe [`Engine`]; a future networked backend would
+//! serialize the job's downlink and ship it to a real fleet — the
+//! trait is deliberately message-shaped (owned outcome, no callbacks
+//! into server state) so that seam stays narrow.
+//!
+//! [`run_cohort`] fans a round's cohort out over a scoped worker pool
+//! (`parallelism` threads) and streams outcomes to a sink **in cohort
+//! order** regardless of completion order: a reorder buffer holds
+//! early finishers until their turn. Combined with the counter-derived
+//! per-client RNG streams ([`Pcg32::derive`]), this makes a round's
+//! result bit-identical for every `parallelism` value — enforced by
+//! `tests/parallel_determinism.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::thread;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::QatMode;
+use crate::data::{self, Dataset};
+use crate::fp8::codec::{self, Rounding, Segment, WirePayload};
+use crate::fp8::rng::Pcg32;
+use crate::runtime::{Engine, ModelInfo};
+
+use super::client::{ClientRunner, LocalUpdate};
+use super::comm::Uplink;
+
+/// RNG domain tags for [`Pcg32::derive`] — one per independent use of
+/// randomness inside a round, so streams sharing `(round, client)`
+/// coordinates never overlap.
+pub mod streams {
+    /// Client-local batch sampling / augmentation draws.
+    pub const DATA: u64 = 0xDA7A;
+    /// Client-side uplink wire quantization (stochastic rounding).
+    pub const UPLINK: u64 = 0x0B1A;
+    /// Server-side downlink wire quantization.
+    pub const DOWNLINK: u64 = 0xD014;
+    /// ServerOptimize stochastic draws (Eq. 4 GD + Eq. 5 grid).
+    pub const SERVER_OPT: u64 = 0x50B7;
+}
+
+/// Work order for one client in one round. Borrows the round-shared
+/// broadcast state (`w_start`/clips are the decoded downlink — every
+/// participant hard-resets to the same grid values) and owns the
+/// client-private error-feedback residual, which travels back in the
+/// [`ClientOutcome`].
+pub struct ClientJob<'r> {
+    pub round: usize,
+    pub client: usize,
+    /// Experiment seed — all client randomness is derived from
+    /// `(seed, round, client)`, never from shared generator state.
+    pub seed: u64,
+    pub qat: QatMode,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub flip_aug: bool,
+    /// Communication quantizer for the uplink.
+    pub comm: Rounding,
+    pub w_start: &'r [f32],
+    pub alpha_start: &'r [f32],
+    pub beta_start: &'r [f32],
+    pub train: &'r Dataset,
+    pub shard: &'r [usize],
+    pub segments: &'r [Segment],
+    /// n_k — local dataset size (FedAvg weighting).
+    pub n_k: u64,
+    /// Error-feedback residual (cloned from the server's store, the
+    /// updated copy travels back and replaces it on delivery — a
+    /// failed round therefore never loses undelivered residuals);
+    /// `None` when EF is disabled.
+    pub ef: Option<Vec<f32>>,
+}
+
+/// What one client sends back: the encoded uplink plus the updated
+/// error-feedback residual.
+pub struct ClientOutcome {
+    pub uplink: Uplink,
+    pub ef: Option<Vec<f32>>,
+}
+
+/// Per-worker scratch reused across every message that worker
+/// processes (EF fold-in source and decode buffers) — allocated once
+/// per worker, not once per message.
+#[derive(Default)]
+pub struct WorkBuffers {
+    pub up_src: Vec<f32>,
+    pub dec: Vec<f32>,
+}
+
+/// Where a client's local round executes. Implementations must be
+/// `Sync`: one transport instance serves the whole worker pool.
+pub trait Transport: Sync {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome>;
+}
+
+/// Transports pass through references, so callers can keep ownership
+/// (e.g. to inspect a mock after the run) and hand the server `&T`.
+impl<T: Transport + ?Sized> Transport for &T {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome> {
+        (**self).run_client(job, buffers)
+    }
+}
+
+/// Deterministic seed handed to the AOT local-update artifact
+/// (dropout/stochastic-QAT draws inside the graph).
+pub fn artifact_seed(round: usize, client: usize) -> i32 {
+    ((round as i32) << 12) | (client as i32 & 0xFFF)
+}
+
+/// Shared "client modem": fold in error feedback, quantize + pack the
+/// uplink with the client's counter-derived RNG stream, and update the
+/// residual. Both the in-process transport and test mocks route
+/// through this, so wire behaviour is identical no matter where the
+/// local update itself ran.
+pub fn finish_uplink(
+    job: ClientJob<'_>,
+    upd: LocalUpdate,
+    buffers: &mut WorkBuffers,
+) -> ClientOutcome {
+    let mut rng_q = Pcg32::derive(
+        job.seed,
+        job.round as u64,
+        job.client as u64,
+        streams::UPLINK,
+    );
+    let WorkBuffers { up_src, dec } = buffers;
+    let src: &[f32] = match &job.ef {
+        Some(e) => {
+            up_src.clear();
+            up_src.extend(
+                upd.w.iter().zip(e.iter()).map(|(w, e)| w + e),
+            );
+            up_src
+        }
+        None => &upd.w,
+    };
+    let mut payload = WirePayload::default();
+    codec::encode_into(
+        src,
+        &upd.alpha,
+        &upd.beta,
+        job.segments,
+        job.comm,
+        &mut rng_q,
+        &mut payload,
+    );
+    let ef = job.ef.map(|mut e| {
+        codec::decode_into(&payload, job.segments, dec);
+        for ((e, s), d) in e.iter_mut().zip(src).zip(dec.iter()) {
+            *e = s - d;
+        }
+        e
+    });
+    ClientOutcome {
+        uplink: Uplink {
+            payload,
+            client: job.client,
+            n_k: job.n_k,
+            mean_loss: upd.mean_loss,
+        },
+        ef,
+    }
+}
+
+/// In-process client executor: the paper's simulation setup, where the
+/// coordinator runs every sampled client on the shared PJRT engine.
+pub struct InProcessTransport<'a> {
+    pub engine: &'a Engine,
+    pub model: &'a ModelInfo,
+}
+
+impl Transport for InProcessTransport<'_> {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome> {
+        let m = self.model;
+        let mut rng_data = Pcg32::derive(
+            job.seed,
+            job.round as u64,
+            job.client as u64,
+            streams::DATA,
+        );
+        let (xs, ys) = data::make_batches(
+            job.train,
+            job.shard,
+            m.u_steps,
+            m.batch,
+            &mut rng_data,
+            job.flip_aug,
+        );
+        let runner = ClientRunner {
+            engine: self.engine,
+            model: m,
+        };
+        let upd = runner
+            .local_update(
+                job.qat,
+                job.w_start,
+                job.alpha_start,
+                job.beta_start,
+                &xs,
+                &ys,
+                job.lr,
+                job.weight_decay,
+                artifact_seed(job.round, job.client),
+            )
+            .with_context(|| {
+                format!("client {} round {}", job.client, job.round)
+            })?;
+        Ok(finish_uplink(job, upd, buffers))
+    }
+}
+
+/// Execute a cohort of jobs on `transport` with up to `parallelism`
+/// worker threads, delivering outcomes to `sink` strictly in cohort
+/// order (position 0, 1, 2, ...) as soon as each becomes deliverable.
+///
+/// The in-order delivery is what makes streaming aggregation
+/// bit-identical across thread counts: FP32 accumulation is not
+/// associative, so the accumulate order must not depend on completion
+/// order. Early finishers park in a reorder buffer (packed payloads,
+/// not decoded tensors) until their predecessors arrive.
+pub fn run_cohort<F>(
+    transport: &dyn Transport,
+    jobs: Vec<ClientJob<'_>>,
+    parallelism: usize,
+    mut sink: F,
+) -> Result<()>
+where
+    F: FnMut(usize, ClientOutcome) -> Result<()>,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let workers = parallelism.max(1).min(n);
+    if workers == 1 {
+        // sequential fast path: no threads, no channel
+        let mut buffers = WorkBuffers::default();
+        for (pos, job) in jobs.into_iter().enumerate() {
+            let out = transport.run_client(job, &mut buffers)?;
+            sink(pos, out)?;
+        }
+        return Ok(());
+    }
+
+    let queue = Mutex::new(jobs.into_iter().enumerate());
+    let cancel = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<ClientOutcome>)>();
+    thread::scope(|s| -> Result<()> {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let cancel = &cancel;
+            s.spawn(move || {
+                let mut buffers = WorkBuffers::default();
+                while !cancel.load(Ordering::Relaxed) {
+                    let next =
+                        queue.lock().ok().and_then(|mut q| q.next());
+                    let Some((pos, job)) = next else { break };
+                    let res = transport.run_client(job, &mut buffers);
+                    if tx.send((pos, res)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut pending: BTreeMap<usize, ClientOutcome> = BTreeMap::new();
+        let mut next_pos = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..n {
+            let Ok((pos, res)) = rx.recv() else { break };
+            match res {
+                Ok(out) => {
+                    pending.insert(pos, out);
+                }
+                Err(e) => {
+                    cancel.store(true, Ordering::Relaxed);
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+            if first_err.is_none() {
+                while let Some(out) = pending.remove(&next_pos) {
+                    if let Err(e) = sink(next_pos, out) {
+                        // stop workers from draining the rest of the
+                        // queue while scope joins them
+                        cancel.store(true, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                    next_pos += 1;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        ensure!(
+            next_pos == n,
+            "cohort incomplete: {next_pos}/{n} clients delivered"
+        );
+        Ok(())
+    })
+}

@@ -37,7 +37,7 @@ pub enum Rounding {
 }
 
 /// A packed model update as it would travel over the network.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct WirePayload {
     /// 8-bit codes for quantized segments, concatenated in segment order.
     pub codes: Vec<u8>,
@@ -71,18 +71,39 @@ pub fn encode(
     mode: Rounding,
     rng: &mut Pcg32,
 ) -> WirePayload {
-    let mut codes = Vec::new();
-    let mut raw = Vec::new();
+    let mut out = WirePayload::default();
+    encode_into(w, alphas, betas, segments, mode, rng, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`encode`]: packs into `out`, recycling
+/// its allocations. Bit-identical to the allocating path for the same
+/// RNG stream (property-tested). Reuse happens wherever the caller
+/// retains the payload: the server's downlink buffer is encoded into
+/// once per round for the life of a run. Uplink payloads still
+/// allocate per message — they are shipped (moved into the `Uplink`)
+/// rather than retained; the uplink path instead reuses the
+/// per-worker EF/decode scratch in `WorkBuffers`.
+pub fn encode_into(
+    w: &[f32],
+    alphas: &[f32],
+    betas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+    out: &mut WirePayload,
+) {
+    out.codes.clear();
+    out.raw.clear();
+    out.alphas.clear();
+    out.alphas.extend_from_slice(alphas);
+    out.betas.clear();
+    out.betas.extend_from_slice(betas);
     if mode == Rounding::None {
-        raw.extend_from_slice(w);
-        return WirePayload {
-            codes,
-            raw,
-            alphas: alphas.to_vec(),
-            betas: betas.to_vec(),
-        };
+        out.raw.extend_from_slice(w);
+        return;
     }
-    codes.reserve(w.len());
+    out.codes.reserve(w.len());
     for seg in segments {
         let vals = &w[seg.offset..seg.offset + seg.size];
         match seg.alpha_idx {
@@ -91,26 +112,39 @@ pub fn encode(
                 match mode {
                     Rounding::Deterministic => {
                         for &x in vals {
-                            codes.push(p.encode(x, 0.5));
+                            out.codes.push(p.encode(x, 0.5));
                         }
                     }
                     Rounding::Stochastic => {
                         for &x in vals {
-                            codes.push(p.encode(x, rng.uniform_f64()));
+                            out.codes.push(p.encode(x, rng.uniform_f64()));
                         }
                     }
                     Rounding::None => unreachable!(),
                 }
             }
-            _ => raw.extend_from_slice(vals),
+            _ => out.raw.extend_from_slice(vals),
         }
     }
-    WirePayload {
-        codes,
-        raw,
-        alphas: alphas.to_vec(),
-        betas: betas.to_vec(),
-    }
+}
+
+/// Buffer-reusing variant of [`decode`]: resizes `out` to the model
+/// dimension implied by the segment table and decodes into it, so a
+/// recycled (even garbage-filled or wrongly-sized) buffer yields the
+/// same result as a fresh allocation.
+pub fn decode_into(
+    payload: &WirePayload,
+    segments: &[Segment],
+    out: &mut Vec<f32>,
+) {
+    let dim = segments
+        .iter()
+        .map(|s| s.offset + s.size)
+        .max()
+        .unwrap_or(payload.raw.len());
+    out.clear();
+    out.resize(dim, 0.0);
+    decode(payload, segments, out);
 }
 
 /// Decode a wire payload back into a flat weight vector.

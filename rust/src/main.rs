@@ -1,7 +1,8 @@
 //! `fedfp8` — launcher for FP8FedAvg-UQ experiments.
 //!
 //! ```text
-//! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S] ...
+//! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S]
+//!            [--parallelism T]  # concurrent client workers per round
 //! fedfp8 table1 [--rounds N] [--seeds 3] [--models lenet_c10,...]
 //! fedfp8 table2 [--rounds N] [--seeds 3]
 //! fedfp8 fig2   [--rounds N] [--model lenet_c10]
@@ -28,6 +29,7 @@ fn apply_overrides(
     cfg.clients = args.parse_or("clients", cfg.clients)?;
     cfg.participation =
         args.parse_or("participation", cfg.participation)?;
+    cfg.parallelism = args.parse_or("parallelism", cfg.parallelism)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
     cfg.lr = args.parse_or("lr", cfg.lr)?;
     cfg.weight_decay = args.parse_or("wd", cfg.weight_decay)?;
@@ -47,11 +49,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = Engine::new(&dir)?;
     let manifest = Manifest::load(&dir)?;
     println!(
-        "platform={}  preset={preset}  rounds={}  K={}  P={}",
+        "platform={}  preset={preset}  rounds={}  K={}  P={}  \
+         parallelism={}",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
-        cfg.participation
+        cfg.participation,
+        cfg.parallelism
     );
     let mut server = Server::new(&engine, &manifest, cfg)?;
     server.set_verbose(true);

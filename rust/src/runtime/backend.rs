@@ -1,0 +1,184 @@
+//! Execution backend behind [`super::engine::Engine`].
+//!
+//! Two compile-time implementations of one narrow contract
+//! (`Client` / `Executable` / `Value` / [`prepare`]):
+//!
+//! * `xla` feature ON — the real PJRT backend: parses AOT HLO-text
+//!   artifacts, compiles them on the process-wide PJRT CPU client and
+//!   executes them. Requires the `xla` bindings crate (xla_extension);
+//!   see ARCHITECTURE.md §Execution backends.
+//! * `xla` feature OFF (default) — a stub that supports engine
+//!   construction and platform queries but fails artifact compilation
+//!   with an actionable error. This keeps the whole coordinator /
+//!   codec / protocol stack building and testing on machines without
+//!   the XLA toolchain: everything except HLO dispatch is real.
+//!
+//! Thread-safety contract: `Client` and `Executable` must be
+//! `Send + Sync` — the engine shares one client across the cohort
+//! worker threads and executes the same loaded executable
+//! concurrently. PJRT guarantees this (client compilation and
+//! `Execute` are thread-safe in the PJRT C API); the stub types are
+//! plain data.
+
+#[cfg(feature = "xla")]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+    use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+              XlaComputation};
+
+    use crate::runtime::engine::In;
+
+    pub struct Client(PjRtClient);
+    pub struct Executable(PjRtLoadedExecutable);
+    pub struct Value(Literal);
+    /// Marshalled input literals, ready for dispatch.
+    pub struct Prepared(Vec<Literal>);
+
+    // SAFETY: the wrappers own their underlying PJRT/XLA objects and
+    // never hand out aliased raw pointers. The PJRT C API specifies
+    // that clients and loaded executables are thread-safe (concurrent
+    // Compile/Execute calls are supported), and `Literal` is an owned
+    // host-side buffer with no interior mutability. The Rust bindings
+    // only lack the auto-traits because they hold raw pointers.
+    unsafe impl Send for Client {}
+    unsafe impl Sync for Client {}
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+    unsafe impl Send for Value {}
+    unsafe impl Sync for Value {}
+
+    impl Client {
+        pub fn cpu() -> Result<Client> {
+            Ok(Client(
+                PjRtClient::cpu().context("creating PJRT CPU client")?,
+            ))
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.0.platform_name()
+        }
+
+        /// Parse + compile one HLO-text artifact.
+        ///
+        /// Interchange is HLO *text* (`HloModuleProto::from_text_file`):
+        /// jax >= 0.5 serializes protos with 64-bit instruction ids
+        /// that xla_extension 0.5.1 rejects; the text parser reassigns
+        /// ids (see /opt/xla-example/README.md, python/compile/aot.py).
+        pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| {
+                format!("parsing HLO text {}", path.display())
+            })?;
+            let comp = XlaComputation::from_proto(&proto);
+            Ok(Executable(self.0.compile(&comp).with_context(|| {
+                format!("compiling {}", path.display())
+            })?))
+        }
+    }
+
+    /// Marshal typed inputs into device literals.
+    pub fn prepare(inputs: &[In]) -> Result<Prepared> {
+        let lits = inputs
+            .iter()
+            .map(|i| {
+                Ok(match i {
+                    In::F32(v, dims) => Literal::vec1(v).reshape(dims)?,
+                    In::I32(v, dims) => Literal::vec1(v).reshape(dims)?,
+                    In::ScalarF32(v) => Literal::scalar(*v),
+                    In::ScalarI32(v) => Literal::scalar(*v),
+                })
+            })
+            .collect::<Result<Vec<Literal>>>()?;
+        Ok(Prepared(lits))
+    }
+
+    impl Executable {
+        /// Execute; returns the flattened output tuple
+        /// (aot.py lowers with return_tuple=True: always a tuple).
+        pub fn run(&self, inputs: &Prepared) -> Result<Vec<Value>> {
+            let result = self.0.execute::<Literal>(&inputs.0)?[0][0]
+                .to_literal_sync()?;
+            Ok(result.to_tuple()?.into_iter().map(Value).collect())
+        }
+    }
+
+    impl Value {
+        pub fn f32_vec(&self) -> Result<Vec<f32>> {
+            Ok(self.0.to_vec::<f32>()?)
+        }
+
+        pub fn f32_scalar(&self) -> Result<f32> {
+            Ok(self.0.get_first_element::<f32>()?)
+        }
+
+        pub fn i32_scalar(&self) -> Result<i32> {
+            Ok(self.0.get_first_element::<i32>()?)
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::runtime::engine::In;
+
+    pub struct Client;
+    /// Uninhabited: the stub can never produce an executable, so code
+    /// paths "after compilation" are provably unreachable.
+    pub enum Executable {}
+    pub enum Value {}
+    pub struct Prepared;
+
+    impl Client {
+        pub fn cpu() -> Result<Client> {
+            Ok(Client)
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub (enable the `xla` feature for PJRT)".to_string()
+        }
+
+        pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+            bail!(
+                "cannot compile {}: this build uses the stub execution \
+                 backend — rebuild with `--features xla` (plus the xla \
+                 bindings crate, see ARCHITECTURE.md) to execute AOT \
+                 artifacts",
+                path.display()
+            )
+        }
+    }
+
+    pub fn prepare(_inputs: &[In]) -> Result<Prepared> {
+        Ok(Prepared)
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &Prepared) -> Result<Vec<Value>> {
+            match *self {}
+        }
+    }
+
+    impl Value {
+        pub fn f32_vec(&self) -> Result<Vec<f32>> {
+            match *self {}
+        }
+
+        pub fn f32_scalar(&self) -> Result<f32> {
+            match *self {}
+        }
+
+        pub fn i32_scalar(&self) -> Result<i32> {
+            match *self {}
+        }
+    }
+}
+
+pub use imp::{prepare, Client, Executable, Prepared, Value};

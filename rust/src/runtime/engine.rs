@@ -1,19 +1,33 @@
-//! PJRT execution engine — loads AOT HLO-text artifacts, compiles each
-//! once per process, and executes them from the round loop.
+//! Thread-safe execution engine — loads AOT HLO-text artifacts,
+//! compiles each once per process, and executes them from the round
+//! loop, concurrently from any number of cohort worker threads.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax
-//! >= 0.5 serializes protos with 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
-//! /opt/xla-example/README.md and python/compile/aot.py).
+//! Concurrency contract (the runtime leg of the parallel client
+//! pipeline):
+//!
+//! * the executable cache is an `RwLock<HashMap<..>>` of `Arc`'d
+//!   executables — the hot path takes a read lock only long enough to
+//!   clone the `Arc`, then executes outside every lock;
+//! * compile-once semantics are enforced by a dedicated compile mutex
+//!   with a double-check, so a cold artifact is parsed + compiled by
+//!   exactly one thread while others wait (first-compile of *distinct*
+//!   artifacts serializes too — a startup-only cost);
+//! * [`EngineStats`] accumulation is atomic (relaxed counters), so
+//!   workers never contend on a stats lock.
+//!
+//! `Engine` is `Send + Sync` (asserted by a compile-time test); the
+//! actual HLO dispatch is delegated to [`super::backend`], which is
+//! the real PJRT client under `--features xla` and a stub otherwise.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
-          XlaComputation};
+
+use super::backend;
 
 /// Typed input argument for an artifact execution.
 pub enum In<'a> {
@@ -21,17 +35,6 @@ pub enum In<'a> {
     I32(&'a [i32], &'a [i64]),
     ScalarF32(f32),
     ScalarI32(i32),
-}
-
-impl<'a> In<'a> {
-    fn literal(&self) -> Result<Literal> {
-        Ok(match self {
-            In::F32(v, dims) => Literal::vec1(v).reshape(dims)?,
-            In::I32(v, dims) => Literal::vec1(v).reshape(dims)?,
-            In::ScalarF32(v) => Literal::scalar(*v),
-            In::ScalarI32(v) => Literal::scalar(*v),
-        })
-    }
 }
 
 /// Cumulative execution statistics (perf accounting, §Perf).
@@ -44,22 +47,47 @@ pub struct EngineStats {
     pub marshal_ns: u64,
 }
 
+/// Lock-free stats accumulation; counters are independent, so relaxed
+/// ordering is sufficient (readers only ever see a consistent-enough
+/// snapshot for reporting).
+#[derive(Default)]
+struct AtomicStats {
+    compilations: AtomicU64,
+    executions: AtomicU64,
+    compile_ns: AtomicU64,
+    execute_ns: AtomicU64,
+    marshal_ns: AtomicU64,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            compilations: self.compilations.load(Ordering::Relaxed),
+            executions: self.executions.load(Ordering::Relaxed),
+            compile_ns: self.compile_ns.load(Ordering::Relaxed),
+            execute_ns: self.execute_ns.load(Ordering::Relaxed),
+            marshal_ns: self.marshal_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
 pub struct Engine {
-    client: PjRtClient,
+    client: backend::Client,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
-    stats: RefCell<EngineStats>,
+    cache: RwLock<HashMap<String, Arc<backend::Executable>>>,
+    compile_lock: Mutex<()>,
+    stats: AtomicStats,
 }
 
 impl Engine {
     pub fn new(artifact_dir: &Path) -> Result<Engine> {
-        let client =
-            PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = backend::Client::cpu()?;
         Ok(Engine {
             client,
             dir: artifact_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: RwLock::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+            stats: AtomicStats::default(),
         })
     }
 
@@ -67,72 +95,128 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// Compile-once artifact loading (keyed by file name).
-    fn ensure_compiled(&self, file: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(file) {
-            return Ok(());
+    /// Compile-once artifact lookup (keyed by file name).
+    fn executable(&self, file: &str) -> Result<Arc<backend::Executable>> {
+        if let Some(exe) = self
+            .cache
+            .read()
+            .expect("engine cache poisoned")
+            .get(file)
+        {
+            return Ok(exe.clone());
+        }
+        let _compiling = self
+            .compile_lock
+            .lock()
+            .expect("engine compile lock poisoned");
+        // double-check: another thread may have compiled `file` while
+        // we waited on the compile lock
+        if let Some(exe) = self
+            .cache
+            .read()
+            .expect("engine cache poisoned")
+            .get(file)
+        {
+            return Ok(exe.clone());
         }
         let t = Instant::now();
         let path = self.dir.join(file);
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {file}"))?;
-        let mut st = self.stats.borrow_mut();
-        st.compilations += 1;
-        st.compile_ns += t.elapsed().as_nanos() as u64;
-        self.cache.borrow_mut().insert(file.to_string(), exe);
-        Ok(())
+        let exe = Arc::new(
+            self.client
+                .compile_hlo_text(&path)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        self.stats.compilations.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .compile_ns
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.cache
+            .write()
+            .expect("engine cache poisoned")
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
     }
 
     /// Execute an artifact; returns the flattened output tuple.
-    pub fn execute(&self, file: &str, inputs: &[In]) -> Result<Vec<Literal>> {
-        self.ensure_compiled(file)?;
+    /// Safe to call concurrently from many threads.
+    pub fn execute(
+        &self,
+        file: &str,
+        inputs: &[In],
+    ) -> Result<Vec<backend::Value>> {
+        let exe = self.executable(file)?;
         let tm = Instant::now();
-        let lits: Vec<Literal> = inputs
-            .iter()
-            .map(|i| i.literal())
-            .collect::<Result<_>>()?;
+        let prepared = backend::prepare(inputs)?;
         let marshal_ns = tm.elapsed().as_nanos() as u64;
         let t = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(file).unwrap();
-        let result = exe.execute::<Literal>(&lits)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple
-        let parts = result.to_tuple()?;
-        let mut st = self.stats.borrow_mut();
-        st.executions += 1;
-        st.execute_ns += t.elapsed().as_nanos() as u64;
-        st.marshal_ns += marshal_ns;
+        let parts = exe.run(&prepared)?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats
+            .marshal_ns
+            .fetch_add(marshal_ns, Ordering::Relaxed);
         Ok(parts)
     }
 
     pub fn stats(&self) -> EngineStats {
-        *self.stats.borrow()
+        self.stats.snapshot()
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.read().expect("engine cache poisoned").len()
     }
 }
 
-/// Extract a f32 vector from an output literal.
-pub fn f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+/// Extract a f32 vector from an output value.
+pub fn f32_vec(v: &backend::Value) -> Result<Vec<f32>> {
+    v.f32_vec()
 }
 
 /// Extract a f32 scalar.
-pub fn f32_scalar(lit: &Literal) -> Result<f32> {
-    Ok(lit.get_first_element::<f32>()?)
+pub fn f32_scalar(v: &backend::Value) -> Result<f32> {
+    v.f32_scalar()
 }
 
 /// Extract an i32 scalar.
-pub fn i32_scalar(lit: &Literal) -> Result<i32> {
-    Ok(lit.get_first_element::<i32>()?)
+pub fn i32_scalar(v: &backend::Value) -> Result<i32> {
+    v.i32_scalar()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+    }
+
+    #[test]
+    fn shared_engine_across_threads() {
+        let eng = Engine::new(Path::new("artifacts")).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let _ = eng.platform();
+                    assert_eq!(eng.stats().executions, 0);
+                });
+            }
+        });
+        assert_eq!(eng.compiled_count(), 0);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_backend_fails_with_actionable_error() {
+        let eng = Engine::new(Path::new("artifacts")).unwrap();
+        let err = eng
+            .execute("local_update_det.hlo", &[In::ScalarI32(1)])
+            .unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("stub execution backend"), "{msg}");
+        assert!(msg.contains("--features xla"), "{msg}");
+    }
 }

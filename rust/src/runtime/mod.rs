@@ -1,7 +1,64 @@
-//! PJRT runtime: artifact registry (manifest) + execution engine.
+//! PJRT runtime: artifact registry (manifest) + thread-safe execution
+//! engine over a pluggable backend (real PJRT under `--features xla`,
+//! stub otherwise).
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, In};
+pub use engine::{Engine, EngineStats, In};
 pub use manifest::{default_dir, Manifest, ModelInfo};
+
+/// True when the AOT artifacts (manifest.json) are present.
+pub fn artifacts_available() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+/// Artifact gate for tests and benches. Returns `true` when artifacts
+/// exist; otherwise prints a clear skip message and returns `false` —
+/// unless `FEDFP8_REQUIRE_ARTIFACTS` is set, in which case the absence
+/// is a hard failure (CI configurations that *do* bake artifacts use
+/// this to keep the gated tests honest).
+pub fn artifacts_or_skip(what: &str) -> bool {
+    if artifacts_available() {
+        return true;
+    }
+    if std::env::var_os("FEDFP8_REQUIRE_ARTIFACTS").is_some() {
+        panic!(
+            "FEDFP8_REQUIRE_ARTIFACTS is set but {}/manifest.json is \
+             missing — run `make artifacts` first (needed by: {what})",
+            default_dir().display()
+        );
+    }
+    eprintln!(
+        "skip {what}: AOT artifacts not built (run `make artifacts`; \
+         set FEDFP8_REQUIRE_ARTIFACTS=1 to fail instead of skipping)"
+    );
+    false
+}
+
+/// Like [`artifacts_or_skip`] but gates on one specific artifact file
+/// (e.g. `golden_fp8.json`), so the env-var hard gate cannot be
+/// silently bypassed by an individually missing file.
+pub fn artifact_file_or_skip(
+    file: &str,
+    what: &str,
+) -> Option<std::path::PathBuf> {
+    let p = default_dir().join(file);
+    if p.exists() {
+        return Some(p);
+    }
+    if std::env::var_os("FEDFP8_REQUIRE_ARTIFACTS").is_some() {
+        panic!(
+            "FEDFP8_REQUIRE_ARTIFACTS is set but {} is missing — run \
+             `make artifacts` first (needed by: {what})",
+            p.display()
+        );
+    }
+    eprintln!(
+        "skip {what}: {} not built (run `make artifacts`; set \
+         FEDFP8_REQUIRE_ARTIFACTS=1 to fail instead of skipping)",
+        p.display()
+    );
+    None
+}

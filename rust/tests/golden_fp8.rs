@@ -7,12 +7,16 @@
 //! covers libm log2 differences at exact bin boundaries.
 
 use fedfp8::fp8::format::Fp8Params;
-use fedfp8::runtime::default_dir;
+use fedfp8::runtime::artifact_file_or_skip;
 use fedfp8::util::json::Json;
 
 fn goldens() -> Option<Json> {
-    let p = default_dir().join("golden_fp8.json");
-    let text = std::fs::read_to_string(p).ok()?;
+    let p = artifact_file_or_skip(
+        "golden_fp8.json",
+        "golden-vector parity tests",
+    )?;
+    let text =
+        std::fs::read_to_string(p).expect("golden json readable");
     Some(Json::parse(&text).expect("golden json parses"))
 }
 

@@ -1,22 +1,28 @@
 //! Integration tests over the full stack: PJRT runtime executing AOT
-//! artifacts, driven by the coordinator. All tests no-op gracefully if
-//! `make artifacts` has not been run.
+//! artifacts, driven by the coordinator. Tests that need compiled
+//! artifacts skip with a clear message when `make artifacts` has not
+//! been run (set FEDFP8_REQUIRE_ARTIFACTS=1 to fail instead), so
+//! `cargo test -q` is green out of the box.
 //!
 //! NOTE: each test builds its own Engine (PJRT CPU client); tests are
 //! threaded, so keep per-test work small.
 
 use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::comm::{
+    DOWNLINK_HEADER_BYTES, UPLINK_HEADER_BYTES,
+};
 use fedfp8::coordinator::Server;
 use fedfp8::fp8::format::Fp8Params;
 use fedfp8::fp8::rng::Pcg32;
-use fedfp8::runtime::{default_dir, engine, Engine, In, Manifest};
+use fedfp8::runtime::{
+    artifacts_or_skip, default_dir, engine, Engine, In, Manifest,
+};
 
 fn setup() -> Option<(Engine, Manifest)> {
-    let dir = default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skip: artifacts not built");
+    if !artifacts_or_skip("integration test (AOT artifacts + PJRT)") {
         return None;
     }
+    let dir = default_dir();
     Some((Engine::new(&dir).unwrap(), Manifest::load(&dir).unwrap()))
 }
 
@@ -63,11 +69,16 @@ fn uq_run_learns_and_counts_bytes() {
         "uq failed to learn: {}",
         r.final_accuracy
     );
-    // byte accounting: 8 rounds x 4 clients x (up+down)
+    // byte accounting: 8 rounds x 4 clients x (up+down), each
+    // direction = packed payload + fixed per-message framing header
     let m = man.model("mlp_c10").unwrap();
     let msg = m.quant_params() as u64
         + 4 * (m.raw_params() + m.alpha_dim + m.n_act) as u64;
-    assert_eq!(r.total_bytes, 8 * 4 * 2 * msg);
+    assert_eq!(
+        r.total_bytes,
+        8 * 4
+            * (2 * msg + UPLINK_HEADER_BYTES + DOWNLINK_HEADER_BYTES)
+    );
 }
 
 #[test]
@@ -243,6 +254,45 @@ fn error_feedback_reduces_biased_comm_drift() {
         accs[0],
         accs[1]
     );
+}
+
+#[test]
+fn parallel_cohort_is_bit_identical_on_real_engine() {
+    // acceptance: the same config at parallelism 1 and 4 must yield
+    // bit-identical server weights, metrics and byte counts while a
+    // cohort of 4 clients executes concurrently through the shared
+    // PJRT engine (engine-free counterpart: tests/parallel_determinism)
+    let Some((eng, man)) = setup() else { return };
+    let mut outcomes = Vec::new();
+    for par in [1usize, 4] {
+        let mut cfg = ExperimentConfig::preset("mlp_c10:uq:iid").unwrap();
+        cfg.rounds = 3;
+        cfg.clients = 8;
+        cfg.participation = 4;
+        cfg.n_train = 400;
+        cfg.n_test = 256;
+        cfg.eval_every = 100;
+        cfg.seed = 21;
+        cfg.parallelism = par;
+        let mut server = Server::new(&eng, &man, cfg).unwrap();
+        let mut losses = Vec::new();
+        for t in 0..3 {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let (w, a, b) = server.state();
+        outcomes.push((
+            w.to_vec(),
+            a.to_vec(),
+            b.to_vec(),
+            server.comm_stats(),
+            losses,
+        ));
+    }
+    assert_eq!(outcomes[0].0, outcomes[1].0, "weights diverged");
+    assert_eq!(outcomes[0].1, outcomes[1].1, "alphas diverged");
+    assert_eq!(outcomes[0].2, outcomes[1].2, "betas diverged");
+    assert_eq!(outcomes[0].3, outcomes[1].3, "comm stats diverged");
+    assert_eq!(outcomes[0].4, outcomes[1].4, "train losses diverged");
 }
 
 #[test]

@@ -1,0 +1,321 @@
+//! Engine-free tests of the parallel client pipeline: the Transport
+//! seam lets a mock client executor drive the *entire* round loop
+//! (downlink codec, fan-out, streaming aggregation, error feedback,
+//! comm accounting) with no AOT artifacts and no PJRT, so the
+//! determinism contract is enforced on every machine:
+//!
+//!   same config + seed  =>  bit-identical weights, losses and byte
+//!   counts for every `parallelism` value, despite out-of-order
+//!   client completion.
+//!
+//! The real-engine twin of these tests (artifact-gated) lives in
+//! tests/integration.rs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::client::LocalUpdate;
+use fedfp8::coordinator::comm::CommStats;
+use fedfp8::coordinator::transport::{
+    finish_uplink, ClientJob, ClientOutcome, Transport, WorkBuffers,
+};
+use fedfp8::coordinator::Server;
+use fedfp8::fp8::codec::Segment;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::runtime::{Engine, Manifest, ModelInfo};
+
+const DIM: usize = 24;
+
+fn write_f32(path: &Path, vals: &[f32]) {
+    let bytes: Vec<u8> =
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// Build an in-memory manifest for a tiny synthetic "mock" model plus
+/// its init files on disk — no AOT artifacts involved.
+fn mock_manifest(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir()
+        .join(format!("fedfp8_mockman_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let w: Vec<f32> = (0..DIM).map(|i| i as f32 * 0.05 - 0.5).collect();
+    write_f32(&dir.join("w.bin"), &w);
+    write_f32(&dir.join("alpha.bin"), &[1.0]);
+    write_f32(&dir.join("beta.bin"), &[2.0]);
+    let segments = vec![
+        Segment {
+            name: "w".into(),
+            offset: 0,
+            size: 20,
+            quantized: true,
+            alpha_idx: Some(0),
+        },
+        Segment {
+            name: "bias".into(),
+            offset: 20,
+            size: 4,
+            quantized: false,
+            alpha_idx: None,
+        },
+    ];
+    let mut init = BTreeMap::new();
+    init.insert("w".to_string(), "w.bin".to_string());
+    init.insert("alpha".to_string(), "alpha.bin".to_string());
+    init.insert("beta".to_string(), "beta.bin".to_string());
+    let info = ModelInfo {
+        name: "mock".into(),
+        dim: DIM,
+        alpha_dim: 1,
+        n_act: 1,
+        classes: 4,
+        kind: "vision".into(),
+        input_shape: vec![8, 8, 3],
+        u_steps: 2,
+        batch: 4,
+        eval_batch: 8,
+        server_p: 0,
+        optimizer: "sgd".into(),
+        segments,
+        artifacts: BTreeMap::new(),
+        init,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("mock".to_string(), info);
+    let manifest = Manifest {
+        dir: dir.clone(),
+        models,
+        quant_demo: None,
+    };
+    (dir, manifest)
+}
+
+fn mock_cfg(parallelism: usize, error_feedback: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::base("mlp_c10")
+        .unwrap()
+        .with_method(if error_feedback { "bq_ef" } else { "uq" })
+        .unwrap();
+    cfg.model = "mock".into();
+    cfg.name = format!("mock_par{parallelism}");
+    cfg.clients = 6;
+    cfg.participation = 4;
+    cfg.rounds = 4;
+    cfg.n_train = 96;
+    cfg.n_test = 32;
+    cfg.eval_every = 1000;
+    cfg.seed = 11;
+    cfg.parallelism = parallelism;
+    cfg
+}
+
+/// Mock client executor: a deterministic pure-function "local update"
+/// plus per-client sleep jitter so later cohort positions finish
+/// *earlier* — stressing the reorder buffer. Uplink packing goes
+/// through the same `finish_uplink` path as the real transport.
+struct MockTransport {
+    jitter: bool,
+    /// When `Some(n)`: each client blocks (bounded) until `n` clients
+    /// are in flight simultaneously — a deterministic concurrency
+    /// detector that cannot false-negative on a slow scheduler.
+    rendezvous: Option<usize>,
+    fail_client: Option<usize>,
+    active: AtomicUsize,
+    max_active: AtomicUsize,
+}
+
+impl MockTransport {
+    fn new(jitter: bool) -> MockTransport {
+        MockTransport {
+            jitter,
+            rendezvous: None,
+            fail_client: None,
+            active: AtomicUsize::new(0),
+            max_active: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Transport for MockTransport {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome> {
+        let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.max_active.fetch_max(now, Ordering::SeqCst);
+        if self.jitter {
+            // pseudo-random per-client delays so completion order
+            // differs from cohort order, stressing the reorder buffer
+            std::thread::sleep(Duration::from_millis(
+                (job.client as u64 * 31 % 7) * 4,
+            ));
+        }
+        if let Some(target) = self.rendezvous {
+            // proceed once `target` clients are in flight at once; a
+            // non-concurrent executor times out here and the caller's
+            // max_active assert fails instead of the test hanging
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while self.active.load(Ordering::SeqCst) < target
+                && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        if self.fail_client == Some(job.client) {
+            bail!("injected failure for client {}", job.client);
+        }
+        let mut rng = Pcg32::derive(
+            job.seed,
+            job.round as u64,
+            job.client as u64,
+            0x4D4F_434B, // "MOCK"
+        );
+        let w: Vec<f32> = job
+            .w_start
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                0.8 * w
+                    + 0.05 * rng.uniform()
+                    + 0.002 * (job.client as f32 - i as f32 * 0.1)
+            })
+            .collect();
+        let alpha: Vec<f32> = job
+            .alpha_start
+            .iter()
+            .map(|a| a * (1.0 + 0.01 * job.client as f32))
+            .collect();
+        let upd = LocalUpdate {
+            w,
+            alpha,
+            beta: job.beta_start.to_vec(),
+            mean_loss: 1.0 / (job.client + 1) as f32,
+        };
+        Ok(finish_uplink(job, upd, buffers))
+    }
+}
+
+struct Trace {
+    w: Vec<u32>,
+    alpha: Vec<u32>,
+    beta: Vec<u32>,
+    comm: CommStats,
+    losses: Vec<u32>,
+}
+
+fn run_mock(parallelism: usize, error_feedback: bool) -> Trace {
+    let tag = format!("det_p{parallelism}_ef{error_feedback}");
+    let (dir, manifest) = mock_manifest(&tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(true);
+    let cfg = mock_cfg(parallelism, error_feedback);
+    let rounds = cfg.rounds;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let mut losses = Vec::new();
+    for t in 0..rounds {
+        losses.push(server.round(t).unwrap().to_bits());
+    }
+    let (w, a, b) = server.state();
+    Trace {
+        w: w.iter().map(|v| v.to_bits()).collect(),
+        alpha: a.iter().map(|v| v.to_bits()).collect(),
+        beta: b.iter().map(|v| v.to_bits()).collect(),
+        comm: server.comm_stats(),
+        losses,
+    }
+}
+
+#[test]
+fn parallelism_is_bit_invisible() {
+    let base = run_mock(1, false);
+    // sanity: the mock actually moves state round over round
+    assert!(base.losses.windows(2).any(|w| w[0] != w[1]));
+    assert!(base.comm.up_msgs == 16 && base.comm.down_msgs == 16);
+    for par in [2usize, 4, 8] {
+        let t = run_mock(par, false);
+        assert_eq!(t.w, base.w, "weights diverged at parallelism {par}");
+        assert_eq!(t.alpha, base.alpha, "alphas diverged at {par}");
+        assert_eq!(t.beta, base.beta, "betas diverged at {par}");
+        assert_eq!(t.comm, base.comm, "comm stats diverged at {par}");
+        assert_eq!(t.losses, base.losses, "losses diverged at {par}");
+    }
+}
+
+#[test]
+fn parallelism_is_bit_invisible_with_error_feedback() {
+    // error feedback adds per-client mutable residuals — the hardest
+    // state to keep deterministic under concurrency (taken by the job,
+    // written back on in-order delivery)
+    let base = run_mock(1, true);
+    let t = run_mock(4, true);
+    assert_eq!(t.w, base.w);
+    assert_eq!(t.alpha, base.alpha);
+    assert_eq!(t.comm, base.comm);
+    assert_eq!(t.losses, base.losses);
+}
+
+#[test]
+fn cohort_of_four_executes_concurrently() {
+    let (dir, manifest) = mock_manifest("conc");
+    let engine = Engine::new(&dir).unwrap();
+    let mut transport = MockTransport::new(false);
+    transport.rendezvous = Some(4);
+    let mut cfg = mock_cfg(4, false);
+    cfg.clients = 4;
+    cfg.participation = 4;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    server.round(0).unwrap();
+    assert_eq!(
+        transport.max_active.load(Ordering::SeqCst),
+        4,
+        "expected all 4 clients in flight at once"
+    );
+}
+
+#[test]
+fn client_failure_surfaces_from_parallel_round() {
+    let (dir, manifest) = mock_manifest("fail");
+    let engine = Engine::new(&dir).unwrap();
+    let mut transport = MockTransport::new(true);
+    transport.fail_client = Some(3);
+    let mut cfg = mock_cfg(4, false);
+    cfg.clients = 4; // participation 4 of 4: client 3 always sampled
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let err = server.round(0).unwrap_err();
+    assert!(
+        format!("{err:?}").contains("injected failure"),
+        "unexpected error: {err:?}"
+    );
+}
+
+#[test]
+fn engine_and_transport_are_thread_shareable() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    assert_send_sync::<MockTransport>();
+    fn assert_sync_obj(_: &(dyn Transport + '_)) {}
+    let t = MockTransport::new(false);
+    assert_sync_obj(&t);
+}

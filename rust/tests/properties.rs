@@ -157,6 +157,64 @@ fn prop_codec_error_bounded() {
 }
 
 #[test]
+fn prop_encode_into_decode_into_match_allocating() {
+    // Buffer-reuse APIs must be bit-identical to the allocating ones
+    // across every Rounding mode, even when the recycled buffers carry
+    // garbage from a previous (differently-shaped) message.
+    forall("codec-buffer-reuse", 21, 60, |g| {
+        let (segs, dim, adim) = random_segments(g);
+        let w = g.vec_f32(dim, 1.5);
+        let alphas: Vec<f32> =
+            (0..adim).map(|_| g.f32_log(0.1, 4.0)).collect();
+        let betas: Vec<f32> =
+            (0..g.usize_in(0, 4)).map(|_| g.f32_in(0.5, 4.0)).collect();
+        // recycled buffers, polluted by a prior message of a
+        // different size
+        let mut reused = codec::WirePayload {
+            codes: vec![0xAB; g.usize_in(0, 300)],
+            raw: g.vec_f32(g.usize_in(0, 50), 9.0),
+            alphas: vec![7.0; g.usize_in(0, 3)],
+            betas: vec![7.0; g.usize_in(0, 3)],
+        };
+        let mut reused_out = g.vec_f32(g.usize_in(0, 2 * dim), 9.0);
+        for mode in [
+            Rounding::Deterministic,
+            Rounding::Stochastic,
+            Rounding::None,
+        ] {
+            let seed = g.rng.next_u64();
+            let mut r_alloc = Pcg32::new(seed, 17);
+            let mut r_reuse = Pcg32::new(seed, 17);
+            let fresh = codec::encode(
+                &w, &alphas, &betas, &segs, mode, &mut r_alloc,
+            );
+            codec::encode_into(
+                &w, &alphas, &betas, &segs, mode, &mut r_reuse,
+                &mut reused,
+            );
+            if reused.codes != fresh.codes
+                || reused.raw != fresh.raw
+                || reused.alphas != fresh.alphas
+                || reused.betas != fresh.betas
+            {
+                return Err(format!(
+                    "encode_into diverged from encode ({mode:?})"
+                ));
+            }
+            let mut fresh_out = vec![0.0f32; dim];
+            codec::decode(&fresh, &segs, &mut fresh_out);
+            codec::decode_into(&reused, &segs, &mut reused_out);
+            if reused_out != fresh_out {
+                return Err(format!(
+                    "decode_into diverged from decode ({mode:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fedavg_convex_combination() {
     // aggregated weights stay inside the per-coordinate min/max of the
     // client vectors (convexity of weighted averaging)
