@@ -1,0 +1,63 @@
+"""Sufficient-statistics Eq. (5) scorer == naive rescan, against the
+Python quantizer oracle.
+
+The Rust ServerOptimize alpha search precomputes per-element client
+statistics (W = sum_k kw_k, S_i = sum_k kw_k*c_ki, T_i = sum_k
+kw_k*c_ki^2) so each alpha candidate costs O(d) instead of O(K*d):
+
+    sum_i sum_k kw_k (q_i - c_ki)^2
+  = sum_i q_i^2 W - 2 q_i S_i + T_i
+
+This test pins the algebraic identity on `ref.quantize_np` (the same
+oracle the Rust codec is golden-tested against), mirroring the Rust
+property test `prop_suffstats_mse_matches_naive`.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("k_clients", [1, 3, 8])
+@pytest.mark.parametrize("alpha", [0.3, 1.0, 4.7])
+def test_suffstats_equals_naive(k_clients, alpha):
+    d = 257
+    w = (RNG.random(d) - 0.5) * 2.0
+    clients = (RNG.random((k_clients, d)) - 0.5) * 2.0
+    kw = RNG.random(k_clients)
+    us = RNG.random(d)
+    q = ref.quantize_np(w.astype(np.float32), alpha, us).astype(
+        np.float64
+    )
+    naive = float((kw[:, None] * (q[None, :] - clients) ** 2).sum())
+    W = kw.sum()
+    S = (kw[:, None] * clients).sum(axis=0)
+    T = (kw[:, None] * clients**2).sum(axis=0)
+    fast = float((q * q * W - 2.0 * q * S + T).sum())
+    assert abs(naive - fast) <= 1e-9 * (1.0 + abs(naive))
+
+
+def test_suffstats_grid_search_picks_same_alpha():
+    d = 400
+    w = (RNG.random(d) - 0.5) * 2.0
+    clients = (RNG.random((4, d)) - 0.5) * 2.0
+    kw = np.full(4, 0.25)
+    us = RNG.random(d)
+    cands = np.linspace(0.4, 1.6, 25)
+    W = kw.sum()
+    S = (kw[:, None] * clients).sum(axis=0)
+    T = (kw[:, None] * clients**2).sum(axis=0)
+    naive_scores, fast_scores = [], []
+    for a in cands:
+        q = ref.quantize_np(w.astype(np.float32), float(a), us).astype(
+            np.float64
+        )
+        naive_scores.append(
+            float((kw[:, None] * (q[None, :] - clients) ** 2).sum())
+        )
+        fast_scores.append(float((q * q * W - 2.0 * q * S + T).sum()))
+    assert int(np.argmin(naive_scores)) == int(np.argmin(fast_scores))

@@ -1,0 +1,317 @@
+//! FP8 hot-path kernel benchmarks with explicit before/after arms,
+//! seeding the repo's perf trajectory (`BENCH_fp8_kernels.json`).
+//!
+//! Run: `cargo bench --bench fp8_kernels` — measures the acceptance
+//! configuration (K=8 clients, d=100k params, G=32 alpha candidates)
+//! and writes `../BENCH_fp8_kernels.json` (repo root).
+//! CI smoke: `cargo bench --bench fp8_kernels -- --quick` runs reduced
+//! sizes/budgets (still above the encode pool threshold, so the
+//! fan-out path is exercised) and skips the JSON write.
+//!
+//! Arms:
+//! * encode: scalar per-element reference (`encode_into_scalar`, the
+//!   pre-overhaul path shape) vs batched-RNG chunked encode at pool 1
+//!   and pool N.
+//! * decode: per-call table rebuild (pre-overhaul `decode` shape) vs
+//!   `DecodeLutCache`-backed decode at d=100k (sequential — the
+//!   parallel path only engages above 2^20 elements), plus a
+//!   dedicated 2^20+-element pair that really takes `decode_parallel`
+//!   (full mode only).
+//! * Eq. (5) alpha search: naive O(G·K·d) rescan (`segment_quant_mse`)
+//!   vs sufficient-statistics O(d·(K+G)) search (`SegmentStats`),
+//!   sequential and pooled — the exact shape `server_opt` runs.
+
+use std::thread;
+
+use fedfp8::fp8::codec::{self, DecodeLutCache, Rounding, Segment,
+                         SegmentStats, WirePayload};
+use fedfp8::fp8::format::Fp8Params;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::util::bench::{bench, header, BenchJson};
+
+fn segments(dim: usize, tensors: usize) -> Vec<Segment> {
+    let per = dim / tensors;
+    (0..tensors)
+        .map(|i| Segment {
+            name: format!("t{i}"),
+            offset: i * per,
+            size: per,
+            quantized: true,
+            alpha_idx: Some(i),
+        })
+        .collect()
+}
+
+/// Pre-overhaul decode shape: rebuild the 256-entry table inside every
+/// call, once per segment (the "before" arm the LUT cache replaces).
+fn decode_rebuild_tables(
+    payload: &WirePayload,
+    segments: &[Segment],
+    out: &mut [f32],
+) {
+    let mut ci = 0usize;
+    for seg in segments {
+        let table = Fp8Params::new(payload.alphas[seg.alpha_idx.unwrap()])
+            .decode_table();
+        let dst = &mut out[seg.offset..seg.offset + seg.size];
+        for d in dst.iter_mut() {
+            *d = table[payload.codes[ci] as usize];
+            ci += 1;
+        }
+    }
+}
+
+/// The Eq. (5) search exactly as `server_opt` runs it: stats once per
+/// segment, then G candidates scored in O(d) each, optionally fanned
+/// over `pool` threads via the same `scatter_zip` skeleton.
+fn alpha_search_suffstats(
+    w: &[f32],
+    segs: &[Segment],
+    clients: &[&[f32]],
+    kw: &[f32],
+    us: &[Vec<f64>],
+    grid: usize,
+    pool: usize,
+) -> f64 {
+    let searches: Vec<SegmentStats> = segs
+        .iter()
+        .map(|seg| SegmentStats::build(seg, clients, kw))
+        .collect();
+    let mut tasks: Vec<(usize, f32)> = Vec::new();
+    for si in 0..segs.len() {
+        for gi in 0..grid {
+            let cand = 0.5 + gi as f32 / grid as f32;
+            tasks.push((si, cand));
+        }
+    }
+    let mut mses = vec![0.0f64; tasks.len()];
+    let score = |&(si, cand): &(usize, f32)| -> f64 {
+        searches[si].mse(w, &segs[si], cand, &us[si])
+    };
+    if pool <= 1 {
+        for (slot, t) in mses.iter_mut().zip(tasks.iter()) {
+            *slot = score(t);
+        }
+    } else {
+        codec::scatter_zip(&tasks, &mut mses, pool, score);
+    }
+    mses.into_iter().fold(f64::MAX, f64::min)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // acceptance configuration: K=8 clients, d=100k params across 4
+    // tensors, G=32 alpha candidates per tensor. Quick mode stays
+    // above the encode pool threshold (2^15) so CI exercises the
+    // fan-out path.
+    let (dim, tensors, k_clients, grid, heavy_ms, light_ms) = if quick {
+        (40_960usize, 4usize, 4usize, 8usize, 80u64, 40u64)
+    } else {
+        (100_000, 4, 8, 32, 1_500, 400)
+    };
+    let pool = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
+    let segs = segments(dim, tensors);
+    let alphas: Vec<f32> =
+        (0..tensors).map(|i| 0.7 + i as f32 * 0.15).collect();
+    let mut rng = Pcg32::new(1, 0);
+    let w: Vec<f32> =
+        (0..dim).map(|_| (rng.uniform() - 0.5) * 2.0).collect();
+
+    header();
+
+    // ---- encode: scalar reference vs batched (pool 1 / pool N) ------
+    let mut r = Pcg32::new(2, 0);
+    let mut payload = WirePayload::default();
+    let enc_scalar = bench("encode/scalar_ref (before)", light_ms, || {
+        codec::encode_into_scalar(
+            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+            &mut payload,
+        );
+        std::hint::black_box(&payload);
+    });
+    let mut scratch = Vec::new();
+    let enc_b1 = bench("encode/batched pool=1", light_ms, || {
+        codec::encode_into_pooled(
+            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+            &mut scratch, 1, &mut payload,
+        );
+        std::hint::black_box(&payload);
+    });
+    let enc_bn = bench(&format!("encode/batched pool={pool}"), light_ms, || {
+        codec::encode_into_pooled(
+            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+            &mut scratch, pool, &mut payload,
+        );
+        std::hint::black_box(&payload);
+    });
+
+    // ---- decode: per-call table rebuild vs cached LUT ---------------
+    // (sequential at this size: the parallel decode path only engages
+    // above 2^20 elements — measured separately below)
+    let wire = codec::encode(
+        &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
+    );
+    let mut out = vec![0.0f32; dim];
+    let dec_rebuild = bench("decode/rebuild_tables (before)", light_ms, || {
+        decode_rebuild_tables(&wire, &segs, &mut out);
+        std::hint::black_box(&out);
+    });
+    let mut cache = DecodeLutCache::default();
+    let dec_cached = bench("decode/lut_cached", light_ms, || {
+        codec::decode_pooled(&wire, &segs, &mut cache, 1, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    // ---- decode parallel path: a payload big enough to cross the
+    // 2^20-element gate (full mode only; quick keeps CI fast) --------
+    let dec_large = if quick {
+        None
+    } else {
+        let big = (1usize << 20) + 4096;
+        let bsegs = segments(big, tensors);
+        let bw: Vec<f32> =
+            (0..big).map(|_| (rng.uniform() - 0.5) * 2.0).collect();
+        let bwire = codec::encode(
+            &bw, &alphas, &[], &bsegs, Rounding::Stochastic, &mut r,
+        );
+        let mut bout = vec![0.0f32; big];
+        let s1 = bench("decode/large 2^20+ pool=1", light_ms, || {
+            codec::decode_pooled(&bwire, &bsegs, &mut cache, 1, &mut bout);
+            std::hint::black_box(&bout);
+        });
+        let sn = bench(
+            &format!("decode/large 2^20+ pool={pool}"),
+            light_ms,
+            || {
+                codec::decode_pooled(
+                    &bwire, &bsegs, &mut cache, pool, &mut bout,
+                );
+                std::hint::black_box(&bout);
+            },
+        );
+        Some((s1, sn))
+    };
+
+    // ---- Eq. (5) alpha search: naive vs sufficient statistics -------
+    let clients_data: Vec<Vec<f32>> = (0..k_clients)
+        .map(|c| {
+            let mut cr = Pcg32::new(100 + c as u64, 0);
+            (0..dim).map(|_| (cr.uniform() - 0.5) * 2.0).collect()
+        })
+        .collect();
+    let clients: Vec<&[f32]> =
+        clients_data.iter().map(|v| v.as_slice()).collect();
+    let kw = vec![1.0f32 / k_clients as f32; k_clients];
+    let us: Vec<Vec<f64>> = segs
+        .iter()
+        .map(|s| (0..s.size).map(|_| rng.uniform_f64()).collect())
+        .collect();
+
+    let eq5_naive = bench(
+        &format!("eq5/naive O(G*K*d) K={k_clients} G={grid}"),
+        heavy_ms,
+        || {
+            let mut best = f64::MAX;
+            for (si, seg) in segs.iter().enumerate() {
+                for gi in 0..grid {
+                    let cand = 0.5 + gi as f32 / grid as f32;
+                    best = best.min(codec::segment_quant_mse(
+                        &w, seg, cand, &clients, &kw, &us[si],
+                    ));
+                }
+            }
+            std::hint::black_box(best);
+        },
+    );
+    let eq5_s1 = bench("eq5/suffstats pool=1", heavy_ms, || {
+        std::hint::black_box(alpha_search_suffstats(
+            &w, &segs, &clients, &kw, &us, grid, 1,
+        ));
+    });
+    let eq5_sn = bench(
+        &format!("eq5/suffstats pool={pool}"),
+        heavy_ms,
+        || {
+            std::hint::black_box(alpha_search_suffstats(
+                &w, &segs, &clients, &kw, &us, grid, pool,
+            ));
+        },
+    );
+
+    // ---- report -----------------------------------------------------
+    let d = dim as f64;
+    println!("\nthroughput:");
+    println!(
+        "  encode scalar_ref  {:>8.1} M params/s",
+        enc_scalar.throughput(d) / 1e6
+    );
+    println!(
+        "  encode batched p{pool} {:>8.1} M params/s",
+        enc_bn.throughput(d) / 1e6
+    );
+    println!(
+        "  decode cached      {:>8.1} M params/s",
+        dec_cached.throughput(d) / 1e6
+    );
+    let sp_eq5 = eq5_naive.median_ns / eq5_sn.median_ns;
+    let sp_eq5_seq = eq5_naive.median_ns / eq5_s1.median_ns;
+    let sp_enc = enc_scalar.median_ns / enc_bn.median_ns;
+    let sp_dec = dec_rebuild.median_ns / dec_cached.median_ns;
+    let sp_wire = (enc_scalar.median_ns + dec_rebuild.median_ns)
+        / (enc_bn.median_ns + dec_cached.median_ns);
+    println!("\nspeedups (before / after):");
+    println!("  eq5 alpha search   {sp_eq5:.2}x (seq {sp_eq5_seq:.2}x)");
+    println!("  encode             {sp_enc:.2}x");
+    println!("  decode             {sp_dec:.2}x");
+    println!("  encode+decode      {sp_wire:.2}x");
+    if let Some((s1, sn)) = &dec_large {
+        println!(
+            "  decode 2^20+ pool  {:.2}x",
+            s1.median_ns / sn.median_ns
+        );
+    }
+
+    if quick {
+        println!("\n--quick: JSON trajectory write skipped");
+        return;
+    }
+    let mut j = BenchJson::new(
+        "fp8_kernels",
+        "cargo bench --bench fp8_kernels (rust/benches/fp8_kernels.rs)",
+    );
+    j.config("dim", dim);
+    j.config("tensors", tensors);
+    j.config("k_clients", k_clients);
+    j.config("grid_points", grid);
+    j.config("pool", pool);
+    for res in [
+        &enc_scalar, &enc_b1, &enc_bn, &dec_rebuild, &dec_cached,
+        &eq5_naive, &eq5_s1, &eq5_sn,
+    ] {
+        let items =
+            if res.name.starts_with("eq5") { None } else { Some(d) };
+        j.push(res, items);
+    }
+    j.speedup("eq5_alpha_search_naive_over_suffstats_pooled", sp_eq5);
+    j.speedup("eq5_alpha_search_naive_over_suffstats_seq", sp_eq5_seq);
+    j.speedup("encode_scalar_over_batched_pooled", sp_enc);
+    j.speedup("decode_rebuild_over_lut_cached", sp_dec);
+    j.speedup("encode_decode_combined", sp_wire);
+    if let Some((s1, sn)) = &dec_large {
+        let big = (1usize << 20) + 4096;
+        j.push(s1, Some(big as f64));
+        j.push(sn, Some(big as f64));
+        j.speedup(
+            "decode_large_seq_over_pooled",
+            s1.median_ns / sn.median_ns,
+        );
+    }
+    let path = std::path::Path::new("../BENCH_fp8_kernels.json");
+    match j.write(path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -17,7 +17,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::fp8::codec::{self, Segment};
+use crate::fp8::codec::{self, DecodeLutCache, Segment};
 
 use super::comm::Uplink;
 
@@ -56,6 +56,10 @@ pub struct FedAvgStream<'s> {
     kweights: Vec<f32>,
     /// Reused decode buffer — one allocation per round, not per uplink.
     buf: Vec<f32>,
+    /// Decode-table cache shared by every uplink this stream folds in
+    /// (clients whose alphas agree — common early in training and
+    /// whenever ServerOptimize pins them — decode off the same LUT).
+    lut: DecodeLutCache,
 }
 
 impl<'s> FedAvgStream<'s> {
@@ -81,13 +85,20 @@ impl<'s> FedAvgStream<'s> {
             client_alphas: Vec::new(),
             kweights: Vec::new(),
             buf: vec![0.0f32; dim],
+            lut: DecodeLutCache::default(),
         })
     }
 
     /// Fold one uplink into the running weighted sums.
     pub fn push(&mut self, up: &Uplink) {
         let kw = up.n_k as f32 / self.m_t as f32;
-        codec::decode(&up.payload, self.segments, &mut self.buf);
+        codec::decode_pooled(
+            &up.payload,
+            self.segments,
+            &mut self.lut,
+            1,
+            &mut self.buf,
+        );
         for (acc, &v) in self.w.iter_mut().zip(&self.buf) {
             *acc += kw * v;
         }

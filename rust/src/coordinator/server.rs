@@ -32,7 +32,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::config::{ExperimentConfig, QatMode, SplitCfg};
 use crate::data::{partition, speech, vision, Dataset};
-use crate::fp8::codec::{self, WirePayload};
+use crate::fp8::codec::{self, DecodeLutCache, WirePayload};
 use crate::fp8::rng::Pcg32;
 use crate::runtime::{Engine, Manifest, ModelInfo};
 
@@ -61,9 +61,14 @@ pub struct Server<'a> {
     beta: Vec<f32>,
     comm: CommStats,
     rng_sample: Pcg32,
-    /// Reused downlink payload buffer (`encode_into` target): one
-    /// allocation for the life of the run, not one per round.
+    /// Reused downlink payload buffer (`encode_into_pooled` target):
+    /// one allocation for the life of the run, not one per round.
     down_buf: WirePayload,
+    /// Reused RNG scratch for the codec's batched rounding draws.
+    enc_scratch: Vec<f64>,
+    /// Decode-table cache for the broadcast hard-reset decode (alphas
+    /// drift slowly round-over-round, so tables mostly hit).
+    down_lut: DecodeLutCache,
     verbose: bool,
     /// Error-feedback memories (extension, cfg.error_feedback):
     /// server-side downlink residual + lazily allocated per-client
@@ -172,6 +177,8 @@ impl<'a> Server<'a> {
             comm: CommStats::default(),
             rng_sample: Pcg32::new(cfg.seed, 0x5A3F),
             down_buf: WirePayload::default(),
+            enc_scratch: Vec::new(),
+            down_lut: DecodeLutCache::default(),
             cfg,
             verbose: false,
             ef_server,
@@ -264,13 +271,15 @@ impl<'a> Server<'a> {
         } else {
             self.w.clone()
         };
-        codec::encode_into(
+        codec::encode_into_pooled(
             &down_src,
             &self.alpha,
             &self.beta,
             &m.segments,
             cfg.comm,
             &mut rng_down,
+            &mut self.enc_scratch,
+            cfg.parallelism,
             &mut self.down_buf,
         );
         for _ in &participants {
@@ -278,7 +287,13 @@ impl<'a> Server<'a> {
         }
         // hard reset: every participant starts from the decoded grid
         let mut w_start = vec![0.0f32; m.dim];
-        codec::decode(&self.down_buf, &m.segments, &mut w_start);
+        codec::decode_pooled(
+            &self.down_buf,
+            &m.segments,
+            &mut self.down_lut,
+            cfg.parallelism,
+            &mut w_start,
+        );
         if cfg.error_feedback {
             for ((e, src), dec) in self
                 .ef_server
@@ -385,6 +400,7 @@ impl<'a> Server<'a> {
                 so,
                 &mut agg,
                 &mut rng_so,
+                cfg.parallelism,
             )?;
         }
         self.w = agg.w;

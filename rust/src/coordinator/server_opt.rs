@@ -8,27 +8,59 @@
 //!      Q_rand) are computed by the AOT `server_opt_det` artifact; the
 //!      stochastic-rounding draw `u` comes from the coordinator RNG.
 //!   2. Eq. (5) — per-tensor grid search for alpha over `grid_points`
-//!      values spanning [min_k alpha_k, max_k alpha_k], scoring each
-//!      candidate with the wire codec (no HLO dispatch needed). Common
-//!      random numbers across candidates keep the comparison tight.
+//!      values spanning [min_k alpha_k, max_k alpha_k]. Common random
+//!      numbers across candidates keep the comparison tight.
+//!
+//! ## Eq. (5) hot path
+//!
+//! Scoring a candidate used to rescan all K client vectors
+//! (O(G·K·d) per segment for a G-point grid). The search now
+//! precomputes per-element sufficient statistics once per segment
+//! ([`codec::SegmentStats`]: `W = Σ_k kw_k`, `S_i = Σ_k kw_k·c_{k,i}`,
+//! `T_i = Σ_k kw_k·c²_{k,i}`), so each candidate costs
+//! `Σ_i q_i²·W − 2·q_i·S_i + T_i` — O(d·(K+G)) total — and fans the
+//! candidate scoring across up to `parallelism` scoped threads.
+//! Candidate order, RNG draw order and the strict-improvement
+//! tie-break are preserved, so the search is deterministic for every
+//! thread count.
 
 use anyhow::{ensure, Result};
 
 use crate::config::ServerOptCfg;
-use crate::fp8::codec;
+use crate::fp8::codec::{scatter_zip, Segment, SegmentStats};
 use crate::fp8::rng::Pcg32;
 use crate::runtime::{engine, Engine, In, ModelInfo};
 
 use super::aggregate::Aggregate;
 
+/// One segment's prepared grid search: candidate range, common random
+/// numbers, and the client sufficient statistics.
+struct SegSearch<'m> {
+    seg: &'m Segment,
+    ai: usize,
+    lo: f32,
+    hi: f32,
+    us: Vec<f64>,
+    stats: SegmentStats,
+}
+
+/// Total candidate-scoring work (elements × candidates) below which
+/// the search stays on the calling thread. Scoring costs ~15 ns per
+/// element-candidate, so the threshold (~4 ms of work) comfortably
+/// amortizes thread spawn.
+const PAR_MIN_WORK: usize = 1 << 18;
+
 /// Run ServerOptimize in place on the aggregate. Returns the final
-/// Eq. (4) objective value (for logging / tests).
+/// Eq. (4) objective value (for logging / tests). `parallelism` is the
+/// worker budget for the Eq. (5) candidate scoring; results are
+/// identical for every value.
 pub fn optimize(
     eng: &Engine,
     model: &ModelInfo,
     cfg: &ServerOptCfg,
     agg: &mut Aggregate,
     rng: &mut Pcg32,
+    parallelism: usize,
 ) -> Result<f32> {
     let p = model.server_p;
     ensure!(
@@ -74,8 +106,12 @@ pub fn optimize(
     }
 
     // ---- Eq. (5): per-tensor alpha grid search ----------------------
+    // Phase 1 (sequential): candidate ranges, common random numbers
+    // (drawn in segment order — the draw order is part of the
+    // determinism contract) and the per-segment sufficient statistics.
     let client_refs: Vec<&[f32]> =
         agg.client_ws.iter().map(|v| v.as_slice()).collect();
+    let mut searches: Vec<SegSearch<'_>> = Vec::new();
     for seg in model.segments.iter().filter(|s| s.quantized) {
         let ai = seg.alpha_idx.unwrap();
         // candidate range from the clients' transmitted alphas
@@ -90,30 +126,60 @@ pub fn optimize(
         // common random numbers for all candidates of this segment
         let us: Vec<f64> =
             (0..seg.size).map(|_| rng.uniform_f64()).collect();
-        let mut best = (agg.alpha[ai], f64::MAX);
-        let n = cfg.grid_points.max(1);
+        let stats =
+            SegmentStats::build(seg, &client_refs, &agg.kweights);
+        searches.push(SegSearch { seg, ai, lo, hi, us, stats });
+    }
+
+    // Phase 2: score every (segment, candidate) pair — O(d) each via
+    // the sufficient statistics — optionally across the pool.
+    let n = cfg.grid_points.max(1);
+    let mut tasks: Vec<(usize, f32)> = Vec::new();
+    for (si, sr) in searches.iter().enumerate() {
         for gi in 0..n {
             let cand = if n == 1 {
-                lo
+                sr.lo
             } else {
-                lo + (hi - lo) * gi as f32 / (n - 1) as f32
+                sr.lo + (sr.hi - sr.lo) * gi as f32 / (n - 1) as f32
             };
             if cand <= 0.0 {
                 continue;
             }
-            let mse = codec::segment_quant_mse(
-                &agg.w,
-                seg,
-                cand,
-                &client_refs,
-                &agg.kweights,
-                &us,
-            );
-            if mse < best.1 {
-                best = (cand, mse);
-            }
+            tasks.push((si, cand));
         }
-        agg.alpha[ai] = best.0;
+    }
+    let mut mses = vec![0.0f64; tasks.len()];
+    let work: usize = tasks
+        .iter()
+        .map(|&(si, _)| searches[si].seg.size)
+        .sum();
+    let workers = parallelism.min(tasks.len()).max(1);
+    let score = |&(si, cand): &(usize, f32)| -> f64 {
+        let sr = &searches[si];
+        sr.stats.mse(&agg.w, sr.seg, cand, &sr.us)
+    };
+    if workers == 1 || work < PAR_MIN_WORK {
+        for (slot, task) in mses.iter_mut().zip(tasks.iter()) {
+            *slot = score(task);
+        }
+    } else {
+        scatter_zip(&tasks, &mut mses, workers, score);
+    }
+
+    // Phase 3 (sequential reduce, task order = candidate order):
+    // strict improvement keeps the earliest minimizer, matching the
+    // sequential search exactly.
+    let mut best: Vec<(f32, f64)> = searches
+        .iter()
+        .map(|sr| (agg.alpha[sr.ai], f64::MAX))
+        .collect();
+    for (&(si, cand), &m) in tasks.iter().zip(mses.iter()) {
+        if m < best[si].1 {
+            best[si] = (cand, m);
+        }
+    }
+    for (sr, &(cand, _)) in searches.iter().zip(best.iter()) {
+        agg.alpha[sr.ai] = cand;
     }
     Ok(mse)
 }

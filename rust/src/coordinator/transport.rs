@@ -88,12 +88,18 @@ pub struct ClientOutcome {
 }
 
 /// Per-worker scratch reused across every message that worker
-/// processes (EF fold-in source and decode buffers) — allocated once
-/// per worker, not once per message.
+/// processes — allocated once per worker, not once per message: the
+/// EF fold-in source, the decode buffer, the batched stochastic-
+/// rounding draw buffer ([`Pcg32::fill_uniform_f64`] target), and the
+/// worker's decode-table cache.
 #[derive(Default)]
 pub struct WorkBuffers {
     pub up_src: Vec<f32>,
     pub dec: Vec<f32>,
+    /// RNG scratch for the codec's batched rounding draws.
+    pub us: Vec<f64>,
+    /// Per-worker decode-LUT cache (codes → f32 tables per alpha).
+    pub lut: codec::DecodeLutCache,
 }
 
 /// Where a client's local round executes. Implementations must be
@@ -140,7 +146,7 @@ pub fn finish_uplink(
         job.client as u64,
         streams::UPLINK,
     );
-    let WorkBuffers { up_src, dec } = buffers;
+    let WorkBuffers { up_src, dec, us, lut } = buffers;
     let src: &[f32] = match &job.ef {
         Some(e) => {
             up_src.clear();
@@ -151,18 +157,22 @@ pub fn finish_uplink(
         }
         None => &upd.w,
     };
+    // pool = 1: each client message already runs on its own cohort
+    // worker; nesting a second fan-out here would oversubscribe
     let mut payload = WirePayload::default();
-    codec::encode_into(
+    codec::encode_into_pooled(
         src,
         &upd.alpha,
         &upd.beta,
         job.segments,
         job.comm,
         &mut rng_q,
+        us,
+        1,
         &mut payload,
     );
     let ef = job.ef.map(|mut e| {
-        codec::decode_into(&payload, job.segments, dec);
+        codec::decode_into_pooled(&payload, job.segments, lut, 1, dec);
         for ((e, s), d) in e.iter_mut().zip(src).zip(dec.iter()) {
             *e = s - d;
         }

@@ -8,11 +8,59 @@
 //! parameters — <2% of params, paper §4) travel as raw little-endian
 //! f32.
 //!
-//! Decode is a 256-entry LUT per tensor (one `Fp8Params::decode_table`
-//! per alpha), making the downlink/uplink decode path branch-free.
+//! ## Hot-path structure (see ARCHITECTURE.md §Kernel hot paths)
+//!
+//! * **Batched stochastic rounding.** A stochastic message consumes
+//!   exactly one `u64` from the caller's RNG (the *wire key*); the
+//!   per-element rounding draws come from counter-derived streams
+//!   `Pcg32::derive(key, segment, block, WIRE_DOMAIN)`, one stream per
+//!   [`RNG_BLOCK`]-element block, filled in bulk into a reusable
+//!   scratch buffer ([`Pcg32::fill_uniform_f64`]). Because each block's
+//!   draws are a pure function of `(key, segment, block)`, any
+//!   partitioning of blocks across worker threads produces the same
+//!   bytes — the codec twin of the parallel-round determinism contract.
+//! * **Cached decode LUTs.** Decode is a 256-entry LUT per (tensor,
+//!   alpha); [`DecodeLutCache`] memoizes tables across segments,
+//!   messages and rounds instead of rebuilding them (256 `exp2` calls)
+//!   inside every `decode`.
+//! * **Pool fan-out.** `encode_into_pooled` / `decode_pooled` /
+//!   `quantize_vec_pooled` spread block tasks across up to `pool`
+//!   scoped threads for large tensors; results are bit-identical for
+//!   every pool size.
+//! * **Sufficient statistics for Eq. (5).** [`SegmentStats`] turns the
+//!   ServerOptimize alpha grid search from O(G·K·d) into O(d·(K+G));
+//!   [`segment_quant_mse`] is kept as the naive reference oracle.
+
+use std::sync::Arc;
+use std::thread;
 
 use super::format::Fp8Params;
 use super::rng::Pcg32;
+
+/// Elements per counter-derived rounding stream. Fixed: it is part of
+/// the wire determinism contract (changing it changes every stochastic
+/// payload), and it bounds the RNG scratch buffer.
+pub const RNG_BLOCK: usize = 4096;
+
+/// Stream-domain tag for wire rounding draws (distinct from the
+/// coordinator's round/client domains in `coordinator::transport`).
+const WIRE_DOMAIN: u64 = 0xF8B1_0C5E;
+
+/// Below this many quantized elements a message is encoded (or
+/// quantized in place) on the calling thread even when a pool is
+/// available. Encode costs ~15-20 ns/element (f64 div dominates), so
+/// the threshold sits where the work comfortably exceeds thread
+/// spawn cost.
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Decode is ~1 ns/element (pure LUT loads), so fan-out only pays for
+/// much larger payloads than encode — below this the pool is ignored
+/// (measured: spawning for a 100k-element decode is a net loss).
+const DEC_PAR_MIN_ELEMS: usize = 1 << 20;
+
+/// Elements per decode task (decode is table lookups only, so tasks
+/// can be coarser than [`RNG_BLOCK`]).
+const DEC_BLOCK: usize = 1 << 16;
 
 /// One named parameter segment of the flat weight vector (mirrors the
 /// manifest's segment table produced by `python/compile/aot.py`).
@@ -23,6 +71,13 @@ pub struct Segment {
     pub size: usize,
     pub quantized: bool,
     pub alpha_idx: Option<usize>,
+}
+
+impl Segment {
+    #[inline]
+    fn wire_quantized(&self) -> bool {
+        self.quantized && self.alpha_idx.is_some()
+    }
 }
 
 /// Rounding mode for communication quantization.
@@ -58,11 +113,61 @@ impl WirePayload {
     }
 }
 
+/// Small MRU cache of 256-entry decode tables keyed by alpha bits.
+///
+/// One table per (tensor, alpha) is enough for a whole round: the
+/// downlink broadcast, every client's hard-reset decode and the
+/// error-feedback decodes all share the round's alphas, and uplink
+/// alphas repeat across rounds as training converges. Tables are
+/// `Arc`-shared so parallel decode workers can hold them without
+/// copies. Capacity-bounded (MRU eviction), so a long run with
+/// drifting alphas cannot grow it without bound.
+#[derive(Default)]
+pub struct DecodeLutCache {
+    /// MRU-ordered (alpha bits, table) pairs; front = most recent.
+    entries: Vec<(u32, Arc<[f32; 256]>)>,
+}
+
+/// Cache capacity: comfortably above alpha_dim for every model variant
+/// (tens of tensors) while keeping the linear MRU scan trivial.
+const LUT_CACHE_CAP: usize = 64;
+
+impl DecodeLutCache {
+    /// Table for `alpha`, building (and memoizing) it on first use.
+    pub fn get(&mut self, alpha: f32) -> Arc<[f32; 256]> {
+        let key = alpha.to_bits();
+        if let Some(i) =
+            self.entries.iter().position(|(k, _)| *k == key)
+        {
+            if i != 0 {
+                let hit = self.entries.remove(i);
+                self.entries.insert(0, hit);
+            }
+            return self.entries[0].1.clone();
+        }
+        let table = Arc::new(Fp8Params::new(alpha).decode_table());
+        self.entries.insert(0, (key, table.clone()));
+        self.entries.truncate(LUT_CACHE_CAP);
+        table
+    }
+
+    /// Number of cached tables (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Encode a flat weight vector into a wire payload.
 ///
-/// `u_draw` supplies the stochastic-rounding randomness; deterministic
-/// mode uses u = 0.5 everywhere. With `Rounding::None` the full vector
-/// is shipped as f32 (codes empty).
+/// `rng` supplies the stochastic-rounding *wire key* (exactly one u64
+/// is consumed per stochastic message — see the module docs for the
+/// per-block stream derivation); deterministic mode uses u = 0.5
+/// everywhere and consumes nothing. With `Rounding::None` the full
+/// vector is shipped as f32 (codes empty).
 pub fn encode(
     w: &[f32],
     alphas: &[f32],
@@ -78,13 +183,223 @@ pub fn encode(
 
 /// Buffer-reusing variant of [`encode`]: packs into `out`, recycling
 /// its allocations. Bit-identical to the allocating path for the same
-/// RNG stream (property-tested). Reuse happens wherever the caller
-/// retains the payload: the server's downlink buffer is encoded into
-/// once per round for the life of a run. Uplink payloads still
-/// allocate per message — they are shipped (moved into the `Uplink`)
-/// rather than retained; the uplink path instead reuses the
-/// per-worker EF/decode scratch in `WorkBuffers`.
+/// RNG stream (property-tested). Hot callers that also want to recycle
+/// the RNG scratch buffer and fan out across a pool use
+/// [`encode_into_pooled`] directly.
 pub fn encode_into(
+    w: &[f32],
+    alphas: &[f32],
+    betas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+    out: &mut WirePayload,
+) {
+    let mut scratch = Vec::new();
+    encode_into_pooled(
+        w, alphas, betas, segments, mode, rng, &mut scratch, 1, out,
+    );
+}
+
+/// One block of one quantized segment: the unit of encode work and of
+/// RNG stream derivation.
+struct EncodeBlock<'a> {
+    params: Fp8Params,
+    src: &'a [f32],
+    dst: &'a mut [u8],
+    /// (segment index, block index) — the stream coordinates.
+    si: u64,
+    block: u64,
+}
+
+#[inline]
+fn encode_block(
+    t: &mut EncodeBlock<'_>,
+    mode: Rounding,
+    key: u64,
+    scratch: &mut [f64],
+) {
+    match mode {
+        Rounding::Deterministic => {
+            for (d, &x) in t.dst.iter_mut().zip(t.src.iter()) {
+                *d = t.params.encode(x, 0.5);
+            }
+        }
+        Rounding::Stochastic => {
+            let us = &mut scratch[..t.src.len()];
+            let mut srng = Pcg32::derive(key, t.si, t.block, WIRE_DOMAIN);
+            srng.fill_uniform_f64(us);
+            for ((d, &x), &u) in
+                t.dst.iter_mut().zip(t.src.iter()).zip(us.iter())
+            {
+                *d = t.params.encode(x, u);
+            }
+        }
+        Rounding::None => unreachable!(),
+    }
+}
+
+/// The core encoder: batched rounding draws, chunked inner loops, and
+/// optional pool fan-out.
+///
+/// `scratch` is the reusable rounding-draw buffer (lives in the
+/// caller's `WorkBuffers` on the uplink path, in the `Server` on the
+/// downlink path); it is grown to at most [`RNG_BLOCK`] f64s. `pool`
+/// is the worker-thread budget for this message; output bytes are
+/// identical for every value (per-block counter-derived streams), so
+/// it is purely a wall-clock knob — enforced by the scalar-vs-batched
+/// property suite at pool 1 and 4.
+pub fn encode_into_pooled(
+    w: &[f32],
+    alphas: &[f32],
+    betas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+    scratch: &mut Vec<f64>,
+    pool: usize,
+    out: &mut WirePayload,
+) {
+    out.codes.clear();
+    out.raw.clear();
+    out.alphas.clear();
+    out.alphas.extend_from_slice(alphas);
+    out.betas.clear();
+    out.betas.extend_from_slice(betas);
+    if mode == Rounding::None {
+        out.raw.extend_from_slice(w);
+        return;
+    }
+    // one wire key per stochastic message; every rounding draw below
+    // is a pure function of (key, segment, block)
+    let key = match mode {
+        Rounding::Stochastic => rng.next_u64(),
+        _ => 0,
+    };
+    let total_q: usize = segments
+        .iter()
+        .filter(|s| s.wire_quantized())
+        .map(|s| s.size)
+        .sum();
+    out.codes.resize(total_q, 0);
+    // raw segments copy inline; quantized segments become block tasks
+    // over disjoint sub-slices of the codes buffer
+    let mut tasks: Vec<EncodeBlock<'_>> = Vec::new();
+    let mut codes: &mut [u8] = out.codes.as_mut_slice();
+    for (si, seg) in segments.iter().enumerate() {
+        let vals = &w[seg.offset..seg.offset + seg.size];
+        if seg.wire_quantized() {
+            let params =
+                Fp8Params::new(alphas[seg.alpha_idx.unwrap()]);
+            let (dst_seg, rest) =
+                std::mem::take(&mut codes).split_at_mut(seg.size);
+            codes = rest;
+            for (block, (src, dst)) in vals
+                .chunks(RNG_BLOCK)
+                .zip(dst_seg.chunks_mut(RNG_BLOCK))
+                .enumerate()
+            {
+                tasks.push(EncodeBlock {
+                    params,
+                    src,
+                    dst,
+                    si: si as u64,
+                    block: block as u64,
+                });
+            }
+        } else {
+            out.raw.extend_from_slice(vals);
+        }
+    }
+    if mode == Rounding::Stochastic && scratch.len() < RNG_BLOCK {
+        scratch.resize(RNG_BLOCK, 0.0);
+    }
+    let workers = pool.min(tasks.len()).max(1);
+    if workers == 1 || total_q < PAR_MIN_ELEMS {
+        for t in tasks.iter_mut() {
+            encode_block(t, mode, key, scratch);
+        }
+        return;
+    }
+    scatter_tasks(
+        &mut tasks,
+        workers,
+        || worker_scratch(mode),
+        |t, local| encode_block(t, mode, key, local),
+    );
+}
+
+/// Per-worker RNG scratch: only stochastic rounding reads it, so the
+/// deterministic arms skip the 32 KB allocation.
+fn worker_scratch(mode: Rounding) -> Vec<f64> {
+    if mode == Rounding::Stochastic {
+        vec![0.0f64; RNG_BLOCK]
+    } else {
+        Vec::new()
+    }
+}
+
+/// Shared fan-out skeleton for the pooled kernel paths: split `tasks`
+/// into contiguous chunks, one scoped worker per chunk, each with its
+/// own scratch from `scratch_init`. Chunking is static (block counts
+/// far exceed worker counts) and the task partition never affects
+/// output bytes — every task is independent.
+fn scatter_tasks<T: Send>(
+    tasks: &mut [T],
+    workers: usize,
+    scratch_init: impl Fn() -> Vec<f64> + Sync,
+    run: impl Fn(&mut T, &mut Vec<f64>) + Sync,
+) {
+    let per = tasks.len().div_ceil(workers);
+    let run = &run;
+    let scratch_init = &scratch_init;
+    thread::scope(|s| {
+        for chunk in tasks.chunks_mut(per) {
+            s.spawn(move || {
+                let mut local = scratch_init();
+                for t in chunk.iter_mut() {
+                    run(t, &mut local);
+                }
+            });
+        }
+    });
+}
+
+/// Map-into-slots twin of the fan-out skeleton: score each read-only
+/// task into its result slot, chunked across `workers` scoped
+/// threads. Slot order equals task order, so reductions downstream
+/// are deterministic for every worker count. Used by the
+/// ServerOptimize Eq. (5) candidate search and the kernel bench.
+pub fn scatter_zip<T: Sync, R: Send>(
+    tasks: &[T],
+    results: &mut [R],
+    workers: usize,
+    run: impl Fn(&T) -> R + Sync,
+) {
+    if tasks.is_empty() {
+        return;
+    }
+    let per = tasks.len().div_ceil(workers.max(1));
+    let run = &run;
+    thread::scope(|s| {
+        for (tchunk, rchunk) in
+            tasks.chunks(per).zip(results.chunks_mut(per))
+        {
+            s.spawn(move || {
+                for (t, slot) in tchunk.iter().zip(rchunk.iter_mut()) {
+                    *slot = run(t);
+                }
+            });
+        }
+    });
+}
+
+/// Reference scalar encoder: same wire contract as
+/// [`encode_into_pooled`] (per-block counter-derived streams) but with
+/// per-element RNG calls, push-based output and no batching or pool.
+/// This is the oracle the batched path is property-tested against and
+/// the "before" arm of `benches/fp8_kernels.rs`.
+pub fn encode_into_scalar(
     w: &[f32],
     alphas: &[f32],
     betas: &[f32],
@@ -103,27 +418,40 @@ pub fn encode_into(
         out.raw.extend_from_slice(w);
         return;
     }
-    out.codes.reserve(w.len());
-    for seg in segments {
+    let key = match mode {
+        Rounding::Stochastic => rng.next_u64(),
+        _ => 0,
+    };
+    for (si, seg) in segments.iter().enumerate() {
         let vals = &w[seg.offset..seg.offset + seg.size];
-        match seg.alpha_idx {
-            Some(ai) if seg.quantized => {
-                let p = Fp8Params::new(alphas[ai]);
-                match mode {
-                    Rounding::Deterministic => {
-                        for &x in vals {
-                            out.codes.push(p.encode(x, 0.5));
-                        }
+        if seg.wire_quantized() {
+            let p = Fp8Params::new(alphas[seg.alpha_idx.unwrap()]);
+            match mode {
+                Rounding::Deterministic => {
+                    for &x in vals {
+                        out.codes.push(p.encode(x, 0.5));
                     }
-                    Rounding::Stochastic => {
-                        for &x in vals {
-                            out.codes.push(p.encode(x, rng.uniform_f64()));
-                        }
-                    }
-                    Rounding::None => unreachable!(),
                 }
+                Rounding::Stochastic => {
+                    for (block, blk) in
+                        vals.chunks(RNG_BLOCK).enumerate()
+                    {
+                        let mut srng = Pcg32::derive(
+                            key,
+                            si as u64,
+                            block as u64,
+                            WIRE_DOMAIN,
+                        );
+                        for &x in blk {
+                            out.codes
+                                .push(p.encode(x, srng.uniform_f64()));
+                        }
+                    }
+                }
+                Rounding::None => unreachable!(),
             }
-            _ => out.raw.extend_from_slice(vals),
+        } else {
+            out.raw.extend_from_slice(vals);
         }
     }
 }
@@ -137,6 +465,18 @@ pub fn decode_into(
     segments: &[Segment],
     out: &mut Vec<f32>,
 ) {
+    let mut cache = DecodeLutCache::default();
+    decode_into_pooled(payload, segments, &mut cache, 1, out);
+}
+
+/// [`decode_into`] with a caller-held LUT cache and pool fan-out.
+pub fn decode_into_pooled(
+    payload: &WirePayload,
+    segments: &[Segment],
+    cache: &mut DecodeLutCache,
+    pool: usize,
+    out: &mut Vec<f32>,
+) {
     let dim = segments
         .iter()
         .map(|s| s.offset + s.size)
@@ -144,40 +484,133 @@ pub fn decode_into(
         .unwrap_or(payload.raw.len());
     out.clear();
     out.resize(dim, 0.0);
-    decode(payload, segments, out);
+    decode_pooled(payload, segments, cache, pool, out);
 }
 
 /// Decode a wire payload back into a flat weight vector.
 pub fn decode(payload: &WirePayload, segments: &[Segment], out: &mut [f32]) {
+    let mut cache = DecodeLutCache::default();
+    decode_pooled(payload, segments, &mut cache, 1, out);
+}
+
+/// True when segments are offset-ascending and non-overlapping — the
+/// layout every manifest produces, and the precondition for splitting
+/// `out` into disjoint per-segment slices for the parallel path.
+fn ascending_disjoint(segments: &[Segment]) -> bool {
+    segments
+        .windows(2)
+        .all(|w| w[0].offset + w[0].size <= w[1].offset)
+}
+
+/// One block of decode work: pure table lookups on disjoint slices.
+struct DecodeBlock<'a> {
+    table: Arc<[f32; 256]>,
+    src: &'a [u8],
+    dst: &'a mut [f32],
+}
+
+/// The core decoder: LUT-cached, branch-free inner loops, optional
+/// pool fan-out for large payloads. Bit-identical for every `pool`.
+pub fn decode_pooled(
+    payload: &WirePayload,
+    segments: &[Segment],
+    cache: &mut DecodeLutCache,
+    pool: usize,
+    out: &mut [f32],
+) {
     if payload.codes.is_empty() && !payload.raw.is_empty() {
         // FP32 passthrough
         out.copy_from_slice(&payload.raw);
+        return;
+    }
+    let total_q: usize = segments
+        .iter()
+        .filter(|s| s.wire_quantized())
+        .map(|s| s.size)
+        .sum();
+    if pool > 1
+        && total_q >= DEC_PAR_MIN_ELEMS
+        && ascending_disjoint(segments)
+    {
+        decode_parallel(payload, segments, cache, pool, out);
         return;
     }
     let mut ci = 0usize;
     let mut ri = 0usize;
     for seg in segments {
         let dst = &mut out[seg.offset..seg.offset + seg.size];
-        match seg.alpha_idx {
-            Some(ai) if seg.quantized => {
-                let table =
-                    Fp8Params::new(payload.alphas[ai]).decode_table();
-                for d in dst.iter_mut() {
-                    *d = table[payload.codes[ci] as usize];
-                    ci += 1;
-                }
+        if seg.wire_quantized() {
+            let table = cache.get(payload.alphas[seg.alpha_idx.unwrap()]);
+            let codes = &payload.codes[ci..ci + seg.size];
+            ci += seg.size;
+            for (d, &c) in dst.iter_mut().zip(codes.iter()) {
+                *d = table[c as usize];
             }
-            _ => {
-                dst.copy_from_slice(&payload.raw[ri..ri + seg.size]);
-                ri += seg.size;
-            }
+        } else {
+            dst.copy_from_slice(&payload.raw[ri..ri + seg.size]);
+            ri += seg.size;
         }
     }
 }
 
+fn decode_parallel(
+    payload: &WirePayload,
+    segments: &[Segment],
+    cache: &mut DecodeLutCache,
+    pool: usize,
+    out: &mut [f32],
+) {
+    let mut tasks: Vec<DecodeBlock<'_>> = Vec::new();
+    let mut rest: &mut [f32] = out;
+    let mut consumed = 0usize;
+    let mut ci = 0usize;
+    let mut ri = 0usize;
+    for seg in segments {
+        let skip = seg.offset - consumed;
+        let (_gap, r) = std::mem::take(&mut rest).split_at_mut(skip);
+        let (dst_seg, r) = r.split_at_mut(seg.size);
+        rest = r;
+        consumed = seg.offset + seg.size;
+        if seg.wire_quantized() {
+            let table = cache.get(payload.alphas[seg.alpha_idx.unwrap()]);
+            let codes = &payload.codes[ci..ci + seg.size];
+            ci += seg.size;
+            for (src, dst) in codes
+                .chunks(DEC_BLOCK)
+                .zip(dst_seg.chunks_mut(DEC_BLOCK))
+            {
+                tasks.push(DecodeBlock {
+                    table: table.clone(),
+                    src,
+                    dst,
+                });
+            }
+        } else {
+            // raw copies are memcpy-speed; keep them on this thread
+            dst_seg.copy_from_slice(&payload.raw[ri..ri + seg.size]);
+            ri += seg.size;
+        }
+    }
+    let workers = pool.min(tasks.len()).max(1);
+    if workers == 1 {
+        for t in tasks.iter_mut() {
+            for (d, &c) in t.dst.iter_mut().zip(t.src.iter()) {
+                *d = t.table[c as usize];
+            }
+        }
+        return;
+    }
+    scatter_tasks(&mut tasks, workers, Vec::new, |t, _| {
+        for (d, &c) in t.dst.iter_mut().zip(t.src.iter()) {
+            *d = t.table[c as usize];
+        }
+    });
+}
+
 /// Quantize a full weight vector in place on the FP8 grid *without*
-/// packing (ServerOptimize Eq. (5) inner loop: grid-search over alpha
-/// candidates only needs the dequantized values).
+/// packing (grid-membership checks, ablation tooling). Same wire RNG
+/// contract as [`encode`], so `decode(encode(w)) == quantize_vec(w)`
+/// for identically-seeded RNGs.
 pub fn quantize_vec(
     w: &[f32],
     alphas: &[f32],
@@ -186,34 +619,143 @@ pub fn quantize_vec(
     rng: &mut Pcg32,
     out: &mut [f32],
 ) {
+    let mut scratch = Vec::new();
+    quantize_vec_pooled(w, alphas, segments, mode, rng, &mut scratch, 1, out);
+}
+
+/// One block of in-place quantization work.
+struct QuantBlock<'a> {
+    params: Fp8Params,
+    dst: &'a mut [f32],
+    si: u64,
+    block: u64,
+}
+
+#[inline]
+fn quantize_block(
+    t: &mut QuantBlock<'_>,
+    mode: Rounding,
+    key: u64,
+    scratch: &mut [f64],
+) {
+    match mode {
+        Rounding::Deterministic => {
+            for d in t.dst.iter_mut() {
+                *d = t.params.quantize(*d, 0.5);
+            }
+        }
+        Rounding::Stochastic => {
+            let us = &mut scratch[..t.dst.len()];
+            let mut srng = Pcg32::derive(key, t.si, t.block, WIRE_DOMAIN);
+            srng.fill_uniform_f64(us);
+            for (d, &u) in t.dst.iter_mut().zip(us.iter()) {
+                *d = t.params.quantize(*d, u);
+            }
+        }
+        Rounding::None => unreachable!(),
+    }
+}
+
+/// [`quantize_vec`] with a reusable RNG scratch buffer and pool
+/// fan-out — the batched/pooled twin of [`encode_into_pooled`].
+pub fn quantize_vec_pooled(
+    w: &[f32],
+    alphas: &[f32],
+    segments: &[Segment],
+    mode: Rounding,
+    rng: &mut Pcg32,
+    scratch: &mut Vec<f64>,
+    pool: usize,
+    out: &mut [f32],
+) {
     out.copy_from_slice(w);
     if mode == Rounding::None {
         return;
     }
-    for seg in segments {
-        if let (true, Some(ai)) = (seg.quantized, seg.alpha_idx) {
-            let p = Fp8Params::new(alphas[ai]);
-            let dst = &mut out[seg.offset..seg.offset + seg.size];
-            match mode {
-                Rounding::Deterministic => {
-                    for d in dst.iter_mut() {
-                        *d = p.quantize(*d, 0.5);
-                    }
-                }
-                Rounding::Stochastic => {
-                    for d in dst.iter_mut() {
-                        *d = p.quantize(*d, rng.uniform_f64());
-                    }
-                }
-                Rounding::None => unreachable!(),
+    let key = match mode {
+        Rounding::Stochastic => rng.next_u64(),
+        _ => 0,
+    };
+    let mut tasks: Vec<QuantBlock<'_>> = Vec::new();
+    let mut total_q = 0usize;
+    // split `out` into disjoint per-segment slices when the layout
+    // allows; otherwise quantize sequentially by direct indexing
+    if ascending_disjoint(segments) {
+        let mut rest: &mut [f32] = out;
+        let mut consumed = 0usize;
+        for (si, seg) in segments.iter().enumerate() {
+            let skip = seg.offset - consumed;
+            let (_gap, r) = std::mem::take(&mut rest).split_at_mut(skip);
+            let (dst_seg, r) = r.split_at_mut(seg.size);
+            rest = r;
+            consumed = seg.offset + seg.size;
+            if !seg.wire_quantized() {
+                continue;
+            }
+            total_q += seg.size;
+            let params = Fp8Params::new(alphas[seg.alpha_idx.unwrap()]);
+            for (block, dst) in
+                dst_seg.chunks_mut(RNG_BLOCK).enumerate()
+            {
+                tasks.push(QuantBlock {
+                    params,
+                    dst,
+                    si: si as u64,
+                    block: block as u64,
+                });
             }
         }
+    } else {
+        if mode == Rounding::Stochastic && scratch.len() < RNG_BLOCK {
+            scratch.resize(RNG_BLOCK, 0.0);
+        }
+        for (si, seg) in segments.iter().enumerate() {
+            if !seg.wire_quantized() {
+                continue;
+            }
+            let params = Fp8Params::new(alphas[seg.alpha_idx.unwrap()]);
+            let dst_seg = &mut out[seg.offset..seg.offset + seg.size];
+            for (block, dst) in
+                dst_seg.chunks_mut(RNG_BLOCK).enumerate()
+            {
+                let mut t = QuantBlock {
+                    params,
+                    dst,
+                    si: si as u64,
+                    block: block as u64,
+                };
+                quantize_block(&mut t, mode, key, scratch);
+            }
+        }
+        return;
     }
+    if mode == Rounding::Stochastic && scratch.len() < RNG_BLOCK {
+        scratch.resize(RNG_BLOCK, 0.0);
+    }
+    let workers = pool.min(tasks.len()).max(1);
+    if workers == 1 || total_q < PAR_MIN_ELEMS {
+        for t in tasks.iter_mut() {
+            quantize_block(t, mode, key, scratch);
+        }
+        return;
+    }
+    scatter_tasks(
+        &mut tasks,
+        workers,
+        || worker_scratch(mode),
+        |t, local| quantize_block(t, mode, key, local),
+    );
 }
 
 /// Weighted MSE between Q(w; alpha) and a set of client vectors —
 /// the ServerOptimize Eq. (5) objective, evaluated for one alpha
 /// candidate on one segment.
+///
+/// This is the naive O(K·d)-per-candidate **reference** implementation;
+/// it is the oracle for the [`SegmentStats`] property suite and the
+/// "before" arm of `benches/fp8_kernels.rs`. The hot path
+/// (`coordinator::server_opt`) uses [`SegmentStats`], which amortizes
+/// the client scan across the whole candidate grid.
 pub fn segment_quant_mse(
     w: &[f32],
     seg: &Segment,
@@ -233,6 +775,91 @@ pub fn segment_quant_mse(
         }
     }
     total
+}
+
+/// Per-element sufficient statistics of the Eq. (5) objective over one
+/// segment.
+///
+/// With `W = Σ_k kw_k`, `S_i = Σ_k kw_k·c_{k,i}` and
+/// `T_i = Σ_k kw_k·c_{k,i}²` precomputed once per segment (O(K·d)),
+/// each alpha candidate costs `Σ_i q_i²·W − 2·q_i·S_i + T_i` — O(d)
+/// instead of O(K·d) — so a G-point grid search drops from O(G·K·d)
+/// to O(d·(K+G)). Equal to [`segment_quant_mse`] up to f64 summation
+/// order (property-tested to tolerance).
+pub struct SegmentStats {
+    /// W — total FedAvg weight of the cohort.
+    pub wsum: f64,
+    s: Vec<f64>,
+    t: Vec<f64>,
+}
+
+impl SegmentStats {
+    /// Scan the K client vectors once for this segment.
+    pub fn build(
+        seg: &Segment,
+        clients: &[&[f32]],
+        kweights: &[f32],
+    ) -> SegmentStats {
+        let mut s = vec![0.0f64; seg.size];
+        let mut t = vec![0.0f64; seg.size];
+        let mut wsum = 0.0f64;
+        for (c, &kw) in clients.iter().zip(kweights) {
+            let kw = kw as f64;
+            wsum += kw;
+            let cseg = &c[seg.offset..seg.offset + seg.size];
+            for ((si, ti), &cv) in
+                s.iter_mut().zip(t.iter_mut()).zip(cseg.iter())
+            {
+                let cv = cv as f64;
+                *si += kw * cv;
+                *ti += kw * cv * cv;
+            }
+        }
+        SegmentStats { wsum, s, t }
+    }
+
+    /// Score one alpha candidate in O(d) using the precomputed stats.
+    /// `us` are the common random numbers shared by all candidates of
+    /// this segment (same contract as [`segment_quant_mse`]).
+    ///
+    /// Four independent accumulators break the serial dependency on
+    /// the f64 sum (per-element math is unchanged; the reassociated
+    /// total is covered by the property-test tolerance), and
+    /// chunks_exact keeps bounds checks out of the inner loop.
+    pub fn mse(
+        &self,
+        w: &[f32],
+        seg: &Segment,
+        alpha: f32,
+        us: &[f64],
+    ) -> f64 {
+        let p = Fp8Params::new(alpha);
+        let wseg = &w[seg.offset..seg.offset + seg.size];
+        let n = wseg.len();
+        let n4 = n - n % 4;
+        let mut acc = [0.0f64; 4];
+        for (((wc, uc), sc), tc) in wseg
+            .chunks_exact(4)
+            .zip(us.chunks_exact(4))
+            .zip(self.s.chunks_exact(4))
+            .zip(self.t.chunks_exact(4))
+        {
+            let q0 = p.quantize(wc[0], uc[0]) as f64;
+            let q1 = p.quantize(wc[1], uc[1]) as f64;
+            let q2 = p.quantize(wc[2], uc[2]) as f64;
+            let q3 = p.quantize(wc[3], uc[3]) as f64;
+            acc[0] += q0 * q0 * self.wsum - 2.0 * q0 * sc[0] + tc[0];
+            acc[1] += q1 * q1 * self.wsum - 2.0 * q1 * sc[1] + tc[1];
+            acc[2] += q2 * q2 * self.wsum - 2.0 * q2 * sc[2] + tc[2];
+            acc[3] += q3 * q3 * self.wsum - 2.0 * q3 * sc[3] + tc[3];
+        }
+        let mut tail = 0.0f64;
+        for i in n4..n {
+            let q = p.quantize(wseg[i], us[i]) as f64;
+            tail += q * q * self.wsum - 2.0 * q * self.s[i] + self.t[i];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    }
 }
 
 #[cfg(test)]
@@ -364,5 +991,131 @@ mod tests {
         let b = encode(&w, &[1.0, 1.0], &[], &segs(),
                        Rounding::Deterministic, &mut r2);
         assert_eq!(a.codes, b.codes);
+    }
+
+    #[test]
+    fn stochastic_message_consumes_one_key_draw() {
+        // the whole point of the wire-key scheme: the caller's RNG
+        // advances by exactly one u64 per stochastic message, no
+        // matter how large the tensor is
+        let w_small = test_vec(160, 12, 1.0);
+        let mut r1 = Pcg32::new(42, 0);
+        let mut r2 = Pcg32::new(42, 0);
+        let _ = encode(&w_small, &[1.0, 1.0], &[], &segs(),
+                       Rounding::Stochastic, &mut r1);
+        r2.next_u64();
+        assert_eq!(r1.next_u32(), r2.next_u32());
+    }
+
+    #[test]
+    fn scalar_reference_matches_batched_all_pools() {
+        // large enough to cross PAR_MIN_ELEMS so pool > 1 really
+        // exercises the scoped-thread fan-out (plus a ragged tail)
+        let big = 9 * RNG_BLOCK + 137;
+        let seg = vec![
+            Segment {
+                name: "big".into(),
+                offset: 0,
+                size: big,
+                quantized: true,
+                alpha_idx: Some(0),
+            },
+            Segment {
+                name: "raw".into(),
+                offset: big,
+                size: 33,
+                quantized: false,
+                alpha_idx: None,
+            },
+        ];
+        let dim = big + 33;
+        let w = test_vec(dim, 13, 2.4);
+        for mode in [Rounding::Deterministic, Rounding::Stochastic] {
+            let mut r_ref = Pcg32::new(5, 5);
+            let mut reference = WirePayload::default();
+            encode_into_scalar(&w, &[1.1], &[], &seg, mode, &mut r_ref,
+                               &mut reference);
+            for pool in [1usize, 2, 4] {
+                let mut r = Pcg32::new(5, 5);
+                let mut scratch = Vec::new();
+                let mut got = WirePayload::default();
+                encode_into_pooled(&w, &[1.1], &[], &seg, mode, &mut r,
+                                   &mut scratch, pool, &mut got);
+                assert_eq!(got.codes, reference.codes,
+                           "pool={pool} {mode:?}");
+                assert_eq!(got.raw, reference.raw);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_decode_matches_sequential() {
+        // big enough to cross DEC_PAR_MIN_ELEMS so pool > 1 really
+        // takes the decode_parallel path
+        let big = DEC_PAR_MIN_ELEMS + 999;
+        let seg = vec![
+            Segment {
+                name: "big".into(),
+                offset: 0,
+                size: big,
+                quantized: true,
+                alpha_idx: Some(0),
+            },
+            Segment {
+                name: "raw".into(),
+                offset: big,
+                size: 21,
+                quantized: false,
+                alpha_idx: None,
+            },
+        ];
+        let dim = big + 21;
+        let w = test_vec(dim, 17, 1.8);
+        let mut rng = Pcg32::new(3, 3);
+        let p = encode(&w, &[0.9], &[], &seg, Rounding::Stochastic,
+                       &mut rng);
+        let mut seq = vec![0.0f32; dim];
+        decode(&p, &seg, &mut seq);
+        for pool in [2usize, 4] {
+            let mut cache = DecodeLutCache::default();
+            let mut par = vec![0.0f32; dim];
+            decode_pooled(&p, &seg, &mut cache, pool, &mut par);
+            assert_eq!(par, seq, "pool={pool}");
+        }
+    }
+
+    #[test]
+    fn lut_cache_hits_and_evicts() {
+        let mut cache = DecodeLutCache::default();
+        let a = cache.get(1.25);
+        let b = cache.get(1.25);
+        assert!(Arc::ptr_eq(&a, &b), "same alpha must hit");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(a[0x7F], Fp8Params::new(1.25).decode(0x7F));
+        for i in 0..(LUT_CACHE_CAP + 10) {
+            cache.get(2.0 + i as f32 * 0.01);
+        }
+        assert_eq!(cache.len(), LUT_CACHE_CAP, "capacity bound");
+    }
+
+    #[test]
+    fn suffstats_match_naive_small() {
+        let seg = &segs()[0];
+        let w = test_vec(160, 23, 1.6);
+        let c1 = test_vec(160, 24, 1.6);
+        let c2 = test_vec(160, 25, 1.6);
+        let clients: Vec<&[f32]> = vec![&c1, &c2];
+        let kw = [0.6f32, 0.4];
+        let us: Vec<f64> = (0..seg.size).map(|i| i as f64 / 100.0).collect();
+        let stats = SegmentStats::build(seg, &clients, &kw);
+        for alpha in [0.4f32, 0.9, 1.7] {
+            let naive =
+                segment_quant_mse(&w, seg, alpha, &clients, &kw, &us);
+            let fast = stats.mse(&w, seg, alpha, &us);
+            assert!(
+                (naive - fast).abs() <= 1e-9 * (1.0 + naive.abs()),
+                "alpha={alpha}: naive={naive} fast={fast}"
+            );
+        }
     }
 }

@@ -91,10 +91,15 @@ impl Fp8Params {
 
     /// Quantize one value to the grid, returning the dequantized f32.
     /// `u` in [0,1): 0.5 = deterministic round-half-up, random =
-    /// unbiased stochastic rounding.
+    /// unbiased stochastic rounding. NaN maps to 0 (matching
+    /// [`Fp8Params::encode`], so wire and direct paths stay in
+    /// lockstep on every input); infinities clip to ±alpha.
     #[inline]
     pub fn quantize(&self, x: f32, u: f64) -> f32 {
         if x == 0.0 {
+            return 0.0;
+        }
+        if x.is_nan() {
             return 0.0;
         }
         let x64 = x as f64;
@@ -107,16 +112,18 @@ impl Fp8Params {
         (q.clamp(-a, a)) as f32
     }
 
-    /// Encode one value to its 8-bit code.
+    /// Encode one value to its 8-bit code. NaN encodes to 0 (there is
+    /// no NaN code on the flexible-bias grid, and ±alpha — the old
+    /// saturating behaviour — would inject the largest representable
+    /// magnitude from a poisoned input); infinities clip to ±alpha.
     #[inline]
     pub fn encode(&self, x: f32, u: f64) -> u8 {
-        if x == 0.0 || !x.is_finite() {
-            return if x.is_finite() {
-                0
-            } else {
-                // saturate infinities/NaN-free inputs defensively
-                ((x < 0.0) as u8) << 7 | 0x7F
-            };
+        if x == 0.0 || x.is_nan() {
+            return 0;
+        }
+        if !x.is_finite() {
+            // saturate infinities to the top code (decodes ±alpha)
+            return ((x < 0.0) as u8) << 7 | 0x7F;
         }
         let neg = x < 0.0;
         let absx = (x as f64).abs();
@@ -259,6 +266,30 @@ mod tests {
             let x = (rng.uniform() - 0.5) * 5.0;
             let q = p.quantize(x, 0.5);
             assert_eq!(p.quantize(q, 0.5), q, "x={x}");
+        }
+    }
+
+    #[test]
+    fn nan_encodes_to_zero_and_inf_clips() {
+        // regression: NaN used to take the non-finite branch and
+        // encode to ±0x7F (i.e. decode to ±alpha)
+        for alpha in [0.3f32, 1.0, 7.5] {
+            let p = Fp8Params::new(alpha);
+            for u in [0.0f64, 0.3, 0.5, 0.999] {
+                assert_eq!(p.encode(f32::NAN, u), 0, "alpha={alpha}");
+                assert_eq!(p.encode(-f32::NAN, u), 0, "alpha={alpha}");
+                assert_eq!(p.quantize(f32::NAN, u), 0.0);
+                assert_eq!(p.decode(p.encode(f32::NAN, u)), 0.0);
+                // infinities still saturate to ±alpha
+                assert_eq!(p.encode(f32::INFINITY, u), 0x7F);
+                assert_eq!(p.encode(f32::NEG_INFINITY, u), 0xFF);
+                assert_eq!(p.quantize(f32::INFINITY, u), alpha);
+                assert_eq!(p.quantize(f32::NEG_INFINITY, u), -alpha);
+                // wire path and direct path agree on every edge input
+                for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                    assert_eq!(p.decode(p.encode(x, u)), p.quantize(x, u));
+                }
+            }
         }
     }
 

@@ -4,6 +4,8 @@ pub mod codec;
 pub mod format;
 pub mod rng;
 
-pub use codec::{Rounding, Segment, WirePayload};
+pub use codec::{
+    DecodeLutCache, Rounding, Segment, SegmentStats, WirePayload,
+};
 pub use format::Fp8Params;
 pub use rng::{Pcg32, SplitMix64};

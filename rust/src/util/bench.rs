@@ -3,6 +3,9 @@
 //! Measures wall time with warmup + repeated timed batches, reporting
 //! median / p10 / p90 per-iteration latency and derived throughput.
 //! Used by `rust/benches/*` (registered with `harness = false`).
+//! [`BenchJson`] serializes a bench run (config, per-kernel results,
+//! derived speedups) into the repo's `BENCH_*.json` perf trajectory —
+//! the schema is documented in ARCHITECTURE.md §Kernel hot paths.
 
 use std::time::Instant;
 
@@ -86,6 +89,107 @@ pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
     r
 }
 
+/// Collects one bench binary's run into a `BENCH_*.json` document —
+/// the machine-readable perf trajectory the ROADMAP's "measurably
+/// faster" mandate is checked against.
+#[derive(Debug, Default, Clone)]
+pub struct BenchJson {
+    bench: String,
+    provenance: String,
+    config: Vec<(String, String)>,
+    /// (result, items/iter for throughput derivation — None = latency
+    /// only).
+    results: Vec<(BenchResult, Option<f64>)>,
+    speedups: Vec<(String, f64)>,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl BenchJson {
+    pub fn new(bench: &str, provenance: &str) -> BenchJson {
+        BenchJson {
+            bench: bench.to_string(),
+            provenance: provenance.to_string(),
+            ..BenchJson::default()
+        }
+    }
+
+    pub fn config(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.config.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn push(&mut self, r: &BenchResult, items_per_iter: Option<f64>) {
+        self.results.push((r.clone(), items_per_iter));
+    }
+
+    /// Record a derived before/after ratio (>1 = the "after" is faster).
+    pub fn speedup(&mut self, name: &str, ratio: f64) {
+        self.speedups.push((name.to_string(), ratio));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
+        s.push_str(&format!(
+            "  \"provenance\": \"{}\",\n",
+            esc(&self.provenance)
+        ));
+        s.push_str("  \"config\": {");
+        for (i, (k, v)) in self.config.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": \"{}\"", esc(k), esc(v)));
+        }
+        s.push_str("\n  },\n  \"results\": [");
+        for (i, (r, items)) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"iters\": {}, \
+                 \"median_ns\": {}, \"p10_ns\": {}, \"p90_ns\": {}",
+                esc(&r.name),
+                r.iters,
+                num(r.median_ns),
+                num(r.p10_ns),
+                num(r.p90_ns)
+            ));
+            if let Some(it) = items {
+                s.push_str(&format!(
+                    ", \"throughput_per_s\": {}",
+                    num(r.throughput(*it))
+                ));
+            }
+            s.push('}');
+        }
+        s.push_str("\n  ],\n  \"speedups\": {");
+        for (i, (k, v)) in self.speedups.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": {}", esc(k), num(*v)));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +208,40 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500 ns");
         assert!(fmt_ns(2_500.0).contains("µs"));
         assert!(fmt_ns(2_500_000.0).contains("ms"));
+    }
+
+    #[test]
+    fn bench_json_is_parseable() {
+        let mut j = BenchJson::new("unit", "test \"quoted\"");
+        j.config("dim", 100);
+        j.push(
+            &BenchResult {
+                name: "a/b".into(),
+                iters: 7,
+                median_ns: 1000.0,
+                p10_ns: 900.0,
+                p90_ns: 1100.0,
+            },
+            Some(100.0),
+        );
+        j.speedup("x_over_y", 5.25);
+        let parsed = crate::util::json::Json::parse(&j.to_json())
+            .expect("emitted JSON parses");
+        assert_eq!(
+            parsed.get("bench").unwrap().as_str().unwrap(),
+            "unit"
+        );
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("iters").unwrap().as_usize().unwrap(),
+            7
+        );
+        let sp = parsed.get("speedups").unwrap();
+        assert!(
+            (sp.get("x_over_y").unwrap().as_f64().unwrap() - 5.25)
+                .abs()
+                < 1e-12
+        );
     }
 }

@@ -215,6 +215,130 @@ fn prop_encode_into_decode_into_match_allocating() {
 }
 
 #[test]
+fn prop_suffstats_mse_matches_naive() {
+    // the sufficient-statistics Eq. (5) scorer (SegmentStats) must
+    // agree with the naive O(G*K*d) rescan — the #[cfg-free] reference
+    // oracle segment_quant_mse — to f64 tolerance for every segment
+    // shape, client set, weighting and alpha grid
+    forall("eq5-suffstats-vs-naive", 31, 60, |g| {
+        let size = g.usize_in(1, 300);
+        let offset = g.usize_in(0, 40);
+        let seg = Segment {
+            name: "s".into(),
+            offset,
+            size,
+            quantized: true,
+            alpha_idx: Some(0),
+        };
+        let dim = offset + size;
+        let w = g.vec_f32(dim, 1.2);
+        let n_cl = g.usize_in(1, 8);
+        let clients_data: Vec<Vec<f32>> =
+            (0..n_cl).map(|_| g.vec_f32(dim, 1.2)).collect();
+        let clients: Vec<&[f32]> =
+            clients_data.iter().map(|v| v.as_slice()).collect();
+        let kweights: Vec<f32> =
+            (0..n_cl).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let us: Vec<f64> =
+            (0..size).map(|_| g.rng.uniform_f64()).collect();
+        let stats = codec::SegmentStats::build(&seg, &clients, &kweights);
+        let grid = g.usize_in(1, 12);
+        for _ in 0..grid {
+            let alpha = g.f32_log(0.05, 20.0);
+            let naive = codec::segment_quant_mse(
+                &w, &seg, alpha, &clients, &kweights, &us,
+            );
+            let fast = stats.mse(&w, &seg, alpha, &us);
+            // identical math, different f64 summation order: the
+            // tolerance covers reassociation, not approximation
+            let tol = 1e-9 * (1.0 + naive.abs());
+            if (naive - fast).abs() > tol {
+                return Err(format!(
+                    "alpha={alpha} naive={naive} fast={fast} \
+                     (K={n_cl}, d={size})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_encode_bit_identical_to_scalar() {
+    // batched-RNG + pooled encode must produce byte-identical payloads
+    // to the scalar per-element reference for the same counter-derived
+    // wire streams, at parallelism 1 and 4 — including segments larger
+    // than one RNG block and large enough to cross the pool threshold
+    forall("encode-batched-vs-scalar", 32, 20, |g| {
+        let mut segs = Vec::new();
+        let mut off = 0usize;
+        let mut aidx = 0usize;
+        let n_seg = g.usize_in(1, 4);
+        for i in 0..n_seg {
+            // one in ~3 segments is multi-block / pool-threshold sized
+            let size = if g.usize_in(0, 2) == 0 {
+                g.usize_in(4000, 40_000)
+            } else {
+                g.usize_in(1, 300)
+            };
+            let quant = g.bool() || i == 0;
+            segs.push(Segment {
+                name: format!("s{i}"),
+                offset: off,
+                size,
+                quantized: quant,
+                alpha_idx: if quant { Some(aidx) } else { None },
+            });
+            off += size;
+            if quant {
+                aidx += 1;
+            }
+        }
+        let w = g.vec_f32(off, 1.5);
+        let alphas: Vec<f32> =
+            (0..aidx).map(|_| g.f32_log(0.1, 4.0)).collect();
+        for mode in [Rounding::Deterministic, Rounding::Stochastic] {
+            let seed = g.rng.next_u64();
+            let mut r_ref = Pcg32::new(seed, 3);
+            let mut reference = codec::WirePayload::default();
+            codec::encode_into_scalar(
+                &w, &alphas, &[], &segs, mode, &mut r_ref,
+                &mut reference,
+            );
+            for pool in [1usize, 4] {
+                let mut r = Pcg32::new(seed, 3);
+                let mut scratch = Vec::new();
+                let mut got = codec::WirePayload::default();
+                codec::encode_into_pooled(
+                    &w, &alphas, &[], &segs, mode, &mut r,
+                    &mut scratch, pool, &mut got,
+                );
+                if got.codes != reference.codes
+                    || got.raw != reference.raw
+                {
+                    return Err(format!(
+                        "batched (pool={pool}, {mode:?}) diverged \
+                         from scalar reference"
+                    ));
+                }
+                // the caller RNG advances by exactly one wire-key u64
+                // per stochastic message (and not at all for det)
+                let mut expect = Pcg32::new(seed, 3);
+                if mode == Rounding::Stochastic {
+                    expect.next_u64();
+                }
+                if r.next_u32() != expect.next_u32() {
+                    return Err(format!(
+                        "caller RNG state diverged (pool={pool})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fedavg_convex_combination() {
     // aggregated weights stay inside the per-coordinate min/max of the
     // client vectors (convexity of weighted averaging)
