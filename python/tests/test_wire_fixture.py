@@ -1,0 +1,77 @@
+"""Cross-checks of the committed golden wire fixture against the
+Python mirror of the v1 frame layout (``tools/gen_wire_fixture.py``).
+
+The authoritative implementation is ``rust/src/net/{frame,codec}.rs``,
+pinned by ``rust/tests/golden_wire.rs``; these tests make sure the
+committed fixture file stays byte-identical to the documented spec, so
+a regeneration with a drifted mirror cannot slip through unnoticed.
+"""
+
+import importlib.util
+import os
+import struct
+import zlib
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.join(HERE, "..", "..")
+FIXTURE = os.path.join(REPO, "rust", "tests", "fixtures", "wire_v1.bin")
+
+
+def _mirror():
+    spec = importlib.util.spec_from_file_location(
+        "gen_wire_fixture",
+        os.path.join(REPO, "tools", "gen_wire_fixture.py"),
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def mirror():
+    return _mirror()
+
+
+@pytest.fixture(scope="module")
+def fixture_bytes():
+    with open(FIXTURE, "rb") as f:
+        return f.read()
+
+
+def test_fixture_matches_mirror(mirror, fixture_bytes):
+    job, outcome = mirror.golden_frames()
+    assert fixture_bytes == job + outcome, (
+        "wire_v1.bin no longer matches the spec mirror — regenerate with "
+        "tools/gen_wire_fixture.py ONLY alongside a WIRE_VERSION bump"
+    )
+
+
+def test_frame_envelopes_are_well_formed(mirror, fixture_bytes):
+    buf = fixture_bytes
+    kinds = []
+    while buf:
+        magic, version, kind, flags, body_len, crc = struct.unpack_from(
+            "<4sHBBII", buf
+        )
+        assert magic == mirror.MAGIC
+        assert version == mirror.VERSION
+        assert flags == 0
+        body = buf[16:16 + body_len]
+        assert len(body) == body_len
+        assert zlib.crc32(body) & 0xFFFFFFFF == crc
+        kinds.append(kind)
+        buf = buf[16 + body_len:]
+    assert kinds == [mirror.KIND_JOB, mirror.KIND_OUTCOME]
+
+
+def test_overhead_constants(mirror):
+    """The CommStats framing constants in coordinator/comm.rs charge
+    exactly these overheads; if the layout grows, both must move."""
+    assert mirror.JOB_FRAME_OVERHEAD == 68
+    assert mirror.OUTCOME_FRAME_OVERHEAD == 53
+    job, outcome = mirror.golden_frames()
+    assert len(job) == mirror.wire_bytes(*mirror.CANON_DOWN) + 68
+    # the outcome golden carries a 2-element EF block: 4 (len) + 8 (f32s)
+    assert len(outcome) == mirror.wire_bytes(*mirror.CANON_UP) + 53 + 12

@@ -6,9 +6,10 @@
 //! method family are all *config switches* on the same coordinator —
 //! no code forks (DESIGN.md §7).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::fp8::Rounding;
+use crate::util::cli::Args;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum SplitCfg {
@@ -267,6 +268,176 @@ impl ExperimentConfig {
     pub fn is_fp32_comm(&self) -> bool {
         self.comm == Rounding::None
     }
+
+    /// Stable 64-bit fingerprint of every field that determines the
+    /// federated trajectory — the handshake token of the networked
+    /// transport: a server only accepts workers whose config hashes
+    /// identically, because both sides independently rebuild the
+    /// world (data, shards, schedules) from their own config copy.
+    ///
+    /// Deliberately excluded: `parallelism` (a per-host wall-clock
+    /// knob that never changes results — the determinism contract)
+    /// and `name` (derived from model/method/split). Floats hash by
+    /// bit pattern. FNV-1a over a canonical field rendering; the
+    /// rendering includes field tags, so reordering or retyping a
+    /// field changes the hash even when raw bytes would collide.
+    pub fn fingerprint(&self) -> u64 {
+        // exhaustive destructure: adding a config field without
+        // deciding its fingerprint fate is a compile error, so a new
+        // trajectory knob can never silently pass the handshake
+        let ExperimentConfig {
+            name: _,
+            model,
+            split,
+            clients,
+            participation,
+            rounds,
+            lr,
+            weight_decay,
+            schedule,
+            qat,
+            comm,
+            server_opt,
+            eval_every,
+            seed,
+            n_train,
+            n_test,
+            speakers,
+            flip_aug,
+            error_feedback,
+            fp32_client_frac,
+            parallelism: _,
+        } = self;
+        let split = match split {
+            SplitCfg::Iid => "iid".to_string(),
+            SplitCfg::Dirichlet(c) => {
+                format!("dir:{:016x}", c.to_bits())
+            }
+            SplitCfg::Speaker => "speaker".to_string(),
+        };
+        let sched = match schedule {
+            LrSchedule::Const => "const".to_string(),
+            LrSchedule::Cosine { final_frac } => {
+                format!("cos:{:08x}", final_frac.to_bits())
+            }
+        };
+        let sopt = match server_opt {
+            None => "none".to_string(),
+            Some(s) => format!(
+                "gd{}:{:08x}:g{}",
+                s.gd_steps,
+                s.gd_lr.to_bits(),
+                s.grid_points
+            ),
+        };
+        let repr = format!(
+            "model={model};split={split};clients={clients};\
+             participation={participation};rounds={rounds};\
+             lr={:08x};wd={:08x};sched={sched};qat={qat:?};\
+             comm={comm:?};sopt={sopt};seed={seed};\
+             eval_every={eval_every};n_train={n_train};\
+             n_test={n_test};speakers={speakers};flip={flip_aug};\
+             ef={error_feedback};fp32frac={:08x}",
+            lr.to_bits(),
+            weight_decay.to_bits(),
+            fp32_client_frac.to_bits(),
+        );
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a 64 offset basis
+        for &b in repr.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Which end of the networked transport this process plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetRole {
+    /// Coordinator: binds, accepts workers, drives the round loop.
+    Server,
+    /// Client executor: connects and serves jobs until shutdown.
+    Worker,
+}
+
+/// Networked-run settings parsed from the CLI
+/// (`--role server --listen ADDR` / `--role worker --connect ADDR`).
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    pub role: NetRole,
+    /// Listen address (server) or server address (worker).
+    pub addr: String,
+    /// Worker connections the server waits for before round 0.
+    pub workers: usize,
+    /// Socket read/write deadline on the server side (and the
+    /// worker's handshake deadline) — the "never hang" bound.
+    pub timeout_ms: u64,
+}
+
+impl NetCfg {
+    /// Parse the networked-run flags; `Ok(None)` means a plain
+    /// in-process run was requested.
+    pub fn from_args(args: &Args) -> Result<Option<NetCfg>> {
+        let Some(role) = args.get("role") else {
+            // a forgotten --role must not silently degrade a
+            // networked launch into a local run
+            for flag in ["listen", "connect", "workers", "net-timeout-ms"]
+            {
+                ensure!(
+                    args.get(flag).is_none(),
+                    "--{flag} only makes sense with \
+                     --role server|worker"
+                );
+            }
+            return Ok(None);
+        };
+        let timeout_ms = args.parse_or("net-timeout-ms", 30_000u64)?;
+        ensure!(timeout_ms > 0, "--net-timeout-ms must be positive");
+        let cfg = match role {
+            "server" => {
+                ensure!(
+                    args.get("connect").is_none(),
+                    "--connect is a worker flag; --role server \
+                     listens (--listen ADDR)"
+                );
+                let addr = args
+                    .required("listen", "--role server")
+                    .context("e.g. --listen 127.0.0.1:7878")?;
+                let workers = args.parse_or("workers", 1usize)?;
+                ensure!(workers >= 1, "--workers must be at least 1");
+                NetCfg {
+                    role: NetRole::Server,
+                    addr: addr.to_string(),
+                    workers,
+                    timeout_ms,
+                }
+            }
+            "worker" => {
+                ensure!(
+                    args.get("listen").is_none(),
+                    "--listen is a server flag; --role worker \
+                     connects (--connect ADDR)"
+                );
+                ensure!(
+                    args.get("workers").is_none(),
+                    "--workers only applies to --role server"
+                );
+                let addr = args
+                    .required("connect", "--role worker")
+                    .context("e.g. --connect 127.0.0.1:7878")?;
+                NetCfg {
+                    role: NetRole::Worker,
+                    addr: addr.to_string(),
+                    workers: 1,
+                    timeout_ms,
+                }
+            }
+            other => {
+                bail!("unknown --role '{other}' (server|worker)")
+            }
+        };
+        Ok(Some(cfg))
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +493,70 @@ mod tests {
         assert!((l0 - 1.0).abs() < 1e-6);
         assert!(l50 < l0 && l100 < l50);
         assert!((l100 - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_fields_only() {
+        let a = ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // wall-clock knob: must NOT change the hash (a server at
+        // parallelism 4 happily drives workers launched without it)
+        b.parallelism = 8;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.seed = 2;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.lr *= 2.0;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d = ExperimentConfig::preset("lenet_c10:uq:dir03").unwrap();
+        assert_ne!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn net_cfg_parses_roles() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        assert!(NetCfg::from_args(&args("run --preset x"))
+            .unwrap()
+            .is_none());
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen 127.0.0.1:0 --workers 4",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.role, NetRole::Server);
+        assert_eq!(n.addr, "127.0.0.1:0");
+        assert_eq!(n.workers, 4);
+        assert_eq!(n.timeout_ms, 30_000);
+        let n = NetCfg::from_args(&args(
+            "run --role worker --connect 127.0.0.1:7878 \
+             --net-timeout-ms 5000",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.role, NetRole::Worker);
+        assert_eq!(n.timeout_ms, 5000);
+        // missing / inconsistent combinations are typed errors
+        assert!(NetCfg::from_args(&args("run --role server")).is_err());
+        assert!(NetCfg::from_args(&args("run --role worker")).is_err());
+        assert!(NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --workers 2"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --connect b:2"
+        ))
+        .is_err());
+        assert!(
+            NetCfg::from_args(&args("run --role alien --listen x"))
+                .is_err()
+        );
+        assert!(
+            NetCfg::from_args(&args("run --listen 127.0.0.1:1"))
+                .is_err()
+        );
     }
 
     #[test]

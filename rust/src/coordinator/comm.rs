@@ -5,16 +5,29 @@
 //! (Table 1) and the Figure-2 accuracy-vs-bytes curves.
 
 use crate::fp8::codec::WirePayload;
+use crate::net::codec::{
+    JOB_FRAME_OVERHEAD_BYTES, OUTCOME_FRAME_OVERHEAD_BYTES,
+};
 
 /// Per-message framing charged on the downlink in addition to the
-/// packed payload: round id (u32) + destination client id (u32).
-/// Without framing the Table-1 communication gains are optimistic —
-/// every real transport sends *some* envelope around the tensor bytes.
-pub const DOWNLINK_HEADER_BYTES: u64 = 4 + 4;
+/// packed payload: every non-payload byte of a v1 Job frame — the
+/// frame envelope (magic, version, kind, length, crc32), the scalar
+/// job metadata (round/client ids, seed, quantizer switches, lr,
+/// weight decay, n_k) and the payload section table. This is exactly
+/// what `net::codec::encode_job` puts around the packed tensors, so
+/// the reported byte counts equal the bytes a `SocketTransport`
+/// really moves (asserted by `tests/net_transport.rs`; the optional
+/// error-feedback residual blocks — simulation-only state migration —
+/// are the one documented exclusion). Without framing the Table-1
+/// communication gains would be optimistic — every real transport
+/// sends an envelope around the tensor bytes.
+pub const DOWNLINK_HEADER_BYTES: u64 = JOB_FRAME_OVERHEAD_BYTES;
 
-/// Per-message framing charged on the uplink: round id (u32) +
-/// client id (u32) + n_k (u64, FedAvg weighting) + mean_loss (f32).
-pub const UPLINK_HEADER_BYTES: u64 = 4 + 4 + 8 + 4;
+/// Per-message framing charged on the uplink: every non-payload byte
+/// of a v1 Outcome frame (envelope + round/client ids, n_k, mean_loss
+/// + payload section table). Same exactness contract as
+/// [`DOWNLINK_HEADER_BYTES`].
+pub const UPLINK_HEADER_BYTES: u64 = OUTCOME_FRAME_OVERHEAD_BYTES;
 
 /// Downlink: server -> client (global model + clip side channels).
 #[derive(Clone, Debug)]
@@ -78,8 +91,9 @@ mod tests {
         let payload = 100 + 4 * 15;
         assert_eq!(s.up_bytes, payload + UPLINK_HEADER_BYTES);
         assert_eq!(s.down_bytes, 2 * (payload + DOWNLINK_HEADER_BYTES));
-        // independently computed: 1 up (20 B hdr) + 2 down (8 B hdr)
-        assert_eq!(s.total_bytes(), 3 * payload + 20 + 2 * 8);
+        // independently computed against the v1 frame layout:
+        // 1 up (53 B overhead) + 2 down (68 B overhead each)
+        assert_eq!(s.total_bytes(), 3 * payload + 53 + 2 * 68);
         assert_eq!((s.up_msgs, s.down_msgs), (1, 2));
     }
 

@@ -9,7 +9,7 @@ pub mod server_opt;
 pub mod transport;
 
 pub use metrics::{comm_gain, mean_std, RoundRecord, RunResult};
-pub use server::Server;
+pub use server::{build_world, Server, World};
 pub use transport::{
     ClientJob, ClientOutcome, InProcessTransport, Transport, WorkBuffers,
 };

@@ -45,6 +45,71 @@ use super::transport::{
     self, streams, ClientJob, InProcessTransport, Transport,
 };
 
+/// The experiment substrate shared by every participant role: the
+/// synthetic datasets and the per-client shards. A **pure function of
+/// (config, model)** — every random draw comes from streams derived
+/// from `cfg.seed` — so the coordinator and networked worker
+/// processes each rebuild an identical world from their own copy of
+/// the config instead of shipping datasets over the wire
+/// (`ExperimentConfig::fingerprint` + the net handshake guard the
+/// "same config" precondition).
+pub struct World {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub shards: Vec<Vec<usize>>,
+}
+
+/// Deterministically generate the data + partition for `cfg`.
+pub fn build_world(
+    cfg: &ExperimentConfig,
+    model: &ModelInfo,
+) -> Result<World> {
+    // experiment-setup stream (partitioning); deliberately NOT
+    // 0xDA7A, which is transport::streams::DATA — distinct
+    // randomness domains must never share a tag
+    let mut rng_data = Pcg32::new(cfg.seed, 0x9A27_1710);
+    let (train, test) = match model.kind.as_str() {
+        "vision" => {
+            let vcfg = vision::VisionCfg::new(model.classes);
+            vision::generate(&vcfg, cfg.n_train, cfg.n_test, cfg.seed)
+        }
+        "speech" => {
+            let scfg = speech::SpeechCfg::new(model.classes, cfg.speakers);
+            speech::generate(&scfg, cfg.n_train, cfg.n_test, cfg.seed)
+        }
+        k => bail!("unknown data kind '{k}'"),
+    };
+    ensure!(
+        train.feat_shape == model.input_shape,
+        "data/model shape mismatch: {:?} vs {:?}",
+        train.feat_shape,
+        model.input_shape
+    );
+    let shards = match cfg.split {
+        SplitCfg::Iid => {
+            partition::iid(train.len(), cfg.clients, &mut rng_data)
+        }
+        SplitCfg::Dirichlet(c) => {
+            partition::dirichlet(&train, cfg.clients, c, &mut rng_data)
+        }
+        SplitCfg::Speaker => {
+            let s = partition::by_group(&train);
+            ensure!(
+                s.len() >= cfg.participation,
+                "only {} speakers for P={}",
+                s.len(),
+                cfg.participation
+            );
+            s
+        }
+    };
+    Ok(World {
+        train,
+        test,
+        shards,
+    })
+}
+
 pub struct Server<'a> {
     pub cfg: ExperimentConfig,
     engine: &'a Engine,
@@ -115,48 +180,12 @@ impl<'a> Server<'a> {
                 cfg.participation
             );
         }
-        // ---- data ---------------------------------------------------
-        // experiment-setup stream (partitioning); deliberately NOT
-        // 0xDA7A, which is transport::streams::DATA — distinct
-        // randomness domains must never share a tag
-        let mut rng_data = Pcg32::new(cfg.seed, 0x9A27_1710);
-        let (train, test) = match model.kind.as_str() {
-            "vision" => {
-                let vcfg = vision::VisionCfg::new(model.classes);
-                vision::generate(&vcfg, cfg.n_train, cfg.n_test, cfg.seed)
-            }
-            "speech" => {
-                let scfg =
-                    speech::SpeechCfg::new(model.classes, cfg.speakers);
-                speech::generate(&scfg, cfg.n_train, cfg.n_test, cfg.seed)
-            }
-            k => bail!("unknown data kind '{k}'"),
-        };
-        ensure!(
-            train.feat_shape == model.input_shape,
-            "data/model shape mismatch: {:?} vs {:?}",
-            train.feat_shape,
-            model.input_shape
-        );
-        // ---- split --------------------------------------------------
-        let shards = match cfg.split {
-            SplitCfg::Iid => {
-                partition::iid(train.len(), cfg.clients, &mut rng_data)
-            }
-            SplitCfg::Dirichlet(c) => {
-                partition::dirichlet(&train, cfg.clients, c, &mut rng_data)
-            }
-            SplitCfg::Speaker => {
-                let s = partition::by_group(&train);
-                ensure!(
-                    s.len() >= cfg.participation,
-                    "only {} speakers for P={}",
-                    s.len(),
-                    cfg.participation
-                );
-                s
-            }
-        };
+        // ---- data + split (shared with networked workers) -----------
+        let World {
+            train,
+            test,
+            shards,
+        } = build_world(&cfg, model)?;
         // ---- init ---------------------------------------------------
         let w = manifest.load_init(model, "w")?;
         let alpha = manifest.load_init(model, "alpha")?;
@@ -304,8 +333,10 @@ impl<'a> Server<'a> {
                 *e = src - dec;
             }
         }
-        let alpha_start = self.down_buf.alphas.clone();
-        let beta_start = self.down_buf.betas.clone();
+        // the broadcast side channels double as every job's
+        // alpha/beta_start — borrowed, not cloned (the worker side
+        // reads the same vectors out of the wire payload)
+        let down_buf = &self.down_buf;
 
         // 3-4. local updates + uplinks, fanned out over the transport.
         // m_t is known before dispatch (the server knows every n_k),
@@ -350,13 +381,14 @@ impl<'a> Server<'a> {
                 flip_aug: cfg.flip_aug,
                 comm: cfg.comm,
                 w_start: &w_start,
-                alpha_start: &alpha_start,
-                beta_start: &beta_start,
+                alpha_start: &down_buf.alphas,
+                beta_start: &down_buf.betas,
                 train: &self.train,
                 shard: &self.shards[k],
                 segments: &m.segments,
                 n_k: self.shards[k].len() as u64,
                 ef,
+                down: down_buf,
             });
         }
 

@@ -78,6 +78,12 @@ pub struct ClientJob<'r> {
     /// failed round therefore never loses undelivered residuals);
     /// `None` when EF is disabled.
     pub ef: Option<Vec<f32>>,
+    /// The *encoded* downlink broadcast (`w_start` is its decode).
+    /// In-process execution reads the decoded fields above; a
+    /// networked transport ships these packed bytes instead, so the
+    /// downlink frame carries FP8 codes — never re-inflated f32 —
+    /// and the remote decode reproduces `w_start` bit-exactly.
+    pub down: &'r WirePayload,
 }
 
 /// What one client sends back: the encoded uplink plus the updated

@@ -91,8 +91,9 @@ pub enum Rounding {
     None,
 }
 
-/// A packed model update as it would travel over the network.
-#[derive(Clone, Debug, Default)]
+/// A packed model update as it would travel over the network (and,
+/// through `net::codec`, really does).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WirePayload {
     /// 8-bit codes for quantized segments, concatenated in segment order.
     pub codes: Vec<u8>,

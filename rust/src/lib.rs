@@ -23,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod fp8;
+pub mod net;
 pub mod runtime;
 pub mod util;
 

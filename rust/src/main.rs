@@ -3,6 +3,12 @@
 //! ```text
 //! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S]
 //!            [--parallelism T]  # concurrent client workers per round
+//! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
+//!            --workers 2        # drive remote workers over TCP
+//! fedfp8 run --preset ... --role worker --connect 127.0.0.1:7878
+//!            # serve client jobs for a --role server coordinator;
+//!            # must be launched with the identical preset/overrides
+//!            # (enforced by the config-fingerprint handshake)
 //! fedfp8 table1 [--rounds N] [--seeds 3] [--models lenet_c10,...]
 //! fedfp8 table2 [--rounds N] [--seeds 3]
 //! fedfp8 fig2   [--rounds N] [--model lenet_c10]
@@ -12,10 +18,15 @@
 //!
 //! Results land in `artifacts/results/*.csv` plus stdout tables.
 
-use anyhow::{bail, Result};
+use std::net::TcpListener;
+use std::time::Duration;
 
-use fedfp8::config::ExperimentConfig;
-use fedfp8::coordinator::Server;
+use anyhow::{bail, Context, Result};
+
+use fedfp8::config::{ExperimentConfig, NetCfg, NetRole};
+use fedfp8::coordinator::transport::InProcessTransport;
+use fedfp8::coordinator::{build_world, RunResult, Server, World};
+use fedfp8::net::{self, Hello};
 use fedfp8::runtime::{default_dir, Engine, Manifest};
 use fedfp8::util::cli::Args;
 
@@ -39,27 +50,12 @@ fn apply_overrides(
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let preset = args
-        .get("preset")
-        .unwrap_or("lenet_c10:uq:iid")
-        .to_string();
-    let cfg = apply_overrides(ExperimentConfig::preset(&preset)?, args)?;
+/// Print the run result + engine stats and write the accuracy curve.
+fn report_run(
+    engine: &Engine,
+    result: &RunResult,
+) -> Result<()> {
     let dir = default_dir();
-    let engine = Engine::new(&dir)?;
-    let manifest = Manifest::load(&dir)?;
-    println!(
-        "platform={}  preset={preset}  rounds={}  K={}  P={}  \
-         parallelism={}",
-        engine.platform(),
-        cfg.rounds,
-        cfg.clients,
-        cfg.participation,
-        cfg.parallelism
-    );
-    let mut server = Server::new(&engine, &manifest, cfg)?;
-    server.set_verbose(true);
-    let result = server.run()?;
     let csv = dir.join("results").join(format!("{}.csv", result.name));
     result.to_csv(&csv)?;
     println!(
@@ -81,6 +77,129 @@ fn cmd_run(args: &Args) -> Result<()> {
         st.execute_ns as f64 * 1e-9,
         st.marshal_ns as f64 * 1e-9,
     );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let preset = args
+        .get("preset")
+        .unwrap_or("lenet_c10:uq:iid")
+        .to_string();
+    let cfg = apply_overrides(ExperimentConfig::preset(&preset)?, args)?;
+    let net = NetCfg::from_args(args)?;
+    match net {
+        None => run_local(&preset, cfg),
+        Some(n) if n.role == NetRole::Server => {
+            run_net_server(&preset, cfg, n)
+        }
+        Some(n) => run_net_worker(cfg, n),
+    }
+}
+
+fn run_local(preset: &str, cfg: ExperimentConfig) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "platform={}  preset={preset}  rounds={}  K={}  P={}  \
+         parallelism={}",
+        engine.platform(),
+        cfg.rounds,
+        cfg.clients,
+        cfg.participation,
+        cfg.parallelism
+    );
+    let mut server = Server::new(&engine, &manifest, cfg)?;
+    server.set_verbose(true);
+    let result = server.run()?;
+    report_run(&engine, &result)
+}
+
+/// `--role server`: accept `--workers` handshaken connections, then
+/// drive the ordinary round loop through a `SocketTransport`.
+fn run_net_server(
+    preset: &str,
+    cfg: ExperimentConfig,
+    net: NetCfg,
+) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let hello = Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: model.dim as u64,
+        model: cfg.model.clone(),
+    };
+    let listener = TcpListener::bind(&net.addr)
+        .with_context(|| format!("binding {}", net.addr))?;
+    println!(
+        "platform={}  preset={preset}  rounds={}  K={}  P={}  \
+         role=server listen={}  workers={}  fingerprint={:#018x}",
+        engine.platform(),
+        cfg.rounds,
+        cfg.clients,
+        cfg.participation,
+        listener.local_addr()?,
+        net.workers,
+        hello.fingerprint,
+    );
+    let transport = net::accept_workers(
+        &listener,
+        net.workers,
+        &hello,
+        Duration::from_millis(net.timeout_ms),
+    )?;
+    println!("[server] {} workers handshaken; starting", net.workers);
+    let mut server =
+        Server::with_transport(&engine, &manifest, cfg, Box::new(&transport))?;
+    server.set_verbose(true);
+    let result = server.run();
+    drop(server);
+    transport.shutdown();
+    report_run(&engine, &result?)
+}
+
+/// `--role worker`: rebuild the world from the local config copy,
+/// handshake, and serve jobs on the in-process executor until the
+/// server shuts the connection down.
+fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let hello = Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: model.dim as u64,
+        model: cfg.model.clone(),
+    };
+    let World { train, shards, .. } = build_world(&cfg, model)?;
+    let ctx = net::WorkerCtx {
+        train: &train,
+        shards: &shards,
+        segments: &model.segments,
+    };
+    let executor = InProcessTransport {
+        engine: &engine,
+        model,
+    };
+    println!(
+        "[worker] platform={}  model={}  K={}  fingerprint={:#018x}  \
+         connecting to {}",
+        engine.platform(),
+        cfg.model,
+        shards.len(),
+        hello.fingerprint,
+        net.addr,
+    );
+    let mut stream = net::connect(
+        &net.addr,
+        &hello,
+        Duration::from_millis(net.timeout_ms),
+    )?;
+    println!("[worker] handshake ok; serving");
+    net::serve_conn(&mut stream, &executor, &ctx)?;
+    println!("[worker] server closed the connection; exiting");
     Ok(())
 }
 
@@ -127,6 +246,11 @@ fn cmd_presets() {
             println!("  {m}:{{fp32|uq|uq+}}:{s}");
         }
     }
+    println!();
+    println!("multi-process rounds (same preset on every process):");
+    println!("  fedfp8 run --preset P --role server --listen ADDR \
+              --workers N");
+    println!("  fedfp8 run --preset P --role worker --connect ADDR");
 }
 
 fn main() -> Result<()> {

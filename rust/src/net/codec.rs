@@ -1,0 +1,638 @@
+//! Message bodies for the v1 wire protocol: the serialized forms of
+//! a client work order ([`WireJob`]) and its result ([`WireOutcome`]),
+//! plus the connection handshake ([`Hello`]).
+//!
+//! ## What travels, what doesn't
+//!
+//! The networked job carries exactly what the paper's protocol puts on
+//! the downlink — the *encoded* FP8 broadcast (`WirePayload`: codes +
+//! alpha/beta side channels) — plus the scalar hyperparameters of the
+//! round and the message ids. Everything data-shaped is deliberately
+//! **not** on the wire: the synthetic datasets, the client shards and
+//! the segment table are pure functions of the experiment config and
+//! manifest, so a worker rebuilds the identical world locally
+//! (`coordinator::server::build_world`) and the handshake fingerprint
+//! (`ExperimentConfig::fingerprint`) guarantees both sides derived it
+//! from the same config. The worker decodes the broadcast itself —
+//! decode is a pure LUT function of the payload bytes, so its
+//! `w_start` is bit-identical to the server's, which is what makes a
+//! networked round bit-identical to `InProcessTransport`.
+//!
+//! The optional error-feedback residual blocks are a *simulation-only
+//! state migration* (a real device keeps its residual locally); they
+//! ride the frame when `error_feedback` is on but are excluded from
+//! the `CommStats` identity below.
+//!
+//! ## Accounting identity
+//!
+//! With EF off, the non-payload part of each frame is a constant:
+//!
+//! ```text
+//! job frame bytes     = payload.wire_bytes() + JOB_FRAME_OVERHEAD_BYTES
+//! outcome frame bytes = payload.wire_bytes() + OUTCOME_FRAME_OVERHEAD_BYTES
+//! ```
+//!
+//! `coordinator::comm` charges exactly these overheads per message, so
+//! the byte counts behind the paper's communication-gain tables equal
+//! the bytes a `SocketTransport` really moves (asserted by the
+//! loopback suite in `tests/net_transport.rs`).
+//!
+//! Byte-level layout: see the module docs of [`super::frame`] and the
+//! independent Python mirror `tools/gen_wire_fixture.py`.
+
+use crate::config::QatMode;
+use crate::coordinator::transport::ClientJob;
+use crate::fp8::codec::{Rounding, WirePayload};
+
+use super::frame::{WireError, FRAME_HEADER_BYTES};
+
+/// Fixed scalar metadata preceding a job's payload block.
+pub const JOB_META_BYTES: u64 = 36;
+/// Fixed scalar metadata preceding an outcome's payload block.
+pub const OUTCOME_META_BYTES: u64 = 21;
+/// The payload section table (codes/raw/alphas/betas lengths).
+pub const PAYLOAD_TABLE_BYTES: u64 = 16;
+
+/// Every non-payload byte of a job frame (envelope + meta + section
+/// table) — the downlink framing charge in `coordinator::comm`.
+pub const JOB_FRAME_OVERHEAD_BYTES: u64 =
+    FRAME_HEADER_BYTES + JOB_META_BYTES + PAYLOAD_TABLE_BYTES;
+
+/// Every non-payload byte of an outcome frame — the uplink framing
+/// charge in `coordinator::comm`.
+pub const OUTCOME_FRAME_OVERHEAD_BYTES: u64 =
+    FRAME_HEADER_BYTES + OUTCOME_META_BYTES + PAYLOAD_TABLE_BYTES;
+
+/// Serialized form of one client's work order — the owned mirror of
+/// [`ClientJob`] minus everything a worker derives locally (dataset,
+/// shard, segment table, decoded weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireJob {
+    pub round: u32,
+    pub client: u32,
+    pub seed: u64,
+    pub qat: QatMode,
+    pub comm: Rounding,
+    pub flip_aug: bool,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub n_k: u64,
+    /// The *encoded* downlink broadcast; the worker decodes it to
+    /// reconstruct `w_start`/`alpha_start`/`beta_start` bit-exactly.
+    pub down: WirePayload,
+    pub ef: Option<Vec<f32>>,
+}
+
+/// Serialized form of one client's result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireOutcome {
+    pub round: u32,
+    pub client: u32,
+    pub n_k: u64,
+    pub mean_loss: f32,
+    pub payload: WirePayload,
+    pub ef: Option<Vec<f32>>,
+}
+
+/// Connection handshake: proves both processes derived their world
+/// from the same experiment config and model before any job flows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// `ExperimentConfig::fingerprint()` of the launching config.
+    pub fingerprint: u64,
+    /// Model dimension (cheap extra guard beyond the fingerprint).
+    pub dim: u64,
+    /// Manifest model-variant name.
+    pub model: String,
+}
+
+// ---- little-endian writers -----------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        put_f32(out, v);
+    }
+}
+
+// ---- little-endian reader ------------------------------------------
+
+/// Bounds-checked cursor over a frame body; every failure is a typed
+/// [`WireError::Malformed`] naming the field being read.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn bytes(
+        &mut self,
+        n: usize,
+        what: &str,
+    ) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed {
+                what: format!(
+                    "{what}: need {n} bytes, only {} left",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        let b = self.bytes(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    fn f32s(
+        &mut self,
+        n: usize,
+        what: &str,
+    ) -> Result<Vec<f32>, WireError> {
+        let b = self.bytes(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed {
+                what: format!(
+                    "{} trailing bytes after message",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---- enum tags -----------------------------------------------------
+
+fn qat_to_u8(q: QatMode) -> u8 {
+    match q {
+        QatMode::Det => 0,
+        QatMode::Rand => 1,
+        QatMode::None => 2,
+    }
+}
+
+fn qat_from_u8(v: u8) -> Result<QatMode, WireError> {
+    Ok(match v {
+        0 => QatMode::Det,
+        1 => QatMode::Rand,
+        2 => QatMode::None,
+        _ => {
+            return Err(WireError::Malformed {
+                what: format!("invalid qat mode byte {v}"),
+            })
+        }
+    })
+}
+
+fn rounding_to_u8(r: Rounding) -> u8 {
+    match r {
+        Rounding::Deterministic => 0,
+        Rounding::Stochastic => 1,
+        Rounding::None => 2,
+    }
+}
+
+fn rounding_from_u8(v: u8) -> Result<Rounding, WireError> {
+    Ok(match v {
+        0 => Rounding::Deterministic,
+        1 => Rounding::Stochastic,
+        2 => Rounding::None,
+        _ => {
+            return Err(WireError::Malformed {
+                what: format!("invalid rounding mode byte {v}"),
+            })
+        }
+    })
+}
+
+// ---- payload block -------------------------------------------------
+
+fn put_payload(out: &mut Vec<u8>, p: &WirePayload) {
+    put_u32(out, p.codes.len() as u32);
+    put_u32(out, p.raw.len() as u32);
+    put_u32(out, p.alphas.len() as u32);
+    put_u32(out, p.betas.len() as u32);
+    out.extend_from_slice(&p.codes);
+    put_f32s(out, &p.raw);
+    put_f32s(out, &p.alphas);
+    put_f32s(out, &p.betas);
+}
+
+fn get_payload(r: &mut Reader<'_>) -> Result<WirePayload, WireError> {
+    let n_codes = r.u32("codes length")? as usize;
+    let n_raw = r.u32("raw length")? as usize;
+    let n_alphas = r.u32("alphas length")? as usize;
+    let n_betas = r.u32("betas length")? as usize;
+    Ok(WirePayload {
+        codes: r.bytes(n_codes, "codes")?.to_vec(),
+        raw: r.f32s(n_raw, "raw values")?,
+        alphas: r.f32s(n_alphas, "alphas")?,
+        betas: r.f32s(n_betas, "betas")?,
+    })
+}
+
+fn put_ef(out: &mut Vec<u8>, ef: Option<&[f32]>) {
+    if let Some(e) = ef {
+        put_u32(out, e.len() as u32);
+        put_f32s(out, e);
+    }
+}
+
+fn get_ef(
+    r: &mut Reader<'_>,
+    has_ef: u8,
+) -> Result<Option<Vec<f32>>, WireError> {
+    match has_ef {
+        0 => Ok(None),
+        1 => {
+            let n = r.u32("ef length")? as usize;
+            Ok(Some(r.f32s(n, "ef residual")?))
+        }
+        v => Err(WireError::Malformed {
+            what: format!("invalid ef flag byte {v}"),
+        }),
+    }
+}
+
+// ---- job -----------------------------------------------------------
+
+/// Encode a job body straight from the borrowed [`ClientJob`] — no
+/// intermediate owned copy of the (large) downlink payload.
+pub fn encode_job_from(job: &ClientJob<'_>, out: &mut Vec<u8>) {
+    encode_job_parts(
+        job.round as u32,
+        job.client as u32,
+        job.seed,
+        job.qat,
+        job.comm,
+        job.flip_aug,
+        job.lr,
+        job.weight_decay,
+        job.n_k,
+        job.down,
+        job.ef.as_deref(),
+        out,
+    );
+}
+
+/// Encode a job body from an owned [`WireJob`] (tests, tools).
+pub fn encode_job(j: &WireJob, out: &mut Vec<u8>) {
+    encode_job_parts(
+        j.round,
+        j.client,
+        j.seed,
+        j.qat,
+        j.comm,
+        j.flip_aug,
+        j.lr,
+        j.weight_decay,
+        j.n_k,
+        &j.down,
+        j.ef.as_deref(),
+        out,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_job_parts(
+    round: u32,
+    client: u32,
+    seed: u64,
+    qat: QatMode,
+    comm: Rounding,
+    flip_aug: bool,
+    lr: f32,
+    weight_decay: f32,
+    n_k: u64,
+    down: &WirePayload,
+    ef: Option<&[f32]>,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    put_u32(out, round);
+    put_u32(out, client);
+    put_u64(out, seed);
+    out.push(qat_to_u8(qat));
+    out.push(rounding_to_u8(comm));
+    out.push(flip_aug as u8);
+    out.push(ef.is_some() as u8);
+    put_f32(out, lr);
+    put_f32(out, weight_decay);
+    put_u64(out, n_k);
+    debug_assert_eq!(out.len() as u64, JOB_META_BYTES);
+    put_payload(out, down);
+    put_ef(out, ef);
+}
+
+/// Decode a job body. Rejects trailing bytes.
+pub fn decode_job(body: &[u8]) -> Result<WireJob, WireError> {
+    let mut r = Reader::new(body);
+    let round = r.u32("round")?;
+    let client = r.u32("client")?;
+    let seed = r.u64("seed")?;
+    let qat = qat_from_u8(r.u8("qat mode")?)?;
+    let comm = rounding_from_u8(r.u8("comm mode")?)?;
+    let flip_aug = r.u8("flip_aug flag")? != 0;
+    let has_ef = r.u8("ef flag")?;
+    let lr = r.f32("lr")?;
+    let weight_decay = r.f32("weight_decay")?;
+    let n_k = r.u64("n_k")?;
+    let down = get_payload(&mut r)?;
+    let ef = get_ef(&mut r, has_ef)?;
+    r.finish()?;
+    Ok(WireJob {
+        round,
+        client,
+        seed,
+        qat,
+        comm,
+        flip_aug,
+        lr,
+        weight_decay,
+        n_k,
+        down,
+        ef,
+    })
+}
+
+// ---- outcome -------------------------------------------------------
+
+/// Encode an outcome body.
+pub fn encode_outcome(o: &WireOutcome, out: &mut Vec<u8>) {
+    out.clear();
+    put_u32(out, o.round);
+    put_u32(out, o.client);
+    put_u64(out, o.n_k);
+    put_f32(out, o.mean_loss);
+    out.push(o.ef.is_some() as u8);
+    debug_assert_eq!(out.len() as u64, OUTCOME_META_BYTES);
+    put_payload(out, &o.payload);
+    put_ef(out, o.ef.as_deref());
+}
+
+/// Decode an outcome body. Rejects trailing bytes.
+pub fn decode_outcome(body: &[u8]) -> Result<WireOutcome, WireError> {
+    let mut r = Reader::new(body);
+    let round = r.u32("round")?;
+    let client = r.u32("client")?;
+    let n_k = r.u64("n_k")?;
+    let mean_loss = r.f32("mean_loss")?;
+    let has_ef = r.u8("ef flag")?;
+    let payload = get_payload(&mut r)?;
+    let ef = get_ef(&mut r, has_ef)?;
+    r.finish()?;
+    Ok(WireOutcome {
+        round,
+        client,
+        n_k,
+        mean_loss,
+        payload,
+        ef,
+    })
+}
+
+// ---- handshake -----------------------------------------------------
+
+/// Encode a [`Hello`] body.
+pub fn encode_hello(h: &Hello, out: &mut Vec<u8>) {
+    out.clear();
+    put_u64(out, h.fingerprint);
+    put_u64(out, h.dim);
+    put_u16(out, h.model.len() as u16);
+    out.extend_from_slice(h.model.as_bytes());
+}
+
+/// Decode a [`Hello`] body.
+pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
+    let mut r = Reader::new(body);
+    let fingerprint = r.u64("fingerprint")?;
+    let dim = r.u64("dim")?;
+    let n = r.u16("model name length")? as usize;
+    let model = String::from_utf8(r.bytes(n, "model name")?.to_vec())
+        .map_err(|_| WireError::Malformed {
+            what: "model name is not utf-8".into(),
+        })?;
+    r.finish()?;
+    Ok(Hello {
+        fingerprint,
+        dim,
+        model,
+    })
+}
+
+/// Encode a HelloAck body (the echoed fingerprint).
+pub fn encode_hello_ack(fingerprint: u64, out: &mut Vec<u8>) {
+    out.clear();
+    put_u64(out, fingerprint);
+}
+
+/// Decode a HelloAck body.
+pub fn decode_hello_ack(body: &[u8]) -> Result<u64, WireError> {
+    let mut r = Reader::new(body);
+    let fp = r.u64("ack fingerprint")?;
+    r.finish()?;
+    Ok(fp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_payload() -> WirePayload {
+        WirePayload {
+            codes: vec![1, 2, 3, 250],
+            raw: vec![0.5, -1.5],
+            alphas: vec![1.0],
+            betas: vec![2.0, 4.0],
+        }
+    }
+
+    fn sample_job(ef: Option<Vec<f32>>) -> WireJob {
+        WireJob {
+            round: 7,
+            client: 11,
+            seed: 0xDEAD_BEEF,
+            qat: QatMode::Det,
+            comm: Rounding::Stochastic,
+            flip_aug: true,
+            lr: 0.05,
+            weight_decay: 1e-3,
+            n_k: 64,
+            down: sample_payload(),
+            ef,
+        }
+    }
+
+    #[test]
+    fn job_roundtrips() {
+        for ef in [None, Some(vec![0.25f32, -0.125, 3.5])] {
+            let j = sample_job(ef);
+            let mut body = Vec::new();
+            encode_job(&j, &mut body);
+            assert_eq!(decode_job(&body).unwrap(), j);
+        }
+    }
+
+    #[test]
+    fn outcome_roundtrips() {
+        for ef in [None, Some(vec![])] {
+            let o = WireOutcome {
+                round: 3,
+                client: 0,
+                n_k: 0,
+                mean_loss: f32::MIN_POSITIVE,
+                payload: sample_payload(),
+                ef,
+            };
+            let mut body = Vec::new();
+            encode_outcome(&o, &mut body);
+            assert_eq!(decode_outcome(&body).unwrap(), o);
+        }
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let h = Hello {
+            fingerprint: 0x1234_5678_9ABC_DEF0,
+            dim: 4096,
+            model: "lenet_c10".into(),
+        };
+        let mut body = Vec::new();
+        encode_hello(&h, &mut body);
+        assert_eq!(decode_hello(&body).unwrap(), h);
+        encode_hello_ack(h.fingerprint, &mut body);
+        assert_eq!(decode_hello_ack(&body).unwrap(), h.fingerprint);
+    }
+
+    #[test]
+    fn frame_overhead_identity() {
+        // the accounting contract: frame bytes = payload wire bytes +
+        // a constant, for both directions (EF off)
+        let j = sample_job(None);
+        let mut body = Vec::new();
+        encode_job(&j, &mut body);
+        assert_eq!(
+            FRAME_HEADER_BYTES + body.len() as u64,
+            j.down.wire_bytes() + JOB_FRAME_OVERHEAD_BYTES
+        );
+        let o = WireOutcome {
+            round: 1,
+            client: 2,
+            n_k: 3,
+            mean_loss: 0.5,
+            payload: sample_payload(),
+            ef: None,
+        };
+        encode_outcome(&o, &mut body);
+        assert_eq!(
+            FRAME_HEADER_BYTES + body.len() as u64,
+            o.payload.wire_bytes() + OUTCOME_FRAME_OVERHEAD_BYTES
+        );
+    }
+
+    #[test]
+    fn truncated_body_is_malformed() {
+        let j = sample_job(None);
+        let mut body = Vec::new();
+        encode_job(&j, &mut body);
+        let err = decode_job(&body[..body.len() - 1]).unwrap_err();
+        assert!(matches!(err, WireError::Malformed { .. }), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let j = sample_job(None);
+        let mut body = Vec::new();
+        encode_job(&j, &mut body);
+        body.push(0);
+        let err = decode_job(&body).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn bad_enum_bytes_rejected() {
+        let j = sample_job(None);
+        let mut body = Vec::new();
+        encode_job(&j, &mut body);
+        body[16] = 9; // qat byte
+        assert!(decode_job(&body).is_err());
+        encode_job(&j, &mut body);
+        body[17] = 9; // comm byte
+        assert!(decode_job(&body).is_err());
+        encode_job(&j, &mut body);
+        body[19] = 2; // ef flag byte
+        assert!(decode_job(&body).is_err());
+    }
+
+    #[test]
+    fn empty_messages_roundtrip() {
+        // zero-size everything: the empty-segment / zero-client edges
+        let j = WireJob {
+            round: 0,
+            client: 0,
+            seed: 0,
+            qat: QatMode::None,
+            comm: Rounding::None,
+            flip_aug: false,
+            lr: 0.0,
+            weight_decay: 0.0,
+            n_k: 0,
+            down: WirePayload::default(),
+            ef: Some(vec![]),
+        };
+        let mut body = Vec::new();
+        encode_job(&j, &mut body);
+        assert_eq!(decode_job(&body).unwrap(), j);
+    }
+}

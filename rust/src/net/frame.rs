@@ -1,0 +1,414 @@
+//! Wire frames — the length-prefixed, checksummed envelope every
+//! fedfp8 network message travels in.
+//!
+//! Layout (all little-endian; independently mirrored by
+//! `tools/gen_wire_fixture.py`, pinned by `tests/golden_wire.rs`):
+//!
+//! ```text
+//! 0   magic     4 B  = b"FP8W"
+//! 4   version   u16  = WIRE_VERSION
+//! 6   kind      u8   (Hello/HelloAck/Job/Outcome/Shutdown)
+//! 7   flags     u8   = 0 (reserved)
+//! 8   body_len  u32
+//! 12  crc32     u32  (IEEE CRC-32 of the body)
+//! 16  body ...
+//! ```
+//!
+//! The envelope is deliberately *per-frame*, not per-connection:
+//! every message re-asserts magic + version + checksum, so a
+//! desynchronized or corrupted stream fails on the very next frame
+//! with a typed [`WireError`] instead of feeding garbage lengths into
+//! the codec. Body size is capped ([`MAX_BODY_BYTES`]) so a corrupt
+//! length field cannot trigger a multi-gigabyte allocation.
+//!
+//! Error taxonomy: every failure mode a peer can induce — wrong
+//! magic, version skew, truncation, checksum mismatch, read timeout,
+//! clean close — is a distinct [`WireError`] variant, so callers (and
+//! the fault-injection suite in `tests/net_transport.rs`) can tell
+//! "remote speaks a different protocol" from "remote died mid-frame"
+//! from "remote is gone".
+
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+use std::sync::OnceLock;
+
+/// Frame magic: identifies a fedfp8 wire peer.
+pub const MAGIC: [u8; 4] = *b"FP8W";
+
+/// Wire protocol version. Bump on ANY change to the frame envelope or
+/// to a message body layout in `net::codec`, and regenerate the golden
+/// fixture (`tools/gen_wire_fixture.py`).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Envelope size preceding every body.
+pub const FRAME_HEADER_BYTES: u64 = 16;
+
+/// Upper bound on a frame body — far above any model this repo ships
+/// (a 100M-param FP8 payload is ~100 MB) but small enough that a
+/// corrupted length field cannot OOM the process.
+pub const MAX_BODY_BYTES: u32 = 1 << 30;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker -> server: config fingerprint + model identity.
+    Hello = 1,
+    /// Server -> worker: handshake accepted.
+    HelloAck = 2,
+    /// Server -> worker: one client's work order.
+    Job = 3,
+    /// Worker -> server: one client's result.
+    Outcome = 4,
+    /// Server -> worker: drain and exit cleanly.
+    Shutdown = 5,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Result<FrameKind, WireError> {
+        Ok(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::HelloAck,
+            3 => FrameKind::Job,
+            4 => FrameKind::Outcome,
+            5 => FrameKind::Shutdown,
+            got => return Err(WireError::UnknownKind { got }),
+        })
+    }
+}
+
+/// A received frame: kind + raw body (decoded by `net::codec`).
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub body: Vec<u8>,
+}
+
+impl Frame {
+    /// Total bytes this frame occupied on the wire.
+    pub fn total_bytes(&self) -> u64 {
+        FRAME_HEADER_BYTES + self.body.len() as u64
+    }
+}
+
+/// Typed failure modes of the wire layer.
+#[derive(Debug)]
+pub enum WireError {
+    /// Peer is not speaking the fedfp8 protocol at all.
+    BadMagic { got: [u8; 4] },
+    /// Peer speaks the protocol at an incompatible version.
+    VersionMismatch { got: u16, want: u16 },
+    /// Envelope carried an unassigned frame-kind byte.
+    UnknownKind { got: u8 },
+    /// Connection closed in the middle of a frame.
+    Truncated { context: &'static str },
+    /// Body bytes do not match the envelope checksum.
+    ChecksumMismatch { got: u32, want: u32 },
+    /// A body larger than [`MAX_BODY_BYTES`] (declared by a received
+    /// envelope, or about to be sent).
+    Oversize { len: u64 },
+    /// Read (or write) deadline expired — the peer went silent.
+    Timeout,
+    /// Connection closed cleanly *between* frames (EOF at a frame
+    /// boundary). An orderly shutdown for a serve loop; an error (the
+    /// peer is gone) for a caller awaiting a response.
+    CleanClose,
+    /// Body parsed structurally but a field was invalid
+    /// (codec layer: bad enum byte, short body, trailing bytes...).
+    Malformed { what: String },
+    /// Any other transport-level I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic { got } => write!(
+                f,
+                "bad frame magic {got:02x?} (expected \"FP8W\") — peer \
+                 is not a fedfp8 wire endpoint"
+            ),
+            WireError::VersionMismatch { got, want } => write!(
+                f,
+                "wire version mismatch: peer sent v{got}, this build \
+                 speaks v{want}"
+            ),
+            WireError::UnknownKind { got } => {
+                write!(f, "unknown frame kind {got}")
+            }
+            WireError::Truncated { context } => write!(
+                f,
+                "truncated frame: connection closed mid-{context}"
+            ),
+            WireError::ChecksumMismatch { got, want } => write!(
+                f,
+                "frame checksum mismatch (body crc32 {got:#010x}, \
+                 envelope says {want:#010x}) — corrupted stream"
+            ),
+            WireError::Oversize { len } => write!(
+                f,
+                "frame body of {len} bytes exceeds the \
+                 {MAX_BODY_BYTES}-byte limit"
+            ),
+            WireError::Timeout => {
+                write!(f, "timed out waiting for the peer")
+            }
+            WireError::CleanClose => {
+                write!(f, "connection closed by the peer")
+            }
+            WireError::Malformed { what } => {
+                write!(f, "malformed message body: {what}")
+            }
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl WireError {
+    /// True when the peer simply closed the connection at a frame
+    /// boundary — the orderly end of a serve loop.
+    pub fn is_clean_close(&self) -> bool {
+        matches!(self, WireError::CleanClose)
+    }
+}
+
+fn map_io(e: std::io::Error) -> WireError {
+    match e.kind() {
+        // read/write deadline on a socket with SO_RCVTIMEO/SNDTIMEO:
+        // unix reports WouldBlock, windows TimedOut
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => WireError::Timeout,
+        _ => WireError::Io(e),
+    }
+}
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — matches `zlib.crc32`
+/// in the Python fixture mirror.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 {
+                    0xEDB8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Write one frame; returns the total bytes put on the wire
+/// (envelope + body) so transports can account exactly.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    body: &[u8],
+) -> Result<u64, WireError> {
+    // symmetric with the read side: never put an un-receivable (or,
+    // past u32, length-wrapping) frame on the wire
+    if body.len() as u64 > MAX_BODY_BYTES as u64 {
+        return Err(WireError::Oversize {
+            len: body.len() as u64,
+        });
+    }
+    let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    hdr[6] = kind as u8;
+    hdr[7] = 0;
+    hdr[8..12].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    hdr[12..16].copy_from_slice(&crc32(body).to_le_bytes());
+    w.write_all(&hdr).map_err(map_io)?;
+    w.write_all(body).map_err(map_io)?;
+    w.flush().map_err(map_io)?;
+    Ok(FRAME_HEADER_BYTES + body.len() as u64)
+}
+
+/// Fill `buf` completely; `at_boundary` selects the EOF flavour
+/// (CleanClose for byte 0 of the envelope, Truncated otherwise).
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    at_boundary: bool,
+    context: &'static str,
+) -> Result<(), WireError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if at_boundary && filled == 0 {
+                    WireError::CleanClose
+                } else {
+                    WireError::Truncated { context }
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(map_io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one complete frame, validating magic, version, kind, size
+/// bound and checksum. Never blocks past the stream's read timeout.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
+    read_full(r, &mut hdr, true, "frame header")?;
+    if hdr[0..4] != MAGIC {
+        return Err(WireError::BadMagic {
+            got: [hdr[0], hdr[1], hdr[2], hdr[3]],
+        });
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::VersionMismatch {
+            got: version,
+            want: WIRE_VERSION,
+        });
+    }
+    let kind = FrameKind::from_u8(hdr[6])?;
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+    if len > MAX_BODY_BYTES {
+        return Err(WireError::Oversize { len: len as u64 });
+    }
+    let want = u32::from_le_bytes([hdr[12], hdr[13], hdr[14], hdr[15]]);
+    let mut body = vec![0u8; len as usize];
+    read_full(r, &mut body, false, "frame body")?;
+    let got = crc32(&body);
+    if got != want {
+        return Err(WireError::ChecksumMismatch { got, want });
+    }
+    Ok(Frame { kind, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, FrameKind::Job, b"hello body")
+            .unwrap();
+        assert_eq!(n, buf.len() as u64);
+        assert_eq!(n, FRAME_HEADER_BYTES + 10);
+        let f = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(f.kind, FrameKind::Job);
+        assert_eq!(f.body, b"hello body");
+        assert_eq!(f.total_bytes(), n);
+    }
+
+    #[test]
+    fn two_frames_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Hello, b"a").unwrap();
+        write_frame(&mut buf, FrameKind::Shutdown, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().kind, FrameKind::Hello);
+        assert_eq!(read_frame(&mut r).unwrap().kind, FrameKind::Shutdown);
+        // and then a clean close
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.is_clean_close(), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Outcome, b"0123456789").unwrap();
+        // mid-body cut
+        let cut = &buf[..buf.len() - 3];
+        let err = read_frame(&mut &cut[..]).unwrap_err();
+        assert!(
+            matches!(err, WireError::Truncated { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("truncated"));
+        // mid-header cut is truncation too, not a clean close
+        let cut = &buf[..7];
+        let err = read_frame(&mut &cut[..]).unwrap_err();
+        assert!(matches!(err, WireError::Truncated { .. }), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"x").unwrap();
+        buf[0] = b'N';
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, WireError::BadMagic { .. }), "{err}");
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"x").unwrap();
+        buf[4..6].copy_from_slice(&99u16.to_le_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        match err {
+            WireError::VersionMismatch { got, want } => {
+                assert_eq!((got, want), (99, WIRE_VERSION));
+            }
+            e => panic!("unexpected: {e}"),
+        }
+    }
+
+    #[test]
+    fn checksum_mismatch_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"payload").unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40; // corrupt one body byte
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(
+            matches!(err, WireError::ChecksumMismatch { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("checksum"));
+    }
+
+    #[test]
+    fn oversize_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"x").unwrap();
+        buf[8..12]
+            .copy_from_slice(&(MAX_BODY_BYTES + 1).to_le_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, WireError::Oversize { .. }), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"x").unwrap();
+        buf[6] = 77;
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, WireError::UnknownKind { got: 77 }), "{err}");
+    }
+}

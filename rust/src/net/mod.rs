@@ -1,0 +1,34 @@
+//! Networked transport: the wire protocol that lets one federated
+//! round physically span processes.
+//!
+//! Four layers, bottom-up:
+//!
+//! * [`frame`] — length-prefixed frames with a magic/version header
+//!   and CRC-32 checksum; every peer-inducible failure is a typed
+//!   [`frame::WireError`].
+//! * [`codec`] — message bodies: [`codec::WireJob`] /
+//!   [`codec::WireOutcome`] (the serialized forms of
+//!   `ClientJob`/`ClientOutcome`) and the [`codec::Hello`] handshake.
+//! * [`socket`] — [`socket::SocketTransport`], the TCP-backed
+//!   `Transport` the server's round loop drives exactly like the
+//!   in-process one.
+//! * [`worker`] — the worker-side serve loop wrapping the existing
+//!   local executor.
+//!
+//! Determinism: a networked round is bit-identical to
+//! `InProcessTransport` at any parallelism, because the wire moves
+//! exactly the bytes the FP8 codec already produces (the encoded
+//! broadcast down, the encoded uplink back) and both sides decode
+//! them with the same pure functions. Enforced by
+//! `tests/net_transport.rs`; the byte layout itself is pinned by
+//! `tests/golden_wire.rs` against `tests/fixtures/wire_v1.bin`.
+
+pub mod codec;
+pub mod frame;
+pub mod socket;
+pub mod worker;
+
+pub use codec::{Hello, WireJob, WireOutcome};
+pub use frame::{WireError, WIRE_VERSION};
+pub use socket::{accept_workers, SocketTransport};
+pub use worker::{connect, serve_conn, WorkerCtx};

@@ -1,0 +1,278 @@
+//! `SocketTransport` — the [`Transport`] implementation that runs a
+//! round's clients on remote worker processes over TCP.
+//!
+//! One pooled connection per worker, **one in-flight job per
+//! connection**: `run_cohort`'s scoped threads each check a connection
+//! out of the pool, exchange exactly one Job/Outcome frame pair with
+//! blocking I/O, and return it. If the cohort fan-out is wider than
+//! the pool, surplus threads block on a condvar until a connection
+//! frees up — results are bit-identical either way (determinism comes
+//! from counter-derived RNG streams and in-order aggregation, never
+//! from scheduling).
+//!
+//! Every pooled stream carries a **read/write timeout**, so a silent
+//! or wedged worker surfaces as a typed `WireError::Timeout` naming
+//! the client — a round can fail, but it can never hang. A connection
+//! that errors in any way is discarded (never returned to the pool):
+//! the stream state after a failed exchange is unknowable, and the
+//! next round must not inherit it. When every connection is gone the
+//! next checkout fails fast instead of waiting forever.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::comm::Uplink;
+use crate::coordinator::transport::{
+    ClientJob, ClientOutcome, Transport, WorkBuffers,
+};
+
+use super::codec::{self, Hello};
+use super::frame::{self, FrameKind};
+
+/// One pooled worker connection.
+struct Conn {
+    stream: TcpStream,
+    /// Peer address, for error messages ("which worker failed?").
+    peer: String,
+    /// Reused job-serialization buffer: one payload-sized allocation
+    /// per connection for the life of the run, not one per message.
+    buf: Vec<u8>,
+}
+
+struct Pool {
+    idle: Vec<Conn>,
+    /// Live connections (idle + checked out). Reaches 0 only when
+    /// every worker has been discarded after an error.
+    live: usize,
+}
+
+/// TCP-backed client-execution transport (server side).
+pub struct SocketTransport {
+    pool: Mutex<Pool>,
+    available: Condvar,
+    /// Job-frame bytes written (exactly the downlink frame bytes).
+    bytes_sent: AtomicU64,
+    /// Outcome-frame bytes read (exactly the uplink frame bytes).
+    bytes_received: AtomicU64,
+}
+
+/// Accept `n` worker connections from `listener`, handshake each one
+/// against `hello` (config fingerprint + model identity), and build
+/// the transport. Every accepted stream gets `timeout` as its
+/// read/write deadline — the "never hang" guarantee.
+pub fn accept_workers(
+    listener: &TcpListener,
+    n: usize,
+    hello: &Hello,
+    timeout: Duration,
+) -> Result<SocketTransport> {
+    ensure!(n >= 1, "need at least one worker connection");
+    ensure!(!timeout.is_zero(), "worker read timeout must be non-zero");
+    let mut idle = Vec::with_capacity(n);
+    let mut ack = Vec::new();
+    for _ in 0..n {
+        let (mut stream, peer) = listener
+            .accept()
+            .context("accepting a worker connection")?;
+        let peer = peer.to_string();
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(timeout))
+            .context("setting worker read timeout")?;
+        stream
+            .set_write_timeout(Some(timeout))
+            .context("setting worker write timeout")?;
+        let f = frame::read_frame(&mut stream)
+            .with_context(|| format!("handshake with worker {peer}"))?;
+        ensure!(
+            f.kind == FrameKind::Hello,
+            "worker {peer} opened with a {:?} frame, expected Hello",
+            f.kind
+        );
+        let h = codec::decode_hello(&f.body)
+            .with_context(|| format!("handshake with worker {peer}"))?;
+        ensure!(
+            h.fingerprint == hello.fingerprint,
+            "config fingerprint mismatch with worker {peer}: server \
+             {:#018x}, worker {:#018x} — launch every worker with the \
+             identical preset and overrides",
+            hello.fingerprint,
+            h.fingerprint
+        );
+        ensure!(
+            h.model == hello.model,
+            "model mismatch with worker {peer}: server runs '{}', \
+             worker runs '{}'",
+            hello.model,
+            h.model
+        );
+        ensure!(
+            h.dim == hello.dim,
+            "model dim mismatch with worker {peer}: server {}, worker {}",
+            hello.dim,
+            h.dim
+        );
+        codec::encode_hello_ack(hello.fingerprint, &mut ack);
+        frame::write_frame(&mut stream, FrameKind::HelloAck, &ack)
+            .with_context(|| format!("acking worker {peer}"))?;
+        idle.push(Conn {
+            stream,
+            peer,
+            buf: Vec::new(),
+        });
+    }
+    Ok(SocketTransport {
+        pool: Mutex::new(Pool { idle, live: n }),
+        available: Condvar::new(),
+        bytes_sent: AtomicU64::new(0),
+        bytes_received: AtomicU64::new(0),
+    })
+}
+
+impl SocketTransport {
+    /// Total Job-frame bytes sent to workers so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Total Outcome-frame bytes received from workers so far.
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received.load(Ordering::Relaxed)
+    }
+
+    /// Live worker connections (diagnostics / tests).
+    pub fn live_workers(&self) -> usize {
+        self.pool.lock().unwrap().live
+    }
+
+    fn checkout(&self) -> Result<Conn> {
+        let mut pool = self.pool.lock().unwrap();
+        loop {
+            if let Some(c) = pool.idle.pop() {
+                return Ok(c);
+            }
+            ensure!(
+                pool.live > 0,
+                "no live worker connections left (all were discarded \
+                 after errors)"
+            );
+            pool = self.available.wait(pool).unwrap();
+        }
+    }
+
+    fn checkin(&self, conn: Conn) {
+        self.pool.lock().unwrap().idle.push(conn);
+        self.available.notify_one();
+    }
+
+    fn discard(&self, conn: Conn) {
+        drop(conn); // closes the stream
+        self.pool.lock().unwrap().live -= 1;
+        // wake every waiter: they must re-check `live`
+        self.available.notify_all();
+    }
+
+    /// One blocking job/outcome exchange on one connection.
+    fn exchange(
+        &self,
+        conn: &mut Conn,
+        job: &ClientJob<'_>,
+    ) -> Result<ClientOutcome> {
+        codec::encode_job_from(job, &mut conn.buf);
+        let sent = frame::write_frame(
+            &mut conn.stream,
+            FrameKind::Job,
+            &conn.buf,
+        )
+        .context("sending job frame")?;
+        self.bytes_sent.fetch_add(sent, Ordering::Relaxed);
+        let f = frame::read_frame(&mut conn.stream)
+            .context("awaiting outcome frame")?;
+        self.bytes_received
+            .fetch_add(f.total_bytes(), Ordering::Relaxed);
+        ensure!(
+            f.kind == FrameKind::Outcome,
+            "worker sent a {:?} frame where an Outcome was expected",
+            f.kind
+        );
+        let out =
+            codec::decode_outcome(&f.body).context("decoding outcome")?;
+        ensure!(
+            out.client as usize == job.client
+                && out.round as usize == job.round,
+            "worker answered for client {} round {}, expected client \
+             {} round {}",
+            out.client,
+            out.round,
+            job.client,
+            job.round
+        );
+        ensure!(
+            out.n_k == job.n_k,
+            "worker reported n_k {} for client {}, server expected {} \
+             — worlds out of sync despite matching fingerprints?",
+            out.n_k,
+            job.client,
+            job.n_k
+        );
+        Ok(ClientOutcome {
+            uplink: Uplink {
+                payload: out.payload,
+                client: job.client,
+                n_k: out.n_k,
+                mean_loss: out.mean_loss,
+            },
+            ef: out.ef,
+        })
+    }
+
+    /// Politely close every idle connection (Shutdown frame + drop) so
+    /// workers exit their serve loops cleanly. Best-effort: a worker
+    /// that is already gone is simply dropped.
+    pub fn shutdown(&self) {
+        let drained: Vec<Conn> = {
+            let mut pool = self.pool.lock().unwrap();
+            let drained: Vec<Conn> = pool.idle.drain(..).collect();
+            pool.live -= drained.len();
+            drained
+        };
+        for mut conn in drained {
+            let _ = frame::write_frame(
+                &mut conn.stream,
+                FrameKind::Shutdown,
+                &[],
+            );
+        }
+        self.available.notify_all();
+    }
+}
+
+impl Transport for SocketTransport {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        _buffers: &mut WorkBuffers,
+    ) -> Result<ClientOutcome> {
+        let (client, round) = (job.client, job.round);
+        let mut conn = self.checkout().with_context(|| {
+            format!("dispatching client {client} round {round}")
+        })?;
+        match self.exchange(&mut conn, &job) {
+            Ok(out) => {
+                self.checkin(conn);
+                Ok(out)
+            }
+            Err(e) => {
+                let peer = conn.peer.clone();
+                self.discard(conn);
+                Err(e.context(format!(
+                    "client {client} round {round} via worker {peer}"
+                )))
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Worker side of the networked transport: handshake, world
+//! reconstruction context, and the blocking serve loop.
+//!
+//! A worker is a thin shell around the *existing* local executor: it
+//! decodes a [`WireJob`] into a regular [`ClientJob`] (rebuilding
+//! `w_start` bit-exactly by decoding the FP8 broadcast it received),
+//! hands it to any [`Transport`] implementation — the real
+//! `InProcessTransport` in the CLI driver, deterministic mocks in the
+//! loopback tests — and streams the outcome back. Because the uplink
+//! is packed by the same `finish_uplink` path with the same
+//! counter-derived RNG streams, a worker's bytes are identical to
+//! what the in-process simulation would have produced.
+//!
+//! [`WireJob`]: super::codec::WireJob
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::fp8::codec::{self as fp8codec, DecodeLutCache, Segment};
+use crate::coordinator::transport::{ClientJob, Transport, WorkBuffers};
+
+use super::codec::{self, Hello, WireOutcome};
+use super::frame::{self, FrameKind};
+
+/// Everything a worker derives locally instead of receiving on the
+/// wire: the synthetic dataset, the client shards and the model's
+/// segment table — all pure functions of (config, manifest), rebuilt
+/// by `coordinator::server::build_world` and pinned to the server's
+/// copy by the handshake fingerprint.
+pub struct WorkerCtx<'a> {
+    pub train: &'a Dataset,
+    pub shards: &'a [Vec<usize>],
+    pub segments: &'a [Segment],
+}
+
+/// Connect to a server, perform the Hello/HelloAck handshake and
+/// return the stream ready for [`serve_conn`]. `timeout` bounds the
+/// handshake only; the serve loop then blocks indefinitely waiting
+/// for work (idle gaps between rounds are normal).
+pub fn connect(
+    addr: &str,
+    hello: &Hello,
+    timeout: Duration,
+) -> Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to server {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(timeout))
+        .context("setting handshake timeout")?;
+    let mut body = Vec::new();
+    codec::encode_hello(hello, &mut body);
+    frame::write_frame(&mut stream, FrameKind::Hello, &body)
+        .context("sending Hello")?;
+    let f = frame::read_frame(&mut stream)
+        .context("awaiting HelloAck (did the server reject the \
+                  handshake? check its log)")?;
+    ensure!(
+        f.kind == FrameKind::HelloAck,
+        "expected HelloAck, server sent {:?}",
+        f.kind
+    );
+    let fp = codec::decode_hello_ack(&f.body)?;
+    ensure!(
+        fp == hello.fingerprint,
+        "server acked fingerprint {fp:#018x}, ours is {:#018x}",
+        hello.fingerprint
+    );
+    // the serve loop waits for work without a deadline
+    stream
+        .set_read_timeout(None)
+        .context("clearing handshake timeout")?;
+    Ok(stream)
+}
+
+/// Serve one connection until the server shuts it down (Shutdown
+/// frame or a clean close between frames). Every decoded job runs on
+/// `executor`; outcomes stream back on the same connection.
+pub fn serve_conn(
+    stream: &mut TcpStream,
+    executor: &dyn Transport,
+    ctx: &WorkerCtx<'_>,
+) -> Result<()> {
+    let mut buffers = WorkBuffers::default();
+    let mut lut = DecodeLutCache::default();
+    let mut w_start: Vec<f32> = Vec::new();
+    let mut out_body = Vec::new();
+    loop {
+        let f = match frame::read_frame(stream) {
+            Ok(f) => f,
+            Err(e) if e.is_clean_close() => return Ok(()),
+            Err(e) => {
+                return Err(e).context("reading next job frame")
+            }
+        };
+        match f.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Job => {}
+            k => bail!("unexpected {k:?} frame in the serve loop"),
+        }
+        let wire = codec::decode_job(&f.body)
+            .context("decoding job frame")?;
+        let client = wire.client as usize;
+        let round = wire.round as usize;
+        ensure!(
+            client < ctx.shards.len(),
+            "job for client {client}, but this world has only {} \
+             clients — configs out of sync despite matching \
+             fingerprints?",
+            ctx.shards.len()
+        );
+        let shard = &ctx.shards[client];
+        ensure!(
+            wire.n_k == shard.len() as u64,
+            "job for client {client} says n_k = {}, local shard has \
+             {} samples — worlds diverged",
+            wire.n_k,
+            shard.len()
+        );
+        // hard reset: decode the broadcast exactly as the server did
+        // (decode is a pure LUT function of the payload bytes, so
+        // this w_start is bit-identical to the server's)
+        fp8codec::decode_into_pooled(
+            &wire.down,
+            ctx.segments,
+            &mut lut,
+            1,
+            &mut w_start,
+        );
+        let job = ClientJob {
+            round,
+            client,
+            seed: wire.seed,
+            qat: wire.qat,
+            lr: wire.lr,
+            weight_decay: wire.weight_decay,
+            flip_aug: wire.flip_aug,
+            comm: wire.comm,
+            w_start: &w_start,
+            alpha_start: &wire.down.alphas,
+            beta_start: &wire.down.betas,
+            train: ctx.train,
+            shard,
+            segments: ctx.segments,
+            n_k: wire.n_k,
+            ef: wire.ef,
+            down: &wire.down,
+        };
+        let out = executor.run_client(job, &mut buffers).with_context(
+            || format!("executing client {client} round {round}"),
+        )?;
+        let wire_out = WireOutcome {
+            round: round as u32,
+            client: client as u32,
+            n_k: out.uplink.n_k,
+            mean_loss: out.uplink.mean_loss,
+            payload: out.uplink.payload,
+            ef: out.ef,
+        };
+        codec::encode_outcome(&wire_out, &mut out_body);
+        frame::write_frame(stream, FrameKind::Outcome, &out_body)
+            .with_context(|| {
+                format!("returning outcome for client {client}")
+            })?;
+    }
+}

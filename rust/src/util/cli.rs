@@ -56,6 +56,13 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// An option that must be present in context `why` (e.g. a flag
+    /// implied by the chosen subcommand/role).
+    pub fn required(&self, name: &str, why: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("{why} requires --{name}"))
+    }
+
     pub fn parse_or<T: std::str::FromStr>(
         &self,
         name: &str,
@@ -96,6 +103,17 @@ mod tests {
         assert_eq!(a.parse_or("rounds", 10usize).unwrap(), 25);
         assert_eq!(a.parse_or("seed", 7u64).unwrap(), 7);
         assert!(args("--rounds x").parse_or("rounds", 1usize).is_err());
+    }
+
+    #[test]
+    fn required_reports_context() {
+        let a = args("--listen 127.0.0.1:7878");
+        assert_eq!(
+            a.required("listen", "--role server").unwrap(),
+            "127.0.0.1:7878"
+        );
+        let e = a.required("connect", "--role worker").unwrap_err();
+        assert!(e.to_string().contains("--connect"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Networked-transport suite: loopback equivalence + fault injection.
+//!
+//! **Equivalence** — a full multi-round experiment driven through
+//! `SocketTransport` against worker serve loops on `127.0.0.1` must
+//! be *bit-identical* to the same experiment on `InProcessTransport`:
+//! final weights, per-segment alphas, betas, per-round losses and
+//! CommStats, at parallelism 1 and 4 (and with an oversubscribed
+//! connection pool). The workers run the same deterministic mock
+//! executor (`tests/common/mod.rs`) on a world they rebuild from
+//! their own copy of the config — exactly the production worker flow.
+//!
+//! **Accounting** — with error feedback off, the bytes the transport
+//! physically moved must equal the bytes `CommStats` reported
+//! (`reported == actual` is the point of charging real frame
+//! overheads in `coordinator/comm.rs`).
+//!
+//! **Faults** — a truncated frame, wrong magic, version mismatch, a
+//! worker disconnect mid-round and a silent worker must each surface
+//! as a typed error naming the client id, never a hang (the server
+//! side always reads under a deadline).
+
+mod common;
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use common::{mock_cfg, mock_manifest, run_mock, MockTransport, Trace};
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::{build_world, Server};
+use fedfp8::net::worker::WorkerCtx;
+use fedfp8::net::{self, frame, Hello};
+use fedfp8::net::frame::FrameKind;
+use fedfp8::runtime::Engine;
+
+fn hello_for(cfg: &ExperimentConfig) -> Hello {
+    Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: common::DIM as u64,
+        model: "mock".into(),
+    }
+}
+
+/// Run the full mock experiment through `SocketTransport` against
+/// `workers` in-thread serve loops; returns the bit-exact trace.
+fn run_socket(
+    parallelism: usize,
+    workers: usize,
+    error_feedback: bool,
+) -> Trace {
+    let tag = format!("net_p{parallelism}_w{workers}_ef{error_feedback}");
+    let (dir, manifest) = mock_manifest(&tag);
+    let engine = Engine::new(&dir).unwrap();
+    let cfg = mock_cfg(parallelism, error_feedback);
+    let model = manifest.model("mock").unwrap();
+    let world = build_world(&cfg, model).unwrap();
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let exec = MockTransport::new(true);
+    let rounds = cfg.rounds;
+    let ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+    };
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let (addr, hello, exec, ctx) = (&addr, &hello, &exec, &ctx);
+            s.spawn(move || {
+                let mut stream = net::connect(
+                    addr,
+                    hello,
+                    Duration::from_secs(20),
+                )
+                .expect("worker handshake");
+                net::serve_conn(&mut stream, exec, ctx)
+                    .expect("worker serve loop");
+            });
+        }
+        let transport = net::accept_workers(
+            &listener,
+            workers,
+            &hello,
+            Duration::from_secs(20),
+        )
+        .expect("server handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        if !error_feedback {
+            // reported == actual: CommStats byte counts must equal
+            // the frame bytes that physically crossed the sockets
+            // (EF residual blocks are the documented exclusion)
+            assert_eq!(
+                transport.bytes_sent(),
+                trace.comm.down_bytes,
+                "downlink accounting != actual job-frame bytes"
+            );
+            assert_eq!(
+                transport.bytes_received(),
+                trace.comm.up_bytes,
+                "uplink accounting != actual outcome-frame bytes"
+            );
+        }
+        drop(server);
+        transport.shutdown();
+        trace
+    })
+}
+
+#[test]
+fn loopback_equals_in_process_at_parallelism_1_and_4() {
+    let base1 = run_mock(1, false);
+    let net1 = run_socket(1, 1, false);
+    assert_eq!(net1, base1, "socket run diverged at parallelism 1");
+    let base4 = run_mock(4, false);
+    let net4 = run_socket(4, 4, false);
+    assert_eq!(net4, base4, "socket run diverged at parallelism 4");
+    // and parallelism itself is invisible either way
+    assert_eq!(base1.w, base4.w);
+    assert_eq!(net1.w, net4.w);
+}
+
+#[test]
+fn loopback_is_deterministic_with_oversubscribed_pool() {
+    // 4-way cohort fan-out over only 2 worker connections: checkout
+    // contention changes scheduling, never results
+    let base = run_mock(4, false);
+    let net = run_socket(4, 2, false);
+    assert_eq!(net, base, "oversubscribed pool changed results");
+}
+
+#[test]
+fn loopback_round_trips_error_feedback_residuals() {
+    // EF residuals ride the wire in both directions; the trajectory
+    // must still be bit-identical to the in-process run
+    let base = run_mock(4, true);
+    let net = run_socket(4, 4, true);
+    assert_eq!(net.w, base.w);
+    assert_eq!(net.alpha, base.alpha);
+    assert_eq!(net.losses, base.losses);
+    assert_eq!(net.comm, base.comm);
+}
+
+#[test]
+fn handshake_rejects_mismatched_config() {
+    let cfg = mock_cfg(1, false);
+    let mut other = cfg.clone();
+    other.seed += 1; // a worker launched with the wrong seed
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_hello = hello_for(&cfg);
+    let worker_hello = hello_for(&other);
+    assert_ne!(server_hello.fingerprint, worker_hello.fingerprint);
+    thread::scope(|s| {
+        s.spawn(|| {
+            // the worker's connect() fails too (no ack arrives), but
+            // the authoritative, actionable error is the server's
+            let _ = net::connect(
+                &addr,
+                &worker_hello,
+                Duration::from_secs(10),
+            );
+        });
+        let err = net::accept_workers(
+            &listener,
+            1,
+            &server_hello,
+            Duration::from_secs(10),
+        )
+        .unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(
+            msg.contains("fingerprint mismatch"),
+            "unexpected handshake error: {msg}"
+        );
+    });
+}
+
+// ---- fault injection ------------------------------------------------
+
+/// Drive one round against a single fake worker whose behaviour after
+/// the handshake is `misbehave`; returns the server-side round error.
+fn round_error_with_fake_worker(
+    tag: &str,
+    timeout: Duration,
+    misbehave: impl FnOnce(&mut TcpStream) + Send,
+) -> String {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(1, false);
+    // a single client, so the error must name "client 0"
+    cfg.clients = 1;
+    cfg.participation = 1;
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::scope(|s| {
+        let (addr, hello) = (&addr, &hello);
+        s.spawn(move || {
+            let mut stream = net::connect(
+                addr,
+                hello,
+                Duration::from_secs(10),
+            )
+            .expect("fake worker handshake");
+            // receive the job like a real worker would...
+            frame::read_frame(&mut stream).expect("job frame");
+            // ...then misbehave
+            misbehave(&mut stream);
+        });
+        let transport = net::accept_workers(
+            &listener,
+            1,
+            hello,
+            timeout,
+        )
+        .expect("handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let err = server.round(0).unwrap_err();
+        format!("{err:?}")
+    })
+}
+
+#[test]
+fn worker_disconnect_mid_round_names_the_client() {
+    let msg = round_error_with_fake_worker(
+        "disc",
+        Duration::from_secs(10),
+        |stream| {
+            // drop the connection instead of answering
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(msg.contains("closed"), "not a disconnect error: {msg}");
+}
+
+#[test]
+fn truncated_outcome_frame_names_the_client() {
+    let msg = round_error_with_fake_worker(
+        "trunc",
+        Duration::from_secs(10),
+        |stream| {
+            // a syntactically valid envelope announcing a 64-byte
+            // body, then only 10 bytes and a close
+            let mut fake = Vec::new();
+            frame::write_frame(
+                &mut fake,
+                FrameKind::Outcome,
+                &[0u8; 64],
+            )
+            .unwrap();
+            use std::io::Write;
+            stream
+                .write_all(&fake[..frame::FRAME_HEADER_BYTES as usize + 10])
+                .unwrap();
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(msg.contains("truncated"), "not a truncation error: {msg}");
+}
+
+#[test]
+fn wrong_magic_names_the_client() {
+    let msg = round_error_with_fake_worker(
+        "magic",
+        Duration::from_secs(10),
+        |stream| {
+            use std::io::Write;
+            stream.write_all(&[b'N'; 64]).unwrap();
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(msg.contains("magic"), "not a bad-magic error: {msg}");
+}
+
+#[test]
+fn version_mismatch_names_the_client() {
+    let msg = round_error_with_fake_worker(
+        "ver",
+        Duration::from_secs(10),
+        |stream| {
+            let mut fake = Vec::new();
+            frame::write_frame(&mut fake, FrameKind::Outcome, b"x")
+                .unwrap();
+            fake[4..6].copy_from_slice(&99u16.to_le_bytes());
+            use std::io::Write;
+            stream.write_all(&fake).unwrap();
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(
+        msg.contains("version mismatch") && msg.contains("v99"),
+        "not a version error: {msg}"
+    );
+}
+
+#[test]
+fn silent_worker_times_out_instead_of_hanging() {
+    let msg = round_error_with_fake_worker(
+        "hang",
+        Duration::from_millis(400),
+        |_stream| {
+            // say nothing until the server gives up
+            std::thread::sleep(Duration::from_millis(1500));
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(msg.contains("timed out"), "not a timeout error: {msg}");
+}
+
+#[test]
+fn corrupted_outcome_checksum_names_the_client() {
+    let msg = round_error_with_fake_worker(
+        "crc",
+        Duration::from_secs(10),
+        |stream| {
+            let mut fake = Vec::new();
+            frame::write_frame(
+                &mut fake,
+                FrameKind::Outcome,
+                &[7u8; 40],
+            )
+            .unwrap();
+            let last = fake.len() - 1;
+            fake[last] ^= 0xFF;
+            use std::io::Write;
+            stream.write_all(&fake).unwrap();
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        },
+    );
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(msg.contains("checksum"), "not a checksum error: {msg}");
+}

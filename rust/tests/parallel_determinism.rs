@@ -9,231 +9,18 @@
 //!   client completion.
 //!
 //! The real-engine twin of these tests (artifact-gated) lives in
-//! tests/integration.rs.
+//! tests/integration.rs; the cross-process twin (socket transport)
+//! lives in tests/net_transport.rs. The shared mock harness is
+//! tests/common/mod.rs.
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::{Duration, Instant};
+mod common;
 
-use anyhow::{bail, Result};
-use fedfp8::config::ExperimentConfig;
-use fedfp8::coordinator::client::LocalUpdate;
-use fedfp8::coordinator::comm::CommStats;
-use fedfp8::coordinator::transport::{
-    finish_uplink, ClientJob, ClientOutcome, Transport, WorkBuffers,
-};
+use std::sync::atomic::Ordering;
+
+use common::{mock_cfg, mock_manifest, run_mock, MockTransport};
+use fedfp8::coordinator::transport::Transport;
 use fedfp8::coordinator::Server;
-use fedfp8::fp8::codec::Segment;
-use fedfp8::fp8::rng::Pcg32;
-use fedfp8::runtime::{Engine, Manifest, ModelInfo};
-
-const DIM: usize = 24;
-
-fn write_f32(path: &Path, vals: &[f32]) {
-    let bytes: Vec<u8> =
-        vals.iter().flat_map(|v| v.to_le_bytes()).collect();
-    std::fs::write(path, bytes).unwrap();
-}
-
-/// Build an in-memory manifest for a tiny synthetic "mock" model plus
-/// its init files on disk — no AOT artifacts involved.
-fn mock_manifest(tag: &str) -> (PathBuf, Manifest) {
-    let dir = std::env::temp_dir()
-        .join(format!("fedfp8_mockman_{}_{tag}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    let w: Vec<f32> = (0..DIM).map(|i| i as f32 * 0.05 - 0.5).collect();
-    write_f32(&dir.join("w.bin"), &w);
-    write_f32(&dir.join("alpha.bin"), &[1.0]);
-    write_f32(&dir.join("beta.bin"), &[2.0]);
-    let segments = vec![
-        Segment {
-            name: "w".into(),
-            offset: 0,
-            size: 20,
-            quantized: true,
-            alpha_idx: Some(0),
-        },
-        Segment {
-            name: "bias".into(),
-            offset: 20,
-            size: 4,
-            quantized: false,
-            alpha_idx: None,
-        },
-    ];
-    let mut init = BTreeMap::new();
-    init.insert("w".to_string(), "w.bin".to_string());
-    init.insert("alpha".to_string(), "alpha.bin".to_string());
-    init.insert("beta".to_string(), "beta.bin".to_string());
-    let info = ModelInfo {
-        name: "mock".into(),
-        dim: DIM,
-        alpha_dim: 1,
-        n_act: 1,
-        classes: 4,
-        kind: "vision".into(),
-        input_shape: vec![8, 8, 3],
-        u_steps: 2,
-        batch: 4,
-        eval_batch: 8,
-        server_p: 0,
-        optimizer: "sgd".into(),
-        segments,
-        artifacts: BTreeMap::new(),
-        init,
-    };
-    let mut models = BTreeMap::new();
-    models.insert("mock".to_string(), info);
-    let manifest = Manifest {
-        dir: dir.clone(),
-        models,
-        quant_demo: None,
-    };
-    (dir, manifest)
-}
-
-fn mock_cfg(parallelism: usize, error_feedback: bool) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::base("mlp_c10")
-        .unwrap()
-        .with_method(if error_feedback { "bq_ef" } else { "uq" })
-        .unwrap();
-    cfg.model = "mock".into();
-    cfg.name = format!("mock_par{parallelism}");
-    cfg.clients = 6;
-    cfg.participation = 4;
-    cfg.rounds = 4;
-    cfg.n_train = 96;
-    cfg.n_test = 32;
-    cfg.eval_every = 1000;
-    cfg.seed = 11;
-    cfg.parallelism = parallelism;
-    cfg
-}
-
-/// Mock client executor: a deterministic pure-function "local update"
-/// plus per-client sleep jitter so later cohort positions finish
-/// *earlier* — stressing the reorder buffer. Uplink packing goes
-/// through the same `finish_uplink` path as the real transport.
-struct MockTransport {
-    jitter: bool,
-    /// When `Some(n)`: each client blocks (bounded) until `n` clients
-    /// are in flight simultaneously — a deterministic concurrency
-    /// detector that cannot false-negative on a slow scheduler.
-    rendezvous: Option<usize>,
-    fail_client: Option<usize>,
-    active: AtomicUsize,
-    max_active: AtomicUsize,
-}
-
-impl MockTransport {
-    fn new(jitter: bool) -> MockTransport {
-        MockTransport {
-            jitter,
-            rendezvous: None,
-            fail_client: None,
-            active: AtomicUsize::new(0),
-            max_active: AtomicUsize::new(0),
-        }
-    }
-}
-
-impl Transport for MockTransport {
-    fn run_client(
-        &self,
-        job: ClientJob<'_>,
-        buffers: &mut WorkBuffers,
-    ) -> Result<ClientOutcome> {
-        let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
-        self.max_active.fetch_max(now, Ordering::SeqCst);
-        if self.jitter {
-            // pseudo-random per-client delays so completion order
-            // differs from cohort order, stressing the reorder buffer
-            std::thread::sleep(Duration::from_millis(
-                (job.client as u64 * 31 % 7) * 4,
-            ));
-        }
-        if let Some(target) = self.rendezvous {
-            // proceed once `target` clients are in flight at once; a
-            // non-concurrent executor times out here and the caller's
-            // max_active assert fails instead of the test hanging
-            let deadline = Instant::now() + Duration::from_secs(10);
-            while self.active.load(Ordering::SeqCst) < target
-                && Instant::now() < deadline
-            {
-                std::thread::sleep(Duration::from_millis(1));
-            }
-        }
-        self.active.fetch_sub(1, Ordering::SeqCst);
-        if self.fail_client == Some(job.client) {
-            bail!("injected failure for client {}", job.client);
-        }
-        let mut rng = Pcg32::derive(
-            job.seed,
-            job.round as u64,
-            job.client as u64,
-            0x4D4F_434B, // "MOCK"
-        );
-        let w: Vec<f32> = job
-            .w_start
-            .iter()
-            .enumerate()
-            .map(|(i, &w)| {
-                0.8 * w
-                    + 0.05 * rng.uniform()
-                    + 0.002 * (job.client as f32 - i as f32 * 0.1)
-            })
-            .collect();
-        let alpha: Vec<f32> = job
-            .alpha_start
-            .iter()
-            .map(|a| a * (1.0 + 0.01 * job.client as f32))
-            .collect();
-        let upd = LocalUpdate {
-            w,
-            alpha,
-            beta: job.beta_start.to_vec(),
-            mean_loss: 1.0 / (job.client + 1) as f32,
-        };
-        Ok(finish_uplink(job, upd, buffers))
-    }
-}
-
-struct Trace {
-    w: Vec<u32>,
-    alpha: Vec<u32>,
-    beta: Vec<u32>,
-    comm: CommStats,
-    losses: Vec<u32>,
-}
-
-fn run_mock(parallelism: usize, error_feedback: bool) -> Trace {
-    let tag = format!("det_p{parallelism}_ef{error_feedback}");
-    let (dir, manifest) = mock_manifest(&tag);
-    let engine = Engine::new(&dir).unwrap();
-    let transport = MockTransport::new(true);
-    let cfg = mock_cfg(parallelism, error_feedback);
-    let rounds = cfg.rounds;
-    let mut server = Server::with_transport(
-        &engine,
-        &manifest,
-        cfg,
-        Box::new(&transport),
-    )
-    .unwrap();
-    let mut losses = Vec::new();
-    for t in 0..rounds {
-        losses.push(server.round(t).unwrap().to_bits());
-    }
-    let (w, a, b) = server.state();
-    Trace {
-        w: w.iter().map(|v| v.to_bits()).collect(),
-        alpha: a.iter().map(|v| v.to_bits()).collect(),
-        beta: b.iter().map(|v| v.to_bits()).collect(),
-        comm: server.comm_stats(),
-        losses,
-    }
-}
+use fedfp8::runtime::Engine;
 
 #[test]
 fn parallelism_is_bit_invisible() {

@@ -445,6 +445,78 @@ fn prop_comm_accounting_matches_payload_sizes() {
 }
 
 #[test]
+fn prop_wire_messages_roundtrip_identity() {
+    // net codec: framed encode -> decode is the identity for
+    // arbitrary payload shapes — including empty segments (zero-size
+    // codes/raw/alphas/betas sections) and zero-client edge cases
+    // (client id 0, n_k 0, empty shards, empty EF residuals)
+    use fedfp8::config::QatMode;
+    use fedfp8::net::{codec as net_codec, frame, WireJob, WireOutcome};
+
+    forall("wire-roundtrip", 31, 150, |g| {
+        let payload = codec::WirePayload {
+            codes: (0..g.usize_in(0, 300))
+                .map(|_| g.rng.next_u32() as u8)
+                .collect(),
+            raw: g.vec_f32(g.usize_in(0, 40), 2.0),
+            alphas: g.vec_f32(g.usize_in(0, 5), 1.0),
+            betas: g.vec_f32(g.usize_in(0, 4), 1.0),
+        };
+        let ef = if g.bool() {
+            Some(g.vec_f32(g.usize_in(0, 50), 0.5))
+        } else {
+            None
+        };
+        let job = WireJob {
+            round: g.usize_in(0, 10_000) as u32,
+            client: g.usize_in(0, 500) as u32,
+            seed: g.rng.next_u64(),
+            qat: [QatMode::Det, QatMode::Rand, QatMode::None]
+                [g.rng.below(3)],
+            comm: [
+                Rounding::Deterministic,
+                Rounding::Stochastic,
+                Rounding::None,
+            ][g.rng.below(3)],
+            flip_aug: g.bool(),
+            lr: g.f32_in(-2.0, 2.0),
+            weight_decay: g.f32_in(0.0, 0.1),
+            n_k: g.usize_in(0, 1_000) as u64,
+            down: payload.clone(),
+            ef: ef.clone(),
+        };
+        // frame it exactly as the transport would, then read it back
+        let mut body = Vec::new();
+        net_codec::encode_job(&job, &mut body);
+        let mut framed = Vec::new();
+        frame::write_frame(&mut framed, frame::FrameKind::Job, &body)
+            .map_err(|e| e.to_string())?;
+        let f = frame::read_frame(&mut &framed[..])
+            .map_err(|e| e.to_string())?;
+        let back = net_codec::decode_job(&f.body)
+            .map_err(|e| e.to_string())?;
+        if back != job {
+            return Err("job roundtrip not identity".into());
+        }
+        let out = WireOutcome {
+            round: job.round,
+            client: job.client,
+            n_k: job.n_k,
+            mean_loss: g.f32_in(-5.0, 5.0),
+            payload,
+            ef,
+        };
+        net_codec::encode_outcome(&out, &mut body);
+        let back = net_codec::decode_outcome(&body)
+            .map_err(|e| e.to_string())?;
+        if back != out {
+            return Err("outcome roundtrip not identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_stochastic_unbiased_mean() {
     // statistical unbiasedness across a range of alphas (Lemma 3)
     forall("rand-unbiased", 19, 12, |g| {

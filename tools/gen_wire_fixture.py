@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Reference mirror of the fedfp8 wire format v1 + golden-fixture
+generator.
+
+The Rust implementation lives in ``rust/src/net/{frame,codec}.rs``;
+this script is the *independent second implementation* of the same
+byte-level spec, used to
+
+  1. generate ``rust/tests/fixtures/wire_v1.bin`` (the golden frames
+     that ``rust/tests/golden_wire.rs`` pins), and
+  2. let ``python/tests/test_wire_fixture.py`` cross-check the
+     committed fixture against this mirror on every pytest run.
+
+The build container for this repo has no Rust toolchain (see
+``tools/bench_fp8_mirror.c`` for the same pattern on the kernel side),
+so the golden bytes are produced here and *verified* by the Rust test
+suite in CI. If the two implementations ever disagree, the Rust
+golden test fails and prints the first divergent offset.
+
+Wire format v1 — all integers little-endian
+-------------------------------------------
+
+Frame envelope (16 bytes), followed by ``body``::
+
+    0   magic     4  = b"FP8W"
+    4   version   u16 = 1
+    6   kind      u8  (1=Hello 2=HelloAck 3=Job 4=Outcome 5=Shutdown)
+    7   flags     u8  = 0 (reserved)
+    8   body_len  u32
+    12  crc32     u32 (IEEE CRC-32 of body)
+
+Payload block (a packed ``WirePayload``)::
+
+    codes_len u32, raw_len u32, alphas_len u32, betas_len u32,
+    codes  [u8  x codes_len],
+    raw    [f32 x raw_len],
+    alphas [f32 x alphas_len],
+    betas  [f32 x betas_len]
+
+Job body (kind=3)::
+
+    round u32, client u32, seed u64,
+    qat u8 (0=det 1=rand 2=none),
+    comm u8 (0=deterministic 1=stochastic 2=none),
+    flip_aug u8, has_ef u8,
+    lr f32, weight_decay f32, n_k u64,
+    down: payload block,
+    [ef_len u32, ef f32 x ef_len]   # iff has_ef
+
+Outcome body (kind=4)::
+
+    round u32, client u32, n_k u64, mean_loss f32, has_ef u8,
+    payload block,
+    [ef_len u32, ef f32 x ef_len]   # iff has_ef
+
+Hello body (kind=1)::
+
+    fingerprint u64, dim u64, model_len u16, model utf-8 bytes
+
+HelloAck body (kind=2): ``fingerprint u64``.  Shutdown (kind=5): empty.
+
+Accounting identities (mirrored by ``coordinator/comm.rs``)::
+
+    job frame bytes     = payload.wire_bytes + 68   (no EF)
+    outcome frame bytes = payload.wire_bytes + 53   (no EF)
+
+where ``wire_bytes = codes + 4*(raw + alphas + betas)`` and
+68 = 16 (envelope) + 36 (job meta) + 16 (payload section table),
+53 = 16 (envelope) + 21 (outcome meta) + 16 (section table).
+"""
+
+import os
+import struct
+import zlib
+
+MAGIC = b"FP8W"
+VERSION = 1
+KIND_HELLO, KIND_HELLO_ACK, KIND_JOB, KIND_OUTCOME, KIND_SHUTDOWN = 1, 2, 3, 4, 5
+
+FRAME_HEADER_BYTES = 16
+PAYLOAD_TABLE_BYTES = 16
+JOB_META_BYTES = 36
+OUTCOME_META_BYTES = 21
+JOB_FRAME_OVERHEAD = FRAME_HEADER_BYTES + JOB_META_BYTES + PAYLOAD_TABLE_BYTES
+OUTCOME_FRAME_OVERHEAD = (
+    FRAME_HEADER_BYTES + OUTCOME_META_BYTES + PAYLOAD_TABLE_BYTES
+)
+
+
+def f32s(vals):
+    return b"".join(struct.pack("<f", v) for v in vals)
+
+
+def payload_block(codes, raw, alphas, betas):
+    return (
+        struct.pack("<IIII", len(codes), len(raw), len(alphas), len(betas))
+        + bytes(codes)
+        + f32s(raw)
+        + f32s(alphas)
+        + f32s(betas)
+    )
+
+
+def wire_bytes(codes, raw, alphas, betas):
+    return len(codes) + 4 * (len(raw) + len(alphas) + len(betas))
+
+
+def frame(kind, body):
+    hdr = MAGIC + struct.pack(
+        "<HBBII", VERSION, kind, 0, len(body), zlib.crc32(body) & 0xFFFFFFFF
+    )
+    assert len(hdr) == FRAME_HEADER_BYTES
+    return hdr + body
+
+
+def job_body(round_, client, seed, qat, comm, flip_aug, lr, wd, n_k,
+             down, ef=None):
+    body = struct.pack(
+        "<IIQBBBBffQ",
+        round_, client, seed, qat, comm,
+        1 if flip_aug else 0, 0 if ef is None else 1, lr, wd, n_k,
+    )
+    assert len(body) == JOB_META_BYTES
+    body += payload_block(*down)
+    if ef is not None:
+        body += struct.pack("<I", len(ef)) + f32s(ef)
+    return body
+
+
+def outcome_body(round_, client, n_k, mean_loss, payload, ef=None):
+    body = struct.pack(
+        "<IIQfB", round_, client, n_k, mean_loss, 0 if ef is None else 1
+    )
+    assert len(body) == OUTCOME_META_BYTES
+    body += payload_block(*payload)
+    if ef is not None:
+        body += struct.pack("<I", len(ef)) + f32s(ef)
+    return body
+
+
+# ---- canonical golden messages (mirrored in rust/tests/golden_wire.rs)
+
+CANON_DOWN = (range(16), [1.0, -2.5, 0.375], [1.0, 0.5], [2.0])
+CANON_UP = ([0xFF, 0x80, 0x07], [], [1.5], [])
+
+
+def golden_frames():
+    job = frame(
+        KIND_JOB,
+        job_body(
+            round_=3, client=5, seed=0x00C0FFEE, qat=0, comm=1,
+            flip_aug=True, lr=0.125, wd=0.0009765625, n_k=100,
+            down=CANON_DOWN, ef=None,
+        ),
+    )
+    outcome = frame(
+        KIND_OUTCOME,
+        outcome_body(
+            round_=3, client=5, n_k=100, mean_loss=0.75,
+            payload=CANON_UP, ef=[0.5, -0.25],
+        ),
+    )
+    return job, outcome
+
+
+def main():
+    job, outcome = golden_frames()
+    # overhead identities the Rust accounting constants rely on
+    assert len(job) == wire_bytes(*CANON_DOWN) + JOB_FRAME_OVERHEAD
+    assert (
+        len(outcome)
+        == wire_bytes(*CANON_UP) + OUTCOME_FRAME_OVERHEAD + 4 + 4 * 2
+    )
+    out = os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
+        "wire_v1.bin",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "wb") as f:
+        f.write(job + outcome)
+    print(f"wrote {out}: job frame {len(job)} B + outcome frame "
+          f"{len(outcome)} B = {len(job) + len(outcome)} B")
+    print("job     :", job.hex())
+    print("outcome :", outcome.hex())
+
+
+if __name__ == "__main__":
+    main()
