@@ -8,6 +8,8 @@ a regeneration with a drifted mirror cannot slip through unnoticed.
 """
 
 import importlib.util
+import json
+import math
 import os
 import struct
 import zlib
@@ -17,6 +19,9 @@ import pytest
 HERE = os.path.dirname(__file__)
 REPO = os.path.join(HERE, "..", "..")
 FIXTURE = os.path.join(REPO, "rust", "tests", "fixtures", "wire_v1.bin")
+EDGE_FIXTURE = os.path.join(
+    REPO, "rust", "tests", "fixtures", "fp8_edges_v1.json"
+)
 
 
 def _mirror():
@@ -75,3 +80,64 @@ def test_overhead_constants(mirror):
     assert len(job) == mirror.wire_bytes(*mirror.CANON_DOWN) + 68
     # the outcome golden carries a 2-element EF block: 4 (len) + 8 (f32s)
     assert len(outcome) == mirror.wire_bytes(*mirror.CANON_UP) + 53 + 12
+
+
+# ---- FP8 edge-code fixture (kernel byte output, not just framing) ----
+
+
+@pytest.fixture(scope="module")
+def edge_fixture():
+    with open(EDGE_FIXTURE) as f:
+        return json.load(f)
+
+
+def test_edge_fixture_matches_mirror(mirror, edge_fixture):
+    """The committed edge codes must equal a fresh mirror run, so a
+    regeneration with a drifted value-mapping mirror cannot slip
+    through unnoticed (the Rust side pins the same bytes against its
+    oracle and every kernel in rust/tests/golden_fp8.rs)."""
+    assert edge_fixture == mirror.fp8_edge_fixture()
+
+
+def test_edge_fixture_covers_the_hostile_classes(edge_fixture):
+    """Structural coverage floor: each case must include NaN payloads,
+    both infinities, both zeros, f32 subnormals and saturating inputs,
+    and every case's codes must be valid bytes."""
+    assert edge_fixture["m"] == 3 and edge_fixture["e"] == 4
+    alphas = {c["alpha"] for c in edge_fixture["cases"]}
+    assert len(alphas) >= 4
+    for case in edge_fixture["cases"]:
+        bits = case["x_bits"]
+        codes = case["codes"]
+        assert len(bits) == len(codes)
+        assert all(0 <= c <= 0xFF for c in codes)
+        xs = [struct.unpack("<f", struct.pack("<I", b))[0] for b in bits]
+        assert any(math.isnan(x) for x in xs)
+        assert any(math.isinf(x) and x > 0 for x in xs)
+        assert any(math.isinf(x) and x < 0 for x in xs)
+        assert 0x00000000 in bits and 0x80000000 in bits
+        assert any(0 < b < 0x00800000 for b in bits)  # f32 subnormal
+        assert any(
+            math.isfinite(x) and abs(x) >= 2.0 * case["alpha"]
+            for x in xs
+        )
+        # NaN encodes to 0, infinities saturate to +-alpha top code
+        for b, c in zip(bits, codes):
+            x = struct.unpack("<f", struct.pack("<I", b))[0]
+            if math.isnan(x):
+                assert c == 0
+            elif math.isinf(x):
+                assert c == (0xFF if x < 0 else 0x7F)
+
+
+def test_edge_fixture_mirror_math_is_f64_exact(mirror):
+    """Spot-check the mirror against hand-derived facts: the top code
+    decodes to ~alpha, code 0 to 0, and deterministic encode of alpha
+    saturates to the top code."""
+    for alpha in [1.0, 0.0625, 3.7, 117.0]:
+        m = mirror.Fp8Mirror(alpha)
+        assert m.decode(0) == 0.0
+        assert abs(m.decode(0x7F) - alpha) <= 1e-6 * alpha
+        assert m.encode(alpha, 0.5) == 0x7F
+        assert m.encode(-alpha, 0.5) == 0xFF
+        assert m.encode(float("nan"), 0.5) == 0

@@ -20,6 +20,9 @@
 //! * Eq. (5) alpha search: naive O(G·K·d) rescan (`segment_quant_mse`)
 //!   vs sufficient-statistics O(d·(K+G)) search (`SegmentStats`),
 //!   sequential and pooled — the exact shape `server_opt` runs.
+//! * kernel arms: the scalar-oracle inner loop vs the `--fp8-kernel
+//!   simd` kernel (AVX2 lanes under `--features simd`, the portable
+//!   branch-free fallback otherwise) on the encode and Eq. (5) paths.
 
 use std::thread;
 
@@ -27,6 +30,7 @@ use fedfp8::fp8::codec::{self, DecodeLutCache, Rounding, Segment,
                          SegmentStats, WirePayload};
 use fedfp8::fp8::format::Fp8Params;
 use fedfp8::fp8::rng::Pcg32;
+use fedfp8::fp8::simd::KernelKind;
 use fedfp8::util::bench::{bench, header, BenchJson};
 
 fn segments(dim: usize, tensors: usize) -> Vec<Segment> {
@@ -72,6 +76,7 @@ fn alpha_search_suffstats(
     us: &[Vec<f64>],
     grid: usize,
     pool: usize,
+    kernel: KernelKind,
 ) -> f64 {
     let searches: Vec<SegmentStats> = segs
         .iter()
@@ -86,7 +91,7 @@ fn alpha_search_suffstats(
     }
     let mut mses = vec![0.0f64; tasks.len()];
     let score = |&(si, cand): &(usize, f32)| -> f64 {
-        searches[si].mse(w, &segs[si], cand, &us[si])
+        searches[si].mse_with(kernel, w, &segs[si], cand, &us[si])
     };
     if pool <= 1 {
         for (slot, t) in mses.iter_mut().zip(tasks.iter()) {
@@ -135,18 +140,46 @@ fn main() {
     let mut scratch = Vec::new();
     let enc_b1 = bench("encode/batched pool=1", light_ms, || {
         codec::encode_into_pooled(
-            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
-            &mut scratch, 1, &mut payload,
+            &w, &alphas, &[], &segs, Rounding::Stochastic,
+            KernelKind::Scalar, &mut r, &mut scratch, 1, &mut payload,
         );
         std::hint::black_box(&payload);
     });
     let enc_bn = bench(&format!("encode/batched pool={pool}"), light_ms, || {
         codec::encode_into_pooled(
-            &w, &alphas, &[], &segs, Rounding::Stochastic, &mut r,
-            &mut scratch, pool, &mut payload,
+            &w, &alphas, &[], &segs, Rounding::Stochastic,
+            KernelKind::Scalar, &mut r, &mut scratch, pool,
+            &mut payload,
         );
         std::hint::black_box(&payload);
     });
+
+    // ---- encode: scalar kernel vs the simd kernel -------------------
+    let simd_name = KernelKind::Simd.resolve().name();
+    let enc_simd1 = bench(
+        &format!("encode/kernel={simd_name} pool=1"),
+        light_ms,
+        || {
+            codec::encode_into_pooled(
+                &w, &alphas, &[], &segs, Rounding::Stochastic,
+                KernelKind::Simd, &mut r, &mut scratch, 1,
+                &mut payload,
+            );
+            std::hint::black_box(&payload);
+        },
+    );
+    let enc_simdn = bench(
+        &format!("encode/kernel={simd_name} pool={pool}"),
+        light_ms,
+        || {
+            codec::encode_into_pooled(
+                &w, &alphas, &[], &segs, Rounding::Stochastic,
+                KernelKind::Simd, &mut r, &mut scratch, pool,
+                &mut payload,
+            );
+            std::hint::black_box(&payload);
+        },
+    );
 
     // ---- decode: per-call table rebuild vs cached LUT ---------------
     // (sequential at this size: the parallel decode path only engages
@@ -229,6 +262,7 @@ fn main() {
     let eq5_s1 = bench("eq5/suffstats pool=1", heavy_ms, || {
         std::hint::black_box(alpha_search_suffstats(
             &w, &segs, &clients, &kw, &us, grid, 1,
+            KernelKind::Scalar,
         ));
     });
     let eq5_sn = bench(
@@ -237,6 +271,17 @@ fn main() {
         || {
             std::hint::black_box(alpha_search_suffstats(
                 &w, &segs, &clients, &kw, &us, grid, pool,
+                KernelKind::Scalar,
+            ));
+        },
+    );
+    let eq5_simd1 = bench(
+        &format!("eq5/suffstats kernel={simd_name} pool=1"),
+        heavy_ms,
+        || {
+            std::hint::black_box(alpha_search_suffstats(
+                &w, &segs, &clients, &kw, &us, grid, 1,
+                KernelKind::Simd,
             ));
         },
     );
@@ -262,11 +307,17 @@ fn main() {
     let sp_dec = dec_rebuild.median_ns / dec_cached.median_ns;
     let sp_wire = (enc_scalar.median_ns + dec_rebuild.median_ns)
         / (enc_bn.median_ns + dec_cached.median_ns);
+    let sp_enc_simd = enc_b1.median_ns / enc_simd1.median_ns;
+    let sp_eq5_simd = eq5_s1.median_ns / eq5_simd1.median_ns;
     println!("\nspeedups (before / after):");
     println!("  eq5 alpha search   {sp_eq5:.2}x (seq {sp_eq5_seq:.2}x)");
     println!("  encode             {sp_enc:.2}x");
     println!("  decode             {sp_dec:.2}x");
     println!("  encode+decode      {sp_wire:.2}x");
+    println!(
+        "  encode scalar->{simd_name} kernel  {sp_enc_simd:.2}x \
+         (eq5 {sp_eq5_simd:.2}x)"
+    );
     if let Some((s1, sn)) = &dec_large {
         println!(
             "  decode 2^20+ pool  {:.2}x",
@@ -287,9 +338,11 @@ fn main() {
     j.config("k_clients", k_clients);
     j.config("grid_points", grid);
     j.config("pool", pool);
+    j.config("simd_kernel", simd_name);
     for res in [
-        &enc_scalar, &enc_b1, &enc_bn, &dec_rebuild, &dec_cached,
-        &eq5_naive, &eq5_s1, &eq5_sn,
+        &enc_scalar, &enc_b1, &enc_bn, &enc_simd1, &enc_simdn,
+        &dec_rebuild, &dec_cached, &eq5_naive, &eq5_s1, &eq5_sn,
+        &eq5_simd1,
     ] {
         let items =
             if res.name.starts_with("eq5") { None } else { Some(d) };
@@ -300,6 +353,8 @@ fn main() {
     j.speedup("encode_scalar_over_batched_pooled", sp_enc);
     j.speedup("decode_rebuild_over_lut_cached", sp_dec);
     j.speedup("encode_decode_combined", sp_wire);
+    j.speedup("encode_scalar_kernel_over_simd_kernel", sp_enc_simd);
+    j.speedup("eq5_scalar_kernel_over_simd_kernel", sp_eq5_simd);
     if let Some((s1, sn)) = &dec_large {
         let big = (1usize << 20) + 4096;
         j.push(s1, Some(big as f64));

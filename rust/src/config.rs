@@ -8,6 +8,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::fp8::simd::KernelKind;
 use crate::fp8::Rounding;
 use crate::util::cli::Args;
 
@@ -121,6 +122,11 @@ pub struct ExperimentConfig {
     /// aggregation applies uplinks in cohort order — so this is purely
     /// a wall-clock knob. 1 = sequential (no threads spawned).
     pub parallelism: usize,
+    /// FP8 quantize/encode kernel (`--fp8-kernel scalar|simd|auto`).
+    /// Every kernel is bit-identical to the scalar oracle (enforced
+    /// by the exhaustive conformance harness), so like `parallelism`
+    /// this is purely a wall-clock knob.
+    pub fp8_kernel: KernelKind,
 }
 
 impl ExperimentConfig {
@@ -149,6 +155,7 @@ impl ExperimentConfig {
             error_feedback: false,
             fp32_client_frac: 0.0,
             parallelism: 1,
+            fp8_kernel: KernelKind::Auto,
         };
         Ok(match model {
             "mlp_c10" | "lenet_c10" | "lenet_c100" | "resnet8_c10"
@@ -275,9 +282,11 @@ impl ExperimentConfig {
     /// identically, because both sides independently rebuild the
     /// world (data, shards, schedules) from their own config copy.
     ///
-    /// Deliberately excluded: `parallelism` (a per-host wall-clock
-    /// knob that never changes results — the determinism contract)
-    /// and `name` (derived from model/method/split). Floats hash by
+    /// Deliberately excluded: `parallelism` and `fp8_kernel` (per-host
+    /// wall-clock knobs that never change results — the determinism
+    /// and kernel-exactness contracts; a server pinned to the scalar
+    /// kernel happily drives AVX2 workers and vice versa) and `name`
+    /// (derived from model/method/split). Floats hash by
     /// bit pattern. FNV-1a over a canonical field rendering; the
     /// rendering includes field tags, so reordering or retyping a
     /// field changes the hash even when raw bytes would collide.
@@ -307,6 +316,7 @@ impl ExperimentConfig {
             error_feedback,
             fp32_client_frac,
             parallelism: _,
+            fp8_kernel: _,
         } = self;
         let split = match split {
             SplitCfg::Iid => "iid".to_string(),
@@ -500,9 +510,12 @@ mod tests {
         let a = ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
         let mut b = a.clone();
         assert_eq!(a.fingerprint(), b.fingerprint());
-        // wall-clock knob: must NOT change the hash (a server at
-        // parallelism 4 happily drives workers launched without it)
+        // wall-clock knobs: must NOT change the hash (a server at
+        // parallelism 4 happily drives workers launched without it,
+        // and a scalar-kernel server drives simd-kernel workers)
         b.parallelism = 8;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.fp8_kernel = KernelKind::Scalar;
         assert_eq!(a.fingerprint(), b.fingerprint());
         b.seed = 2;
         assert_ne!(a.fingerprint(), b.fingerprint());

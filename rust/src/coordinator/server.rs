@@ -306,6 +306,7 @@ impl<'a> Server<'a> {
             &self.beta,
             &m.segments,
             cfg.comm,
+            cfg.fp8_kernel,
             &mut rng_down,
             &mut self.enc_scratch,
             cfg.parallelism,
@@ -410,6 +411,7 @@ impl<'a> Server<'a> {
             self.transport.as_ref(),
             jobs,
             cfg.parallelism,
+            cfg.fp8_kernel,
             |pos, out| {
                 let k = participants[pos];
                 comm.record_up(&out.uplink.payload);
@@ -433,6 +435,7 @@ impl<'a> Server<'a> {
                 &mut agg,
                 &mut rng_so,
                 cfg.parallelism,
+                cfg.fp8_kernel,
             )?;
         }
         self.w = agg.w;

@@ -29,6 +29,7 @@ use anyhow::{ensure, Result};
 use crate::config::ServerOptCfg;
 use crate::fp8::codec::{scatter_zip, Segment, SegmentStats};
 use crate::fp8::rng::Pcg32;
+use crate::fp8::simd::KernelKind;
 use crate::runtime::{engine, Engine, In, ModelInfo};
 
 use super::aggregate::Aggregate;
@@ -51,9 +52,11 @@ struct SegSearch<'m> {
 const PAR_MIN_WORK: usize = 1 << 18;
 
 /// Run ServerOptimize in place on the aggregate. Returns the final
-/// Eq. (4) objective value (for logging / tests). `parallelism` is the
-/// worker budget for the Eq. (5) candidate scoring; results are
-/// identical for every value.
+/// Eq. (4) objective value (for logging / tests). `parallelism` is
+/// the worker budget for the Eq. (5) candidate scoring and `kernel`
+/// picks the quantize inner loop of the candidate scorer
+/// (`SegmentStats::mse_with`); results are identical for every value
+/// of both.
 pub fn optimize(
     eng: &Engine,
     model: &ModelInfo,
@@ -61,6 +64,7 @@ pub fn optimize(
     agg: &mut Aggregate,
     rng: &mut Pcg32,
     parallelism: usize,
+    kernel: KernelKind,
 ) -> Result<f32> {
     let p = model.server_p;
     ensure!(
@@ -156,7 +160,7 @@ pub fn optimize(
     let workers = parallelism.min(tasks.len()).max(1);
     let score = |&(si, cand): &(usize, f32)| -> f64 {
         let sr = &searches[si];
-        sr.stats.mse(&agg.w, sr.seg, cand, &sr.us)
+        sr.stats.mse_with(kernel, &agg.w, sr.seg, cand, &sr.us)
     };
     if workers == 1 || work < PAR_MIN_WORK {
         for (slot, task) in mses.iter_mut().zip(tasks.iter()) {

@@ -29,6 +29,7 @@ use crate::config::QatMode;
 use crate::data::{self, Dataset};
 use crate::fp8::codec::{self, Rounding, Segment, WirePayload};
 use crate::fp8::rng::Pcg32;
+use crate::fp8::simd::KernelKind;
 use crate::runtime::{Engine, ModelInfo};
 
 use super::client::{ClientRunner, LocalUpdate};
@@ -106,6 +107,21 @@ pub struct WorkBuffers {
     pub us: Vec<f64>,
     /// Per-worker decode-LUT cache (codes → f32 tables per alpha).
     pub lut: codec::DecodeLutCache,
+    /// Quantize/encode kernel for this worker's uplink packing
+    /// (`--fp8-kernel`; bit-identical for every value, so purely a
+    /// wall-clock knob). `Default` is [`KernelKind::Auto`].
+    pub kernel: KernelKind,
+}
+
+impl WorkBuffers {
+    /// Fresh buffers pinned to `kernel` (the cohort pool and the
+    /// networked worker build their per-thread buffers through this).
+    pub fn with_kernel(kernel: KernelKind) -> WorkBuffers {
+        WorkBuffers {
+            kernel,
+            ..WorkBuffers::default()
+        }
+    }
 }
 
 /// Where a client's local round executes. Implementations must be
@@ -152,7 +168,7 @@ pub fn finish_uplink(
         job.client as u64,
         streams::UPLINK,
     );
-    let WorkBuffers { up_src, dec, us, lut } = buffers;
+    let WorkBuffers { up_src, dec, us, lut, kernel } = buffers;
     let src: &[f32] = match &job.ef {
         Some(e) => {
             up_src.clear();
@@ -172,6 +188,7 @@ pub fn finish_uplink(
         &upd.beta,
         job.segments,
         job.comm,
+        *kernel,
         &mut rng_q,
         us,
         1,
@@ -249,6 +266,9 @@ impl Transport for InProcessTransport<'_> {
 /// Execute a cohort of jobs on `transport` with up to `parallelism`
 /// worker threads, delivering outcomes to `sink` strictly in cohort
 /// order (position 0, 1, 2, ...) as soon as each becomes deliverable.
+/// `kernel` pins each worker's uplink quantize/encode kernel
+/// (bit-identical for every choice — a wall-clock knob, like
+/// `parallelism` itself).
 ///
 /// The in-order delivery is what makes streaming aggregation
 /// bit-identical across thread counts: FP32 accumulation is not
@@ -259,6 +279,7 @@ pub fn run_cohort<F>(
     transport: &dyn Transport,
     jobs: Vec<ClientJob<'_>>,
     parallelism: usize,
+    kernel: KernelKind,
     mut sink: F,
 ) -> Result<()>
 where
@@ -271,7 +292,7 @@ where
     let workers = parallelism.max(1).min(n);
     if workers == 1 {
         // sequential fast path: no threads, no channel
-        let mut buffers = WorkBuffers::default();
+        let mut buffers = WorkBuffers::with_kernel(kernel);
         for (pos, job) in jobs.into_iter().enumerate() {
             let out = transport.run_client(job, &mut buffers)?;
             sink(pos, out)?;
@@ -288,7 +309,7 @@ where
             let queue = &queue;
             let cancel = &cancel;
             s.spawn(move || {
-                let mut buffers = WorkBuffers::default();
+                let mut buffers = WorkBuffers::with_kernel(kernel);
                 while !cancel.load(Ordering::Relaxed) {
                     let next =
                         queue.lock().ok().and_then(|mut q| q.next());

@@ -30,12 +30,20 @@
 //! * **Sufficient statistics for Eq. (5).** [`SegmentStats`] turns the
 //!   ServerOptimize alpha grid search from O(G·K·d) into O(d·(K+G));
 //!   [`segment_quant_mse`] is kept as the naive reference oracle.
+//! * **Kernel dispatch.** Every quantize/encode inner loop — scalar,
+//!   batched, pooled, and the Eq. (5) scorer — runs through one
+//!   [`Fp8Kernel`] implementation selected by a [`KernelKind`]
+//!   (`--fp8-kernel scalar|simd|auto`). Kernels are bit-identical by
+//!   contract (`fp8::simd`), so the knob is pure wall-clock;
+//!   [`encode_into_scalar`] stays pinned to the scalar oracle as the
+//!   differential reference.
 
 use std::sync::Arc;
 use std::thread;
 
 use super::format::Fp8Params;
 use super::rng::Pcg32;
+use super::simd::{Draws, Fp8Kernel, KernelKind};
 
 /// Elements per counter-derived rounding stream. Fixed: it is part of
 /// the wire determinism contract (changing it changes every stochastic
@@ -198,7 +206,8 @@ pub fn encode_into(
 ) {
     let mut scratch = Vec::new();
     encode_into_pooled(
-        w, alphas, betas, segments, mode, rng, &mut scratch, 1, out,
+        w, alphas, betas, segments, mode, KernelKind::Auto, rng,
+        &mut scratch, 1, out,
     );
 }
 
@@ -219,22 +228,19 @@ fn encode_block(
     mode: Rounding,
     key: u64,
     scratch: &mut [f64],
+    kernel: &dyn Fp8Kernel,
 ) {
     match mode {
         Rounding::Deterministic => {
-            for (d, &x) in t.dst.iter_mut().zip(t.src.iter()) {
-                *d = t.params.encode(x, 0.5);
-            }
+            kernel.encode_slice(
+                &t.params, t.src, Draws::Const(0.5), t.dst,
+            );
         }
         Rounding::Stochastic => {
             let us = &mut scratch[..t.src.len()];
             let mut srng = Pcg32::derive(key, t.si, t.block, WIRE_DOMAIN);
             srng.fill_uniform_f64(us);
-            for ((d, &x), &u) in
-                t.dst.iter_mut().zip(t.src.iter()).zip(us.iter())
-            {
-                *d = t.params.encode(x, u);
-            }
+            kernel.encode_slice(&t.params, t.src, Draws::Slice(us), t.dst);
         }
         Rounding::None => unreachable!(),
     }
@@ -246,21 +252,25 @@ fn encode_block(
 /// `scratch` is the reusable rounding-draw buffer (lives in the
 /// caller's `WorkBuffers` on the uplink path, in the `Server` on the
 /// downlink path); it is grown to at most [`RNG_BLOCK`] f64s. `pool`
-/// is the worker-thread budget for this message; output bytes are
-/// identical for every value (per-block counter-derived streams), so
-/// it is purely a wall-clock knob — enforced by the scalar-vs-batched
-/// property suite at pool 1 and 4.
+/// is the worker-thread budget for this message and `kernel` picks
+/// the quantize/encode inner loop; output bytes are identical for
+/// every value of both (per-block counter-derived streams +
+/// bit-identical kernels), so they are purely wall-clock knobs —
+/// enforced by the scalar-vs-batched property suite at pool 1/2/4
+/// and the kernel conformance harness.
 pub fn encode_into_pooled(
     w: &[f32],
     alphas: &[f32],
     betas: &[f32],
     segments: &[Segment],
     mode: Rounding,
+    kernel: KernelKind,
     rng: &mut Pcg32,
     scratch: &mut Vec<f64>,
     pool: usize,
     out: &mut WirePayload,
 ) {
+    let kernel = kernel.resolve();
     out.codes.clear();
     out.raw.clear();
     out.alphas.clear();
@@ -318,7 +328,7 @@ pub fn encode_into_pooled(
     let workers = pool.min(tasks.len()).max(1);
     if workers == 1 || total_q < PAR_MIN_ELEMS {
         for t in tasks.iter_mut() {
-            encode_block(t, mode, key, scratch);
+            encode_block(t, mode, key, scratch, kernel);
         }
         return;
     }
@@ -326,7 +336,7 @@ pub fn encode_into_pooled(
         &mut tasks,
         workers,
         || worker_scratch(mode),
-        |t, local| encode_block(t, mode, key, local),
+        |t, local| encode_block(t, mode, key, local, kernel),
     );
 }
 
@@ -621,7 +631,10 @@ pub fn quantize_vec(
     out: &mut [f32],
 ) {
     let mut scratch = Vec::new();
-    quantize_vec_pooled(w, alphas, segments, mode, rng, &mut scratch, 1, out);
+    quantize_vec_pooled(
+        w, alphas, segments, mode, KernelKind::Auto, rng, &mut scratch,
+        1, out,
+    );
 }
 
 /// One block of in-place quantization work.
@@ -638,20 +651,17 @@ fn quantize_block(
     mode: Rounding,
     key: u64,
     scratch: &mut [f64],
+    kernel: &dyn Fp8Kernel,
 ) {
     match mode {
         Rounding::Deterministic => {
-            for d in t.dst.iter_mut() {
-                *d = t.params.quantize(*d, 0.5);
-            }
+            kernel.quantize_slice(&t.params, t.dst, Draws::Const(0.5));
         }
         Rounding::Stochastic => {
             let us = &mut scratch[..t.dst.len()];
             let mut srng = Pcg32::derive(key, t.si, t.block, WIRE_DOMAIN);
             srng.fill_uniform_f64(us);
-            for (d, &u) in t.dst.iter_mut().zip(us.iter()) {
-                *d = t.params.quantize(*d, u);
-            }
+            kernel.quantize_slice(&t.params, t.dst, Draws::Slice(us));
         }
         Rounding::None => unreachable!(),
     }
@@ -664,11 +674,13 @@ pub fn quantize_vec_pooled(
     alphas: &[f32],
     segments: &[Segment],
     mode: Rounding,
+    kernel: KernelKind,
     rng: &mut Pcg32,
     scratch: &mut Vec<f64>,
     pool: usize,
     out: &mut [f32],
 ) {
+    let kernel = kernel.resolve();
     out.copy_from_slice(w);
     if mode == Rounding::None {
         return;
@@ -725,7 +737,7 @@ pub fn quantize_vec_pooled(
                     si: si as u64,
                     block: block as u64,
                 };
-                quantize_block(&mut t, mode, key, scratch);
+                quantize_block(&mut t, mode, key, scratch, kernel);
             }
         }
         return;
@@ -736,7 +748,7 @@ pub fn quantize_vec_pooled(
     let workers = pool.min(tasks.len()).max(1);
     if workers == 1 || total_q < PAR_MIN_ELEMS {
         for t in tasks.iter_mut() {
-            quantize_block(t, mode, key, scratch);
+            quantize_block(t, mode, key, scratch, kernel);
         }
         return;
     }
@@ -744,7 +756,7 @@ pub fn quantize_vec_pooled(
         &mut tasks,
         workers,
         || worker_scratch(mode),
-        |t, local| quantize_block(t, mode, key, local),
+        |t, local| quantize_block(t, mode, key, local, kernel),
     );
 }
 
@@ -853,6 +865,70 @@ impl SegmentStats {
             acc[1] += q1 * q1 * self.wsum - 2.0 * q1 * sc[1] + tc[1];
             acc[2] += q2 * q2 * self.wsum - 2.0 * q2 * sc[2] + tc[2];
             acc[3] += q3 * q3 * self.wsum - 2.0 * q3 * sc[3] + tc[3];
+        }
+        let mut tail = 0.0f64;
+        for i in n4..n {
+            let q = p.quantize(wseg[i], us[i]) as f64;
+            tail += q * q * self.wsum - 2.0 * q * self.s[i] + self.t[i];
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    }
+
+    /// [`SegmentStats::mse`] with the quantize inner loop dispatched
+    /// through a [`KernelKind`] — the form `server_opt` actually
+    /// scores candidates with.
+    ///
+    /// Bit-identical to [`SegmentStats::mse`] for every kernel: the
+    /// per-element quantize results are identical by the kernel
+    /// contract, and the accumulation order is preserved exactly —
+    /// blocks are multiples of four, element `i` still feeds
+    /// accumulator `i % 4` in ascending order, and the `n % 4` tail
+    /// uses the same separate accumulator. Exact equality (not
+    /// tolerance) is property-tested.
+    pub fn mse_with(
+        &self,
+        kernel: KernelKind,
+        w: &[f32],
+        seg: &Segment,
+        alpha: f32,
+        us: &[f64],
+    ) -> f64 {
+        // quantize granularity: a multiple of 4 (keeps the 4-lane
+        // accumulator mapping aligned), small enough for stack + L1
+        const QBLOCK: usize = 128;
+        let kernel = kernel.resolve();
+        let p = Fp8Params::new(alpha);
+        let wseg = &w[seg.offset..seg.offset + seg.size];
+        let n = wseg.len();
+        let n4 = n - n % 4;
+        let mut qbuf = [0.0f32; QBLOCK];
+        let mut acc = [0.0f64; 4];
+        let mut base = 0usize;
+        while base < n4 {
+            let blk = QBLOCK.min(n4 - base);
+            let q = &mut qbuf[..blk];
+            q.copy_from_slice(&wseg[base..base + blk]);
+            kernel.quantize_slice(
+                &p,
+                q,
+                Draws::Slice(&us[base..base + blk]),
+            );
+            for (ci, ch) in q.chunks_exact(4).enumerate() {
+                let i = base + 4 * ci;
+                let q0 = ch[0] as f64;
+                let q1 = ch[1] as f64;
+                let q2 = ch[2] as f64;
+                let q3 = ch[3] as f64;
+                acc[0] +=
+                    q0 * q0 * self.wsum - 2.0 * q0 * self.s[i] + self.t[i];
+                acc[1] += q1 * q1 * self.wsum - 2.0 * q1 * self.s[i + 1]
+                    + self.t[i + 1];
+                acc[2] += q2 * q2 * self.wsum - 2.0 * q2 * self.s[i + 2]
+                    + self.t[i + 2];
+                acc[3] += q3 * q3 * self.wsum - 2.0 * q3 * self.s[i + 3]
+                    + self.t[i + 3];
+            }
+            base += blk;
         }
         let mut tail = 0.0f64;
         for i in n4..n {
@@ -1037,14 +1113,21 @@ mod tests {
             encode_into_scalar(&w, &[1.1], &[], &seg, mode, &mut r_ref,
                                &mut reference);
             for pool in [1usize, 2, 4] {
-                let mut r = Pcg32::new(5, 5);
-                let mut scratch = Vec::new();
-                let mut got = WirePayload::default();
-                encode_into_pooled(&w, &[1.1], &[], &seg, mode, &mut r,
-                                   &mut scratch, pool, &mut got);
-                assert_eq!(got.codes, reference.codes,
-                           "pool={pool} {mode:?}");
-                assert_eq!(got.raw, reference.raw);
+                for kernel in [
+                    KernelKind::Scalar,
+                    KernelKind::Simd,
+                    KernelKind::Auto,
+                ] {
+                    let mut r = Pcg32::new(5, 5);
+                    let mut scratch = Vec::new();
+                    let mut got = WirePayload::default();
+                    encode_into_pooled(&w, &[1.1], &[], &seg, mode,
+                                       kernel, &mut r, &mut scratch,
+                                       pool, &mut got);
+                    assert_eq!(got.codes, reference.codes,
+                               "pool={pool} kernel={kernel} {mode:?}");
+                    assert_eq!(got.raw, reference.raw);
+                }
             }
         }
     }
@@ -1097,6 +1180,35 @@ mod tests {
             cache.get(2.0 + i as f32 * 0.01);
         }
         assert_eq!(cache.len(), LUT_CACHE_CAP, "capacity bound");
+    }
+
+    #[test]
+    fn mse_with_is_bit_identical_to_mse() {
+        // not just "close": same quantize bits + same accumulation
+        // order means mse_with must equal mse exactly, per kernel
+        let seg = &segs()[2]; // offset 110, size 50 (n % 4 != 0 tail)
+        let w = test_vec(160, 33, 1.4);
+        let c1 = test_vec(160, 34, 1.4);
+        let clients: Vec<&[f32]> = vec![&c1];
+        let kw = [1.0f32];
+        let us: Vec<f64> =
+            (0..seg.size).map(|i| (i as f64 * 0.37) % 1.0).collect();
+        let stats = SegmentStats::build(seg, &clients, &kw);
+        for alpha in [0.4f32, 1.7, 12.0] {
+            let reference = stats.mse(&w, seg, alpha, &us);
+            for kernel in [
+                KernelKind::Scalar,
+                KernelKind::Simd,
+                KernelKind::Auto,
+            ] {
+                let got = stats.mse_with(kernel, &w, seg, alpha, &us);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "kernel={kernel} alpha={alpha}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -56,6 +56,16 @@ impl Fp8Params {
         }
     }
 
+    /// The per-exponent scale LUT (scales[c] = 2^(c-b-m), c in
+    /// 0..=15). Read by the kernel layer (`fp8::simd`): every kernel
+    /// must divide by exactly these doubles — not recomputed or
+    /// reciprocal-multiplied variants — to stay bit-identical to
+    /// [`Fp8Params::quantize`] / [`Fp8Params::encode`].
+    #[inline]
+    pub fn scales(&self) -> &[f64; 16] {
+        &self.scales
+    }
+
     /// floor(log2|x| + b) without calling log2 per element: exact
     /// binary exponent of u = |x| * 2^b via bit inspection.
     #[inline]

@@ -1,11 +1,14 @@
-//! FP8 number format, wire codec and deterministic RNG substrate.
+//! FP8 number format, wire codec, kernel layer and deterministic RNG
+//! substrate.
 
 pub mod codec;
 pub mod format;
 pub mod rng;
+pub mod simd;
 
 pub use codec::{
     DecodeLutCache, Rounding, Segment, SegmentStats, WirePayload,
 };
 pub use format::Fp8Params;
 pub use rng::{Pcg32, SplitMix64};
+pub use simd::{Draws, Fp8Kernel, KernelKind};

@@ -1,0 +1,702 @@
+//! FP8 kernel layer: one trait, three interchangeable bit-identical
+//! implementations of the quantize/encode inner loops.
+//!
+//! The value mapping of the flexible-bias FP8 format lives in
+//! [`Fp8Params`] (`format.rs`) — that scalar, branchy code is the
+//! **oracle**. This module adds lane-batched kernels behind the
+//! [`Fp8Kernel`] trait so the codec hot paths (`codec::encode_into_*`,
+//! `codec::quantize_vec_*`, `SegmentStats::mse_with`) can swap
+//! implementations without touching wire semantics:
+//!
+//! * [`ScalarKernel`] — calls the oracle per element. The reference.
+//! * [`BranchfreeKernel`] — straight-line select-based twin of the
+//!   oracle ([`quantize_bf`] / [`encode_bf`]): the portable fallback
+//!   and the op-for-op template the explicit SIMD lanes follow.
+//! * `Avx2Kernel` (behind the `simd` cargo feature, `x86_64` only,
+//!   runtime-detected) — 4-wide `core::arch` lanes: vectorized
+//!   exponent extraction, per-exponent scale lookup, `vdivpd` +
+//!   `vroundpd` grid math.
+//!
+//! ## Exactness contract
+//!
+//! Every kernel must produce **byte-identical** output to the oracle
+//! for *all* 2^32 f32 bit patterns, every alpha and every rounding
+//! draw — NaN→0, saturation at ±alpha, the subnormal band and the
+//! mantissa-carry boundaries included. This is possible because every
+//! operation in the hot path is an exactly-rounded IEEE-754 op
+//! (multiply, divide, floor, compare) over identical inputs: the
+//! kernels divide by the *same* `scales[]` doubles the oracle uses
+//! (never reciprocal-multiplied), and lane selects mirror the
+//! oracle's branches one for one. The contract is enforced three
+//! ways: a stratified differential sweep in tier-1
+//! (`tests/exhaustive_fp8.rs`), the full 2^32 sweep in nightly CI
+//! (`FEDFP8_EXHAUSTIVE_CHUNKS`), and property suites over the wire
+//! paths (`tests/properties.rs`). `tools/fp8_kernel_conformance.c` is
+//! the C twin used to pre-validate the algorithms exhaustively.
+//!
+//! Because all kernels are bit-identical, [`KernelKind`] is a pure
+//! wall-clock knob — like `--parallelism`, it is excluded from the
+//! config fingerprint and never changes a trajectory.
+
+use super::format::Fp8Params;
+
+/// Rounding draws for one slice: one shared constant (deterministic
+/// round-half-up) or one `u` per element (stochastic, from the
+/// counter-derived wire streams).
+#[derive(Clone, Copy)]
+pub enum Draws<'a> {
+    Const(f64),
+    Slice(&'a [f64]),
+}
+
+impl Draws<'_> {
+    /// Draw for element `i` of the slice.
+    #[inline]
+    fn at(&self, i: usize) -> f64 {
+        match self {
+            Draws::Const(u) => *u,
+            Draws::Slice(us) => us[i],
+        }
+    }
+}
+
+/// A quantize/encode inner-loop implementation. Implementations must
+/// be bit-identical to the scalar oracle (see the module docs) and
+/// `Sync` (one kernel instance serves every worker thread).
+pub trait Fp8Kernel: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Encode `src` to 8-bit codes in `dst` (`dst.len() == src.len()`;
+    /// `Draws::Slice` must cover `src.len()` elements — kernels panic
+    /// on a short slice, never read out of bounds).
+    fn encode_slice(
+        &self,
+        p: &Fp8Params,
+        src: &[f32],
+        us: Draws<'_>,
+        dst: &mut [u8],
+    );
+
+    /// Quantize `data` in place onto the FP8 grid.
+    fn quantize_slice(&self, p: &Fp8Params, data: &mut [f32], us: Draws<'_>);
+}
+
+/// Branch-free twin of [`Fp8Params::quantize`]: the same IEEE op
+/// sequence with the oracle's branches turned into selects, so a
+/// compiler (or the explicit AVX2 lanes, which follow this function
+/// op for op) can evaluate all paths and blend. Bit-identical to the
+/// oracle for every input — enforced by `tests/exhaustive_fp8.rs`.
+#[inline]
+pub fn quantize_bf(p: &Fp8Params, x: f32, u: f64) -> f32 {
+    let x64 = x as f64;
+    let absx = x64.abs();
+    let bits = (absx * p.exp2_bias).to_bits();
+    let c = ((bits >> 52) & 0x7FF) as i64 - 1023;
+    let is_sub = c <= 1;
+    // clamped index keeps the lookup in-bounds for every lane; lanes
+    // with c <= 1 select sub_scale and c > 15 saturates after the
+    // divide, exactly like the oracle's early returns
+    let s = if is_sub {
+        p.sub_scale
+    } else {
+        p.scales()[c.clamp(0, 15) as usize]
+    };
+    let z = x64 / s;
+    let f = z.floor();
+    let up = if z - f >= u { 1.0 } else { 0.0 };
+    let a = p.alpha as f64;
+    // clamp is the oracle's exact op; NaN q (x NaN/±0 lanes) passes
+    // through and is overridden by the final select
+    let q = ((f + up) * s).clamp(-a, a);
+    if x == 0.0 || x.is_nan() {
+        0.0
+    } else {
+        q as f32
+    }
+}
+
+/// Branch-free twin of [`Fp8Params::encode`] (see [`quantize_bf`]).
+///
+/// The oracle's early returns become final selects: saturation is
+/// `c_adj > 15` (for any original `c > 15` the clamped-scale divide
+/// leaves `z >= 16`, so the mantissa carry always pushes `c_adj` past
+/// 15), infinities land in the saturation select, and NaN/±0 are
+/// overridden to code 0 at the end.
+#[inline]
+pub fn encode_bf(p: &Fp8Params, x: f32, u: f64) -> u8 {
+    let x64 = x as f64;
+    let absx = x64.abs();
+    let bits = (absx * p.exp2_bias).to_bits();
+    let c = ((bits >> 52) & 0x7FF) as i64 - 1023;
+    let is_sub = c <= 1;
+    let s = if is_sub {
+        p.sub_scale
+    } else {
+        p.scales()[c.clamp(0, 15) as usize]
+    };
+    let z = absx / s;
+    let f = z.floor();
+    let frac = z - f;
+    let neg = x64 < 0.0;
+    let up = if neg { 1.0 - frac < u } else { frac >= u };
+    // clamp before the int conversion: saturated lanes can carry huge
+    // or NaN f (f64::min maps NaN to 17); unsaturated lanes never
+    // exceed 16, so the clamp is a no-op wherever the result is used
+    let n = f.min(17.0) as i64 + up as i64;
+    let c_adj = c + (n > 15) as i64 - (n < 8) as i64;
+    let n_adj = if n > 15 {
+        8
+    } else if n < 8 {
+        15
+    } else {
+        n
+    };
+    let sat = c_adj > 15;
+    let code_norm = if sat {
+        0x7F
+    } else {
+        ((c_adj as u8) << 3) | (n_adj as u8 & 7)
+    };
+    let code_sub = n.min(16) as u8;
+    let mag = if is_sub { code_sub } else { code_norm };
+    let code = ((neg as u8) << 7) | mag;
+    if x == 0.0 || x.is_nan() {
+        0
+    } else {
+        code
+    }
+}
+
+/// Per-element oracle calls — the reference arm of every differential
+/// test and the "before" arm of the kernel bench.
+pub struct ScalarKernel;
+
+impl Fp8Kernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn encode_slice(
+        &self,
+        p: &Fp8Params,
+        src: &[f32],
+        us: Draws<'_>,
+        dst: &mut [u8],
+    ) {
+        for (i, (d, &x)) in dst.iter_mut().zip(src.iter()).enumerate() {
+            *d = p.encode(x, us.at(i));
+        }
+    }
+
+    fn quantize_slice(
+        &self,
+        p: &Fp8Params,
+        data: &mut [f32],
+        us: Draws<'_>,
+    ) {
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = p.quantize(*d, us.at(i));
+        }
+    }
+}
+
+/// Portable branch-free kernel: [`encode_bf`] / [`quantize_bf`] per
+/// element. The fallback when the `simd` feature is off or the CPU
+/// lacks AVX2, and the semantic template for the explicit lanes.
+pub struct BranchfreeKernel;
+
+impl Fp8Kernel for BranchfreeKernel {
+    fn name(&self) -> &'static str {
+        "branchfree"
+    }
+
+    fn encode_slice(
+        &self,
+        p: &Fp8Params,
+        src: &[f32],
+        us: Draws<'_>,
+        dst: &mut [u8],
+    ) {
+        for (i, (d, &x)) in dst.iter_mut().zip(src.iter()).enumerate() {
+            *d = encode_bf(p, x, us.at(i));
+        }
+    }
+
+    fn quantize_slice(
+        &self,
+        p: &Fp8Params,
+        data: &mut [f32],
+        us: Draws<'_>,
+    ) {
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = quantize_bf(p, *d, us.at(i));
+        }
+    }
+}
+
+/// Explicit AVX2 lanes — 4 f64 grid divisions per `vdivpd`. Gated on
+/// the `simd` feature at compile time and `is_x86_feature_detected!`
+/// at dispatch time; [`KernelKind::resolve`] is the only constructor
+/// path, so the unsafe `target_feature` calls below only ever run on
+/// CPUs that advertise AVX2.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{encode_bf, quantize_bf, Draws, Fp8Kernel};
+    use crate::fp8::format::Fp8Params;
+
+    pub fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    pub struct Avx2Kernel;
+
+    /// The lane loops read `Draws::Slice` with unchecked vector
+    /// loads, so the safe trait boundary must enforce the length
+    /// contract the scalar kernels enforce implicitly (their `us[i]`
+    /// indexing panics) — otherwise a short slice would be UB, not a
+    /// panic.
+    fn check_draws(us: Draws<'_>, n: usize) {
+        if let Draws::Slice(s) = us {
+            assert!(
+                s.len() >= n,
+                "Draws::Slice covers {} elements, data has {n}",
+                s.len()
+            );
+        }
+    }
+
+    impl Fp8Kernel for Avx2Kernel {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn encode_slice(
+            &self,
+            p: &Fp8Params,
+            src: &[f32],
+            us: Draws<'_>,
+            dst: &mut [u8],
+        ) {
+            check_draws(us, src.len());
+            // SAFETY: KernelKind::resolve only returns this kernel
+            // after available() confirmed AVX2 support, and
+            // check_draws guarantees the slice loads stay in bounds.
+            unsafe { encode_slice_avx2(p, src, us, dst) }
+        }
+
+        fn quantize_slice(
+            &self,
+            p: &Fp8Params,
+            data: &mut [f32],
+            us: Draws<'_>,
+        ) {
+            check_draws(us, data.len());
+            // SAFETY: as above — dispatch is detection-gated and the
+            // draw slice is length-checked.
+            unsafe { quantize_slice_avx2(p, data, us) }
+        }
+    }
+
+    /// Low dwords of the four 64-bit lanes — narrows exponents and
+    /// compare masks (whose dword halves are equal) to i32x4.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn narrow64(v: __m256i) -> __m128i {
+        _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(
+            v,
+            _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0),
+        ))
+    }
+
+    /// Per-exponent scale lookup via four indexed loads — measurably
+    /// faster than `vgatherdpd` on older/virtualized parts and
+    /// bit-identical: the loads read the exact `scales[]` doubles the
+    /// oracle divides by.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_lookup(scales: &[f64; 16], idx: __m128i) -> __m256d {
+        // SAFETY: idx lanes are clamped to [0, 15] by the caller.
+        _mm256_setr_pd(
+            *scales.get_unchecked(_mm_extract_epi32::<0>(idx) as usize),
+            *scales.get_unchecked(_mm_extract_epi32::<1>(idx) as usize),
+            *scales.get_unchecked(_mm_extract_epi32::<2>(idx) as usize),
+            *scales.get_unchecked(_mm_extract_epi32::<3>(idx) as usize),
+        )
+    }
+
+    /// Shared lane prologue: widen 4 f32, extract the binary exponent
+    /// of |x|·2^b, and select the grid scale — the vector form of
+    /// `code_exponent` + `scale`. Returns (x, c32, is_sub32, s).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lanes_prologue(
+        p: &Fp8Params,
+        ptr: *const f32,
+    ) -> (__m256d, __m128i, __m128i, __m256d) {
+        let x = _mm256_cvtps_pd(_mm_loadu_ps(ptr));
+        let absx = _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+        let ub = _mm256_mul_pd(absx, _mm256_set1_pd(p.exp2_bias));
+        let ebits = _mm256_and_si256(
+            _mm256_srli_epi64::<52>(_mm256_castpd_si256(ub)),
+            _mm256_set1_epi64x(0x7FF),
+        );
+        let c32 = _mm_sub_epi32(narrow64(ebits), _mm_set1_epi32(1023));
+        let is_sub32 = _mm_cmpgt_epi32(_mm_set1_epi32(2), c32);
+        let idx = _mm_min_epi32(
+            _mm_max_epi32(c32, _mm_setzero_si128()),
+            _mm_set1_epi32(15),
+        );
+        let s = _mm256_blendv_pd(
+            scale_lookup(p.scales(), idx),
+            _mm256_set1_pd(p.sub_scale),
+            _mm256_castsi256_pd(_mm256_cvtepi32_epi64(is_sub32)),
+        );
+        (x, c32, is_sub32, s)
+    }
+
+    /// NaN-or-±0 lanes (the oracle's "encode/quantize to zero" early
+    /// returns), as a 64-bit mask.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn kill_mask(x: __m256d) -> __m256i {
+        _mm256_castpd_si256(_mm256_or_pd(
+            _mm256_cmp_pd::<_CMP_EQ_OQ>(x, _mm256_setzero_pd()),
+            _mm256_cmp_pd::<_CMP_UNORD_Q>(x, x),
+        ))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_slice_avx2(
+        p: &Fp8Params,
+        data: &mut [f32],
+        us: Draws<'_>,
+    ) {
+        let n = data.len();
+        let n4 = n & !3usize;
+        let a = _mm256_set1_pd(p.alpha as f64);
+        let neg_a = _mm256_sub_pd(_mm256_setzero_pd(), a);
+        let mut i = 0usize;
+        while i < n4 {
+            let u = match us {
+                Draws::Const(c) => _mm256_set1_pd(c),
+                Draws::Slice(s) => _mm256_loadu_pd(s.as_ptr().add(i)),
+            };
+            let (x, _c32, _is_sub, s) =
+                lanes_prologue(p, data.as_ptr().add(i));
+            // signed z, exactly like the oracle's quantize
+            let z = _mm256_div_pd(x, s);
+            let f = _mm256_floor_pd(z);
+            let up = _mm256_and_pd(
+                _mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_sub_pd(z, f), u),
+                _mm256_set1_pd(1.0),
+            );
+            let q = _mm256_mul_pd(_mm256_add_pd(f, up), s);
+            let q = _mm256_min_pd(_mm256_max_pd(q, neg_a), a);
+            let qf = _mm256_cvtpd_ps(q);
+            let kill =
+                _mm_castsi128_ps(narrow64(kill_mask(x)));
+            _mm_storeu_ps(
+                data.as_mut_ptr().add(i),
+                _mm_andnot_ps(kill, qf),
+            );
+            i += 4;
+        }
+        for j in n4..n {
+            data[j] = quantize_bf(p, data[j], us.at(j));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn encode_slice_avx2(
+        p: &Fp8Params,
+        src: &[f32],
+        us: Draws<'_>,
+        dst: &mut [u8],
+    ) {
+        let n = src.len();
+        let n4 = n & !3usize;
+        let mut i = 0usize;
+        while i < n4 {
+            let u = match us {
+                Draws::Const(c) => _mm256_set1_pd(c),
+                Draws::Slice(s) => _mm256_loadu_pd(s.as_ptr().add(i)),
+            };
+            let (x, c32, is_sub32, s) =
+                lanes_prologue(p, src.as_ptr().add(i));
+            let absx = _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+            // magnitude z, sign-asymmetric rounding — the oracle's
+            // round_up_mag closure, lane-blended on the sign mask
+            let z = _mm256_div_pd(absx, s);
+            let f = _mm256_floor_pd(z);
+            let frac = _mm256_sub_pd(z, f);
+            let neg_pd =
+                _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_setzero_pd());
+            let up_pos = _mm256_cmp_pd::<_CMP_GE_OQ>(frac, u);
+            let up_neg = _mm256_cmp_pd::<_CMP_LT_OQ>(
+                _mm256_sub_pd(_mm256_set1_pd(1.0), frac),
+                u,
+            );
+            let up_pd = _mm256_blendv_pd(up_pos, up_neg, neg_pd);
+            // clamp huge/NaN f before the i32 conversion (min maps
+            // NaN lanes to 17; see encode_bf)
+            let fi = _mm256_cvttpd_epi32(_mm256_min_pd(
+                f,
+                _mm256_set1_pd(17.0),
+            ));
+            // up mask lanes are 0/-1: subtracting adds the increment
+            let n32 =
+                _mm_sub_epi32(fi, narrow64(_mm256_castpd_si256(up_pd)));
+            let carry = _mm_cmpgt_epi32(n32, _mm_set1_epi32(15));
+            let jitter = _mm_cmpgt_epi32(_mm_set1_epi32(8), n32);
+            let c_adj =
+                _mm_add_epi32(_mm_sub_epi32(c32, carry), jitter);
+            let n_adj =
+                _mm_blendv_epi8(n32, _mm_set1_epi32(8), carry);
+            let n_adj =
+                _mm_blendv_epi8(n_adj, _mm_set1_epi32(15), jitter);
+            let sat = _mm_cmpgt_epi32(c_adj, _mm_set1_epi32(15));
+            let code_norm = _mm_or_si128(
+                _mm_slli_epi32::<3>(c_adj),
+                _mm_and_si128(n_adj, _mm_set1_epi32(7)),
+            );
+            let code_norm = _mm_blendv_epi8(
+                code_norm,
+                _mm_set1_epi32(0x7F),
+                sat,
+            );
+            let code_sub = _mm_min_epi32(n32, _mm_set1_epi32(16));
+            let mag = _mm_blendv_epi8(code_norm, code_sub, is_sub32);
+            let neg32 = narrow64(_mm256_castpd_si256(neg_pd));
+            let code = _mm_or_si128(
+                mag,
+                _mm_and_si128(neg32, _mm_set1_epi32(0x80)),
+            );
+            let code =
+                _mm_andnot_si128(narrow64(kill_mask(x)), code);
+            // pack the four dword codes into four bytes
+            let packed = _mm_shuffle_epi8(
+                code,
+                _mm_setr_epi8(
+                    0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1, -1, -1,
+                    -1, -1, -1,
+                ),
+            );
+            let out4 = (_mm_cvtsi128_si32(packed) as u32).to_le_bytes();
+            dst[i..i + 4].copy_from_slice(&out4);
+            i += 4;
+        }
+        for j in n4..n {
+            dst[j] = encode_bf(p, src[j], us.at(j));
+        }
+    }
+}
+
+/// Kernel selection — the value of the `--fp8-kernel` knob. A pure
+/// wall-clock choice: every kernel is bit-identical (the conformance
+/// harness makes that a tested invariant), so this is deliberately
+/// excluded from `ExperimentConfig::fingerprint`, like
+/// `--parallelism`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Pin the per-element oracle path.
+    Scalar,
+    /// Pin the vectorized path: explicit AVX2 lanes when compiled
+    /// with `--features simd` on an AVX2 host, the portable
+    /// branch-free kernel otherwise.
+    Simd,
+    /// Best available: AVX2 lanes when compiled + detected, else the
+    /// scalar oracle (the branchy scalar beats the portable
+    /// branch-free code on current compilers — see
+    /// `BENCH_fp8_kernels.json`).
+    #[default]
+    Auto,
+}
+
+impl KernelKind {
+    /// Resolve to a concrete kernel (detection-gated for AVX2).
+    pub fn resolve(self) -> &'static dyn Fp8Kernel {
+        match self {
+            KernelKind::Scalar => &ScalarKernel,
+            KernelKind::Simd => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if avx2::available() {
+                    return &avx2::Avx2Kernel;
+                }
+                &BranchfreeKernel
+            }
+            KernelKind::Auto => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if avx2::available() {
+                    return &avx2::Avx2Kernel;
+                }
+                &ScalarKernel
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(KernelKind::Scalar),
+            "simd" => Ok(KernelKind::Simd),
+            "auto" => Ok(KernelKind::Auto),
+            other => Err(format!(
+                "unknown fp8 kernel '{other}' (scalar|simd|auto)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::Auto => "auto",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::rng::Pcg32;
+
+    fn edge_inputs(alpha: f32) -> Vec<f32> {
+        let mut xs = vec![
+            0.0,
+            -0.0,
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1),           // smallest subnormal
+            f32::from_bits(0x8000_0001),
+            f32::MAX,
+            f32::MIN,
+            alpha,
+            -alpha,
+            alpha * 0.999_999,
+            alpha * 1.000_001,
+            alpha * 2.0,
+        ];
+        // dense neighborhood around every decodable grid magnitude
+        let p = Fp8Params::new(alpha);
+        for code in 0u8..=0x7F {
+            let v = p.decode(code);
+            let b = v.to_bits();
+            for d in -2i32..=2 {
+                let vb = f32::from_bits(b.wrapping_add(d as u32));
+                xs.push(vb);
+                xs.push(-vb);
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn branchfree_matches_oracle_on_edges_and_random() {
+        for alpha in [0.0625f32, 1.0, 3.7, 117.0] {
+            let p = Fp8Params::new(alpha);
+            let mut rng = Pcg32::new(41, 7);
+            let mut xs = edge_inputs(alpha);
+            for _ in 0..4000 {
+                xs.push(f32::from_bits(rng.next_u32()));
+            }
+            for &x in &xs {
+                for u in [0.0, 0.25, 0.5, 0.999_999, rng.uniform_f64()]
+                {
+                    assert_eq!(
+                        encode_bf(&p, x, u),
+                        p.encode(x, u),
+                        "encode x={x} ({:#010x}) alpha={alpha} u={u}",
+                        x.to_bits()
+                    );
+                    assert_eq!(
+                        quantize_bf(&p, x, u).to_bits(),
+                        p.quantize(x, u).to_bits(),
+                        "quantize x={x} ({:#010x}) alpha={alpha} u={u}",
+                        x.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_kernels_agree_on_slices() {
+        // every resolvable kernel, odd tail lengths, const + slice
+        // draws — the slice-level twin of the scalar equivalence test
+        let kernels = [
+            KernelKind::Scalar.resolve(),
+            KernelKind::Simd.resolve(),
+            KernelKind::Auto.resolve(),
+        ];
+        let mut rng = Pcg32::new(42, 0);
+        for alpha in [0.3f32, 1.0, 9.5] {
+            let p = Fp8Params::new(alpha);
+            for n in [0usize, 1, 3, 4, 5, 63, 64, 65, 1021] {
+                let src: Vec<f32> = (0..n)
+                    .map(|_| (rng.uniform() - 0.5) * 3.0 * alpha)
+                    .collect();
+                let us: Vec<f64> =
+                    (0..n).map(|_| rng.uniform_f64()).collect();
+                for draws in
+                    [Draws::Const(0.5), Draws::Slice(&us)]
+                {
+                    let mut ref_codes = vec![0u8; n];
+                    ScalarKernel.encode_slice(
+                        &p, &src, draws, &mut ref_codes,
+                    );
+                    let mut ref_q = src.clone();
+                    ScalarKernel.quantize_slice(&p, &mut ref_q, draws);
+                    for k in &kernels {
+                        let mut codes = vec![0u8; n];
+                        k.encode_slice(&p, &src, draws, &mut codes);
+                        assert_eq!(
+                            codes,
+                            ref_codes,
+                            "{} encode n={n} alpha={alpha}",
+                            k.name()
+                        );
+                        let mut q = src.clone();
+                        k.quantize_slice(&p, &mut q, draws);
+                        let qb: Vec<u32> =
+                            q.iter().map(|v| v.to_bits()).collect();
+                        let rb: Vec<u32> =
+                            ref_q.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(
+                            qb,
+                            rb,
+                            "{} quantize n={n} alpha={alpha}",
+                            k.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_resolves() {
+        assert_eq!("scalar".parse(), Ok(KernelKind::Scalar));
+        assert_eq!("simd".parse(), Ok(KernelKind::Simd));
+        assert_eq!("auto".parse(), Ok(KernelKind::Auto));
+        assert!("avx512".parse::<KernelKind>().is_err());
+        assert_eq!(KernelKind::Scalar.resolve().name(), "scalar");
+        // Simd resolves to the portable fallback without the feature
+        // (or without AVX2); either way it must resolve
+        let simd = KernelKind::Simd.resolve().name();
+        assert!(simd == "branchfree" || simd == "avx2", "{simd}");
+        assert_eq!(KernelKind::default(), KernelKind::Auto);
+        assert_eq!(KernelKind::Auto.to_string(), "auto");
+    }
+}

@@ -3,6 +3,7 @@
 //! ```text
 //! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S]
 //!            [--parallelism T]  # concurrent client workers per round
+//!            [--fp8-kernel scalar|simd|auto]  # codec inner loops
 //! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
 //!            --workers 2        # drive remote workers over TCP
 //! fedfp8 run --preset ... --role worker --connect 127.0.0.1:7878
@@ -41,6 +42,7 @@ fn apply_overrides(
     cfg.participation =
         args.parse_or("participation", cfg.participation)?;
     cfg.parallelism = args.parse_or("parallelism", cfg.parallelism)?;
+    cfg.fp8_kernel = args.parse_or("fp8-kernel", cfg.fp8_kernel)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
     cfg.lr = args.parse_or("lr", cfg.lr)?;
     cfg.weight_decay = args.parse_or("wd", cfg.weight_decay)?;
@@ -102,12 +104,14 @@ fn run_local(preset: &str, cfg: ExperimentConfig) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     println!(
         "platform={}  preset={preset}  rounds={}  K={}  P={}  \
-         parallelism={}",
+         parallelism={}  fp8-kernel={} ({})",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
         cfg.participation,
-        cfg.parallelism
+        cfg.parallelism,
+        cfg.fp8_kernel,
+        cfg.fp8_kernel.resolve().name(),
     );
     let mut server = Server::new(&engine, &manifest, cfg)?;
     server.set_verbose(true);
@@ -178,6 +182,7 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
         train: &train,
         shards: &shards,
         segments: &model.segments,
+        kernel: cfg.fp8_kernel,
     };
     let executor = InProcessTransport {
         engine: &engine,

@@ -20,6 +20,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::Dataset;
 use crate::fp8::codec::{self as fp8codec, DecodeLutCache, Segment};
+use crate::fp8::simd::KernelKind;
 use crate::coordinator::transport::{ClientJob, Transport, WorkBuffers};
 
 use super::codec::{self, Hello, WireOutcome};
@@ -34,6 +35,10 @@ pub struct WorkerCtx<'a> {
     pub train: &'a Dataset,
     pub shards: &'a [Vec<usize>],
     pub segments: &'a [Segment],
+    /// This worker's uplink quantize/encode kernel (from its own
+    /// config copy; bit-identical across kernels, so workers and
+    /// server may pin different ones).
+    pub kernel: KernelKind,
 }
 
 /// Connect to a server, perform the Hello/HelloAck handshake and
@@ -84,7 +89,7 @@ pub fn serve_conn(
     executor: &dyn Transport,
     ctx: &WorkerCtx<'_>,
 ) -> Result<()> {
-    let mut buffers = WorkBuffers::default();
+    let mut buffers = WorkBuffers::with_kernel(ctx.kernel);
     let mut lut = DecodeLutCache::default();
     let mut w_start: Vec<f32> = Vec::new();
     let mut out_body = Vec::new();

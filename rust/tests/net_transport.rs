@@ -63,6 +63,7 @@ fn run_socket(
         train: &world.train,
         shards: &world.shards,
         segments: &model.segments,
+        kernel: cfg.fp8_kernel,
     };
     thread::scope(|s| {
         for _ in 0..workers {

@@ -9,6 +9,7 @@ use fedfp8::data::vision::{generate, VisionCfg};
 use fedfp8::fp8::codec::{self, Rounding, Segment};
 use fedfp8::fp8::format::Fp8Params;
 use fedfp8::fp8::rng::Pcg32;
+use fedfp8::fp8::simd::KernelKind;
 use fedfp8::util::proptest::forall;
 
 fn random_segments(g: &mut fedfp8::util::proptest::Gen) -> (Vec<Segment>, usize, usize) {
@@ -310,8 +311,8 @@ fn prop_batched_encode_bit_identical_to_scalar() {
                 let mut scratch = Vec::new();
                 let mut got = codec::WirePayload::default();
                 codec::encode_into_pooled(
-                    &w, &alphas, &[], &segs, mode, &mut r,
-                    &mut scratch, pool, &mut got,
+                    &w, &alphas, &[], &segs, mode, KernelKind::Auto,
+                    &mut r, &mut scratch, pool, &mut got,
                 );
                 if got.codes != reference.codes
                     || got.raw != reference.raw
@@ -330,6 +331,147 @@ fn prop_batched_encode_bit_identical_to_scalar() {
                 if r.next_u32() != expect.next_u32() {
                     return Err(format!(
                         "caller RNG state diverged (pool={pool})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_kernel_bit_identical_on_wire_paths() {
+    // the SIMD kernel must produce byte-identical wire payloads and
+    // in-place quantizations to the scalar kernel for the same wire
+    // key, across odd tail lengths (len % lane_width != 0), empty
+    // segments, raw segments, and pool sizes 1/2/4 with stochastic
+    // rounding
+    forall("simd-vs-scalar-wire", 43, 30, |g| {
+        let mut segs = Vec::new();
+        let mut off = 0usize;
+        let mut aidx = 0usize;
+        let n_seg = g.usize_in(1, 5);
+        for i in 0..n_seg {
+            // empty, lane-aligned, odd-tailed and multi-block sizes
+            let size = match g.usize_in(0, 5) {
+                0 => 0,
+                1 => g.usize_in(4000, 20_000) | 1,
+                2 => 4 * g.usize_in(1, 64),
+                _ => g.usize_in(1, 261),
+            };
+            let quant = g.bool() || i == 0;
+            segs.push(Segment {
+                name: format!("s{i}"),
+                offset: off,
+                size,
+                quantized: quant,
+                alpha_idx: if quant { Some(aidx) } else { None },
+            });
+            off += size;
+            if quant {
+                aidx += 1;
+            }
+        }
+        let w = g.vec_f32(off, 2.5);
+        let alphas: Vec<f32> =
+            (0..aidx).map(|_| g.f32_log(0.05, 20.0)).collect();
+        let seed = g.rng.next_u64();
+        for mode in [Rounding::Deterministic, Rounding::Stochastic] {
+            // scalar-kernel reference at pool 1
+            let mut r = Pcg32::new(seed, 9);
+            let mut scratch = Vec::new();
+            let mut reference = codec::WirePayload::default();
+            codec::encode_into_pooled(
+                &w, &alphas, &[], &segs, mode, KernelKind::Scalar,
+                &mut r, &mut scratch, 1, &mut reference,
+            );
+            let mut ref_q = vec![0.0f32; off];
+            let mut r = Pcg32::new(seed, 9);
+            codec::quantize_vec_pooled(
+                &w, &alphas, &segs, mode, KernelKind::Scalar, &mut r,
+                &mut scratch, 1, &mut ref_q,
+            );
+            let ref_q_bits: Vec<u32> =
+                ref_q.iter().map(|v| v.to_bits()).collect();
+            for kernel in [KernelKind::Simd, KernelKind::Auto] {
+                for pool in [1usize, 2, 4] {
+                    let mut r = Pcg32::new(seed, 9);
+                    let mut got = codec::WirePayload::default();
+                    codec::encode_into_pooled(
+                        &w, &alphas, &[], &segs, mode, kernel, &mut r,
+                        &mut scratch, pool, &mut got,
+                    );
+                    if got.codes != reference.codes
+                        || got.raw != reference.raw
+                    {
+                        return Err(format!(
+                            "encode ({kernel}, pool={pool}, {mode:?}) \
+                             diverged from the scalar kernel"
+                        ));
+                    }
+                    let mut q = vec![0.0f32; off];
+                    let mut r = Pcg32::new(seed, 9);
+                    codec::quantize_vec_pooled(
+                        &w, &alphas, &segs, mode, kernel, &mut r,
+                        &mut scratch, pool, &mut q,
+                    );
+                    let q_bits: Vec<u32> =
+                        q.iter().map(|v| v.to_bits()).collect();
+                    if q_bits != ref_q_bits {
+                        return Err(format!(
+                            "quantize_vec ({kernel}, pool={pool}, \
+                             {mode:?}) diverged from the scalar kernel"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mse_with_kernel_equals_reference_mse() {
+    // the kernel-dispatched Eq. (5) scorer must be *bit*-equal to the
+    // reference SegmentStats::mse for every kernel: same quantize
+    // bits, same accumulation order (not merely within tolerance)
+    forall("eq5-mse-kernel-bit-equal", 44, 40, |g| {
+        let size = g.usize_in(1, 400);
+        let offset = g.usize_in(0, 32);
+        let seg = Segment {
+            name: "s".into(),
+            offset,
+            size,
+            quantized: true,
+            alpha_idx: Some(0),
+        };
+        let dim = offset + size;
+        let w = g.vec_f32(dim, 1.3);
+        let n_cl = g.usize_in(1, 5);
+        let clients_data: Vec<Vec<f32>> =
+            (0..n_cl).map(|_| g.vec_f32(dim, 1.3)).collect();
+        let clients: Vec<&[f32]> =
+            clients_data.iter().map(|v| v.as_slice()).collect();
+        let kweights: Vec<f32> =
+            (0..n_cl).map(|_| g.f32_in(0.0, 1.0)).collect();
+        let us: Vec<f64> =
+            (0..size).map(|_| g.rng.uniform_f64()).collect();
+        let stats =
+            codec::SegmentStats::build(&seg, &clients, &kweights);
+        for _ in 0..4 {
+            let alpha = g.f32_log(0.05, 20.0);
+            let reference = stats.mse(&w, &seg, alpha, &us);
+            for kernel in [
+                KernelKind::Scalar,
+                KernelKind::Simd,
+                KernelKind::Auto,
+            ] {
+                let got =
+                    stats.mse_with(kernel, &w, &seg, alpha, &us);
+                if got.to_bits() != reference.to_bits() {
+                    return Err(format!(
+                        "mse_with({kernel}) = {got} != mse = \
+                         {reference} (alpha={alpha}, d={size})"
                     ));
                 }
             }

@@ -10,6 +10,10 @@
  *     sequential and pooled
  *   - Eq. (5) alpha search: naive O(G*K*d) client rescan vs
  *     sufficient-statistics O(d*(K+G)), sequential and pooled
+ *   - kernel arms: scalar-oracle inner loop vs the AVX2 lane kernel
+ *     (`--fp8-kernel simd`, rust/src/fp8/simd.rs) on the encode and
+ *     Eq. (5) paths (runtime-gated; bit-identical by the conformance
+ *     contract — see tools/fp8_kernel_conformance.c)
  *
  * Build & run (repo root):
  *   gcc -O3 -o /tmp/fp8_mirror tools/bench_fp8_mirror.c -lm -lpthread
@@ -19,6 +23,7 @@
  * Rust numbers whenever a Rust toolchain is present.
  */
 
+#include <immintrin.h>
 #include <math.h>
 #include <pthread.h>
 #include <stdint.h>
@@ -101,6 +106,121 @@ static inline uint8_t fp8_encode(const Fp8Params *p, float x, double u) {
     n = (int64_t)f + up;
     if (n > (1 << (M_BITS + 1))) n = 1 << (M_BITS + 1);
     return (uint8_t)((neg << 7) | ((n >> M_BITS) << M_BITS) | (n & 7));
+}
+
+/* ---- AVX2 lane kernel (twin of rust/src/fp8/simd.rs::Avx2Kernel;
+ * validated bit-identical over all 2^32 f32 patterns by
+ * tools/fp8_kernel_conformance.c). target attributes keep the
+ * documented plain `gcc -O3` build line working; runtime gate is
+ * __builtin_cpu_supports("avx2"). ------------------------------------ */
+
+__attribute__((target("avx2"))) static inline __m128i
+narrow64(__m256i v) {
+    return _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(
+        v, _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0)));
+}
+
+__attribute__((target("avx2"))) static inline __m256d
+scale_lookup(const double *scales, __m128i idx) {
+    return _mm256_setr_pd(scales[(uint32_t)_mm_extract_epi32(idx, 0)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 1)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 2)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 3)]);
+}
+
+__attribute__((target("avx2"))) static void
+encode4_avx2(const Fp8Params *p, const float *src, const double *us,
+             uint8_t *dst) {
+    __m128 xs = _mm_loadu_ps(src);
+    __m256d x = _mm256_cvtps_pd(xs);
+    __m256d absx = _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+    __m256d ub = _mm256_mul_pd(absx, _mm256_set1_pd(p->exp2_bias));
+    __m256i ebits = _mm256_and_si256(
+        _mm256_srli_epi64(_mm256_castpd_si256(ub), 52),
+        _mm256_set1_epi64x(0x7FF));
+    __m128i c32 = _mm_sub_epi32(narrow64(ebits), _mm_set1_epi32(1023));
+    __m128i is_sub32 = _mm_cmpgt_epi32(_mm_set1_epi32(2), c32);
+    __m128i idx = _mm_min_epi32(
+        _mm_max_epi32(c32, _mm_setzero_si128()), _mm_set1_epi32(15));
+    __m256d s = _mm256_blendv_pd(
+        scale_lookup(p->scales, idx), _mm256_set1_pd(p->sub_scale),
+        _mm256_castsi256_pd(_mm256_cvtepi32_epi64(is_sub32)));
+    __m256d z = _mm256_div_pd(absx, s);
+    __m256d f = _mm256_floor_pd(z);
+    __m256d frac = _mm256_sub_pd(z, f);
+    __m256d u = _mm256_loadu_pd(us);
+    __m256d neg_pd =
+        _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_LT_OQ);
+    __m256d up_pd = _mm256_blendv_pd(
+        _mm256_cmp_pd(frac, u, _CMP_GE_OQ),
+        _mm256_cmp_pd(_mm256_sub_pd(_mm256_set1_pd(1.0), frac), u,
+                      _CMP_LT_OQ),
+        neg_pd);
+    __m128i fi = _mm256_cvttpd_epi32(
+        _mm256_min_pd(f, _mm256_set1_pd(17.0)));
+    __m128i n32 =
+        _mm_sub_epi32(fi, narrow64(_mm256_castpd_si256(up_pd)));
+    __m128i carry = _mm_cmpgt_epi32(n32, _mm_set1_epi32(15));
+    __m128i jitter = _mm_cmpgt_epi32(_mm_set1_epi32(8), n32);
+    __m128i c_adj = _mm_add_epi32(_mm_sub_epi32(c32, carry), jitter);
+    __m128i n_adj = _mm_blendv_epi8(n32, _mm_set1_epi32(8), carry);
+    n_adj = _mm_blendv_epi8(n_adj, _mm_set1_epi32(15), jitter);
+    __m128i sat = _mm_cmpgt_epi32(c_adj, _mm_set1_epi32(15));
+    __m128i code_norm = _mm_or_si128(
+        _mm_slli_epi32(c_adj, M_BITS),
+        _mm_and_si128(n_adj, _mm_set1_epi32(7)));
+    code_norm = _mm_blendv_epi8(code_norm, _mm_set1_epi32(0x7F), sat);
+    __m128i mag = _mm_blendv_epi8(
+        code_norm, _mm_min_epi32(n32, _mm_set1_epi32(16)), is_sub32);
+    __m128i code = _mm_or_si128(
+        mag, _mm_and_si128(narrow64(_mm256_castpd_si256(neg_pd)),
+                           _mm_set1_epi32(0x80)));
+    __m256d kill_pd = _mm256_or_pd(
+        _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_EQ_OQ),
+        _mm256_cmp_pd(x, x, _CMP_UNORD_Q));
+    code = _mm_andnot_si128(narrow64(_mm256_castpd_si256(kill_pd)),
+                            code);
+    __m128i packed = _mm_shuffle_epi8(
+        code, _mm_setr_epi8(0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1,
+                            -1, -1, -1, -1, -1));
+    uint32_t out4 = (uint32_t)_mm_cvtsi128_si32(packed);
+    memcpy(dst, &out4, 4);
+}
+
+__attribute__((target("avx2"))) static void
+quantize4_avx2(const Fp8Params *p, const float *src, const double *us,
+               float *dst) {
+    __m128 xs = _mm_loadu_ps(src);
+    __m256d x = _mm256_cvtps_pd(xs);
+    __m256d absx = _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+    __m256d ub = _mm256_mul_pd(absx, _mm256_set1_pd(p->exp2_bias));
+    __m256i ebits = _mm256_and_si256(
+        _mm256_srli_epi64(_mm256_castpd_si256(ub), 52),
+        _mm256_set1_epi64x(0x7FF));
+    __m128i c32 = _mm_sub_epi32(narrow64(ebits), _mm_set1_epi32(1023));
+    __m128i is_sub32 = _mm_cmpgt_epi32(_mm_set1_epi32(2), c32);
+    __m128i idx = _mm_min_epi32(
+        _mm_max_epi32(c32, _mm_setzero_si128()), _mm_set1_epi32(15));
+    __m256d s = _mm256_blendv_pd(
+        scale_lookup(p->scales, idx), _mm256_set1_pd(p->sub_scale),
+        _mm256_castsi256_pd(_mm256_cvtepi32_epi64(is_sub32)));
+    __m256d z = _mm256_div_pd(x, s);
+    __m256d f = _mm256_floor_pd(z);
+    __m256d up = _mm256_and_pd(
+        _mm256_cmp_pd(_mm256_sub_pd(z, f), _mm256_loadu_pd(us),
+                      _CMP_GE_OQ),
+        _mm256_set1_pd(1.0));
+    __m256d q = _mm256_mul_pd(_mm256_add_pd(f, up), s);
+    __m256d a = _mm256_set1_pd((double)p->alpha);
+    q = _mm256_min_pd(
+        _mm256_max_pd(q, _mm256_sub_pd(_mm256_setzero_pd(), a)), a);
+    __m128 qf = _mm256_cvtpd_ps(q);
+    __m256d kill_pd = _mm256_or_pd(
+        _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_EQ_OQ),
+        _mm256_cmp_pd(x, x, _CMP_UNORD_Q));
+    __m128 kill =
+        _mm_castsi128_ps(narrow64(_mm256_castpd_si256(kill_pd)));
+    _mm_storeu_ps(dst, _mm_andnot_ps(kill, qf));
 }
 
 static inline float fp8_decode(const Fp8Params *p, uint8_t code) {
@@ -277,6 +397,35 @@ static void enc_batched(void) {
     enc_batched_range(0, TENSORS, pcg_u64(&KEY_RNG), scratch);
 }
 
+/* AVX2-kernel encode arm: identical stream/block structure to
+ * enc_batched, only the inner loop swaps to the 4-wide lanes (the
+ * exact shape of `--fp8-kernel simd` in Rust). */
+static void enc_avx2_range(int seg_lo, int seg_hi, uint64_t key,
+                           double *scratch) {
+    for (int si = seg_lo; si < seg_hi; si++) {
+        const Fp8Params *p = &PARAMS[si];
+        const float *vals = W_VEC + si * SEG;
+        uint8_t *dst = CODES + si * SEG;
+        for (int b = 0; b * RNG_BLOCK < SEG; b++) {
+            int lo = b * RNG_BLOCK;
+            int hi = lo + RNG_BLOCK < SEG ? lo + RNG_BLOCK : SEG;
+            int len = hi - lo, l4 = len & ~3;
+            Pcg32 r = pcg_derive(key, si, b, WIRE_DOMAIN);
+            for (int i = 0; i < len; i++) scratch[i] = pcg_f64(&r);
+            for (int i = 0; i < l4; i += 4)
+                encode4_avx2(p, vals + lo + i, scratch + i,
+                             dst + lo + i);
+            for (int i = l4; i < len; i++)
+                dst[lo + i] = fp8_encode(p, vals[lo + i], scratch[i]);
+        }
+    }
+}
+
+static void enc_avx2(void) {
+    static double scratch[RNG_BLOCK];
+    enc_avx2_range(0, TENSORS, pcg_u64(&KEY_RNG), scratch);
+}
+
 typedef struct { int lo, hi; uint64_t key; } EncJob;
 
 static void *enc_worker(void *arg) {
@@ -412,6 +561,43 @@ static void eq5_suffstats(void) {
     SINK = best;
 }
 
+/* AVX2-kernel candidate scorer (the SegmentStats::mse_with shape) */
+static double ss_score_avx2(int si, int gi, double wsum) {
+    Fp8Params p = params_new(cand_alpha(gi));
+    int off = si * SEG;
+    double a0 = 0, a1 = 0, a2 = 0, a3 = 0;
+    float qb[4];
+    int i = 0;
+    for (; i + 4 <= SEG; i += 4) {
+        quantize4_avx2(&p, &W_VEC[off + i], &US[si][i], qb);
+        a0 += (double)qb[0] * qb[0] * wsum - 2.0 * qb[0] * SS_S[si][i]
+              + SS_T[si][i];
+        a1 += (double)qb[1] * qb[1] * wsum
+              - 2.0 * qb[1] * SS_S[si][i + 1] + SS_T[si][i + 1];
+        a2 += (double)qb[2] * qb[2] * wsum
+              - 2.0 * qb[2] * SS_S[si][i + 2] + SS_T[si][i + 2];
+        a3 += (double)qb[3] * qb[3] * wsum
+              - 2.0 * qb[3] * SS_S[si][i + 3] + SS_T[si][i + 3];
+    }
+    double tail = 0.0;
+    for (; i < SEG; i++) {
+        double q = fp8_quantize(&p, W_VEC[off + i], US[si][i]);
+        tail += q * q * wsum - 2.0 * q * SS_S[si][i] + SS_T[si][i];
+    }
+    return (a0 + a1) + (a2 + a3) + tail;
+}
+
+static void eq5_suffstats_avx2(void) {
+    ss_build();
+    double wsum = ss_wsum(), best = 1e300;
+    for (int si = 0; si < TENSORS; si++)
+        for (int gi = 0; gi < GRID; gi++) {
+            double m = ss_score_avx2(si, gi, wsum);
+            if (m < best) best = m;
+        }
+    SINK = best;
+}
+
 typedef struct { int task_lo, task_hi; double wsum, best; } Eq5Job;
 
 static void *eq5_worker(void *arg) {
@@ -482,10 +668,15 @@ int main(void) {
     KEY_RNG = pcg_new(2, 0);
     enc_scalar(); /* populate CODES for the decode arms */
 
-    printf("pool=%d dim=%d K=%d G=%d\n\n", POOL, DIM, K_CLIENTS, GRID);
+    int have_avx2 = __builtin_cpu_supports("avx2");
+    printf("pool=%d dim=%d K=%d G=%d avx2=%d\n\n", POOL, DIM,
+           K_CLIENTS, GRID, have_avx2);
     BResult e1 = bench_run("encode/scalar_ref (before)", enc_scalar, 400);
     BResult e2 = bench_run("encode/batched pool=1", enc_batched, 400);
     BResult e3 = bench_run("encode/batched pooled", enc_pooled, 400);
+    BResult es = {0};
+    if (have_avx2)
+        es = bench_run("encode/kernel=avx2 pool=1", enc_avx2, 400);
     BResult d1 = bench_run("decode/rebuild_tables (before)", dec_rebuild,
                            400);
     BResult d2 = bench_run("decode/lut_cached", dec_cached, 400);
@@ -494,6 +685,10 @@ int main(void) {
     BResult q2 = bench_run("eq5/suffstats pool=1", eq5_suffstats, 1500);
     BResult q3 = bench_run("eq5/suffstats pooled", eq5_suffstats_pooled,
                            1500);
+    BResult qs = {0};
+    if (have_avx2)
+        qs = bench_run("eq5/suffstats kernel=avx2 pool=1",
+                       eq5_suffstats_avx2, 1500);
 
     double sp_eq5 = q1.median_ns / q3.median_ns;
     double sp_eq5_seq = q1.median_ns / q2.median_ns;
@@ -508,9 +703,18 @@ int main(void) {
     double sp_enc_p10 = e1.p10_ns / e3.p10_ns;
     double sp_wire_p10 =
         (e1.p10_ns + d1.p10_ns) / (e3.p10_ns + d2.p10_ns);
+    double sp_enc_simd = have_avx2 ? e2.median_ns / es.median_ns : 0.0;
+    double sp_eq5_simd = have_avx2 ? q2.median_ns / qs.median_ns : 0.0;
+    double sp_enc_simd_p10 = have_avx2 ? e2.p10_ns / es.p10_ns : 0.0;
+    double sp_eq5_simd_p10 = have_avx2 ? q2.p10_ns / qs.p10_ns : 0.0;
     printf("\nspeedups: eq5 %.2fx (seq %.2fx)  encode %.2fx  "
            "decode %.2fx  wire %.2fx\n",
            sp_eq5, sp_eq5_seq, sp_enc, sp_dec, sp_wire);
+    if (have_avx2)
+        printf("kernel speedups (scalar -> avx2, pool=1): encode "
+               "%.2fx (p10 %.2fx)  eq5 %.2fx (p10 %.2fx)\n",
+               sp_enc_simd, sp_enc_simd_p10, sp_eq5_simd,
+               sp_eq5_simd_p10);
 
     FILE *f = fopen("BENCH_fp8_kernels.json", "w");
     if (!f) { perror("BENCH_fp8_kernels.json"); return 1; }
@@ -527,8 +731,12 @@ int main(void) {
             "The C scalar_ref baseline also "
             "lacks the Rust pre-PR path's per-element Vec::push and "
             "slice bounds checks, further understating the gain. "
+            "The kernel=avx2 arms mirror `--fp8-kernel simd` "
+            "(rust/src/fp8/simd.rs, bit-identical to scalar by the "
+            "exhaustive conformance contract); the p10 kernel ratios "
+            "are the steady-state numbers on this noisy box. "
             "Regenerate natively with `cargo bench --bench "
-            "fp8_kernels`.\",\n");
+            "fp8_kernels --features simd`.\",\n");
     fprintf(f,
             "  \"config\": {\n    \"dim\": \"%d\",\n    \"tensors\": "
             "\"%d\",\n    \"k_clients\": \"%d\",\n    \"grid_points\": "
@@ -538,12 +746,24 @@ int main(void) {
     emit_result(f, &e1, DIM, 1);
     emit_result(f, &e2, DIM, 0);
     emit_result(f, &e3, DIM, 0);
+    if (have_avx2) emit_result(f, &es, DIM, 0);
     emit_result(f, &d1, DIM, 0);
     emit_result(f, &d2, DIM, 0);
     emit_result(f, &q1, 0, 0);
     emit_result(f, &q2, 0, 0);
     emit_result(f, &q3, 0, 0);
+    if (have_avx2) emit_result(f, &qs, 0, 0);
     fprintf(f, "\n  ],\n  \"speedups\": {\n");
+    if (have_avx2) {
+        fprintf(f, "    \"encode_scalar_kernel_over_simd_kernel\": "
+                   "%.3f,\n", sp_enc_simd);
+        fprintf(f, "    \"encode_scalar_kernel_over_simd_kernel_p10\": "
+                   "%.3f,\n", sp_enc_simd_p10);
+        fprintf(f, "    \"eq5_scalar_kernel_over_simd_kernel\": "
+                   "%.3f,\n", sp_eq5_simd);
+        fprintf(f, "    \"eq5_scalar_kernel_over_simd_kernel_p10\": "
+                   "%.3f,\n", sp_eq5_simd_p10);
+    }
     fprintf(f, "    \"eq5_alpha_search_naive_over_suffstats_pooled\": "
                "%.3f,\n", sp_eq5);
     fprintf(f, "    \"eq5_alpha_search_naive_over_suffstats_seq\": "

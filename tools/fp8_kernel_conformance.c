@@ -1,0 +1,519 @@
+/* Differential conformance harness for the FP8 SIMD kernel layer
+ * (`rust/src/fp8/simd.rs`) — C twin, exhaustively runnable.
+ *
+ * The Rust tree carries three implementations of the FP8 value
+ * mapping: the branchy scalar oracle (`format.rs::Fp8Params::
+ * {quantize,encode}`), the portable branch-free kernel and the AVX2
+ * lane kernel (both in `simd.rs`). The contract is *bit-equality for
+ * every f32 input*: FP8 Formats for Deep Learning (Micikevicius et
+ * al., 2022) and 8-bit Numerical Formats for DNNs (Noune et al.,
+ * 2022) both document that bias/subnormal/saturation handling is
+ * where FP8 implementations silently diverge, so the speedup ships
+ * welded to this sweep.
+ *
+ * This file mirrors all three implementations op-for-op (IEEE f64
+ * math is deterministic, so the equivalence argument transfers) and
+ * was used to validate the algorithms over the FULL 2^32 f32 bit
+ * pattern space before the Rust transcription; the in-tree twin is
+ * `rust/tests/exhaustive_fp8.rs` (stratified subset in tier-1, full
+ * sweep in nightly CI via FEDFP8_EXHAUSTIVE_CHUNKS).
+ *
+ * Build & run (repo root):
+ *   gcc -O3 -mavx2 -o /tmp/fp8_conf tools/fp8_kernel_conformance.c \
+ *       -lm -lpthread
+ *   /tmp/fp8_conf stratified          # fast edge-pattern subset
+ *   /tmp/fp8_conf exhaustive          # all 2^32 patterns (minutes)
+ *   /tmp/fp8_conf exhaustive 3 8      # chunk 3 of 8
+ *   /tmp/fp8_conf bench               # scalar vs bf vs avx2 encode
+ */
+
+#include <immintrin.h>
+#include <math.h>
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+
+/* ---- FP8 format (twin of rust/src/fp8/format.rs) ------------------ */
+
+#define M_BITS 3
+#define E_MAX 15
+#define LOG2_TOP 0.9068905956085185
+
+typedef struct {
+    float alpha;
+    double bias, exp2_bias, sub_scale, scales[16];
+} Fp8Params;
+
+static Fp8Params params_new(float alpha) {
+    Fp8Params p;
+    p.alpha = alpha;
+    p.bias = 16.0 - log2((double)alpha) + LOG2_TOP - 1.0;
+    p.exp2_bias = exp2(p.bias);
+    p.sub_scale = exp2(1.0 - p.bias - M_BITS);
+    for (int c = 0; c < 16; c++)
+        p.scales[c] = exp2((double)c - p.bias - M_BITS);
+    return p;
+}
+
+static inline int64_t code_exponent(const Fp8Params *p, double absx) {
+    double u = absx * p->exp2_bias;
+    uint64_t bits;
+    memcpy(&bits, &u, 8);
+    return (int64_t)((bits >> 52) & 0x7FF) - 1023;
+}
+
+/* scalar oracle — branch-for-branch copy of Fp8Params::quantize */
+static inline float quantize_scalar(const Fp8Params *p, float x, double u) {
+    if (x == 0.0f) return 0.0f;
+    if (isnan(x)) return 0.0f;
+    double x64 = (double)x;
+    int64_t c = code_exponent(p, fabs(x64));
+    double s = c > 1 ? p->scales[c < 15 ? c : 15] : p->sub_scale;
+    double z = x64 / s;
+    double f = floor(z);
+    double up = (z - f >= u) ? 1.0 : 0.0;
+    double q = (f + up) * s;
+    double a = (double)p->alpha;
+    if (q < -a) q = -a;
+    if (q > a) q = a;
+    return (float)q;
+}
+
+/* scalar oracle — branch-for-branch copy of Fp8Params::encode */
+static inline uint8_t encode_scalar(const Fp8Params *p, float x, double u) {
+    if (x == 0.0f || isnan(x)) return 0;
+    if (isinf(x))
+        return (uint8_t)(((x < 0.0f) ? 0x80 : 0) | 0x7F);
+    int neg = x < 0.0f;
+    double absx = fabs((double)x);
+    int64_t c = code_exponent(p, absx);
+    int64_t n;
+    if (c > 1) {
+        if (c > E_MAX) return (uint8_t)((neg << 7) | 0x7F);
+        double s = p->scales[c];
+        double z = absx / s, f = floor(z);
+        int up = neg ? (1.0 - (z - f) < u) : (z - f >= u);
+        n = (int64_t)f + up;
+        if (n >= (1 << (M_BITS + 1))) { c += 1; n = 1 << M_BITS; }
+        if (n < (1 << M_BITS)) { c -= 1; n = (1 << (M_BITS + 1)) - 1; }
+        if (c > E_MAX) return (uint8_t)((neg << 7) | 0x7F);
+        return (uint8_t)((neg << 7) | ((int)c << M_BITS) | (n & 7));
+    }
+    double z = absx / p->sub_scale, f = floor(z);
+    int up = neg ? (1.0 - (z - f) < u) : (z - f >= u);
+    n = (int64_t)f + up;
+    if (n > (1 << (M_BITS + 1))) n = 1 << (M_BITS + 1);
+    return (uint8_t)((neg << 7) | ((n >> M_BITS) << M_BITS) | (n & 7));
+}
+
+/* ---- branch-free portable kernel (twin of simd.rs quantize_bf) ---- */
+
+static inline float quantize_bf(const Fp8Params *p, float x, double u) {
+    double x64 = (double)x;
+    double absx = fabs(x64);
+    double ub = absx * p->exp2_bias;
+    uint64_t bits;
+    memcpy(&bits, &ub, 8);
+    int64_t c = (int64_t)((bits >> 52) & 0x7FF) - 1023;
+    int is_sub = c <= 1;
+    int64_t idx = c < 0 ? 0 : (c > 15 ? 15 : c);
+    double s = is_sub ? p->sub_scale : p->scales[idx];
+    double z = x64 / s;
+    double f = floor(z);
+    double up = (z - f >= u) ? 1.0 : 0.0;
+    double a = (double)p->alpha;
+    double q = fmin(fmax((f + up) * s, -a), a);
+    float out = (float)q;
+    return (x == 0.0f || isnan(x)) ? 0.0f : out;
+}
+
+/* twin of simd.rs encode_bf */
+static inline uint8_t encode_bf(const Fp8Params *p, float x, double u) {
+    double x64 = (double)x;
+    double absx = fabs(x64);
+    double ub = absx * p->exp2_bias;
+    uint64_t bits;
+    memcpy(&bits, &ub, 8);
+    int64_t c = (int64_t)((bits >> 52) & 0x7FF) - 1023;
+    int is_sub = c <= 1;
+    int64_t idx = c < 0 ? 0 : (c > 15 ? 15 : c);
+    double s = is_sub ? p->sub_scale : p->scales[idx];
+    double z = absx / s;
+    double f = floor(z);
+    double frac = z - f;
+    int neg = x64 < 0.0;
+    int up = neg ? (1.0 - frac < u) : (frac >= u);
+    /* clamp before int conversion: saturated lanes can carry huge or
+     * NaN f (fmin(NaN, 17) = 17); non-saturated lanes never exceed 16
+     * so the clamp is a no-op exactly where the result is used */
+    int64_t n = (int64_t)fmin(f, 17.0) + up;
+    int64_t c_adj = c + (n > 15) - (n < 8);
+    int64_t n_adj = n > 15 ? 8 : (n < 8 ? 15 : n);
+    int sat = c_adj > 15;
+    uint8_t code_norm =
+        sat ? 0x7F : (uint8_t)((c_adj << M_BITS) | (n_adj & 7));
+    uint8_t code_sub = (uint8_t)(n > 16 ? 16 : n);
+    uint8_t mag = is_sub ? code_sub : code_norm;
+    uint8_t code = (uint8_t)((neg ? 0x80 : 0) | mag);
+    return (x == 0.0f || isnan(x)) ? 0 : code;
+}
+
+/* ---- AVX2 lane kernel (twin of simd.rs Avx2Kernel) ---------------- */
+
+static inline __m128i narrow64(__m256i v) {
+    return _mm256_castsi256_si128(_mm256_permutevar8x32_epi32(
+        v, _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0)));
+}
+
+/* Per-exponent scale lookup via four indexed loads: measurably faster
+ * than vgatherdpd on this (virtualized) host and on pre-Skylake parts,
+ * and bit-identical — the loads read the same scales[] the scalar
+ * oracle uses. */
+static inline __m256d scale_lookup(const double *scales, __m128i idx) {
+    return _mm256_setr_pd(scales[(uint32_t)_mm_extract_epi32(idx, 0)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 1)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 2)],
+                          scales[(uint32_t)_mm_extract_epi32(idx, 3)]);
+}
+
+/* 4 lanes of quantize; in-place on data[0..4] */
+static void quantize4_avx2(const Fp8Params *p, float *data,
+                           const double *us) {
+    __m128 xs = _mm_loadu_ps(data);
+    __m256d x = _mm256_cvtps_pd(xs);
+    __m256d absx =
+        _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+    __m256d ub = _mm256_mul_pd(absx, _mm256_set1_pd(p->exp2_bias));
+    __m256i ebits = _mm256_and_si256(
+        _mm256_srli_epi64(_mm256_castpd_si256(ub), 52),
+        _mm256_set1_epi64x(0x7FF));
+    __m128i c32 = _mm_sub_epi32(
+        narrow64(ebits), _mm_set1_epi32(1023));
+    __m128i is_sub32 = _mm_cmpgt_epi32(_mm_set1_epi32(2), c32);
+    __m128i idx = _mm_min_epi32(
+        _mm_max_epi32(c32, _mm_setzero_si128()), _mm_set1_epi32(15));
+    __m256d sg = scale_lookup(p->scales, idx);
+    __m256d is_sub_pd =
+        _mm256_castsi256_pd(_mm256_cvtepi32_epi64(is_sub32));
+    __m256d s = _mm256_blendv_pd(
+        sg, _mm256_set1_pd(p->sub_scale), is_sub_pd);
+    __m256d z = _mm256_div_pd(x, s);
+    __m256d f = _mm256_floor_pd(z);
+    __m256d u = _mm256_loadu_pd(us);
+    __m256d up_mask =
+        _mm256_cmp_pd(_mm256_sub_pd(z, f), u, _CMP_GE_OQ);
+    __m256d up =
+        _mm256_and_pd(up_mask, _mm256_set1_pd(1.0));
+    __m256d q = _mm256_mul_pd(_mm256_add_pd(f, up), s);
+    __m256d a = _mm256_set1_pd((double)p->alpha);
+    q = _mm256_min_pd(
+        _mm256_max_pd(q, _mm256_sub_pd(_mm256_setzero_pd(), a)), a);
+    __m128 qf = _mm256_cvtpd_ps(q);
+    __m256d kill_pd = _mm256_or_pd(
+        _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_EQ_OQ),
+        _mm256_cmp_pd(x, x, _CMP_UNORD_Q));
+    __m128 kill = _mm_castsi128_ps(narrow64(_mm256_castpd_si256(kill_pd)));
+    _mm_storeu_ps(data, _mm_andnot_ps(kill, qf));
+}
+
+/* 4 lanes of encode; dst[0..4] */
+static void encode4_avx2(const Fp8Params *p, const float *src,
+                         const double *us, uint8_t *dst) {
+    __m128 xs = _mm_loadu_ps(src);
+    __m256d x = _mm256_cvtps_pd(xs);
+    __m256d absx = _mm256_andnot_pd(_mm256_set1_pd(-0.0), x);
+    __m256d ub = _mm256_mul_pd(absx, _mm256_set1_pd(p->exp2_bias));
+    __m256i ebits = _mm256_and_si256(
+        _mm256_srli_epi64(_mm256_castpd_si256(ub), 52),
+        _mm256_set1_epi64x(0x7FF));
+    __m128i c32 = _mm_sub_epi32(narrow64(ebits), _mm_set1_epi32(1023));
+    __m128i is_sub32 = _mm_cmpgt_epi32(_mm_set1_epi32(2), c32);
+    __m128i idx = _mm_min_epi32(
+        _mm_max_epi32(c32, _mm_setzero_si128()), _mm_set1_epi32(15));
+    __m256d sg = scale_lookup(p->scales, idx);
+    __m256d is_sub_pd =
+        _mm256_castsi256_pd(_mm256_cvtepi32_epi64(is_sub32));
+    __m256d s = _mm256_blendv_pd(
+        sg, _mm256_set1_pd(p->sub_scale), is_sub_pd);
+    __m256d z = _mm256_div_pd(absx, s);
+    __m256d f = _mm256_floor_pd(z);
+    __m256d frac = _mm256_sub_pd(z, f);
+    __m256d u = _mm256_loadu_pd(us);
+    __m256d neg_pd = _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_LT_OQ);
+    __m256d up_pos = _mm256_cmp_pd(frac, u, _CMP_GE_OQ);
+    __m256d up_neg = _mm256_cmp_pd(
+        _mm256_sub_pd(_mm256_set1_pd(1.0), frac), u, _CMP_LT_OQ);
+    __m256d up_pd = _mm256_blendv_pd(up_pos, up_neg, neg_pd);
+    __m256d fcl = _mm256_min_pd(f, _mm256_set1_pd(17.0));
+    __m128i fi = _mm256_cvttpd_epi32(fcl);
+    __m128i up32 = narrow64(_mm256_castpd_si256(up_pd));
+    /* up32 lanes are 0 or -1; subtract to add the rounding increment */
+    __m128i n32 = _mm_sub_epi32(fi, up32);
+    __m128i carry = _mm_cmpgt_epi32(n32, _mm_set1_epi32(15));
+    __m128i jitter = _mm_cmpgt_epi32(_mm_set1_epi32(8), n32);
+    __m128i c_adj = _mm_add_epi32(_mm_sub_epi32(c32, carry), jitter);
+    __m128i n_adj = _mm_blendv_epi8(n32, _mm_set1_epi32(8), carry);
+    n_adj = _mm_blendv_epi8(n_adj, _mm_set1_epi32(15), jitter);
+    __m128i sat = _mm_cmpgt_epi32(c_adj, _mm_set1_epi32(15));
+    __m128i code_norm = _mm_or_si128(
+        _mm_slli_epi32(c_adj, M_BITS),
+        _mm_and_si128(n_adj, _mm_set1_epi32(7)));
+    code_norm = _mm_blendv_epi8(code_norm, _mm_set1_epi32(0x7F), sat);
+    __m128i code_sub = _mm_min_epi32(n32, _mm_set1_epi32(16));
+    __m128i mag = _mm_blendv_epi8(code_norm, code_sub, is_sub32);
+    __m128i neg32 = narrow64(_mm256_castpd_si256(neg_pd));
+    __m128i code = _mm_or_si128(
+        mag, _mm_and_si128(neg32, _mm_set1_epi32(0x80)));
+    __m256d kill_pd = _mm256_or_pd(
+        _mm256_cmp_pd(x, _mm256_setzero_pd(), _CMP_EQ_OQ),
+        _mm256_cmp_pd(x, x, _CMP_UNORD_Q));
+    code = _mm_andnot_si128(narrow64(_mm256_castpd_si256(kill_pd)), code);
+    __m128i packed = _mm_shuffle_epi8(
+        code, _mm_setr_epi8(0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1,
+                            -1, -1, -1, -1, -1));
+    uint32_t out4 = (uint32_t)_mm_cvtsi128_si32(packed);
+    memcpy(dst, &out4, 4);
+}
+
+/* ---- differential sweep ------------------------------------------- */
+
+static uint64_t splitmix(uint64_t z) {
+    z += 0x9E3779B97F4A7C15ULL;
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+
+static const float SWEEP_ALPHAS[] = {1.0f, 0.0625f, 3.7f, 117.0f};
+#define N_ALPHAS (sizeof(SWEEP_ALPHAS) / sizeof(SWEEP_ALPHAS[0]))
+
+typedef struct {
+    uint64_t lo, hi;
+    uint64_t checked, failures;
+} SweepJob;
+
+/* Check patterns [lo, hi); u draws: 0.5 (deterministic) and one
+ * pattern-derived pseudo-random draw per element. */
+static void sweep_range(SweepJob *j) {
+    Fp8Params ps[N_ALPHAS];
+    for (size_t a = 0; a < N_ALPHAS; a++)
+        ps[a] = params_new(SWEEP_ALPHAS[a]);
+    float xs[4];
+    double us[4];
+    uint8_t enc_v[4];
+    float q_v[4];
+    for (uint64_t base = j->lo; base < j->hi; base += 4) {
+        for (int l = 0; l < 4; l++) {
+            uint32_t b = (uint32_t)(base + l);
+            memcpy(&xs[l], &b, 4);
+        }
+        for (int pass = 0; pass < 2; pass++) {
+            for (int l = 0; l < 4; l++)
+                us[l] = pass == 0
+                    ? 0.5
+                    : (double)(splitmix(base + l) >> 11)
+                          * (1.0 / 9007199254740992.0);
+            for (size_t a = 0; a < N_ALPHAS; a++) {
+                const Fp8Params *p = &ps[a];
+                encode4_avx2(p, xs, us, enc_v);
+                memcpy(q_v, xs, sizeof(q_v));
+                quantize4_avx2(p, q_v, us);
+                for (int l = 0; l < 4; l++) {
+                    uint8_t e0 = encode_scalar(p, xs[l], us[l]);
+                    uint8_t e1 = encode_bf(p, xs[l], us[l]);
+                    float q0 = quantize_scalar(p, xs[l], us[l]);
+                    float q1 = quantize_bf(p, xs[l], us[l]);
+                    uint32_t q0b, q1b, qvb;
+                    memcpy(&q0b, &q0, 4);
+                    memcpy(&q1b, &q1, 4);
+                    memcpy(&qvb, &q_v[l], 4);
+                    if (e0 != e1 || e0 != enc_v[l] || q0b != q1b
+                        || q0b != qvb) {
+                        if (j->failures < 16)
+                            fprintf(stderr,
+                                    "MISMATCH x=%08x alpha=%g u=%.17g "
+                                    "enc: s=%02x bf=%02x v=%02x  "
+                                    "quant: s=%08x bf=%08x v=%08x\n",
+                                    (uint32_t)(base + l),
+                                    (double)p->alpha, us[l], e0, e1,
+                                    enc_v[l], q0b, q1b, qvb);
+                        j->failures++;
+                    }
+                    j->checked++;
+                }
+            }
+        }
+    }
+}
+
+static void *sweep_thread(void *arg) {
+    sweep_range((SweepJob *)arg);
+    return NULL;
+}
+
+static int run_sweep(uint64_t lo, uint64_t hi) {
+    long cores = sysconf(_SC_NPROCESSORS_ONLN);
+    if (cores < 1) cores = 1;
+    if (cores > 16) cores = 16;
+    pthread_t th[16];
+    SweepJob jobs[16];
+    uint64_t span = (hi - lo + cores - 1) / cores;
+    span = (span + 3) & ~3ULL; /* keep 4-lane alignment */
+    int n = 0;
+    for (uint64_t s = lo; s < hi; s += span, n++) {
+        jobs[n].lo = s;
+        jobs[n].hi = s + span < hi ? s + span : hi;
+        jobs[n].checked = jobs[n].failures = 0;
+        pthread_create(&th[n], NULL, sweep_thread, &jobs[n]);
+    }
+    uint64_t checked = 0, failures = 0;
+    for (int i = 0; i < n; i++) {
+        pthread_join(th[i], NULL);
+        checked += jobs[i].checked;
+        failures += jobs[i].failures;
+    }
+    printf("checked %llu (pattern, alpha, u) triples: %llu failures\n",
+           (unsigned long long)checked, (unsigned long long)failures);
+    return failures ? 1 : 0;
+}
+
+/* stratified: all exponents x a few mantissas x both signs (covers
+ * ±0, ±inf, f32 subnormals and NaN payloads structurally), plus
+ * ±4-ulp neighborhoods of every FP8 grid magnitude per sweep alpha
+ * (subnormal band, mantissa-carry and saturation boundaries) — the
+ * same strata as the Rust tier-1 subset in tests/exhaustive_fp8.rs */
+static int run_stratified(void) {
+    uint64_t checked = 0, failures = 0;
+    for (uint32_t exp = 0; exp < 256; exp++) {
+        for (int s = 0; s < 2; s++) {
+            for (int m = 0; m < 64; m++) {
+                uint32_t mant =
+                    m < 32 ? (uint32_t)m * 0x3FFFF
+                           : (uint32_t)splitmix(exp * 64 + m) & 0x7FFFFF;
+                uint32_t b = ((uint32_t)s << 31) | (exp << 23) | mant;
+                SweepJob j = {b & ~3u, (b & ~3u) + 4, 0, 0};
+                sweep_range(&j);
+                checked += j.checked;
+                failures += j.failures;
+            }
+        }
+    }
+    for (size_t a = 0; a < N_ALPHAS; a++) {
+        Fp8Params p = params_new(SWEEP_ALPHAS[a]);
+        for (int code = 0; code < 0x80; code++) {
+            /* decode the (non-negative) grid magnitude, as format.rs */
+            int64_t e = (code >> 3) & 0x0F;
+            double m = (double)(code & 7);
+            float v = (float)(e == 0
+                                  ? p.sub_scale * m
+                                  : exp2((double)e - p.bias)
+                                        * (1.0 + m / 8.0));
+            uint32_t b;
+            memcpy(&b, &v, 4);
+            for (int sign = 0; sign < 2; sign++) {
+                uint32_t c = (b - 4u) ^ ((uint32_t)sign << 31);
+                uint32_t lo = c & ~3u;
+                /* 4-aligned range covering bits-4 .. bits+4 */
+                SweepJob j = {lo, lo + 12, 0, 0};
+                sweep_range(&j);
+                checked += j.checked;
+                failures += j.failures;
+            }
+        }
+    }
+    printf("stratified: %llu triples, %llu failures\n",
+           (unsigned long long)checked, (unsigned long long)failures);
+    return failures ? 1 : 0;
+}
+
+/* ---- micro bench: encode throughput scalar vs bf vs avx2 ---------- */
+
+#define BN (1 << 20)
+static float BDATA[BN];
+static uint8_t BOUT[BN];
+static double BUS[BN];
+static volatile uint64_t BSINK;
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1e9 + ts.tv_nsec;
+}
+
+static double bench_one(const char *name,
+                        void (*enc)(const Fp8Params *, const float *,
+                                    const double *, uint8_t *, size_t),
+                        const Fp8Params *p) {
+    double best = 1e300;
+    for (int rep = 0; rep < 7; rep++) {
+        double t0 = now_ns();
+        enc(p, BDATA, BUS, BOUT, BN);
+        double dt = now_ns() - t0;
+        uint64_t acc = 0;
+        for (int i = 0; i < BN; i += 4096) acc += BOUT[i];
+        BSINK += acc;
+        if (dt < best) best = dt;
+    }
+    printf("%-28s %8.2f ns/elem  %8.1f M/s\n", name, best / BN,
+           BN / best * 1e3);
+    return best;
+}
+
+static void enc_arm_scalar(const Fp8Params *p, const float *src,
+                           const double *us, uint8_t *dst, size_t n) {
+    for (size_t i = 0; i < n; i++) dst[i] = encode_scalar(p, src[i], us[i]);
+}
+
+static void enc_arm_bf(const Fp8Params *p, const float *src,
+                       const double *us, uint8_t *dst, size_t n) {
+    for (size_t i = 0; i < n; i++) dst[i] = encode_bf(p, src[i], us[i]);
+}
+
+static void enc_arm_avx2(const Fp8Params *p, const float *src,
+                         const double *us, uint8_t *dst, size_t n) {
+    size_t n4 = n & ~3ULL;
+    for (size_t i = 0; i < n4; i += 4)
+        encode4_avx2(p, src + i, us + i, dst + i);
+    for (size_t i = n4; i < n; i++) dst[i] = encode_bf(p, src[i], us[i]);
+}
+
+static int run_bench(void) {
+    /* realistic wire distribution: weights uniform in (-alpha, alpha)
+     * — on the real uplink, alpha IS the clipping point, so saturated
+     * early-outs are rare and every element pays the grid divide */
+    Fp8Params p = params_new(1.0f);
+    uint64_t seed = 7;
+    for (int i = 0; i < BN; i++) {
+        uint32_t b = (uint32_t)splitmix(seed + i);
+        BDATA[i] = (float)((double)b * (1.0 / 2147483648.0) - 1.0);
+        BUS[i] = (double)(splitmix(b) >> 11) * (1.0 / 9007199254740992.0);
+    }
+    double s = bench_one("encode/scalar", enc_arm_scalar, &p);
+    double b = bench_one("encode/branchfree", enc_arm_bf, &p);
+    double v = bench_one("encode/avx2", enc_arm_avx2, &p);
+    printf("speedups: bf %.2fx  avx2 %.2fx\n", s / b, s / v);
+    return 0;
+}
+
+int main(int argc, char **argv) {
+    const char *mode = argc > 1 ? argv[1] : "stratified";
+    if (!strcmp(mode, "bench")) return run_bench();
+    if (!strcmp(mode, "stratified")) return run_stratified();
+    if (!strcmp(mode, "exhaustive")) {
+        uint64_t chunk = argc > 3 ? strtoull(argv[2], NULL, 10) : 0;
+        uint64_t total = argc > 3 ? strtoull(argv[3], NULL, 10) : 1;
+        uint64_t span = (1ULL << 32) / total;
+        uint64_t lo = chunk * span;
+        uint64_t hi = chunk + 1 == total ? (1ULL << 32) : lo + span;
+        printf("exhaustive sweep patterns [%llu, %llu)\n",
+               (unsigned long long)lo, (unsigned long long)hi);
+        return run_sweep(lo, hi);
+    }
+    fprintf(stderr, "usage: %s stratified|exhaustive [chunk total]|bench\n",
+            argv[0]);
+    return 2;
+}

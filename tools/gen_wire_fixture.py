@@ -69,6 +69,8 @@ where ``wire_bytes = codes + 4*(raw + alphas + betas)`` and
 53 = 16 (envelope) + 21 (outcome meta) + 16 (section table).
 """
 
+import json
+import math
 import os
 import struct
 import zlib
@@ -138,6 +140,167 @@ def outcome_body(round_, client, n_k, mean_loss, payload, ef=None):
     return body
 
 
+# ---- FP8 value-mapping mirror (twin of rust/src/fp8/format.rs) -------
+#
+# Independent second implementation of the flexible-bias FP8 encode,
+# used to generate ``rust/tests/fixtures/fp8_edges_v1.json`` — golden
+# *codes* (not just frames) for subnormal / saturation / NaN / ±0 /
+# ±inf / grid-boundary inputs, so ``rust/tests/golden_fp8.rs`` can pin
+# every kernel's byte output against a second implementation and
+# ``python/tests/test_wire_fixture.py`` can detect fixture drift.
+#
+# All math is f64, like the Rust oracle. exp2/log2 go through libm via
+# ctypes when available (the exact functions Rust's f64::exp2 lowers
+# to on linux-gnu); ``2.0 ** x`` is a bit-identical fallback for the
+# constants involved (verified against libm on the build host).
+
+M_BITS = 3
+E_MAX = 15
+LOG2_TOP = 0.9068905956085185
+
+try:
+    import ctypes
+
+    _libm = ctypes.CDLL("libm.so.6")
+    _libm.exp2.restype = ctypes.c_double
+    _libm.exp2.argtypes = [ctypes.c_double]
+
+    def _exp2(x):
+        return _libm.exp2(x)
+except OSError:  # non-glibc host: pow is bit-identical for our inputs
+    def _exp2(x):
+        return 2.0 ** x
+
+
+class Fp8Mirror:
+    def __init__(self, alpha):
+        self.alpha = alpha
+        self.bias = 16.0 - math.log2(alpha) + LOG2_TOP - 1.0
+        self.exp2_bias = _exp2(self.bias)
+        self.sub_scale = _exp2(1.0 - self.bias - M_BITS)
+        self.scales = [_exp2(c - self.bias - M_BITS) for c in range(16)]
+
+    def code_exponent(self, absx):
+        u = absx * self.exp2_bias
+        bits = struct.unpack("<Q", struct.pack("<d", u))[0]
+        return ((bits >> 52) & 0x7FF) - 1023
+
+    def encode(self, x, u):
+        """Twin of Fp8Params::encode — branch for branch."""
+        if x == 0.0 or math.isnan(x):
+            return 0
+        if math.isinf(x):
+            return (0x80 if x < 0.0 else 0) | 0x7F
+        neg = x < 0.0
+        absx = abs(x)
+        c = self.code_exponent(absx)
+        if c > 1:
+            if c > E_MAX:
+                return (0x80 if neg else 0) | 0x7F
+            s = self.scales[c]
+            z = absx / s
+            f = math.floor(z)
+            up = (1.0 - (z - f) < u) if neg else (z - f >= u)
+            n = f + (1 if up else 0)
+            if n >= 1 << (M_BITS + 1):
+                c += 1
+                n = 1 << M_BITS
+            if n < 1 << M_BITS:
+                c -= 1
+                n = (1 << (M_BITS + 1)) - 1
+            if c > E_MAX:
+                return (0x80 if neg else 0) | 0x7F
+            return (0x80 if neg else 0) | (c << M_BITS) | (n & 7)
+        z = absx / self.sub_scale
+        f = math.floor(z)
+        up = (1.0 - (z - f) < u) if neg else (z - f >= u)
+        n = min(f + (1 if up else 0), 1 << (M_BITS + 1))
+        return (0x80 if neg else 0) | ((n >> M_BITS) << M_BITS) | (n & 7)
+
+    def decode(self, code):
+        neg = code & 0x80
+        e = (code >> M_BITS) & 0x0F
+        m = float(code & 7)
+        if e == 0:
+            v = self.sub_scale * m
+        else:
+            v = _exp2(float(e) - self.bias) * (1.0 + m / 8.0)
+        v = f32(v)
+        return -v if neg else v
+
+
+def f32(x):
+    """Round a python float (f64) to f32 precision."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def f32_from_bits(b):
+    return struct.unpack("<f", struct.pack("<I", b))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+# Alphas for the edge-code family; u draws are exactly-representable
+# short decimals so the JSON round-trips bit-exactly in every parser.
+EDGE_ALPHAS = [1.0, 0.0625, 3.7, 117.0]
+EDGE_US = [0.5, 0.0078125, 0.99609375]
+
+
+def edge_inputs(mirror):
+    """Edge-case f32 bit patterns for one alpha: zeros, NaN payloads,
+    infinities, f32 subnormals, saturation band, and ±2-ulp
+    neighborhoods of every FP8 grid magnitude (subnormal band and
+    mantissa-carry boundaries included)."""
+    bits = [
+        0x00000000, 0x80000000,              # ±0
+        0x7FC00000, 0xFFC00000,              # quiet NaNs
+        0x7F800001, 0xFF800001, 0x7FFFFFFF,  # signalling/max payloads
+        0x7F800000, 0xFF800000,              # ±inf
+        0x00000001, 0x80000001, 0x007FFFFF,  # f32 subnormals
+        0x7F7FFFFF, 0xFF7FFFFF,              # ±f32::MAX
+    ]
+    for v in [
+        mirror.alpha,
+        -mirror.alpha,
+        mirror.alpha * 0.9999999,
+        mirror.alpha * 1.0000001,
+        mirror.alpha * 2.0,
+        -mirror.alpha * 2.0,
+        mirror.alpha * 1.0e6,
+    ]:
+        bits.append(f32_bits(f32(v)))
+    for code in range(0x80):
+        v = mirror.decode(code)
+        b = f32_bits(v)
+        for d in (-2, -1, 0, 1, 2):
+            nb = (b + d) & 0xFFFFFFFF
+            bits.append(nb)
+            bits.append(nb ^ 0x80000000)
+    # dedupe, stable order
+    seen, out = set(), []
+    for b in bits:
+        if b not in seen:
+            seen.add(b)
+            out.append(b)
+    return out
+
+
+def fp8_edge_fixture():
+    cases = []
+    for alpha in EDGE_ALPHAS:
+        m = Fp8Mirror(alpha)
+        x_bits = edge_inputs(m)
+        for u in EDGE_US:
+            codes = [m.encode(f32_from_bits(b), u) for b in x_bits]
+            cases.append(
+                {"alpha": alpha, "u": u, "x_bits": x_bits,
+                 "codes": codes}
+            )
+    return {"m": M_BITS, "e": 4, "version": 1, "cases": cases}
+
+
 # ---- canonical golden messages (mirrored in rust/tests/golden_wire.rs)
 
 CANON_DOWN = (range(16), [1.0, -2.5, 0.375], [1.0, 0.5], [2.0])
@@ -182,6 +345,15 @@ def main():
           f"{len(outcome)} B = {len(job) + len(outcome)} B")
     print("job     :", job.hex())
     print("outcome :", outcome.hex())
+    edges = fp8_edge_fixture()
+    out = os.path.join(
+        os.path.dirname(out), "fp8_edges_v1.json"
+    )
+    with open(out, "w") as f:
+        json.dump(edges, f, separators=(",", ":"))
+        f.write("\n")
+    n = sum(len(c["codes"]) for c in edges["cases"])
+    print(f"wrote {out}: {len(edges['cases'])} cases, {n} edge codes")
 
 
 if __name__ == "__main__":
