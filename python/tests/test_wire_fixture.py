@@ -1,9 +1,10 @@
-"""Cross-checks of the committed golden wire fixture against the
-Python mirror of the v1 frame layout (``tools/gen_wire_fixture.py``).
+"""Cross-checks of the committed golden wire fixtures against the
+Python mirror of the v2 frame layout (``tools/gen_wire_fixture.py``)
+— and of the frozen v1 fixture against the frozen v1 mirror.
 
 The authoritative implementation is ``rust/src/net/{frame,codec}.rs``,
 pinned by ``rust/tests/golden_wire.rs``; these tests make sure the
-committed fixture file stays byte-identical to the documented spec, so
+committed fixture files stay byte-identical to the documented spec, so
 a regeneration with a drifted mirror cannot slip through unnoticed.
 """
 
@@ -18,7 +19,12 @@ import pytest
 
 HERE = os.path.dirname(__file__)
 REPO = os.path.join(HERE, "..", "..")
-FIXTURE = os.path.join(REPO, "rust", "tests", "fixtures", "wire_v1.bin")
+FIXTURE_V2 = os.path.join(
+    REPO, "rust", "tests", "fixtures", "wire_v2.bin"
+)
+FIXTURE_V1 = os.path.join(
+    REPO, "rust", "tests", "fixtures", "wire_v1.bin"
+)
 EDGE_FIXTURE = os.path.join(
     REPO, "rust", "tests", "fixtures", "fp8_edges_v1.json"
 )
@@ -41,16 +47,39 @@ def mirror():
 
 @pytest.fixture(scope="module")
 def fixture_bytes():
-    with open(FIXTURE, "rb") as f:
+    with open(FIXTURE_V2, "rb") as f:
+        return f.read()
+
+
+@pytest.fixture(scope="module")
+def fixture_v1_bytes():
+    with open(FIXTURE_V1, "rb") as f:
         return f.read()
 
 
 def test_fixture_matches_mirror(mirror, fixture_bytes):
-    job, outcome = mirror.golden_frames()
-    assert fixture_bytes == job + outcome, (
-        "wire_v1.bin no longer matches the spec mirror — regenerate with "
-        "tools/gen_wire_fixture.py ONLY alongside a WIRE_VERSION bump"
+    job, outcome, heartbeat, heartbeat_ack = mirror.golden_frames()
+    assert fixture_bytes == job + outcome + heartbeat + heartbeat_ack, (
+        "wire_v2.bin no longer matches the spec mirror — regenerate "
+        "with tools/gen_wire_fixture.py ONLY alongside a WIRE_VERSION "
+        "bump"
     )
+
+
+def test_frozen_v1_fixture_matches_frozen_mirror(
+    mirror, fixture_v1_bytes
+):
+    """wire_v1.bin is the version-skew probe: a v2 build must reject
+    it with the typed VersionMismatch (pinned on the Rust side), so
+    its bytes must never drift."""
+    job, outcome = mirror.golden_frames_v1()
+    assert fixture_v1_bytes == job + outcome, (
+        "wire_v1.bin drifted — the frozen v1 fixture must stay "
+        "byte-identical forever"
+    )
+    # and it really is a v1 stream
+    assert struct.unpack_from("<H", fixture_v1_bytes, 4)[0] == 1
+    assert mirror.VERSION == 2
 
 
 def test_frame_envelopes_are_well_formed(mirror, fixture_bytes):
@@ -68,18 +97,60 @@ def test_frame_envelopes_are_well_formed(mirror, fixture_bytes):
         assert zlib.crc32(body) & 0xFFFFFFFF == crc
         kinds.append(kind)
         buf = buf[16 + body_len:]
-    assert kinds == [mirror.KIND_JOB, mirror.KIND_OUTCOME]
+    assert kinds == [
+        mirror.KIND_JOB,
+        mirror.KIND_OUTCOME,
+        mirror.KIND_HEARTBEAT,
+        mirror.KIND_HEARTBEAT_ACK,
+    ]
+
+
+def test_job_and_outcome_open_with_the_multiplexing_ids(
+    mirror, fixture_bytes
+):
+    """v2 contract: both bodies start with (round, client, job_id) —
+    the demultiplexing key of the in-flight window and the worker
+    cache."""
+    buf = fixture_bytes
+    seen = {}
+    while buf:
+        _, _, kind, _, body_len, _ = struct.unpack_from(
+            "<4sHBBII", buf
+        )
+        body = buf[16:16 + body_len]
+        if kind in (mirror.KIND_JOB, mirror.KIND_OUTCOME):
+            seen[kind] = struct.unpack_from("<III", body)
+        buf = buf[16 + body_len:]
+    job_ids = seen[mirror.KIND_JOB]
+    out_ids = seen[mirror.KIND_OUTCOME]
+    assert job_ids == out_ids == (3, 5, mirror.CANON_JOB_ID)
+
+
+def test_heartbeat_ack_echoes_the_nonce(mirror, fixture_bytes):
+    frames = []
+    buf = fixture_bytes
+    while buf:
+        _, _, kind, _, body_len, _ = struct.unpack_from("<4sHBBII", buf)
+        frames.append((kind, buf[16:16 + body_len]))
+        buf = buf[16 + body_len:]
+    hb = dict(frames[2:])
+    nonce = struct.unpack("<Q", hb[mirror.KIND_HEARTBEAT])[0]
+    assert nonce == mirror.CANON_NONCE
+    assert hb[mirror.KIND_HEARTBEAT_ACK] == hb[mirror.KIND_HEARTBEAT]
 
 
 def test_overhead_constants(mirror):
     """The CommStats framing constants in coordinator/comm.rs charge
     exactly these overheads; if the layout grows, both must move."""
-    assert mirror.JOB_FRAME_OVERHEAD == 68
-    assert mirror.OUTCOME_FRAME_OVERHEAD == 53
-    job, outcome = mirror.golden_frames()
-    assert len(job) == mirror.wire_bytes(*mirror.CANON_DOWN) + 68
+    assert mirror.JOB_FRAME_OVERHEAD == 72
+    assert mirror.OUTCOME_FRAME_OVERHEAD == 57
+    job, outcome, _, _ = mirror.golden_frames()
+    assert len(job) == mirror.wire_bytes(*mirror.CANON_DOWN) + 72
     # the outcome golden carries a 2-element EF block: 4 (len) + 8 (f32s)
-    assert len(outcome) == mirror.wire_bytes(*mirror.CANON_UP) + 53 + 12
+    assert len(outcome) == mirror.wire_bytes(*mirror.CANON_UP) + 57 + 12
+    # v1 constants are frozen alongside the v1 fixture
+    assert mirror.V1_JOB_FRAME_OVERHEAD == 68
+    assert mirror.V1_OUTCOME_FRAME_OVERHEAD == 53
 
 
 # ---- FP8 edge-code fixture (kernel byte output, not just framing) ----

@@ -13,7 +13,7 @@ use crate::coordinator::RunResult;
 use crate::runtime::{default_dir, Engine, Manifest};
 use crate::util::cli::Args;
 
-use super::{run_one, scaled};
+use super::{run_one, scaled, wall_clock_line};
 
 pub const METHODS: [&str; 4] = ["fp32", "bq", "uq", "uq+"];
 
@@ -50,6 +50,8 @@ pub fn run(args: &Args) -> Result<()> {
         "\nCSV curves written to {}/results/fig2_{model}_{split}_*.csv",
         dir.display()
     );
+    let wall_secs: f64 = results.iter().map(|r| r.wall_secs).sum();
+    println!("{}", wall_clock_line(args, results.len(), wall_secs)?);
     Ok(())
 }
 

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{RunResult, Server};
+use crate::fp8::simd::KernelKind;
 use crate::runtime::{Engine, Manifest};
 use crate::util::cli::Args;
 
@@ -39,6 +40,10 @@ pub fn run_one(
 }
 
 /// Common experiment-scale overrides shared by the regenerators.
+/// `--fp8-kernel` rides along with the wall-clock knobs: like
+/// `--parallelism` it changes run time, never metrics (every kernel
+/// is bit-identical — the conformance-harness contract, smoke-tested
+/// end-to-end by `tests/parallel_determinism.rs`).
 pub fn scaled(
     mut cfg: ExperimentConfig,
     args: &Args,
@@ -50,10 +55,77 @@ pub fn scaled(
     cfg.n_test = args.parse_or("n-test", cfg.n_test)?;
     cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
     cfg.parallelism = args.parse_or("parallelism", cfg.parallelism)?;
+    cfg.fp8_kernel = args.parse_or("fp8-kernel", cfg.fp8_kernel)?;
     Ok(cfg)
 }
 
 pub fn seeds_from(args: &Args) -> Result<Vec<u64>> {
     let n: usize = args.parse_or("seeds", 2usize)?;
     Ok((1..=n as u64).collect())
+}
+
+/// The kernel the drivers are running with (for wall-clock reports):
+/// the `--fp8-kernel` choice plus what it resolves to on this host.
+pub fn kernel_label(args: &Args) -> Result<String> {
+    let kind: KernelKind =
+        args.parse_or("fp8-kernel", KernelKind::Auto)?;
+    Ok(format!("{kind} ({})", kind.resolve().name()))
+}
+
+/// One-line wall-clock summary for a driver's report: total seconds
+/// across `runs` experiments, tagged with the active FP8 kernel so
+/// A/B timings of `--fp8-kernel scalar` vs `simd` are self-labelled.
+pub fn wall_clock_line(
+    args: &Args,
+    runs: usize,
+    wall_secs: f64,
+) -> Result<String> {
+    Ok(format!(
+        "wall-clock: {wall_secs:.1}s across {runs} runs  \
+         [fp8-kernel={}]  (timing-only knob: metrics are \
+         bit-identical across kernels)",
+        kernel_label(args)?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn scaled_wires_the_fp8_kernel_knob() {
+        let base =
+            ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
+        let cfg = scaled(base.clone(), &args("--fp8-kernel scalar"), 10)
+            .unwrap();
+        assert_eq!(cfg.fp8_kernel, KernelKind::Scalar);
+        // a wall-clock knob: the metric fingerprint must not move
+        assert_eq!(cfg.fingerprint(), {
+            let mut b = base.clone();
+            b.rounds = cfg.rounds;
+            b.fingerprint()
+        });
+        // default passes through untouched
+        let cfg = scaled(base.clone(), &args(""), 10).unwrap();
+        assert_eq!(cfg.fp8_kernel, KernelKind::Auto);
+        // bad values are typed errors
+        assert!(scaled(base, &args("--fp8-kernel turbo"), 10).is_err());
+    }
+
+    #[test]
+    fn wall_clock_line_names_the_kernel() {
+        let line =
+            wall_clock_line(&args("--fp8-kernel scalar"), 3, 1.25)
+                .unwrap();
+        assert!(line.contains("3 runs"), "{line}");
+        assert!(line.contains("fp8-kernel=scalar"), "{line}");
+        assert!(line.contains("scalar ("), "{line}");
+        assert!(
+            kernel_label(&args("")).unwrap().starts_with("auto"),
+        );
+    }
 }

@@ -9,7 +9,7 @@ use crate::coordinator::{comm_gain, mean_std};
 use crate::runtime::{default_dir, Engine, Manifest};
 use crate::util::cli::Args;
 
-use super::{run_one, scaled, seeds_from};
+use super::{run_one, scaled, seeds_from, wall_clock_line};
 
 /// The paper's grid, mapped onto our reduced-scale variants.
 pub fn default_rows() -> Vec<(&'static str, &'static str)> {
@@ -66,6 +66,8 @@ pub fn run(args: &Args) -> Result<()> {
     );
     println!("{}", "-".repeat(84));
 
+    let mut wall_secs = 0.0f64;
+    let mut runs = 0usize;
     for (model, split) in rows {
         let mut acc = vec![vec![]; 3];
         let mut gains = vec![vec![]; 3];
@@ -86,6 +88,8 @@ pub fn run(args: &Args) -> Result<()> {
                 acc[i].push(r.best_accuracy() * 100.0);
                 let (_, g) = comm_gain(&results[0], r);
                 gains[i].push(g);
+                wall_secs += r.wall_secs;
+                runs += 1;
             }
         }
         let cell = |i: usize| {
@@ -106,5 +110,6 @@ pub fn run(args: &Args) -> Result<()> {
         "\n(gain = FP32 bytes-to-acc* / method bytes-to-acc*, acc* = \
          best accuracy reached by both; paper Table 1 definition)"
     );
+    println!("{}", wall_clock_line(args, runs, wall_secs)?);
     Ok(())
 }

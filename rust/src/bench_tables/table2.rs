@@ -10,7 +10,7 @@ use crate::coordinator::mean_std;
 use crate::runtime::{default_dir, Engine, Manifest};
 use crate::util::cli::Args;
 
-use super::{run_one, scaled, seeds_from};
+use super::{run_one, scaled, seeds_from, wall_clock_line};
 
 /// The four ablation arms, in the paper's column order:
 /// (det QAT, no CQ), (rand QAT, no CQ), (det QAT, det CQ),
@@ -48,6 +48,8 @@ pub fn run(args: &Args) -> Result<()> {
     );
     println!("{}", "-".repeat(72));
 
+    let mut wall_secs = 0.0f64;
+    let mut runs = 0usize;
     for model in &models {
         let mut cells = Vec::new();
         for (method, _) in ARMS {
@@ -63,6 +65,8 @@ pub fn run(args: &Args) -> Result<()> {
                 cfg.seed = seed;
                 let r = run_one(&engine, &manifest, cfg, false)?;
                 accs.push(r.best_accuracy() * 100.0);
+                wall_secs += r.wall_secs;
+                runs += 1;
             }
             let (m, s) = mean_std(&accs);
             cells.push(format!("{m:5.1}±{s:3.1}"));
@@ -76,5 +80,6 @@ pub fn run(args: &Args) -> Result<()> {
         "\n(expected shape per paper: det QAT >= rand QAT; \
          rand CQ >> det CQ)"
     );
+    println!("{}", wall_clock_line(args, runs, wall_secs)?);
     Ok(())
 }

@@ -379,9 +379,18 @@ pub struct NetCfg {
     pub addr: String,
     /// Worker connections the server waits for before round 0.
     pub workers: usize,
-    /// Socket read/write deadline on the server side (and the
-    /// worker's handshake deadline) — the "never hang" bound.
+    /// Socket read/write deadline (and handshake deadline), plus the
+    /// idle deadline after which a silent peer is declared dead —
+    /// the "never hang" bound.
     pub timeout_ms: u64,
+    /// `--net-inflight N`: sliding window of concurrently in-flight
+    /// jobs per worker connection (server side), and the worker's
+    /// executor-pool width (worker side). 1 = v1-style lockstep.
+    pub inflight: usize,
+    /// `--heartbeat-ms T`: probe a silent connection after T ms of
+    /// quiet, on both sides; 0 disables heartbeats (a silent
+    /// partition is then only detected while jobs are pending).
+    pub heartbeat_ms: u64,
 }
 
 impl NetCfg {
@@ -391,8 +400,14 @@ impl NetCfg {
         let Some(role) = args.get("role") else {
             // a forgotten --role must not silently degrade a
             // networked launch into a local run
-            for flag in ["listen", "connect", "workers", "net-timeout-ms"]
-            {
+            for flag in [
+                "listen",
+                "connect",
+                "workers",
+                "net-timeout-ms",
+                "net-inflight",
+                "heartbeat-ms",
+            ] {
                 ensure!(
                     args.get(flag).is_none(),
                     "--{flag} only makes sense with \
@@ -403,6 +418,16 @@ impl NetCfg {
         };
         let timeout_ms = args.parse_or("net-timeout-ms", 30_000u64)?;
         ensure!(timeout_ms > 0, "--net-timeout-ms must be positive");
+        let inflight = args.parse_or("net-inflight", 4usize)?;
+        ensure!(inflight >= 1, "--net-inflight must be at least 1");
+        let heartbeat_ms = args.parse_or("heartbeat-ms", 1_000u64)?;
+        // the probe interval must fit inside the idle deadline, or a
+        // peer would be declared dead before it was ever probed
+        ensure!(
+            heartbeat_ms == 0 || heartbeat_ms < timeout_ms,
+            "--heartbeat-ms ({heartbeat_ms}) must be less than \
+             --net-timeout-ms ({timeout_ms}), or 0 to disable probing"
+        );
         let cfg = match role {
             "server" => {
                 ensure!(
@@ -420,6 +445,8 @@ impl NetCfg {
                     addr: addr.to_string(),
                     workers,
                     timeout_ms,
+                    inflight,
+                    heartbeat_ms,
                 }
             }
             "worker" => {
@@ -440,6 +467,8 @@ impl NetCfg {
                     addr: addr.to_string(),
                     workers: 1,
                     timeout_ms,
+                    inflight,
+                    heartbeat_ms,
                 }
             }
             other => {
@@ -543,14 +572,42 @@ mod tests {
         assert_eq!(n.addr, "127.0.0.1:0");
         assert_eq!(n.workers, 4);
         assert_eq!(n.timeout_ms, 30_000);
+        // v2 defaults: a 4-deep in-flight window, 1 s heartbeats
+        assert_eq!(n.inflight, 4);
+        assert_eq!(n.heartbeat_ms, 1_000);
         let n = NetCfg::from_args(&args(
             "run --role worker --connect 127.0.0.1:7878 \
-             --net-timeout-ms 5000",
+             --net-timeout-ms 5000 --net-inflight 8 --heartbeat-ms 0",
         ))
         .unwrap()
         .unwrap();
         assert_eq!(n.role, NetRole::Worker);
         assert_eq!(n.timeout_ms, 5000);
+        assert_eq!(n.inflight, 8);
+        assert_eq!(n.heartbeat_ms, 0);
+        // the window must be positive, and v2 flags without --role
+        // are as invalid as the v1 ones
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-inflight 0"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args("run --net-inflight 4")).is_err());
+        assert!(NetCfg::from_args(&args("run --heartbeat-ms 9")).is_err());
+        // a probe interval at or past the idle deadline would declare
+        // healthy peers dead before the first probe
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-timeout-ms 800"
+        ))
+        .is_err()); // default heartbeat 1000 >= 800
+        assert!(NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --heartbeat-ms 30000"
+        ))
+        .is_err()); // == default timeout
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-timeout-ms 800 \
+             --heartbeat-ms 0"
+        ))
+        .is_ok()); // probing off: any deadline is fine
         // missing / inconsistent combinations are typed errors
         assert!(NetCfg::from_args(&args("run --role server")).is_err());
         assert!(NetCfg::from_args(&args("run --role worker")).is_err());

@@ -10,10 +10,11 @@ use crate::net::codec::{
 };
 
 /// Per-message framing charged on the downlink in addition to the
-/// packed payload: every non-payload byte of a v1 Job frame — the
+/// packed payload: every non-payload byte of a v2 Job frame — the
 /// frame envelope (magic, version, kind, length, crc32), the scalar
-/// job metadata (round/client ids, seed, quantizer switches, lr,
-/// weight decay, n_k) and the payload section table. This is exactly
+/// job metadata (round/client ids, the v2 multiplexing job_id, seed,
+/// quantizer switches, lr, weight decay, n_k) and the payload section
+/// table. This is exactly
 /// what `net::codec::encode_job` puts around the packed tensors, so
 /// the reported byte counts equal the bytes a `SocketTransport`
 /// really moves (asserted by `tests/net_transport.rs`; the optional
@@ -24,9 +25,12 @@ use crate::net::codec::{
 pub const DOWNLINK_HEADER_BYTES: u64 = JOB_FRAME_OVERHEAD_BYTES;
 
 /// Per-message framing charged on the uplink: every non-payload byte
-/// of a v1 Outcome frame (envelope + round/client ids, n_k, mean_loss
-/// + payload section table). Same exactness contract as
-/// [`DOWNLINK_HEADER_BYTES`].
+/// of a v2 Outcome frame (envelope + round/client/job ids, n_k,
+/// mean_loss + payload section table). Same exactness contract as
+/// [`DOWNLINK_HEADER_BYTES`]. Heartbeat/HeartbeatAck frames are
+/// deliberately *not* charged: they are transport liveness overhead,
+/// not part of the paper's communication cost (and their volume is a
+/// wall-clock tuning artifact, not a function of the trajectory).
 pub const UPLINK_HEADER_BYTES: u64 = OUTCOME_FRAME_OVERHEAD_BYTES;
 
 /// Downlink: server -> client (global model + clip side channels).
@@ -91,9 +95,9 @@ mod tests {
         let payload = 100 + 4 * 15;
         assert_eq!(s.up_bytes, payload + UPLINK_HEADER_BYTES);
         assert_eq!(s.down_bytes, 2 * (payload + DOWNLINK_HEADER_BYTES));
-        // independently computed against the v1 frame layout:
-        // 1 up (53 B overhead) + 2 down (68 B overhead each)
-        assert_eq!(s.total_bytes(), 3 * payload + 53 + 2 * 68);
+        // independently computed against the v2 frame layout:
+        // 1 up (57 B overhead) + 2 down (72 B overhead each)
+        assert_eq!(s.total_bytes(), 3 * payload + 57 + 2 * 72);
         assert_eq!((s.up_msgs, s.down_msgs), (1, 2));
     }
 

@@ -349,7 +349,7 @@ impl<'a> Server<'a> {
             .sum();
         let n_clients = self.shards.len();
         let mut jobs = Vec::with_capacity(participants.len());
-        for &k in &participants {
+        for (pos, &k) in participants.iter().enumerate() {
             // heterogeneous fleets: a fixed prefix of the client id
             // space trains in FP32 (no on-device FP8 support)
             let qat = if (k as f32)
@@ -375,6 +375,9 @@ impl<'a> Server<'a> {
             jobs.push(ClientJob {
                 round: t,
                 client: k,
+                // the dispatch tag is the cohort position — stable
+                // across re-dispatch, unique within the round
+                job_id: pos as u32,
                 seed: cfg.seed,
                 qat,
                 lr,

@@ -57,6 +57,13 @@ pub mod streams {
 pub struct ClientJob<'r> {
     pub round: usize,
     pub client: usize,
+    /// Round-scoped dispatch tag: the client's cohort position. Pure
+    /// metadata for in-process execution; the networked transport uses
+    /// it as the wire multiplexing key (one connection carries N
+    /// in-flight jobs, demultiplexed by `(round, client, job_id)`) and
+    /// the worker's reconnect cache is keyed on it. Deterministic —
+    /// a re-dispatched job presents the identical tag.
+    pub job_id: u32,
     /// Experiment seed — all client randomness is derived from
     /// `(seed, round, client)`, never from shared generator state.
     pub seed: u64,
@@ -111,6 +118,11 @@ pub struct WorkBuffers {
     /// (`--fp8-kernel`; bit-identical for every value, so purely a
     /// wall-clock knob). `Default` is [`KernelKind::Auto`].
     pub kernel: KernelKind,
+    /// Transport-side scratch: the job serialization buffer a
+    /// networked transport reuses across dispatches — one
+    /// payload-sized allocation per cohort worker for the life of
+    /// the run, not one per message. Unused by in-process transports.
+    pub wire: Vec<u8>,
 }
 
 impl WorkBuffers {
@@ -168,7 +180,7 @@ pub fn finish_uplink(
         job.client as u64,
         streams::UPLINK,
     );
-    let WorkBuffers { up_src, dec, us, lut, kernel } = buffers;
+    let WorkBuffers { up_src, dec, us, lut, kernel, wire: _ } = buffers;
     let src: &[f32] = match &job.ef {
         Some(e) => {
             up_src.clear();

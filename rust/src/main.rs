@@ -6,10 +6,13 @@
 //!            [--fp8-kernel scalar|simd|auto]  # codec inner loops
 //! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
 //!            --workers 2        # drive remote workers over TCP
+//!            [--net-inflight 4]   # jobs in flight per connection
+//!            [--heartbeat-ms 1000] # liveness probe interval (0=off)
 //! fedfp8 run --preset ... --role worker --connect 127.0.0.1:7878
 //!            # serve client jobs for a --role server coordinator;
 //!            # must be launched with the identical preset/overrides
-//!            # (enforced by the config-fingerprint handshake)
+//!            # (enforced by the config-fingerprint handshake).
+//!            # Reconnects with its outcome cache intact after drops.
 //! fedfp8 table1 [--rounds N] [--seeds 3] [--models lenet_c10,...]
 //! fedfp8 table2 [--rounds N] [--seeds 3]
 //! fedfp8 fig2   [--rounds N] [--model lenet_c10]
@@ -139,20 +142,27 @@ fn run_net_server(
         .with_context(|| format!("binding {}", net.addr))?;
     println!(
         "platform={}  preset={preset}  rounds={}  K={}  P={}  \
-         role=server listen={}  workers={}  fingerprint={:#018x}",
+         role=server listen={}  workers={}  inflight={}  \
+         heartbeat={}ms  fingerprint={:#018x}",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
         cfg.participation,
         listener.local_addr()?,
         net.workers,
+        net.inflight,
+        net.heartbeat_ms,
         hello.fingerprint,
     );
     let transport = net::accept_workers(
-        &listener,
+        listener,
         net.workers,
         &hello,
-        Duration::from_millis(net.timeout_ms),
+        net::SocketCfg {
+            io_timeout: Duration::from_millis(net.timeout_ms),
+            heartbeat: Duration::from_millis(net.heartbeat_ms),
+            inflight: net.inflight,
+        },
     )?;
     println!("[server] {} workers handshaken; starting", net.workers);
     let mut server =
@@ -164,9 +174,15 @@ fn run_net_server(
     report_run(&engine, &result?)
 }
 
+/// Reconnect attempts after a dropped connection before a worker
+/// gives up (the outcome cache survives every retry, so re-dispatched
+/// jobs on the fresh connection answer bit-identically from cache).
+const WORKER_RECONNECT_ATTEMPTS: u32 = 5;
+
 /// `--role worker`: rebuild the world from the local config copy,
 /// handshake, and serve jobs on the in-process executor until the
-/// server shuts the connection down.
+/// server shuts the connection down. A dropped connection is retried
+/// with backoff; the outcome cache persists across reconnects.
 fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
     let dir = default_dir();
     let engine = Engine::new(&dir)?;
@@ -188,24 +204,75 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
         engine: &engine,
         model,
     };
+    let opts = net::ServeOpts {
+        heartbeat: Duration::from_millis(net.heartbeat_ms),
+        idle_deadline: if net.heartbeat_ms == 0 {
+            Duration::ZERO // v1 behaviour: wait for work forever
+        } else {
+            Duration::from_millis(net.timeout_ms)
+        },
+        exec_threads: net.inflight,
+    };
+    // sized for a whole round's share of re-dispatchable outcomes
+    let cache = net::OutcomeCache::new(256);
     println!(
-        "[worker] platform={}  model={}  K={}  fingerprint={:#018x}  \
-         connecting to {}",
+        "[worker] platform={}  model={}  K={}  exec-threads={}  \
+         fingerprint={:#018x}  connecting to {}",
         engine.platform(),
         cfg.model,
         shards.len(),
+        opts.exec_threads,
         hello.fingerprint,
         net.addr,
     );
-    let mut stream = net::connect(
-        &net.addr,
-        &hello,
-        Duration::from_millis(net.timeout_ms),
-    )?;
-    println!("[worker] handshake ok; serving");
-    net::serve_conn(&mut stream, &executor, &ctx)?;
-    println!("[worker] server closed the connection; exiting");
-    Ok(())
+    // the budget covers the process lifetime and deliberately does
+    // NOT reset on a successful connect: a deterministic serve
+    // failure (executor error, diverged world) must not turn into an
+    // unbounded reconnect/fail cycle just because TCP still works
+    let mut attempt = 0u32;
+    loop {
+        match net::connect(
+            &net.addr,
+            &hello,
+            Duration::from_millis(net.timeout_ms),
+        ) {
+            Ok(mut stream) => {
+                println!("[worker] handshake ok; serving");
+                match net::serve_conn(
+                    &mut stream,
+                    &executor,
+                    &ctx,
+                    &opts,
+                    hello.fingerprint,
+                    &cache,
+                ) {
+                    Ok(()) => {
+                        println!(
+                            "[worker] server closed the connection; \
+                             exiting"
+                        );
+                        return Ok(());
+                    }
+                    Err(e) => eprintln!(
+                        "[worker] connection lost: {e:#}; reconnecting \
+                         (outcome cache: {} entries)",
+                        cache.len()
+                    ),
+                }
+            }
+            Err(e) => eprintln!("[worker] connect failed: {e:#}"),
+        }
+        attempt += 1;
+        if attempt > WORKER_RECONNECT_ATTEMPTS {
+            bail!(
+                "giving up after {WORKER_RECONNECT_ATTEMPTS} \
+                 reconnect attempts"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(
+            300 * u64::from(attempt),
+        ));
+    }
 }
 
 fn cmd_info() -> Result<()> {

@@ -1,6 +1,18 @@
-//! Message bodies for the v1 wire protocol: the serialized forms of
+//! Message bodies for the v2 wire protocol: the serialized forms of
 //! a client work order ([`WireJob`]) and its result ([`WireOutcome`]),
-//! plus the connection handshake ([`Hello`]).
+//! plus the connection handshake ([`Hello`]) and the liveness probes
+//! (Heartbeat/HeartbeatAck nonces).
+//!
+//! ## v2: multiplexing ids
+//!
+//! Every Job and Outcome body opens with `(round, client, job_id)` —
+//! `job_id` is the round-scoped dispatch tag (the client's cohort
+//! position) that lets a single worker connection carry N in-flight
+//! jobs: the server demultiplexes out-of-order Outcome frames back to
+//! their waiting dispatchers by this key, and the worker's reconnect
+//! cache is keyed on it (`(fingerprint, round, client, job_id,
+//! body_crc)`), so a re-dispatched job after a drop returns the cached
+//! bit-identical bytes instead of recomputing.
 //!
 //! ## What travels, what doesn't
 //!
@@ -46,10 +58,12 @@ use crate::fp8::codec::{Rounding, WirePayload};
 
 use super::frame::{WireError, FRAME_HEADER_BYTES};
 
-/// Fixed scalar metadata preceding a job's payload block.
-pub const JOB_META_BYTES: u64 = 36;
-/// Fixed scalar metadata preceding an outcome's payload block.
-pub const OUTCOME_META_BYTES: u64 = 21;
+/// Fixed scalar metadata preceding a job's payload block (v2: the
+/// 4-byte `job_id` sits between the client id and the seed).
+pub const JOB_META_BYTES: u64 = 40;
+/// Fixed scalar metadata preceding an outcome's payload block (v2:
+/// includes the echoed 4-byte `job_id`).
+pub const OUTCOME_META_BYTES: u64 = 25;
 /// The payload section table (codes/raw/alphas/betas lengths).
 pub const PAYLOAD_TABLE_BYTES: u64 = 16;
 
@@ -70,6 +84,11 @@ pub const OUTCOME_FRAME_OVERHEAD_BYTES: u64 =
 pub struct WireJob {
     pub round: u32,
     pub client: u32,
+    /// Round-scoped dispatch tag (cohort position): the multiplexing
+    /// key echoed by the matching [`WireOutcome`]. Stable across
+    /// re-dispatch attempts, so a worker's outcome cache can serve a
+    /// repeated job bit-identically.
+    pub job_id: u32,
     pub seed: u64,
     pub qat: QatMode,
     pub comm: Rounding,
@@ -88,6 +107,8 @@ pub struct WireJob {
 pub struct WireOutcome {
     pub round: u32,
     pub client: u32,
+    /// Echo of the job's dispatch tag — the demultiplexing key.
+    pub job_id: u32,
     pub n_k: u64,
     pub mean_loss: f32,
     pub payload: WirePayload,
@@ -313,6 +334,7 @@ pub fn encode_job_from(job: &ClientJob<'_>, out: &mut Vec<u8>) {
     encode_job_parts(
         job.round as u32,
         job.client as u32,
+        job.job_id,
         job.seed,
         job.qat,
         job.comm,
@@ -331,6 +353,7 @@ pub fn encode_job(j: &WireJob, out: &mut Vec<u8>) {
     encode_job_parts(
         j.round,
         j.client,
+        j.job_id,
         j.seed,
         j.qat,
         j.comm,
@@ -348,6 +371,7 @@ pub fn encode_job(j: &WireJob, out: &mut Vec<u8>) {
 fn encode_job_parts(
     round: u32,
     client: u32,
+    job_id: u32,
     seed: u64,
     qat: QatMode,
     comm: Rounding,
@@ -362,6 +386,7 @@ fn encode_job_parts(
     out.clear();
     put_u32(out, round);
     put_u32(out, client);
+    put_u32(out, job_id);
     put_u64(out, seed);
     out.push(qat_to_u8(qat));
     out.push(rounding_to_u8(comm));
@@ -380,6 +405,7 @@ pub fn decode_job(body: &[u8]) -> Result<WireJob, WireError> {
     let mut r = Reader::new(body);
     let round = r.u32("round")?;
     let client = r.u32("client")?;
+    let job_id = r.u32("job_id")?;
     let seed = r.u64("seed")?;
     let qat = qat_from_u8(r.u8("qat mode")?)?;
     let comm = rounding_from_u8(r.u8("comm mode")?)?;
@@ -394,6 +420,7 @@ pub fn decode_job(body: &[u8]) -> Result<WireJob, WireError> {
     Ok(WireJob {
         round,
         client,
+        job_id,
         seed,
         qat,
         comm,
@@ -413,6 +440,7 @@ pub fn encode_outcome(o: &WireOutcome, out: &mut Vec<u8>) {
     out.clear();
     put_u32(out, o.round);
     put_u32(out, o.client);
+    put_u32(out, o.job_id);
     put_u64(out, o.n_k);
     put_f32(out, o.mean_loss);
     out.push(o.ef.is_some() as u8);
@@ -426,6 +454,7 @@ pub fn decode_outcome(body: &[u8]) -> Result<WireOutcome, WireError> {
     let mut r = Reader::new(body);
     let round = r.u32("round")?;
     let client = r.u32("client")?;
+    let job_id = r.u32("job_id")?;
     let n_k = r.u64("n_k")?;
     let mean_loss = r.f32("mean_loss")?;
     let has_ef = r.u8("ef flag")?;
@@ -435,6 +464,7 @@ pub fn decode_outcome(body: &[u8]) -> Result<WireOutcome, WireError> {
     Ok(WireOutcome {
         round,
         client,
+        job_id,
         n_k,
         mean_loss,
         payload,
@@ -485,6 +515,23 @@ pub fn decode_hello_ack(body: &[u8]) -> Result<u64, WireError> {
     Ok(fp)
 }
 
+// ---- heartbeat -----------------------------------------------------
+
+/// Encode a Heartbeat / HeartbeatAck body (the 8-byte nonce; the ack
+/// echoes the probe's nonce verbatim).
+pub fn encode_heartbeat(nonce: u64, out: &mut Vec<u8>) {
+    out.clear();
+    put_u64(out, nonce);
+}
+
+/// Decode a Heartbeat / HeartbeatAck body.
+pub fn decode_heartbeat(body: &[u8]) -> Result<u64, WireError> {
+    let mut r = Reader::new(body);
+    let nonce = r.u64("heartbeat nonce")?;
+    r.finish()?;
+    Ok(nonce)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -502,6 +549,7 @@ mod tests {
         WireJob {
             round: 7,
             client: 11,
+            job_id: 3,
             seed: 0xDEAD_BEEF,
             qat: QatMode::Det,
             comm: Rounding::Stochastic,
@@ -530,6 +578,7 @@ mod tests {
             let o = WireOutcome {
                 round: 3,
                 client: 0,
+                job_id: 0,
                 n_k: 0,
                 mean_loss: f32::MIN_POSITIVE,
                 payload: sample_payload(),
@@ -556,6 +605,18 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_nonce_roundtrips() {
+        let mut body = Vec::new();
+        for nonce in [0u64, 1, u64::MAX, 0xBEA7_BEA7] {
+            encode_heartbeat(nonce, &mut body);
+            assert_eq!(body.len(), 8);
+            assert_eq!(decode_heartbeat(&body).unwrap(), nonce);
+        }
+        assert!(decode_heartbeat(&[0u8; 7]).is_err());
+        assert!(decode_heartbeat(&[0u8; 9]).is_err());
+    }
+
+    #[test]
     fn frame_overhead_identity() {
         // the accounting contract: frame bytes = payload wire bytes +
         // a constant, for both directions (EF off)
@@ -569,6 +630,7 @@ mod tests {
         let o = WireOutcome {
             round: 1,
             client: 2,
+            job_id: 9,
             n_k: 3,
             mean_loss: 0.5,
             payload: sample_payload(),
@@ -605,13 +667,13 @@ mod tests {
         let j = sample_job(None);
         let mut body = Vec::new();
         encode_job(&j, &mut body);
-        body[16] = 9; // qat byte
+        body[20] = 9; // qat byte (after round/client/job_id/seed)
         assert!(decode_job(&body).is_err());
         encode_job(&j, &mut body);
-        body[17] = 9; // comm byte
+        body[21] = 9; // comm byte
         assert!(decode_job(&body).is_err());
         encode_job(&j, &mut body);
-        body[19] = 2; // ef flag byte
+        body[23] = 2; // ef flag byte
         assert!(decode_job(&body).is_err());
     }
 
@@ -621,6 +683,7 @@ mod tests {
         let j = WireJob {
             round: 0,
             client: 0,
+            job_id: 0,
             seed: 0,
             qat: QatMode::None,
             comm: Rounding::None,

@@ -7,7 +7,8 @@
 //! ```text
 //! 0   magic     4 B  = b"FP8W"
 //! 4   version   u16  = WIRE_VERSION
-//! 6   kind      u8   (Hello/HelloAck/Job/Outcome/Shutdown)
+//! 6   kind      u8   (Hello/HelloAck/Job/Outcome/Shutdown/
+//!                     Heartbeat/HeartbeatAck)
 //! 7   flags     u8   = 0 (reserved)
 //! 8   body_len  u32
 //! 12  crc32     u32  (IEEE CRC-32 of the body)
@@ -31,6 +32,7 @@
 use std::fmt;
 use std::io::{ErrorKind, Read, Write};
 use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 /// Frame magic: identifies a fedfp8 wire peer.
 pub const MAGIC: [u8; 4] = *b"FP8W";
@@ -38,7 +40,13 @@ pub const MAGIC: [u8; 4] = *b"FP8W";
 /// Wire protocol version. Bump on ANY change to the frame envelope or
 /// to a message body layout in `net::codec`, and regenerate the golden
 /// fixture (`tools/gen_wire_fixture.py`).
-pub const WIRE_VERSION: u16 = 1;
+///
+/// v2 (this build): every Job/Outcome body carries a round-scoped
+/// `job_id` so one connection multiplexes N in-flight jobs, and the
+/// Heartbeat/HeartbeatAck frames exist. v1 frames decode to a typed
+/// [`WireError::VersionMismatch`] (pinned by `tests/golden_wire.rs`
+/// against the retained `wire_v1.bin` fixture).
+pub const WIRE_VERSION: u16 = 2;
 
 /// Envelope size preceding every body.
 pub const FRAME_HEADER_BYTES: u64 = 16;
@@ -61,6 +69,11 @@ pub enum FrameKind {
     Outcome = 4,
     /// Server -> worker: drain and exit cleanly.
     Shutdown = 5,
+    /// Liveness probe (either direction): "are you still there?".
+    /// Body: an opaque u64 nonce, echoed back by the ack.
+    Heartbeat = 6,
+    /// Reply to a [`FrameKind::Heartbeat`], echoing its nonce.
+    HeartbeatAck = 7,
 }
 
 impl FrameKind {
@@ -71,6 +84,8 @@ impl FrameKind {
             3 => FrameKind::Job,
             4 => FrameKind::Outcome,
             5 => FrameKind::Shutdown,
+            6 => FrameKind::Heartbeat,
+            7 => FrameKind::HeartbeatAck,
             got => return Err(WireError::UnknownKind { got }),
         })
     }
@@ -108,6 +123,12 @@ pub enum WireError {
     Oversize { len: u64 },
     /// Read (or write) deadline expired — the peer went silent.
     Timeout,
+    /// The heartbeat state machine declared the peer dead: no frame
+    /// (not even a heartbeat ack) arrived within the idle deadline.
+    /// Distinct from [`WireError::Timeout`] (a single blocked read):
+    /// this is "the connection looked idle for so long, across probe
+    /// attempts, that the peer must be partitioned or wedged".
+    HeartbeatLost { idle_ms: u64, deadline_ms: u64 },
     /// Connection closed cleanly *between* frames (EOF at a frame
     /// boundary). An orderly shutdown for a serve loop; an error (the
     /// peer is gone) for a caller awaiting a response.
@@ -152,6 +173,12 @@ impl fmt::Display for WireError {
             WireError::Timeout => {
                 write!(f, "timed out waiting for the peer")
             }
+            WireError::HeartbeatLost { idle_ms, deadline_ms } => write!(
+                f,
+                "heartbeat lost: timed out waiting for the peer (no \
+                 frames for {idle_ms} ms, idle deadline {deadline_ms} \
+                 ms) — silent partition or wedged process"
+            ),
             WireError::CleanClose => {
                 write!(f, "connection closed by the peer")
             }
@@ -300,6 +327,252 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
     Ok(Frame { kind, body })
 }
 
+/// Resumable frame reader for streams with a short read timeout.
+///
+/// [`read_frame`] treats a read timeout as fatal, which is right for a
+/// one-shot blocking exchange but wrong for the v2 long-lived reader
+/// loops: they wake on a short tick to run the heartbeat state machine,
+/// and a tick that fires in the *middle* of a frame (header half-read,
+/// body trickling in) must not throw away the bytes already consumed —
+/// that would desynchronize the stream. `FrameReader` keeps the
+/// partial frame across [`FrameReader::poll`] calls:
+///
+/// * `Ok(Some(frame))` — a complete, validated frame;
+/// * `Ok(None)` — the read deadline fired; call again later (the
+///   partial state, if any, is retained);
+/// * `Err(_)` — the same typed failures as [`read_frame`].
+///
+/// Liveness is the *caller's* job: [`FrameReader::bytes_consumed`] is a
+/// monotone counter of stream bytes absorbed, so the caller can tell
+/// "idle tick" from "slow but alive peer" and apply its own idle
+/// deadline.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    hdr: [u8; FRAME_HEADER_BYTES as usize],
+    hdr_have: usize,
+    /// `Some` once the header has been validated; holds the kind and
+    /// the expected body checksum while the body streams in.
+    in_body: Option<(FrameKind, u32)>,
+    body: Vec<u8>,
+    body_have: usize,
+    consumed: u64,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Total stream bytes absorbed so far (monotone; includes partial
+    /// frames) — the caller's liveness signal.
+    pub fn bytes_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// True when a frame is partially read (a timeout now means "slow
+    /// peer", not "idle connection").
+    pub fn mid_frame(&self) -> bool {
+        self.hdr_have > 0 || self.in_body.is_some()
+    }
+
+    /// Fill `buf[*have..]` from `r`. Returns false when the read
+    /// deadline fired (partial progress retained).
+    fn fill(
+        &mut self,
+        r: &mut impl Read,
+        at_boundary: bool,
+        context: &'static str,
+    ) -> Result<bool, WireError> {
+        // split-borrow helper: operate on header or body via indices
+        loop {
+            let (done, dst_is_hdr) = match self.in_body {
+                None => (self.hdr_have >= self.hdr.len(), true),
+                Some(_) => (self.body_have >= self.body.len(), false),
+            };
+            if done {
+                return Ok(true);
+            }
+            let res = if dst_is_hdr {
+                r.read(&mut self.hdr[self.hdr_have..])
+            } else {
+                r.read(&mut self.body[self.body_have..])
+            };
+            match res {
+                Ok(0) => {
+                    return Err(if at_boundary
+                        && dst_is_hdr
+                        && self.hdr_have == 0
+                    {
+                        WireError::CleanClose
+                    } else {
+                        WireError::Truncated { context }
+                    });
+                }
+                Ok(n) => {
+                    if dst_is_hdr {
+                        self.hdr_have += n;
+                    } else {
+                        self.body_have += n;
+                    }
+                    self.consumed += n as u64;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(false);
+                }
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+
+    /// Advance the in-progress frame as far as the stream allows.
+    pub fn poll(
+        &mut self,
+        r: &mut impl Read,
+    ) -> Result<Option<Frame>, WireError> {
+        if self.in_body.is_none() {
+            if !self.fill(r, true, "frame header")? {
+                return Ok(None);
+            }
+            // full header: validate exactly like `read_frame`
+            let hdr = &self.hdr;
+            if hdr[0..4] != MAGIC {
+                return Err(WireError::BadMagic {
+                    got: [hdr[0], hdr[1], hdr[2], hdr[3]],
+                });
+            }
+            let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+            if version != WIRE_VERSION {
+                return Err(WireError::VersionMismatch {
+                    got: version,
+                    want: WIRE_VERSION,
+                });
+            }
+            let kind = FrameKind::from_u8(hdr[6])?;
+            let len =
+                u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+            if len > MAX_BODY_BYTES {
+                return Err(WireError::Oversize { len: len as u64 });
+            }
+            let want =
+                u32::from_le_bytes([hdr[12], hdr[13], hdr[14], hdr[15]]);
+            self.body.clear();
+            self.body.resize(len as usize, 0);
+            self.body_have = 0;
+            self.in_body = Some((kind, want));
+        }
+        if !self.fill(r, false, "frame body")? {
+            return Ok(None);
+        }
+        let (kind, want) = self.in_body.take().unwrap();
+        self.hdr_have = 0;
+        let body = std::mem::take(&mut self.body);
+        let got = crc32(&body);
+        if got != want {
+            return Err(WireError::ChecksumMismatch { got, want });
+        }
+        Ok(Some(Frame { kind, body }))
+    }
+}
+
+/// What a reader loop's idle tick should do next, per [`Liveness`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TickAction {
+    /// Nothing due yet.
+    Idle,
+    /// The probe interval elapsed with no traffic: send a Heartbeat.
+    Probe,
+    /// The idle deadline expired: declare the peer dead.
+    Dead { idle_ms: u64, deadline_ms: u64 },
+}
+
+/// The probe/deadline liveness state machine both long-lived reader
+/// loops (server side in `net::socket`, worker side in `net::worker`)
+/// run on their idle ticks — one implementation, so the two sides
+/// cannot diverge.
+///
+/// Rules:
+/// * any stream progress (reported via [`Liveness::on_progress`],
+///   even a partial frame) refreshes the peer's liveness;
+/// * after `heartbeat` of silence, probe (at most once per interval);
+/// * after `deadline` of silence — when the caller says the deadline
+///   applies — the peer is dead ([`TickAction::Dead`], which callers
+///   turn into the typed [`WireError::HeartbeatLost`]).
+///
+/// A zero `heartbeat` disables probing; a zero `deadline` disables
+/// the death verdict.
+#[derive(Debug)]
+pub struct Liveness {
+    heartbeat: Duration,
+    deadline: Duration,
+    last_rx: Instant,
+    last_probe: Instant,
+    seen: u64,
+}
+
+impl Liveness {
+    pub fn new(heartbeat: Duration, deadline: Duration) -> Liveness {
+        Liveness {
+            heartbeat,
+            deadline,
+            last_rx: Instant::now(),
+            last_probe: Instant::now(),
+            seen: 0,
+        }
+    }
+
+    /// The socket read timeout that keeps this machine responsive:
+    /// the smallest non-zero interval, capped at 250 ms so shutdown
+    /// and join latency stay bounded.
+    pub fn tick(&self) -> Duration {
+        [self.heartbeat, self.deadline, Duration::from_millis(250)]
+            .into_iter()
+            .filter(|d| !d.is_zero())
+            .min()
+            .unwrap_or(Duration::from_millis(250))
+    }
+
+    /// Report the reader's monotone consumed-byte counter
+    /// ([`FrameReader::bytes_consumed`]); any growth counts as proof
+    /// of life.
+    pub fn on_progress(&mut self, consumed: u64) {
+        if consumed != self.seen {
+            self.seen = consumed;
+            self.last_rx = Instant::now();
+        }
+    }
+
+    /// Decide the idle-tick action. `deadline_applies` lets callers
+    /// scope the death verdict (e.g. the server kills a silent idle
+    /// connection only when probing is on — without probes a silent
+    /// idle peer is indistinguishable from a healthy one).
+    pub fn on_idle(&mut self, deadline_applies: bool) -> TickAction {
+        let idle = self.last_rx.elapsed();
+        if deadline_applies
+            && !self.deadline.is_zero()
+            && idle >= self.deadline
+        {
+            return TickAction::Dead {
+                idle_ms: idle.as_millis() as u64,
+                deadline_ms: self.deadline.as_millis() as u64,
+            };
+        }
+        if !self.heartbeat.is_zero()
+            && idle >= self.heartbeat
+            && self.last_probe.elapsed() >= self.heartbeat
+        {
+            self.last_probe = Instant::now();
+            return TickAction::Probe;
+        }
+        TickAction::Idle
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,5 +683,154 @@ mod tests {
         buf[6] = 77;
         let err = read_frame(&mut &buf[..]).unwrap_err();
         assert!(matches!(err, WireError::UnknownKind { got: 77 }), "{err}");
+    }
+
+    #[test]
+    fn heartbeat_kinds_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Heartbeat, &7u64.to_le_bytes())
+            .unwrap();
+        write_frame(&mut buf, FrameKind::HeartbeatAck, &7u64.to_le_bytes())
+            .unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame(&mut r).unwrap().kind,
+            FrameKind::Heartbeat
+        );
+        assert_eq!(
+            read_frame(&mut r).unwrap().kind,
+            FrameKind::HeartbeatAck
+        );
+    }
+
+    /// Reader that yields `chunks` one at a time, interleaving a
+    /// WouldBlock "timeout" before each — the worst-case trickle a
+    /// short read deadline can produce.
+    struct Trickle {
+        chunks: Vec<Vec<u8>>,
+        next: usize,
+        blocked: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if !self.blocked {
+                self.blocked = true;
+                return Err(std::io::Error::from(ErrorKind::WouldBlock));
+            }
+            self.blocked = false;
+            match self.chunks.get(self.next) {
+                None => Ok(0),
+                Some(c) => {
+                    let n = c.len().min(buf.len());
+                    buf[..n].copy_from_slice(&c[..n]);
+                    if n == c.len() {
+                        self.next += 1;
+                    } else {
+                        self.chunks[self.next].drain(..n);
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_mid_frame_timeouts() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Outcome, b"multiplexed body")
+            .unwrap();
+        write_frame(&mut buf, FrameKind::Heartbeat, &1u64.to_le_bytes())
+            .unwrap();
+        // deliver the stream in 3-byte fragments, a timeout before each
+        let mut src = Trickle {
+            chunks: buf.chunks(3).map(|c| c.to_vec()).collect(),
+            next: 0,
+            blocked: false,
+        };
+        let mut fr = FrameReader::new();
+        let mut frames = Vec::new();
+        let mut ticks = 0usize;
+        while frames.len() < 2 {
+            match fr.poll(&mut src).unwrap() {
+                Some(f) => frames.push(f),
+                None => ticks += 1,
+            }
+            assert!(ticks < 10_000, "reader made no progress");
+        }
+        assert!(ticks > 0, "trickle source never timed out");
+        assert_eq!(frames[0].kind, FrameKind::Outcome);
+        assert_eq!(frames[0].body, b"multiplexed body");
+        assert_eq!(frames[1].kind, FrameKind::Heartbeat);
+        assert_eq!(
+            fr.bytes_consumed(),
+            buf.len() as u64,
+            "consumed-byte counter must equal the stream length"
+        );
+        assert!(!fr.mid_frame());
+        // and the stream end is a clean close at a boundary
+        let err = loop {
+            match fr.poll(&mut src) {
+                Ok(Some(f)) => panic!("unexpected frame {:?}", f.kind),
+                Ok(None) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(err.is_clean_close(), "{err}");
+    }
+
+    #[test]
+    fn liveness_state_machine_probes_then_dies() {
+        let hb = Duration::from_millis(20);
+        let dl = Duration::from_millis(60);
+        let mut l = Liveness::new(hb, dl);
+        assert_eq!(l.tick(), hb);
+        assert_eq!(l.on_idle(true), TickAction::Idle);
+        std::thread::sleep(hb + Duration::from_millis(5));
+        // probe due, and only once per interval
+        assert_eq!(l.on_idle(true), TickAction::Probe);
+        assert_eq!(l.on_idle(true), TickAction::Idle);
+        // progress refreshes liveness
+        l.on_progress(10);
+        assert_eq!(l.on_idle(true), TickAction::Idle);
+        std::thread::sleep(dl + Duration::from_millis(10));
+        match l.on_idle(true) {
+            TickAction::Dead { idle_ms, deadline_ms } => {
+                assert!(idle_ms >= deadline_ms);
+                assert_eq!(deadline_ms, 60);
+            }
+            a => panic!("expected Dead, got {a:?}"),
+        }
+        // ...but not when the caller says the deadline doesn't apply
+        assert!(!matches!(l.on_idle(false), TickAction::Dead { .. }));
+    }
+
+    #[test]
+    fn liveness_zero_knobs_disable_probe_and_death() {
+        let mut l = Liveness::new(Duration::ZERO, Duration::ZERO);
+        assert_eq!(l.tick(), Duration::from_millis(250));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(l.on_idle(true), TickAction::Idle);
+    }
+
+    #[test]
+    fn frame_reader_types_mid_frame_truncation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Job, b"0123456789").unwrap();
+        buf.truncate(buf.len() - 4);
+        let mut src = Trickle {
+            chunks: buf.chunks(5).map(|c| c.to_vec()).collect(),
+            next: 0,
+            blocked: false,
+        };
+        let mut fr = FrameReader::new();
+        let err = loop {
+            match fr.poll(&mut src) {
+                Ok(Some(_)) => panic!("frame should be truncated"),
+                Ok(None) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, WireError::Truncated { .. }), "{err}");
     }
 }

@@ -1,27 +1,40 @@
-//! Networked transport: the wire protocol that lets one federated
-//! round physically span processes.
+//! Networked transport: the wire protocol (v2) that lets one
+//! federated round physically span processes.
 //!
 //! Four layers, bottom-up:
 //!
 //! * [`frame`] — length-prefixed frames with a magic/version header
 //!   and CRC-32 checksum; every peer-inducible failure is a typed
-//!   [`frame::WireError`].
+//!   [`frame::WireError`]. v2 adds the Heartbeat/HeartbeatAck kinds
+//!   and the resumable [`frame::FrameReader`] the long-lived reader
+//!   loops are built on.
 //! * [`codec`] — message bodies: [`codec::WireJob`] /
-//!   [`codec::WireOutcome`] (the serialized forms of
-//!   `ClientJob`/`ClientOutcome`) and the [`codec::Hello`] handshake.
+//!   [`codec::WireOutcome`] (v2: tagged with the round-scoped
+//!   multiplexing `job_id`), the [`codec::Hello`] handshake and the
+//!   heartbeat nonces.
 //! * [`socket`] — [`socket::SocketTransport`], the TCP-backed
 //!   `Transport` the server's round loop drives exactly like the
-//!   in-process one.
+//!   in-process one: a sliding window of in-flight jobs per worker
+//!   connection, out-of-order completion demultiplexed by job id,
+//!   heartbeat liveness, and re-dispatch of un-acked jobs to
+//!   surviving workers on failure.
 //! * [`worker`] — the worker-side serve loop wrapping the existing
-//!   local executor.
+//!   local executor: a frame reader feeding an executor pool, plus
+//!   the [`worker::OutcomeCache`] that makes reconnects answer
+//!   re-dispatched jobs bit-identically without recomputing.
 //!
 //! Determinism: a networked round is bit-identical to
-//! `InProcessTransport` at any parallelism, because the wire moves
-//! exactly the bytes the FP8 codec already produces (the encoded
-//! broadcast down, the encoded uplink back) and both sides decode
-//! them with the same pure functions. Enforced by
-//! `tests/net_transport.rs`; the byte layout itself is pinned by
-//! `tests/golden_wire.rs` against `tests/fixtures/wire_v1.bin`.
+//! `InProcessTransport` at any parallelism, window size, and under
+//! any schedule of worker failures that leaves the round completable,
+//! because the wire moves exactly the bytes the FP8 codec already
+//! produces (the encoded broadcast down, the encoded uplink back),
+//! both sides decode them with the same pure functions, and
+//! re-execution draws from counter-derived RNG streams. Enforced by
+//! `tests/net_transport.rs` and the chaos suite
+//! `tests/net_chaos.rs`; the byte layout itself is pinned by
+//! `tests/golden_wire.rs` against `tests/fixtures/wire_v2.bin`
+//! (v1 frames must fail with the typed version mismatch, pinned
+//! against the retained `wire_v1.bin`).
 
 pub mod codec;
 pub mod frame;
@@ -29,6 +42,8 @@ pub mod socket;
 pub mod worker;
 
 pub use codec::{Hello, WireJob, WireOutcome};
-pub use frame::{WireError, WIRE_VERSION};
-pub use socket::{accept_workers, SocketTransport};
-pub use worker::{connect, serve_conn, WorkerCtx};
+pub use frame::{FrameReader, WireError, WIRE_VERSION};
+pub use socket::{accept_workers, ConnDied, SocketCfg, SocketTransport};
+pub use worker::{
+    connect, serve_conn, OutcomeCache, ServeOpts, WorkerCtx,
+};

@@ -1,253 +1,696 @@
 //! `SocketTransport` — the [`Transport`] implementation that runs a
-//! round's clients on remote worker processes over TCP.
+//! round's clients on remote worker processes over TCP, v2:
+//! multiplexed in-flight jobs, heartbeat liveness, and straggler
+//! re-dispatch.
 //!
-//! One pooled connection per worker, **one in-flight job per
-//! connection**: `run_cohort`'s scoped threads each check a connection
-//! out of the pool, exchange exactly one Job/Outcome frame pair with
-//! blocking I/O, and return it. If the cohort fan-out is wider than
-//! the pool, surplus threads block on a condvar until a connection
-//! frees up — results are bit-identical either way (determinism comes
-//! from counter-derived RNG streams and in-order aggregation, never
-//! from scheduling).
+//! ## Sliding window & demultiplexing
 //!
-//! Every pooled stream carries a **read/write timeout**, so a silent
-//! or wedged worker surfaces as a typed `WireError::Timeout` naming
-//! the client — a round can fail, but it can never hang. A connection
-//! that errors in any way is discarded (never returned to the pool):
-//! the stream state after a failed exchange is unknowable, and the
-//! next round must not inherit it. When every connection is gone the
-//! next checkout fails fast instead of waiting forever.
+//! One connection per worker, up to [`SocketCfg::inflight`] jobs in
+//! flight on each. `run_cohort`'s threads call
+//! [`SocketTransport::run_client`] concurrently; each call acquires a
+//! *slot* on the least-loaded live connection, registers the job under
+//! its `(round, client, job_id)` key, writes the Job frame, and parks
+//! on a private channel. A per-connection **reader thread** decodes
+//! Outcome frames — in whatever order the worker finishes them — and
+//! routes each to its waiting dispatcher. Out-of-order completion is
+//! invisible to the round loop: `run_cohort`'s reorder buffer still
+//! feeds the streaming aggregation in cohort order, so results stay
+//! bit-identical to the in-process transport.
+//!
+//! ## Heartbeats
+//!
+//! Reader threads wake on a short tick. When a connection has been
+//! silent past [`SocketCfg::heartbeat`] the reader probes the worker
+//! (Heartbeat frame; workers answer immediately even while computing,
+//! because their reader services the socket during execution). If
+//! *nothing* arrives for [`SocketCfg::io_timeout`] the connection is
+//! declared dead with the typed
+//! [`WireError::HeartbeatLost`] — a silent partition can stall a
+//! round for at most the idle deadline, never hang it.
+//!
+//! ## Straggler re-dispatch
+//!
+//! When a connection dies (read/write error, frame corruption, or
+//! heartbeat loss), every job in flight on it is failed over: the
+//! waiting dispatchers receive the typed [`ConnDied`] and re-dispatch
+//! to a surviving connection (the determinism contract makes
+//! re-execution bit-identical; workers that already computed the job
+//! answer from their outcome cache). Only when no live connections
+//! remain — or the re-dispatch budget is exhausted — does the error
+//! surface, naming the client, round and worker.
+//!
+//! A background acceptor keeps the listener open for *replacement*
+//! workers: a relaunched (or reconnecting) worker handshakes exactly
+//! like an initial one and joins the pool mid-run.
+//!
+//! Duplicate Outcome frames (network-level duplication, or a slow
+//! worker answering after its job was re-dispatched) are ignored and
+//! counted — delivery is effectively at-least-once, and every copy is
+//! bit-identical by the determinism contract.
+//!
+//! [`WireError::HeartbeatLost`]: super::frame::WireError::HeartbeatLost
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::collections::HashMap;
+use std::fmt;
+use std::io::ErrorKind;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::comm::Uplink;
 use crate::coordinator::transport::{
     ClientJob, ClientOutcome, Transport, WorkBuffers,
 };
 
-use super::codec::{self, Hello};
-use super::frame::{self, FrameKind};
+use super::codec::{self, Hello, WireOutcome};
+use super::frame::{
+    self, FrameKind, FrameReader, Liveness, TickAction, WireError,
+};
 
-/// One pooled worker connection.
-struct Conn {
-    stream: TcpStream,
-    /// Peer address, for error messages ("which worker failed?").
-    peer: String,
-    /// Reused job-serialization buffer: one payload-sized allocation
-    /// per connection for the life of the run, not one per message.
-    buf: Vec<u8>,
+/// Server-side transport tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketCfg {
+    /// Per-read/write socket deadline AND the silence deadline after
+    /// which a non-responsive connection is declared dead.
+    pub io_timeout: Duration,
+    /// Probe interval: a connection silent this long gets a Heartbeat.
+    /// `Duration::ZERO` disables probing (silence then only kills a
+    /// connection while jobs are pending on it).
+    pub heartbeat: Duration,
+    /// Sliding window: max in-flight jobs per worker connection.
+    pub inflight: usize,
 }
 
-struct Pool {
-    idle: Vec<Conn>,
-    /// Live connections (idle + checked out). Reaches 0 only when
-    /// every worker has been discarded after an error.
-    live: usize,
+impl SocketCfg {
+    /// v1-flavoured defaults around a single `--net-timeout-ms` value.
+    pub fn new(io_timeout: Duration) -> SocketCfg {
+        SocketCfg {
+            io_timeout,
+            heartbeat: Duration::from_millis(1000),
+            inflight: 4,
+        }
+    }
+}
+
+/// How many times one job is re-dispatched after connection failures
+/// before the error surfaces (each attempt lands on a *different*
+/// connection — the dead one leaves the pool first).
+const MAX_DISPATCH_ATTEMPTS: usize = 4;
+
+/// Typed "the connection died" failure, fanned out to every job that
+/// was in flight on it. The underlying [`WireError`] is shared, so
+/// the chaos suite can assert the exact fault class for every victim.
+#[derive(Clone, Debug)]
+pub struct ConnDied {
+    pub peer: String,
+    pub error: Arc<WireError>,
+}
+
+impl fmt::Display for ConnDied {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "worker {} connection failed: {}",
+            self.peer, self.error
+        )
+    }
+}
+
+impl std::error::Error for ConnDied {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(self.error.as_ref())
+    }
+}
+
+type PendingKey = (u32, u32, u32); // (round, client, job_id)
+type PendingTx = mpsc::Sender<Result<WireOutcome, ConnDied>>;
+
+/// One live worker connection.
+struct Conn {
+    id: u64,
+    peer: String,
+    /// Write half (cloned stream); all frame writes serialize here.
+    writer: Mutex<TcpStream>,
+    /// In-flight jobs awaiting their Outcome frames.
+    pending: Mutex<HashMap<PendingKey, PendingTx>>,
+    in_flight: AtomicUsize,
+    alive: AtomicBool,
+}
+
+struct Shared {
+    cfg: SocketCfg,
+    hello: Hello,
+    /// Live connections (a dead one is removed before its pending
+    /// jobs are failed over).
+    conns: Mutex<Vec<Arc<Conn>>>,
+    /// Signalled when a slot frees, a connection joins, or one dies.
+    slots: Condvar,
+    next_conn_id: AtomicU64,
+    next_nonce: AtomicU64,
+    closed: AtomicBool,
+    /// Job-frame bytes written (the downlink frame bytes; re-dispatch
+    /// duplicates are counted — under faults, actual >= reported).
+    bytes_sent: AtomicU64,
+    /// Outcome-frame bytes read.
+    bytes_received: AtomicU64,
+    /// Outcome frames that matched no pending job (duplicates /
+    /// answers that arrived after a re-dispatch) — ignored by design.
+    duplicate_outcomes: AtomicU64,
+    /// Heartbeat probes sent (liveness traffic, excluded from the
+    /// CommStats byte identity).
+    heartbeats_sent: AtomicU64,
+    /// Jobs re-dispatched to a surviving worker after a failure.
+    requeues: AtomicU64,
+    /// Reader/acceptor handles, joined on shutdown.
+    threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// TCP-backed client-execution transport (server side).
 pub struct SocketTransport {
-    pool: Mutex<Pool>,
-    available: Condvar,
-    /// Job-frame bytes written (exactly the downlink frame bytes).
-    bytes_sent: AtomicU64,
-    /// Outcome-frame bytes read (exactly the uplink frame bytes).
-    bytes_received: AtomicU64,
+    shared: Arc<Shared>,
 }
 
-/// Accept `n` worker connections from `listener`, handshake each one
-/// against `hello` (config fingerprint + model identity), and build
-/// the transport. Every accepted stream gets `timeout` as its
-/// read/write deadline — the "never hang" guarantee.
+/// Handshake one inbound worker stream in place: validate its Hello
+/// against ours, ack it, and install the socket deadlines.
+fn handshake(
+    stream: &mut TcpStream,
+    peer: &str,
+    hello: &Hello,
+    io_timeout: Duration,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(io_timeout))
+        .context("setting worker read timeout")?;
+    stream
+        .set_write_timeout(Some(io_timeout))
+        .context("setting worker write timeout")?;
+    let f = frame::read_frame(stream)
+        .with_context(|| format!("handshake with worker {peer}"))?;
+    ensure!(
+        f.kind == FrameKind::Hello,
+        "worker {peer} opened with a {:?} frame, expected Hello",
+        f.kind
+    );
+    let h = codec::decode_hello(&f.body)
+        .with_context(|| format!("handshake with worker {peer}"))?;
+    ensure!(
+        h.fingerprint == hello.fingerprint,
+        "config fingerprint mismatch with worker {peer}: server \
+         {:#018x}, worker {:#018x} — launch every worker with the \
+         identical preset and overrides",
+        hello.fingerprint,
+        h.fingerprint
+    );
+    ensure!(
+        h.model == hello.model,
+        "model mismatch with worker {peer}: server runs '{}', \
+         worker runs '{}'",
+        hello.model,
+        h.model
+    );
+    ensure!(
+        h.dim == hello.dim,
+        "model dim mismatch with worker {peer}: server {}, worker {}",
+        hello.dim,
+        h.dim
+    );
+    let mut ack = Vec::new();
+    codec::encode_hello_ack(hello.fingerprint, &mut ack);
+    frame::write_frame(stream, FrameKind::HelloAck, &ack)
+        .with_context(|| format!("acking worker {peer}"))?;
+    Ok(())
+}
+
+/// Accept `n` initial worker connections from `listener`, handshake
+/// each against `hello` (config fingerprint + model identity), and
+/// build the transport. The listener then stays open on a background
+/// acceptor so replacement workers can join mid-run. Initial
+/// handshake failures are hard errors (a mislaunched fleet must not
+/// start); replacement handshake failures are logged and dropped.
 pub fn accept_workers(
-    listener: &TcpListener,
+    listener: TcpListener,
     n: usize,
     hello: &Hello,
-    timeout: Duration,
+    cfg: SocketCfg,
 ) -> Result<SocketTransport> {
     ensure!(n >= 1, "need at least one worker connection");
-    ensure!(!timeout.is_zero(), "worker read timeout must be non-zero");
-    let mut idle = Vec::with_capacity(n);
-    let mut ack = Vec::new();
+    ensure!(
+        !cfg.io_timeout.is_zero(),
+        "worker io timeout must be non-zero"
+    );
+    ensure!(cfg.inflight >= 1, "per-connection window must be >= 1");
+    // probe-before-deadline invariant: with probing on, a peer must
+    // be probed (and able to ack) before the idle deadline can fire —
+    // otherwise long computations would be killed unprobed
+    ensure!(
+        cfg.heartbeat.is_zero() || cfg.heartbeat < cfg.io_timeout,
+        "heartbeat interval ({:?}) must be shorter than the io \
+         timeout ({:?}), or zero to disable probing",
+        cfg.heartbeat,
+        cfg.io_timeout
+    );
+    let mut initial = Vec::with_capacity(n);
     for _ in 0..n {
         let (mut stream, peer) = listener
             .accept()
             .context("accepting a worker connection")?;
         let peer = peer.to_string();
-        stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(timeout))
-            .context("setting worker read timeout")?;
-        stream
-            .set_write_timeout(Some(timeout))
-            .context("setting worker write timeout")?;
-        let f = frame::read_frame(&mut stream)
-            .with_context(|| format!("handshake with worker {peer}"))?;
-        ensure!(
-            f.kind == FrameKind::Hello,
-            "worker {peer} opened with a {:?} frame, expected Hello",
-            f.kind
-        );
-        let h = codec::decode_hello(&f.body)
-            .with_context(|| format!("handshake with worker {peer}"))?;
-        ensure!(
-            h.fingerprint == hello.fingerprint,
-            "config fingerprint mismatch with worker {peer}: server \
-             {:#018x}, worker {:#018x} — launch every worker with the \
-             identical preset and overrides",
-            hello.fingerprint,
-            h.fingerprint
-        );
-        ensure!(
-            h.model == hello.model,
-            "model mismatch with worker {peer}: server runs '{}', \
-             worker runs '{}'",
-            hello.model,
-            h.model
-        );
-        ensure!(
-            h.dim == hello.dim,
-            "model dim mismatch with worker {peer}: server {}, worker {}",
-            hello.dim,
-            h.dim
-        );
-        codec::encode_hello_ack(hello.fingerprint, &mut ack);
-        frame::write_frame(&mut stream, FrameKind::HelloAck, &ack)
-            .with_context(|| format!("acking worker {peer}"))?;
-        idle.push(Conn {
-            stream,
-            peer,
-            buf: Vec::new(),
-        });
+        handshake(&mut stream, &peer, hello, cfg.io_timeout)?;
+        initial.push((stream, peer));
     }
-    Ok(SocketTransport {
-        pool: Mutex::new(Pool { idle, live: n }),
-        available: Condvar::new(),
+    let shared = Arc::new(Shared {
+        cfg,
+        hello: hello.clone(),
+        conns: Mutex::new(Vec::new()),
+        slots: Condvar::new(),
+        next_conn_id: AtomicU64::new(0),
+        next_nonce: AtomicU64::new(0),
+        closed: AtomicBool::new(false),
         bytes_sent: AtomicU64::new(0),
         bytes_received: AtomicU64::new(0),
-    })
+        duplicate_outcomes: AtomicU64::new(0),
+        heartbeats_sent: AtomicU64::new(0),
+        requeues: AtomicU64::new(0),
+        threads: Mutex::new(Vec::new()),
+    });
+    for (stream, peer) in initial {
+        add_conn(&shared, stream, peer)?;
+    }
+    spawn_acceptor(&shared, listener)?;
+    Ok(SocketTransport { shared })
+}
+
+/// Register a handshaken stream: clone it into reader/writer halves
+/// and start its reader thread.
+fn add_conn(
+    shared: &Arc<Shared>,
+    stream: TcpStream,
+    peer: String,
+) -> Result<()> {
+    let reader_stream = stream
+        .try_clone()
+        .context("cloning a worker connection for its reader")?;
+    let conn = Arc::new(Conn {
+        id: shared.next_conn_id.fetch_add(1, Ordering::Relaxed),
+        peer,
+        writer: Mutex::new(stream),
+        pending: Mutex::new(HashMap::new()),
+        in_flight: AtomicUsize::new(0),
+        alive: AtomicBool::new(true),
+    });
+    {
+        let mut conns = shared.conns.lock().unwrap();
+        // a replacement racing shutdown() must not be registered into
+        // the already-drained pool (it would never get a Shutdown
+        // frame and its reader would never be joined)
+        ensure!(
+            !shared.closed.load(Ordering::SeqCst),
+            "transport is shut down"
+        );
+        conns.push(conn.clone());
+    }
+    shared.slots.notify_all();
+    let sh = shared.clone();
+    let h = thread::Builder::new()
+        .name(format!("fedfp8-net-reader-{}", conn.id))
+        .spawn(move || reader_loop(&sh, &conn, reader_stream))
+        .context("spawning a connection reader thread")?;
+    shared.threads.lock().unwrap().push(h);
+    Ok(())
+}
+
+/// Background acceptor: handshake replacement workers for the life of
+/// the transport (non-blocking accept + short poll, so shutdown is
+/// prompt).
+fn spawn_acceptor(
+    shared: &Arc<Shared>,
+    listener: TcpListener,
+) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("switching the listener to non-blocking accepts")?;
+    let sh = shared.clone();
+    let h = thread::Builder::new()
+        .name("fedfp8-net-acceptor".into())
+        .spawn(move || {
+            while !sh.closed.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((mut stream, peer)) => {
+                        let peer = peer.to_string();
+                        // handshake with deadlines; blocking I/O again
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        match handshake(
+                            &mut stream,
+                            &peer,
+                            &sh.hello,
+                            sh.cfg.io_timeout,
+                        ) {
+                            Ok(()) => {
+                                eprintln!(
+                                    "[server] replacement worker \
+                                     {peer} joined"
+                                );
+                                let _ = add_conn(&sh, stream, peer);
+                            }
+                            Err(e) => eprintln!(
+                                "[server] rejected replacement worker \
+                                 {peer}: {e:#}"
+                            ),
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(_) => {
+                        thread::sleep(Duration::from_millis(100));
+                    }
+                }
+            }
+        })
+        .context("spawning the replacement acceptor thread")?;
+    shared.threads.lock().unwrap().push(h);
+    Ok(())
+}
+
+/// Declare a connection dead: remove it from the pool, fail over its
+/// in-flight jobs, and close the socket. Idempotent.
+fn kill_conn(shared: &Shared, conn: &Arc<Conn>, error: WireError) {
+    if !conn.alive.swap(false, Ordering::SeqCst) {
+        return;
+    }
+    {
+        let mut conns = shared.conns.lock().unwrap();
+        conns.retain(|c| c.id != conn.id);
+    }
+    let died = ConnDied {
+        peer: conn.peer.clone(),
+        error: Arc::new(error),
+    };
+    let victims: Vec<PendingTx> = {
+        let mut pending = conn.pending.lock().unwrap();
+        pending.drain().map(|(_, tx)| tx).collect()
+    };
+    for tx in victims {
+        let _ = tx.send(Err(died.clone()));
+    }
+    conn.in_flight.store(0, Ordering::SeqCst);
+    let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
+    shared.slots.notify_all();
+}
+
+/// Per-connection reader: demultiplex Outcome frames to their waiting
+/// dispatchers, answer worker heartbeats, probe on silence, and kill
+/// the connection past the idle deadline.
+fn reader_loop(shared: &Shared, conn: &Arc<Conn>, mut stream: TcpStream) {
+    let hb = shared.cfg.heartbeat;
+    let mut live = Liveness::new(hb, shared.cfg.io_timeout);
+    if stream.set_read_timeout(Some(live.tick())).is_err() {
+        kill_conn(
+            shared,
+            conn,
+            WireError::Io(std::io::Error::other(
+                "failed to set the reader tick",
+            )),
+        );
+        return;
+    }
+    let mut fr = FrameReader::new();
+    let mut hb_body = Vec::new();
+    while conn.alive.load(Ordering::SeqCst)
+        && !shared.closed.load(Ordering::SeqCst)
+    {
+        let polled = match fr.poll(&mut stream) {
+            Ok(p) => p,
+            Err(e) => {
+                kill_conn(shared, conn, e);
+                return;
+            }
+        };
+        live.on_progress(fr.bytes_consumed());
+        let Some(f) = polled else {
+            // idle deadline: always while jobs are pending; only with
+            // probing on for idle connections (a silent idle peer is
+            // indistinguishable from a partitioned one without probes)
+            let has_pending = !conn.pending.lock().unwrap().is_empty();
+            match live.on_idle(has_pending || !hb.is_zero()) {
+                TickAction::Dead { idle_ms, deadline_ms } => {
+                    kill_conn(
+                        shared,
+                        conn,
+                        WireError::HeartbeatLost {
+                            idle_ms,
+                            deadline_ms,
+                        },
+                    );
+                    return;
+                }
+                TickAction::Probe => {
+                    let nonce = shared
+                        .next_nonce
+                        .fetch_add(1, Ordering::Relaxed);
+                    codec::encode_heartbeat(nonce, &mut hb_body);
+                    let res = {
+                        let mut w = conn.writer.lock().unwrap();
+                        frame::write_frame(
+                            &mut *w,
+                            FrameKind::Heartbeat,
+                            &hb_body,
+                        )
+                    };
+                    match res {
+                        Ok(_) => {
+                            shared
+                                .heartbeats_sent
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            kill_conn(shared, conn, e);
+                            return;
+                        }
+                    }
+                }
+                TickAction::Idle => {}
+            }
+            continue;
+        };
+        match f.kind {
+            FrameKind::Outcome => {
+                shared
+                    .bytes_received
+                    .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                let out = match codec::decode_outcome(&f.body) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        kill_conn(shared, conn, e);
+                        return;
+                    }
+                };
+                let key: PendingKey =
+                    (out.round, out.client, out.job_id);
+                let tx = conn.pending.lock().unwrap().remove(&key);
+                match tx {
+                    Some(tx) => {
+                        // free the slot under the pool lock so slot
+                        // waiters can't miss the wakeup
+                        {
+                            let _pool = shared.conns.lock().unwrap();
+                            conn.in_flight
+                                .fetch_sub(1, Ordering::SeqCst);
+                        }
+                        shared.slots.notify_all();
+                        let _ = tx.send(Ok(out));
+                    }
+                    None => {
+                        // duplicated frame, or the answer to a job
+                        // that was already re-dispatched: bit-identical
+                        // by the determinism contract, safe to drop
+                        shared
+                            .duplicate_outcomes
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            FrameKind::Heartbeat => {
+                let nonce = match codec::decode_heartbeat(&f.body) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        kill_conn(shared, conn, e);
+                        return;
+                    }
+                };
+                codec::encode_heartbeat(nonce, &mut hb_body);
+                let res = {
+                    let mut w = conn.writer.lock().unwrap();
+                    frame::write_frame(
+                        &mut *w,
+                        FrameKind::HeartbeatAck,
+                        &hb_body,
+                    )
+                };
+                if let Err(e) = res {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            }
+            FrameKind::HeartbeatAck => {
+                // liveness already refreshed via bytes_consumed
+                if let Err(e) = codec::decode_heartbeat(&f.body) {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            }
+            k => {
+                kill_conn(
+                    shared,
+                    conn,
+                    WireError::Malformed {
+                        what: format!(
+                            "unexpected {k:?} frame from a worker"
+                        ),
+                    },
+                );
+                return;
+            }
+        }
+    }
+    // transport shut down (or the conn was killed elsewhere): make
+    // sure nobody is left waiting on this connection
+    kill_conn(shared, conn, WireError::CleanClose);
+}
+
+impl Shared {
+    /// Acquire a dispatch slot: the least-loaded live connection with
+    /// a free window position. Blocks while the pool is saturated;
+    /// fails fast when no live connections remain.
+    fn acquire(&self) -> Result<Arc<Conn>> {
+        let mut conns = self.conns.lock().unwrap();
+        loop {
+            ensure!(
+                !self.closed.load(Ordering::SeqCst),
+                "transport is shut down"
+            );
+            ensure!(
+                !conns.is_empty(),
+                "no live worker connections left (all were discarded \
+                 after errors)"
+            );
+            let best = conns
+                .iter()
+                .filter(|c| {
+                    c.in_flight.load(Ordering::SeqCst)
+                        < self.cfg.inflight
+                })
+                .min_by_key(|c| c.in_flight.load(Ordering::SeqCst))
+                .cloned();
+            if let Some(c) = best {
+                c.in_flight.fetch_add(1, Ordering::SeqCst);
+                return Ok(c);
+            }
+            conns = self.slots.wait(conns).unwrap();
+        }
+    }
 }
 
 impl SocketTransport {
-    /// Total Job-frame bytes sent to workers so far.
+    /// Total Job-frame bytes sent to workers so far (re-dispatched
+    /// frames included).
     pub fn bytes_sent(&self) -> u64 {
-        self.bytes_sent.load(Ordering::Relaxed)
+        self.shared.bytes_sent.load(Ordering::Relaxed)
     }
 
     /// Total Outcome-frame bytes received from workers so far.
     pub fn bytes_received(&self) -> u64 {
-        self.bytes_received.load(Ordering::Relaxed)
+        self.shared.bytes_received.load(Ordering::Relaxed)
     }
 
     /// Live worker connections (diagnostics / tests).
     pub fn live_workers(&self) -> usize {
-        self.pool.lock().unwrap().live
+        self.shared.conns.lock().unwrap().len()
     }
 
-    fn checkout(&self) -> Result<Conn> {
-        let mut pool = self.pool.lock().unwrap();
-        loop {
-            if let Some(c) = pool.idle.pop() {
-                return Ok(c);
-            }
-            ensure!(
-                pool.live > 0,
-                "no live worker connections left (all were discarded \
-                 after errors)"
-            );
-            pool = self.available.wait(pool).unwrap();
-        }
+    /// Outcome frames ignored because no job was waiting for them.
+    pub fn duplicate_outcomes(&self) -> u64 {
+        self.shared.duplicate_outcomes.load(Ordering::Relaxed)
     }
 
-    fn checkin(&self, conn: Conn) {
-        self.pool.lock().unwrap().idle.push(conn);
-        self.available.notify_one();
+    /// Heartbeat probes this side has sent.
+    pub fn heartbeats_sent(&self) -> u64 {
+        self.shared.heartbeats_sent.load(Ordering::Relaxed)
     }
 
-    fn discard(&self, conn: Conn) {
-        drop(conn); // closes the stream
-        self.pool.lock().unwrap().live -= 1;
-        // wake every waiter: they must re-check `live`
-        self.available.notify_all();
+    /// Jobs re-dispatched to a surviving worker after a connection
+    /// failure.
+    pub fn requeues(&self) -> u64 {
+        self.shared.requeues.load(Ordering::Relaxed)
     }
 
-    /// One blocking job/outcome exchange on one connection.
-    fn exchange(
-        &self,
-        conn: &mut Conn,
-        job: &ClientJob<'_>,
-    ) -> Result<ClientOutcome> {
-        codec::encode_job_from(job, &mut conn.buf);
-        let sent = frame::write_frame(
-            &mut conn.stream,
-            FrameKind::Job,
-            &conn.buf,
-        )
-        .context("sending job frame")?;
-        self.bytes_sent.fetch_add(sent, Ordering::Relaxed);
-        let f = frame::read_frame(&mut conn.stream)
-            .context("awaiting outcome frame")?;
-        self.bytes_received
-            .fetch_add(f.total_bytes(), Ordering::Relaxed);
-        ensure!(
-            f.kind == FrameKind::Outcome,
-            "worker sent a {:?} frame where an Outcome was expected",
-            f.kind
-        );
-        let out =
-            codec::decode_outcome(&f.body).context("decoding outcome")?;
-        ensure!(
-            out.client as usize == job.client
-                && out.round as usize == job.round,
-            "worker answered for client {} round {}, expected client \
-             {} round {}",
-            out.client,
-            out.round,
-            job.client,
-            job.round
-        );
-        ensure!(
-            out.n_k == job.n_k,
-            "worker reported n_k {} for client {}, server expected {} \
-             — worlds out of sync despite matching fingerprints?",
-            out.n_k,
-            job.client,
-            job.n_k
-        );
-        Ok(ClientOutcome {
-            uplink: Uplink {
-                payload: out.payload,
-                client: job.client,
-                n_k: out.n_k,
-                mean_loss: out.mean_loss,
-            },
-            ef: out.ef,
-        })
-    }
-
-    /// Politely close every idle connection (Shutdown frame + drop) so
-    /// workers exit their serve loops cleanly. Best-effort: a worker
-    /// that is already gone is simply dropped.
+    /// Politely close every connection (Shutdown frame + socket
+    /// close) so workers exit their serve loops, then stop the
+    /// acceptor and reader threads. Idempotent; also runs on Drop.
     pub fn shutdown(&self) {
-        let drained: Vec<Conn> = {
-            let mut pool = self.pool.lock().unwrap();
-            let drained: Vec<Conn> = pool.idle.drain(..).collect();
-            pool.live -= drained.len();
-            drained
-        };
-        for mut conn in drained {
-            let _ = frame::write_frame(
-                &mut conn.stream,
-                FrameKind::Shutdown,
-                &[],
-            );
+        let shared = &self.shared;
+        if shared.closed.swap(true, Ordering::SeqCst) {
+            return;
         }
-        self.available.notify_all();
+        let conns: Vec<Arc<Conn>> = {
+            let mut pool = shared.conns.lock().unwrap();
+            pool.drain(..).collect()
+        };
+        for conn in conns {
+            {
+                let mut w = conn.writer.lock().unwrap();
+                let _ =
+                    frame::write_frame(&mut *w, FrameKind::Shutdown, &[]);
+                let _ = w.shutdown(Shutdown::Both);
+            }
+            conn.alive.store(false, Ordering::SeqCst);
+            // any pending jobs at shutdown (there should be none: the
+            // round loop completes before shutdown) fail over cleanly
+            let victims: Vec<PendingTx> = conn
+                .pending
+                .lock()
+                .unwrap()
+                .drain()
+                .map(|(_, tx)| tx)
+                .collect();
+            let died = ConnDied {
+                peer: conn.peer.clone(),
+                error: Arc::new(WireError::CleanClose),
+            };
+            for tx in victims {
+                let _ = tx.send(Err(died.clone()));
+            }
+        }
+        shared.slots.notify_all();
+        // join until the list drains: the acceptor may push one last
+        // reader handle while we join (a replacement racing shutdown
+        // — add_conn refuses to register it, but its spawn may have
+        // landed in the list already)
+        loop {
+            let threads: Vec<JoinHandle<()>> = {
+                let mut t = shared.threads.lock().unwrap();
+                t.drain(..).collect()
+            };
+            if threads.is_empty() {
+                break;
+            }
+            for h in threads {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -255,24 +698,132 @@ impl Transport for SocketTransport {
     fn run_client(
         &self,
         job: ClientJob<'_>,
-        _buffers: &mut WorkBuffers,
+        buffers: &mut WorkBuffers,
     ) -> Result<ClientOutcome> {
+        let shared = &self.shared;
         let (client, round) = (job.client, job.round);
-        let mut conn = self.checkout().with_context(|| {
-            format!("dispatching client {client} round {round}")
-        })?;
-        match self.exchange(&mut conn, &job) {
-            Ok(out) => {
-                self.checkin(conn);
-                Ok(out)
+        let key: PendingKey =
+            (round as u32, client as u32, job.job_id);
+        // reuse the cohort worker's wire scratch: one payload-sized
+        // allocation per dispatcher thread for the life of the run,
+        // not one per message (encode_job_from clears it first)
+        let body = &mut buffers.wire;
+        codec::encode_job_from(&job, body);
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..MAX_DISPATCH_ATTEMPTS {
+            let conn = match shared.acquire() {
+                Ok(c) => c,
+                Err(e) => {
+                    // no live workers: surface the fault that got us
+                    // here (the pool-empty message alone hides it)
+                    let e = match last_err.take() {
+                        Some(prior) => prior.context(e.to_string()),
+                        None => e,
+                    };
+                    return Err(e.context(format!(
+                        "client {client} round {round}: dispatch failed"
+                    )));
+                }
+            };
+            if attempt > 0 {
+                shared.requeues.fetch_add(1, Ordering::Relaxed);
             }
-            Err(e) => {
-                let peer = conn.peer.clone();
-                self.discard(conn);
-                Err(e.context(format!(
-                    "client {client} round {round} via worker {peer}"
-                )))
+            let (tx, rx) = mpsc::channel();
+            conn.pending.lock().unwrap().insert(key, tx);
+            let write_res = {
+                let mut w = conn.writer.lock().unwrap();
+                frame::write_frame(&mut *w, FrameKind::Job, body)
+            };
+            match write_res {
+                Ok(n) => {
+                    shared.bytes_sent.fetch_add(n, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    // kill_conn drains pending (including ours), so
+                    // rx below resolves immediately
+                    kill_conn(shared, &conn, e);
+                }
+            }
+            // race guard: if the connection died *around* our insert
+            // (kill_conn may already have drained pending before the
+            // entry landed), reclaim the entry ourselves so rx can't
+            // wait on a sender nobody will ever drain — dropping our
+            // tx turns the recv below into an immediate disconnect.
+            if !conn.alive.load(Ordering::SeqCst) {
+                conn.pending.lock().unwrap().remove(&key);
+            }
+            // wait for the outcome, re-checking connection health on
+            // every io_timeout tick. Legitimate long computations are
+            // unbounded by design — the worker's reader acks probes
+            // while executing — but if the connection dies without
+            // our entry being drained (a reader failure mode this
+            // guards against), we reclaim it instead of parking
+            // forever.
+            let received = loop {
+                match rx.recv_timeout(shared.cfg.io_timeout) {
+                    Ok(r) => break Some(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if conn.alive.load(Ordering::SeqCst) {
+                            continue;
+                        }
+                        conn.pending.lock().unwrap().remove(&key);
+                        break None;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        break None;
+                    }
+                }
+            };
+            match received {
+                Some(Ok(out)) => {
+                    ensure!(
+                        out.client as usize == client
+                            && out.round as usize == round,
+                        "worker answered for client {} round {}, \
+                         expected client {client} round {round}",
+                        out.client,
+                        out.round,
+                    );
+                    ensure!(
+                        out.n_k == job.n_k,
+                        "worker reported n_k {} for client {client}, \
+                         server expected {} — worlds out of sync \
+                         despite matching fingerprints?",
+                        out.n_k,
+                        job.n_k
+                    );
+                    return Ok(ClientOutcome {
+                        uplink: Uplink {
+                            payload: out.payload,
+                            client,
+                            n_k: out.n_k,
+                            mean_loss: out.mean_loss,
+                        },
+                        ef: out.ef,
+                    });
+                }
+                Some(Err(died)) => {
+                    let peer = died.peer.clone();
+                    last_err =
+                        Some(anyhow::Error::from(died).context(format!(
+                            "client {client} round {round} via worker \
+                             {peer}"
+                        )));
+                }
+                None => {
+                    last_err = Some(anyhow!(
+                        "client {client} round {round} via worker {}: \
+                         connection reader exited without a result",
+                        conn.peer
+                    ));
+                }
             }
         }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("dispatch failed"))
+            .context(format!(
+                "client {client} round {round}: re-dispatch budget \
+                 ({MAX_DISPATCH_ATTEMPTS} attempts) exhausted"
+            )))
     }
 }

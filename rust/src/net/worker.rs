@@ -1,7 +1,8 @@
-//! Worker side of the networked transport: handshake, world
-//! reconstruction context, and the blocking serve loop.
+//! Worker side of the v2 networked transport: handshake, world
+//! reconstruction context, the multiplexed serve loop, and the
+//! reconnect-safe outcome cache.
 //!
-//! A worker is a thin shell around the *existing* local executor: it
+//! A worker is a shell around the *existing* local executor: it
 //! decodes a [`WireJob`] into a regular [`ClientJob`] (rebuilding
 //! `w_start` bit-exactly by decoding the FP8 broadcast it received),
 //! hands it to any [`Transport`] implementation — the real
@@ -11,20 +12,53 @@
 //! counter-derived RNG streams, a worker's bytes are identical to
 //! what the in-process simulation would have produced.
 //!
+//! ## v2: multiplexing, heartbeats, reconnect cache
+//!
+//! The serve loop no longer runs one job at a time. A dedicated
+//! reader (the calling thread) decodes incoming frames and feeds a
+//! job queue drained by `exec_threads` scoped executor threads, so
+//! the connection accepts the server's whole in-flight window while
+//! earlier jobs still compute, and outcomes return **out of order**
+//! (the server demultiplexes them by `(round, client, job_id)`).
+//! Because the reader keeps servicing the socket during computation,
+//! heartbeat probes are answered promptly even under load.
+//!
+//! Liveness: when the connection has been silent for
+//! [`ServeOpts::heartbeat`], the worker probes the server; if nothing
+//! at all arrives for [`ServeOpts::idle_deadline`], the loop exits
+//! with the typed [`WireError::HeartbeatLost`] — a silent partition
+//! is detected instead of waiting forever.
+//!
+//! Reconnect safety: every finished outcome body is stored in the
+//! [`OutcomeCache`] under `(fingerprint, round, client, job_id,
+//! job-body crc)`. When a connection drops and the job is dispatched
+//! again — to this worker over a fresh connection, or duplicated by a
+//! flaky network — the cached bytes are returned verbatim: the reply
+//! is bit-identical by construction and costs no recomputation. (Even
+//! on a cache miss re-execution is bit-identical, because all client
+//! randomness is counter-derived; the cache only saves the work.)
+//!
 //! [`WireJob`]: super::codec::WireJob
+//! [`WireError::HeartbeatLost`]: super::frame::WireError::HeartbeatLost
 
+use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::coordinator::transport::{ClientJob, Transport, WorkBuffers};
 use crate::data::Dataset;
 use crate::fp8::codec::{self as fp8codec, DecodeLutCache, Segment};
 use crate::fp8::simd::KernelKind;
-use crate::coordinator::transport::{ClientJob, Transport, WorkBuffers};
 
-use super::codec::{self, Hello, WireOutcome};
-use super::frame::{self, FrameKind};
+use super::codec::{self, Hello, WireJob, WireOutcome};
+use super::frame::{
+    self, FrameKind, FrameReader, Liveness, TickAction, WireError,
+};
 
 /// Everything a worker derives locally instead of receiving on the
 /// wire: the synthetic dataset, the client shards and the model's
@@ -41,10 +75,127 @@ pub struct WorkerCtx<'a> {
     pub kernel: KernelKind,
 }
 
+/// Serve-loop tuning (the worker-side mirror of the server's
+/// `SocketCfg`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Probe the server after this much connection silence;
+    /// `Duration::ZERO` disables worker-initiated heartbeats.
+    pub heartbeat: Duration,
+    /// Declare the server dead after this much total silence;
+    /// `Duration::ZERO` disables the deadline (v1 behaviour: wait for
+    /// work forever). Only meaningful with heartbeats on — without
+    /// probes an idle-but-healthy server legitimately sends nothing.
+    pub idle_deadline: Duration,
+    /// Executor threads draining the job queue — how much of the
+    /// server's in-flight window this worker computes concurrently.
+    pub exec_threads: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            heartbeat: Duration::from_millis(1000),
+            idle_deadline: Duration::from_secs(30),
+            exec_threads: 1,
+        }
+    }
+}
+
+/// Key of one cached outcome: `(config fingerprint, round, client,
+/// job_id, crc32 of the job body)`. The crc term makes the cache
+/// self-guarding — two jobs can only collide on the full key if their
+/// bytes were identical, in which case the cached reply is exactly
+/// right.
+pub type CacheKey = (u64, u32, u32, u32, u32);
+
+struct CacheInner {
+    cap: usize,
+    map: HashMap<CacheKey, Vec<u8>>,
+    /// LRU order, least-recent first (small caps: O(cap) touch is
+    /// cheaper than a linked structure).
+    order: VecDeque<CacheKey>,
+}
+
+/// LRU cache of encoded outcome bodies, shared by every connection a
+/// worker process serves — the state that makes reconnects cheap.
+pub struct OutcomeCache {
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl OutcomeCache {
+    /// `cap` = retained outcomes (>= the server's in-flight window,
+    /// ideally a round's cohort share); 0 disables caching.
+    pub fn new(cap: usize) -> OutcomeCache {
+        OutcomeCache {
+            inner: Mutex::new(CacheInner {
+                cap,
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Cached outcome body for `key`, refreshing its recency.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<u8>> {
+        let mut c = self.inner.lock().unwrap();
+        let hit = c.map.get(key).cloned();
+        match hit {
+            Some(bytes) => {
+                if let Some(i) = c.order.iter().position(|k| k == key) {
+                    c.order.remove(i);
+                    c.order.push_back(*key);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(bytes)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an outcome body, evicting the least-recently-used entry
+    /// past capacity.
+    pub fn put(&self, key: CacheKey, bytes: Vec<u8>) {
+        let mut c = self.inner.lock().unwrap();
+        if c.cap == 0 {
+            return;
+        }
+        if c.map.insert(key, bytes).is_none() {
+            c.order.push_back(key);
+        }
+        while c.map.len() > c.cap {
+            let Some(old) = c.order.pop_front() else { break };
+            c.map.remove(&old);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) counters — observability for the chaos suite.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Connect to a server, perform the Hello/HelloAck handshake and
 /// return the stream ready for [`serve_conn`]. `timeout` bounds the
-/// handshake only; the serve loop then blocks indefinitely waiting
-/// for work (idle gaps between rounds are normal).
+/// handshake only; the serve loop installs its own read tick.
 pub fn connect(
     addr: &str,
     hello: &Hello,
@@ -74,101 +225,413 @@ pub fn connect(
         "server acked fingerprint {fp:#018x}, ours is {:#018x}",
         hello.fingerprint
     );
-    // the serve loop waits for work without a deadline
-    stream
-        .set_read_timeout(None)
-        .context("clearing handshake timeout")?;
     Ok(stream)
 }
 
-/// Serve one connection until the server shuts it down (Shutdown
-/// frame or a clean close between frames). Every decoded job runs on
-/// `executor`; outcomes stream back on the same connection.
+/// One queued unit of work: the decoded job plus its cache key.
+struct QueuedJob {
+    wire: WireJob,
+    key: CacheKey,
+}
+
+/// Queue + shutdown plumbing shared between the reader and the
+/// executor pool.
+struct ServeShared<'a> {
+    queue: Mutex<VecDeque<QueuedJob>>,
+    ready: Condvar,
+    stop: AtomicBool,
+    /// First executor failure; the reader surfaces it.
+    failure: Mutex<Option<anyhow::Error>>,
+    /// All outcome writes (executors + cached replies) serialize here.
+    writer: Mutex<&'a mut TcpStream>,
+}
+
+impl ServeShared<'_> {
+    fn halt(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        let mut f = self.failure.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+        drop(f);
+        self.halt();
+    }
+}
+
+/// Drop guard around each executor thread: a panicking executor halts
+/// the serve loop (so the reader stops answering heartbeats and the
+/// panic propagates at scope join) instead of leaving the connection
+/// "alive" with a job that will never complete.
+struct HaltOnPanic<'a, 'b>(&'a ServeShared<'b>);
+
+impl Drop for HaltOnPanic<'_, '_> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.halt();
+        }
+    }
+}
+
+/// Serve one connection until the server shuts it down (an explicit
+/// Shutdown frame → `Ok`), the connection drops (bare EOF → typed
+/// error, so callers reconnect), the idle deadline expires, or an
+/// executor fails. Decoded jobs run on `executor` across
+/// [`ServeOpts::exec_threads`] threads; outcomes stream back on the
+/// same connection as they finish (out of order is fine — v2 frames
+/// carry the demultiplexing `job_id`). `fingerprint` scopes the
+/// `cache` keys to this experiment config.
 pub fn serve_conn(
     stream: &mut TcpStream,
     executor: &dyn Transport,
     ctx: &WorkerCtx<'_>,
+    opts: &ServeOpts,
+    fingerprint: u64,
+    cache: &OutcomeCache,
 ) -> Result<()> {
+    let exec_threads = opts.exec_threads.max(1);
+    // probe-before-deadline invariant (mirror of accept_workers):
+    // the server must have been probed before we give up on it
+    ensure!(
+        opts.heartbeat.is_zero()
+            || opts.idle_deadline.is_zero()
+            || opts.heartbeat < opts.idle_deadline,
+        "heartbeat interval ({:?}) must be shorter than the idle \
+         deadline ({:?}), or zero to disable probing",
+        opts.heartbeat,
+        opts.idle_deadline
+    );
+    // the read tick must be short enough to run the heartbeat state
+    // machine; Liveness caps it so join latency stays bounded too
+    let live = Liveness::new(opts.heartbeat, opts.idle_deadline);
+    let mut reader_stream = stream
+        .try_clone()
+        .context("cloning the connection for the serve reader")?;
+    reader_stream
+        .set_read_timeout(Some(live.tick()))
+        .context("setting the serve read tick")?;
+    let shared = ServeShared {
+        queue: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+        stop: AtomicBool::new(false),
+        failure: Mutex::new(None),
+        writer: Mutex::new(stream),
+    };
+
+    let result = thread::scope(|s| -> Result<()> {
+        for _ in 0..exec_threads {
+            let shared = &shared;
+            s.spawn(move || {
+                // an executor that PANICS (rather than returning an
+                // error) must still unwedge the reader: otherwise the
+                // reader would keep acking the server's heartbeats
+                // forever while the job never completes — the server
+                // cannot tell a wedged worker from a slow one, so the
+                // worker has to take itself down
+                let _halt_on_panic = HaltOnPanic(shared);
+                executor_loop(shared, executor, ctx, cache);
+            });
+        }
+        let r = reader_loop(
+            &mut reader_stream,
+            &shared,
+            live,
+            ctx,
+            fingerprint,
+            cache,
+        );
+        // stop executors no matter how the reader exited; the scope
+        // joins them before the borrows end
+        shared.halt();
+        r
+    });
+    // an executor failure is the more actionable error
+    if let Some(e) = shared.failure.lock().unwrap().take() {
+        return Err(e);
+    }
+    result
+}
+
+/// The reader side of the serve loop: decode frames, answer
+/// heartbeats, serve cached outcomes, queue fresh jobs, and run the
+/// liveness deadline.
+fn reader_loop(
+    stream: &mut TcpStream,
+    shared: &ServeShared<'_>,
+    mut live: Liveness,
+    ctx: &WorkerCtx<'_>,
+    fingerprint: u64,
+    cache: &OutcomeCache,
+) -> Result<()> {
+    let mut fr = FrameReader::new();
+    let mut hb_body = Vec::new();
+    let mut nonce = 0u64;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            // an executor failed; its error is surfaced by serve_conn
+            return Ok(());
+        }
+        let polled = match fr.poll(stream) {
+            Ok(p) => p,
+            Err(e) if e.is_clean_close() => {
+                // v2: orderly shutdown is an explicit Shutdown frame;
+                // a bare EOF is a dropped connection, which callers
+                // (the CLI reconnect loop, the chaos workers) answer
+                // by reconnecting with the outcome cache intact
+                return Err(e).context(
+                    "connection dropped without a Shutdown frame",
+                );
+            }
+            Err(e) => return Err(e).context("reading the next frame"),
+        };
+        // any stream progress (even a partial frame) proves liveness
+        live.on_progress(fr.bytes_consumed());
+        let Some(f) = polled else {
+            // idle tick: probe, then give up past the deadline
+            match live.on_idle(true) {
+                TickAction::Dead { idle_ms, deadline_ms } => {
+                    return Err(WireError::HeartbeatLost {
+                        idle_ms,
+                        deadline_ms,
+                    })
+                    .context("server went silent");
+                }
+                TickAction::Probe => {
+                    nonce = nonce.wrapping_add(1);
+                    codec::encode_heartbeat(nonce, &mut hb_body);
+                    let mut w = shared.writer.lock().unwrap();
+                    frame::write_frame(
+                        &mut **w,
+                        FrameKind::Heartbeat,
+                        &hb_body,
+                    )
+                    .context("probing the server")?;
+                }
+                TickAction::Idle => {}
+            }
+            continue;
+        };
+        match f.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Heartbeat => {
+                let n = codec::decode_heartbeat(&f.body)?;
+                codec::encode_heartbeat(n, &mut hb_body);
+                let mut w = shared.writer.lock().unwrap();
+                frame::write_frame(
+                    &mut **w,
+                    FrameKind::HeartbeatAck,
+                    &hb_body,
+                )
+                .context("acking a server heartbeat")?;
+            }
+            FrameKind::HeartbeatAck => {
+                // liveness already refreshed above
+                codec::decode_heartbeat(&f.body)?;
+            }
+            FrameKind::Job => {
+                let wire = codec::decode_job(&f.body)
+                    .context("decoding job frame")?;
+                validate_job(&wire, ctx)?;
+                let key: CacheKey = (
+                    fingerprint,
+                    wire.round,
+                    wire.client,
+                    wire.job_id,
+                    frame::crc32(&f.body),
+                );
+                if let Some(bytes) = cache.get(&key) {
+                    // re-dispatch after a drop (or a duplicated job):
+                    // reply with the cached bit-identical outcome
+                    let mut w = shared.writer.lock().unwrap();
+                    frame::write_frame(
+                        &mut **w,
+                        FrameKind::Outcome,
+                        &bytes,
+                    )
+                    .with_context(|| {
+                        format!(
+                            "returning cached outcome for client {}",
+                            wire.client
+                        )
+                    })?;
+                } else {
+                    let mut q = shared.queue.lock().unwrap();
+                    q.push_back(QueuedJob { wire, key });
+                    drop(q);
+                    shared.ready.notify_one();
+                }
+            }
+            k => bail!("unexpected {k:?} frame in the serve loop"),
+        }
+    }
+}
+
+/// Sanity-check a decoded job against the locally rebuilt world.
+fn validate_job(wire: &WireJob, ctx: &WorkerCtx<'_>) -> Result<()> {
+    let client = wire.client as usize;
+    ensure!(
+        client < ctx.shards.len(),
+        "job for client {client}, but this world has only {} \
+         clients — configs out of sync despite matching fingerprints?",
+        ctx.shards.len()
+    );
+    ensure!(
+        wire.n_k == ctx.shards[client].len() as u64,
+        "job for client {client} says n_k = {}, local shard has {} \
+         samples — worlds diverged",
+        wire.n_k,
+        ctx.shards[client].len()
+    );
+    Ok(())
+}
+
+/// One executor thread: drain the queue, run the local update, encode
+/// + cache + send the outcome.
+fn executor_loop(
+    shared: &ServeShared<'_>,
+    executor: &dyn Transport,
+    ctx: &WorkerCtx<'_>,
+    cache: &OutcomeCache,
+) {
     let mut buffers = WorkBuffers::with_kernel(ctx.kernel);
     let mut lut = DecodeLutCache::default();
     let mut w_start: Vec<f32> = Vec::new();
     let mut out_body = Vec::new();
     loop {
-        let f = match frame::read_frame(stream) {
-            Ok(f) => f,
-            Err(e) if e.is_clean_close() => return Ok(()),
-            Err(e) => {
-                return Err(e).context("reading next job frame")
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.ready.wait(q).unwrap();
             }
         };
-        match f.kind {
-            FrameKind::Shutdown => return Ok(()),
-            FrameKind::Job => {}
-            k => bail!("unexpected {k:?} frame in the serve loop"),
+        let Some(QueuedJob { wire, key }) = job else { return };
+        // ids survive the move of `wire` into run_one (error context)
+        let (client, round) = (wire.client, wire.round);
+        match run_one(
+            wire, executor, ctx, &mut buffers, &mut lut, &mut w_start,
+        ) {
+            Ok(out) => {
+                codec::encode_outcome(&out, &mut out_body);
+                cache.put(key, out_body.clone());
+                let mut w = shared.writer.lock().unwrap();
+                if let Err(e) = frame::write_frame(
+                    &mut **w,
+                    FrameKind::Outcome,
+                    &out_body,
+                ) {
+                    drop(w);
+                    shared.fail(anyhow::Error::from(e).context(
+                        format!(
+                            "returning outcome for client {client}"
+                        ),
+                    ));
+                    return;
+                }
+            }
+            Err(e) => {
+                shared.fail(e.context(format!(
+                    "executing client {client} round {round}"
+                )));
+                return;
+            }
         }
-        let wire = codec::decode_job(&f.body)
-            .context("decoding job frame")?;
-        let client = wire.client as usize;
-        let round = wire.round as usize;
-        ensure!(
-            client < ctx.shards.len(),
-            "job for client {client}, but this world has only {} \
-             clients — configs out of sync despite matching \
-             fingerprints?",
-            ctx.shards.len()
-        );
-        let shard = &ctx.shards[client];
-        ensure!(
-            wire.n_k == shard.len() as u64,
-            "job for client {client} says n_k = {}, local shard has \
-             {} samples — worlds diverged",
-            wire.n_k,
-            shard.len()
-        );
-        // hard reset: decode the broadcast exactly as the server did
-        // (decode is a pure LUT function of the payload bytes, so
-        // this w_start is bit-identical to the server's)
-        fp8codec::decode_into_pooled(
-            &wire.down,
-            ctx.segments,
-            &mut lut,
-            1,
-            &mut w_start,
-        );
-        let job = ClientJob {
-            round,
-            client,
-            seed: wire.seed,
-            qat: wire.qat,
-            lr: wire.lr,
-            weight_decay: wire.weight_decay,
-            flip_aug: wire.flip_aug,
-            comm: wire.comm,
-            w_start: &w_start,
-            alpha_start: &wire.down.alphas,
-            beta_start: &wire.down.betas,
-            train: ctx.train,
-            shard,
-            segments: ctx.segments,
-            n_k: wire.n_k,
-            ef: wire.ef,
-            down: &wire.down,
-        };
-        let out = executor.run_client(job, &mut buffers).with_context(
-            || format!("executing client {client} round {round}"),
-        )?;
-        let wire_out = WireOutcome {
-            round: round as u32,
-            client: client as u32,
-            n_k: out.uplink.n_k,
-            mean_loss: out.uplink.mean_loss,
-            payload: out.uplink.payload,
-            ef: out.ef,
-        };
-        codec::encode_outcome(&wire_out, &mut out_body);
-        frame::write_frame(stream, FrameKind::Outcome, &out_body)
-            .with_context(|| {
-                format!("returning outcome for client {client}")
-            })?;
+    }
+}
+
+/// Decode the broadcast and run one client job on the local executor.
+/// Takes the [`WireJob`] by value so the error-feedback residual is
+/// *moved* into the job, not cloned (a model-dimension Vec per job).
+fn run_one(
+    wire: WireJob,
+    executor: &dyn Transport,
+    ctx: &WorkerCtx<'_>,
+    buffers: &mut WorkBuffers,
+    lut: &mut DecodeLutCache,
+    w_start: &mut Vec<f32>,
+) -> Result<WireOutcome> {
+    let client = wire.client as usize;
+    let round = wire.round as usize;
+    // hard reset: decode the broadcast exactly as the server did
+    // (decode is a pure LUT function of the payload bytes, so this
+    // w_start is bit-identical to the server's)
+    fp8codec::decode_into_pooled(
+        &wire.down,
+        ctx.segments,
+        lut,
+        1,
+        w_start,
+    );
+    let job = ClientJob {
+        round,
+        client,
+        job_id: wire.job_id,
+        seed: wire.seed,
+        qat: wire.qat,
+        lr: wire.lr,
+        weight_decay: wire.weight_decay,
+        flip_aug: wire.flip_aug,
+        comm: wire.comm,
+        w_start,
+        alpha_start: &wire.down.alphas,
+        beta_start: &wire.down.betas,
+        train: ctx.train,
+        shard: &ctx.shards[client],
+        segments: ctx.segments,
+        n_k: wire.n_k,
+        ef: wire.ef,
+        down: &wire.down,
+    };
+    let out = executor.run_client(job, buffers)?;
+    Ok(WireOutcome {
+        round: wire.round,
+        client: wire.client,
+        job_id: wire.job_id,
+        n_k: out.uplink.n_k,
+        mean_loss: out.uplink.mean_loss,
+        payload: out.uplink.payload,
+        ef: out.ef,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_cache_is_lru_with_hit_stats() {
+        let c = OutcomeCache::new(2);
+        let k = |i: u32| (7u64, 0u32, i, i, 0u32);
+        c.put(k(1), vec![1]);
+        c.put(k(2), vec![2]);
+        assert_eq!(c.get(&k(1)), Some(vec![1])); // 1 now most recent
+        c.put(k(3), vec![3]); // evicts 2
+        assert_eq!(c.get(&k(2)), None);
+        assert_eq!(c.get(&k(1)), Some(vec![1]));
+        assert_eq!(c.get(&k(3)), Some(vec![3]));
+        assert_eq!(c.len(), 2);
+        let (hits, misses) = c.stats();
+        assert_eq!((hits, misses), (3, 1));
+        // re-putting an existing key must not duplicate its LRU slot
+        c.put(k(1), vec![9]);
+        c.put(k(4), vec![4]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&k(1)), Some(vec![9]));
+    }
+
+    #[test]
+    fn zero_capacity_cache_stores_nothing() {
+        let c = OutcomeCache::new(0);
+        c.put((0, 0, 0, 0, 0), vec![1]);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&(0, 0, 0, 0, 0)), None);
     }
 }

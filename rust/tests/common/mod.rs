@@ -230,11 +230,27 @@ impl Trace {
 
 /// Run the full mock experiment in-process and capture its trace.
 pub fn run_mock(parallelism: usize, error_feedback: bool) -> Trace {
-    let tag = format!("det_p{parallelism}_ef{error_feedback}");
+    run_mock_kernel(
+        parallelism,
+        error_feedback,
+        fedfp8::fp8::simd::KernelKind::Auto,
+    )
+}
+
+/// [`run_mock`] with an explicit `--fp8-kernel` choice — the knob is
+/// a pure wall-clock lever, so every kernel must produce the same
+/// bit-exact trace (the metric-fingerprint smoke test).
+pub fn run_mock_kernel(
+    parallelism: usize,
+    error_feedback: bool,
+    kernel: fedfp8::fp8::simd::KernelKind,
+) -> Trace {
+    let tag = format!("det_p{parallelism}_ef{error_feedback}_{kernel}");
     let (dir, manifest) = mock_manifest(&tag);
     let engine = Engine::new(&dir).unwrap();
     let transport = MockTransport::new(true);
-    let cfg = mock_cfg(parallelism, error_feedback);
+    let mut cfg = mock_cfg(parallelism, error_feedback);
+    cfg.fp8_kernel = kernel;
     let rounds = cfg.rounds;
     let mut server = Server::with_transport(
         &engine,

@@ -1,0 +1,782 @@
+//! Chaos suite for the v2 networked transport: adversarial fault
+//! schedules injected by a frame-aware TCP proxy, plus raw-socket
+//! stall/partition actors.
+//!
+//! The invariant every scenario enforces is the acceptance contract
+//! of the protocol upgrade: **any fault schedule that leaves the
+//! round completable must end with results bit-identical to the
+//! in-process transport** (weights, alphas, betas, losses, CommStats)
+//! — and any schedule that doesn't must end in a *typed* error naming
+//! the offending client, never a hang.
+//!
+//! Injected faults:
+//!
+//! * **mid-round disconnect** — the proxy swallows a Job frame and
+//!   kills both legs; the server must detect the dead connection,
+//!   re-dispatch the un-acked job to a surviving worker, and finish
+//!   the round bit-exactly (the killed worker then rejoins directly,
+//!   exercising the replacement acceptor).
+//! * **delayed frames** — every proxied frame is forwarded late; the
+//!   round completes bit-exactly (heartbeat probes must not
+//!   misclassify a slow link as a dead one).
+//! * **duplicated outcomes** — every Outcome frame is forwarded
+//!   twice; the server must ignore the duplicates (at-least-once
+//!   delivery) and count them.
+//! * **stalled (heartbeat-less) worker** — a raw socket that
+//!   handshakes, swallows its job, and never answers anything: the
+//!   heartbeat state machine must declare it dead and re-dispatch
+//!   (or, with no survivors, fail with the typed `HeartbeatLost`
+//!   naming the client).
+//! * **reconnect cache** — a worker whose connection drops after one
+//!   outcome must answer the re-sent job on a fresh connection with
+//!   byte-identical cached bytes and *zero* recomputation.
+//!
+//! The `soak_` test (ignored by default; nightly CI runs it with
+//! `--ignored`) loops kill/rejoin schedules for
+//! `FEDFP8_SOAK_SECS` (default 60) seconds of wall clock.
+
+mod common;
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use common::{mock_cfg, mock_manifest, run_mock, MockTransport, Trace};
+use fedfp8::config::ExperimentConfig;
+use fedfp8::coordinator::transport::{
+    ClientJob, ClientOutcome, Transport, WorkBuffers,
+};
+use fedfp8::coordinator::{build_world, Server};
+use fedfp8::fp8::codec as fp8codec;
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::net::frame::FrameKind;
+use fedfp8::net::worker::WorkerCtx;
+use fedfp8::net::{
+    self, codec, frame, Hello, OutcomeCache, ServeOpts, SocketCfg,
+    WireJob,
+};
+use fedfp8::runtime::Engine;
+
+fn hello_for(cfg: &ExperimentConfig) -> Hello {
+    Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: common::DIM as u64,
+        model: "mock".into(),
+    }
+}
+
+/// One worker's link personality.
+#[derive(Clone, Copy, Debug)]
+enum Fault {
+    /// Plain connection, no proxy.
+    Direct,
+    /// Forward every frame `ms` late (both directions).
+    Delay(u64),
+    /// Forward every Outcome frame twice.
+    DuplicateOutcomes,
+    /// Swallow the `n`-th Job frame and kill both legs — a mid-round
+    /// disconnect with a job un-acked on the wire.
+    CutAtJob(usize),
+}
+
+/// Frame-aware one-connection proxy. Listens on an ephemeral port;
+/// the first (only) inbound connection is bridged to `upstream` with
+/// `fault` applied. Pumps exit when either leg dies.
+fn spawn_proxy<'s>(
+    s: &'s thread::Scope<'s, '_>,
+    upstream: String,
+    fault: Fault,
+) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    s.spawn(move || {
+        let Ok((down_in, _)) = listener.accept() else { return };
+        let Ok(up_out) = TcpStream::connect(&upstream) else { return };
+        // clones so each pump can kill BOTH legs on a cut
+        let w2s = (
+            down_in.try_clone().unwrap(),
+            up_out.try_clone().unwrap(),
+        );
+        let s2w = (up_out, down_in);
+        let jobs_seen = AtomicUsize::new(0);
+        thread::scope(|ps| {
+            let jobs = &jobs_seen;
+            // worker -> server leg
+            ps.spawn(move || {
+                let (mut from, mut to) = w2s;
+                loop {
+                    let f = match frame::read_frame(&mut from) {
+                        Ok(f) => f,
+                        Err(_) => break,
+                    };
+                    if let Fault::Delay(ms) = fault {
+                        thread::sleep(Duration::from_millis(ms));
+                    }
+                    if frame::write_frame(&mut to, f.kind, &f.body)
+                        .is_err()
+                    {
+                        break;
+                    }
+                    if matches!(fault, Fault::DuplicateOutcomes)
+                        && f.kind == FrameKind::Outcome
+                        && frame::write_frame(&mut to, f.kind, &f.body)
+                            .is_err()
+                    {
+                        break;
+                    }
+                }
+                let _ = from.shutdown(Shutdown::Both);
+                let _ = to.shutdown(Shutdown::Both);
+            });
+            // server -> worker leg
+            ps.spawn(move || {
+                let (mut from, mut to) = s2w;
+                loop {
+                    let f = match frame::read_frame(&mut from) {
+                        Ok(f) => f,
+                        Err(_) => break,
+                    };
+                    if f.kind == FrameKind::Job {
+                        let n =
+                            jobs.fetch_add(1, Ordering::SeqCst) + 1;
+                        if matches!(fault, Fault::CutAtJob(cut)
+                                    if cut == n)
+                        {
+                            // swallow the job and drop the link:
+                            // the server holds an un-acked dispatch
+                            break;
+                        }
+                    }
+                    if let Fault::Delay(ms) = fault {
+                        thread::sleep(Duration::from_millis(ms));
+                    }
+                    if frame::write_frame(&mut to, f.kind, &f.body)
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                let _ = from.shutdown(Shutdown::Both);
+                let _ = to.shutdown(Shutdown::Both);
+            });
+        });
+    });
+    addr
+}
+
+struct ChaosStats {
+    requeues: u64,
+    duplicates: u64,
+    live_at_end: usize,
+}
+
+/// Run the full mock experiment over sockets with one personality per
+/// worker; workers whose connection dies reconnect DIRECTLY to the
+/// server (the replacement-acceptor path) with their outcome cache
+/// intact.
+fn run_chaos(
+    tag: &str,
+    parallelism: usize,
+    inflight: usize,
+    faults: &[Fault],
+    hb_ms: u64,
+    io_ms: u64,
+) -> (Trace, ChaosStats) {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let cfg = mock_cfg(parallelism, false);
+    let model = manifest.model("mock").unwrap();
+    let world = build_world(&cfg, model).unwrap();
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server_addr = listener.local_addr().unwrap().to_string();
+    let exec = MockTransport::new(true);
+    let rounds = cfg.rounds;
+    let fingerprint = cfg.fingerprint();
+    let opts = ServeOpts {
+        heartbeat: Duration::from_millis(hb_ms),
+        idle_deadline: Duration::ZERO, // workers never give up here
+        exec_threads: inflight,
+    };
+    let ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        kernel: cfg.fp8_kernel,
+    };
+    thread::scope(|s| {
+        for (w, fault) in faults.iter().enumerate() {
+            let first_addr = match fault {
+                Fault::Direct => server_addr.clone(),
+                f => spawn_proxy(s, server_addr.clone(), *f),
+            };
+            let (server_addr, hello, exec, ctx, opts) =
+                (&server_addr, &hello, &exec, &ctx, &opts);
+            s.spawn(move || {
+                let cache = OutcomeCache::new(64);
+                let mut target = first_addr;
+                for attempt in 0..4u32 {
+                    let Ok(mut stream) = net::connect(
+                        &target,
+                        hello,
+                        Duration::from_secs(10),
+                    ) else {
+                        // proxy already dead: rejoin directly
+                        target = server_addr.clone();
+                        continue;
+                    };
+                    match net::serve_conn(
+                        &mut stream,
+                        exec,
+                        ctx,
+                        opts,
+                        fingerprint,
+                        &cache,
+                    ) {
+                        Ok(()) => return, // orderly shutdown
+                        Err(e) => {
+                            // dropped link: rejoin as a replacement
+                            // worker, cache intact
+                            eprintln!(
+                                "[chaos worker {w} attempt \
+                                 {attempt}] serve ended: {e:#}"
+                            );
+                            target = server_addr.clone();
+                        }
+                    }
+                }
+            });
+        }
+        let transport = net::accept_workers(
+            listener,
+            faults.len(),
+            &hello,
+            SocketCfg {
+                io_timeout: Duration::from_millis(io_ms),
+                heartbeat: Duration::from_millis(hb_ms),
+                inflight,
+            },
+        )
+        .expect("server handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        let stats = ChaosStats {
+            requeues: transport.requeues(),
+            duplicates: transport.duplicate_outcomes(),
+            live_at_end: transport.live_workers(),
+        };
+        drop(server);
+        transport.shutdown();
+        (trace, stats)
+    })
+}
+
+#[test]
+fn mid_round_disconnect_requeues_and_stays_bit_identical() {
+    let base = run_mock(4, false);
+    // worker 0's proxy swallows its second job and dies mid-round;
+    // the un-acked job must be re-dispatched to a surviving worker
+    let (trace, stats) = run_chaos(
+        "cut",
+        4,
+        2,
+        &[Fault::CutAtJob(2), Fault::Direct, Fault::Direct],
+        500,
+        5_000,
+    );
+    assert_eq!(
+        trace, base,
+        "mid-round disconnect changed the trajectory"
+    );
+    assert!(
+        stats.requeues >= 1,
+        "the swallowed job was never re-dispatched"
+    );
+}
+
+#[test]
+fn delayed_frames_complete_bit_identical() {
+    let base = run_mock(4, false);
+    let (trace, stats) = run_chaos(
+        "delay",
+        4,
+        2,
+        &[Fault::Delay(60), Fault::Direct, Fault::Direct],
+        150,
+        8_000,
+    );
+    assert_eq!(trace, base, "a slow link changed the trajectory");
+    assert_eq!(
+        stats.requeues, 0,
+        "a merely-slow worker was misclassified as dead"
+    );
+}
+
+#[test]
+fn duplicated_outcomes_are_ignored_and_counted() {
+    let base = run_mock(4, false);
+    let (trace, stats) = run_chaos(
+        "dup",
+        4,
+        2,
+        &[Fault::DuplicateOutcomes, Fault::Direct],
+        500,
+        5_000,
+    );
+    assert_eq!(trace, base, "duplicate outcomes changed the trajectory");
+    assert!(
+        stats.duplicates >= 1,
+        "duplicated outcome frames were not detected"
+    );
+}
+
+#[test]
+fn multiplexed_window_survives_disconnect() {
+    // the acceptance-criteria shape: --net-inflight 4, one worker
+    // killed mid-round, byte-identical completion
+    let base = run_mock(4, false);
+    let (trace, stats) = run_chaos(
+        "cutwin",
+        4,
+        4,
+        &[Fault::CutAtJob(1), Fault::Direct],
+        500,
+        5_000,
+    );
+    assert_eq!(
+        trace, base,
+        "inflight-4 + worker kill changed the trajectory"
+    );
+    assert!(stats.requeues >= 1);
+    assert!(stats.live_at_end >= 1);
+}
+
+// ---- stalled (heartbeat-less) workers ------------------------------
+
+/// A raw actor that handshakes like a worker, then reads and ignores
+/// everything: never answers a job, never acks a probe.
+fn spawn_stalled_worker<'s>(
+    s: &'s thread::Scope<'s, '_>,
+    addr: &'s str,
+    hello: &'s Hello,
+    hold: Duration,
+) {
+    s.spawn(move || {
+        let Ok(stream) =
+            net::connect(addr, hello, Duration::from_secs(10))
+        else {
+            return;
+        };
+        let mut stream = stream;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        let deadline = Instant::now() + hold;
+        let mut fr = frame::FrameReader::new();
+        while Instant::now() < deadline {
+            // drain whatever arrives, answer nothing
+            match fr.poll(&mut stream) {
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+    });
+}
+
+#[test]
+fn stalled_worker_is_detected_and_work_requeued() {
+    let base = run_mock(4, false);
+    let (dir, manifest) = mock_manifest("stall");
+    let engine = Engine::new(&dir).unwrap();
+    let cfg = mock_cfg(4, false);
+    let model = manifest.model("mock").unwrap();
+    let world = build_world(&cfg, model).unwrap();
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let exec = MockTransport::new(true);
+    let rounds = cfg.rounds;
+    let fingerprint = cfg.fingerprint();
+    let opts = ServeOpts {
+        heartbeat: Duration::from_millis(150),
+        idle_deadline: Duration::ZERO,
+        exec_threads: 2,
+    };
+    let ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        kernel: cfg.fp8_kernel,
+    };
+    let trace = thread::scope(|s| {
+        // the stall: holds its socket open, answers nothing, long
+        // past the server's idle deadline
+        spawn_stalled_worker(s, &addr, &hello, Duration::from_secs(8));
+        for _ in 0..2 {
+            let (addr, hello, exec, ctx, opts) =
+                (&addr, &hello, &exec, &ctx, &opts);
+            s.spawn(move || {
+                let cache = OutcomeCache::new(64);
+                let mut stream = net::connect(
+                    addr,
+                    hello,
+                    Duration::from_secs(10),
+                )
+                .expect("healthy worker handshake");
+                let _ = net::serve_conn(
+                    &mut stream,
+                    exec,
+                    ctx,
+                    opts,
+                    fingerprint,
+                    &cache,
+                );
+            });
+        }
+        let transport = net::accept_workers(
+            listener,
+            3,
+            &hello,
+            SocketCfg {
+                io_timeout: Duration::from_millis(700),
+                heartbeat: Duration::from_millis(150),
+                inflight: 2,
+            },
+        )
+        .expect("server handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        // heartbeat loss must have evicted the stalled connection
+        assert!(
+            transport.live_workers() <= 2,
+            "stalled worker still counted live"
+        );
+        drop(server);
+        transport.shutdown();
+        trace
+    });
+    assert_eq!(trace, base, "a stalled worker changed the trajectory");
+}
+
+#[test]
+fn lone_stalled_worker_fails_typed_with_client_named() {
+    let (dir, manifest) = mock_manifest("stall1");
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(1, false);
+    cfg.clients = 1;
+    cfg.participation = 1;
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let msg = thread::scope(|s| {
+        spawn_stalled_worker(s, &addr, &hello, Duration::from_secs(4));
+        let transport = net::accept_workers(
+            listener,
+            1,
+            &hello,
+            SocketCfg {
+                io_timeout: Duration::from_millis(500),
+                heartbeat: Duration::from_millis(100),
+                inflight: 2,
+            },
+        )
+        .expect("handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let err = server.round(0).unwrap_err();
+        let msg = format!("{err:?}");
+        drop(server);
+        transport.shutdown();
+        msg
+    });
+    assert!(msg.contains("client 0"), "missing client id: {msg}");
+    assert!(
+        msg.contains("heartbeat lost") && msg.contains("timed out"),
+        "not a typed heartbeat-loss error: {msg}"
+    );
+}
+
+// ---- worker-side partition detection -------------------------------
+
+#[test]
+fn worker_detects_a_silent_server_partition() {
+    let (_dir, manifest) = mock_manifest("wpart");
+    let cfg = mock_cfg(1, false);
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let model = manifest.model("mock").unwrap();
+    let world = build_world(&cfg, model).unwrap();
+    let exec = MockTransport::new(false);
+    let ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        kernel: cfg.fp8_kernel,
+    };
+    let err = thread::scope(|s| {
+        // a "server" that handshakes then goes completely silent
+        s.spawn(|| {
+            let Ok((mut conn, _)) = listener.accept() else { return };
+            let f = frame::read_frame(&mut conn).expect("hello");
+            assert_eq!(f.kind, FrameKind::Hello);
+            let mut ack = Vec::new();
+            codec::encode_hello_ack(hello.fingerprint, &mut ack);
+            frame::write_frame(&mut conn, FrameKind::HelloAck, &ack)
+                .unwrap();
+            // hold the socket open, say nothing
+            thread::sleep(Duration::from_millis(1500));
+        });
+        let mut stream = net::connect(
+            &addr,
+            &hello,
+            Duration::from_secs(5),
+        )
+        .expect("handshake");
+        let cache = OutcomeCache::new(4);
+        let opts = ServeOpts {
+            heartbeat: Duration::from_millis(80),
+            idle_deadline: Duration::from_millis(400),
+            exec_threads: 1,
+        };
+        net::serve_conn(
+            &mut stream,
+            &exec,
+            &ctx,
+            &opts,
+            cfg.fingerprint(),
+            &cache,
+        )
+        .unwrap_err()
+    });
+    let msg = format!("{err:?}");
+    assert!(
+        msg.contains("heartbeat lost") && msg.contains("silent"),
+        "worker did not detect the partition: {msg}"
+    );
+}
+
+// ---- reconnect cache ----------------------------------------------
+
+/// Executor that counts real local-update executions, so the cache
+/// test can prove a re-dispatched job was NOT recomputed.
+struct CountingExec {
+    inner: MockTransport,
+    runs: AtomicUsize,
+}
+
+impl Transport for CountingExec {
+    fn run_client(
+        &self,
+        job: ClientJob<'_>,
+        buffers: &mut WorkBuffers,
+    ) -> anyhow::Result<ClientOutcome> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        self.inner.run_client(job, buffers)
+    }
+}
+
+#[test]
+fn reconnect_serves_cached_bit_identical_outcome() {
+    let (_dir, manifest) = mock_manifest("rcache");
+    let cfg = mock_cfg(1, false);
+    let model = manifest.model("mock").unwrap();
+    let world = build_world(&cfg, model).unwrap();
+    let hello = hello_for(&cfg);
+    let fingerprint = cfg.fingerprint();
+    // a real broadcast payload for client 0's job
+    let w = manifest.load_init(model, "w").unwrap();
+    let alpha = manifest.load_init(model, "alpha").unwrap();
+    let beta = manifest.load_init(model, "beta").unwrap();
+    let mut rng = Pcg32::new(cfg.seed, 0x7E57);
+    let down = fp8codec::encode(
+        &w,
+        &alpha,
+        &beta,
+        &model.segments,
+        cfg.comm,
+        &mut rng,
+    );
+    let job = WireJob {
+        round: 0,
+        client: 0,
+        job_id: 0,
+        seed: cfg.seed,
+        qat: cfg.qat,
+        comm: cfg.comm,
+        flip_aug: cfg.flip_aug,
+        lr: cfg.lr,
+        weight_decay: cfg.weight_decay,
+        n_k: world.shards[0].len() as u64,
+        down,
+        ef: None,
+    };
+    let mut job_body = Vec::new();
+    codec::encode_job(&job, &mut job_body);
+
+    let exec = CountingExec {
+        inner: MockTransport::new(false),
+        runs: AtomicUsize::new(0),
+    };
+    let ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        kernel: cfg.fp8_kernel,
+    };
+    let cache = OutcomeCache::new(8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let (out1, out2) = thread::scope(|s| {
+        let (hello_ref, exec_ref, ctx_ref, cache_ref) =
+            (&hello, &exec, &ctx, &cache);
+        let addr_ref = &addr;
+        s.spawn(move || {
+            let opts = ServeOpts {
+                heartbeat: Duration::ZERO,
+                idle_deadline: Duration::ZERO,
+                exec_threads: 1,
+            };
+            // serve two consecutive connections with ONE cache: the
+            // first is dropped by the "server", the second replays
+            // the identical job
+            for attempt in 0..2 {
+                let mut stream = net::connect(
+                    addr_ref,
+                    hello_ref,
+                    Duration::from_secs(10),
+                )
+                .expect("worker handshake");
+                let r = net::serve_conn(
+                    &mut stream,
+                    exec_ref,
+                    ctx_ref,
+                    &opts,
+                    fingerprint,
+                    cache_ref,
+                );
+                if attempt == 1 {
+                    r.expect("second serve should end cleanly");
+                }
+            }
+        });
+        // fake server: two sequential accept/handshake/job dialogs
+        let dialog = |shutdown_after: bool| -> Vec<u8> {
+            let (mut conn, _) = listener.accept().unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(10)))
+                .unwrap();
+            let f = frame::read_frame(&mut conn).unwrap();
+            assert_eq!(f.kind, FrameKind::Hello);
+            let h = codec::decode_hello(&f.body).unwrap();
+            assert_eq!(h.fingerprint, fingerprint);
+            let mut ack = Vec::new();
+            codec::encode_hello_ack(fingerprint, &mut ack);
+            frame::write_frame(&mut conn, FrameKind::HelloAck, &ack)
+                .unwrap();
+            frame::write_frame(&mut conn, FrameKind::Job, &job_body)
+                .unwrap();
+            let f = frame::read_frame(&mut conn).unwrap();
+            assert_eq!(f.kind, FrameKind::Outcome);
+            if shutdown_after {
+                frame::write_frame(&mut conn, FrameKind::Shutdown, &[])
+                    .unwrap();
+            } else {
+                // abrupt drop: the worker must reconnect
+                conn.shutdown(Shutdown::Both).ok();
+            }
+            f.body
+        };
+        let out1 = dialog(false);
+        let out2 = dialog(true);
+        (out1, out2)
+    });
+
+    assert_eq!(
+        out1, out2,
+        "cached outcome bytes differ from the original"
+    );
+    assert_eq!(
+        exec.runs.load(Ordering::SeqCst),
+        1,
+        "re-dispatched job was recomputed instead of served from cache"
+    );
+    let (hits, _) = cache.stats();
+    assert_eq!(hits, 1, "outcome cache never hit");
+    // and the decoded outcome really is the job's answer
+    let out = codec::decode_outcome(&out1).unwrap();
+    assert_eq!((out.round, out.client, out.job_id), (0, 0, 0));
+    assert_eq!(out.n_k, job.n_k);
+}
+
+// ---- soak (nightly) ------------------------------------------------
+
+/// 60-second (configurable) kill/rejoin soak: repeated multi-worker
+/// loopback experiments with a forced mid-round kill at a rotating
+/// position, every iteration checked bit-identical to in-process.
+/// Heavy for per-PR CI, so `#[ignore]`d; the nightly workflow runs
+/// `cargo test --release --test net_chaos -- --ignored soak_`.
+#[test]
+#[ignore = "nightly soak — run with --ignored (FEDFP8_SOAK_SECS)"]
+fn soak_multi_worker_forced_kills() {
+    let secs: u64 = std::env::var("FEDFP8_SOAK_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    let base = run_mock(4, false);
+    let mut iters = 0u64;
+    let mut requeues = 0u64;
+    while Instant::now() < deadline {
+        let cut = (iters as usize % 3) + 1;
+        let window = [1usize, 2, 4][iters as usize % 3];
+        let (trace, stats) = run_chaos(
+            &format!("soak{iters}"),
+            4,
+            window,
+            &[Fault::CutAtJob(cut), Fault::Direct, Fault::Direct],
+            250,
+            5_000,
+        );
+        assert_eq!(
+            trace, base,
+            "soak iteration {iters} (cut={cut}, window={window}) \
+             diverged"
+        );
+        requeues += stats.requeues;
+        iters += 1;
+    }
+    println!(
+        "soak: {iters} iterations, {requeues} re-dispatches, all \
+         bit-identical"
+    );
+    assert!(iters >= 1, "soak never completed an iteration");
+    // sanity: the schedule actually exercised the failover path
+    assert!(requeues >= iters, "kills did not force re-dispatches");
+}

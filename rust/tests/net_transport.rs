@@ -4,20 +4,26 @@
 //! `SocketTransport` against worker serve loops on `127.0.0.1` must
 //! be *bit-identical* to the same experiment on `InProcessTransport`:
 //! final weights, per-segment alphas, betas, per-round losses and
-//! CommStats, at parallelism 1 and 4 (and with an oversubscribed
-//! connection pool). The workers run the same deterministic mock
-//! executor (`tests/common/mod.rs`) on a world they rebuild from
-//! their own copy of the config — exactly the production worker flow.
+//! CommStats, at parallelism 1 and 4, with an oversubscribed
+//! connection pool, and — new in v2 — with a multi-job in-flight
+//! window per connection (`--net-inflight`), where outcomes return
+//! out of order and are demultiplexed by `job_id`. The workers run
+//! the same deterministic mock executor (`tests/common/mod.rs`) on a
+//! world they rebuild from their own copy of the config — exactly the
+//! production worker flow.
 //!
 //! **Accounting** — with error feedback off, the bytes the transport
 //! physically moved must equal the bytes `CommStats` reported
 //! (`reported == actual` is the point of charging real frame
-//! overheads in `coordinator/comm.rs`).
+//! overheads in `coordinator/comm.rs`; heartbeat frames are excluded
+//! from both sides of that identity by design).
 //!
 //! **Faults** — a truncated frame, wrong magic, version mismatch, a
 //! worker disconnect mid-round and a silent worker must each surface
-//! as a typed error naming the client id, never a hang (the server
-//! side always reads under a deadline).
+//! as a typed error naming the client id, never a hang (the reader
+//! threads always run an idle deadline). Deeper fault schedules —
+//! re-dispatch to surviving workers, duplicated outcomes, delayed
+//! frames, reconnect caching — live in `tests/net_chaos.rs`.
 
 mod common;
 
@@ -28,9 +34,9 @@ use std::time::Duration;
 use common::{mock_cfg, mock_manifest, run_mock, MockTransport, Trace};
 use fedfp8::config::ExperimentConfig;
 use fedfp8::coordinator::{build_world, Server};
-use fedfp8::net::worker::WorkerCtx;
-use fedfp8::net::{self, frame, Hello};
 use fedfp8::net::frame::FrameKind;
+use fedfp8::net::worker::WorkerCtx;
+use fedfp8::net::{self, frame, Hello, OutcomeCache, ServeOpts, SocketCfg};
 use fedfp8::runtime::Engine;
 
 fn hello_for(cfg: &ExperimentConfig) -> Hello {
@@ -41,14 +47,35 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
     }
 }
 
+/// Loopback tuning: long deadlines (nothing should ever hit them)
+/// and probing off on both sides, so a clean run carries zero
+/// heartbeat traffic to race the shutdown.
+fn quiet_cfg(inflight: usize) -> (SocketCfg, ServeOpts) {
+    (
+        SocketCfg {
+            io_timeout: Duration::from_secs(20),
+            heartbeat: Duration::ZERO,
+            inflight,
+        },
+        ServeOpts {
+            heartbeat: Duration::ZERO,
+            idle_deadline: Duration::ZERO,
+            exec_threads: inflight,
+        },
+    )
+}
+
 /// Run the full mock experiment through `SocketTransport` against
 /// `workers` in-thread serve loops; returns the bit-exact trace.
 fn run_socket(
     parallelism: usize,
     workers: usize,
+    inflight: usize,
     error_feedback: bool,
 ) -> Trace {
-    let tag = format!("net_p{parallelism}_w{workers}_ef{error_feedback}");
+    let tag = format!(
+        "net_p{parallelism}_w{workers}_i{inflight}_ef{error_feedback}"
+    );
     let (dir, manifest) = mock_manifest(&tag);
     let engine = Engine::new(&dir).unwrap();
     let cfg = mock_cfg(parallelism, error_feedback);
@@ -59,6 +86,8 @@ fn run_socket(
     let addr = listener.local_addr().unwrap().to_string();
     let exec = MockTransport::new(true);
     let rounds = cfg.rounds;
+    let fingerprint = cfg.fingerprint();
+    let (socket_cfg, opts) = quiet_cfg(inflight);
     let ctx = WorkerCtx {
         train: &world.train,
         shards: &world.shards,
@@ -67,23 +96,32 @@ fn run_socket(
     };
     thread::scope(|s| {
         for _ in 0..workers {
-            let (addr, hello, exec, ctx) = (&addr, &hello, &exec, &ctx);
+            let (addr, hello, exec, ctx, opts) =
+                (&addr, &hello, &exec, &ctx, &opts);
             s.spawn(move || {
+                let cache = OutcomeCache::new(64);
                 let mut stream = net::connect(
                     addr,
                     hello,
                     Duration::from_secs(20),
                 )
                 .expect("worker handshake");
-                net::serve_conn(&mut stream, exec, ctx)
-                    .expect("worker serve loop");
+                net::serve_conn(
+                    &mut stream,
+                    exec,
+                    ctx,
+                    opts,
+                    fingerprint,
+                    &cache,
+                )
+                .expect("worker serve loop");
             });
         }
         let transport = net::accept_workers(
-            &listener,
+            listener,
             workers,
             &hello,
-            Duration::from_secs(20),
+            socket_cfg,
         )
         .expect("server handshake");
         let mut server = Server::with_transport(
@@ -101,7 +139,8 @@ fn run_socket(
         if !error_feedback {
             // reported == actual: CommStats byte counts must equal
             // the frame bytes that physically crossed the sockets
-            // (EF residual blocks are the documented exclusion)
+            // (EF residual blocks are the documented exclusion, and
+            // no job was re-dispatched in a clean run)
             assert_eq!(
                 transport.bytes_sent(),
                 trace.comm.down_bytes,
@@ -113,6 +152,12 @@ fn run_socket(
                 "uplink accounting != actual outcome-frame bytes"
             );
         }
+        assert_eq!(transport.requeues(), 0, "clean run re-dispatched");
+        assert_eq!(
+            transport.duplicate_outcomes(),
+            0,
+            "clean run saw duplicate outcomes"
+        );
         drop(server);
         transport.shutdown();
         trace
@@ -122,10 +167,10 @@ fn run_socket(
 #[test]
 fn loopback_equals_in_process_at_parallelism_1_and_4() {
     let base1 = run_mock(1, false);
-    let net1 = run_socket(1, 1, false);
+    let net1 = run_socket(1, 1, 1, false);
     assert_eq!(net1, base1, "socket run diverged at parallelism 1");
     let base4 = run_mock(4, false);
-    let net4 = run_socket(4, 4, false);
+    let net4 = run_socket(4, 4, 1, false);
     assert_eq!(net4, base4, "socket run diverged at parallelism 4");
     // and parallelism itself is invisible either way
     assert_eq!(base1.w, base4.w);
@@ -137,19 +182,37 @@ fn loopback_is_deterministic_with_oversubscribed_pool() {
     // 4-way cohort fan-out over only 2 worker connections: checkout
     // contention changes scheduling, never results
     let base = run_mock(4, false);
-    let net = run_socket(4, 2, false);
+    let net = run_socket(4, 2, 1, false);
     assert_eq!(net, base, "oversubscribed pool changed results");
+}
+
+#[test]
+fn loopback_is_deterministic_with_multiplexed_window() {
+    // the v2 acceptance shape: the whole 4-wide cohort rides ONE
+    // connection with --net-inflight 4; outcomes return out of order
+    // (the mock sleeps later clients less) and the job_id demux +
+    // reorder buffer must still deliver bit-identical results
+    let base = run_mock(4, false);
+    let net = run_socket(4, 1, 4, false);
+    assert_eq!(net, base, "multiplexed window changed results");
+    // mixed shape: window 2 over 2 workers
+    let net = run_socket(4, 2, 2, false);
+    assert_eq!(net, base, "window-2 x 2-workers changed results");
 }
 
 #[test]
 fn loopback_round_trips_error_feedback_residuals() {
     // EF residuals ride the wire in both directions; the trajectory
-    // must still be bit-identical to the in-process run
+    // must still be bit-identical to the in-process run — including
+    // through a multiplexed window
     let base = run_mock(4, true);
-    let net = run_socket(4, 4, true);
+    let net = run_socket(4, 4, 1, true);
     assert_eq!(net.w, base.w);
     assert_eq!(net.alpha, base.alpha);
     assert_eq!(net.losses, base.losses);
+    assert_eq!(net.comm, base.comm);
+    let net = run_socket(4, 1, 4, true);
+    assert_eq!(net.w, base.w, "EF diverged through the window");
     assert_eq!(net.comm, base.comm);
 }
 
@@ -174,11 +237,12 @@ fn handshake_rejects_mismatched_config() {
             );
         });
         let err = net::accept_workers(
-            &listener,
+            listener,
             1,
             &server_hello,
-            Duration::from_secs(10),
+            SocketCfg::new(Duration::from_secs(10)),
         )
+        .map(|_| ())
         .unwrap_err();
         let msg = format!("{err:?}");
         assert!(
@@ -221,10 +285,16 @@ fn round_error_with_fake_worker(
             misbehave(&mut stream);
         });
         let transport = net::accept_workers(
-            &listener,
+            listener,
             1,
             hello,
-            timeout,
+            SocketCfg {
+                // probing off: these tests exercise the v1-style
+                // "silence while a job is pending" deadline
+                io_timeout: timeout,
+                heartbeat: Duration::ZERO,
+                inflight: 1,
+            },
         )
         .expect("handshake");
         let mut server = Server::with_transport(
@@ -235,7 +305,9 @@ fn round_error_with_fake_worker(
         )
         .unwrap();
         let err = server.round(0).unwrap_err();
-        format!("{err:?}")
+        let msg = format!("{err:?}");
+        transport.shutdown();
+        msg
     })
 }
 
@@ -296,6 +368,8 @@ fn wrong_magic_names_the_client() {
 
 #[test]
 fn version_mismatch_names_the_client() {
+    // a peer still speaking wire v1 (or any other version) must be a
+    // typed version error, not silent corruption
     let msg = round_error_with_fake_worker(
         "ver",
         Duration::from_secs(10),
@@ -303,7 +377,7 @@ fn version_mismatch_names_the_client() {
             let mut fake = Vec::new();
             frame::write_frame(&mut fake, FrameKind::Outcome, b"x")
                 .unwrap();
-            fake[4..6].copy_from_slice(&99u16.to_le_bytes());
+            fake[4..6].copy_from_slice(&1u16.to_le_bytes());
             use std::io::Write;
             stream.write_all(&fake).unwrap();
             stream.shutdown(std::net::Shutdown::Both).ok();
@@ -311,7 +385,7 @@ fn version_mismatch_names_the_client() {
     );
     assert!(msg.contains("client 0"), "missing client id: {msg}");
     assert!(
-        msg.contains("version mismatch") && msg.contains("v99"),
+        msg.contains("version mismatch") && msg.contains("v1"),
         "not a version error: {msg}"
     );
 }

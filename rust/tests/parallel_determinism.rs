@@ -17,9 +17,12 @@ mod common;
 
 use std::sync::atomic::Ordering;
 
-use common::{mock_cfg, mock_manifest, run_mock, MockTransport};
+use common::{
+    mock_cfg, mock_manifest, run_mock, run_mock_kernel, MockTransport,
+};
 use fedfp8::coordinator::transport::Transport;
 use fedfp8::coordinator::Server;
+use fedfp8::fp8::simd::KernelKind;
 use fedfp8::runtime::Engine;
 
 #[test]
@@ -49,6 +52,29 @@ fn parallelism_is_bit_invisible_with_error_feedback() {
     assert_eq!(t.alpha, base.alpha);
     assert_eq!(t.comm, base.comm);
     assert_eq!(t.losses, base.losses);
+}
+
+#[test]
+fn fp8_kernel_knob_changes_no_metric_fingerprints() {
+    // the smoke test behind wiring --fp8-kernel into the table1/
+    // table2/fig2 drivers: the knob may only move wall-clock, so a
+    // full experiment's bit-exact trace (weights, alphas, betas,
+    // losses, byte counts) must be identical for every kernel choice,
+    // sequential and parallel, with and without error feedback
+    let base = run_mock_kernel(2, false, KernelKind::Scalar);
+    for kernel in [KernelKind::Simd, KernelKind::Auto] {
+        let t = run_mock_kernel(2, false, kernel);
+        assert_eq!(
+            t, base,
+            "metric fingerprint moved under --fp8-kernel {kernel}"
+        );
+    }
+    let base_ef = run_mock_kernel(4, true, KernelKind::Scalar);
+    let t = run_mock_kernel(4, true, KernelKind::Simd);
+    assert_eq!(
+        t, base_ef,
+        "EF metric fingerprint moved under --fp8-kernel simd"
+    );
 }
 
 #[test]

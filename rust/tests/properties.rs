@@ -612,6 +612,7 @@ fn prop_wire_messages_roundtrip_identity() {
         let job = WireJob {
             round: g.usize_in(0, 10_000) as u32,
             client: g.usize_in(0, 500) as u32,
+            job_id: g.usize_in(0, 1_000) as u32,
             seed: g.rng.next_u64(),
             qat: [QatMode::Det, QatMode::Rand, QatMode::None]
                 [g.rng.below(3)],
@@ -643,6 +644,7 @@ fn prop_wire_messages_roundtrip_identity() {
         let out = WireOutcome {
             round: job.round,
             client: job.client,
+            job_id: job.job_id,
             n_k: job.n_k,
             mean_loss: g.f32_in(-5.0, 5.0),
             payload,
@@ -653,6 +655,141 @@ fn prop_wire_messages_roundtrip_identity() {
             .map_err(|e| e.to_string())?;
         if back != out {
             return Err("outcome roundtrip not identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v2_interleaved_outcomes_reassemble_in_order() {
+    // v2 multiplexing model-check: a window of outcomes tagged with
+    // round-scoped job_ids is delivered in a randomized order, with
+    // heartbeat/ack frames interleaved and occasional duplicated
+    // outcome frames — exactly what a chaotic link hands the server's
+    // reader. Routing by job_id into a reorder buffer must (a) ignore
+    // the heartbeats, (b) drop duplicates as bit-identical repeats,
+    // and (c) reassemble the exact in-order sequence the aggregation
+    // stream expects.
+    use fedfp8::net::{codec as net_codec, frame, WireOutcome};
+    use std::collections::BTreeMap;
+
+    forall("wire-v2-interleavings", 47, 60, |g| {
+        let round = g.usize_in(0, 50) as u32;
+        let n = g.usize_in(1, 12);
+        let outcomes: Vec<WireOutcome> = (0..n)
+            .map(|pos| WireOutcome {
+                round,
+                client: g.usize_in(0, 500) as u32,
+                job_id: pos as u32,
+                n_k: g.usize_in(0, 100) as u64,
+                mean_loss: g.f32_in(-2.0, 2.0),
+                payload: codec::WirePayload {
+                    codes: (0..g.usize_in(0, 60))
+                        .map(|_| g.rng.next_u32() as u8)
+                        .collect(),
+                    raw: g.vec_f32(g.usize_in(0, 8), 1.0),
+                    alphas: g.vec_f32(g.usize_in(0, 3), 1.0),
+                    betas: vec![],
+                },
+                ef: None,
+            })
+            .collect();
+        // a random delivery order (Fisher-Yates on positions)
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = g.rng.below(i + 1);
+            order.swap(i, j);
+        }
+        // write the stream: shuffled outcomes + interleaved
+        // heartbeats + some duplicated outcome frames
+        let mut stream = Vec::new();
+        let mut body = Vec::new();
+        for &pos in &order {
+            if g.bool() {
+                net_codec::encode_heartbeat(
+                    g.rng.next_u64(),
+                    &mut body,
+                );
+                let kind = if g.bool() {
+                    frame::FrameKind::Heartbeat
+                } else {
+                    frame::FrameKind::HeartbeatAck
+                };
+                frame::write_frame(&mut stream, kind, &body)
+                    .map_err(|e| e.to_string())?;
+            }
+            net_codec::encode_outcome(&outcomes[pos], &mut body);
+            frame::write_frame(
+                &mut stream,
+                frame::FrameKind::Outcome,
+                &body,
+            )
+            .map_err(|e| e.to_string())?;
+            if g.usize_in(0, 3) == 0 {
+                // duplicate delivery of the same frame
+                frame::write_frame(
+                    &mut stream,
+                    frame::FrameKind::Outcome,
+                    &body,
+                )
+                .map_err(|e| e.to_string())?;
+            }
+        }
+        // reader side: route by job_id, ignore heartbeats, detect
+        // duplicates, reassemble in job_id (cohort) order
+        let mut reorder: BTreeMap<u32, WireOutcome> = BTreeMap::new();
+        let mut r = &stream[..];
+        loop {
+            let f = match frame::read_frame(&mut r) {
+                Ok(f) => f,
+                Err(e) if e.is_clean_close() => break,
+                Err(e) => return Err(e.to_string()),
+            };
+            match f.kind {
+                frame::FrameKind::Heartbeat
+                | frame::FrameKind::HeartbeatAck => {
+                    net_codec::decode_heartbeat(&f.body)
+                        .map_err(|e| e.to_string())?;
+                }
+                frame::FrameKind::Outcome => {
+                    let out = net_codec::decode_outcome(&f.body)
+                        .map_err(|e| e.to_string())?;
+                    if out.round != round {
+                        return Err("round id corrupted".into());
+                    }
+                    match reorder.get(&out.job_id) {
+                        Some(first) => {
+                            if *first != out {
+                                return Err(format!(
+                                    "duplicate of job {} not \
+                                     bit-identical",
+                                    out.job_id
+                                ));
+                            }
+                        }
+                        None => {
+                            reorder.insert(out.job_id, out);
+                        }
+                    }
+                }
+                k => return Err(format!("unexpected kind {k:?}")),
+            }
+        }
+        // the reorder buffer drains to the exact in-order cohort
+        if reorder.len() != n {
+            return Err(format!(
+                "{} of {n} outcomes reassembled",
+                reorder.len()
+            ));
+        }
+        for (pos, original) in outcomes.iter().enumerate() {
+            let got = &reorder[&(pos as u32)];
+            if got != original {
+                return Err(format!(
+                    "outcome at cohort position {pos} corrupted by \
+                     out-of-order delivery"
+                ));
+            }
         }
         Ok(())
     });

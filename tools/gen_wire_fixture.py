@@ -1,15 +1,17 @@
 #!/usr/bin/env python3
-"""Reference mirror of the fedfp8 wire format v1 + golden-fixture
-generator.
+"""Reference mirror of the fedfp8 wire format v2 + golden-fixture
+generator (plus the frozen v1 mirror for the version-skew fixture).
 
 The Rust implementation lives in ``rust/src/net/{frame,codec}.rs``;
 this script is the *independent second implementation* of the same
 byte-level spec, used to
 
-  1. generate ``rust/tests/fixtures/wire_v1.bin`` (the golden frames
-     that ``rust/tests/golden_wire.rs`` pins), and
+  1. generate ``rust/tests/fixtures/wire_v2.bin`` (the golden frames
+     that ``rust/tests/golden_wire.rs`` pins) and regenerate the
+     byte-identical ``wire_v1.bin`` (kept committed so the typed
+     version-mismatch behaviour stays pinned), and
   2. let ``python/tests/test_wire_fixture.py`` cross-check the
-     committed fixture against this mirror on every pytest run.
+     committed fixtures against this mirror on every pytest run.
 
 The build container for this repo has no Rust toolchain (see
 ``tools/bench_fp8_mirror.c`` for the same pattern on the kernel side),
@@ -17,14 +19,15 @@ so the golden bytes are produced here and *verified* by the Rust test
 suite in CI. If the two implementations ever disagree, the Rust
 golden test fails and prints the first divergent offset.
 
-Wire format v1 — all integers little-endian
+Wire format v2 — all integers little-endian
 -------------------------------------------
 
 Frame envelope (16 bytes), followed by ``body``::
 
     0   magic     4  = b"FP8W"
-    4   version   u16 = 1
-    6   kind      u8  (1=Hello 2=HelloAck 3=Job 4=Outcome 5=Shutdown)
+    4   version   u16 = 2
+    6   kind      u8  (1=Hello 2=HelloAck 3=Job 4=Outcome 5=Shutdown
+                       6=Heartbeat 7=HeartbeatAck)
     7   flags     u8  = 0 (reserved)
     8   body_len  u32
     12  crc32     u32 (IEEE CRC-32 of body)
@@ -39,7 +42,7 @@ Payload block (a packed ``WirePayload``)::
 
 Job body (kind=3)::
 
-    round u32, client u32, seed u64,
+    round u32, client u32, job_id u32, seed u64,
     qat u8 (0=det 1=rand 2=none),
     comm u8 (0=deterministic 1=stochastic 2=none),
     flip_aug u8, has_ef u8,
@@ -47,10 +50,14 @@ Job body (kind=3)::
     down: payload block,
     [ef_len u32, ef f32 x ef_len]   # iff has_ef
 
+``job_id`` is the round-scoped multiplexing tag (cohort position):
+one connection carries N in-flight jobs, outcomes return out of
+order, and the worker's reconnect cache is keyed on it.
+
 Outcome body (kind=4)::
 
-    round u32, client u32, n_k u64, mean_loss f32, has_ef u8,
-    payload block,
+    round u32, client u32, job_id u32, n_k u64, mean_loss f32,
+    has_ef u8, payload block,
     [ef_len u32, ef f32 x ef_len]   # iff has_ef
 
 Hello body (kind=1)::
@@ -58,15 +65,19 @@ Hello body (kind=1)::
     fingerprint u64, dim u64, model_len u16, model utf-8 bytes
 
 HelloAck body (kind=2): ``fingerprint u64``.  Shutdown (kind=5): empty.
+Heartbeat / HeartbeatAck bodies (kinds 6/7): ``nonce u64`` (the ack
+echoes the probe's nonce).
 
 Accounting identities (mirrored by ``coordinator/comm.rs``)::
 
-    job frame bytes     = payload.wire_bytes + 68   (no EF)
-    outcome frame bytes = payload.wire_bytes + 53   (no EF)
+    job frame bytes     = payload.wire_bytes + 72   (no EF)
+    outcome frame bytes = payload.wire_bytes + 57   (no EF)
 
 where ``wire_bytes = codes + 4*(raw + alphas + betas)`` and
-68 = 16 (envelope) + 36 (job meta) + 16 (payload section table),
-53 = 16 (envelope) + 21 (outcome meta) + 16 (section table).
+72 = 16 (envelope) + 40 (job meta) + 16 (payload section table),
+57 = 16 (envelope) + 25 (outcome meta) + 16 (section table).
+Heartbeat traffic is deliberately excluded from the CommStats
+identity (liveness overhead, not communication cost).
 """
 
 import json
@@ -76,13 +87,21 @@ import struct
 import zlib
 
 MAGIC = b"FP8W"
-VERSION = 1
-KIND_HELLO, KIND_HELLO_ACK, KIND_JOB, KIND_OUTCOME, KIND_SHUTDOWN = 1, 2, 3, 4, 5
+VERSION = 2
+(
+    KIND_HELLO,
+    KIND_HELLO_ACK,
+    KIND_JOB,
+    KIND_OUTCOME,
+    KIND_SHUTDOWN,
+    KIND_HEARTBEAT,
+    KIND_HEARTBEAT_ACK,
+) = 1, 2, 3, 4, 5, 6, 7
 
 FRAME_HEADER_BYTES = 16
 PAYLOAD_TABLE_BYTES = 16
-JOB_META_BYTES = 36
-OUTCOME_META_BYTES = 21
+JOB_META_BYTES = 40
+OUTCOME_META_BYTES = 25
 JOB_FRAME_OVERHEAD = FRAME_HEADER_BYTES + JOB_META_BYTES + PAYLOAD_TABLE_BYTES
 OUTCOME_FRAME_OVERHEAD = (
     FRAME_HEADER_BYTES + OUTCOME_META_BYTES + PAYLOAD_TABLE_BYTES
@@ -107,19 +126,20 @@ def wire_bytes(codes, raw, alphas, betas):
     return len(codes) + 4 * (len(raw) + len(alphas) + len(betas))
 
 
-def frame(kind, body):
+def frame(kind, body, version=VERSION):
     hdr = MAGIC + struct.pack(
-        "<HBBII", VERSION, kind, 0, len(body), zlib.crc32(body) & 0xFFFFFFFF
+        "<HBBII", version, kind, 0, len(body),
+        zlib.crc32(body) & 0xFFFFFFFF,
     )
     assert len(hdr) == FRAME_HEADER_BYTES
     return hdr + body
 
 
-def job_body(round_, client, seed, qat, comm, flip_aug, lr, wd, n_k,
-             down, ef=None):
+def job_body(round_, client, job_id, seed, qat, comm, flip_aug, lr, wd,
+             n_k, down, ef=None):
     body = struct.pack(
-        "<IIQBBBBffQ",
-        round_, client, seed, qat, comm,
+        "<IIIQBBBBffQ",
+        round_, client, job_id, seed, qat, comm,
         1 if flip_aug else 0, 0 if ef is None else 1, lr, wd, n_k,
     )
     assert len(body) == JOB_META_BYTES
@@ -129,11 +149,62 @@ def job_body(round_, client, seed, qat, comm, flip_aug, lr, wd, n_k,
     return body
 
 
-def outcome_body(round_, client, n_k, mean_loss, payload, ef=None):
+def outcome_body(round_, client, job_id, n_k, mean_loss, payload,
+                 ef=None):
     body = struct.pack(
-        "<IIQfB", round_, client, n_k, mean_loss, 0 if ef is None else 1
+        "<IIIQfB", round_, client, job_id, n_k, mean_loss,
+        0 if ef is None else 1,
     )
     assert len(body) == OUTCOME_META_BYTES
+    body += payload_block(*payload)
+    if ef is not None:
+        body += struct.pack("<I", len(ef)) + f32s(ef)
+    return body
+
+
+def heartbeat_body(nonce):
+    return struct.pack("<Q", nonce)
+
+
+# ---- frozen v1 mirror (version-skew fixture) -------------------------
+#
+# wire_v1.bin stays committed byte-for-byte: a v2 build must fail to
+# decode it with the *typed* VersionMismatch error (pinned by
+# rust/tests/golden_wire.rs). These v1 builders exist only so the
+# committed fixture can be regenerated / drift-checked; they must
+# never change again.
+
+V1_VERSION = 1
+V1_JOB_META_BYTES = 36
+V1_OUTCOME_META_BYTES = 21
+V1_JOB_FRAME_OVERHEAD = (
+    FRAME_HEADER_BYTES + V1_JOB_META_BYTES + PAYLOAD_TABLE_BYTES
+)
+V1_OUTCOME_FRAME_OVERHEAD = (
+    FRAME_HEADER_BYTES + V1_OUTCOME_META_BYTES + PAYLOAD_TABLE_BYTES
+)
+
+
+def job_body_v1(round_, client, seed, qat, comm, flip_aug, lr, wd, n_k,
+                down, ef=None):
+    body = struct.pack(
+        "<IIQBBBBffQ",
+        round_, client, seed, qat, comm,
+        1 if flip_aug else 0, 0 if ef is None else 1, lr, wd, n_k,
+    )
+    assert len(body) == V1_JOB_META_BYTES
+    body += payload_block(*down)
+    if ef is not None:
+        body += struct.pack("<I", len(ef)) + f32s(ef)
+    return body
+
+
+def outcome_body_v1(round_, client, n_k, mean_loss, payload, ef=None):
+    body = struct.pack(
+        "<IIQfB", round_, client, n_k, mean_loss,
+        0 if ef is None else 1,
+    )
+    assert len(body) == V1_OUTCOME_META_BYTES
     body += payload_block(*payload)
     if ef is not None:
         body += struct.pack("<I", len(ef)) + f32s(ef)
@@ -305,50 +376,90 @@ def fp8_edge_fixture():
 
 CANON_DOWN = (range(16), [1.0, -2.5, 0.375], [1.0, 0.5], [2.0])
 CANON_UP = ([0xFF, 0x80, 0x07], [], [1.5], [])
+CANON_JOB_ID = 2
+CANON_NONCE = 0x0000BEA7_0000BEA7
 
 
 def golden_frames():
+    """The v2 golden stream: Job, Outcome, Heartbeat, HeartbeatAck."""
     job = frame(
         KIND_JOB,
         job_body(
-            round_=3, client=5, seed=0x00C0FFEE, qat=0, comm=1,
-            flip_aug=True, lr=0.125, wd=0.0009765625, n_k=100,
-            down=CANON_DOWN, ef=None,
+            round_=3, client=5, job_id=CANON_JOB_ID, seed=0x00C0FFEE,
+            qat=0, comm=1, flip_aug=True, lr=0.125, wd=0.0009765625,
+            n_k=100, down=CANON_DOWN, ef=None,
         ),
     )
     outcome = frame(
         KIND_OUTCOME,
         outcome_body(
+            round_=3, client=5, job_id=CANON_JOB_ID, n_k=100,
+            mean_loss=0.75, payload=CANON_UP, ef=[0.5, -0.25],
+        ),
+    )
+    heartbeat = frame(KIND_HEARTBEAT, heartbeat_body(CANON_NONCE))
+    heartbeat_ack = frame(
+        KIND_HEARTBEAT_ACK, heartbeat_body(CANON_NONCE)
+    )
+    return job, outcome, heartbeat, heartbeat_ack
+
+
+def golden_frames_v1():
+    """The frozen v1 stream (must reproduce the committed wire_v1.bin
+    byte-for-byte, forever)."""
+    job = frame(
+        KIND_JOB,
+        job_body_v1(
+            round_=3, client=5, seed=0x00C0FFEE, qat=0, comm=1,
+            flip_aug=True, lr=0.125, wd=0.0009765625, n_k=100,
+            down=CANON_DOWN, ef=None,
+        ),
+        version=V1_VERSION,
+    )
+    outcome = frame(
+        KIND_OUTCOME,
+        outcome_body_v1(
             round_=3, client=5, n_k=100, mean_loss=0.75,
             payload=CANON_UP, ef=[0.5, -0.25],
         ),
+        version=V1_VERSION,
     )
     return job, outcome
 
 
 def main():
-    job, outcome = golden_frames()
+    fixtures = os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "fixtures"
+    )
+    os.makedirs(fixtures, exist_ok=True)
+
+    job, outcome, heartbeat, heartbeat_ack = golden_frames()
     # overhead identities the Rust accounting constants rely on
     assert len(job) == wire_bytes(*CANON_DOWN) + JOB_FRAME_OVERHEAD
     assert (
         len(outcome)
         == wire_bytes(*CANON_UP) + OUTCOME_FRAME_OVERHEAD + 4 + 4 * 2
     )
-    out = os.path.join(
-        os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
-        "wire_v1.bin",
-    )
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+    assert len(heartbeat) == FRAME_HEADER_BYTES + 8
+    out = os.path.join(fixtures, "wire_v2.bin")
+    stream = job + outcome + heartbeat + heartbeat_ack
     with open(out, "wb") as f:
-        f.write(job + outcome)
-    print(f"wrote {out}: job frame {len(job)} B + outcome frame "
-          f"{len(outcome)} B = {len(job) + len(outcome)} B")
-    print("job     :", job.hex())
-    print("outcome :", outcome.hex())
+        f.write(stream)
+    print(f"wrote {out}: job {len(job)} B + outcome {len(outcome)} B "
+          f"+ 2 heartbeat frames = {len(stream)} B")
+    print("job      :", job.hex())
+    print("outcome  :", outcome.hex())
+    print("heartbeat:", heartbeat.hex())
+
+    job1, outcome1 = golden_frames_v1()
+    assert len(job1) == wire_bytes(*CANON_DOWN) + V1_JOB_FRAME_OVERHEAD
+    out = os.path.join(fixtures, "wire_v1.bin")
+    with open(out, "wb") as f:
+        f.write(job1 + outcome1)
+    print(f"wrote {out}: {len(job1) + len(outcome1)} B (frozen v1)")
+
     edges = fp8_edge_fixture()
-    out = os.path.join(
-        os.path.dirname(out), "fp8_edges_v1.json"
-    )
+    out = os.path.join(fixtures, "fp8_edges_v1.json")
     with open(out, "w") as f:
         json.dump(edges, f, separators=(",", ":"))
         f.write("\n")
