@@ -1,0 +1,267 @@
+//! Round-aggregation scale benchmarks: flat vs tree fan-in, and the
+//! million-client round machinery (sparse cohort sampling, virtualized
+//! shard maps), seeding `BENCH_agg_tree.json`.
+//!
+//! Run: `cargo bench --bench round_agg` — measures flat-vs-tree
+//! aggregation at cohort sizes {10^2, 10^4, 10^6} and the K=10^6
+//! population paths, then writes `../BENCH_agg_tree.json` (repo
+//! root). CI smoke: `cargo bench --bench round_agg -- --quick` drops
+//! the 10^6 cohort arm and skips the JSON write.
+//!
+//! Arms:
+//! * agg: flat `FedAvgStream` over P uplinks vs a depth-2 tree
+//!   (`tree:16` shape) whose mid-tier partials travel through the
+//!   real wire codec — the tree's overhead is O(nodes) partial
+//!   frames, amortized to nothing as P grows.
+//! * sample: dense Fisher-Yates (O(K) scratch per draw) vs the sparse
+//!   sampler (O(P) scratch) drawing a 256-cohort from K=10^6.
+//! * world: dense `partition::iid` at K=10^6 (a million resident
+//!   Vecs) vs the virtualized shard map plus a full cohort's on-demand
+//!   shard materialization.
+
+use fedfp8::coordinator::aggregate::{FedAvgStream, Weighting};
+use fedfp8::coordinator::cohort::ClientShards;
+use fedfp8::coordinator::comm::{CommStats, Uplink};
+use fedfp8::coordinator::tree::{forward_partial, shard_bounds};
+use fedfp8::data::partition;
+use fedfp8::fp8::codec::{self, Rounding, Segment};
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::util::bench::{bench, header, BenchJson, BenchResult};
+
+const DIM: usize = 64;
+const NODES: usize = 16;
+
+fn segs() -> Vec<Segment> {
+    vec![Segment {
+        name: "w".into(),
+        offset: 0,
+        size: DIM,
+        quantized: true,
+        alpha_idx: Some(0),
+    }]
+}
+
+/// A small pool of distinct pre-encoded uplinks, cycled to form
+/// arbitrarily large cohorts without P-sized buffers (n_k = 1 each,
+/// so m_t = P).
+fn uplink_pool(segs: &[Segment], n: usize) -> Vec<Uplink> {
+    let mut rng = Pcg32::new(42, 7);
+    (0..n)
+        .map(|c| {
+            let w: Vec<f32> =
+                (0..DIM).map(|_| (rng.uniform() - 0.5) * 2.0).collect();
+            Uplink {
+                payload: codec::encode(
+                    &w,
+                    &[0.9 + 0.05 * c as f32],
+                    &[2.0],
+                    segs,
+                    Rounding::Stochastic,
+                    &mut rng,
+                ),
+                client: c,
+                n_k: 1,
+                mean_loss: 0.5 + 0.1 * c as f32,
+            }
+        })
+        .collect()
+}
+
+fn flat_round(
+    segs: &[Segment],
+    pool: &[Uplink],
+    p: usize,
+) -> f32 {
+    let w = Weighting::BySamples { m_t: p as u64 };
+    let mut s =
+        FedAvgStream::with_weighting(segs, DIM, 1, 1, w, false, 0)
+            .unwrap();
+    for i in 0..p {
+        s.push(&pool[i % pool.len()]);
+    }
+    s.finish().unwrap().mean_loss
+}
+
+fn tree_round(
+    segs: &[Segment],
+    pool: &[Uplink],
+    p: usize,
+    comm: &mut CommStats,
+) -> f32 {
+    let w = Weighting::BySamples { m_t: p as u64 };
+    let mut root =
+        FedAvgStream::with_weighting(segs, DIM, 1, 1, w, false, 0)
+            .unwrap();
+    for (lo, hi) in shard_bounds(p, NODES) {
+        let mut mid = FedAvgStream::with_weighting(
+            segs,
+            DIM,
+            1,
+            1,
+            w,
+            false,
+            lo as u64,
+        )
+        .unwrap();
+        for i in lo..hi {
+            mid.push(&pool[i % pool.len()]);
+        }
+        let partial =
+            forward_partial(0, &mid.into_partial().unwrap(), comm)
+                .unwrap();
+        root.absorb(&partial).unwrap();
+    }
+    root.finish().unwrap().mean_loss
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let segs = segs();
+    let pool = uplink_pool(&segs, 8);
+    let k_pop = 1_000_000usize;
+    let cohort = 256usize;
+
+    header();
+
+    // ---- flat vs tree fan-in across cohort scales -------------------
+    // the invariant suite proves the results bit-identical; this
+    // measures what the topology lever costs/buys in wall clock
+    let mut arms: Vec<(usize, BenchResult, BenchResult)> = Vec::new();
+    let cohorts: &[(usize, u64)] = if quick {
+        &[(100, 60), (10_000, 120)]
+    } else {
+        &[(100, 120), (10_000, 400), (1_000_000, 3_000)]
+    };
+    for &(p, budget_ms) in cohorts {
+        let flat = bench(&format!("agg/flat P={p}"), budget_ms, || {
+            std::hint::black_box(flat_round(&segs, &pool, p));
+        });
+        let mut comm = CommStats::default();
+        let tree = bench(
+            &format!("agg/tree:{NODES} P={p}"),
+            budget_ms,
+            || {
+                std::hint::black_box(tree_round(
+                    &segs, &pool, p, &mut comm,
+                ));
+            },
+        );
+        arms.push((p, flat, tree));
+    }
+
+    // ---- cohort sampling: dense vs sparse Fisher-Yates --------------
+    let samp_dense = bench(
+        &format!("sample/dense K={k_pop} P={cohort}"),
+        200,
+        || {
+            let mut rng = Pcg32::new(9, 1);
+            std::hint::black_box(
+                rng.sample_distinct(k_pop, cohort),
+            );
+        },
+    );
+    let samp_sparse = bench(
+        &format!("sample/sparse K={k_pop} P={cohort}"),
+        200,
+        || {
+            let mut rng = Pcg32::new(9, 1);
+            std::hint::black_box(
+                rng.sample_distinct_sparse(k_pop, cohort),
+            );
+        },
+    );
+
+    // ---- world build: dense shard vecs vs virtualized map -----------
+    let n_train = 50_000usize;
+    let world_dense = if quick {
+        None
+    } else {
+        Some(bench(
+            &format!("world/dense_iid K={k_pop}"),
+            2_000,
+            || {
+                let mut rng = Pcg32::new(5, 2);
+                std::hint::black_box(partition::iid(
+                    n_train, k_pop, &mut rng,
+                ));
+            },
+        ))
+    };
+    let world_virtual = bench(
+        &format!("world/virtual_iid+cohort K={k_pop}"),
+        400,
+        || {
+            let mut rng = Pcg32::new(5, 2);
+            let shards =
+                ClientShards::virtual_iid(n_train, k_pop, &mut rng);
+            // plus the whole per-round cost it must cover: sample a
+            // cohort and materialize exactly its shards
+            let ids = Pcg32::new(6, 3)
+                .sample_distinct_sparse(k_pop, cohort);
+            let total: u64 =
+                ids.iter().map(|&c| shards.n_k(c)).sum();
+            let touched: usize =
+                ids.iter().map(|&c| shards.shard(c).len()).sum();
+            std::hint::black_box((total, touched));
+        },
+    );
+
+    // ---- report -----------------------------------------------------
+    println!("\nper-uplink fold latency:");
+    for (p, flat, tree) in &arms {
+        println!(
+            "  P={p:<9} flat {:>9.0} ns/uplink   tree {:>9.0} ns/uplink",
+            flat.median_ns / *p as f64,
+            tree.median_ns / *p as f64,
+        );
+    }
+    let sp_sample = samp_dense.median_ns / samp_sparse.median_ns;
+    println!("\nspeedups (before / after):");
+    println!("  cohort sampling dense->sparse  {sp_sample:.2}x");
+    if let Some(wd) = &world_dense {
+        println!(
+            "  world build dense->virtual     {:.2}x",
+            wd.median_ns / world_virtual.median_ns
+        );
+    }
+
+    if quick {
+        println!("\n--quick: JSON trajectory write skipped");
+        return;
+    }
+    let mut j = BenchJson::new(
+        "agg_tree",
+        "cargo bench --bench round_agg (rust/benches/round_agg.rs)",
+    );
+    j.config("dim", DIM);
+    j.config("tree_nodes", NODES);
+    j.config("k_population", k_pop);
+    j.config("cohort", cohort);
+    j.config("n_train", n_train);
+    for (_, flat, tree) in &arms {
+        j.push(flat, Some(DIM as f64));
+        j.push(tree, Some(DIM as f64));
+    }
+    for (p, flat, tree) in &arms {
+        j.speedup(
+            &format!("agg_flat_over_tree_p{p}"),
+            flat.median_ns / tree.median_ns,
+        );
+    }
+    j.push(&samp_dense, None);
+    j.push(&samp_sparse, None);
+    j.speedup("sample_dense_over_sparse", sp_sample);
+    if let Some(wd) = &world_dense {
+        j.push(wd, None);
+        j.speedup(
+            "world_dense_over_virtual",
+            wd.median_ns / world_virtual.median_ns,
+        );
+    }
+    j.push(&world_virtual, None);
+    let path = std::path::Path::new("../BENCH_agg_tree.json");
+    match j.write(path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -81,6 +81,122 @@ impl Default for ServerOptCfg {
     }
 }
 
+/// Round-aggregation topology (`--agg flat|tree:G`).
+///
+/// Purely a throughput/topology knob: tree aggregation is bit-exact
+/// against the flat stream by the canonical pairwise contract
+/// (`coordinator::aggregate`, pinned by tests/tree_determinism.rs),
+/// so like `parallelism` it is excluded from the config fingerprint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggMode {
+    /// One ordered FedAvg stream at the root (the default).
+    #[default]
+    Flat,
+    /// Depth-2 tree: `nodes` mid-tier aggregators each fold a
+    /// contiguous cohort shard and forward one weighted partial.
+    Tree { nodes: usize },
+}
+
+impl std::fmt::Display for AggMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggMode::Flat => write!(f, "flat"),
+            AggMode::Tree { nodes } => write!(f, "tree:{nodes}"),
+        }
+    }
+}
+
+impl std::str::FromStr for AggMode {
+    type Err = ConfigError;
+
+    fn from_str(s: &str) -> Result<AggMode, ConfigError> {
+        if s == "flat" {
+            return Ok(AggMode::Flat);
+        }
+        if let Some(g) = s.strip_prefix("tree:") {
+            if let Ok(nodes) = g.parse::<usize>() {
+                if nodes >= 1 {
+                    return Ok(AggMode::Tree { nodes });
+                }
+            }
+        }
+        Err(ConfigError::BadAggMode { spec: s.to_string() })
+    }
+}
+
+/// Typed validation failures for the scale knobs (cohort size,
+/// aggregation topology). Carried as `std::error::Error`, so they
+/// travel through `anyhow::Result` while staying matchable in tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// K = 0: no population to sample from.
+    NoClients,
+    /// Cohort (participation) of zero.
+    CohortZero,
+    /// Cohort exceeds the client population — previously a silent
+    /// hand-built-config hazard, now rejected before any round runs.
+    CohortExceedsPopulation { cohort: usize, clients: usize },
+    /// `--cohort-frac` outside (0, 1].
+    CohortFracOutOfRange { frac_bits: u32 },
+    /// Two flags steering the same knob.
+    FlagConflict {
+        a: &'static str,
+        b: &'static str,
+    },
+    /// Unparseable `--agg` spec (wants `flat` or `tree:G`, G >= 1).
+    BadAggMode { spec: String },
+    /// ServerOptimize needs every per-client vector at the root;
+    /// retention cannot cross a tree link.
+    TreeWithServerOpt,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoClients => {
+                write!(f, "clients must be at least 1")
+            }
+            ConfigError::CohortZero => {
+                write!(f, "cohort (participation) must be at least 1")
+            }
+            ConfigError::CohortExceedsPopulation { cohort, clients } => {
+                write!(
+                    f,
+                    "cohort {cohort} exceeds the client population \
+                     {clients}"
+                )
+            }
+            ConfigError::CohortFracOutOfRange { frac_bits } => {
+                write!(
+                    f,
+                    "--cohort-frac {} must be in (0, 1]",
+                    f32::from_bits(*frac_bits)
+                )
+            }
+            ConfigError::FlagConflict { a, b } => {
+                write!(f, "--{a} conflicts with --{b}: pass only one")
+            }
+            ConfigError::BadAggMode { spec } => {
+                write!(
+                    f,
+                    "bad --agg '{spec}' (expected flat or tree:G \
+                     with G >= 1)"
+                )
+            }
+            ConfigError::TreeWithServerOpt => {
+                write!(
+                    f,
+                    "--agg tree is incompatible with ServerOptimize \
+                     (uq+): per-client vectors cannot cross a tree \
+                     link"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub name: String,
@@ -127,6 +243,9 @@ pub struct ExperimentConfig {
     /// by the exhaustive conformance harness), so like `parallelism`
     /// this is purely a wall-clock knob.
     pub fp8_kernel: KernelKind,
+    /// Round-aggregation topology (`--agg flat|tree:G`). Bit-exact
+    /// against flat for every fan-out, so also a pure wall-clock knob.
+    pub agg: AggMode,
 }
 
 impl ExperimentConfig {
@@ -156,6 +275,7 @@ impl ExperimentConfig {
             fp32_client_frac: 0.0,
             parallelism: 1,
             fp8_kernel: KernelKind::Auto,
+            agg: AggMode::Flat,
         };
         Ok(match model {
             "mlp_c10" | "lenet_c10" | "lenet_c100" | "resnet8_c10"
@@ -276,6 +396,75 @@ impl ExperimentConfig {
         self.comm == Rounding::None
     }
 
+    /// Validate the scale knobs: cohort vs population, aggregation
+    /// topology. Called by `Server::with_transport` (so a hand-built
+    /// config cannot silently sample beyond the population) and by the
+    /// CLI after all overrides are applied.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.clients == 0 {
+            return Err(ConfigError::NoClients);
+        }
+        if self.participation == 0 {
+            return Err(ConfigError::CohortZero);
+        }
+        if self.participation > self.clients {
+            return Err(ConfigError::CohortExceedsPopulation {
+                cohort: self.participation,
+                clients: self.clients,
+            });
+        }
+        if let AggMode::Tree { nodes } = self.agg {
+            if nodes == 0 {
+                return Err(ConfigError::BadAggMode {
+                    spec: "tree:0".to_string(),
+                });
+            }
+            if self.server_opt.is_some() {
+                return Err(ConfigError::TreeWithServerOpt);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the scale flags — `--cohort P` / `--cohort-frac f` /
+    /// `--agg flat|tree:G` — with the same orphan/conflict guards the
+    /// networked flags use, then [`validate`](Self::validate) the
+    /// result. `--cohort` is an alias for `--participation` in the
+    /// paper's P-of-K notation; `--cohort-frac` scales off the (final)
+    /// client count, so apply it after any `--clients` override.
+    pub fn apply_scale_flags(&mut self, args: &Args) -> Result<()> {
+        for (a, b) in [
+            ("cohort", "cohort-frac"),
+            ("cohort", "participation"),
+            ("cohort-frac", "participation"),
+        ] {
+            if args.get(a).is_some() && args.get(b).is_some() {
+                return Err(ConfigError::FlagConflict { a, b }.into());
+            }
+        }
+        if args.get("cohort").is_some() {
+            self.participation =
+                args.parse_or("cohort", self.participation)?;
+        }
+        if args.get("cohort-frac").is_some() {
+            let frac: f32 = args.parse_or("cohort-frac", 1.0)?;
+            if !(frac > 0.0 && frac <= 1.0) {
+                return Err(ConfigError::CohortFracOutOfRange {
+                    frac_bits: frac.to_bits(),
+                }
+                .into());
+            }
+            self.participation = ((self.clients as f64 * frac as f64)
+                .round() as usize)
+                .max(1);
+        }
+        if let Some(spec) = args.get("agg") {
+            self.agg = spec.parse::<AggMode>()?;
+        }
+        self.validate()?;
+        Ok(())
+    }
+
     /// Stable 64-bit fingerprint of every field that determines the
     /// federated trajectory — the handshake token of the networked
     /// transport: a server only accepts workers whose config hashes
@@ -317,6 +506,10 @@ impl ExperimentConfig {
             fp32_client_frac,
             parallelism: _,
             fp8_kernel: _,
+            // bit-exact against flat at every fan-out (the tree-vs-
+            // flat contract), so a flat server drives tree-mode
+            // workers' worlds identically — excluded like parallelism
+            agg: _,
         } = self;
         let split = match split {
             SplitCfg::Iid => "iid".to_string(),
@@ -546,6 +739,8 @@ mod tests {
         assert_eq!(a.fingerprint(), b.fingerprint());
         b.fp8_kernel = KernelKind::Scalar;
         assert_eq!(a.fingerprint(), b.fingerprint());
+        b.agg = AggMode::Tree { nodes: 8 };
+        assert_eq!(a.fingerprint(), b.fingerprint());
         b.seed = 2;
         assert_ne!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
@@ -553,6 +748,11 @@ mod tests {
         assert_ne!(a.fingerprint(), c.fingerprint());
         let d = ExperimentConfig::preset("lenet_c10:uq:dir03").unwrap();
         assert_ne!(a.fingerprint(), d.fingerprint());
+        // the cohort draw IS trajectory: --cohort must be
+        // fingerprint-visible
+        let mut e = a.clone();
+        e.participation += 2;
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 
     #[test]
@@ -627,6 +827,105 @@ mod tests {
             NetCfg::from_args(&args("run --listen 127.0.0.1:1"))
                 .is_err()
         );
+    }
+
+    #[test]
+    fn agg_mode_parses_and_displays() {
+        assert_eq!("flat".parse::<AggMode>().unwrap(), AggMode::Flat);
+        assert_eq!(
+            "tree:16".parse::<AggMode>().unwrap(),
+            AggMode::Tree { nodes: 16 }
+        );
+        assert_eq!(AggMode::Tree { nodes: 16 }.to_string(), "tree:16");
+        assert_eq!(AggMode::Flat.to_string(), "flat");
+        for bad in ["tree:0", "tree:", "tree", "fanout:2", "TREE:4"] {
+            assert_eq!(
+                bad.parse::<AggMode>().unwrap_err(),
+                ConfigError::BadAggMode { spec: bad.to_string() },
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_scale_knobs_with_typed_errors() {
+        let base = ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
+        assert!(base.validate().is_ok());
+        let mut c = base.clone();
+        c.participation = c.clients + 1;
+        assert_eq!(
+            c.validate().unwrap_err(),
+            ConfigError::CohortExceedsPopulation {
+                cohort: 41,
+                clients: 40
+            }
+        );
+        c.participation = 0;
+        assert_eq!(c.validate().unwrap_err(), ConfigError::CohortZero);
+        c.participation = 4;
+        c.clients = 0;
+        assert_eq!(c.validate().unwrap_err(), ConfigError::NoClients);
+        let mut t = base.clone();
+        t.agg = AggMode::Tree { nodes: 0 };
+        assert!(matches!(
+            t.validate().unwrap_err(),
+            ConfigError::BadAggMode { .. }
+        ));
+        t.agg = AggMode::Tree { nodes: 4 };
+        assert!(t.validate().is_ok());
+        t.server_opt = Some(ServerOptCfg::default());
+        assert_eq!(
+            t.validate().unwrap_err(),
+            ConfigError::TreeWithServerOpt
+        );
+    }
+
+    #[test]
+    fn scale_flags_parse_and_guard() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        let base =
+            || ExperimentConfig::preset("lenet_c10:uq:iid").unwrap();
+        // --cohort is P in the paper's P-of-K notation
+        let mut c = base();
+        c.apply_scale_flags(&args("run --cohort 25")).unwrap();
+        assert_eq!(c.participation, 25);
+        // --cohort-frac scales off K (40 clients here)
+        let mut c = base();
+        c.apply_scale_flags(&args("run --cohort-frac 0.25")).unwrap();
+        assert_eq!(c.participation, 10);
+        // --agg rides along
+        let mut c = base();
+        c.apply_scale_flags(&args("run --cohort 8 --agg tree:4"))
+            .unwrap();
+        assert_eq!(
+            (c.participation, c.agg),
+            (8, AggMode::Tree { nodes: 4 })
+        );
+        // no scale flags: a no-op on a valid config
+        let mut c = base();
+        c.apply_scale_flags(&args("run")).unwrap();
+        assert_eq!(c.participation, base().participation);
+        // conflicts and bounds are typed errors (NetCfg guard style)
+        for bad in [
+            "run --cohort 8 --cohort-frac 0.5",
+            "run --cohort 8 --participation 8",
+            "run --cohort-frac 0.5 --participation 8",
+            "run --cohort 0",
+            "run --cohort 41",
+            "run --cohort-frac 0.0",
+            "run --cohort-frac 1.5",
+            "run --cohort-frac nan",
+            "run --agg tree:0",
+            "run --agg diamond",
+            "run --cohort nope",
+        ] {
+            assert!(
+                base().apply_scale_flags(&args(bad)).is_err(),
+                "expected rejection: {bad}"
+            );
+        }
     }
 
     #[test]

@@ -2,16 +2,36 @@
 //!
 //! `w_{t+1} = sum_{k in P_t} (n_k / m_t) dequant(uplink_k)` — the
 //! uplinks are already on each client's FP8 grid (Q_rand applied by the
-//! client codec), so averaging the dequantized values in FP32 is
-//! exactly Algorithm 1's aggregation step. Alphas and betas are
-//! averaged unquantized (they travel as f32 side channels).
+//! client codec), so averaging the dequantized values is exactly
+//! Algorithm 1's aggregation step. Alphas and betas are averaged
+//! unquantized (they travel as f32 side channels).
 //!
 //! [`FedAvgStream`] is the streaming form used by the parallel round
 //! loop: uplinks are folded into the weighted sums one at a time as
 //! the cohort delivers them (decode + accumulate + drop), so the
 //! server never buffers the whole cohort's decoded tensors. Per-client
 //! vectors are retained only when ServerOptimize needs them.
-//! Determinism note: FP32 accumulation is order-sensitive, so callers
+//!
+//! ## Canonical pairwise accumulation (the tree-vs-flat contract)
+//!
+//! Sums accumulate in f64 through a *canonical pairwise reduction*
+//! over cohort positions: each uplink's weighted contribution is a
+//! leaf at its cohort position, and two adjacent fragments
+//! `[s, s+l) + [s+l, s+2l)` merge only when `l0 == l1` and
+//! `s % 2l == 0` — the segment decomposition of a perfect binary tree
+//! over positions. The f64 addition tree for any position range is
+//! therefore a pure function of the range, independent of how the
+//! cohort is sharded across aggregator nodes, so a mid-tier
+//! aggregator covering positions `[s, e)` produces *exactly* the
+//! fragments the flat stream holds internally for those positions — a
+//! depth-D tree of [`FedAvgStream`]s (compose via
+//! [`FedAvgStream::into_partial`] / [`FedAvgStream::absorb`]) is
+//! bit-identical to the flat stream (pinned by
+//! tests/tree_determinism.rs). Pending state is O(log P) fragments;
+//! the final f64 → f32 rounding happens once, in
+//! [`FedAvgStream::finish`].
+//!
+//! Determinism note: positions are assigned in push order, so callers
 //! must push uplinks in cohort order — `transport::run_cohort`
 //! guarantees that ordering regardless of thread count.
 
@@ -36,20 +56,197 @@ pub struct Aggregate {
     pub mean_loss: f32,
 }
 
+/// How cohort members are weighted in the round mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weighting {
+    /// The paper weighting: `n_k / m_t`.
+    BySamples { m_t: u64 },
+    /// Degenerate cohort — every sampled shard is empty (`m_t == 0`),
+    /// which a K >> n_train virtualized population makes routine.
+    /// Uniform `1/P` weights keep the round a well-defined mean.
+    Uniform { cohort: u64 },
+}
+
+impl Weighting {
+    /// Pick the weighting for a cohort with total sample count `m_t`.
+    pub fn for_cohort(m_t: u64, cohort: usize) -> Weighting {
+        if m_t > 0 {
+            Weighting::BySamples { m_t }
+        } else {
+            Weighting::Uniform { cohort: cohort as u64 }
+        }
+    }
+
+    /// The FedAvg coefficient for a member holding `n_k` samples.
+    pub fn kw(&self, n_k: u64) -> f64 {
+        match *self {
+            Weighting::BySamples { m_t } => n_k as f64 / m_t as f64,
+            Weighting::Uniform { cohort } => 1.0 / cohort as f64,
+        }
+    }
+}
+
+/// One aggregator's frozen partial: the canonical pending fragments
+/// over its contiguous cohort position range `[start, end)`. The f64
+/// sums travel bit-exactly (the wire codec ships raw bit patterns,
+/// `net::codec::{encode,decode}_partial`), so absorbing a forwarded
+/// partial replays exactly the f64 adds the flat stream would have
+/// performed on those positions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreePartial {
+    pub start: u64,
+    pub end: u64,
+    /// Leaf vector width = dim + alpha_dim + beta_dim + 1 (loss last).
+    pub width: u32,
+    /// Canonical fragments in ascending position order: `(start, len)`
+    /// paired 1:1 with `sums` (one f64 vector of `width` each). At
+    /// most O(log P) of them — the dyadic decomposition of
+    /// `[start, end)`.
+    pub ranges: Vec<(u64, u64)>,
+    pub sums: Vec<Vec<f64>>,
+}
+
+impl TreePartial {
+    /// Leaves (uplinks) covered by this partial.
+    pub fn leaves(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// Canonical pairwise f64 accumulator over global cohort positions
+/// (see the module doc for the alignment rule and why it makes tree
+/// aggregation bit-identical to flat).
+struct PairwiseAcc {
+    width: usize,
+    next_pos: u64,
+    /// Pending fragments, ascending and contiguous: `(start, len)`.
+    ranges: Vec<(u64, u64)>,
+    sums: Vec<Vec<f64>>,
+    /// Retired fragment buffers, reused for new leaves (the pairwise
+    /// reduction retires one buffer per merge, so a million-leaf round
+    /// allocates O(log P) vectors, not O(P)).
+    spare: Vec<Vec<f64>>,
+}
+
+impl PairwiseAcc {
+    fn start_at(width: usize, start: u64) -> PairwiseAcc {
+        PairwiseAcc {
+            width,
+            next_pos: start,
+            ranges: Vec::new(),
+            sums: Vec::new(),
+            spare: Vec::new(),
+        }
+    }
+
+    /// Merge tail fragments while the alignment rule allows:
+    /// equal lengths and the left fragment starts on a `2l` boundary.
+    fn settle(&mut self) {
+        while self.ranges.len() >= 2 {
+            let (s1, l1) = self.ranges[self.ranges.len() - 1];
+            let (s0, l0) = self.ranges[self.ranges.len() - 2];
+            if l0 != l1 || s0 % (2 * l0) != 0 {
+                break;
+            }
+            debug_assert_eq!(s0 + l0, s1, "fragments not contiguous");
+            let top = self.sums.pop().unwrap();
+            let into = self.sums.last_mut().unwrap();
+            for (a, b) in into.iter_mut().zip(&top) {
+                *a += *b;
+            }
+            self.spare.push(top);
+            self.ranges.pop();
+            let last = self.ranges.len() - 1;
+            self.ranges[last] = (s0, 2 * l0);
+        }
+    }
+
+    /// A leaf buffer to fill (recycled from a retired fragment when
+    /// possible), already sized to `width`.
+    fn leaf_buf(&mut self) -> Vec<f64> {
+        match self.spare.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(self.width, 0.0);
+                v
+            }
+            None => vec![0.0; self.width],
+        }
+    }
+
+    fn push_leaf(&mut self, leaf: Vec<f64>) {
+        debug_assert_eq!(leaf.len(), self.width);
+        self.ranges.push((self.next_pos, 1));
+        self.sums.push(leaf);
+        self.next_pos += 1;
+        self.settle();
+    }
+
+    /// Append a fragment produced by a downstream accumulator over the
+    /// positions immediately following ours.
+    fn append_range(
+        &mut self,
+        start: u64,
+        len: u64,
+        sum: Vec<f64>,
+    ) -> Result<()> {
+        ensure!(
+            start == self.next_pos,
+            "partial fragment starts at {start}, expected {}",
+            self.next_pos
+        );
+        ensure!(len >= 1, "empty partial fragment at {start}");
+        ensure!(
+            sum.len() == self.width,
+            "partial fragment width {} != stream width {}",
+            sum.len(),
+            self.width
+        );
+        self.ranges.push((start, len));
+        self.sums.push(sum);
+        self.next_pos = start + len;
+        self.settle();
+        Ok(())
+    }
+
+    /// Fold the pending fragments right-to-left into the final sum.
+    /// Flat and tree runs arrive here with the identical pending set
+    /// (the dyadic decomposition of the full range), so the fold
+    /// order is shared too.
+    fn finish(mut self) -> Vec<f64> {
+        while self.sums.len() > 1 {
+            let top = self.sums.pop().unwrap();
+            let into = self.sums.last_mut().unwrap();
+            for (a, b) in into.iter_mut().zip(&top) {
+                *a += *b;
+            }
+        }
+        self.sums.pop().unwrap_or_else(|| vec![0.0; self.width])
+    }
+}
+
 /// Streaming weighted accumulator for one round's uplinks.
 ///
 /// `m_t` (the cohort's total sample count) is known before any client
 /// finishes — the server samples the cohort and knows every `n_k` — so
 /// each uplink can be folded in with its final weight `n_k / m_t` the
-/// moment it arrives.
+/// moment it arrives. In a tree, a mid-tier stream covers the cohort
+/// positions `[start, start + shard_len)` and is frozen into a
+/// [`TreePartial`] for forwarding; the upstream stream [`absorb`]s
+/// partials in cohort order, interchangeably with direct [`push`]es.
+///
+/// [`absorb`]: FedAvgStream::absorb
+/// [`push`]: FedAvgStream::push
 pub struct FedAvgStream<'s> {
     segments: &'s [Segment],
-    m_t: u64,
-    w: Vec<f32>,
-    alpha: Vec<f32>,
-    beta: Vec<f32>,
-    mean_loss: f32,
-    n_seen: usize,
+    weighting: Weighting,
+    dim: usize,
+    alpha_dim: usize,
+    beta_dim: usize,
+    start: u64,
+    acc: PairwiseAcc,
+    /// Uplinks folded in, directly or via absorbed partials.
+    leaves: u64,
     keep_clients: bool,
     client_ws: Vec<Vec<f32>>,
     client_alphas: Vec<Vec<f32>>,
@@ -63,6 +260,10 @@ pub struct FedAvgStream<'s> {
 }
 
 impl<'s> FedAvgStream<'s> {
+    /// Root stream with the paper's by-samples weighting (errors on
+    /// `m_t == 0`; use [`Weighting::for_cohort`] +
+    /// [`FedAvgStream::with_weighting`] when the cohort may be
+    /// degenerate).
     pub fn new(
         segments: &'s [Segment],
         dim: usize,
@@ -72,14 +273,47 @@ impl<'s> FedAvgStream<'s> {
         keep_clients: bool,
     ) -> Result<FedAvgStream<'s>> {
         ensure!(m_t > 0, "zero total samples");
+        Self::with_weighting(
+            segments,
+            dim,
+            alpha_dim,
+            beta_dim,
+            Weighting::BySamples { m_t },
+            keep_clients,
+            0,
+        )
+    }
+
+    /// General constructor: explicit weighting and starting cohort
+    /// position (`start > 0` makes a mid-tier stream over a later
+    /// shard of the cohort).
+    pub fn with_weighting(
+        segments: &'s [Segment],
+        dim: usize,
+        alpha_dim: usize,
+        beta_dim: usize,
+        weighting: Weighting,
+        keep_clients: bool,
+        start: u64,
+    ) -> Result<FedAvgStream<'s>> {
+        match weighting {
+            Weighting::BySamples { m_t } => {
+                ensure!(m_t > 0, "zero total samples")
+            }
+            Weighting::Uniform { cohort } => {
+                ensure!(cohort > 0, "zero cohort")
+            }
+        }
+        let width = dim + alpha_dim + beta_dim + 1;
         Ok(FedAvgStream {
             segments,
-            m_t,
-            w: vec![0.0f32; dim],
-            alpha: vec![0.0f32; alpha_dim],
-            beta: vec![0.0f32; beta_dim],
-            mean_loss: 0.0,
-            n_seen: 0,
+            weighting,
+            dim,
+            alpha_dim,
+            beta_dim,
+            start,
+            acc: PairwiseAcc::start_at(width, start),
+            leaves: 0,
             keep_clients,
             client_ws: Vec::new(),
             client_alphas: Vec::new(),
@@ -89,9 +323,10 @@ impl<'s> FedAvgStream<'s> {
         })
     }
 
-    /// Fold one uplink into the running weighted sums.
+    /// Fold one uplink into the running weighted sums at the next
+    /// cohort position.
     pub fn push(&mut self, up: &Uplink) {
-        let kw = up.n_k as f32 / self.m_t as f32;
+        let kw = self.weighting.kw(up.n_k);
         codec::decode_pooled(
             &up.payload,
             self.segments,
@@ -99,34 +334,101 @@ impl<'s> FedAvgStream<'s> {
             1,
             &mut self.buf,
         );
-        for (acc, &v) in self.w.iter_mut().zip(&self.buf) {
-            *acc += kw * v;
+        let (d, ad, bd) = (self.dim, self.alpha_dim, self.beta_dim);
+        let mut leaf = self.acc.leaf_buf();
+        for (o, &v) in leaf[..d].iter_mut().zip(self.buf.iter()) {
+            *o = kw * v as f64;
         }
-        for (acc, &v) in self.alpha.iter_mut().zip(&up.payload.alphas) {
-            *acc += kw * v;
+        for (o, &v) in
+            leaf[d..d + ad].iter_mut().zip(&up.payload.alphas)
+        {
+            *o = kw * v as f64;
         }
-        for (acc, &v) in self.beta.iter_mut().zip(&up.payload.betas) {
-            *acc += kw * v;
+        for (o, &v) in
+            leaf[d + ad..d + ad + bd].iter_mut().zip(&up.payload.betas)
+        {
+            *o = kw * v as f64;
         }
-        self.mean_loss += kw * up.mean_loss;
-        self.n_seen += 1;
+        leaf[d + ad + bd] = kw * up.mean_loss as f64;
+        self.acc.push_leaf(leaf);
+        self.leaves += 1;
         if self.keep_clients {
             self.client_ws.push(self.buf.clone());
             self.client_alphas.push(up.payload.alphas.clone());
         }
-        self.kweights.push(kw);
+        self.kweights.push(kw as f32);
+    }
+
+    /// Fold a downstream aggregator's partial in at the current cohort
+    /// frontier: its fragments append contiguously and merge on the
+    /// same alignment rule as direct pushes, so the resulting f64
+    /// state is bit-identical to having pushed those uplinks here.
+    pub fn absorb(&mut self, p: &TreePartial) -> Result<()> {
+        ensure!(
+            p.width as usize == self.acc.width,
+            "partial width {} != stream width {}",
+            p.width,
+            self.acc.width
+        );
+        ensure!(
+            p.ranges.len() == p.sums.len(),
+            "partial has {} ranges but {} sums",
+            p.ranges.len(),
+            p.sums.len()
+        );
+        ensure!(
+            p.start == self.acc.next_pos,
+            "partial covers [{}, {}) but stream frontier is {}",
+            p.start,
+            p.end,
+            self.acc.next_pos
+        );
+        for (&(s, l), sum) in p.ranges.iter().zip(&p.sums) {
+            self.acc.append_range(s, l, sum.clone())?;
+        }
+        ensure!(
+            self.acc.next_pos == p.end,
+            "partial fragments do not tile [{}, {})",
+            p.start,
+            p.end
+        );
+        self.leaves += p.leaves();
+        Ok(())
+    }
+
+    /// Freeze a mid-tier stream into the weighted partial it forwards
+    /// upstream. Per-client retention is a root-only (ServerOptimize)
+    /// feature, and ServerOptimize is flat-only — rejected here and at
+    /// config validation.
+    pub fn into_partial(self) -> Result<TreePartial> {
+        ensure!(
+            !self.keep_clients,
+            "per-client retention cannot cross a tree link"
+        );
+        Ok(TreePartial {
+            start: self.start,
+            end: self.acc.next_pos,
+            width: self.acc.width as u32,
+            ranges: self.acc.ranges,
+            sums: self.acc.sums,
+        })
     }
 
     pub fn finish(self) -> Result<Aggregate> {
-        ensure!(self.n_seen > 0, "no uplinks to aggregate");
+        ensure!(self.leaves > 0, "no uplinks to aggregate");
+        let (d, ad, bd) = (self.dim, self.alpha_dim, self.beta_dim);
+        let total = self.acc.finish();
         Ok(Aggregate {
-            w: self.w,
-            alpha: self.alpha,
-            beta: self.beta,
+            w: total[..d].iter().map(|&v| v as f32).collect(),
+            alpha: total[d..d + ad].iter().map(|&v| v as f32).collect(),
+            beta: total[d + ad..d + ad + bd]
+                .iter()
+                .map(|&v| v as f32)
+                .collect(),
             client_ws: self.client_ws,
             client_alphas: self.client_alphas,
             kweights: self.kweights,
-            mean_loss: self.mean_loss,
+            mean_loss: total[d + ad + bd] as f32,
         })
     }
 }
@@ -243,5 +545,162 @@ mod tests {
         let agg = fedavg(&[a], &segs(), 8, 1, 1).unwrap();
         assert_eq!(agg.client_ws.len(), 1);
         assert_eq!(agg.client_ws[0], agg.w);
+    }
+
+    fn cohort(n: usize) -> Vec<Uplink> {
+        (0..n)
+            .map(|c| {
+                uplink(
+                    &[0.1 * c as f32 - 0.3; 8],
+                    0.8 + 0.07 * c as f32,
+                    (c as u64 * 13 + 1) % 40 + 1,
+                )
+            })
+            .collect()
+    }
+
+    fn flat(ups: &[Uplink], segs: &[Segment], w: Weighting) -> Aggregate {
+        let mut s =
+            FedAvgStream::with_weighting(segs, 8, 1, 1, w, false, 0)
+                .unwrap();
+        for up in ups {
+            s.push(up);
+        }
+        s.finish().unwrap()
+    }
+
+    #[test]
+    fn partials_compose_bitwise_at_any_split() {
+        // the tree contract at the aggregate layer: shard the cohort
+        // at every possible boundary pair, forward partials, and the
+        // root must match the flat stream bit-for-bit
+        let segs = segs();
+        let ups = cohort(7);
+        let m_t: u64 = ups.iter().map(|u| u.n_k).sum();
+        let w = Weighting::BySamples { m_t };
+        let base = flat(&ups, &segs, w);
+        for cut1 in 0..=ups.len() {
+            for cut2 in cut1..=ups.len() {
+                let mut root = FedAvgStream::with_weighting(
+                    &segs, 8, 1, 1, w, false, 0,
+                )
+                .unwrap();
+                for (lo, hi) in
+                    [(0, cut1), (cut1, cut2), (cut2, ups.len())]
+                {
+                    if lo == hi {
+                        continue;
+                    }
+                    let mut mid = FedAvgStream::with_weighting(
+                        &segs, 8, 1, 1, w, false, lo as u64,
+                    )
+                    .unwrap();
+                    for up in &ups[lo..hi] {
+                        mid.push(up);
+                    }
+                    root.absorb(&mid.into_partial().unwrap()).unwrap();
+                }
+                let agg = root.finish().unwrap();
+                let bits = |v: &[f32]| -> Vec<u32> {
+                    v.iter().map(|x| x.to_bits()).collect()
+                };
+                assert_eq!(
+                    bits(&agg.w),
+                    bits(&base.w),
+                    "diverged at cuts ({cut1}, {cut2})"
+                );
+                assert_eq!(bits(&agg.alpha), bits(&base.alpha));
+                assert_eq!(bits(&agg.beta), bits(&base.beta));
+                assert_eq!(
+                    agg.mean_loss.to_bits(),
+                    base.mean_loss.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partials_compose_across_depths() {
+        // depth-3: grandchildren -> mid-tier -> root is still
+        // bit-identical to flat (absorb composes)
+        let segs = segs();
+        let ups = cohort(6);
+        let m_t: u64 = ups.iter().map(|u| u.n_k).sum();
+        let w = Weighting::BySamples { m_t };
+        let base = flat(&ups, &segs, w);
+        let mut root =
+            FedAvgStream::with_weighting(&segs, 8, 1, 1, w, false, 0)
+                .unwrap();
+        for (lo, hi) in [(0usize, 3usize), (3, 6)] {
+            let mut mid = FedAvgStream::with_weighting(
+                &segs, 8, 1, 1, w, false, lo as u64,
+            )
+            .unwrap();
+            for (glo, ghi) in [(lo, lo + 1), (lo + 1, hi)] {
+                let mut leafagg = FedAvgStream::with_weighting(
+                    &segs, 8, 1, 1, w, false, glo as u64,
+                )
+                .unwrap();
+                for up in &ups[glo..ghi] {
+                    leafagg.push(up);
+                }
+                mid.absorb(&leafagg.into_partial().unwrap()).unwrap();
+            }
+            root.absorb(&mid.into_partial().unwrap()).unwrap();
+        }
+        let agg = root.finish().unwrap();
+        assert_eq!(
+            agg.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            base.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(agg.mean_loss.to_bits(), base.mean_loss.to_bits());
+    }
+
+    #[test]
+    fn absorb_rejects_gaps_and_width_mismatch() {
+        let segs = segs();
+        let m_t = 10;
+        let w = Weighting::BySamples { m_t };
+        let mut mid =
+            FedAvgStream::with_weighting(&segs, 8, 1, 1, w, false, 2)
+                .unwrap();
+        mid.push(&uplink(&[0.5; 8], 1.0, 10));
+        let p = mid.into_partial().unwrap();
+        // root frontier is 0, partial starts at 2 -> gap
+        let mut root =
+            FedAvgStream::with_weighting(&segs, 8, 1, 1, w, false, 0)
+                .unwrap();
+        assert!(root.absorb(&p).is_err());
+        // width mismatch
+        let mut bad = p.clone();
+        bad.start = 0;
+        bad.width += 1;
+        assert!(root.absorb(&bad).is_err());
+    }
+
+    #[test]
+    fn uniform_weighting_for_degenerate_cohort() {
+        // all-empty shards (m_t = 0): uniform 1/P weights make the
+        // round the plain mean of the uplinks
+        let segs = segs();
+        let ups =
+            [uplink(&[0.5; 8], 1.0, 0), uplink(&[1.0; 8], 1.0, 0)];
+        let w = Weighting::for_cohort(0, ups.len());
+        assert_eq!(w, Weighting::Uniform { cohort: 2 });
+        let agg = flat(&ups, &segs, w);
+        assert!(agg.w.iter().all(|&v| (v - 0.75).abs() < 1e-6));
+        assert_eq!(agg.kweights, vec![0.5, 0.5]);
+        // and a non-degenerate cohort keeps the paper weighting
+        assert_eq!(
+            Weighting::for_cohort(40, 2),
+            Weighting::BySamples { m_t: 40 }
+        );
+    }
+
+    #[test]
+    fn into_partial_rejects_client_retention() {
+        let segs = segs();
+        let s = FedAvgStream::new(&segs, 8, 1, 1, 10, true).unwrap();
+        assert!(s.into_partial().is_err());
     }
 }

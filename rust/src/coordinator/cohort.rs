@@ -1,0 +1,195 @@
+//! Virtualized client state: a million-client population at O(cohort)
+//! memory.
+//!
+//! The flat representation materializes one `Vec<usize>` shard per
+//! client, which is fine for thousands of clients and fatal for the
+//! "millions of users" scale target (K per-client structs just to
+//! sample P << K of them per round). [`ClientShards`] keeps the same
+//! observable contract — `shard(k)` / `n_k(k)` / `n_clients()` — but
+//! for the i.i.d. split stores only the O(n_train) shuffled sample
+//! order and materializes a client's shard on demand:
+//!
+//!   shard(k) = order[k], order[k + K], order[k + 2K], ...
+//!
+//! which is exactly the round-robin scatter `partition::iid` performs
+//! (`shards[i % k].push(idx[i])`), so the virtual and dense paths are
+//! index-for-index identical (pinned by tests here and in
+//! tests/cohort_virtual.rs). The RNG consumption is identical too —
+//! one full Fisher-Yates shuffle via [`partition::iid_order`] — so
+//! crossing the [`VIRTUALIZE_AT`] threshold never moves a trajectory.
+//!
+//! Dirichlet and speaker splits are inherently dense (their shard
+//! shapes depend on per-example labels/groups), so they stay
+//! materialized; populations that large should use the i.i.d. split.
+
+use std::borrow::Cow;
+
+use crate::data::partition;
+use crate::fp8::rng::Pcg32;
+
+/// Client-population threshold at which `build_world` switches the
+/// i.i.d. split to the virtual representation.
+pub const VIRTUALIZE_AT: usize = 65_536;
+
+/// Per-client training shards, dense or virtualized.
+pub enum ClientShards {
+    /// One materialized index vector per client (small populations,
+    /// or the inherently dense Dirichlet/speaker splits).
+    Dense(Vec<Vec<usize>>),
+    /// i.i.d. split over a huge population: only the shuffled sample
+    /// order is stored; any client's shard is the strided
+    /// sub-sequence starting at its index.
+    VirtualIid { order: Vec<usize>, clients: usize },
+}
+
+impl ClientShards {
+    pub fn dense(shards: Vec<Vec<usize>>) -> ClientShards {
+        ClientShards::Dense(shards)
+    }
+
+    /// Virtualized i.i.d. split over `clients` clients; consumes
+    /// `rng` identically to `partition::iid(n, clients, rng)`.
+    pub fn virtual_iid(
+        n: usize,
+        clients: usize,
+        rng: &mut Pcg32,
+    ) -> ClientShards {
+        assert!(clients > 0, "zero clients");
+        ClientShards::VirtualIid {
+            order: partition::iid_order(n, rng),
+            clients,
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        match self {
+            ClientShards::Dense(s) => s.len(),
+            ClientShards::VirtualIid { clients, .. } => *clients,
+        }
+    }
+
+    /// Client `k`'s sample count, without materializing the shard.
+    pub fn n_k(&self, client: usize) -> u64 {
+        match self {
+            ClientShards::Dense(s) => s[client].len() as u64,
+            ClientShards::VirtualIid { order, clients } => {
+                assert!(client < *clients, "client {client} out of range");
+                let n = order.len();
+                if client < n {
+                    // |{ i < n : i mod K == client }|
+                    ((n - client - 1) / clients + 1) as u64
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// Client `k`'s shard: borrowed when dense, materialized on
+    /// demand (O(n_k)) when virtual.
+    pub fn shard(&self, client: usize) -> Cow<'_, [usize]> {
+        match self {
+            ClientShards::Dense(s) => Cow::Borrowed(&s[client][..]),
+            ClientShards::VirtualIid { order, clients } => {
+                assert!(client < *clients, "client {client} out of range");
+                Cow::Owned(
+                    order
+                        .iter()
+                        .skip(client)
+                        .step_by(*clients)
+                        .copied()
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// True when per-client structs are materialized on demand rather
+    /// than held resident.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, ClientShards::VirtualIid { .. })
+    }
+
+    /// Number of per-client index vectors resident in memory right
+    /// now — the struct-count probe behind the O(cohort) memory
+    /// contract (0 when virtualized; asserted in
+    /// tests/cohort_virtual.rs).
+    pub fn resident_structs(&self) -> usize {
+        match self {
+            ClientShards::Dense(s) => s.len(),
+            ClientShards::VirtualIid { .. } => 0,
+        }
+    }
+
+    /// Total samples across all clients (each index appears in
+    /// exactly one shard).
+    pub fn total_samples(&self) -> usize {
+        match self {
+            ClientShards::Dense(s) => s.iter().map(Vec::len).sum(),
+            ClientShards::VirtualIid { order, .. } => order.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(n: usize, k: usize) -> (Vec<Vec<usize>>, ClientShards) {
+        let dense =
+            partition::iid(n, k, &mut Pcg32::new(7, 0x9A27_1710));
+        let virt = ClientShards::virtual_iid(
+            n,
+            k,
+            &mut Pcg32::new(7, 0x9A27_1710),
+        );
+        (dense, virt)
+    }
+
+    #[test]
+    fn virtual_matches_dense_partition() {
+        for (n, k) in [(96usize, 6usize), (100, 7), (5, 9), (0, 3)] {
+            let (dense, virt) = pair(n, k);
+            assert_eq!(virt.n_clients(), k);
+            for (c, shard) in dense.iter().enumerate() {
+                assert_eq!(
+                    virt.shard(c).as_ref(),
+                    &shard[..],
+                    "shard {c} diverged at n={n} k={k}"
+                );
+                assert_eq!(virt.n_k(c), shard.len() as u64);
+            }
+            assert_eq!(virt.total_samples(), n);
+        }
+    }
+
+    #[test]
+    fn virtual_holds_no_per_client_structs() {
+        let (dense, virt) = pair(96, 6);
+        assert_eq!(virt.resident_structs(), 0);
+        assert!(virt.is_virtual());
+        let d = ClientShards::dense(dense);
+        assert_eq!(d.resident_structs(), 6);
+        assert!(!d.is_virtual());
+    }
+
+    #[test]
+    fn million_clients_cost_o_cohort() {
+        // K = 10^6 clients over 96 samples: shards are almost all
+        // empty, n_k is exact, and nothing K-sized is allocated
+        let virt = ClientShards::virtual_iid(
+            96,
+            1_000_000,
+            &mut Pcg32::new(3, 1),
+        );
+        assert_eq!(virt.n_clients(), 1_000_000);
+        assert_eq!(virt.resident_structs(), 0);
+        let total: u64 =
+            (0..200).map(|c| virt.n_k(c * 4999)).sum();
+        assert!(total <= 96);
+        assert_eq!(virt.n_k(95), 1);
+        assert_eq!(virt.n_k(96), 0);
+        assert_eq!(virt.shard(999_999).len(), 0);
+        assert_eq!(virt.shard(95).len(), 1);
+    }
+}

@@ -6,8 +6,11 @@
 
 use crate::fp8::codec::WirePayload;
 use crate::net::codec::{
-    JOB_FRAME_OVERHEAD_BYTES, OUTCOME_FRAME_OVERHEAD_BYTES,
+    partial_wire_bytes, JOB_FRAME_OVERHEAD_BYTES,
+    OUTCOME_FRAME_OVERHEAD_BYTES, PARTIAL_FRAME_OVERHEAD_BYTES,
 };
+
+use super::aggregate::TreePartial;
 
 /// Per-message framing charged on the downlink in addition to the
 /// packed payload: every non-payload byte of a v2 Job frame — the
@@ -33,6 +36,14 @@ pub const DOWNLINK_HEADER_BYTES: u64 = JOB_FRAME_OVERHEAD_BYTES;
 /// wall-clock tuning artifact, not a function of the trajectory).
 pub const UPLINK_HEADER_BYTES: u64 = OUTCOME_FRAME_OVERHEAD_BYTES;
 
+/// Per-message framing charged on a mid-tier -> root partial frame
+/// (tree aggregation): every non-sum byte of a Partial frame — the
+/// envelope plus the round/range/width/count metadata. Same exactness
+/// contract as the job/outcome constants: a partial frame is exactly
+/// `net::codec::partial_wire_bytes(p) + PARTIAL_HEADER_BYTES` on the
+/// wire (asserted by `tests/net_transport.rs`).
+pub const PARTIAL_HEADER_BYTES: u64 = PARTIAL_FRAME_OVERHEAD_BYTES;
+
 /// Downlink: server -> client (global model + clip side channels).
 #[derive(Clone, Debug)]
 pub struct Downlink {
@@ -51,12 +62,22 @@ pub struct Uplink {
 }
 
 /// Running totals of bytes that crossed each link.
+///
+/// Client-edge traffic (up/down) is the paper's communication metric
+/// and is independent of the aggregation topology — a tree moves the
+/// same uplinks, just through mid-tier nodes. Backbone traffic
+/// (mid-tier -> root partials) is tracked separately: it exists only
+/// under `--agg tree:G` and is server-infrastructure cost, not client
+/// communication.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub up_bytes: u64,
     pub down_bytes: u64,
     pub up_msgs: u64,
     pub down_msgs: u64,
+    /// Aggregation-backbone bytes (partial frames), tree mode only.
+    pub partial_bytes: u64,
+    pub partial_msgs: u64,
 }
 
 impl CommStats {
@@ -70,8 +91,19 @@ impl CommStats {
         self.down_msgs += 1;
     }
 
+    pub fn record_partial(&mut self, p: &TreePartial) {
+        self.partial_bytes += partial_wire_bytes(p) + PARTIAL_HEADER_BYTES;
+        self.partial_msgs += 1;
+    }
+
+    /// Client-edge bytes — the paper's communication-gain metric.
     pub fn total_bytes(&self) -> u64 {
         self.up_bytes + self.down_bytes
+    }
+
+    /// Everything that moved, including the aggregation backbone.
+    pub fn grand_total_bytes(&self) -> u64 {
+        self.total_bytes() + self.partial_bytes
     }
 }
 
@@ -109,5 +141,25 @@ mod tests {
         s.record_down(&empty);
         assert_eq!(s.up_bytes, UPLINK_HEADER_BYTES);
         assert_eq!(s.down_bytes, DOWNLINK_HEADER_BYTES);
+    }
+
+    #[test]
+    fn partials_are_backbone_not_client_edge() {
+        let p = TreePartial {
+            start: 0,
+            end: 4,
+            width: 5,
+            ranges: vec![(0, 4)],
+            sums: vec![vec![0.0; 5]],
+        };
+        let mut s = CommStats::default();
+        s.record_partial(&p);
+        // 1 fragment of (16 B range header + 5 * 8 B sums) + 44 B
+        // frame overhead (16 B envelope + 28 B partial meta)
+        assert_eq!(s.partial_bytes, 16 + 40 + 44);
+        assert_eq!(s.partial_msgs, 1);
+        // client-edge metric unaffected; grand total includes it
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.grand_total_bytes(), 100);
     }
 }

@@ -2,14 +2,17 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod cohort;
 pub mod comm;
 pub mod metrics;
 pub mod server;
 pub mod server_opt;
 pub mod transport;
+pub mod tree;
 
+pub use cohort::{ClientShards, VIRTUALIZE_AT};
 pub use metrics::{comm_gain, mean_std, RoundRecord, RunResult};
-pub use server::{build_world, Server, World};
+pub use server::{build_world, ClientStateProbe, Server, World};
 pub use transport::{
     ClientJob, ClientOutcome, InProcessTransport, Transport, WorkBuffers,
 };

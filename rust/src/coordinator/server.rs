@@ -26,24 +26,28 @@
 //! the trajectory is a pure function of the config, independent of
 //! `parallelism` and of worker completion order.
 
+use std::borrow::Cow;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{ExperimentConfig, QatMode, SplitCfg};
+use crate::config::{AggMode, ExperimentConfig, QatMode, SplitCfg};
 use crate::data::{partition, speech, vision, Dataset};
 use crate::fp8::codec::{self, DecodeLutCache, WirePayload};
 use crate::fp8::rng::Pcg32;
 use crate::runtime::{Engine, Manifest, ModelInfo};
 
-use super::aggregate;
+use super::aggregate::{self, Weighting};
 use super::client::ClientRunner;
+use super::cohort::{ClientShards, VIRTUALIZE_AT};
 use super::comm::CommStats;
 use super::metrics::{RoundRecord, RunResult};
 use super::server_opt;
 use super::transport::{
     self, streams, ClientJob, InProcessTransport, Transport,
 };
+use super::tree;
 
 /// The experiment substrate shared by every participant role: the
 /// synthetic datasets and the per-client shards. A **pure function of
@@ -56,7 +60,7 @@ use super::transport::{
 pub struct World {
     pub train: Dataset,
     pub test: Dataset,
-    pub shards: Vec<Vec<usize>>,
+    pub shards: ClientShards,
 }
 
 /// Deterministically generate the data + partition for `cfg`.
@@ -86,12 +90,24 @@ pub fn build_world(
         model.input_shape
     );
     let shards = match cfg.split {
-        SplitCfg::Iid => {
-            partition::iid(train.len(), cfg.clients, &mut rng_data)
+        // the i.i.d. split virtualizes above the population
+        // threshold: same shuffle, same shards, O(n_train) memory
+        // instead of O(clients) resident structs
+        SplitCfg::Iid if cfg.clients >= VIRTUALIZE_AT => {
+            ClientShards::virtual_iid(
+                train.len(),
+                cfg.clients,
+                &mut rng_data,
+            )
         }
-        SplitCfg::Dirichlet(c) => {
-            partition::dirichlet(&train, cfg.clients, c, &mut rng_data)
-        }
+        SplitCfg::Iid => ClientShards::dense(partition::iid(
+            train.len(),
+            cfg.clients,
+            &mut rng_data,
+        )),
+        SplitCfg::Dirichlet(c) => ClientShards::dense(
+            partition::dirichlet(&train, cfg.clients, c, &mut rng_data),
+        ),
         SplitCfg::Speaker => {
             let s = partition::by_group(&train);
             ensure!(
@@ -100,7 +116,7 @@ pub fn build_world(
                 s.len(),
                 cfg.participation
             );
-            s
+            ClientShards::dense(s)
         }
     };
     Ok(World {
@@ -119,13 +135,12 @@ pub struct Server<'a> {
     transport: Box<dyn Transport + 'a>,
     train: Dataset,
     test: Dataset,
-    shards: Vec<Vec<usize>>,
+    shards: ClientShards,
     // FP32 master state
     w: Vec<f32>,
     alpha: Vec<f32>,
     beta: Vec<f32>,
     comm: CommStats,
-    rng_sample: Pcg32,
     /// Reused downlink payload buffer (`encode_into_pooled` target):
     /// one allocation for the life of the run, not one per round.
     down_buf: WirePayload,
@@ -141,8 +156,26 @@ pub struct Server<'a> {
     /// compressing node and adds it back before the next compression,
     /// which restores convergence under *biased* compressors
     /// (Richtárik et al., the fix the paper's Remark 3 points to).
+    /// The per-client map is sparse — only clients that have actually
+    /// participated hold a residual — so a huge virtualized
+    /// population costs O(clients touched), not O(K).
     ef_server: Vec<f32>,
-    ef_clients: Vec<Option<Vec<f32>>>,
+    ef_clients: BTreeMap<usize, Vec<f32>>,
+}
+
+/// Snapshot of the server's per-client state residency — the
+/// struct-count probe behind the virtualized O(cohort) memory
+/// contract (asserted by tests/cohort_virtual.rs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClientStateProbe {
+    /// Per-client shard index vectors held resident (0 when the
+    /// population is virtualized).
+    pub resident_shard_structs: usize,
+    /// Error-feedback residuals allocated so far — grows with the
+    /// set of clients that have participated, never with K.
+    pub ef_residuals: usize,
+    /// True when shards materialize on demand from the sample order.
+    pub virtualized: bool,
 }
 
 impl<'a> Server<'a> {
@@ -166,12 +199,7 @@ impl<'a> Server<'a> {
         transport: Box<dyn Transport + 'a>,
     ) -> Result<Server<'a>> {
         let model = manifest.model(&cfg.model)?;
-        ensure!(
-            cfg.participation <= cfg.clients,
-            "participation {} > clients {}",
-            cfg.participation,
-            cfg.clients
-        );
+        cfg.validate()?;
         if cfg.server_opt.is_some() {
             ensure!(
                 cfg.participation <= model.server_p,
@@ -190,7 +218,6 @@ impl<'a> Server<'a> {
         let w = manifest.load_init(model, "w")?;
         let alpha = manifest.load_init(model, "alpha")?;
         let beta = manifest.load_init(model, "beta")?;
-        let n_clients = shards.len();
         let ef_server = vec![0.0f32; if cfg.error_feedback { model.dim }
                              else { 0 }];
         Ok(Server {
@@ -204,14 +231,13 @@ impl<'a> Server<'a> {
             alpha,
             beta,
             comm: CommStats::default(),
-            rng_sample: Pcg32::new(cfg.seed, 0x5A3F),
             down_buf: WirePayload::default(),
             enc_scratch: Vec::new(),
             down_lut: DecodeLutCache::default(),
             cfg,
             verbose: false,
             ef_server,
-            ef_clients: vec![None; n_clients],
+            ef_clients: BTreeMap::new(),
         })
     }
 
@@ -221,11 +247,20 @@ impl<'a> Server<'a> {
 
     /// Effective client count (speaker split may differ from cfg).
     pub fn n_clients(&self) -> usize {
-        self.shards.len()
+        self.shards.n_clients()
     }
 
     pub fn comm_stats(&self) -> CommStats {
         self.comm
+    }
+
+    /// How much per-client state the server holds right now.
+    pub fn client_state_probe(&self) -> ClientStateProbe {
+        ClientStateProbe {
+            resident_shard_structs: self.shards.resident_structs(),
+            ef_residuals: self.ef_clients.len(),
+            virtualized: self.shards.is_virtual(),
+        }
     }
 
     pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
@@ -282,11 +317,18 @@ impl<'a> Server<'a> {
     pub fn round(&mut self, t: usize) -> Result<f32> {
         let m = self.model;
         let cfg = &self.cfg;
-        // 1. sample participants (server-owned sequential stream:
-        // advances once per round, before any parallel work)
-        let participants = self
-            .rng_sample
-            .sample_distinct(self.shards.len(), cfg.participation);
+        // 1. sample the round's cohort from a counter-derived stream:
+        // a pure function of (seed, round), so any round's cohort can
+        // be reproduced without replaying the rounds before it. The
+        // sparse Fisher-Yates sampler draws the same ids as the dense
+        // one at O(P) memory — a million-client population costs
+        // nothing here.
+        let participants =
+            Pcg32::derive(cfg.seed, t as u64, 0, streams::COHORT)
+                .sample_distinct_sparse(
+                    self.shards.n_clients(),
+                    cfg.participation,
+                );
         // 2. downlink: quantize once, broadcast to P clients (with the
         // optional error-feedback residual folded in pre-compression)
         let mut rng_down =
@@ -340,14 +382,23 @@ impl<'a> Server<'a> {
         let down_buf = &self.down_buf;
 
         // 3-4. local updates + uplinks, fanned out over the transport.
-        // m_t is known before dispatch (the server knows every n_k),
-        // so aggregation can stream with final weights.
+        // m_t is known before dispatch (n_k is O(1) even when the
+        // population is virtualized), so aggregation can stream with
+        // final weights. Only the cohort's shards are materialized —
+        // O(P) per-client structs regardless of K.
         let lr = cfg.schedule.lr_at(cfg.lr, t, cfg.rounds);
         let m_t: u64 = participants
             .iter()
-            .map(|&k| self.shards[k].len() as u64)
+            .map(|&k| self.shards.n_k(k))
             .sum();
-        let n_clients = self.shards.len();
+        // degenerate cohorts (every sampled client empty — routine
+        // when K far exceeds n_train) fall back to uniform weights
+        let weighting = Weighting::for_cohort(m_t, participants.len());
+        let cohort_shards: Vec<Cow<'_, [usize]>> = participants
+            .iter()
+            .map(|&k| self.shards.shard(k))
+            .collect();
+        let n_clients = self.shards.n_clients();
         let mut jobs = Vec::with_capacity(participants.len());
         for (pos, &k) in participants.iter().enumerate() {
             // heterogeneous fleets: a fixed prefix of the client id
@@ -366,8 +417,7 @@ impl<'a> Server<'a> {
             // in-order prefix is recorded, so callers should abandon
             // a failed round rather than continue)
             let ef = if cfg.error_feedback {
-                Some(self.ef_clients[k]
-                    .clone()
+                Some(self.ef_clients.get(&k).cloned()
                     .unwrap_or_else(|| vec![0.0f32; m.dim]))
             } else {
                 None
@@ -388,44 +438,74 @@ impl<'a> Server<'a> {
                 alpha_start: &down_buf.alphas,
                 beta_start: &down_buf.betas,
                 train: &self.train,
-                shard: &self.shards[k],
+                shard: cohort_shards[pos].as_ref(),
                 segments: &m.segments,
-                n_k: self.shards[k].len() as u64,
+                n_k: cohort_shards[pos].len() as u64,
                 ef,
                 down: down_buf,
             });
         }
 
         // 5. streaming aggregation — uplinks are folded in as the
-        // cohort delivers them (cohort order, so FP32 sums are
+        // cohort delivers them (cohort order, so the f64 sums are
         // independent of thread count); per-client tensors are kept
-        // only when ServerOptimize will need them.
-        let mut stream = aggregate::FedAvgStream::new(
-            &m.segments,
-            m.dim,
-            m.alpha_dim,
-            m.n_act,
-            m_t,
-            cfg.server_opt.is_some(),
-        )?;
-        let comm = &mut self.comm;
-        let ef_clients = &mut self.ef_clients;
-        transport::run_cohort(
-            self.transport.as_ref(),
-            jobs,
-            cfg.parallelism,
-            cfg.fp8_kernel,
-            |pos, out| {
-                let k = participants[pos];
-                comm.record_up(&out.uplink.payload);
-                if let Some(e) = out.ef {
-                    ef_clients[k] = Some(e);
-                }
-                stream.push(&out.uplink);
-                Ok(())
-            },
-        )?;
-        let mut agg = stream.finish()?;
+        // only when ServerOptimize will need them. Under `--agg
+        // tree:G` the same uplinks flow through G mid-tier streams
+        // whose partials the root absorbs — bit-identical to flat by
+        // the pairwise accumulator's canonical-form invariant.
+        let mut agg = match cfg.agg {
+            AggMode::Flat => {
+                let mut stream = aggregate::FedAvgStream::with_weighting(
+                    &m.segments,
+                    m.dim,
+                    m.alpha_dim,
+                    m.n_act,
+                    weighting,
+                    cfg.server_opt.is_some(),
+                    0,
+                )?;
+                let comm = &mut self.comm;
+                let ef_clients = &mut self.ef_clients;
+                transport::run_cohort(
+                    self.transport.as_ref(),
+                    jobs,
+                    cfg.parallelism,
+                    cfg.fp8_kernel,
+                    |pos, out| {
+                        comm.record_up(&out.uplink.payload);
+                        if let Some(e) = out.ef {
+                            ef_clients.insert(participants[pos], e);
+                        }
+                        stream.push(&out.uplink);
+                        Ok(())
+                    },
+                )?;
+                stream.finish()?
+            }
+            AggMode::Tree { nodes } => {
+                let ef_clients = &mut self.ef_clients;
+                tree::run_tree(
+                    self.transport.as_ref(),
+                    jobs,
+                    cfg.parallelism,
+                    cfg.fp8_kernel,
+                    nodes,
+                    t as u32,
+                    &m.segments,
+                    m.dim,
+                    m.alpha_dim,
+                    m.n_act,
+                    weighting,
+                    &mut self.comm,
+                    |pos, out| {
+                        if let Some(e) = out.ef.take() {
+                            ef_clients.insert(participants[pos], e);
+                        }
+                        Ok(())
+                    },
+                )?
+            }
+        };
 
         // 6. ServerOptimize (UQ+)
         if let Some(so) = &cfg.server_opt {

@@ -47,6 +47,11 @@ pub mod streams {
     pub const DOWNLINK: u64 = 0xD014;
     /// ServerOptimize stochastic draws (Eq. 4 GD + Eq. 5 grid).
     pub const SERVER_OPT: u64 = 0x50B7;
+    /// Per-round cohort draw (the P-of-K participant sample). Derived
+    /// per round — `Pcg32::derive(seed, round, 0, COHORT)` — so round
+    /// t's cohort is a pure function of (seed, t), independent of how
+    /// many rounds ran before it.
+    pub const COHORT: u64 = 0x5A3F;
 }
 
 /// Work order for one client in one round. Borrows the round-shared

@@ -1,0 +1,197 @@
+//! Two-tier (depth-D composable) aggregation: mid-tier nodes fold a
+//! contiguous shard of the cohort through the ordinary
+//! [`FedAvgStream`] and forward one weighted [`TreePartial`] upstream
+//! through the real wire codec; the root absorbs partials in cohort
+//! order. Because the stream's pairwise accumulator is canonical over
+//! global cohort positions (see `coordinator::aggregate`), the result
+//! is bit-identical to the flat stream for every fan-out and every
+//! `--parallelism` — pinned by tests/tree_determinism.rs.
+//!
+//! A mid-tier node is just a server whose upstream is another
+//! server's client: it reuses the [`Transport`] seam to execute its
+//! shard and the [`FedAvgStream`] it already runs flat; the only new
+//! machinery is the partial frame ([`net::codec::encode_partial`])
+//! and [`FedAvgStream::absorb`]. Depth > 2 is the same composition
+//! applied recursively (a partial of partials — exercised by the
+//! aggregate-layer tests).
+//!
+//! [`net::codec::encode_partial`]: crate::net::codec::encode_partial
+
+use anyhow::{ensure, Result};
+
+use crate::fp8::codec::Segment;
+use crate::fp8::simd::KernelKind;
+use crate::net::codec as wire;
+use crate::net::frame::FRAME_HEADER_BYTES;
+
+use super::aggregate::{Aggregate, FedAvgStream, TreePartial, Weighting};
+use super::comm::{CommStats, PARTIAL_HEADER_BYTES};
+use super::transport::{run_cohort, ClientJob, ClientOutcome, Transport};
+
+/// Contiguous near-equal split of the cohort positions `[0, p)` into
+/// `min(nodes, p)` shards (the first `p % nodes` shards get one extra
+/// position). Empty when `p == 0`.
+pub fn shard_bounds(p: usize, nodes: usize) -> Vec<(usize, usize)> {
+    if p == 0 {
+        return Vec::new();
+    }
+    let g = nodes.max(1).min(p);
+    let (base, extra) = (p / g, p % g);
+    let mut out = Vec::with_capacity(g);
+    let mut s = 0usize;
+    for i in 0..g {
+        let l = base + usize::from(i < extra);
+        out.push((s, s + l));
+        s += l;
+    }
+    debug_assert_eq!(s, p);
+    out
+}
+
+/// Ship one mid-tier partial upstream through the real wire codec:
+/// encode, account the frame, decode. The root therefore absorbs
+/// exactly the bytes a networked mid-tier would have sent — and the
+/// accounting charge equals the true frame size (the
+/// reported-vs-actual identity, also asserted end-to-end in
+/// tests/net_transport.rs).
+pub fn forward_partial(
+    round: u32,
+    partial: &TreePartial,
+    comm: &mut CommStats,
+) -> Result<TreePartial> {
+    let mut body = Vec::new();
+    wire::encode_partial(round, partial, &mut body);
+    comm.record_partial(partial);
+    debug_assert_eq!(
+        FRAME_HEADER_BYTES + body.len() as u64,
+        wire::partial_wire_bytes(partial) + PARTIAL_HEADER_BYTES
+    );
+    let (echo, decoded) = wire::decode_partial(&body)?;
+    ensure!(
+        echo == round,
+        "partial round {echo} does not match round {round}"
+    );
+    Ok(decoded)
+}
+
+/// Run one round's cohort through a depth-2 aggregation tree with
+/// `nodes` mid-tier aggregators and return the root aggregate.
+///
+/// `sink` sees every outcome in global cohort order (exactly like the
+/// flat path's sink) and may take client-private state (the EF
+/// residual) out of it; uplink traffic is charged to `comm` here —
+/// before the sink runs, matching the flat path's record-then-push
+/// order — and uplink decoding and weighting stay inside the streams.
+/// Per-client retention (ServerOptimize) cannot cross a tree link,
+/// which config validation enforces before a round starts.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tree<F>(
+    transport: &dyn Transport,
+    jobs: Vec<ClientJob<'_>>,
+    parallelism: usize,
+    kernel: KernelKind,
+    nodes: usize,
+    round: u32,
+    segments: &[Segment],
+    dim: usize,
+    alpha_dim: usize,
+    beta_dim: usize,
+    weighting: Weighting,
+    comm: &mut CommStats,
+    mut sink: F,
+) -> Result<Aggregate>
+where
+    F: FnMut(usize, &mut ClientOutcome) -> Result<()>,
+{
+    ensure!(nodes > 0, "tree with zero aggregator nodes");
+    // the root never sees uplinks directly, so per-member weights are
+    // reconstructed from the dispatch order afterwards
+    let n_ks: Vec<u64> = jobs.iter().map(|j| j.n_k).collect();
+    let mut root = FedAvgStream::with_weighting(
+        segments, dim, alpha_dim, beta_dim, weighting, false, 0,
+    )?;
+    let mut jobs = jobs.into_iter();
+    for (lo, hi) in shard_bounds(n_ks.len(), nodes) {
+        let shard: Vec<ClientJob<'_>> =
+            jobs.by_ref().take(hi - lo).collect();
+        let mut mid = FedAvgStream::with_weighting(
+            segments,
+            dim,
+            alpha_dim,
+            beta_dim,
+            weighting,
+            false,
+            lo as u64,
+        )?;
+        run_cohort(
+            transport,
+            shard,
+            parallelism,
+            kernel,
+            |rel, mut out| {
+                comm.record_up(&out.uplink.payload);
+                sink(lo + rel, &mut out)?;
+                mid.push(&out.uplink);
+                Ok(())
+            },
+        )?;
+        let partial = forward_partial(
+            round,
+            &mid.into_partial()?,
+            comm,
+        )?;
+        root.absorb(&partial)?;
+    }
+    let mut agg = root.finish()?;
+    agg.kweights =
+        n_ks.iter().map(|&n| weighting.kw(n) as f32).collect();
+    Ok(agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_tile_the_cohort() {
+        for (p, nodes) in
+            [(7usize, 2usize), (7, 3), (7, 7), (7, 20), (4, 1), (1, 5)]
+        {
+            let b = shard_bounds(p, nodes);
+            assert_eq!(b.len(), nodes.min(p));
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[b.len() - 1].1, p);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap in {b:?}");
+            }
+            // near-equal: lengths differ by at most one
+            let lens: Vec<usize> =
+                b.iter().map(|&(s, e)| e - s).collect();
+            let (lo, hi) = (
+                lens.iter().min().unwrap(),
+                lens.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "uneven shards {lens:?}");
+        }
+        assert!(shard_bounds(0, 3).is_empty());
+    }
+
+    #[test]
+    fn forward_partial_accounts_and_roundtrips() {
+        let p = TreePartial {
+            start: 2,
+            end: 4,
+            width: 2,
+            ranges: vec![(2, 2)],
+            sums: vec![vec![0.5, -1.5]],
+        };
+        let mut comm = CommStats::default();
+        let q = forward_partial(3, &p, &mut comm).unwrap();
+        assert_eq!(q, p);
+        assert_eq!(comm.partial_msgs, 1);
+        assert_eq!(
+            comm.partial_bytes,
+            wire::partial_wire_bytes(&p) + PARTIAL_HEADER_BYTES
+        );
+    }
+}

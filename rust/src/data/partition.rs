@@ -5,13 +5,24 @@
 use super::Dataset;
 use crate::fp8::rng::Pcg32;
 
-/// Shuffle and split into `k` near-equal shards.
-pub fn iid(n: usize, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+/// The shuffled sample order behind [`iid`]. Virtualized client state
+/// (`coordinator::cohort::ClientShards`) stores only this O(n)
+/// permutation and materializes any single client's shard on demand;
+/// exposing it separately keeps the RNG consumption — one full
+/// Fisher-Yates shuffle — identical between the dense and virtual
+/// paths.
+pub fn iid_order(n: usize, rng: &mut Pcg32) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..n).collect();
     for i in (1..n).rev() {
         let j = rng.below(i + 1);
         idx.swap(i, j);
     }
+    idx
+}
+
+/// Shuffle and split into `k` near-equal shards.
+pub fn iid(n: usize, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let idx = iid_order(n, rng);
     let mut shards = vec![Vec::with_capacity(n / k + 1); k];
     for (i, v) in idx.into_iter().enumerate() {
         shards[i % k].push(v);

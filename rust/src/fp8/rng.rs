@@ -150,6 +150,34 @@ impl Pcg32 {
         idx
     }
 
+    /// [`Pcg32::sample_distinct`] in O(k) memory: the same partial
+    /// Fisher-Yates over a *virtual* identity array, tracking only the
+    /// displaced entries in a map. The `below` draw sequence is
+    /// identical, so the returned cohort is bit-for-bit the one the
+    /// dense sampler would produce — at any population size — which is
+    /// what lets a K=10^6 client population be cohort-sampled without
+    /// materializing a million-entry index vector.
+    pub fn sample_distinct_sparse(
+        &mut self,
+        n: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        assert!(k <= n);
+        let mut displaced: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            // the dense sampler swaps idx[i] <-> idx[j]; slot i is
+            // never drawn again, so only j's displacement must persist
+            displaced.insert(j, vi);
+            out.push(vj);
+        }
+        out
+    }
+
     /// Gamma(shape, 1) via Marsaglia-Tsang (shape >= 0); used for
     /// Dirichlet partitioning.
     pub fn gamma(&mut self, shape: f64) -> f64 {
@@ -233,6 +261,37 @@ mod tests {
         u.dedup();
         assert_eq!(u.len(), 10);
         assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sparse_sampler_matches_dense_bitwise() {
+        // the virtualization contract: identical draw sequence =>
+        // identical cohorts, for every (n, k) shape incl. k == n
+        for (n, k) in [
+            (1usize, 0usize),
+            (1, 1),
+            (7, 7),
+            (100, 10),
+            (100, 100),
+            (4096, 64),
+            (65_537, 256),
+        ] {
+            let dense = Pcg32::new(6, 0xC0).sample_distinct(n, k);
+            let sparse =
+                Pcg32::new(6, 0xC0).sample_distinct_sparse(n, k);
+            assert_eq!(sparse, dense, "diverged at n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn sparse_sampler_is_distinct_and_in_range() {
+        let mut r = Pcg32::new(9, 1);
+        let s = r.sample_distinct_sparse(1_000_000, 256);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 256);
+        assert!(s.iter().all(|&i| i < 1_000_000));
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //! fedfp8 run --preset lenet_c10:uq+:iid [--rounds N] [--seed S]
 //!            [--parallelism T]  # concurrent client workers per round
 //!            [--fp8-kernel scalar|simd|auto]  # codec inner loops
+//!            [--cohort P | --cohort-frac F]  # per-round cohort size
+//!            [--agg flat|tree:G]  # aggregation topology (G mid-tier
+//!            # nodes; bit-identical to flat by construction)
 //! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
 //!            --workers 2        # drive remote workers over TCP
 //!            [--net-inflight 4]   # jobs in flight per connection
@@ -52,6 +55,8 @@ fn apply_overrides(
     cfg.eval_every = args.parse_or("eval-every", cfg.eval_every)?;
     cfg.n_train = args.parse_or("n-train", cfg.n_train)?;
     cfg.n_test = args.parse_or("n-test", cfg.n_test)?;
+    // --cohort / --cohort-frac / --agg, then whole-config validation
+    cfg.apply_scale_flags(args)?;
     Ok(cfg)
 }
 
@@ -107,11 +112,12 @@ fn run_local(preset: &str, cfg: ExperimentConfig) -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     println!(
         "platform={}  preset={preset}  rounds={}  K={}  P={}  \
-         parallelism={}  fp8-kernel={} ({})",
+         agg={}  parallelism={}  fp8-kernel={} ({})",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
         cfg.participation,
+        cfg.agg,
         cfg.parallelism,
         cfg.fp8_kernel,
         cfg.fp8_kernel.resolve().name(),
@@ -220,7 +226,7 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
          fingerprint={:#018x}  connecting to {}",
         engine.platform(),
         cfg.model,
-        shards.len(),
+        shards.n_clients(),
         opts.exec_threads,
         hello.fingerprint,
         net.addr,

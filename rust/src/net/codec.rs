@@ -53,6 +53,7 @@
 //! independent Python mirror `tools/gen_wire_fixture.py`.
 
 use crate::config::QatMode;
+use crate::coordinator::aggregate::TreePartial;
 use crate::coordinator::transport::ClientJob;
 use crate::fp8::codec::{Rounding, WirePayload};
 
@@ -532,6 +533,97 @@ pub fn decode_heartbeat(body: &[u8]) -> Result<u64, WireError> {
     Ok(nonce)
 }
 
+// ---- tree-aggregation partial --------------------------------------
+
+/// Fixed scalar metadata of a Partial body: round u32 + start u64 +
+/// end u64 + width u32 + fragment count u32.
+pub const PARTIAL_META_BYTES: u64 = 28;
+/// Per-fragment header: fragment start u64 + fragment len u64.
+pub const PARTIAL_RANGE_HEADER_BYTES: u64 = 16;
+/// Every non-sum byte of a partial frame per message (envelope +
+/// meta) — the backbone framing charge in `coordinator::comm`.
+pub const PARTIAL_FRAME_OVERHEAD_BYTES: u64 =
+    FRAME_HEADER_BYTES + PARTIAL_META_BYTES;
+
+/// Per-fragment wire cost: range header + `width` raw f64 sums.
+pub fn partial_fragment_bytes(width: u64) -> u64 {
+    PARTIAL_RANGE_HEADER_BYTES + 8 * width
+}
+
+/// The payload-proportional bytes of an encoded partial (everything
+/// except [`PARTIAL_FRAME_OVERHEAD_BYTES`]); a full partial frame is
+/// exactly `partial_wire_bytes(p) + PARTIAL_FRAME_OVERHEAD_BYTES` —
+/// the reported-vs-actual identity asserted in
+/// tests/net_transport.rs.
+pub fn partial_wire_bytes(p: &TreePartial) -> u64 {
+    p.ranges.len() as u64 * partial_fragment_bytes(p.width as u64)
+}
+
+/// Encode a [`TreePartial`] body ([`FrameKind::Partial`]). The f64
+/// sums travel as raw little-endian bit patterns, so a decoded
+/// partial is bit-identical to the sender's accumulator state — the
+/// property the tree-vs-flat contract rests on.
+///
+/// [`FrameKind::Partial`]: super::frame::FrameKind::Partial
+pub fn encode_partial(round: u32, p: &TreePartial, out: &mut Vec<u8>) {
+    out.clear();
+    put_u32(out, round);
+    put_u64(out, p.start);
+    put_u64(out, p.end);
+    put_u32(out, p.width);
+    put_u32(out, p.ranges.len() as u32);
+    debug_assert_eq!(out.len() as u64, PARTIAL_META_BYTES);
+    for (&(s, l), sum) in p.ranges.iter().zip(&p.sums) {
+        put_u64(out, s);
+        put_u64(out, l);
+        out.reserve(sum.len() * 8);
+        for &v in sum {
+            put_u64(out, v.to_bits());
+        }
+    }
+}
+
+/// Decode a Partial body. Rejects trailing bytes; structural
+/// validation (contiguity, tiling) happens in
+/// `FedAvgStream::absorb`.
+pub fn decode_partial(
+    body: &[u8],
+) -> Result<(u32, TreePartial), WireError> {
+    let mut r = Reader::new(body);
+    let round = r.u32("round")?;
+    let start = r.u64("partial start")?;
+    let end = r.u64("partial end")?;
+    let width = r.u32("partial width")? as usize;
+    let n = r.u32("fragment count")? as usize;
+    // cap pre-reservation by what the body could possibly hold, so a
+    // corrupt count cannot trigger a giant allocation before the
+    // bounds-checked reads fail
+    let cap = n.min(body.len() / PARTIAL_RANGE_HEADER_BYTES as usize);
+    let mut ranges = Vec::with_capacity(cap);
+    let mut sums = Vec::with_capacity(cap);
+    for _ in 0..n {
+        let s = r.u64("fragment start")?;
+        let l = r.u64("fragment len")?;
+        let mut sum = Vec::with_capacity(width.min(body.len() / 8));
+        for _ in 0..width {
+            sum.push(f64::from_bits(r.u64("fragment sum")?));
+        }
+        ranges.push((s, l));
+        sums.push(sum);
+    }
+    r.finish()?;
+    Ok((
+        round,
+        TreePartial {
+            start,
+            end,
+            width: width as u32,
+            ranges,
+            sums,
+        },
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -697,5 +789,73 @@ mod tests {
         let mut body = Vec::new();
         encode_job(&j, &mut body);
         assert_eq!(decode_job(&body).unwrap(), j);
+    }
+
+    fn sample_partial() -> TreePartial {
+        TreePartial {
+            start: 4,
+            end: 11,
+            width: 3,
+            ranges: vec![(4, 4), (8, 2), (10, 1)],
+            sums: vec![
+                vec![1.5, -0.25, f64::NAN],
+                vec![0.1 + 0.2, f64::INFINITY, -0.0],
+                vec![1e-310, 7.0, 42.0],
+            ],
+        }
+    }
+
+    #[test]
+    fn partial_roundtrips_bit_exactly() {
+        // NaN / inf / subnormal / -0.0 all survive: sums travel as
+        // raw bit patterns, not values
+        let p = sample_partial();
+        let mut body = Vec::new();
+        encode_partial(9, &p, &mut body);
+        let (round, q) = decode_partial(&body).unwrap();
+        assert_eq!(round, 9);
+        assert_eq!((q.start, q.end, q.width), (p.start, p.end, p.width));
+        assert_eq!(q.ranges, p.ranges);
+        for (a, b) in q.sums.iter().zip(&p.sums) {
+            let bits =
+                |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(a), bits(b));
+        }
+    }
+
+    #[test]
+    fn partial_overhead_identity() {
+        // the backbone accounting contract, mirroring the job/outcome
+        // constants: frame bytes = fragment wire bytes + a constant
+        let p = sample_partial();
+        let mut body = Vec::new();
+        encode_partial(0, &p, &mut body);
+        assert_eq!(
+            FRAME_HEADER_BYTES + body.len() as u64,
+            partial_wire_bytes(&p) + PARTIAL_FRAME_OVERHEAD_BYTES
+        );
+    }
+
+    #[test]
+    fn partial_truncation_and_trailing_are_malformed() {
+        let p = sample_partial();
+        let mut body = Vec::new();
+        encode_partial(0, &p, &mut body);
+        let err = decode_partial(&body[..body.len() - 3]).unwrap_err();
+        assert!(matches!(err, WireError::Malformed { .. }), "{err}");
+        body.push(0);
+        let err = decode_partial(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed { .. }), "{err}");
+    }
+
+    #[test]
+    fn partial_corrupt_count_fails_without_huge_alloc() {
+        let p = sample_partial();
+        let mut body = Vec::new();
+        encode_partial(0, &p, &mut body);
+        // fragment count lives at meta offset 24..28: forge u32::MAX
+        body[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_partial(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed { .. }), "{err}");
     }
 }

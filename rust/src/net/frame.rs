@@ -46,6 +46,11 @@ pub const MAGIC: [u8; 4] = *b"FP8W";
 /// Heartbeat/HeartbeatAck frames exist. v1 frames decode to a typed
 /// [`WireError::VersionMismatch`] (pinned by `tests/golden_wire.rs`
 /// against the retained `wire_v1.bin` fixture).
+///
+/// [`FrameKind::Partial`] (tree aggregation) was added *within* v2:
+/// a new kind alters no existing layout, so v2 peers that predate it
+/// interoperate fully on the client edge and reject partial frames
+/// with a typed [`WireError::UnknownKind`] instead of misparsing.
 pub const WIRE_VERSION: u16 = 2;
 
 /// Envelope size preceding every body.
@@ -74,6 +79,10 @@ pub enum FrameKind {
     Heartbeat = 6,
     /// Reply to a [`FrameKind::Heartbeat`], echoing its nonce.
     HeartbeatAck = 7,
+    /// Mid-tier aggregator -> upstream: one weighted FedAvg partial
+    /// over a contiguous cohort shard (tree aggregation; body layout
+    /// in `net::codec::encode_partial`).
+    Partial = 8,
 }
 
 impl FrameKind {
@@ -86,6 +95,7 @@ impl FrameKind {
             5 => FrameKind::Shutdown,
             6 => FrameKind::Heartbeat,
             7 => FrameKind::HeartbeatAck,
+            8 => FrameKind::Partial,
             got => return Err(WireError::UnknownKind { got }),
         })
     }

@@ -50,6 +50,7 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::coordinator::cohort::ClientShards;
 use crate::coordinator::transport::{ClientJob, Transport, WorkBuffers};
 use crate::data::Dataset;
 use crate::fp8::codec::{self as fp8codec, DecodeLutCache, Segment};
@@ -67,7 +68,7 @@ use super::frame::{
 /// copy by the handshake fingerprint.
 pub struct WorkerCtx<'a> {
     pub train: &'a Dataset,
-    pub shards: &'a [Vec<usize>],
+    pub shards: &'a ClientShards,
     pub segments: &'a [Segment],
     /// This worker's uplink quantize/encode kernel (from its own
     /// config copy; bit-identical across kernels, so workers and
@@ -473,17 +474,17 @@ fn reader_loop(
 fn validate_job(wire: &WireJob, ctx: &WorkerCtx<'_>) -> Result<()> {
     let client = wire.client as usize;
     ensure!(
-        client < ctx.shards.len(),
+        client < ctx.shards.n_clients(),
         "job for client {client}, but this world has only {} \
          clients — configs out of sync despite matching fingerprints?",
-        ctx.shards.len()
+        ctx.shards.n_clients()
     );
     ensure!(
-        wire.n_k == ctx.shards[client].len() as u64,
+        wire.n_k == ctx.shards.n_k(client),
         "job for client {client} says n_k = {}, local shard has {} \
          samples — worlds diverged",
         wire.n_k,
-        ctx.shards[client].len()
+        ctx.shards.n_k(client)
     );
     Ok(())
 }
@@ -570,6 +571,9 @@ fn run_one(
         1,
         w_start,
     );
+    // materialized on demand under a virtualized population (Cow is
+    // a borrow for dense shards — no copy on the common path)
+    let shard = ctx.shards.shard(client);
     let job = ClientJob {
         round,
         client,
@@ -584,7 +588,7 @@ fn run_one(
         alpha_start: &wire.down.alphas,
         beta_start: &wire.down.betas,
         train: ctx.train,
-        shard: &ctx.shards[client],
+        shard: shard.as_ref(),
         segments: ctx.segments,
         n_k: wire.n_k,
         ef: wire.ef,

@@ -1,0 +1,172 @@
+//! Deterministic cohort sampling + virtualized client state, end to
+//! end: per-round cohorts are a pure function of `(seed, round)`
+//! drawn O(P) from a counter-derived stream, and a million-client
+//! population costs O(cohort) resident per-client state — pinned by
+//! the [`ClientStateProbe`] struct-count probe.
+//!
+//! [`ClientStateProbe`]: fedfp8::coordinator::server::ClientStateProbe
+
+mod common;
+
+use std::collections::BTreeSet;
+
+use common::{mock_cfg, mock_manifest, MockTransport, Trace};
+use fedfp8::config::AggMode;
+use fedfp8::coordinator::transport::streams;
+use fedfp8::coordinator::{Server, VIRTUALIZE_AT};
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::runtime::Engine;
+
+fn cohort_of(seed: u64, round: u64, k: usize, p: usize) -> Vec<usize> {
+    Pcg32::derive(seed, round, 0, streams::COHORT)
+        .sample_distinct_sparse(k, p)
+}
+
+#[test]
+fn cohort_is_a_pure_function_of_seed_and_round() {
+    let (k, p) = (1_000_000usize, 256usize);
+    let a = cohort_of(11, 3, k, p);
+    // reproducible: no dependence on prior rounds or shared state
+    assert_eq!(a, cohort_of(11, 3, k, p));
+    // distinct, in range
+    let set: BTreeSet<usize> = a.iter().copied().collect();
+    assert_eq!(set.len(), p, "cohort has duplicates");
+    assert!(a.iter().all(|&c| c < k));
+    // different rounds / seeds draw different cohorts
+    assert_ne!(a, cohort_of(11, 4, k, p));
+    assert_ne!(a, cohort_of(12, 3, k, p));
+    // the sparse sampler IS the dense sampler, draw for draw
+    let dense = Pcg32::derive(11, 3, 0, streams::COHORT)
+        .sample_distinct(70_000, 256);
+    let sparse = cohort_of(11, 3, 70_000, 256);
+    assert_eq!(dense, sparse);
+}
+
+#[test]
+fn cohort_size_is_a_fingerprint_field() {
+    // changing --cohort must change the config fingerprint (it moves
+    // the trajectory), unlike the topology/parallelism levers
+    let base = mock_cfg(1, false);
+    let mut bigger = base.clone();
+    bigger.participation += 1;
+    assert_ne!(base.fingerprint(), bigger.fingerprint());
+    let mut tree = base.clone();
+    tree.agg = AggMode::Tree { nodes: 4 };
+    assert_eq!(base.fingerprint(), tree.fingerprint());
+}
+
+/// Run `rounds` mock rounds at population `k`, cohort `p`; returns
+/// the server for probing plus the trace.
+fn run_million(
+    tag: &str,
+    k: usize,
+    p: usize,
+    rounds: usize,
+    error_feedback: bool,
+    agg: AggMode,
+) -> (Trace, fedfp8::coordinator::server::ClientStateProbe) {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut cfg = mock_cfg(1, error_feedback);
+    cfg.clients = k;
+    cfg.participation = p;
+    cfg.rounds = rounds;
+    cfg.agg = agg;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let mut losses = Vec::new();
+    for t in 0..rounds {
+        losses.push(server.round(t).unwrap().to_bits());
+    }
+    let probe = server.client_state_probe();
+    (Trace::capture(&server, losses), probe)
+}
+
+#[test]
+fn million_clients_round_in_o_cohort_memory() {
+    // the headline acceptance: K = 10^6, cohort 256, on a 96-sample
+    // world — every sampled shard is (almost surely) empty, so this
+    // also exercises the degenerate uniform-weighting path
+    let (trace, probe) =
+        run_million("m1", 1_000_000, 256, 1, false, AggMode::Flat);
+    // the struct-count probe: zero resident per-client shard structs
+    assert!(probe.virtualized);
+    assert_eq!(probe.resident_shard_structs, 0);
+    assert_eq!(probe.ef_residuals, 0);
+    // the round really ran its 256 clients and produced a finite mean
+    assert_eq!(trace.comm.up_msgs, 256);
+    assert_eq!(trace.comm.down_msgs, 256);
+    let loss = f32::from_bits(trace.losses[0]);
+    assert!(loss.is_finite(), "mean loss {loss} not finite");
+}
+
+#[test]
+fn million_clients_ef_state_grows_with_touched_cohorts_only() {
+    let (_, probe) =
+        run_million("m_ef", 1_000_000, 64, 2, true, AggMode::Flat);
+    assert!(probe.virtualized);
+    assert_eq!(probe.resident_shard_structs, 0);
+    // EF residuals allocate per *touched* client, never per K
+    assert!(
+        probe.ef_residuals > 0 && probe.ef_residuals <= 2 * 64,
+        "ef_residuals = {}",
+        probe.ef_residuals
+    );
+}
+
+#[test]
+fn million_client_tree_matches_flat() {
+    let (flat, _) =
+        run_million("m_flat", 1_000_000, 64, 2, false, AggMode::Flat);
+    let (tree, probe) = run_million(
+        "m_tree",
+        1_000_000,
+        64,
+        2,
+        false,
+        AggMode::Tree { nodes: 8 },
+    );
+    assert!(probe.virtualized);
+    assert_eq!(flat.w, tree.w);
+    assert_eq!(flat.alpha, tree.alpha);
+    assert_eq!(flat.beta, tree.beta);
+    assert_eq!(flat.losses, tree.losses);
+    assert_eq!(tree.comm.partial_msgs, 2 * 8);
+}
+
+#[test]
+fn dense_worlds_stay_dense_below_the_threshold() {
+    let (_, probe) =
+        run_million("m_dense", 64, 16, 1, false, AggMode::Flat);
+    assert!(!probe.virtualized);
+    assert_eq!(probe.resident_shard_structs, 64);
+    assert!(64 < VIRTUALIZE_AT);
+}
+
+/// Nightly-soak smoke (see .github/workflows/nightly-soak.yml): a
+/// longer virtualized run with EF + tree, still O(cohort) resident.
+#[test]
+#[ignore]
+fn million_client_virtualized_soak() {
+    let (trace, probe) = run_million(
+        "m_soak",
+        1_000_000,
+        256,
+        8,
+        true,
+        AggMode::Tree { nodes: 16 },
+    );
+    assert!(probe.virtualized);
+    assert_eq!(probe.resident_shard_structs, 0);
+    assert!(probe.ef_residuals <= 8 * 256);
+    assert_eq!(trace.comm.up_msgs, 8 * 256);
+    for bits in &trace.losses {
+        assert!(f32::from_bits(*bits).is_finite());
+    }
+}

@@ -246,11 +246,31 @@ pub fn run_mock_kernel(
     kernel: fedfp8::fp8::simd::KernelKind,
 ) -> Trace {
     let tag = format!("det_p{parallelism}_ef{error_feedback}_{kernel}");
-    let (dir, manifest) = mock_manifest(&tag);
-    let engine = Engine::new(&dir).unwrap();
-    let transport = MockTransport::new(true);
     let mut cfg = mock_cfg(parallelism, error_feedback);
     cfg.fp8_kernel = kernel;
+    run_mock_cfg(&tag, cfg)
+}
+
+/// [`run_mock`] with an explicit aggregation topology — `--agg
+/// tree:G` is a pure topology lever, so every fan-out must produce
+/// the same model trajectory as the flat stream.
+pub fn run_mock_agg(
+    parallelism: usize,
+    error_feedback: bool,
+    agg: fedfp8::config::AggMode,
+) -> Trace {
+    let tag = format!("agg_p{parallelism}_ef{error_feedback}_{agg}");
+    let mut cfg = mock_cfg(parallelism, error_feedback);
+    cfg.agg = agg;
+    run_mock_cfg(&tag, cfg)
+}
+
+/// Run an arbitrary mock-model config to completion and capture its
+/// bit-exact trace.
+pub fn run_mock_cfg(tag: &str, cfg: ExperimentConfig) -> Trace {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(true);
     let rounds = cfg.rounds;
     let mut server = Server::with_transport(
         &engine,

@@ -633,7 +633,7 @@ fn reconnect_serves_cached_bit_identical_outcome() {
         flip_aug: cfg.flip_aug,
         lr: cfg.lr,
         weight_decay: cfg.weight_decay,
-        n_k: world.shards[0].len() as u64,
+        n_k: world.shards.n_k(0),
         down,
         ef: None,
     };

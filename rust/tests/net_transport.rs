@@ -427,3 +427,50 @@ fn corrupted_outcome_checksum_names_the_client() {
     assert!(msg.contains("client 0"), "missing client id: {msg}");
     assert!(msg.contains("checksum"), "not a checksum error: {msg}");
 }
+
+#[test]
+fn partial_frame_reported_bytes_equal_actual_bytes() {
+    // the tree backbone obeys the same reported == actual identity as
+    // the client edge: a mid-tier -> root partial frame on the wire
+    // is byte-for-byte what CommStats charges for it, and the f64
+    // sums survive the trip bit-exactly
+    use fedfp8::coordinator::aggregate::TreePartial;
+    use fedfp8::coordinator::comm::CommStats;
+    use fedfp8::net::codec as wire;
+
+    let p = TreePartial {
+        start: 4,
+        end: 11,
+        width: 3,
+        ranges: vec![(4, 4), (8, 2), (10, 1)],
+        sums: vec![
+            vec![1.5e-300, -0.0, f64::INFINITY],
+            vec![0.1, 0.2, 0.3],
+            vec![-7.25, 1e300, 5e-324],
+        ],
+    };
+    let mut body = Vec::new();
+    wire::encode_partial(9, &p, &mut body);
+    let mut framed = Vec::new();
+    frame::write_frame(&mut framed, FrameKind::Partial, &body)
+        .unwrap();
+
+    let mut comm = CommStats::default();
+    comm.record_partial(&p);
+    assert_eq!(
+        comm.partial_bytes,
+        framed.len() as u64,
+        "CommStats charge != bytes on the wire"
+    );
+    assert_eq!(comm.partial_msgs, 1);
+
+    let (round, q) = wire::decode_partial(&body).unwrap();
+    assert_eq!(round, 9);
+    for (a, b) in p.sums.iter().zip(&q.sums) {
+        let bits = |v: &[f64]| -> Vec<u64> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(a), bits(b), "f64 sums not bit-exact");
+    }
+    assert_eq!(p, q);
+}

@@ -1,0 +1,103 @@
+//! The tree-vs-flat invariant, end to end: running a round's cohort
+//! through a depth-2 aggregation tree (`--agg tree:G`) must produce a
+//! **bit-identical** model trajectory to the flat stream, for every
+//! fan-out, every `--parallelism`, and with error feedback on or off.
+//!
+//! This is the pinned contract that makes the tree a pure perf/scale
+//! lever: mid-tier partials travel through the real wire codec
+//! (encode → account → decode), and the root's canonical pairwise
+//! accumulator replays exactly the f64 adds the flat stream would
+//! have performed (see `coordinator::aggregate`). Client-edge
+//! communication accounting is also topology-independent; only the
+//! backbone partial counters may differ.
+
+mod common;
+
+use common::{mock_cfg, mock_manifest, run_mock_agg, MockTransport};
+use fedfp8::config::AggMode;
+use fedfp8::coordinator::Server;
+use fedfp8::runtime::Engine;
+
+/// Flat-vs-tree comparison ignoring the backbone counters (which are
+/// *supposed* to differ: partials exist only under tree aggregation).
+fn assert_same_trajectory(
+    flat: &common::Trace,
+    tree: &common::Trace,
+    what: &str,
+) {
+    assert_eq!(flat.w, tree.w, "w diverged: {what}");
+    assert_eq!(flat.alpha, tree.alpha, "alpha diverged: {what}");
+    assert_eq!(flat.beta, tree.beta, "beta diverged: {what}");
+    assert_eq!(flat.losses, tree.losses, "losses diverged: {what}");
+    // client-edge traffic is identical byte-for-byte — a tree moves
+    // the same uplinks/downlinks, just through mid-tier nodes
+    assert_eq!(flat.comm.up_bytes, tree.comm.up_bytes, "{what}");
+    assert_eq!(flat.comm.down_bytes, tree.comm.down_bytes, "{what}");
+    assert_eq!(flat.comm.up_msgs, tree.comm.up_msgs, "{what}");
+    assert_eq!(flat.comm.down_msgs, tree.comm.down_msgs, "{what}");
+}
+
+#[test]
+fn tree_matches_flat_bitwise_for_every_fanout() {
+    // sequential baseline; EF off. Mock cohort is P=4 over 4 rounds.
+    let flat = run_mock_agg(1, false, AggMode::Flat);
+    assert_eq!(flat.comm.partial_msgs, 0, "flat must not emit partials");
+    for nodes in [1usize, 2, 3, 4, 7] {
+        let tree = run_mock_agg(1, false, AggMode::Tree { nodes });
+        assert_same_trajectory(&flat, &tree, &format!("tree:{nodes}"));
+        // one partial per materialized mid-tier node per round
+        let per_round = nodes.min(4) as u64;
+        assert_eq!(tree.comm.partial_msgs, 4 * per_round);
+        assert!(tree.comm.partial_bytes > 0);
+        assert!(
+            tree.comm.grand_total_bytes()
+                > tree.comm.total_bytes()
+        );
+    }
+}
+
+#[test]
+fn tree_matches_flat_under_parallelism_and_ef() {
+    // the acceptance grid: parallelism {1, 4} x EF {off, on}, fan-out
+    // 2 — tree composes with the reorder buffer and with per-client
+    // EF residual state (which flows through the sink, not the tree)
+    for ef in [false, true] {
+        let flat = run_mock_agg(1, ef, AggMode::Flat);
+        for par in [1usize, 4] {
+            let tree =
+                run_mock_agg(par, ef, AggMode::Tree { nodes: 2 });
+            assert_same_trajectory(
+                &flat,
+                &tree,
+                &format!("par={par} ef={ef}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn tree_rejects_server_optimize_at_construction() {
+    // per-client retention cannot cross a tree link; the config layer
+    // rejects the combination before any round runs
+    let (dir, manifest) = mock_manifest("tree_so");
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut cfg = mock_cfg(1, false);
+    cfg.agg = AggMode::Tree { nodes: 2 };
+    cfg.server_opt =
+        Some(fedfp8::config::ServerOptCfg::default());
+    let err = match Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    ) {
+        Ok(_) => panic!("tree + ServerOptimize must be rejected"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("tree") || msg.contains("ServerOptimize"),
+        "unhelpful error: {msg}"
+    );
+}

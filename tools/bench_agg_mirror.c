@@ -1,0 +1,504 @@
+/* C mirror of rust/benches/round_agg.rs — seeds BENCH_agg_tree.json
+ * when no Rust toolchain is available.
+ *
+ * Replicates the round-aggregation scale paths op-for-op:
+ *   - agg: the canonical pairwise f64 accumulator
+ *     (rust/src/coordinator/aggregate.rs — leaf per uplink, adjacent
+ *     fragments merge iff equal length on a 2l boundary, right-fold
+ *     at finish), flat vs a depth-2 tree with 16 mid-tier nodes whose
+ *     partials are serialized/deserialized through a byte buffer the
+ *     way forward_partial drives the wire codec. The per-uplink
+ *     "decode" is a 256-entry LUT pass over 1-byte codes — the same
+ *     table-lookup inner loop as decode_pooled; the full FP8 format
+ *     math is benchmarked separately (BENCH_fp8_kernels.json).
+ *   - sample: dense partial Fisher-Yates (O(K) index vector per
+ *     draw) vs the sparse sampler (O(P) displacement map), same
+ *     PCG32 `below` draw sequence (rust/src/fp8/rng.rs).
+ *   - world: dense round-robin iid sharding at K=10^6 (a million
+ *     resident shard structs) vs the virtualized order-only map plus
+ *     a full cohort's on-demand shard materialization
+ *     (rust/src/coordinator/cohort.rs).
+ *
+ * Build & run (repo root):
+ *   gcc -O3 -o /tmp/agg_mirror tools/bench_agg_mirror.c -lm
+ *   /tmp/agg_mirror            # writes BENCH_agg_tree.json
+ *
+ * `cargo bench --bench round_agg` overwrites the JSON with native
+ * Rust numbers whenever a Rust toolchain is present.
+ */
+
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ---- PCG32 (twin of rust/src/fp8/rng.rs) -------------------------- */
+
+typedef struct { uint64_t state, inc; } Pcg32;
+
+static uint64_t splitmix(uint64_t *s) {
+    *s += 0x9E3779B97F4A7C15ULL;
+    uint64_t z = *s;
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+
+static inline uint32_t pcg_u32(Pcg32 *r) {
+    uint64_t old = r->state;
+    r->state = old * 6364136223846793005ULL + r->inc;
+    uint32_t xs = (uint32_t)(((old >> 18) ^ old) >> 27);
+    uint32_t rot = (uint32_t)(old >> 59);
+    return (xs >> rot) | (xs << ((32 - rot) & 31));
+}
+
+static Pcg32 pcg_new(uint64_t seed, uint64_t stream) {
+    uint64_t s = seed ^ ((stream << 17) | (stream >> 47));
+    Pcg32 r;
+    r.state = splitmix(&s);
+    r.inc = splitmix(&s) | 1;
+    pcg_u32(&r);
+    return r;
+}
+
+static inline uint64_t pcg_u64(Pcg32 *r) {
+    return ((uint64_t)pcg_u32(r) << 32) | pcg_u32(r);
+}
+
+static inline double pcg_f64(Pcg32 *r) {
+    return (double)(pcg_u64(r) >> 11) * (1.0 / 9007199254740992.0);
+}
+
+static inline size_t pcg_below(Pcg32 *r, size_t bound) {
+    return (size_t)(pcg_u64(r) % (uint64_t)bound);
+}
+
+/* ---- bench harness (twin of rust/src/util/bench.rs) --------------- */
+
+typedef struct {
+    const char *name;
+    long iters;
+    double median_ns, p10_ns, p90_ns;
+} BResult;
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1e9 + ts.tv_nsec;
+}
+
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+#define MAX_SAMPLES 100000
+static double SAMPLES[MAX_SAMPLES];
+
+static BResult bench_run(const char *name, void (*f)(void),
+                         double budget_ms) {
+    double warm_end = now_ns() + budget_ms * 1e6 / 5.0;
+    while (now_ns() < warm_end) f();
+    long n = 0;
+    double end = now_ns() + budget_ms * 1e6;
+    while ((now_ns() < end || n < 5) && n < MAX_SAMPLES) {
+        double t0 = now_ns();
+        f();
+        SAMPLES[n++] = now_ns() - t0;
+    }
+    qsort(SAMPLES, n, sizeof(double), cmp_d);
+    BResult r;
+    r.name = name;
+    r.iters = n;
+    r.median_ns = SAMPLES[(long)((n - 1) * 0.5)];
+    r.p10_ns = SAMPLES[(long)((n - 1) * 0.1)];
+    r.p90_ns = SAMPLES[(long)((n - 1) * 0.9)];
+    printf("%-44s %12.0f %12.0f %12.0f  (ns, median/p10/p90)\n",
+           r.name, r.median_ns, r.p10_ns, r.p90_ns);
+    return r;
+}
+
+/* ---- canonical pairwise accumulator ------------------------------- */
+
+#define DIM 64
+#define WIDTH (DIM + 3) /* w | alpha | beta | loss */
+#define NODES 16
+#define MAXFRAG 64 /* O(log P) pending fragments; 64 covers 2^64 */
+
+typedef struct {
+    uint64_t next_pos;
+    int n, nspare;
+    uint64_t starts[MAXFRAG], lens[MAXFRAG];
+    double *sums[MAXFRAG];
+    double *spare[MAXFRAG];
+} Acc;
+
+static void acc_init(Acc *a, uint64_t start) {
+    a->next_pos = start;
+    a->n = 0;
+    /* nspare persists across rounds: buffers recycle like Rust's */
+}
+
+static double *acc_leaf_buf(Acc *a) {
+    if (a->nspare > 0) {
+        double *v = a->spare[--a->nspare];
+        memset(v, 0, WIDTH * sizeof(double));
+        return v;
+    }
+    return calloc(WIDTH, sizeof(double));
+}
+
+static void acc_settle(Acc *a) {
+    while (a->n >= 2) {
+        uint64_t l1 = a->lens[a->n - 1], l0 = a->lens[a->n - 2];
+        uint64_t s0 = a->starts[a->n - 2];
+        if (l0 != l1 || s0 % (2 * l0) != 0) break;
+        double *top = a->sums[a->n - 1], *into = a->sums[a->n - 2];
+        for (int i = 0; i < WIDTH; i++) into[i] += top[i];
+        a->spare[a->nspare++] = top;
+        a->n--;
+        a->lens[a->n - 1] = 2 * l0;
+    }
+}
+
+static void acc_push_leaf(Acc *a, double *leaf) {
+    a->starts[a->n] = a->next_pos;
+    a->lens[a->n] = 1;
+    a->sums[a->n++] = leaf;
+    a->next_pos++;
+    acc_settle(a);
+}
+
+static void acc_append_range(Acc *a, uint64_t start, uint64_t len,
+                             double *sum) {
+    a->starts[a->n] = start;
+    a->lens[a->n] = len;
+    a->sums[a->n++] = sum;
+    a->next_pos = start + len;
+    acc_settle(a);
+}
+
+static double acc_finish(Acc *a) {
+    while (a->n > 1) {
+        double *top = a->sums[a->n - 1], *into = a->sums[a->n - 2];
+        for (int i = 0; i < WIDTH; i++) into[i] += top[i];
+        a->spare[a->nspare++] = top;
+        a->n--;
+    }
+    double out = 0.0;
+    if (a->n == 1) {
+        out = a->sums[0][WIDTH - 1]; /* the loss slot */
+        a->spare[a->nspare++] = a->sums[0];
+        a->n = 0;
+    }
+    return out;
+}
+
+/* ---- uplink pool: pre-"encoded" codes + decode LUT ----------------- */
+
+#define POOL_N 8
+static uint8_t POOL_CODES[POOL_N][DIM];
+static float POOL_ALPHA[POOL_N], POOL_BETA[POOL_N], POOL_LOSS[POOL_N];
+static float LUT[256];
+static Acc FLAT_ACC, MID_ACC, ROOT_ACC;
+static size_t BENCH_P;
+static double SINK;
+
+static void fold_one(Acc *a, int pi, double kw) {
+    /* decode (LUT pass, as decode_pooled's inner loop) + weighted leaf */
+    double *leaf = acc_leaf_buf(a);
+    const uint8_t *codes = POOL_CODES[pi];
+    for (int i = 0; i < DIM; i++)
+        leaf[i] = kw * (double)LUT[codes[i]];
+    leaf[DIM] = kw * (double)POOL_ALPHA[pi];
+    leaf[DIM + 1] = kw * (double)POOL_BETA[pi];
+    leaf[DIM + 2] = kw * (double)POOL_LOSS[pi];
+    acc_push_leaf(a, leaf);
+}
+
+static void flat_round(void) {
+    size_t p = BENCH_P;
+    double kw = 1.0 / (double)p; /* n_k = 1 each, m_t = P */
+    acc_init(&FLAT_ACC, 0);
+    for (size_t i = 0; i < p; i++)
+        fold_one(&FLAT_ACC, (int)(i % POOL_N), kw);
+    SINK += acc_finish(&FLAT_ACC);
+}
+
+/* serialize a mid accumulator's fragments (f64 bit patterns through a
+ * byte buffer, 16 B range header + 28 B meta, as encode_partial) and
+ * absorb them into the root */
+static uint8_t WIREBUF[28 + MAXFRAG * (16 + WIDTH * 8)];
+
+static void forward_into_root(Acc *mid) {
+    uint8_t *w = WIREBUF;
+    memcpy(w, &mid->next_pos, 8); /* stand-in meta */
+    w += 28;
+    for (int i = 0; i < mid->n; i++) {
+        memcpy(w, &mid->starts[i], 8);
+        memcpy(w + 8, &mid->lens[i], 8);
+        memcpy(w + 16, mid->sums[i], WIDTH * 8);
+        w += 16 + WIDTH * 8;
+    }
+    /* decode side */
+    const uint8_t *rd = WIREBUF + 28;
+    int nfrag = mid->n;
+    for (int i = 0; i < nfrag; i++) {
+        uint64_t s, l;
+        memcpy(&s, rd, 8);
+        memcpy(&l, rd + 8, 8);
+        double *sum = acc_leaf_buf(&ROOT_ACC);
+        memcpy(sum, rd + 16, WIDTH * 8);
+        rd += 16 + WIDTH * 8;
+        acc_append_range(&ROOT_ACC, s, l, sum);
+    }
+    /* retire the mid's buffers */
+    for (int i = 0; i < mid->n; i++)
+        mid->spare[mid->nspare++] = mid->sums[i];
+    mid->n = 0;
+}
+
+static void tree_round(void) {
+    size_t p = BENCH_P;
+    double kw = 1.0 / (double)p;
+    acc_init(&ROOT_ACC, 0);
+    size_t g = NODES < p ? NODES : p;
+    size_t base = p / g, extra = p % g, lo = 0;
+    for (size_t ni = 0; ni < g; ni++) {
+        size_t len = base + (ni < extra ? 1 : 0);
+        acc_init(&MID_ACC, lo);
+        for (size_t i = lo; i < lo + len; i++)
+            fold_one(&MID_ACC, (int)(i % POOL_N), kw);
+        forward_into_root(&MID_ACC);
+        lo += len;
+    }
+    SINK += acc_finish(&ROOT_ACC);
+}
+
+static void flat_100(void) { BENCH_P = 100; flat_round(); }
+static void tree_100(void) { BENCH_P = 100; tree_round(); }
+static void flat_10k(void) { BENCH_P = 10000; flat_round(); }
+static void tree_10k(void) { BENCH_P = 10000; tree_round(); }
+static void flat_1m(void) { BENCH_P = 1000000; flat_round(); }
+static void tree_1m(void) { BENCH_P = 1000000; tree_round(); }
+
+/* ---- cohort sampling: dense vs sparse Fisher-Yates ----------------- */
+
+#define K_POP 1000000
+#define COHORT 256
+static size_t DENSE_IDX[K_POP];
+static size_t OUT_IDS[COHORT];
+
+static void sample_dense(void) {
+    Pcg32 r = pcg_new(9, 1);
+    for (size_t i = 0; i < K_POP; i++) DENSE_IDX[i] = i;
+    for (size_t i = 0; i < COHORT; i++) {
+        size_t j = i + pcg_below(&r, K_POP - i);
+        size_t t = DENSE_IDX[i];
+        DENSE_IDX[i] = DENSE_IDX[j];
+        DENSE_IDX[j] = t;
+        OUT_IDS[i] = DENSE_IDX[i];
+    }
+    SINK += (double)OUT_IDS[COHORT - 1];
+}
+
+/* open-addressing map, 2*k slots rounded up to a power of two — the
+ * displacement map of sample_distinct_sparse */
+#define MAP_CAP 1024 /* >= 2 * COHORT, power of two */
+static uint64_t MAP_KEY[MAP_CAP];
+static size_t MAP_VAL[MAP_CAP];
+static uint8_t MAP_USED[MAP_CAP];
+
+static size_t map_get(uint64_t key, size_t dflt) {
+    size_t h = (size_t)(key * 0x9E3779B97F4A7C15ULL) & (MAP_CAP - 1);
+    while (MAP_USED[h]) {
+        if (MAP_KEY[h] == key) return MAP_VAL[h];
+        h = (h + 1) & (MAP_CAP - 1);
+    }
+    return dflt;
+}
+
+static void map_put(uint64_t key, size_t val) {
+    size_t h = (size_t)(key * 0x9E3779B97F4A7C15ULL) & (MAP_CAP - 1);
+    while (MAP_USED[h] && MAP_KEY[h] != key)
+        h = (h + 1) & (MAP_CAP - 1);
+    MAP_USED[h] = 1;
+    MAP_KEY[h] = key;
+    MAP_VAL[h] = val;
+}
+
+static void sample_sparse(void) {
+    Pcg32 r = pcg_new(9, 1);
+    memset(MAP_USED, 0, sizeof(MAP_USED));
+    for (size_t i = 0; i < COHORT; i++) {
+        size_t j = i + pcg_below(&r, K_POP - i);
+        size_t vj = map_get(j, j);
+        size_t vi = map_get(i, i);
+        map_put(j, vi);
+        OUT_IDS[i] = vj;
+    }
+    SINK += (double)OUT_IDS[COHORT - 1];
+}
+
+/* ---- world build: dense shard vecs vs virtual order map ------------ */
+
+#define N_TRAIN 50000
+typedef struct { size_t len, cap; size_t *v; } Shard;
+static Shard *SHARDS; /* K_POP headers */
+static size_t ORDER[N_TRAIN];
+
+static void iid_order(Pcg32 *r) {
+    for (size_t i = 0; i < N_TRAIN; i++) ORDER[i] = i;
+    for (size_t i = N_TRAIN - 1; i >= 1; i--) {
+        size_t j = pcg_below(r, i + 1);
+        size_t t = ORDER[i];
+        ORDER[i] = ORDER[j];
+        ORDER[j] = t;
+    }
+}
+
+static void world_dense(void) {
+    Pcg32 r = pcg_new(5, 2);
+    iid_order(&r);
+    memset(SHARDS, 0, K_POP * sizeof(Shard));
+    for (size_t i = 0; i < N_TRAIN; i++) {
+        Shard *s = &SHARDS[i % K_POP];
+        if (s->len == s->cap) {
+            s->cap = s->cap ? s->cap * 2 : 4;
+            s->v = realloc(s->v, s->cap * sizeof(size_t));
+        }
+        s->v[s->len++] = ORDER[i];
+    }
+    SINK += (double)SHARDS[0].len;
+    for (size_t i = 0; i < K_POP; i++) {
+        free(SHARDS[i].v);
+        SHARDS[i].v = NULL;
+    }
+}
+
+static size_t COHORT_SHARD[N_TRAIN];
+
+static void world_virtual(void) {
+    Pcg32 r = pcg_new(5, 2);
+    iid_order(&r); /* the only O(n) state the virtual map holds */
+    /* plus the whole per-round cost it must cover: sample a cohort
+     * and materialize exactly its shards */
+    Pcg32 sr = pcg_new(6, 3);
+    memset(MAP_USED, 0, sizeof(MAP_USED));
+    for (size_t i = 0; i < COHORT; i++) {
+        size_t j = i + pcg_below(&sr, K_POP - i);
+        size_t vj = map_get(j, j);
+        size_t vi = map_get(i, i);
+        map_put(j, vi);
+        OUT_IDS[i] = vj;
+    }
+    size_t touched = 0;
+    for (size_t i = 0; i < COHORT; i++) {
+        for (size_t s = OUT_IDS[i]; s < N_TRAIN; s += K_POP)
+            COHORT_SHARD[touched++] = ORDER[s];
+    }
+    SINK += (double)touched;
+}
+
+/* ---- JSON emit (schema of util::bench::BenchJson) ----------------- */
+
+static void emit_result(FILE *f, const BResult *r, int items, int first) {
+    fprintf(f, "%s\n    {\"name\": \"%s\", \"iters\": %ld, "
+               "\"median_ns\": %.1f, \"p10_ns\": %.1f, \"p90_ns\": %.1f",
+            first ? "" : ",", r->name, r->iters, r->median_ns, r->p10_ns,
+            r->p90_ns);
+    if (items)
+        fprintf(f, ", \"throughput_per_s\": %.1f",
+                (double)items / (r->median_ns * 1e-9));
+    fprintf(f, "}");
+}
+
+int main(void) {
+    Pcg32 r = pcg_new(42, 7);
+    for (int c = 0; c < POOL_N; c++) {
+        for (int i = 0; i < DIM; i++)
+            POOL_CODES[c][i] = (uint8_t)(pcg_u32(&r) & 0xFF);
+        POOL_ALPHA[c] = 0.9f + 0.05f * (float)c;
+        POOL_BETA[c] = 2.0f;
+        POOL_LOSS[c] = 0.5f + 0.1f * (float)c;
+    }
+    for (int i = 0; i < 256; i++)
+        LUT[i] = (float)i * (1.0f / 128.0f) - 1.0f;
+    FLAT_ACC.nspare = MID_ACC.nspare = ROOT_ACC.nspare = 0;
+    FLAT_ACC.n = MID_ACC.n = ROOT_ACC.n = 0;
+    SHARDS = calloc(K_POP, sizeof(Shard));
+
+    printf("dim=%d nodes=%d K=%d cohort=%d n_train=%d\n\n", DIM, NODES,
+           K_POP, COHORT, N_TRAIN);
+    BResult f100 = bench_run("agg/flat P=100", flat_100, 120);
+    BResult t100 = bench_run("agg/tree:16 P=100", tree_100, 120);
+    BResult f10k = bench_run("agg/flat P=10000", flat_10k, 400);
+    BResult t10k = bench_run("agg/tree:16 P=10000", tree_10k, 400);
+    BResult f1m = bench_run("agg/flat P=1000000", flat_1m, 3000);
+    BResult t1m = bench_run("agg/tree:16 P=1000000", tree_1m, 3000);
+    BResult sd =
+        bench_run("sample/dense K=1000000 P=256", sample_dense, 200);
+    BResult ss =
+        bench_run("sample/sparse K=1000000 P=256", sample_sparse, 200);
+    BResult wd =
+        bench_run("world/dense_iid K=1000000", world_dense, 2000);
+    BResult wv = bench_run("world/virtual_iid+cohort K=1000000",
+                           world_virtual, 400);
+
+    double sp_sample = sd.median_ns / ss.median_ns;
+    double sp_world = wd.median_ns / wv.median_ns;
+    printf("\nper-uplink fold: P=100 flat %.0f/tree %.0f ns; "
+           "P=10k flat %.0f/tree %.0f ns; P=1M flat %.0f/tree %.0f ns\n",
+           f100.median_ns / 100, t100.median_ns / 100,
+           f10k.median_ns / 1e4, t10k.median_ns / 1e4,
+           f1m.median_ns / 1e6, t1m.median_ns / 1e6);
+    printf("speedups: sampling dense->sparse %.1fx  world "
+           "dense->virtual %.1fx\n",
+           sp_sample, sp_world);
+
+    FILE *f = fopen("BENCH_agg_tree.json", "w");
+    if (!f) { perror("BENCH_agg_tree.json"); return 1; }
+    fprintf(f, "{\n  \"bench\": \"agg_tree\",\n");
+    fprintf(f,
+            "  \"provenance\": \"tools/bench_agg_mirror.c (gcc -O3 C "
+            "mirror of rust/benches/round_agg.rs, op-for-op: same "
+            "canonical pairwise f64 accumulator, PCG32 draw sequences, "
+            "fragment serialization and shard layouts; build container "
+            "lacks a Rust toolchain). The per-uplink decode here is the "
+            "256-entry LUT inner loop only — the full FP8 format math "
+            "is measured in BENCH_fp8_kernels.json — so absolute "
+            "latencies understate a full round slightly while the "
+            "flat-vs-tree and dense-vs-sparse ratios transfer. "
+            "Regenerate natively with `cargo bench --bench "
+            "round_agg`.\",\n");
+    fprintf(f, "  \"config\": {\"dim\": \"%d\", \"tree_nodes\": \"%d\", "
+               "\"k_population\": \"%d\", \"cohort\": \"%d\", "
+               "\"n_train\": \"%d\"},\n",
+            DIM, NODES, K_POP, COHORT, N_TRAIN);
+    fprintf(f, "  \"results\": [");
+    emit_result(f, &f100, DIM, 1);
+    emit_result(f, &t100, DIM, 0);
+    emit_result(f, &f10k, DIM, 0);
+    emit_result(f, &t10k, DIM, 0);
+    emit_result(f, &f1m, DIM, 0);
+    emit_result(f, &t1m, DIM, 0);
+    emit_result(f, &sd, 0, 0);
+    emit_result(f, &ss, 0, 0);
+    emit_result(f, &wd, 0, 0);
+    emit_result(f, &wv, 0, 0);
+    fprintf(f, "\n  ],\n  \"speedups\": {\n");
+    fprintf(f, "    \"agg_flat_over_tree_p100\": %.3f,\n",
+            f100.median_ns / t100.median_ns);
+    fprintf(f, "    \"agg_flat_over_tree_p10000\": %.3f,\n",
+            f10k.median_ns / t10k.median_ns);
+    fprintf(f, "    \"agg_flat_over_tree_p1000000\": %.3f,\n",
+            f1m.median_ns / t1m.median_ns);
+    fprintf(f, "    \"sample_dense_over_sparse\": %.3f,\n", sp_sample);
+    fprintf(f, "    \"world_dense_over_virtual\": %.3f\n", sp_world);
+    fprintf(f, "  }\n}\n");
+    fclose(f);
+    printf("\nwrote BENCH_agg_tree.json (SINK %.1f)\n", SINK);
+    return 0;
+}
