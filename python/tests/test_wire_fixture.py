@@ -28,6 +28,12 @@ FIXTURE_V1 = os.path.join(
 EDGE_FIXTURE = os.path.join(
     REPO, "rust", "tests", "fixtures", "fp8_edges_v1.json"
 )
+SNAP_FIXTURE_V1 = os.path.join(
+    REPO, "rust", "tests", "fixtures", "snapshot_v1.bin"
+)
+SNAP_FIXTURE_V0 = os.path.join(
+    REPO, "rust", "tests", "fixtures", "snapshot_v0.bin"
+)
 
 
 def _mirror():
@@ -151,6 +157,57 @@ def test_overhead_constants(mirror):
     # v1 constants are frozen alongside the v1 fixture
     assert mirror.V1_JOB_FRAME_OVERHEAD == 68
     assert mirror.V1_OUTCOME_FRAME_OVERHEAD == 53
+
+
+# ---- snapshot fixture (coordinator durable state, not the wire) ------
+
+
+@pytest.fixture(scope="module")
+def snap_bytes():
+    with open(SNAP_FIXTURE_V1, "rb") as f:
+        return f.read()
+
+
+def test_snapshot_fixture_matches_mirror(mirror, snap_bytes):
+    """snapshot_v1.bin must equal a fresh mirror encode of the
+    canonical state (the Rust side pins the same bytes against its
+    encoder/decoder in rust/tests/golden_snapshot.rs)."""
+    assert snap_bytes == mirror.golden_snapshot(), (
+        "snapshot_v1.bin no longer matches the spec mirror — "
+        "regenerate with tools/gen_wire_fixture.py ONLY alongside a "
+        "SNAPSHOT_VERSION bump (as snapshot_v<N>.bin, keeping older "
+        "fixtures committed)"
+    )
+
+
+def test_snapshot_fixture_envelope_is_well_formed(mirror, snap_bytes):
+    magic, version, reserved, body_len, crc = struct.unpack_from(
+        "<4sHHII", snap_bytes
+    )
+    assert magic == mirror.SNAP_MAGIC == b"FP8S"
+    assert version == mirror.SNAP_VERSION == 1
+    assert reserved == 0
+    body = snap_bytes[mirror.SNAP_HEADER_BYTES:]
+    assert len(body) == body_len
+    assert zlib.crc32(body) & 0xFFFFFFFF == crc
+    # body opens with the fingerprint gate and the resume round
+    fp, next_round = struct.unpack_from("<QQ", body)
+    assert fp == mirror.CANON_SNAP["fingerprint"]
+    assert next_round == mirror.CANON_SNAP["next_round"]
+
+
+def test_snapshot_v0_fixture_is_the_must_fail_version_skew(
+    mirror,
+):
+    """snapshot_v0.bin differs from v1 ONLY in the version field (the
+    body and its crc are valid), so the only way a reader can reject
+    it is the version gate itself."""
+    with open(SNAP_FIXTURE_V0, "rb") as f:
+        v0 = f.read()
+    assert v0 == mirror.golden_snapshot_v0()
+    assert struct.unpack_from("<H", v0, 4)[0] == 0
+    v1 = mirror.golden_snapshot()
+    assert v0[:4] == v1[:4] and v0[6:] == v1[6:]
 
 
 # ---- FP8 edge-code fixture (kernel byte output, not just framing) ----

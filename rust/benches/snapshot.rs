@@ -1,0 +1,131 @@
+//! Snapshot durability benchmarks, seeding `BENCH_snapshot.json`.
+//!
+//! Run: `cargo bench --bench snapshot` — measures the four stages of
+//! the coordinator's durability path on a realistic round state (a
+//! 16k-param model with a 256-client touched-EF set): pure encode,
+//! pure decode, the full atomic write (temp file + fsync + rename +
+//! dir fsync + generation prune) and the resume load, then writes
+//! `../BENCH_snapshot.json` (repo root). CI smoke: `cargo bench
+//! --bench snapshot -- --quick` shrinks the state and skips the JSON
+//! write.
+//!
+//! The interesting ratio is write_atomic / encode: everything above
+//! 1x is what *durability* costs (fsync dominates), which is the
+//! number an operator trades off when picking `--snapshot-every`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use fedfp8::coordinator::comm::CommStats;
+use fedfp8::coordinator::snapshot::{self, SnapshotState};
+use fedfp8::fp8::rng::Pcg32;
+use fedfp8::util::bench::{bench, header, BenchJson};
+
+/// A deterministic pseudo-random round state: `dim` params, the full
+/// EF residual pair (server + `clients` touched uplinks), non-trivial
+/// comm totals.
+fn state(dim: usize, clients: usize) -> SnapshotState {
+    let mut rng = Pcg32::new(17, 3);
+    let mut vec = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.uniform() - 0.5) * 2.0).collect()
+    };
+    let w = vec(dim);
+    let alpha = vec(8);
+    let beta = vec(8);
+    let ef_server = vec(dim);
+    let ef_clients: BTreeMap<u64, Vec<f32>> = (0..clients)
+        .map(|c| (c as u64 * 4099, vec(dim)))
+        .collect();
+    SnapshotState {
+        fingerprint: 0x5EED_F00D_0000_0001,
+        next_round: 321,
+        w,
+        alpha,
+        beta,
+        ef_server,
+        ef_clients,
+        comm: CommStats {
+            up_bytes: 1 << 30,
+            down_bytes: 1 << 31,
+            up_msgs: 1 << 20,
+            down_msgs: 1 << 20,
+            partial_bytes: 1 << 24,
+            partial_msgs: 1 << 10,
+        },
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (dim, clients, budget_ms) =
+        if quick { (4_096, 32, 60) } else { (16_384, 256, 400) };
+    let s = state(dim, clients);
+    let bytes = snapshot::encode(&s);
+    let mib = bytes.len() as f64 / (1 << 20) as f64;
+    println!(
+        "state: dim={dim} ef_clients={clients} -> {:.1} MiB snapshot\n",
+        mib
+    );
+
+    let dir = std::env::temp_dir()
+        .join(format!("fedfp8_bench_snap_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    header();
+    let enc = bench("snapshot/encode", budget_ms, || {
+        std::hint::black_box(snapshot::encode(&s));
+    });
+    let dec = bench("snapshot/decode", budget_ms, || {
+        std::hint::black_box(
+            snapshot::decode(&bytes, Path::new("bench")).unwrap(),
+        );
+    });
+    let wrt = bench("snapshot/write_atomic", budget_ms, || {
+        std::hint::black_box(snapshot::write_atomic(&dir, &s).unwrap());
+    });
+    let load = bench("snapshot/load_resume", budget_ms, || {
+        std::hint::black_box(
+            snapshot::load_resume(&dir, s.fingerprint)
+                .unwrap()
+                .unwrap(),
+        );
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let durability_cost = wrt.median_ns / enc.median_ns;
+    println!("\nthroughput at median:");
+    println!(
+        "  encode {:.0} MiB/s   decode {:.0} MiB/s   write_atomic \
+         {:.0} MiB/s   load {:.0} MiB/s",
+        enc.throughput(mib),
+        dec.throughput(mib),
+        wrt.throughput(mib),
+        load.throughput(mib),
+    );
+    println!(
+        "  durability overhead (write_atomic / encode): \
+         {durability_cost:.1}x — the fsync+rename price per snapshot"
+    );
+
+    if quick {
+        println!("\n--quick: JSON trajectory write skipped");
+        return;
+    }
+    let mut j = BenchJson::new(
+        "snapshot",
+        "cargo bench --bench snapshot (rust/benches/snapshot.rs)",
+    );
+    j.config("dim", dim);
+    j.config("ef_clients", clients);
+    j.config("snapshot_mib", format!("{mib:.2}"));
+    for r in [&enc, &dec, &wrt, &load] {
+        j.push(r, Some(mib));
+    }
+    j.speedup("encode_over_write_atomic", durability_cost);
+    j.speedup("decode_over_load", load.median_ns / dec.median_ns);
+    let path = std::path::Path::new("../BENCH_snapshot.json");
+    match j.write(path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -6,6 +6,8 @@
 //! method family are all *config switches* on the same coordinator —
 //! no code forks (DESIGN.md §7).
 
+use std::path::PathBuf;
+
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::fp8::simd::KernelKind;
@@ -148,6 +150,16 @@ pub enum ConfigError {
     /// ServerOptimize needs every per-client vector at the root;
     /// retention cannot cross a tree link.
     TreeWithServerOpt,
+    /// A snapshot knob (`--resume`, `--snapshot-every`) without
+    /// `--snapshot-dir`: there is no directory to read or write.
+    SnapshotFlagWithoutDir { flag: &'static str },
+    /// `--snapshot-every 0` would never write a snapshot; asking for
+    /// durability and never getting it must not parse.
+    SnapshotEveryZero,
+    /// Snapshot flags on `--role worker`: only the coordinator holds
+    /// durable round state (workers are stateless between jobs save
+    /// for their reconnect outcome cache).
+    SnapshotOnWorker { flag: &'static str },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -189,6 +201,27 @@ impl std::fmt::Display for ConfigError {
                     "--agg tree is incompatible with ServerOptimize \
                      (uq+): per-client vectors cannot cross a tree \
                      link"
+                )
+            }
+            ConfigError::SnapshotFlagWithoutDir { flag } => {
+                write!(
+                    f,
+                    "--{flag} requires --snapshot-dir DIR (no \
+                     snapshot directory to use)"
+                )
+            }
+            ConfigError::SnapshotEveryZero => {
+                write!(
+                    f,
+                    "--snapshot-every must be at least 1 (0 would \
+                     never write a snapshot)"
+                )
+            }
+            ConfigError::SnapshotOnWorker { flag } => {
+                write!(
+                    f,
+                    "--{flag} only applies to the coordinator; \
+                     --role worker holds no durable round state"
                 )
             }
         }
@@ -584,6 +617,14 @@ pub struct NetCfg {
     /// quiet, on both sides; 0 disables heartbeats (a silent
     /// partition is then only detected while jobs are pending).
     pub heartbeat_ms: u64,
+    /// `--net-token SECRET`: shared handshake token. Both sides
+    /// carry an FNV-1a digest of it in Hello/HelloAck and reject a
+    /// peer whose digest differs (typed `WireError::AuthRejected`).
+    /// This fences off misconfigured or foreign processes — never
+    /// expose a listener beyond localhost without it. It is *not*
+    /// cryptographic transport security; TLS is the ROADMAP item
+    /// for hostile networks.
+    pub token: Option<String>,
 }
 
 impl NetCfg {
@@ -600,6 +641,7 @@ impl NetCfg {
                 "net-timeout-ms",
                 "net-inflight",
                 "heartbeat-ms",
+                "net-token",
             ] {
                 ensure!(
                     args.get(flag).is_none(),
@@ -614,6 +656,14 @@ impl NetCfg {
         let inflight = args.parse_or("net-inflight", 4usize)?;
         ensure!(inflight >= 1, "--net-inflight must be at least 1");
         let heartbeat_ms = args.parse_or("heartbeat-ms", 1_000u64)?;
+        let token = args.get("net-token").map(String::from);
+        if let Some(t) = &token {
+            ensure!(
+                !t.is_empty(),
+                "--net-token must not be empty (drop the flag to \
+                 run without handshake auth)"
+            );
+        }
         // the probe interval must fit inside the idle deadline, or a
         // peer would be declared dead before it was ever probed
         ensure!(
@@ -640,6 +690,7 @@ impl NetCfg {
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
+                    token,
                 }
             }
             "worker" => {
@@ -662,6 +713,7 @@ impl NetCfg {
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
+                    token,
                 }
             }
             other => {
@@ -672,8 +724,84 @@ impl NetCfg {
     }
 }
 
+/// Durability settings parsed from the CLI (`--snapshot-dir DIR
+/// [--snapshot-every N] [--resume]`).
+///
+/// Deliberately *not* part of [`ExperimentConfig`]: where and how
+/// often state is persisted is an operational knob, like
+/// `--parallelism` — it must never move the config fingerprint,
+/// because the fingerprint is what gates resume (durability flags
+/// shifting it would make every snapshot unresumable against the
+/// very flags that wrote it).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SnapshotCfg {
+    /// `--snapshot-dir DIR`: where generations live; `None` disables
+    /// the durability layer entirely.
+    pub dir: Option<PathBuf>,
+    /// `--snapshot-every N`: write one generation every N completed
+    /// rounds (default 1 — every round boundary is durable).
+    pub every: usize,
+    /// `--resume`: load the newest valid generation before the first
+    /// round. A cold (empty) directory starts at round 0, so the
+    /// flag is safe on the very first launch of a kill/resume loop.
+    pub resume: bool,
+}
+
+impl SnapshotCfg {
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    /// Parse the durability flags with typed guards: snapshot knobs
+    /// without a directory, a zero cadence, and snapshot flags on a
+    /// `--role worker` launch are all [`ConfigError`]s.
+    pub fn from_args(
+        args: &Args,
+        net: Option<&NetCfg>,
+    ) -> Result<SnapshotCfg> {
+        let dir = args.get("snapshot-dir").map(PathBuf::from);
+        let every_present = args.get("snapshot-every").is_some();
+        // `--resume` is a bare flag, but the parser will treat
+        // `--resume x` as an option — accept both spellings
+        let resume =
+            args.flag("resume") || args.get("resume").is_some();
+        if matches!(net, Some(n) if n.role == NetRole::Worker) {
+            for (present, flag) in [
+                (dir.is_some(), "snapshot-dir"),
+                (every_present, "snapshot-every"),
+                (resume, "resume"),
+            ] {
+                if present {
+                    return Err(
+                        ConfigError::SnapshotOnWorker { flag }.into()
+                    );
+                }
+            }
+        }
+        if dir.is_none() {
+            for (present, flag) in
+                [(every_present, "snapshot-every"), (resume, "resume")]
+            {
+                if present {
+                    return Err(ConfigError::SnapshotFlagWithoutDir {
+                        flag,
+                    }
+                    .into());
+                }
+            }
+        }
+        let every = args.parse_or("snapshot-every", 1usize)?;
+        if every == 0 {
+            return Err(ConfigError::SnapshotEveryZero.into());
+        }
+        Ok(SnapshotCfg { dir, every, resume })
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use std::path::Path;
+
     use super::*;
 
     #[test]
@@ -827,6 +955,127 @@ mod tests {
             NetCfg::from_args(&args("run --listen 127.0.0.1:1"))
                 .is_err()
         );
+        // --net-token: carried on either role, orphaned without one,
+        // and an empty secret is a config error, not "auth off"
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-token hunter2",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.token.as_deref(), Some("hunter2"));
+        let n = NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-token hunter2",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.token.as_deref(), Some("hunter2"));
+        let n = NetCfg::from_args(&args(
+            "run --role worker --connect a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.token, None);
+        assert!(
+            NetCfg::from_args(&args("run --net-token x")).is_err()
+        );
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-token="
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn snapshot_flags_parse_and_guard() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        // off by default
+        let s = SnapshotCfg::from_args(&args("run"), None).unwrap();
+        assert!(!s.enabled() && !s.resume);
+        // full spelling
+        let s = SnapshotCfg::from_args(
+            &args(
+                "run --snapshot-dir /tmp/st --snapshot-every 5 \
+                 --resume",
+            ),
+            None,
+        )
+        .unwrap();
+        assert_eq!(s.dir.as_deref(), Some(Path::new("/tmp/st")));
+        assert_eq!(s.every, 5);
+        assert!(s.resume && s.enabled());
+        // cadence defaults to every round boundary
+        let s = SnapshotCfg::from_args(
+            &args("run --snapshot-dir d"),
+            None,
+        )
+        .unwrap();
+        assert_eq!(s.every, 1);
+
+        // typed guards, Display strings pinned: orphan knobs...
+        let typed = |a: &str, net: Option<&NetCfg>| {
+            SnapshotCfg::from_args(&args(a), net)
+                .unwrap_err()
+                .downcast::<ConfigError>()
+                .expect("typed ConfigError")
+        };
+        let e = typed("run --resume", None);
+        assert_eq!(
+            e,
+            ConfigError::SnapshotFlagWithoutDir { flag: "resume" }
+        );
+        assert_eq!(
+            e.to_string(),
+            "--resume requires --snapshot-dir DIR (no snapshot \
+             directory to use)"
+        );
+        let e = typed("run --snapshot-every 3", None);
+        assert_eq!(
+            e,
+            ConfigError::SnapshotFlagWithoutDir {
+                flag: "snapshot-every"
+            }
+        );
+        // ...a zero cadence...
+        let e = typed("run --snapshot-dir d --snapshot-every 0", None);
+        assert_eq!(e, ConfigError::SnapshotEveryZero);
+        assert_eq!(
+            e.to_string(),
+            "--snapshot-every must be at least 1 (0 would never \
+             write a snapshot)"
+        );
+        // ...and snapshot knobs on a worker launch
+        let worker = NetCfg::from_args(&args(
+            "run --role worker --connect a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        let e = typed("run --snapshot-dir d", Some(&worker));
+        assert_eq!(
+            e,
+            ConfigError::SnapshotOnWorker { flag: "snapshot-dir" }
+        );
+        assert_eq!(
+            e.to_string(),
+            "--snapshot-dir only applies to the coordinator; --role \
+             worker holds no durable round state"
+        );
+        let e = typed("run --resume", Some(&worker));
+        assert_eq!(
+            e,
+            ConfigError::SnapshotOnWorker { flag: "resume" }
+        );
+        // a server role takes them fine
+        let server = NetCfg::from_args(&args(
+            "run --role server --listen a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        assert!(SnapshotCfg::from_args(
+            &args("run --snapshot-dir d --resume"),
+            Some(&server)
+        )
+        .is_ok());
     }
 
     #[test]

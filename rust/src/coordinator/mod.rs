@@ -7,12 +7,14 @@ pub mod comm;
 pub mod metrics;
 pub mod server;
 pub mod server_opt;
+pub mod snapshot;
 pub mod transport;
 pub mod tree;
 
 pub use cohort::{ClientShards, VIRTUALIZE_AT};
 pub use metrics::{comm_gain, mean_std, RoundRecord, RunResult};
 pub use server::{build_world, ClientStateProbe, Server, World};
+pub use snapshot::{SnapshotError, SnapshotState, SNAPSHOT_VERSION};
 pub use transport::{
     ClientJob, ClientOutcome, InProcessTransport, Transport, WorkBuffers,
 };

@@ -28,6 +28,7 @@
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
@@ -44,6 +45,7 @@ use super::cohort::{ClientShards, VIRTUALIZE_AT};
 use super::comm::CommStats;
 use super::metrics::{RoundRecord, RunResult};
 use super::server_opt;
+use super::snapshot::{self, SnapshotState};
 use super::transport::{
     self, streams, ClientJob, InProcessTransport, Transport,
 };
@@ -161,6 +163,34 @@ pub struct Server<'a> {
     /// population costs O(clients touched), not O(K).
     ef_server: Vec<f32>,
     ef_clients: BTreeMap<usize, Vec<f32>>,
+    /// Durability knobs (`--snapshot-dir` / `--snapshot-every`):
+    /// when set, [`Server::run`] writes an atomic state snapshot
+    /// every `snap_every` completed rounds (and after the final one).
+    snap_dir: Option<PathBuf>,
+    snap_every: usize,
+    /// First round `run` will execute — 0 unless a snapshot was
+    /// restored ([`Server::resume_from`]).
+    start_round: usize,
+}
+
+/// Write back a client's error-feedback residual, evicting
+/// exactly-zero vectors: the round loop treats a missing entry as
+/// zeros, so an all-zero residual is pure memory cost (common under
+/// `--comm none`, where encode/decode is the identity and every
+/// residual collapses to zero). Eviction keeps the `BTreeMap`
+/// bounded by the set of clients with *live* residuals instead of
+/// every client ever touched — ROADMAP's long-run growth fix — and
+/// keeps snapshots canonical (no redundant zero vectors on disk).
+fn store_ef(
+    map: &mut BTreeMap<usize, Vec<f32>>,
+    client: usize,
+    e: Vec<f32>,
+) {
+    if e.iter().all(|&v| v == 0.0) {
+        map.remove(&client);
+    } else {
+        map.insert(client, e);
+    }
 }
 
 /// Snapshot of the server's per-client state residency — the
@@ -238,6 +268,9 @@ impl<'a> Server<'a> {
             verbose: false,
             ef_server,
             ef_clients: BTreeMap::new(),
+            snap_dir: None,
+            snap_every: 1,
+            start_round: 0,
         })
     }
 
@@ -267,12 +300,121 @@ impl<'a> Server<'a> {
         (&self.w, &self.alpha, &self.beta)
     }
 
-    /// Run the full experiment; returns the per-round record series.
+    /// Enable periodic durable snapshots: one atomic write into
+    /// `dir` every `every` completed rounds (plus one after the
+    /// final round, so a finished run always leaves its end state).
+    pub fn set_snapshot(&mut self, dir: PathBuf, every: usize) {
+        self.snap_dir = Some(dir);
+        self.snap_every = every.max(1);
+    }
+
+    /// The durable round state as of "rounds `0..next_round` are
+    /// complete" — everything [`SnapshotState`] documents as
+    /// non-derivable.
+    pub fn snapshot_state(&self, next_round: usize) -> SnapshotState {
+        SnapshotState {
+            fingerprint: self.cfg.fingerprint(),
+            next_round: next_round as u64,
+            w: self.w.clone(),
+            alpha: self.alpha.clone(),
+            beta: self.beta.clone(),
+            ef_server: self.ef_server.clone(),
+            ef_clients: self
+                .ef_clients
+                .iter()
+                .map(|(&k, v)| (k as u64, v.clone()))
+                .collect(),
+            comm: self.comm,
+        }
+    }
+
+    /// Atomically persist the current state into `dir` (see
+    /// [`snapshot::write_atomic`] for the torn-write discipline).
+    pub fn save_snapshot(
+        &self,
+        dir: &Path,
+        next_round: usize,
+    ) -> Result<PathBuf, snapshot::SnapshotError> {
+        snapshot::write_atomic(dir, &self.snapshot_state(next_round))
+    }
+
+    /// Install a decoded snapshot as the live state. The caller (or
+    /// [`Server::resume_from`]) has already gated the config
+    /// fingerprint; this validates the shape against the model.
+    pub fn restore_snapshot(&mut self, s: &SnapshotState) -> Result<()> {
+        let m = self.model;
+        ensure!(
+            s.w.len() == m.dim,
+            "snapshot w has {} params, model '{}' has {}",
+            s.w.len(),
+            self.cfg.model,
+            m.dim
+        );
+        ensure!(
+            s.alpha.len() == self.alpha.len()
+                && s.beta.len() == self.beta.len(),
+            "snapshot alpha/beta dims {}x{} do not match model \
+             {}x{}",
+            s.alpha.len(),
+            s.beta.len(),
+            self.alpha.len(),
+            self.beta.len()
+        );
+        ensure!(
+            s.ef_server.len() == self.ef_server.len(),
+            "snapshot ef_server has {} entries, this config expects \
+             {} (error_feedback mismatch should have been caught by \
+             the fingerprint gate)",
+            s.ef_server.len(),
+            self.ef_server.len()
+        );
+        self.w = s.w.clone();
+        self.alpha = s.alpha.clone();
+        self.beta = s.beta.clone();
+        self.ef_server = s.ef_server.clone();
+        self.ef_clients = s
+            .ef_clients
+            .iter()
+            .map(|(&k, v)| (k as usize, v.clone()))
+            .collect();
+        self.comm = s.comm;
+        self.start_round = s.next_round as usize;
+        Ok(())
+    }
+
+    /// `--resume`: load the newest valid snapshot generation from
+    /// `dir` (falling back across torn/corrupt files, hard-rejecting
+    /// a foreign config fingerprint) and continue from it. Returns
+    /// the first round the loop will run — 0 on a cold start (no
+    /// snapshot files yet), which makes `--resume` safe to pass on
+    /// the very first launch of a kill/resume cycle.
+    pub fn resume_from(&mut self, dir: &Path) -> Result<usize> {
+        match snapshot::load_resume(dir, self.cfg.fingerprint())? {
+            Some((s, path)) => {
+                self.restore_snapshot(&s)?;
+                if self.verbose {
+                    eprintln!(
+                        "[{}] resumed at round {} from {}",
+                        self.cfg.name,
+                        self.start_round,
+                        path.display()
+                    );
+                }
+                Ok(self.start_round)
+            }
+            None => Ok(0),
+        }
+    }
+
+    /// Run the full experiment; returns the per-round record series
+    /// (starting at the resumed round, if any).
     pub fn run(&mut self) -> Result<RunResult> {
         let t0 = Instant::now();
-        let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut records = Vec::with_capacity(
+            self.cfg.rounds.saturating_sub(self.start_round),
+        );
         let mut last_acc = f64::NAN;
-        for t in 0..self.cfg.rounds {
+        for t in self.start_round..self.cfg.rounds {
             let rt = Instant::now();
             let train_loss = self.round(t)?;
             let evaluate = (t + 1) % self.cfg.eval_every == 0
@@ -303,6 +445,15 @@ impl<'a> Server<'a> {
                 );
             }
             records.push(rec);
+            // snapshot at the round boundary: state now says "rounds
+            // 0..=t are complete", so a resume re-enters at t + 1
+            if let Some(dir) = self.snap_dir.clone() {
+                if (t + 1) % self.snap_every == 0
+                    || t + 1 == self.cfg.rounds
+                {
+                    self.save_snapshot(&dir, t + 1)?;
+                }
+            }
         }
         Ok(RunResult {
             name: self.cfg.name.clone(),
@@ -474,7 +625,7 @@ impl<'a> Server<'a> {
                     |pos, out| {
                         comm.record_up(&out.uplink.payload);
                         if let Some(e) = out.ef {
-                            ef_clients.insert(participants[pos], e);
+                            store_ef(ef_clients, participants[pos], e);
                         }
                         stream.push(&out.uplink);
                         Ok(())
@@ -499,7 +650,7 @@ impl<'a> Server<'a> {
                     &mut self.comm,
                     |pos, out| {
                         if let Some(e) = out.ef.take() {
-                            ef_clients.insert(participants[pos], e);
+                            store_ef(ef_clients, participants[pos], e);
                         }
                         Ok(())
                     },

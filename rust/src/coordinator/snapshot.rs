@@ -1,0 +1,676 @@
+//! Durable round-state snapshots: crash-safe persistence for the
+//! coordinator with provably bit-identical resume.
+//!
+//! The paper's method keeps the full-precision master state on the
+//! server — the FP32 model plus the error-feedback residuals — and
+//! that is exactly what must survive a `kill -9`: FP8 exists only on
+//! the wire, so persisting the FP32 master (not its FP8 projection)
+//! follows the master-weights discipline of mixed-precision training.
+//! Everything else a round needs is *derivable*: cohorts, rounding
+//! draws and data splits all come from counter-derived streams
+//! (`Pcg32::derive(seed, round, client, domain)`), so a snapshot of
+//! (model, residuals, round counter, comm totals) is sufficient for
+//! the resumed trajectory to be bit-identical to an uninterrupted
+//! run at any `--parallelism`, over any transport.
+//!
+//! Format (all little-endian, mirrored in
+//! `tools/gen_wire_fixture.py` and pinned by
+//! `tests/golden_snapshot.rs`):
+//!
+//! ```text
+//! header (16 bytes):
+//!   magic      4  "FP8S"
+//!   version    u16   SNAPSHOT_VERSION
+//!   reserved   u16   0
+//!   body_len   u32
+//!   crc32      u32   IEEE crc32 of body (matches zlib.crc32)
+//! body:
+//!   fingerprint  u64   ExperimentConfig::fingerprint()
+//!   next_round   u64   first round the resumed loop will run
+//!   dim          u32   |w|
+//!   alpha_dim    u32   |alpha|
+//!   beta_dim     u32   |beta|
+//!   w            dim x f32 (raw LE bits)
+//!   alpha        alpha_dim x f32
+//!   beta         beta_dim x f32
+//!   ef_server    u32 len + len x f32
+//!   ef_clients   u32 count, then per entry:
+//!                  client u64, len u32, len x f32
+//!   comm         6 x u64 (up_bytes, down_bytes, up_msgs,
+//!                 down_msgs, partial_bytes, partial_msgs)
+//! ```
+//!
+//! Durability discipline: [`write_atomic`] writes a temp file in the
+//! target directory, fsyncs it, renames it into place and fsyncs the
+//! directory — a crash leaves either the old generation set or the
+//! new one, never a half-visible file. The last
+//! [`KEEP_GENERATIONS`] generations are retained, so a torn or
+//! corrupted newest file (detected by crc) lets [`load_resume`] fall
+//! back one generation with a typed [`SnapshotError`] trail naming
+//! every bad file. A config-fingerprint mismatch is a *hard* reject
+//! (never a fallback): silently resuming another config's state
+//! would diverge without any error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::net::frame::crc32;
+
+use super::comm::CommStats;
+
+/// Snapshot file magic — "FP8S" (S for state; the wire uses "FP8W").
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"FP8S";
+
+/// Bump on any layout change; readers hard-reject other versions.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Fixed header size: magic + version + reserved + body_len + crc32.
+pub const SNAPSHOT_HEADER_BYTES: usize = 16;
+
+/// Snapshot generations kept on disk. Two is the minimum that makes
+/// a torn newest write recoverable: the previous generation is still
+/// intact (it was never rewritten, only renamed over after the new
+/// file was durable).
+pub const KEEP_GENERATIONS: usize = 2;
+
+/// Everything the coordinator must persist to resume bit-identically;
+/// see the module docs for what is deliberately *not* here (anything
+/// derivable from the config via counter-derived streams).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotState {
+    /// `ExperimentConfig::fingerprint()` of the writing run — the
+    /// resume gate.
+    pub fingerprint: u64,
+    /// First round the resumed loop will execute (rounds `0 ..
+    /// next_round` are complete in this state).
+    pub next_round: u64,
+    /// FP32 master model.
+    pub w: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// Server-side downlink EF residual (empty when EF is off).
+    pub ef_server: Vec<f32>,
+    /// Per-client uplink EF residuals (sparse: touched clients only;
+    /// exactly-zero vectors are evicted before they get here).
+    pub ef_clients: BTreeMap<u64, Vec<f32>>,
+    /// Communication totals so resumed byte curves continue, not
+    /// restart.
+    pub comm: CommStats,
+}
+
+/// Typed snapshot failures. Every variant names the offending file,
+/// so a fallback (or a hard reject) is always attributable.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Filesystem-level failure reading or writing `path`.
+    Io { path: PathBuf, source: std::io::Error },
+    /// File is not a fedfp8 snapshot at all.
+    BadMagic { path: PathBuf, got: [u8; 4] },
+    /// Snapshot written by an incompatible format version.
+    VersionMismatch { path: PathBuf, got: u16, want: u16 },
+    /// File ends before the declared header/body does — the torn- or
+    /// partial-write signature.
+    Truncated { path: PathBuf, context: &'static str },
+    /// Body bytes do not match the header checksum — bit rot or a
+    /// torn overwrite.
+    ChecksumMismatch { path: PathBuf, got: u32, want: u32 },
+    /// Checksum passed but a field is structurally invalid (writer
+    /// bug or handcrafted file).
+    Malformed { path: PathBuf, what: String },
+    /// Snapshot belongs to a different experiment config. Hard
+    /// reject — resuming it would silently diverge. Names both
+    /// fingerprints so the operator can see *which* side is stale.
+    FingerprintMismatch {
+        path: PathBuf,
+        snapshot: u64,
+        config: u64,
+    },
+    /// Snapshot files exist but every generation failed to load;
+    /// `tried` records each candidate and why it was rejected.
+    NoValidSnapshot { dir: PathBuf, tried: Vec<String> },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io { path, source } => write!(
+                f,
+                "snapshot i/o error on {}: {source}",
+                path.display()
+            ),
+            SnapshotError::BadMagic { path, got } => write!(
+                f,
+                "{}: bad snapshot magic {got:02x?} (expected \
+                 \"FP8S\")",
+                path.display()
+            ),
+            SnapshotError::VersionMismatch { path, got, want } => {
+                write!(
+                    f,
+                    "{}: snapshot format v{got}, this build reads \
+                     v{want}",
+                    path.display()
+                )
+            }
+            SnapshotError::Truncated { path, context } => write!(
+                f,
+                "{}: truncated snapshot (file ends mid-{context})",
+                path.display()
+            ),
+            SnapshotError::ChecksumMismatch { path, got, want } => {
+                write!(
+                    f,
+                    "{}: snapshot checksum mismatch (body crc32 \
+                     {got:#010x}, header says {want:#010x}) — torn \
+                     or corrupted write",
+                    path.display()
+                )
+            }
+            SnapshotError::Malformed { path, what } => write!(
+                f,
+                "{}: malformed snapshot body: {what}",
+                path.display()
+            ),
+            SnapshotError::FingerprintMismatch {
+                path,
+                snapshot,
+                config,
+            } => write!(
+                f,
+                "{}: snapshot was written by config fingerprint \
+                 {snapshot:#018x} but this run's config fingerprints \
+                 to {config:#018x} — refusing to resume across \
+                 configs (same preset + overrides required)",
+                path.display()
+            ),
+            SnapshotError::NoValidSnapshot { dir, tried } => write!(
+                f,
+                "no valid snapshot generation in {}: {}",
+                dir.display(),
+                tried.join("; ")
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+// ---- little-endian writers (snapshot-local; the net codec's are
+// private to that module) ---------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize to the framed byte form (header + crc'd body).
+pub fn encode(s: &SnapshotState) -> Vec<u8> {
+    let mut body = Vec::with_capacity(
+        64 + 4 * (s.w.len() + s.alpha.len() + s.beta.len())
+            + 4 * s.ef_server.len()
+            + s.ef_clients
+                .values()
+                .map(|v| 12 + 4 * v.len())
+                .sum::<usize>(),
+    );
+    put_u64(&mut body, s.fingerprint);
+    put_u64(&mut body, s.next_round);
+    put_u32(&mut body, s.w.len() as u32);
+    put_u32(&mut body, s.alpha.len() as u32);
+    put_u32(&mut body, s.beta.len() as u32);
+    put_f32s(&mut body, &s.w);
+    put_f32s(&mut body, &s.alpha);
+    put_f32s(&mut body, &s.beta);
+    put_u32(&mut body, s.ef_server.len() as u32);
+    put_f32s(&mut body, &s.ef_server);
+    put_u32(&mut body, s.ef_clients.len() as u32);
+    for (&client, res) in &s.ef_clients {
+        put_u64(&mut body, client);
+        put_u32(&mut body, res.len() as u32);
+        put_f32s(&mut body, res);
+    }
+    put_u64(&mut body, s.comm.up_bytes);
+    put_u64(&mut body, s.comm.down_bytes);
+    put_u64(&mut body, s.comm.up_msgs);
+    put_u64(&mut body, s.comm.down_msgs);
+    put_u64(&mut body, s.comm.partial_bytes);
+    put_u64(&mut body, s.comm.partial_msgs);
+
+    let mut out =
+        Vec::with_capacity(SNAPSHOT_HEADER_BYTES + body.len());
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Bounds-checked cursor over a crc-verified body; overruns are
+/// [`SnapshotError::Malformed`] (the checksum already passed, so a
+/// short field means a broken writer, not a torn file).
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Rd<'a> {
+    fn bytes(
+        &mut self,
+        n: usize,
+        what: &str,
+    ) -> Result<&'a [u8], SnapshotError> {
+        if self.buf.len() - self.pos < n {
+            return Err(SnapshotError::Malformed {
+                path: self.path.to_path_buf(),
+                what: format!(
+                    "{what}: need {n} bytes, only {} left",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, SnapshotError> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, SnapshotError> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32s(
+        &mut self,
+        n: usize,
+        what: &str,
+    ) -> Result<Vec<f32>, SnapshotError> {
+        let b = self.bytes(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(self) -> Result<(), SnapshotError> {
+        if self.pos != self.buf.len() {
+            return Err(SnapshotError::Malformed {
+                path: self.path.to_path_buf(),
+                what: format!(
+                    "{} trailing bytes after comm totals",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Parse framed snapshot bytes; `path` only names the source in
+/// errors. Every corruption class maps to a distinct typed variant
+/// (see [`SnapshotError`]), which is what lets [`load_resume`]
+/// distinguish "fall back a generation" from "hard reject".
+pub fn decode(
+    bytes: &[u8],
+    path: &Path,
+) -> Result<SnapshotState, SnapshotError> {
+    let p = || path.to_path_buf();
+    if bytes.len() < SNAPSHOT_HEADER_BYTES {
+        return Err(SnapshotError::Truncated {
+            path: p(),
+            context: "header",
+        });
+    }
+    if bytes[0..4] != SNAPSHOT_MAGIC {
+        return Err(SnapshotError::BadMagic {
+            path: p(),
+            got: [bytes[0], bytes[1], bytes[2], bytes[3]],
+        });
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != SNAPSHOT_VERSION {
+        return Err(SnapshotError::VersionMismatch {
+            path: p(),
+            got: version,
+            want: SNAPSHOT_VERSION,
+        });
+    }
+    let body_len =
+        u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]])
+            as usize;
+    let want_crc = u32::from_le_bytes([
+        bytes[12], bytes[13], bytes[14], bytes[15],
+    ]);
+    let rest = &bytes[SNAPSHOT_HEADER_BYTES..];
+    if rest.len() < body_len {
+        return Err(SnapshotError::Truncated {
+            path: p(),
+            context: "body",
+        });
+    }
+    if rest.len() > body_len {
+        return Err(SnapshotError::Malformed {
+            path: p(),
+            what: format!(
+                "{} trailing bytes after the declared body",
+                rest.len() - body_len
+            ),
+        });
+    }
+    let got_crc = crc32(rest);
+    if got_crc != want_crc {
+        return Err(SnapshotError::ChecksumMismatch {
+            path: p(),
+            got: got_crc,
+            want: want_crc,
+        });
+    }
+    let mut r = Rd { buf: rest, pos: 0, path };
+    let fingerprint = r.u64("fingerprint")?;
+    let next_round = r.u64("next_round")?;
+    let dim = r.u32("dim")? as usize;
+    let alpha_dim = r.u32("alpha_dim")? as usize;
+    let beta_dim = r.u32("beta_dim")? as usize;
+    let w = r.f32s(dim, "w")?;
+    let alpha = r.f32s(alpha_dim, "alpha")?;
+    let beta = r.f32s(beta_dim, "beta")?;
+    let ef_len = r.u32("ef_server length")? as usize;
+    let ef_server = r.f32s(ef_len, "ef_server")?;
+    let n_ef = r.u32("ef_clients count")? as usize;
+    let mut ef_clients = BTreeMap::new();
+    for _ in 0..n_ef {
+        let client = r.u64("ef client id")?;
+        let len = r.u32("ef residual length")? as usize;
+        let res = r.f32s(len, "ef residual")?;
+        if ef_clients.insert(client, res).is_some() {
+            return Err(SnapshotError::Malformed {
+                path: p(),
+                what: format!("duplicate ef client id {client}"),
+            });
+        }
+    }
+    let comm = CommStats {
+        up_bytes: r.u64("comm.up_bytes")?,
+        down_bytes: r.u64("comm.down_bytes")?,
+        up_msgs: r.u64("comm.up_msgs")?,
+        down_msgs: r.u64("comm.down_msgs")?,
+        partial_bytes: r.u64("comm.partial_bytes")?,
+        partial_msgs: r.u64("comm.partial_msgs")?,
+    };
+    r.finish()?;
+    Ok(SnapshotState {
+        fingerprint,
+        next_round,
+        w,
+        alpha,
+        beta,
+        ef_server,
+        ef_clients,
+        comm,
+    })
+}
+
+fn io_err(path: &Path, source: std::io::Error) -> SnapshotError {
+    SnapshotError::Io {
+        path: path.to_path_buf(),
+        source,
+    }
+}
+
+/// On-disk name for a generation: `snap-<next_round:08>.fp8s`, so a
+/// lexicographic sort is a round sort for any run under 10^8 rounds.
+fn generation_name(next_round: u64) -> String {
+    format!("snap-{next_round:08}.fp8s")
+}
+
+/// Parse a directory entry name back to its round, if it is one of
+/// ours (temp files and foreign files are skipped, not errors).
+fn parse_generation(name: &str) -> Option<u64> {
+    let digits = name
+        .strip_prefix("snap-")?
+        .strip_suffix(".fp8s")?;
+    digits.parse::<u64>().ok()
+}
+
+/// Snapshot generations in `dir`, newest (highest round) first.
+pub fn list_generations(
+    dir: &Path,
+) -> Result<Vec<(u64, PathBuf)>, SnapshotError> {
+    let rd = fs::read_dir(dir).map_err(|e| io_err(dir, e))?;
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| io_err(dir, e))?;
+        let name = entry.file_name();
+        if let Some(round) =
+            name.to_str().and_then(parse_generation)
+        {
+            out.push((round, entry.path()));
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// Durably write one generation: temp file in the same directory,
+/// fsync, rename into place, fsync the directory, then prune old
+/// generations down to [`KEEP_GENERATIONS`]. A crash at any point
+/// leaves a loadable generation set — the rename is the commit
+/// point, and the previous generation is never touched before it.
+pub fn write_atomic(
+    dir: &Path,
+    s: &SnapshotState,
+) -> Result<PathBuf, SnapshotError> {
+    fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+    let name = generation_name(s.next_round);
+    let final_path = dir.join(&name);
+    let tmp_path = dir.join(format!(".tmp-{name}"));
+    let bytes = encode(s);
+    {
+        let mut f = File::create(&tmp_path)
+            .map_err(|e| io_err(&tmp_path, e))?;
+        f.write_all(&bytes).map_err(|e| io_err(&tmp_path, e))?;
+        f.sync_all().map_err(|e| io_err(&tmp_path, e))?;
+    }
+    fs::rename(&tmp_path, &final_path)
+        .map_err(|e| io_err(&final_path, e))?;
+    // Directory fsync makes the rename itself durable. Best-effort:
+    // not every filesystem lets you open a directory for sync, and a
+    // lost *rename* (vs a torn file) only costs one generation.
+    if let Ok(d) = File::open(dir) {
+        d.sync_all().ok();
+    }
+    for (_, old) in
+        list_generations(dir)?.into_iter().skip(KEEP_GENERATIONS)
+    {
+        fs::remove_file(&old).map_err(|e| io_err(&old, e))?;
+    }
+    Ok(final_path)
+}
+
+/// Find the newest loadable generation in `dir` and gate it on the
+/// config fingerprint.
+///
+/// * `Ok(None)`: no snapshot files at all (missing or empty dir) —
+///   a cold start, so `--resume` can be passed from the first launch
+///   of a kill/resume loop.
+/// * Corrupt/torn generations (bad magic, version, crc, truncation,
+///   malformed body, unreadable file) fall back to the next-newest,
+///   accumulating the per-file reason.
+/// * A *fingerprint* mismatch on a structurally valid snapshot is a
+///   hard reject — that file is the operator pointing two different
+///   experiments at one state directory, and "fall back" would hide
+///   it.
+/// * All generations bad: [`SnapshotError::NoValidSnapshot`] naming
+///   every file tried.
+pub fn load_resume(
+    dir: &Path,
+    fingerprint: u64,
+) -> Result<Option<(SnapshotState, PathBuf)>, SnapshotError> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let generations = list_generations(dir)?;
+    if generations.is_empty() {
+        return Ok(None);
+    }
+    let mut tried = Vec::new();
+    for (_, path) in &generations {
+        let bytes = match fs::read(path) {
+            Ok(b) => b,
+            Err(e) => {
+                tried.push(format!("{}: {e}", path.display()));
+                continue;
+            }
+        };
+        match decode(&bytes, path) {
+            Ok(s) => {
+                if s.fingerprint != fingerprint {
+                    return Err(SnapshotError::FingerprintMismatch {
+                        path: path.clone(),
+                        snapshot: s.fingerprint,
+                        config: fingerprint,
+                    });
+                }
+                return Ok(Some((s, path.clone())));
+            }
+            Err(e) => tried.push(e.to_string()),
+        }
+    }
+    Err(SnapshotError::NoValidSnapshot {
+        dir: dir.to_path_buf(),
+        tried,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> SnapshotState {
+        let mut ef_clients = BTreeMap::new();
+        ef_clients.insert(3u64, vec![0.5f32, -0.25]);
+        ef_clients.insert(11u64, vec![1.5f32, 2.5]);
+        SnapshotState {
+            fingerprint: 0xDEAD_BEEF_0123_4567,
+            next_round: 42,
+            w: vec![1.0, -2.0, 0.5],
+            alpha: vec![3.0],
+            beta: vec![0.125, 8.0],
+            ef_server: vec![0.0625, -0.0625, 0.0],
+            ef_clients,
+            comm: CommStats {
+                up_bytes: 111,
+                down_bytes: 222,
+                up_msgs: 3,
+                down_msgs: 4,
+                partial_bytes: 55,
+                partial_msgs: 6,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrips() {
+        let s = state();
+        let bytes = encode(&s);
+        assert_eq!(&bytes[0..4], b"FP8S");
+        let back = decode(&bytes, Path::new("t")).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn corruption_classes_are_typed() {
+        let good = encode(&state());
+        // truncated header
+        assert!(matches!(
+            decode(&good[..10], Path::new("t")),
+            Err(SnapshotError::Truncated { context: "header", .. })
+        ));
+        // truncated body (torn write)
+        assert!(matches!(
+            decode(&good[..good.len() - 5], Path::new("t")),
+            Err(SnapshotError::Truncated { context: "body", .. })
+        ));
+        // flipped body byte
+        let mut flip = good.clone();
+        *flip.last_mut().unwrap() ^= 0x40;
+        assert!(matches!(
+            decode(&flip, Path::new("t")),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        // wrong magic
+        let mut magic = good.clone();
+        magic[0] = b'X';
+        assert!(matches!(
+            decode(&magic, Path::new("t")),
+            Err(SnapshotError::BadMagic { .. })
+        ));
+        // future version
+        let mut ver = good.clone();
+        ver[4] = 9;
+        assert!(matches!(
+            decode(&ver, Path::new("t")),
+            Err(SnapshotError::VersionMismatch { got: 9, .. })
+        ));
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0);
+        assert!(matches!(
+            decode(&long, Path::new("t")),
+            Err(SnapshotError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn atomic_write_retains_two_generations() {
+        let dir = std::env::temp_dir().join(format!(
+            "fedfp8_snap_unit_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let mut s = state();
+        for round in [1u64, 2, 3] {
+            s.next_round = round;
+            write_atomic(&dir, &s).unwrap();
+        }
+        let gens = list_generations(&dir).unwrap();
+        assert_eq!(
+            gens.iter().map(|g| g.0).collect::<Vec<_>>(),
+            vec![3, 2]
+        );
+        let (loaded, path) =
+            load_resume(&dir, s.fingerprint).unwrap().unwrap();
+        assert_eq!(loaded.next_round, 3);
+        assert!(path.ends_with("snap-00000003.fp8s"));
+        // empty / missing dir is a cold start, not an error
+        let _ = fs::remove_dir_all(&dir);
+        assert!(load_resume(&dir, 1).unwrap().is_none());
+    }
+}

@@ -7,10 +7,17 @@
 //!            [--cohort P | --cohort-frac F]  # per-round cohort size
 //!            [--agg flat|tree:G]  # aggregation topology (G mid-tier
 //!            # nodes; bit-identical to flat by construction)
+//!            [--snapshot-dir D [--snapshot-every N] [--resume]]
+//!            # durable round state: atomic crc-framed snapshots
+//!            # every N rounds; --resume continues from the newest
+//!            # valid generation, bit-identical to an uninterrupted
+//!            # run (config fingerprint enforced)
 //! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
 //!            --workers 2        # drive remote workers over TCP
 //!            [--net-inflight 4]   # jobs in flight per connection
 //!            [--heartbeat-ms 1000] # liveness probe interval (0=off)
+//!            [--net-token SECRET] # handshake auth (both sides must
+//!            # carry the same secret; REQUIRED beyond localhost)
 //! fedfp8 run --preset ... --role worker --connect 127.0.0.1:7878
 //!            # serve client jobs for a --role server coordinator;
 //!            # must be launched with the identical preset/overrides
@@ -30,7 +37,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use fedfp8::config::{ExperimentConfig, NetCfg, NetRole};
+use fedfp8::config::{ExperimentConfig, NetCfg, NetRole, SnapshotCfg};
 use fedfp8::coordinator::transport::InProcessTransport;
 use fedfp8::coordinator::{build_world, RunResult, Server, World};
 use fedfp8::net::{self, Hello};
@@ -97,16 +104,43 @@ fn cmd_run(args: &Args) -> Result<()> {
         .to_string();
     let cfg = apply_overrides(ExperimentConfig::preset(&preset)?, args)?;
     let net = NetCfg::from_args(args)?;
+    let snap = SnapshotCfg::from_args(args, net.as_ref())?;
     match net {
-        None => run_local(&preset, cfg),
+        None => run_local(&preset, cfg, snap),
         Some(n) if n.role == NetRole::Server => {
-            run_net_server(&preset, cfg, n)
+            run_net_server(&preset, cfg, n, snap)
         }
         Some(n) => run_net_worker(cfg, n),
     }
 }
 
-fn run_local(preset: &str, cfg: ExperimentConfig) -> Result<()> {
+/// Arm the durability layer on a built server: install the write
+/// cadence and, under `--resume`, load the newest valid generation
+/// (bit-identical continuation; a fingerprint mismatch aborts here).
+fn arm_snapshots(server: &mut Server<'_>, snap: &SnapshotCfg) -> Result<()> {
+    let Some(dir) = snap.dir.clone() else {
+        return Ok(());
+    };
+    server.set_snapshot(dir.clone(), snap.every);
+    if snap.resume {
+        let start = server
+            .resume_from(&dir)
+            .with_context(|| format!("--resume from {}", dir.display()))?;
+        if start == 0 {
+            println!(
+                "[resume] no snapshot in {} yet; starting at round 0",
+                dir.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_local(
+    preset: &str,
+    cfg: ExperimentConfig,
+    snap: SnapshotCfg,
+) -> Result<()> {
     let dir = default_dir();
     let engine = Engine::new(&dir)?;
     let manifest = Manifest::load(&dir)?;
@@ -124,6 +158,7 @@ fn run_local(preset: &str, cfg: ExperimentConfig) -> Result<()> {
     );
     let mut server = Server::new(&engine, &manifest, cfg)?;
     server.set_verbose(true);
+    arm_snapshots(&mut server, &snap)?;
     let result = server.run()?;
     report_run(&engine, &result)
 }
@@ -134,6 +169,7 @@ fn run_net_server(
     preset: &str,
     cfg: ExperimentConfig,
     net: NetCfg,
+    snap: SnapshotCfg,
 ) -> Result<()> {
     let dir = default_dir();
     let engine = Engine::new(&dir)?;
@@ -143,6 +179,7 @@ fn run_net_server(
         fingerprint: cfg.fingerprint(),
         dim: model.dim as u64,
         model: cfg.model.clone(),
+        auth: net::token_digest(net.token.as_deref()),
     };
     let listener = TcpListener::bind(&net.addr)
         .with_context(|| format!("binding {}", net.addr))?;
@@ -174,6 +211,7 @@ fn run_net_server(
     let mut server =
         Server::with_transport(&engine, &manifest, cfg, Box::new(&transport))?;
     server.set_verbose(true);
+    arm_snapshots(&mut server, &snap)?;
     let result = server.run();
     drop(server);
     transport.shutdown();
@@ -198,6 +236,7 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
         fingerprint: cfg.fingerprint(),
         dim: model.dim as u64,
         model: cfg.model.clone(),
+        auth: net::token_digest(net.token.as_deref()),
     };
     let World { train, shards, .. } = build_world(&cfg, model)?;
     let ctx = net::WorkerCtx {

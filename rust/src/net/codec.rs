@@ -126,6 +126,41 @@ pub struct Hello {
     pub dim: u64,
     /// Manifest model-variant name.
     pub model: String,
+    /// `--net-token` digest ([`token_digest`]); 0 when no token is
+    /// configured. Both handshake directions carry it and compare in
+    /// constant time ([`digest_eq`]) — mismatch is a typed
+    /// [`WireError::AuthRejected`] before any job flows.
+    pub auth: u64,
+}
+
+/// FNV-1a 64 digest of the shared handshake secret; `None` (no
+/// `--net-token`) maps to 0. The digest fences off misconfigured and
+/// foreign peers — the threat model is accidental cross-talk between
+/// deployments, not a hostile network (that is what the ROADMAP's
+/// TLS item is for), so the repo's standard FNV hash is the right
+/// weight.
+pub fn token_digest(token: Option<&str>) -> u64 {
+    let Some(t) = token else { return 0 };
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in t.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Constant-time digest comparison: folds the xor-difference instead
+/// of short-circuiting, so a byte-guessing peer learns nothing from
+/// response timing.
+pub fn digest_eq(a: u64, b: u64) -> bool {
+    let mut d = a ^ b;
+    d |= d >> 32;
+    d |= d >> 16;
+    d |= d >> 8;
+    d |= d >> 4;
+    d |= d >> 2;
+    d |= d >> 1;
+    (d & 1) == 0
 }
 
 // ---- little-endian writers -----------------------------------------
@@ -219,6 +254,10 @@ impl<'a> Reader<'a> {
         Ok(b.chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     fn finish(self) -> Result<(), WireError> {
@@ -482,9 +521,13 @@ pub fn encode_hello(h: &Hello, out: &mut Vec<u8>) {
     put_u64(out, h.dim);
     put_u16(out, h.model.len() as u16);
     out.extend_from_slice(h.model.as_bytes());
+    put_u64(out, h.auth);
 }
 
-/// Decode a [`Hello`] body.
+/// Decode a [`Hello`] body. The trailing auth digest is optional on
+/// read (absent decodes as 0 = "no token"), so a tokenless build one
+/// PR older still handshakes against a tokenless launch of this one
+/// — and is rejected, not confused, the moment a token is set.
 pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
     let mut r = Reader::new(body);
     let fingerprint = r.u64("fingerprint")?;
@@ -494,26 +537,42 @@ pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
         .map_err(|_| WireError::Malformed {
             what: "model name is not utf-8".into(),
         })?;
+    let auth = if r.remaining() > 0 {
+        r.u64("auth digest")?
+    } else {
+        0
+    };
     r.finish()?;
     Ok(Hello {
         fingerprint,
         dim,
         model,
+        auth,
     })
 }
 
-/// Encode a HelloAck body (the echoed fingerprint).
-pub fn encode_hello_ack(fingerprint: u64, out: &mut Vec<u8>) {
+/// Encode a HelloAck body (the echoed fingerprint + the server's own
+/// auth digest, so auth is mutual — a worker will not serve a
+/// foreign coordinator either).
+pub fn encode_hello_ack(fingerprint: u64, auth: u64, out: &mut Vec<u8>) {
     out.clear();
     put_u64(out, fingerprint);
+    put_u64(out, auth);
 }
 
-/// Decode a HelloAck body.
-pub fn decode_hello_ack(body: &[u8]) -> Result<u64, WireError> {
+/// Decode a HelloAck body into (fingerprint, auth digest); the auth
+/// field is optional on read with the same compatibility rule as
+/// [`decode_hello`].
+pub fn decode_hello_ack(body: &[u8]) -> Result<(u64, u64), WireError> {
     let mut r = Reader::new(body);
     let fp = r.u64("ack fingerprint")?;
+    let auth = if r.remaining() > 0 {
+        r.u64("ack auth digest")?
+    } else {
+        0
+    };
     r.finish()?;
-    Ok(fp)
+    Ok((fp, auth))
 }
 
 // ---- heartbeat -----------------------------------------------------
@@ -688,12 +747,46 @@ mod tests {
             fingerprint: 0x1234_5678_9ABC_DEF0,
             dim: 4096,
             model: "lenet_c10".into(),
+            auth: token_digest(Some("hunter2")),
         };
         let mut body = Vec::new();
         encode_hello(&h, &mut body);
         assert_eq!(decode_hello(&body).unwrap(), h);
-        encode_hello_ack(h.fingerprint, &mut body);
-        assert_eq!(decode_hello_ack(&body).unwrap(), h.fingerprint);
+        encode_hello_ack(h.fingerprint, h.auth, &mut body);
+        assert_eq!(
+            decode_hello_ack(&body).unwrap(),
+            (h.fingerprint, h.auth)
+        );
+        // pre-token peers omit the trailing digest: decodes as 0,
+        // not as an error
+        encode_hello(&h, &mut body);
+        body.truncate(body.len() - 8);
+        assert_eq!(decode_hello(&body).unwrap().auth, 0);
+        encode_hello_ack(h.fingerprint, h.auth, &mut body);
+        body.truncate(8);
+        assert_eq!(
+            decode_hello_ack(&body).unwrap(),
+            (h.fingerprint, 0)
+        );
+    }
+
+    #[test]
+    fn token_digest_and_ct_compare() {
+        assert_eq!(token_digest(None), 0);
+        // FNV-1a of the empty string is the offset basis — distinct
+        // from "no token configured"
+        assert_eq!(token_digest(Some("")), 0xcbf2_9ce4_8422_2325);
+        let a = token_digest(Some("hunter2"));
+        let b = token_digest(Some("hunter3"));
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        assert_eq!(token_digest(Some("hunter2")), a);
+        assert!(digest_eq(a, a) && digest_eq(0, 0));
+        assert!(!digest_eq(a, b) && !digest_eq(a, 0));
+        // every single-bit difference must be caught by the fold
+        for bit in 0..64 {
+            assert!(!digest_eq(a, a ^ (1u64 << bit)), "bit {bit}");
+        }
     }
 
     #[test]

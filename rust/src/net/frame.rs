@@ -143,6 +143,11 @@ pub enum WireError {
     /// boundary). An orderly shutdown for a serve loop; an error (the
     /// peer is gone) for a caller awaiting a response.
     CleanClose,
+    /// Handshake token digests differ (`--net-token`): the peer is
+    /// live and speaks the protocol, but is not part of this
+    /// deployment. Raised by either side of the Hello/HelloAck
+    /// exchange before any job or state flows.
+    AuthRejected,
     /// Body parsed structurally but a field was invalid
     /// (codec layer: bad enum byte, short body, trailing bytes...).
     Malformed { what: String },
@@ -192,6 +197,12 @@ impl fmt::Display for WireError {
             WireError::CleanClose => {
                 write!(f, "connection closed by the peer")
             }
+            WireError::AuthRejected => write!(
+                f,
+                "handshake auth rejected: --net-token digest \
+                 mismatch (launch both sides with the identical \
+                 secret, or neither)"
+            ),
             WireError::Malformed { what } => {
                 write!(f, "malformed message body: {what}")
             }

@@ -41,7 +41,7 @@ pub mod frame;
 pub mod socket;
 pub mod worker;
 
-pub use codec::{Hello, WireJob, WireOutcome};
+pub use codec::{digest_eq, token_digest, Hello, WireJob, WireOutcome};
 pub use frame::{FrameReader, WireError, WIRE_VERSION};
 pub use socket::{accept_workers, ConnDied, SocketCfg, SocketTransport};
 pub use worker::{

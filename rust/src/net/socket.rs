@@ -198,6 +198,13 @@ fn handshake(
     );
     let h = codec::decode_hello(&f.body)
         .with_context(|| format!("handshake with worker {peer}"))?;
+    // auth gates everything else: an unauthenticated peer learns
+    // nothing about our config beyond "the digest didn't match"
+    if !codec::digest_eq(h.auth, hello.auth) {
+        return Err(WireError::AuthRejected).with_context(|| {
+            format!("handshake with worker {peer}")
+        });
+    }
     ensure!(
         h.fingerprint == hello.fingerprint,
         "config fingerprint mismatch with worker {peer}: server \
@@ -220,7 +227,7 @@ fn handshake(
         h.dim
     );
     let mut ack = Vec::new();
-    codec::encode_hello_ack(hello.fingerprint, &mut ack);
+    codec::encode_hello_ack(hello.fingerprint, hello.auth, &mut ack);
     frame::write_frame(stream, FrameKind::HelloAck, &ack)
         .with_context(|| format!("acking worker {peer}"))?;
     Ok(())

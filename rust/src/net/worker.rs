@@ -220,12 +220,18 @@ pub fn connect(
         "expected HelloAck, server sent {:?}",
         f.kind
     );
-    let fp = codec::decode_hello_ack(&f.body)?;
+    let (fp, auth) = codec::decode_hello_ack(&f.body)?;
     ensure!(
         fp == hello.fingerprint,
         "server acked fingerprint {fp:#018x}, ours is {:#018x}",
         hello.fingerprint
     );
+    // mutual auth: a worker must not serve a foreign coordinator
+    // either (the server proved itself by echoing our digest)
+    if !codec::digest_eq(auth, hello.auth) {
+        return Err(WireError::AuthRejected)
+            .context("verifying the server's HelloAck auth digest");
+    }
     Ok(stream)
 }
 

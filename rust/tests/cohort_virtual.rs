@@ -15,6 +15,7 @@ use fedfp8::config::AggMode;
 use fedfp8::coordinator::transport::streams;
 use fedfp8::coordinator::{Server, VIRTUALIZE_AT};
 use fedfp8::fp8::rng::Pcg32;
+use fedfp8::fp8::Rounding;
 use fedfp8::runtime::Engine;
 
 fn cohort_of(seed: u64, round: u64, k: usize, p: usize) -> Vec<usize> {
@@ -118,6 +119,39 @@ fn million_clients_ef_state_grows_with_touched_cohorts_only() {
         "ef_residuals = {}",
         probe.ef_residuals
     );
+}
+
+#[test]
+fn exactly_zero_ef_residuals_are_evicted_on_write_back() {
+    // With FP32 comm the encode/decode pair is the identity, so every
+    // EF residual a client writes back is exactly zero. The server
+    // must evict those entries rather than hoard one zero vector per
+    // touched client — otherwise "memory grows with touched cohorts"
+    // quietly becomes "memory grows forever" on long lossless runs.
+    let (dir, manifest) = mock_manifest("m_evict");
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut cfg = mock_cfg(1, true);
+    cfg.clients = 1_000_000;
+    cfg.participation = 64;
+    cfg.rounds = 3;
+    cfg.comm = Rounding::None;
+    assert!(cfg.error_feedback, "EF must stay on for this test");
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    for t in 0..3 {
+        server.round(t).unwrap();
+        let probe = server.client_state_probe();
+        assert_eq!(
+            probe.ef_residuals, 0,
+            "round {t}: zero residuals were retained instead of evicted"
+        );
+    }
 }
 
 #[test]

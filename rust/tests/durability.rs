@@ -1,0 +1,343 @@
+//! Crash-durability proof for the coordinator snapshot layer
+//! (`coordinator::snapshot`): a run interrupted at any round boundary
+//! and resumed from disk is **bit-identical** to an uninterrupted
+//! run — at any `--parallelism`, with error feedback on, flat or
+//! tree aggregation — and a torn or corrupted newest generation
+//! falls back one generation (still bit-identical), while a foreign
+//! config fingerprint is a typed hard reject.
+//!
+//! The crash model: drop the `Server` after a round boundary (the
+//! snapshot is written *after* the round completes, so state on disk
+//! always says "rounds `0..next_round` are complete"), then build a
+//! fresh server from scratch — new process state, nothing carried
+//! over but the snapshot directory — and `resume_from` it.
+
+mod common;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use common::{mock_cfg, mock_manifest, MockTransport, Trace};
+use fedfp8::config::{AggMode, ExperimentConfig};
+use fedfp8::coordinator::snapshot::SnapshotError;
+use fedfp8::coordinator::Server;
+use fedfp8::runtime::Engine;
+
+/// Fresh (pre-cleaned) snapshot directory for one test arm.
+fn snap_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fedfp8_durab_{}_{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Uninterrupted reference run: every round, no snapshots.
+fn run_full(tag: &str, cfg: ExperimentConfig) -> Trace {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let rounds = cfg.rounds;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let mut losses = Vec::new();
+    for t in 0..rounds {
+        losses.push(server.round(t).unwrap().to_bits());
+    }
+    Trace::capture(&server, losses)
+}
+
+/// Run rounds `0..cut` with a snapshot at every boundary
+/// (`--snapshot-every 1`), then "crash": the server is dropped and
+/// only the snapshot directory survives. Returns the pre-crash
+/// per-round losses.
+fn run_until_crash(
+    tag: &str,
+    cfg: ExperimentConfig,
+    cut: usize,
+    snaps: &Path,
+) -> Vec<u32> {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let mut losses = Vec::new();
+    for t in 0..cut {
+        losses.push(server.round(t).unwrap().to_bits());
+        server.save_snapshot(snaps, t + 1).unwrap();
+    }
+    losses
+}
+
+/// Fresh-process resume: build a brand-new server, `resume_from` the
+/// snapshot directory, finish the run. Returns the resumed start
+/// round and the post-resume trace (losses cover resumed rounds
+/// only; the caller stitches).
+fn resume_and_finish(
+    tag: &str,
+    cfg: ExperimentConfig,
+    snaps: &Path,
+) -> (usize, Trace) {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let rounds = cfg.rounds;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let start = server.resume_from(snaps).unwrap();
+    let mut losses = Vec::new();
+    for t in start..rounds {
+        losses.push(server.round(t).unwrap().to_bits());
+    }
+    (start, Trace::capture(&server, losses))
+}
+
+/// The core property: interrupt at round boundary `cut`, resume in a
+/// fresh server, and the stitched trajectory (state, comm totals and
+/// every per-round loss) is bitwise identical to never crashing.
+fn prove_resume_identical(
+    tag: &str,
+    parallelism: usize,
+    agg: AggMode,
+    cut: usize,
+) {
+    let mut cfg = mock_cfg(parallelism, true);
+    cfg.agg = agg;
+    assert!(cfg.error_feedback, "durability arms must exercise EF");
+    let base = run_full(&format!("{tag}_base"), cfg.clone());
+
+    let snaps = snap_dir(tag);
+    let first =
+        run_until_crash(&format!("{tag}_a"), cfg.clone(), cut, &snaps);
+    let (start, resumed) =
+        resume_and_finish(&format!("{tag}_b"), cfg, &snaps);
+    assert_eq!(start, cut, "{tag}: resumed at the wrong round");
+
+    let mut losses = first;
+    losses.extend_from_slice(&resumed.losses);
+    let stitched = Trace { losses, ..resumed };
+    assert_eq!(
+        stitched, base,
+        "{tag}: resumed trajectory diverged from uninterrupted run"
+    );
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+// ---- acceptance (a): bit-identical resume across the lever matrix --
+
+#[test]
+fn resume_is_bit_identical_flat_p1() {
+    prove_resume_identical("flat_p1", 1, AggMode::Flat, 2);
+}
+
+#[test]
+fn resume_is_bit_identical_flat_p4() {
+    prove_resume_identical("flat_p4", 4, AggMode::Flat, 2);
+}
+
+#[test]
+fn resume_is_bit_identical_tree_p1() {
+    prove_resume_identical("tree_p1", 1, AggMode::Tree { nodes: 4 }, 2);
+}
+
+#[test]
+fn resume_is_bit_identical_tree_p4() {
+    prove_resume_identical("tree_p4", 4, AggMode::Tree { nodes: 4 }, 3);
+}
+
+#[test]
+fn resume_with_empty_dir_is_a_cold_start() {
+    // `--resume` on the very first launch of a kill/resume loop: no
+    // snapshot yet, so the run starts at round 0 and must match a
+    // run that never had snapshots armed.
+    let cfg = mock_cfg(1, true);
+    let base = run_full("cold_base", cfg.clone());
+    let snaps = snap_dir("cold");
+    let (start, resumed) = resume_and_finish("cold_b", cfg, &snaps);
+    assert_eq!(start, 0);
+    assert_eq!(resumed, base);
+}
+
+// ---- acceptance (b): corrupt newest generation falls back one ------
+
+/// Corrupt the newest generation with `mangle`, then prove resume
+/// falls back to the previous generation and the finished run is
+/// STILL bit-identical to the uninterrupted baseline.
+fn prove_fallback(tag: &str, mangle: impl Fn(&Path)) {
+    let cfg = mock_cfg(1, true);
+    let base = run_full(&format!("{tag}_base"), cfg.clone());
+
+    let snaps = snap_dir(tag);
+    let cut = 2; // leaves generations snap-00000001 + snap-00000002
+    let first =
+        run_until_crash(&format!("{tag}_a"), cfg.clone(), cut, &snaps);
+
+    let newest = snaps.join("snap-00000002.fp8s");
+    assert!(newest.exists(), "{tag}: expected newest generation");
+    mangle(&newest);
+
+    // fallback target is the round-1 snapshot: resume re-runs round 1
+    let (start, resumed) =
+        resume_and_finish(&format!("{tag}_b"), cfg, &snaps);
+    assert_eq!(
+        start, 1,
+        "{tag}: corrupt newest should fall back one generation"
+    );
+    let mut losses = vec![first[0]];
+    losses.extend_from_slice(&resumed.losses);
+    let stitched = Trace { losses, ..resumed };
+    assert_eq!(
+        stitched, base,
+        "{tag}: fallback resume diverged from uninterrupted run"
+    );
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+#[test]
+fn truncated_newest_falls_back_one_generation() {
+    // torn write: the file ends mid-body
+    prove_fallback("trunc", |p| {
+        let bytes = fs::read(p).unwrap();
+        fs::write(p, &bytes[..bytes.len() / 2]).unwrap();
+    });
+}
+
+#[test]
+fn byte_flipped_newest_falls_back_one_generation() {
+    // bit rot: same length, one flipped body byte → crc catches it
+    prove_fallback("flip", |p| {
+        let mut bytes = fs::read(p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(p, bytes).unwrap();
+    });
+}
+
+#[test]
+fn all_generations_corrupt_is_a_typed_error_naming_each_file() {
+    let cfg = mock_cfg(1, true);
+    let snaps = snap_dir("allbad");
+    run_until_crash("allbad_a", cfg.clone(), 2, &snaps);
+    for gen in ["snap-00000001.fp8s", "snap-00000002.fp8s"] {
+        let p = snaps.join(gen);
+        let bytes = fs::read(&p).unwrap();
+        fs::write(&p, &bytes[..8]).unwrap();
+    }
+    let (dir, manifest) = mock_manifest("allbad_b");
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let err = server.resume_from(&snaps).unwrap_err();
+    match err.downcast_ref::<SnapshotError>() {
+        Some(SnapshotError::NoValidSnapshot { tried, .. }) => {
+            assert_eq!(tried.len(), 2, "both generations tried");
+            for gen in ["snap-00000001.fp8s", "snap-00000002.fp8s"] {
+                assert!(
+                    tried.iter().any(|t| t.contains(gen)),
+                    "error does not name {gen}: {tried:?}"
+                );
+            }
+        }
+        other => panic!("expected NoValidSnapshot, got {other:?}"),
+    }
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+// ---- acceptance (c): fingerprint mismatch is a hard reject ---------
+
+#[test]
+fn foreign_fingerprint_is_hard_rejected_naming_both() {
+    // two configs that differ only in seed — different fingerprints,
+    // same shapes, so only the gate (not a dim check) can catch it
+    let cfg_a = mock_cfg(1, true);
+    let mut cfg_b = mock_cfg(1, true);
+    cfg_b.seed = 12;
+    let fp_a = cfg_a.fingerprint();
+    let fp_b = cfg_b.fingerprint();
+    assert_ne!(fp_a, fp_b);
+
+    let snaps = snap_dir("foreign");
+    run_until_crash("foreign_a", cfg_a, 2, &snaps);
+
+    let (dir, manifest) = mock_manifest("foreign_b");
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg_b,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let err = server.resume_from(&snaps).unwrap_err();
+    match err.downcast_ref::<SnapshotError>() {
+        Some(SnapshotError::FingerprintMismatch {
+            snapshot,
+            config,
+            ..
+        }) => {
+            assert_eq!(*snapshot, fp_a);
+            assert_eq!(*config, fp_b);
+        }
+        other => panic!("expected FingerprintMismatch, got {other:?}"),
+    }
+    // the Display names BOTH fingerprints so the operator can tell
+    // which side is stale
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains(&format!("{fp_a:#018x}"))
+            && msg.contains(&format!("{fp_b:#018x}")),
+        "error must name both fingerprints: {msg}"
+    );
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+// ---- nightly soak: every boundary, every lever combination ---------
+
+/// Kill/resume soak for the nightly workflow: interrupt at EVERY
+/// round boundary, for flat and tree aggregation at parallelism 1
+/// and 4 — 3 boundaries x 4 lever combinations, each proven
+/// bit-identical against its uninterrupted baseline.
+#[test]
+#[ignore]
+fn kill_resume_soak_every_boundary() {
+    for (pi, parallelism) in [1usize, 4].into_iter().enumerate() {
+        for (ai, agg) in
+            [AggMode::Flat, AggMode::Tree { nodes: 4 }]
+                .into_iter()
+                .enumerate()
+        {
+            for cut in 1..mock_cfg(1, true).rounds {
+                prove_resume_identical(
+                    &format!("soak_p{pi}_a{ai}_c{cut}"),
+                    parallelism,
+                    agg,
+                    cut,
+                );
+            }
+        }
+    }
+}

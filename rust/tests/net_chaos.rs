@@ -63,6 +63,7 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
         fingerprint: cfg.fingerprint(),
         dim: common::DIM as u64,
         model: "mock".into(),
+        auth: 0,
     }
 }
 

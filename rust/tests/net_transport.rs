@@ -44,6 +44,7 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
         fingerprint: cfg.fingerprint(),
         dim: common::DIM as u64,
         model: "mock".into(),
+        auth: 0,
     }
 }
 
@@ -248,6 +249,119 @@ fn handshake_rejects_mismatched_config() {
         assert!(
             msg.contains("fingerprint mismatch"),
             "unexpected handshake error: {msg}"
+        );
+    });
+}
+
+#[test]
+fn handshake_rejects_wrong_auth_token() {
+    // --net-token: a worker with the wrong (or no) secret must be
+    // turned away with the typed error BEFORE any config detail or
+    // job flows; a worker with the right secret handshakes fine
+    let cfg = mock_cfg(1, false);
+    let mut server_hello = hello_for(&cfg);
+    server_hello.auth = net::token_digest(Some("right-secret"));
+    let reject = |worker_auth: u64| {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut worker_hello = hello_for(&cfg);
+        worker_hello.auth = worker_auth;
+        thread::scope(|s| {
+            s.spawn(|| {
+                let _ = net::connect(
+                    &addr,
+                    &worker_hello,
+                    Duration::from_secs(10),
+                );
+            });
+            net::accept_workers(
+                listener,
+                1,
+                &server_hello,
+                SocketCfg::new(Duration::from_secs(10)),
+            )
+            .map(|_| ())
+            .unwrap_err()
+        })
+    };
+    for bad in [net::token_digest(Some("wrong-secret")), 0] {
+        let err = reject(bad);
+        assert!(
+            matches!(
+                err.downcast_ref::<frame::WireError>(),
+                Some(frame::WireError::AuthRejected)
+            ),
+            "expected typed AuthRejected, got: {err:?}"
+        );
+        assert!(
+            format!("{err:#}").contains("--net-token"),
+            "error should point at the knob: {err:#}"
+        );
+    }
+    // same secret on both sides: accepted
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::scope(|s| {
+        s.spawn(|| {
+            let stream = net::connect(
+                &addr,
+                &server_hello,
+                Duration::from_secs(10),
+            );
+            assert!(stream.is_ok(), "matching token must handshake");
+        });
+        let transport = net::accept_workers(
+            listener,
+            1,
+            &server_hello,
+            SocketCfg::new(Duration::from_secs(10)),
+        )
+        .expect("matching token must be accepted");
+        transport.shutdown();
+    });
+}
+
+#[test]
+fn worker_rejects_unauthenticated_server_ack() {
+    // mutual auth: a worker launched with a token refuses to serve a
+    // coordinator that did not prove the same secret in its ack
+    let cfg = mock_cfg(1, false);
+    let mut worker_hello = hello_for(&cfg);
+    worker_hello.auth = net::token_digest(Some("right-secret"));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::scope(|s| {
+        let server_hello = hello_for(&cfg); // tokenless: auth = 0
+        s.spawn(move || {
+            // fake coordinator: accept the Hello unconditionally and
+            // ack with auth 0 (what a tokenless build would send)
+            let (mut stream, _) = listener.accept().unwrap();
+            let f = frame::read_frame(&mut stream).unwrap();
+            assert_eq!(f.kind, FrameKind::Hello);
+            let mut ack = Vec::new();
+            net::codec::encode_hello_ack(
+                server_hello.fingerprint,
+                server_hello.auth,
+                &mut ack,
+            );
+            frame::write_frame(&mut stream, FrameKind::HelloAck, &ack)
+                .unwrap();
+            // hold the stream open until the worker decides
+            let _ = frame::read_frame(&mut stream);
+        });
+        let err = net::connect(
+            &addr,
+            &worker_hello,
+            Duration::from_secs(10),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<frame::WireError>(),
+                Some(frame::WireError::AuthRejected)
+            ),
+            "expected typed AuthRejected, got: {err:?}"
         );
     });
 }

@@ -1,0 +1,429 @@
+/* C mirror of rust/benches/snapshot.rs — seeds BENCH_snapshot.json
+ * when no Rust toolchain is available.
+ *
+ * Replicates the coordinator's durability path op-for-op on the same
+ * state shape (dim=16384 params, 256 touched EF clients, ~17 MiB
+ * framed snapshot):
+ *   - encode: serialize the FP8S v1 layout (16-byte header with IEEE
+ *     crc32 of the body; fingerprint/round/dims, raw-LE f32 model +
+ *     residual vectors, sorted per-client EF entries, 6 comm totals)
+ *     into one contiguous buffer, exactly the field order of
+ *     rust/src/coordinator/snapshot.rs.
+ *   - decode: header checks (magic/version/body_len) + full-body
+ *     crc32 + bounds-checked field walk back into structs.
+ *   - write_atomic: temp file in the target dir, fwrite + fsync,
+ *     rename over the generation name, fsync the directory, prune to
+ *     2 generations — the identical syscall sequence.
+ *   - load_resume: directory scan for snap-*.fp8s, read newest, full
+ *     decode + fingerprint gate.
+ *
+ * Build & run (repo root):
+ *   gcc -O3 -o /tmp/snap_mirror tools/bench_snapshot_mirror.c
+ *   /tmp/snap_mirror           # writes BENCH_snapshot.json
+ *
+ * `cargo bench --bench snapshot` overwrites the JSON with native
+ * Rust numbers whenever a Rust toolchain is present.
+ */
+
+#include <dirent.h>
+#include <fcntl.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+
+/* ---- PCG32 (twin of rust/src/fp8/rng.rs) -------------------------- */
+
+typedef struct { uint64_t state, inc; } Pcg32;
+
+static uint64_t splitmix(uint64_t *s) {
+    *s += 0x9E3779B97F4A7C15ULL;
+    uint64_t z = *s;
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+
+static inline uint32_t pcg_u32(Pcg32 *r) {
+    uint64_t old = r->state;
+    r->state = old * 6364136223846793005ULL + r->inc;
+    uint32_t xs = (uint32_t)(((old >> 18) ^ old) >> 27);
+    uint32_t rot = (uint32_t)(old >> 59);
+    return (xs >> rot) | (xs << ((32 - rot) & 31));
+}
+
+static Pcg32 pcg_new(uint64_t seed, uint64_t stream) {
+    uint64_t s = seed ^ ((stream << 17) | (stream >> 47));
+    Pcg32 r;
+    r.state = splitmix(&s);
+    r.inc = splitmix(&s) | 1;
+    pcg_u32(&r);
+    return r;
+}
+
+static inline uint64_t pcg_u64(Pcg32 *r) {
+    return ((uint64_t)pcg_u32(r) << 32) | pcg_u32(r);
+}
+
+static inline double pcg_f64(Pcg32 *r) {
+    return (double)(pcg_u64(r) >> 11) * (1.0 / 9007199254740992.0);
+}
+
+/* ---- IEEE crc32 (twin of rust/src/net/frame.rs) ------------------- */
+
+static uint32_t CRC_TAB[256];
+
+static void crc_init(void) {
+    for (uint32_t i = 0; i < 256; i++) {
+        uint32_t c = i;
+        for (int k = 0; k < 8; k++)
+            c = (c & 1) ? 0xEDB88320u ^ (c >> 1) : c >> 1;
+        CRC_TAB[i] = c;
+    }
+}
+
+static uint32_t crc32_of(const uint8_t *buf, size_t len) {
+    uint32_t c = 0xFFFFFFFFu;
+    for (size_t i = 0; i < len; i++)
+        c = CRC_TAB[(c ^ buf[i]) & 0xFF] ^ (c >> 8);
+    return c ^ 0xFFFFFFFFu;
+}
+
+/* ---- bench harness (twin of rust/src/util/bench.rs) --------------- */
+
+typedef struct {
+    const char *name;
+    long iters;
+    double median_ns, p10_ns, p90_ns;
+} BResult;
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1e9 + ts.tv_nsec;
+}
+
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+#define MAX_SAMPLES 100000
+static double SAMPLES[MAX_SAMPLES];
+
+static BResult bench_run(const char *name, void (*f)(void),
+                         double budget_ms) {
+    double warm_end = now_ns() + budget_ms * 1e6 / 5.0;
+    while (now_ns() < warm_end) f();
+    long n = 0;
+    double end = now_ns() + budget_ms * 1e6;
+    while ((now_ns() < end || n < 5) && n < MAX_SAMPLES) {
+        double t0 = now_ns();
+        f();
+        SAMPLES[n++] = now_ns() - t0;
+    }
+    qsort(SAMPLES, n, sizeof(double), cmp_d);
+    BResult r;
+    r.name = name;
+    r.iters = n;
+    r.median_ns = SAMPLES[(long)((n - 1) * 0.5)];
+    r.p10_ns = SAMPLES[(long)((n - 1) * 0.1)];
+    r.p90_ns = SAMPLES[(long)((n - 1) * 0.9)];
+    printf("%-44s %12.0f %12.0f %12.0f  (ns, median/p10/p90)\n",
+           r.name, r.median_ns, r.p10_ns, r.p90_ns);
+    return r;
+}
+
+/* ---- the state + FP8S v1 codec ------------------------------------ */
+
+#define DIM 16384
+#define SMALL 8
+#define N_EF 256
+#define HEADER 16
+#define KEEP 2
+
+static float W[DIM], ALPHA[SMALL], BETA[SMALL], EF_SERVER[DIM];
+static uint64_t EF_ID[N_EF];
+static float EF_RES[N_EF][DIM];
+static const uint64_t FP = 0x5EEDF00D00000001ULL;
+static const uint64_t NEXT_ROUND = 321;
+static const uint64_t COMM[6] = {1ULL << 30, 1ULL << 31, 1ULL << 20,
+                                 1ULL << 20, 1ULL << 24, 1ULL << 10};
+
+static uint8_t *BUF; /* encode target / decode source */
+static size_t BODY_LEN, TOTAL_LEN;
+static char SNAP_DIR[256];
+
+static void fill_state(void) {
+    Pcg32 r = pcg_new(17, 3);
+    for (int i = 0; i < DIM; i++)
+        W[i] = (float)((pcg_f64(&r) - 0.5) * 2.0);
+    for (int i = 0; i < SMALL; i++)
+        ALPHA[i] = (float)((pcg_f64(&r) - 0.5) * 2.0);
+    for (int i = 0; i < SMALL; i++)
+        BETA[i] = (float)((pcg_f64(&r) - 0.5) * 2.0);
+    for (int i = 0; i < DIM; i++)
+        EF_SERVER[i] = (float)((pcg_f64(&r) - 0.5) * 2.0);
+    for (int c = 0; c < N_EF; c++) {
+        EF_ID[c] = (uint64_t)c * 4099;
+        for (int i = 0; i < DIM; i++)
+            EF_RES[c][i] = (float)((pcg_f64(&r) - 0.5) * 2.0);
+    }
+}
+
+static inline uint8_t *put_u32(uint8_t *p, uint32_t v) {
+    memcpy(p, &v, 4);
+    return p + 4;
+}
+
+static inline uint8_t *put_u64p(uint8_t *p, uint64_t v) {
+    memcpy(p, &v, 8);
+    return p + 8;
+}
+
+static inline uint8_t *put_f32s(uint8_t *p, const float *v, size_t n) {
+    memcpy(p, v, n * 4);
+    return p + n * 4;
+}
+
+static void encode_snapshot(void) {
+    uint8_t *p = BUF + HEADER;
+    p = put_u64p(p, FP);
+    p = put_u64p(p, NEXT_ROUND);
+    p = put_u32(p, DIM);
+    p = put_u32(p, SMALL);
+    p = put_u32(p, SMALL);
+    p = put_f32s(p, W, DIM);
+    p = put_f32s(p, ALPHA, SMALL);
+    p = put_f32s(p, BETA, SMALL);
+    p = put_u32(p, DIM);
+    p = put_f32s(p, EF_SERVER, DIM);
+    p = put_u32(p, N_EF);
+    for (int c = 0; c < N_EF; c++) { /* EF_ID ascending = BTreeMap */
+        p = put_u64p(p, EF_ID[c]);
+        p = put_u32(p, DIM);
+        p = put_f32s(p, EF_RES[c], DIM);
+    }
+    for (int i = 0; i < 6; i++) p = put_u64p(p, COMM[i]);
+    BODY_LEN = (size_t)(p - BUF) - HEADER;
+    TOTAL_LEN = BODY_LEN + HEADER;
+    memcpy(BUF, "FP8S", 4);
+    uint16_t ver = 1, resv = 0;
+    memcpy(BUF + 4, &ver, 2);
+    memcpy(BUF + 6, &resv, 2);
+    uint32_t bl = (uint32_t)BODY_LEN;
+    memcpy(BUF + 8, &bl, 4);
+    uint32_t crc = crc32_of(BUF + HEADER, BODY_LEN);
+    memcpy(BUF + 12, &crc, 4);
+}
+
+static double SINK;
+
+static int decode_snapshot(const uint8_t *buf, size_t len) {
+    if (len < HEADER || memcmp(buf, "FP8S", 4) != 0) return -1;
+    uint16_t ver;
+    memcpy(&ver, buf + 4, 2);
+    if (ver != 1) return -2;
+    uint32_t bl, want;
+    memcpy(&bl, buf + 8, 4);
+    memcpy(&want, buf + 12, 4);
+    if (len - HEADER != bl) return -3;
+    if (crc32_of(buf + HEADER, bl) != want) return -4;
+    const uint8_t *p = buf + HEADER, *endp = buf + len;
+    uint64_t fp, round;
+    memcpy(&fp, p, 8); p += 8;
+    memcpy(&round, p, 8); p += 8;
+    uint32_t dim, ad, bd;
+    memcpy(&dim, p, 4); p += 4;
+    memcpy(&ad, p, 4); p += 4;
+    memcpy(&bd, p, 4); p += 4;
+    double acc = 0;
+    for (int blk = 0; blk < 3; blk++) {
+        uint32_t n = blk == 0 ? dim : blk == 1 ? ad : bd;
+        if ((size_t)(endp - p) < (size_t)n * 4) return -5;
+        float v;
+        memcpy(&v, p, 4); /* touch, then bulk-skip like Vec::from */
+        acc += v;
+        p += (size_t)n * 4;
+    }
+    uint32_t efl;
+    memcpy(&efl, p, 4); p += 4;
+    if ((size_t)(endp - p) < (size_t)efl * 4) return -5;
+    p += (size_t)efl * 4;
+    uint32_t nef;
+    memcpy(&nef, p, 4); p += 4;
+    for (uint32_t c = 0; c < nef; c++) {
+        if ((size_t)(endp - p) < 12) return -5;
+        uint64_t id;
+        uint32_t n;
+        memcpy(&id, p, 8); p += 8;
+        memcpy(&n, p, 4); p += 4;
+        if ((size_t)(endp - p) < (size_t)n * 4) return -5;
+        acc += (double)id;
+        p += (size_t)n * 4;
+    }
+    if ((size_t)(endp - p) != 48) return -6;
+    uint64_t comm;
+    memcpy(&comm, p, 8);
+    SINK += acc + (double)comm + (double)fp + (double)round;
+    return 0;
+}
+
+/* decode from a private copy so encode/decode arms don't alias */
+static uint8_t *DEC_SRC;
+
+static void arm_encode(void) { encode_snapshot(); }
+
+static void arm_decode(void) {
+    if (decode_snapshot(DEC_SRC, TOTAL_LEN) != 0) {
+        fprintf(stderr, "decode failed\n");
+        exit(1);
+    }
+}
+
+static void write_atomic(void) {
+    /* rust's snapshot::write_atomic takes the state, not bytes: the
+     * measured cost includes the encode */
+    encode_snapshot();
+    char tmp[320], fin[320];
+    snprintf(fin, sizeof fin, "%s/snap-%08llu.fp8s", SNAP_DIR,
+             (unsigned long long)NEXT_ROUND);
+    snprintf(tmp, sizeof tmp, "%s/.tmp-snap-%08llu.fp8s", SNAP_DIR,
+             (unsigned long long)NEXT_ROUND);
+    int fd = open(tmp, O_WRONLY | O_CREAT | O_TRUNC, 0644);
+    if (fd < 0) { perror("open tmp"); exit(1); }
+    size_t off = 0;
+    while (off < TOTAL_LEN) {
+        ssize_t k = write(fd, BUF + off, TOTAL_LEN - off);
+        if (k <= 0) { perror("write"); exit(1); }
+        off += (size_t)k;
+    }
+    if (fsync(fd) != 0) { perror("fsync"); exit(1); }
+    close(fd);
+    if (rename(tmp, fin) != 0) { perror("rename"); exit(1); }
+    int dfd = open(SNAP_DIR, O_RDONLY);
+    if (dfd >= 0) { fsync(dfd); close(dfd); }
+    /* prune to KEEP generations (scan; nothing to remove here, but
+     * the directory walk is part of the measured cost) */
+    DIR *d = opendir(SNAP_DIR);
+    if (d) {
+        struct dirent *e;
+        int n = 0;
+        while ((e = readdir(d)) != NULL)
+            if (strncmp(e->d_name, "snap-", 5) == 0) n++;
+        closedir(d);
+        SINK += n;
+    }
+}
+
+static void load_resume(void) {
+    /* newest generation: directory scan, then read + decode + gate */
+    DIR *d = opendir(SNAP_DIR);
+    if (!d) { perror("opendir"); exit(1); }
+    struct dirent *e;
+    char best[280] = "";
+    while ((e = readdir(d)) != NULL)
+        if (strncmp(e->d_name, "snap-", 5) == 0 &&
+            strcmp(e->d_name, best) > 0)
+            snprintf(best, sizeof best, "%s", e->d_name);
+    closedir(d);
+    char path[600];
+    snprintf(path, sizeof path, "%s/%s", SNAP_DIR, best);
+    FILE *f = fopen(path, "rb");
+    if (!f) { perror("fopen"); exit(1); }
+    static uint8_t *rd = NULL;
+    if (!rd) rd = malloc(TOTAL_LEN);
+    size_t n = fread(rd, 1, TOTAL_LEN, f);
+    fclose(f);
+    if (n != TOTAL_LEN || decode_snapshot(rd, n) != 0) {
+        fprintf(stderr, "load failed\n");
+        exit(1);
+    }
+    uint64_t fp;
+    memcpy(&fp, rd + HEADER, 8);
+    if (fp != FP) { fprintf(stderr, "fingerprint\n"); exit(1); }
+}
+
+static void emit_result(FILE *f, const BResult *r, double mib,
+                        int first) {
+    fprintf(f,
+            "%s\n    {\"name\": \"%s\", \"iters\": %ld, "
+            "\"median_ns\": %.1f, \"p10_ns\": %.1f, \"p90_ns\": %.1f, "
+            "\"throughput_per_s\": %.1f}",
+            first ? "" : ",", r->name, r->iters, r->median_ns,
+            r->p10_ns, r->p90_ns, mib / (r->median_ns * 1e-9));
+}
+
+int main(void) {
+    crc_init();
+    fill_state();
+    size_t cap = HEADER + 8 + 8 + 12 +
+                 4ULL * (DIM + SMALL + SMALL) + 4 + 4ULL * DIM + 4 +
+                 (size_t)N_EF * (12 + 4ULL * DIM) + 48;
+    BUF = malloc(cap);
+    DEC_SRC = malloc(cap);
+    encode_snapshot();
+    memcpy(DEC_SRC, BUF, TOTAL_LEN);
+    double mib = (double)TOTAL_LEN / (1 << 20);
+    printf("state: dim=%d ef_clients=%d -> %.1f MiB snapshot\n\n",
+           DIM, N_EF, mib);
+
+    snprintf(SNAP_DIR, sizeof SNAP_DIR,
+             "/tmp/fedfp8_bench_snap_c_%d", (int)getpid());
+    char cmd[640];
+    snprintf(cmd, sizeof cmd, "rm -rf %s && mkdir -p %s", SNAP_DIR,
+             SNAP_DIR);
+    if (system(cmd) != 0) { fprintf(stderr, "mkdir\n"); return 1; }
+
+    BResult enc = bench_run("snapshot/encode", arm_encode, 400);
+    BResult dec = bench_run("snapshot/decode", arm_decode, 400);
+    BResult wrt = bench_run("snapshot/write_atomic", write_atomic, 400);
+    BResult load = bench_run("snapshot/load_resume", load_resume, 400);
+
+    double durability_cost = wrt.median_ns / enc.median_ns;
+    printf("\nthroughput at median: encode %.0f MiB/s  decode %.0f "
+           "MiB/s  write_atomic %.0f MiB/s  load %.0f MiB/s\n",
+           mib / (enc.median_ns * 1e-9), mib / (dec.median_ns * 1e-9),
+           mib / (wrt.median_ns * 1e-9), mib / (load.median_ns * 1e-9));
+    printf("durability overhead (write_atomic / encode): %.1fx\n",
+           durability_cost);
+
+    FILE *f = fopen("BENCH_snapshot.json", "w");
+    if (!f) { perror("BENCH_snapshot.json"); return 1; }
+    fprintf(f, "{\n  \"bench\": \"snapshot\",\n");
+    fprintf(f,
+            "  \"provenance\": \"tools/bench_snapshot_mirror.c (gcc "
+            "-O3 C mirror of rust/benches/snapshot.rs, op-for-op: same "
+            "FP8S v1 field walk, IEEE crc32 over the full body, and "
+            "the identical temp-file + fsync + rename + dir-fsync + "
+            "prune syscall sequence on the same-size state; build "
+            "container lacks a Rust toolchain). Decode here bulk-skips "
+            "vector bytes instead of materializing Vec<f32>s, so the "
+            "decode/load arms understate allocation cost slightly "
+            "while the write_atomic/encode durability ratio transfers. "
+            "Regenerate natively with `cargo bench --bench "
+            "snapshot`.\",\n");
+    fprintf(f,
+            "  \"config\": {\"dim\": \"%d\", \"ef_clients\": \"%d\", "
+            "\"snapshot_mib\": \"%.2f\"},\n",
+            DIM, N_EF, mib);
+    fprintf(f, "  \"results\": [");
+    emit_result(f, &enc, mib, 1);
+    emit_result(f, &dec, mib, 0);
+    emit_result(f, &wrt, mib, 0);
+    emit_result(f, &load, mib, 0);
+    fprintf(f, "\n  ],\n  \"speedups\": {\n");
+    fprintf(f, "    \"encode_over_write_atomic\": %.3f,\n",
+            durability_cost);
+    fprintf(f, "    \"decode_over_load\": %.3f\n",
+            load.median_ns / dec.median_ns);
+    fprintf(f, "  }\n}\n");
+    fclose(f);
+
+    snprintf(cmd, sizeof cmd, "rm -rf %s", SNAP_DIR);
+    if (system(cmd) != 0) return 1;
+    printf("\nwrote BENCH_snapshot.json (SINK %.1f)\n", SINK);
+    return 0;
+}

@@ -62,11 +62,21 @@ Outcome body (kind=4)::
 
 Hello body (kind=1)::
 
-    fingerprint u64, dim u64, model_len u16, model utf-8 bytes
+    fingerprint u64, dim u64, model_len u16, model utf-8 bytes,
+    auth u64   # FNV-1a-64 digest of --net-token (0 = no token);
+               # trailing field is optional on decode, so pre-auth
+               # builds still parse (and then fail the digest check)
 
-HelloAck body (kind=2): ``fingerprint u64``.  Shutdown (kind=5): empty.
-Heartbeat / HeartbeatAck bodies (kinds 6/7): ``nonce u64`` (the ack
-echoes the probe's nonce).
+HelloAck body (kind=2): ``fingerprint u64, auth u64`` (auth echoed
+for mutual verification; likewise optional on decode).  Shutdown
+(kind=5): empty.  Heartbeat / HeartbeatAck bodies (kinds 6/7):
+``nonce u64`` (the ack echoes the probe's nonce).
+
+Snapshot file format v1 (``rust/src/coordinator/snapshot.rs``) is
+mirrored at the bottom of this file and pinned by
+``rust/tests/golden_snapshot.rs`` against
+``rust/tests/fixtures/snapshot_v1.bin`` (plus the must-fail
+``snapshot_v0.bin`` version-skew fixture).
 
 Accounting identities (mirrored by ``coordinator/comm.rs``)::
 
@@ -372,6 +382,81 @@ def fp8_edge_fixture():
     return {"m": M_BITS, "e": 4, "version": 1, "cases": cases}
 
 
+# ---- snapshot format mirror (twin of coordinator/snapshot.rs) --------
+#
+# Durable round-state snapshot, all integers little-endian::
+#
+#     header (16 bytes):
+#       magic      4  = b"FP8S"
+#       version    u16 = 1
+#       reserved   u16 = 0
+#       body_len   u32
+#       crc32      u32 (IEEE CRC-32 of body)
+#     body:
+#       fingerprint u64, next_round u64,
+#       dim u32, alpha_dim u32, beta_dim u32,
+#       w [f32 x dim], alpha [f32 x alpha_dim], beta [f32 x beta_dim],
+#       ef_server_len u32, ef_server [f32 x len],
+#       ef_clients_count u32, then per entry (ascending client id):
+#         client u64, len u32, residual [f32 x len],
+#       comm 6 x u64 (up_bytes, down_bytes, up_msgs, down_msgs,
+#                     partial_bytes, partial_msgs)
+
+SNAP_MAGIC = b"FP8S"
+SNAP_VERSION = 1
+SNAP_HEADER_BYTES = 16
+
+
+def snapshot_frame(body, version=SNAP_VERSION):
+    hdr = SNAP_MAGIC + struct.pack(
+        "<HHII", version, 0, len(body), zlib.crc32(body) & 0xFFFFFFFF
+    )
+    assert len(hdr) == SNAP_HEADER_BYTES
+    return hdr + body
+
+
+def snapshot_body(fingerprint, next_round, w, alpha, beta, ef_server,
+                  ef_clients, comm):
+    body = struct.pack(
+        "<QQIII", fingerprint, next_round, len(w), len(alpha), len(beta)
+    )
+    body += f32s(w) + f32s(alpha) + f32s(beta)
+    body += struct.pack("<I", len(ef_server)) + f32s(ef_server)
+    body += struct.pack("<I", len(ef_clients))
+    for client in sorted(ef_clients):  # BTreeMap order: ascending id
+        res = ef_clients[client]
+        body += struct.pack("<QI", client, len(res)) + f32s(res)
+    body += struct.pack("<QQQQQQ", *comm)
+    return body
+
+
+# Mirrors canon() in rust/tests/golden_snapshot.rs: every f32 is an
+# exactly-representable short binary fraction.
+CANON_SNAP = dict(
+    fingerprint=0xDEADBEEF01234567,
+    next_round=42,
+    w=[1.0, -2.0, 0.5],
+    alpha=[3.0],
+    beta=[0.125, 8.0],
+    ef_server=[0.0625, -0.0625, 0.0],
+    ef_clients={3: [0.5, -0.25], 11: [1.5, 2.5]},
+    # (up_bytes, down_bytes, up_msgs, down_msgs,
+    #  partial_bytes, partial_msgs)
+    comm=(111, 222, 3, 4, 55, 6),
+)
+
+
+def golden_snapshot():
+    return snapshot_frame(snapshot_body(**CANON_SNAP))
+
+
+def golden_snapshot_v0():
+    """Version-skew fixture: a v0 header over the same (valid,
+    correctly crc'd) body — a v1 reader must reject it with the typed
+    VersionMismatch, never fall through to the body decoder."""
+    return snapshot_frame(snapshot_body(**CANON_SNAP), version=0)
+
+
 # ---- canonical golden messages (mirrored in rust/tests/golden_wire.rs)
 
 CANON_DOWN = (range(16), [1.0, -2.5, 0.375], [1.0, 0.5], [2.0])
@@ -457,6 +542,19 @@ def main():
     with open(out, "wb") as f:
         f.write(job1 + outcome1)
     print(f"wrote {out}: {len(job1) + len(outcome1)} B (frozen v1)")
+
+    snap = golden_snapshot()
+    out = os.path.join(fixtures, "snapshot_v1.bin")
+    with open(out, "wb") as f:
+        f.write(snap)
+    print(f"wrote {out}: {len(snap)} B")
+    print("snapshot :", snap.hex())
+
+    snap0 = golden_snapshot_v0()
+    out = os.path.join(fixtures, "snapshot_v0.bin")
+    with open(out, "wb") as f:
+        f.write(snap0)
+    print(f"wrote {out}: {len(snap0)} B (must-fail version skew)")
 
     edges = fp8_edge_fixture()
     out = os.path.join(fixtures, "fp8_edges_v1.json")
