@@ -1,0 +1,155 @@
+//! Connections-vs-threads scaling bench, seeding
+//! `BENCH_net_scale.json` — the curve proving the transport's
+//! structural wall moved.
+//!
+//! Run: `cargo bench --bench net_scale`. For each fleet size N it
+//! stands up N loopback connections pre-loaded with a burst of
+//! Outcome-sized frames, then drains every frame two ways:
+//!
+//! * **poll** — the event-driven shape: ONE thread, one
+//!   [`Poller`], N non-blocking sockets each drained through its own
+//!   resumable `FrameReader` (exactly the server's poll-loop data
+//!   path).
+//! * **threads** — the pre-refactor shape: N spawned threads, each
+//!   blocking-reading its own socket (the server's old
+//!   thread-per-connection reader architecture).
+//!
+//! Both arms pay identical setup (socket creation + frame priming
+//! inside the timed closure), so the delta isolates what N reader
+//! threads cost over one readiness loop: spawn/teardown, stacks, and
+//! scheduler churn — the terms that scaled with fleet size. CI smoke:
+//! `cargo bench --bench net_scale -- --quick` shrinks the matrix and
+//! skips the JSON write.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+use fedfp8::net::frame::{self, FrameKind, FrameReader};
+use fedfp8::net::poll::{Poller, BACKEND};
+use fedfp8::util::bench::{bench, header, BenchJson};
+
+const BODY_BYTES: usize = 64;
+
+/// N primed loopback connections: every read end already holds
+/// `frames` complete Outcome-sized frames in its socket buffer.
+fn primed_pairs(n: usize, frames: usize) -> Vec<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let body = [7u8; BODY_BYTES];
+    (0..n)
+        .map(|_| {
+            let mut w = TcpStream::connect(addr).unwrap();
+            let (r, _) = listener.accept().unwrap();
+            w.set_nodelay(true).unwrap();
+            for _ in 0..frames {
+                frame::write_frame(&mut w, FrameKind::Outcome, &body)
+                    .unwrap();
+            }
+            w.flush().unwrap();
+            (w, r)
+        })
+        .collect()
+}
+
+/// One thread, one poller, N FrameReaders — the poll-loop data path.
+fn drain_poll(n: usize, frames: usize) {
+    let pairs = primed_pairs(n, frames);
+    let mut poller = Poller::new().unwrap();
+    let mut conns: Vec<(TcpStream, FrameReader, usize)> = Vec::new();
+    for (i, (_w, r)) in pairs.iter().enumerate() {
+        r.set_nonblocking(true).unwrap();
+        poller.register_stream(r, i as u64).unwrap();
+        conns.push((r.try_clone().unwrap(), FrameReader::new(), 0));
+    }
+    let mut remaining = n * frames;
+    let mut ready = Vec::new();
+    while remaining > 0 {
+        poller
+            .wait(std::time::Duration::from_millis(10), &mut ready)
+            .unwrap();
+        for &t in &ready {
+            let (stream, fr, got) = &mut conns[t as usize];
+            while *got < frames {
+                match fr.poll(stream) {
+                    Ok(Some(f)) => {
+                        assert_eq!(f.body.len(), BODY_BYTES);
+                        *got += 1;
+                        remaining -= 1;
+                    }
+                    Ok(None) => break,
+                    Err(e) => panic!("poll drain failed: {e}"),
+                }
+            }
+        }
+    }
+}
+
+/// N spawned threads, each blocking on its own socket — the
+/// thread-per-connection data path this PR retires.
+fn drain_threads(n: usize, frames: usize) {
+    let pairs = primed_pairs(n, frames);
+    thread::scope(|s| {
+        for (_w, r) in pairs.iter() {
+            let mut r = r.try_clone().unwrap();
+            s.spawn(move || {
+                for _ in 0..frames {
+                    let f = frame::read_frame(&mut r)
+                        .expect("thread drain failed");
+                    assert_eq!(f.body.len(), BODY_BYTES);
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (fleet, frames, budget_ms): (&[usize], usize, u64) = if quick {
+        (&[4, 16], 16, 60)
+    } else {
+        (&[8, 32, 128], 64, 400)
+    };
+    println!(
+        "readiness backend: {BACKEND}; {frames} frames x {BODY_BYTES} B \
+         bodies per connection\n"
+    );
+    header();
+    let mut j = BenchJson::new(
+        "net_scale",
+        "cargo bench --bench net_scale (rust/benches/net_scale.rs)",
+    );
+    j.config("backend", BACKEND);
+    j.config("frames_per_conn", frames);
+    j.config("body_bytes", BODY_BYTES);
+    j.config("fleet_sizes", format!("{fleet:?}"));
+    for &n in fleet {
+        let items = (n * frames) as f64;
+        let poll = bench(
+            &format!("net_scale/poll_1thread_n{n}"),
+            budget_ms,
+            || drain_poll(n, frames),
+        );
+        let thr = bench(
+            &format!("net_scale/threads_n{n}"),
+            budget_ms,
+            || drain_threads(n, frames),
+        );
+        j.push(&poll, Some(items));
+        j.push(&thr, Some(items));
+        // >1 = the single poll loop beats N reader threads
+        j.speedup(
+            &format!("poll_over_threads_n{n}"),
+            thr.median_ns / poll.median_ns,
+        );
+    }
+    if quick {
+        println!("\n--quick: JSON trajectory write skipped");
+        return;
+    }
+    let path = std::path::Path::new("../BENCH_net_scale.json");
+    match j.write(path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -12,6 +12,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::fp8::simd::KernelKind;
 use crate::fp8::Rounding;
+use crate::net::Inflight;
 use crate::util::cli::Args;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -609,14 +610,23 @@ pub struct NetCfg {
     /// idle deadline after which a silent peer is declared dead —
     /// the "never hang" bound.
     pub timeout_ms: u64,
-    /// `--net-inflight N`: sliding window of concurrently in-flight
-    /// jobs per worker connection (server side), and the worker's
-    /// executor-pool width (worker side). 1 = v1-style lockstep.
-    pub inflight: usize,
+    /// `--net-inflight N|adaptive`: sliding window of concurrently
+    /// in-flight jobs per worker connection (server side), and the
+    /// worker's executor-pool width hint (worker side). 1 = v1-style
+    /// lockstep; `adaptive` grows each connection's window from its
+    /// observed outcome latency.
+    pub inflight: Inflight,
     /// `--heartbeat-ms T`: probe a silent connection after T ms of
     /// quiet, on both sides; 0 disables heartbeats (a silent
     /// partition is then only detected while jobs are pending).
+    /// Defaults to `min(1000, timeout/4)` so the probe-before-deadline
+    /// invariant holds at any `--net-timeout-ms`.
     pub heartbeat_ms: u64,
+    /// `--net-hedge-ms T` (server only): duplicate a job onto a
+    /// second worker after it has gone unanswered this long — tail
+    /// latency insurance for stragglers; first answer wins, results
+    /// stay bit-identical. 0 disables hedging.
+    pub hedge_ms: u64,
     /// `--net-token SECRET`: shared handshake token. Both sides
     /// carry an FNV-1a digest of it in Hello/HelloAck and reject a
     /// peer whose digest differs (typed `WireError::AuthRejected`).
@@ -641,6 +651,7 @@ impl NetCfg {
                 "net-timeout-ms",
                 "net-inflight",
                 "heartbeat-ms",
+                "net-hedge-ms",
                 "net-token",
             ] {
                 ensure!(
@@ -653,9 +664,19 @@ impl NetCfg {
         };
         let timeout_ms = args.parse_or("net-timeout-ms", 30_000u64)?;
         ensure!(timeout_ms > 0, "--net-timeout-ms must be positive");
-        let inflight = args.parse_or("net-inflight", 4usize)?;
-        ensure!(inflight >= 1, "--net-inflight must be at least 1");
-        let heartbeat_ms = args.parse_or("heartbeat-ms", 1_000u64)?;
+        let inflight =
+            args.parse_or("net-inflight", Inflight::Fixed(4))?;
+        // derived default: the probe interval always fits inside the
+        // idle deadline, however small --net-timeout-ms is (the old
+        // fixed 1000 made any timeout <= 1000 a startup error)
+        let heartbeat_ms = args
+            .parse_or("heartbeat-ms", (timeout_ms / 4).min(1_000))?;
+        let hedge_ms = args.parse_or("net-hedge-ms", 0u64)?;
+        ensure!(
+            hedge_ms == 0 || hedge_ms < timeout_ms,
+            "--net-hedge-ms ({hedge_ms}) must be less than \
+             --net-timeout-ms ({timeout_ms}), or 0 to disable hedging"
+        );
         let token = args.get("net-token").map(String::from);
         if let Some(t) = &token {
             ensure!(
@@ -690,6 +711,7 @@ impl NetCfg {
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
+                    hedge_ms,
                     token,
                 }
             }
@@ -703,6 +725,11 @@ impl NetCfg {
                     args.get("workers").is_none(),
                     "--workers only applies to --role server"
                 );
+                ensure!(
+                    args.get("net-hedge-ms").is_none(),
+                    "--net-hedge-ms only applies to --role server \
+                     (the server decides when to hedge)"
+                );
                 let addr = args
                     .required("connect", "--role worker")
                     .context("e.g. --connect 127.0.0.1:7878")?;
@@ -713,6 +740,7 @@ impl NetCfg {
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
+                    hedge_ms: 0,
                     token,
                 }
             }
@@ -901,8 +929,10 @@ mod tests {
         assert_eq!(n.workers, 4);
         assert_eq!(n.timeout_ms, 30_000);
         // v2 defaults: a 4-deep in-flight window, 1 s heartbeats
-        assert_eq!(n.inflight, 4);
+        // (derived: min(1000, 30000/4)), hedging off
+        assert_eq!(n.inflight, Inflight::Fixed(4));
         assert_eq!(n.heartbeat_ms, 1_000);
+        assert_eq!(n.hedge_ms, 0);
         let n = NetCfg::from_args(&args(
             "run --role worker --connect 127.0.0.1:7878 \
              --net-timeout-ms 5000 --net-inflight 8 --heartbeat-ms 0",
@@ -911,7 +941,7 @@ mod tests {
         .unwrap();
         assert_eq!(n.role, NetRole::Worker);
         assert_eq!(n.timeout_ms, 5000);
-        assert_eq!(n.inflight, 8);
+        assert_eq!(n.inflight, Inflight::Fixed(8));
         assert_eq!(n.heartbeat_ms, 0);
         // the window must be positive, and v2 flags without --role
         // are as invalid as the v1 ones
@@ -921,12 +951,43 @@ mod tests {
         .is_err());
         assert!(NetCfg::from_args(&args("run --net-inflight 4")).is_err());
         assert!(NetCfg::from_args(&args("run --heartbeat-ms 9")).is_err());
-        // a probe interval at or past the idle deadline would declare
-        // healthy peers dead before the first probe
-        assert!(NetCfg::from_args(&args(
-            "run --role server --listen a:1 --net-timeout-ms 800"
+        // the adaptive window spelling parses on either role
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-inflight adaptive",
         ))
-        .is_err()); // default heartbeat 1000 >= 800
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.inflight, Inflight::Adaptive);
+        // small timeouts now WORK: the default heartbeat is derived
+        // as min(1000, timeout/4), so --net-timeout-ms 800 probes at
+        // 200 ms instead of failing the probe-before-deadline guard
+        // at startup (the old fixed 1000 ms default)
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-timeout-ms 800",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.heartbeat_ms, 200);
+        // boundary: exactly 1000 derives 250; 4001+ saturates at 1000
+        let n = NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-timeout-ms 1000",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.heartbeat_ms, 250);
+        let n = NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-timeout-ms 8000",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.heartbeat_ms, 1_000);
+        // an EXPLICIT probe interval at or past the idle deadline is
+        // still the same startup error it always was
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-timeout-ms 800 \
+             --heartbeat-ms 1000"
+        ))
+        .is_err());
         assert!(NetCfg::from_args(&args(
             "run --role worker --connect a:1 --heartbeat-ms 30000"
         ))
@@ -936,6 +997,23 @@ mod tests {
              --heartbeat-ms 0"
         ))
         .is_ok()); // probing off: any deadline is fine
+        // hedging: server-only, must undercut the deadline
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-hedge-ms 250",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.hedge_ms, 250);
+        assert!(NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-timeout-ms 800 \
+             --net-hedge-ms 800"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-hedge-ms 100"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args("run --net-hedge-ms 5")).is_err());
         // missing / inconsistent combinations are typed errors
         assert!(NetCfg::from_args(&args("run --role server")).is_err());
         assert!(NetCfg::from_args(&args("run --role worker")).is_err());

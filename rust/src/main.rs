@@ -14,8 +14,12 @@
 //!            # run (config fingerprint enforced)
 //! fedfp8 run --preset ... --role server --listen 127.0.0.1:7878 \
 //!            --workers 2        # drive remote workers over TCP
-//!            [--net-inflight 4]   # jobs in flight per connection
-//!            [--heartbeat-ms 1000] # liveness probe interval (0=off)
+//!            [--net-inflight 4|adaptive] # in-flight window per
+//!            # connection (adaptive: grown from observed latency)
+//!            [--heartbeat-ms T]   # liveness probe interval (0=off;
+//!            # default min(1000, timeout/4))
+//!            [--net-hedge-ms T]   # duplicate a straggler's job onto
+//!            # a second worker after T ms unanswered (0=off)
 //!            [--net-token SECRET] # handshake auth (both sides must
 //!            # carry the same secret; REQUIRED beyond localhost)
 //! fedfp8 run --preset ... --role worker --connect 127.0.0.1:7878
@@ -186,7 +190,7 @@ fn run_net_server(
     println!(
         "platform={}  preset={preset}  rounds={}  K={}  P={}  \
          role=server listen={}  workers={}  inflight={}  \
-         heartbeat={}ms  fingerprint={:#018x}",
+         heartbeat={}ms  hedge={}ms  fingerprint={:#018x}",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
@@ -195,6 +199,7 @@ fn run_net_server(
         net.workers,
         net.inflight,
         net.heartbeat_ms,
+        net.hedge_ms,
         hello.fingerprint,
     );
     let transport = net::accept_workers(
@@ -205,6 +210,7 @@ fn run_net_server(
             io_timeout: Duration::from_millis(net.timeout_ms),
             heartbeat: Duration::from_millis(net.heartbeat_ms),
             inflight: net.inflight,
+            hedge: Duration::from_millis(net.hedge_ms),
         },
     )?;
     println!("[server] {} workers handshaken; starting", net.workers);
@@ -256,7 +262,7 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
         } else {
             Duration::from_millis(net.timeout_ms)
         },
-        exec_threads: net.inflight,
+        exec_threads: net.inflight.exec_threads(),
     };
     // sized for a whole round's share of re-dispatchable outcomes
     let cache = net::OutcomeCache::new(256);

@@ -263,13 +263,12 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !c
 }
 
-/// Write one frame; returns the total bytes put on the wire
-/// (envelope + body) so transports can account exactly.
-pub fn write_frame(
-    w: &mut impl Write,
+/// Build the 16-byte envelope for `body`, rejecting oversize bodies —
+/// the single construction point both write paths share.
+fn encode_header(
     kind: FrameKind,
     body: &[u8],
-) -> Result<u64, WireError> {
+) -> Result<[u8; FRAME_HEADER_BYTES as usize], WireError> {
     // symmetric with the read side: never put an un-receivable (or,
     // past u32, length-wrapping) frame on the wire
     if body.len() as u64 > MAX_BODY_BYTES as u64 {
@@ -284,10 +283,81 @@ pub fn write_frame(
     hdr[7] = 0;
     hdr[8..12].copy_from_slice(&(body.len() as u32).to_le_bytes());
     hdr[12..16].copy_from_slice(&crc32(body).to_le_bytes());
+    Ok(hdr)
+}
+
+/// Write one frame; returns the total bytes put on the wire
+/// (envelope + body) so transports can account exactly.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    body: &[u8],
+) -> Result<u64, WireError> {
+    let hdr = encode_header(kind, body)?;
     w.write_all(&hdr).map_err(map_io)?;
     w.write_all(body).map_err(map_io)?;
     w.flush().map_err(map_io)?;
     Ok(FRAME_HEADER_BYTES + body.len() as u64)
+}
+
+/// [`write_frame`] for **non-blocking** writers: `WouldBlock` is
+/// retried with a short backoff until `deadline`, partial writes
+/// resume where they left off.
+///
+/// On deadline the typed [`WireError::Timeout`] surfaces with the
+/// frame possibly half-written — the caller MUST treat that as fatal
+/// for the connection (a mid-frame abandon desynchronizes the
+/// stream), exactly like any other write error.
+pub fn write_frame_nb(
+    w: &mut impl Write,
+    kind: FrameKind,
+    body: &[u8],
+    deadline: Instant,
+) -> Result<u64, WireError> {
+    let hdr = encode_header(kind, body)?;
+    write_all_nb(w, &hdr, deadline)?;
+    write_all_nb(w, body, deadline)?;
+    match w.flush() {
+        Ok(()) => {}
+        // a TCP stream's flush is a no-op; tolerate WouldBlock from
+        // exotic writers rather than failing a fully-written frame
+        Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+        Err(e) => return Err(map_io(e)),
+    }
+    Ok(FRAME_HEADER_BYTES + body.len() as u64)
+}
+
+/// Push `buf` through a non-blocking writer, advancing over partial
+/// writes, until done or `deadline`.
+fn write_all_nb(
+    w: &mut impl Write,
+    buf: &[u8],
+    deadline: Instant,
+) -> Result<(), WireError> {
+    let mut sent = 0usize;
+    while sent < buf.len() {
+        match w.write(&buf[sent..]) {
+            Ok(0) => {
+                return Err(WireError::Io(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "peer socket accepted zero bytes",
+                )));
+            }
+            Ok(n) => sent += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Timeout);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(map_io(e)),
+        }
+    }
+    Ok(())
 }
 
 /// Fill `buf` completely; `at_boundary` selects the EOF flavour
@@ -537,6 +607,16 @@ pub struct Liveness {
 }
 
 impl Liveness {
+    /// Default probe interval for a given idle/death `deadline`:
+    /// `min(1 s, deadline / 4)` — a peer is always probed (and has
+    /// time to ack) well before the deadline can fire, for *any*
+    /// deadline, instead of the old fixed 1 s default that made every
+    /// deadline ≤ 1 s an invariant violation at startup. A zero
+    /// deadline yields a zero interval (probing disabled).
+    pub fn default_heartbeat(deadline: Duration) -> Duration {
+        (deadline / 4).min(Duration::from_millis(1000))
+    }
+
     pub fn new(heartbeat: Duration, deadline: Duration) -> Liveness {
         Liveness {
             heartbeat,
@@ -832,6 +912,82 @@ mod tests {
         assert_eq!(l.tick(), Duration::from_millis(250));
         std::thread::sleep(Duration::from_millis(20));
         assert_eq!(l.on_idle(true), TickAction::Idle);
+    }
+
+    /// A writer that WouldBlocks between every accepted byte — the
+    /// worst-case non-blocking socket.
+    struct Choppy {
+        out: Vec<u8>,
+        ready: bool,
+    }
+
+    impl Write for Choppy {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.ready {
+                self.ready = false;
+                self.out.push(buf[0]);
+                Ok(1)
+            } else {
+                self.ready = true;
+                Err(ErrorKind::WouldBlock.into())
+            }
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_frame_nb_resumes_across_would_block() {
+        let mut blocking = Vec::new();
+        let n = write_frame(&mut blocking, FrameKind::Job, b"nb body")
+            .unwrap();
+        let mut choppy = Choppy { out: Vec::new(), ready: false };
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let m =
+            write_frame_nb(&mut choppy, FrameKind::Job, b"nb body", deadline)
+                .unwrap();
+        assert_eq!(n, m);
+        // byte-identical to the blocking writer: partial writes never
+        // corrupt or reorder the envelope
+        assert_eq!(choppy.out, blocking);
+    }
+
+    /// A writer that never accepts anything.
+    struct Wedged;
+
+    impl Write for Wedged {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(ErrorKind::WouldBlock.into())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_frame_nb_times_out_on_a_wedged_writer() {
+        let deadline = Instant::now() + Duration::from_millis(20);
+        let err =
+            write_frame_nb(&mut Wedged, FrameKind::Job, b"x", deadline)
+                .unwrap_err();
+        assert!(matches!(err, WireError::Timeout), "{err}");
+    }
+
+    #[test]
+    fn default_heartbeat_derivation() {
+        // quarter of the deadline, capped at 1 s, zero stays zero
+        let hb = Liveness::default_heartbeat;
+        assert_eq!(hb(Duration::from_millis(800)), Duration::from_millis(200));
+        assert_eq!(hb(Duration::from_millis(1000)), Duration::from_millis(250));
+        assert_eq!(hb(Duration::from_secs(30)), Duration::from_millis(1000));
+        assert_eq!(hb(Duration::ZERO), Duration::ZERO);
+        // the probe-before-deadline invariant holds for every
+        // non-zero deadline
+        for ms in [1u64, 2, 3, 999, 1000, 1001, 4000, 120_000] {
+            let d = Duration::from_millis(ms);
+            assert!(hb(d) < d, "derived heartbeat not below deadline {ms}ms");
+        }
     }
 
     #[test]

@@ -12,12 +12,16 @@
 //!   [`codec::WireOutcome`] (v2: tagged with the round-scoped
 //!   multiplexing `job_id`), the [`codec::Hello`] handshake and the
 //!   heartbeat nonces.
+//! * [`poll`] — [`poll::Poller`], the readiness core (epoll shim on
+//!   Linux, portable scan fallback elsewhere) that lets one server
+//!   thread watch every worker connection plus the listener.
 //! * [`socket`] — [`socket::SocketTransport`], the TCP-backed
 //!   `Transport` the server's round loop drives exactly like the
-//!   in-process one: a sliding window of in-flight jobs per worker
-//!   connection, out-of-order completion demultiplexed by job id,
-//!   heartbeat liveness, and re-dispatch of un-acked jobs to
-//!   surviving workers on failure.
+//!   in-process one: a single event-driven poll loop owning every
+//!   connection, a sliding (optionally adaptive) window of in-flight
+//!   jobs per worker, out-of-order completion demultiplexed by job
+//!   id, heartbeat liveness, hedged re-dispatch of stragglers, and
+//!   failover of un-acked jobs to surviving workers.
 //! * [`worker`] — the worker-side serve loop wrapping the existing
 //!   local executor: a frame reader feeding an executor pool, plus
 //!   the [`worker::OutcomeCache`] that makes reconnects answer
@@ -38,12 +42,16 @@
 
 pub mod codec;
 pub mod frame;
+pub mod poll;
 pub mod socket;
 pub mod worker;
 
 pub use codec::{digest_eq, token_digest, Hello, WireJob, WireOutcome};
 pub use frame::{FrameReader, WireError, WIRE_VERSION};
-pub use socket::{accept_workers, ConnDied, SocketCfg, SocketTransport};
+pub use poll::Poller;
+pub use socket::{
+    accept_workers, ConnDied, Inflight, SocketCfg, SocketTransport,
+};
 pub use worker::{
     connect, serve_conn, OutcomeCache, ServeOpts, WorkerCtx,
 };

@@ -1,34 +1,52 @@
 //! `SocketTransport` — the [`Transport`] implementation that runs a
-//! round's clients on remote worker processes over TCP, v2:
-//! multiplexed in-flight jobs, heartbeat liveness, and straggler
-//! re-dispatch.
+//! round's clients on remote worker processes over TCP, v3: one
+//! event-driven poll loop per server, adaptive in-flight windows, and
+//! hedged re-dispatch.
+//!
+//! ## Event-driven core
+//!
+//! The server owns **one** transport thread regardless of how many
+//! workers connect. A [`Poller`] (epoll on Linux, a portable scan
+//! fallback elsewhere) watches every worker socket plus the listener;
+//! the poll loop drives a resumable [`FrameReader`] per connection
+//! (non-blocking reads — a short read parks the partial frame, never
+//! desynchronizes it), runs the pure [`Liveness`] state machine off
+//! `bytes_consumed()`, and demultiplexes Outcome frames to the
+//! dispatchers parked in [`SocketTransport::run_client`]. Replacement
+//! workers handshake *under the same loop*: an accepted socket sits
+//! in a handshake table until its Hello arrives (or its deadline
+//! passes), so one half-open connector can never stall another
+//! worker's rejoin — nor anything else.
 //!
 //! ## Sliding window & demultiplexing
 //!
-//! One connection per worker, up to [`SocketCfg::inflight`] jobs in
-//! flight on each. `run_cohort`'s threads call
-//! [`SocketTransport::run_client`] concurrently; each call acquires a
-//! *slot* on the least-loaded live connection, registers the job under
-//! its `(round, client, job_id)` key, writes the Job frame, and parks
-//! on a private channel. A per-connection **reader thread** decodes
-//! Outcome frames — in whatever order the worker finishes them — and
-//! routes each to its waiting dispatcher. Out-of-order completion is
-//! invisible to the round loop: `run_cohort`'s reorder buffer still
-//! feeds the streaming aggregation in cohort order, so results stay
-//! bit-identical to the in-process transport.
+//! One connection per worker, up to its *window* of jobs in flight.
+//! `run_cohort`'s threads call [`SocketTransport::run_client`]
+//! concurrently; each call acquires a *slot* on the least-loaded live
+//! connection, registers the job under its `(round, client, job_id)`
+//! key, writes the Job frame, and parks on a private channel.
+//! Out-of-order completion is invisible to the round loop:
+//! `run_cohort`'s reorder buffer still feeds the streaming
+//! aggregation in cohort order, so results stay bit-identical to the
+//! in-process transport.
+//!
+//! With `--net-inflight adaptive` each connection's window starts at
+//! 1 and grows additively as outcomes come back (one extra slot per
+//! window-full of completions, capped), while a ≥4x latency spike
+//! against the worker's own EWMA halves it — slow workers get fewer
+//! jobs parked behind them, fast ones keep their pipelines full.
 //!
 //! ## Heartbeats
 //!
-//! Reader threads wake on a short tick. When a connection has been
-//! silent past [`SocketCfg::heartbeat`] the reader probes the worker
-//! (Heartbeat frame; workers answer immediately even while computing,
-//! because their reader services the socket during execution). If
-//! *nothing* arrives for [`SocketCfg::io_timeout`] the connection is
-//! declared dead with the typed
-//! [`WireError::HeartbeatLost`] — a silent partition can stall a
-//! round for at most the idle deadline, never hang it.
+//! When a connection has been silent past [`SocketCfg::heartbeat`]
+//! the poll loop probes the worker (Heartbeat frame; workers answer
+//! immediately even while computing, because their reader services
+//! the socket during execution). If *nothing* arrives for
+//! [`SocketCfg::io_timeout`] the connection is declared dead with the
+//! typed [`WireError::HeartbeatLost`] — a silent partition can stall
+//! a round for at most the idle deadline, never hang it.
 //!
-//! ## Straggler re-dispatch
+//! ## Straggler re-dispatch & hedging
 //!
 //! When a connection dies (read/write error, frame corruption, or
 //! heartbeat loss), every job in flight on it is failed over: the
@@ -39,14 +57,20 @@
 //! remain — or the re-dispatch budget is exhausted — does the error
 //! surface, naming the client, round and worker.
 //!
-//! A background acceptor keeps the listener open for *replacement*
-//! workers: a relaunched (or reconnecting) worker handshakes exactly
-//! like an initial one and joins the pool mid-run.
+//! With [`SocketCfg::hedge`] non-zero, a dispatcher that has waited
+//! that long *without* a failure duplicates the job onto a second
+//! worker **before** any deadline: first answer wins, the loser's
+//! slot is released immediately, and its eventual answer is dropped
+//! as a duplicate. Both answers are bit-identical by the determinism
+//! contract, so hedging can change latency but never results.
 //!
-//! Duplicate Outcome frames (network-level duplication, or a slow
-//! worker answering after its job was re-dispatched) are ignored and
-//! counted — delivery is effectively at-least-once, and every copy is
-//! bit-identical by the determinism contract.
+//! Duplicate Outcome frames (network-level duplication, a hedge
+//! loser, or a slow worker answering after its job was re-dispatched)
+//! are ignored and counted — delivery is effectively at-least-once.
+//! Their bytes land in a separate counter, never in `bytes_received`:
+//! the reported uplink total counts each client's outcome exactly
+//! once, keeping the paper's headline communication metric identical
+//! to the fault-free run.
 //!
 //! [`WireError::HeartbeatLost`]: super::frame::WireError::HeartbeatLost
 
@@ -57,7 +81,7 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -68,8 +92,78 @@ use crate::coordinator::transport::{
 
 use super::codec::{self, Hello, WireOutcome};
 use super::frame::{
-    self, FrameKind, FrameReader, Liveness, TickAction, WireError,
+    self, Frame, FrameKind, FrameReader, Liveness, TickAction, WireError,
 };
+use super::poll::Poller;
+
+/// Adaptive windows stop growing here — deep enough to hide wire
+/// latency on any realistic link, shallow enough that one slow worker
+/// can't strand a whole cohort behind it.
+const ADAPTIVE_MAX_WINDOW: usize = 32;
+
+/// Worker-side executor-thread hint when the server window is
+/// adaptive (the worker can't know how far the window will grow).
+const ADAPTIVE_EXEC_THREADS: usize = 4;
+
+/// Per-connection in-flight window policy (`--net-inflight`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inflight {
+    /// Fixed window: at most N jobs in flight per connection.
+    Fixed(usize),
+    /// Start each connection at 1 and grow its window from the
+    /// worker's observed outcome latency (additive growth, halving on
+    /// a ≥4x latency spike, capped at [`ADAPTIVE_MAX_WINDOW`]).
+    Adaptive,
+}
+
+impl Inflight {
+    /// Window a fresh connection starts with.
+    pub fn initial_window(self) -> usize {
+        match self {
+            Inflight::Fixed(n) => n,
+            Inflight::Adaptive => 1,
+        }
+    }
+
+    /// How many executor threads a worker should run to keep up with
+    /// this window policy.
+    pub fn exec_threads(self) -> usize {
+        match self {
+            Inflight::Fixed(n) => n.max(1),
+            Inflight::Adaptive => ADAPTIVE_EXEC_THREADS,
+        }
+    }
+}
+
+impl fmt::Display for Inflight {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Inflight::Fixed(n) => write!(f, "{n}"),
+            Inflight::Adaptive => write!(f, "adaptive"),
+        }
+    }
+}
+
+impl std::str::FromStr for Inflight {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Inflight, String> {
+        match s {
+            "adaptive" | "auto" => Ok(Inflight::Adaptive),
+            _ => {
+                let n: usize = s.parse().map_err(|_| {
+                    format!("expected a window size or 'adaptive', got '{s}'")
+                })?;
+                if n == 0 {
+                    return Err(
+                        "in-flight window must be >= 1 (or 'adaptive')"
+                            .to_string(),
+                    );
+                }
+                Ok(Inflight::Fixed(n))
+            }
+        }
+    }
+}
 
 /// Server-side transport tuning.
 #[derive(Clone, Copy, Debug)]
@@ -81,17 +175,27 @@ pub struct SocketCfg {
     /// `Duration::ZERO` disables probing (silence then only kills a
     /// connection while jobs are pending on it).
     pub heartbeat: Duration,
-    /// Sliding window: max in-flight jobs per worker connection.
-    pub inflight: usize,
+    /// Sliding window policy: max in-flight jobs per worker
+    /// connection.
+    pub inflight: Inflight,
+    /// Hedged re-dispatch: a job still unanswered after this long is
+    /// duplicated onto a second worker (first answer wins).
+    /// `Duration::ZERO` disables hedging.
+    pub hedge: Duration,
 }
 
 impl SocketCfg {
-    /// v1-flavoured defaults around a single `--net-timeout-ms` value.
+    /// Defaults around a single `--net-timeout-ms` value. The
+    /// heartbeat is *derived* — `min(1 s, io_timeout / 4)` — so the
+    /// probe-before-deadline invariant holds for every timeout, small
+    /// ones included (the old fixed 1 s default made any
+    /// `--net-timeout-ms <= 1000` fail at startup).
     pub fn new(io_timeout: Duration) -> SocketCfg {
         SocketCfg {
             io_timeout,
-            heartbeat: Duration::from_millis(1000),
-            inflight: 4,
+            heartbeat: Liveness::default_heartbeat(io_timeout),
+            inflight: Inflight::Fixed(4),
+            hedge: Duration::ZERO,
         }
     }
 }
@@ -100,6 +204,21 @@ impl SocketCfg {
 /// before the error surfaces (each attempt lands on a *different*
 /// connection — the dead one leaves the pool first).
 const MAX_DISPATCH_ATTEMPTS: usize = 4;
+
+/// Listener registration token — outside the connection-id space
+/// (connection tokens count up from 0).
+const LISTENER_TOKEN: u64 = u64::MAX;
+
+/// Frames processed per connection per poll wakeup. Level-triggered
+/// readiness re-reports a socket that still has bytes, so capping
+/// keeps one firehose connection from starving the others without
+/// ever losing data.
+const MAX_FRAMES_PER_WAKE: usize = 32;
+
+/// Deadline for small control writes (heartbeats, acks, shutdown
+/// frames) issued from the poll loop — bounds how long one wedged
+/// peer can stall the loop.
+const CONTROL_WRITE_DEADLINE: Duration = Duration::from_millis(250);
 
 /// Typed "the connection died" failure, fanned out to every job that
 /// was in flight on it. The underlying [`WireError`] is shared, so
@@ -129,6 +248,18 @@ impl std::error::Error for ConnDied {
 type PendingKey = (u32, u32, u32); // (round, client, job_id)
 type PendingTx = mpsc::Sender<Result<WireOutcome, ConnDied>>;
 
+/// One registered in-flight job: where to deliver the outcome, when
+/// the Job frame went out (feeds the adaptive window), and the
+/// claim flag shared by every route a hedged job rides on — the
+/// first answer to swap it wins, so exactly one outcome per job is
+/// ever aggregated or counted toward `bytes_received`, however the
+/// two answers race.
+struct PendingEntry {
+    tx: PendingTx,
+    sent_at: Instant,
+    claimed: Arc<AtomicBool>,
+}
+
 /// One live worker connection.
 struct Conn {
     id: u64,
@@ -136,8 +267,18 @@ struct Conn {
     /// Write half (cloned stream); all frame writes serialize here.
     writer: Mutex<TcpStream>,
     /// In-flight jobs awaiting their Outcome frames.
-    pending: Mutex<HashMap<PendingKey, PendingTx>>,
+    pending: Mutex<HashMap<PendingKey, PendingEntry>>,
+    /// Slots taken. Only mutated under the pool lock (see
+    /// [`Shared::release_slot`] for why that makes the kill-race
+    /// underflow impossible).
     in_flight: AtomicUsize,
+    /// Current window cap (fixed, or adaptively grown/halved).
+    window: AtomicUsize,
+    /// EWMA of observed outcome latency in µs (adaptive mode only;
+    /// 0 = no sample yet).
+    lat_ewma_us: AtomicU64,
+    /// Outcomes since the last window change (adaptive growth ladder).
+    grown: AtomicU64,
     alive: AtomicBool,
 }
 
@@ -153,19 +294,33 @@ struct Shared {
     next_nonce: AtomicU64,
     closed: AtomicBool,
     /// Job-frame bytes written (the downlink frame bytes; re-dispatch
-    /// duplicates are counted — under faults, actual >= reported).
+    /// and hedge duplicates are counted — under faults or hedging,
+    /// actual >= reported).
     bytes_sent: AtomicU64,
-    /// Outcome-frame bytes read.
+    /// Outcome-frame bytes read, counting only outcomes that matched
+    /// a waiting job — each client's outcome exactly once. Duplicate
+    /// bytes land in `duplicate_outcome_bytes` instead, so this stays
+    /// identical to the fault-free uplink under any completable
+    /// fault/hedge schedule.
     bytes_received: AtomicU64,
     /// Outcome frames that matched no pending job (duplicates /
-    /// answers that arrived after a re-dispatch) — ignored by design.
+    /// hedge losers / answers after a re-dispatch) — dropped by
+    /// design.
     duplicate_outcomes: AtomicU64,
+    /// Total frame bytes of those dropped outcomes.
+    duplicate_outcome_bytes: AtomicU64,
     /// Heartbeat probes sent (liveness traffic, excluded from the
     /// CommStats byte identity).
     heartbeats_sent: AtomicU64,
     /// Jobs re-dispatched to a surviving worker after a failure.
     requeues: AtomicU64,
-    /// Reader/acceptor handles, joined on shutdown.
+    /// Jobs duplicated onto a second worker by the hedge timer.
+    hedges: AtomicU64,
+    /// Job-frame bytes of those hedge duplicates (also included in
+    /// `bytes_sent`).
+    hedge_bytes: AtomicU64,
+    /// Transport-owned threads (exactly one: the poll loop), joined
+    /// on shutdown.
     threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -174,23 +329,10 @@ pub struct SocketTransport {
     shared: Arc<Shared>,
 }
 
-/// Handshake one inbound worker stream in place: validate its Hello
-/// against ours, ack it, and install the socket deadlines.
-fn handshake(
-    stream: &mut TcpStream,
-    peer: &str,
-    hello: &Hello,
-    io_timeout: Duration,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream
-        .set_read_timeout(Some(io_timeout))
-        .context("setting worker read timeout")?;
-    stream
-        .set_write_timeout(Some(io_timeout))
-        .context("setting worker write timeout")?;
-    let f = frame::read_frame(stream)
-        .with_context(|| format!("handshake with worker {peer}"))?;
+/// Validate a peer's opening frame against our Hello. Pure — shared
+/// by the blocking initial handshake and the poll loop's non-blocking
+/// replacement handshake.
+fn check_hello_frame(f: &Frame, peer: &str, hello: &Hello) -> Result<()> {
     ensure!(
         f.kind == FrameKind::Hello,
         "worker {peer} opened with a {:?} frame, expected Hello",
@@ -201,9 +343,8 @@ fn handshake(
     // auth gates everything else: an unauthenticated peer learns
     // nothing about our config beyond "the digest didn't match"
     if !codec::digest_eq(h.auth, hello.auth) {
-        return Err(WireError::AuthRejected).with_context(|| {
-            format!("handshake with worker {peer}")
-        });
+        return Err(WireError::AuthRejected)
+            .with_context(|| format!("handshake with worker {peer}"));
     }
     ensure!(
         h.fingerprint == hello.fingerprint,
@@ -226,6 +367,29 @@ fn handshake(
         hello.dim,
         h.dim
     );
+    Ok(())
+}
+
+/// Handshake one inbound worker stream in place — blocking I/O, used
+/// only for the initial fleet (replacements handshake non-blocking
+/// under the poll loop): validate its Hello against ours, ack it, and
+/// install the socket deadlines.
+fn handshake(
+    stream: &mut TcpStream,
+    peer: &str,
+    hello: &Hello,
+    io_timeout: Duration,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(io_timeout))
+        .context("setting worker read timeout")?;
+    stream
+        .set_write_timeout(Some(io_timeout))
+        .context("setting worker write timeout")?;
+    let f = frame::read_frame(stream)
+        .with_context(|| format!("handshake with worker {peer}"))?;
+    check_hello_frame(&f, peer, hello)?;
     let mut ack = Vec::new();
     codec::encode_hello_ack(hello.fingerprint, hello.auth, &mut ack);
     frame::write_frame(stream, FrameKind::HelloAck, &ack)
@@ -235,10 +399,11 @@ fn handshake(
 
 /// Accept `n` initial worker connections from `listener`, handshake
 /// each against `hello` (config fingerprint + model identity), and
-/// build the transport. The listener then stays open on a background
-/// acceptor so replacement workers can join mid-run. Initial
-/// handshake failures are hard errors (a mislaunched fleet must not
-/// start); replacement handshake failures are logged and dropped.
+/// build the transport around a single poll thread that owns every
+/// connection plus the listener (so replacement workers can join
+/// mid-run without a dedicated acceptor). Initial handshake failures
+/// are hard errors (a mislaunched fleet must not start); replacement
+/// handshake failures are logged and dropped.
 pub fn accept_workers(
     listener: TcpListener,
     n: usize,
@@ -250,7 +415,10 @@ pub fn accept_workers(
         !cfg.io_timeout.is_zero(),
         "worker io timeout must be non-zero"
     );
-    ensure!(cfg.inflight >= 1, "per-connection window must be >= 1");
+    ensure!(
+        cfg.inflight.initial_window() >= 1,
+        "per-connection window must be >= 1"
+    );
     // probe-before-deadline invariant: with probing on, a peer must
     // be probed (and able to ack) before the idle deadline can fire —
     // otherwise long computations would be killed unprobed
@@ -259,6 +427,13 @@ pub fn accept_workers(
         "heartbeat interval ({:?}) must be shorter than the io \
          timeout ({:?}), or zero to disable probing",
         cfg.heartbeat,
+        cfg.io_timeout
+    );
+    ensure!(
+        cfg.hedge.is_zero() || cfg.hedge < cfg.io_timeout,
+        "hedge delay ({:?}) must be shorter than the io timeout \
+         ({:?}), or zero to disable hedging",
+        cfg.hedge,
         cfg.io_timeout
     );
     let mut initial = Vec::with_capacity(n);
@@ -270,6 +445,14 @@ pub fn accept_workers(
         handshake(&mut stream, &peer, hello, cfg.io_timeout)?;
         initial.push((stream, peer));
     }
+    let mut poller =
+        Poller::new().context("creating the readiness poller")?;
+    listener
+        .set_nonblocking(true)
+        .context("switching the listener to non-blocking accepts")?;
+    poller
+        .register_listener(&listener, LISTENER_TOKEN)
+        .context("registering the listener with the poller")?;
     let shared = Arc::new(Shared {
         cfg,
         hello: hello.clone(),
@@ -281,109 +464,520 @@ pub fn accept_workers(
         bytes_sent: AtomicU64::new(0),
         bytes_received: AtomicU64::new(0),
         duplicate_outcomes: AtomicU64::new(0),
+        duplicate_outcome_bytes: AtomicU64::new(0),
         heartbeats_sent: AtomicU64::new(0),
         requeues: AtomicU64::new(0),
+        hedges: AtomicU64::new(0),
+        hedge_bytes: AtomicU64::new(0),
         threads: Mutex::new(Vec::new()),
     });
+    let mut states: HashMap<u64, ConnState> = HashMap::new();
     for (stream, peer) in initial {
-        add_conn(&shared, stream, peer)?;
+        stream
+            .set_nonblocking(true)
+            .context("switching a worker connection to non-blocking")?;
+        let reader = stream
+            .try_clone()
+            .context("cloning a worker connection for its reader")?;
+        let token = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        let conn = Arc::new(new_conn(&shared, token, peer, stream));
+        poller
+            .register_stream(&reader, token)
+            .context("registering a worker connection with the poller")?;
+        shared.conns.lock().unwrap().push(conn.clone());
+        states.insert(
+            token,
+            ConnState {
+                conn,
+                stream: reader,
+                fr: FrameReader::new(),
+                live: Liveness::new(cfg.heartbeat, cfg.io_timeout),
+            },
+        );
     }
-    spawn_acceptor(&shared, listener)?;
+    let sh = shared.clone();
+    let h = thread::Builder::new()
+        .name("fedfp8-net-poll".into())
+        .spawn(move || poll_loop(&sh, poller, listener, states))
+        .context("spawning the transport poll thread")?;
+    shared.threads.lock().unwrap().push(h);
     Ok(SocketTransport { shared })
 }
 
-/// Register a handshaken stream: clone it into reader/writer halves
-/// and start its reader thread.
-fn add_conn(
-    shared: &Arc<Shared>,
-    stream: TcpStream,
+fn new_conn(
+    shared: &Shared,
+    id: u64,
     peer: String,
-) -> Result<()> {
-    let reader_stream = stream
-        .try_clone()
-        .context("cloning a worker connection for its reader")?;
-    let conn = Arc::new(Conn {
-        id: shared.next_conn_id.fetch_add(1, Ordering::Relaxed),
+    writer: TcpStream,
+) -> Conn {
+    Conn {
+        id,
         peer,
-        writer: Mutex::new(stream),
+        writer: Mutex::new(writer),
         pending: Mutex::new(HashMap::new()),
         in_flight: AtomicUsize::new(0),
+        window: AtomicUsize::new(shared.cfg.inflight.initial_window()),
+        lat_ewma_us: AtomicU64::new(0),
+        grown: AtomicU64::new(0),
         alive: AtomicBool::new(true),
-    });
-    {
-        let mut conns = shared.conns.lock().unwrap();
-        // a replacement racing shutdown() must not be registered into
-        // the already-drained pool (it would never get a Shutdown
-        // frame and its reader would never be joined)
-        ensure!(
-            !shared.closed.load(Ordering::SeqCst),
-            "transport is shut down"
-        );
-        conns.push(conn.clone());
     }
-    shared.slots.notify_all();
-    let sh = shared.clone();
-    let h = thread::Builder::new()
-        .name(format!("fedfp8-net-reader-{}", conn.id))
-        .spawn(move || reader_loop(&sh, &conn, reader_stream))
-        .context("spawning a connection reader thread")?;
-    shared.threads.lock().unwrap().push(h);
-    Ok(())
 }
 
-/// Background acceptor: handshake replacement workers for the life of
-/// the transport (non-blocking accept + short poll, so shutdown is
-/// prompt).
-fn spawn_acceptor(
+/// Poll-loop state for one established connection: the read half plus
+/// its resumable frame parser and liveness machine.
+struct ConnState {
+    conn: Arc<Conn>,
+    stream: TcpStream,
+    fr: FrameReader,
+    live: Liveness,
+}
+
+/// Poll-loop state for one accepted-but-not-yet-handshaken socket. A
+/// stalled half-connector sits here (costing nothing but a table
+/// entry) until its Hello arrives or `io_timeout` expires — it can
+/// never delay another connection's traffic or rejoin.
+struct HsState {
+    stream: TcpStream,
+    peer: String,
+    fr: FrameReader,
+    started: Instant,
+}
+
+/// The server's single transport thread: readiness-driven reads on
+/// every worker connection, replacement accepts + handshakes, probe
+/// and deadline bookkeeping.
+fn poll_loop(
     shared: &Arc<Shared>,
+    mut poller: Poller,
     listener: TcpListener,
-) -> Result<()> {
-    listener
-        .set_nonblocking(true)
-        .context("switching the listener to non-blocking accepts")?;
-    let sh = shared.clone();
-    let h = thread::Builder::new()
-        .name("fedfp8-net-acceptor".into())
-        .spawn(move || {
-            while !sh.closed.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((mut stream, peer)) => {
-                        let peer = peer.to_string();
-                        // handshake with deadlines; blocking I/O again
-                        if stream.set_nonblocking(false).is_err() {
-                            continue;
+    mut conns: HashMap<u64, ConnState>,
+) {
+    let mut handshakes: HashMap<u64, HsState> = HashMap::new();
+    let mut ready: Vec<u64> = Vec::new();
+    let mut hb_body = Vec::new();
+    let base_tick =
+        Liveness::new(shared.cfg.heartbeat, shared.cfg.io_timeout).tick();
+    while !shared.closed.load(Ordering::SeqCst) {
+        let tick = if handshakes.is_empty() {
+            base_tick
+        } else {
+            base_tick.min(Duration::from_millis(25))
+        };
+        if poller.wait(tick, &mut ready).is_err() {
+            // wait only fails on programming-error class problems;
+            // degrade to a timed scan instead of spinning
+            thread::sleep(Duration::from_millis(5));
+        }
+        for i in 0..ready.len() {
+            let token = ready[i];
+            if token == LISTENER_TOKEN {
+                accept_pending(
+                    shared,
+                    &mut poller,
+                    &listener,
+                    &mut handshakes,
+                );
+            } else if let Some(st) = conns.get_mut(&token) {
+                drain_frames(shared, st, &mut hb_body);
+            } else if handshakes.contains_key(&token) {
+                drive_handshake(
+                    shared,
+                    &mut poller,
+                    &mut handshakes,
+                    &mut conns,
+                    token,
+                );
+            }
+            // stale token (connection reaped between wakeups): no-op
+        }
+        expire_handshakes(shared, &mut poller, &mut handshakes);
+        // liveness pass + reaping, every tick for every connection
+        conns.retain(|&token, st| {
+            if !st.conn.alive.load(Ordering::SeqCst) {
+                let _ = poller.deregister_stream(&st.stream, token);
+                return false;
+            }
+            st.live.on_progress(st.fr.bytes_consumed());
+            let has_pending =
+                !st.conn.pending.lock().unwrap().is_empty();
+            let probing = !shared.cfg.heartbeat.is_zero();
+            match st.live.on_idle(has_pending || probing) {
+                TickAction::Dead { idle_ms, deadline_ms } => {
+                    kill_conn(
+                        shared,
+                        &st.conn,
+                        WireError::HeartbeatLost { idle_ms, deadline_ms },
+                    );
+                    let _ = poller.deregister_stream(&st.stream, token);
+                    false
+                }
+                TickAction::Probe => {
+                    let nonce = shared
+                        .next_nonce
+                        .fetch_add(1, Ordering::Relaxed);
+                    codec::encode_heartbeat(nonce, &mut hb_body);
+                    // try_lock: a dispatcher mid-write must not stall
+                    // the loop — its own frame is outgoing traffic,
+                    // and a missed probe retries next interval
+                    let res = match st.conn.writer.try_lock() {
+                        Ok(mut w) => frame::write_frame_nb(
+                            &mut *w,
+                            FrameKind::Heartbeat,
+                            &hb_body,
+                            Instant::now() + CONTROL_WRITE_DEADLINE,
+                        )
+                        .map(Some),
+                        Err(_) => Ok(None),
+                    };
+                    match res {
+                        Ok(Some(_)) => {
+                            shared
+                                .heartbeats_sent
+                                .fetch_add(1, Ordering::Relaxed);
+                            true
                         }
-                        match handshake(
-                            &mut stream,
-                            &peer,
-                            &sh.hello,
-                            sh.cfg.io_timeout,
-                        ) {
-                            Ok(()) => {
-                                eprintln!(
-                                    "[server] replacement worker \
-                                     {peer} joined"
-                                );
-                                let _ = add_conn(&sh, stream, peer);
-                            }
-                            Err(e) => eprintln!(
-                                "[server] rejected replacement worker \
-                                 {peer}: {e:#}"
-                            ),
+                        Ok(None) => true,
+                        Err(e) => {
+                            kill_conn(shared, &st.conn, e);
+                            let _ = poller
+                                .deregister_stream(&st.stream, token);
+                            false
                         }
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(25));
-                    }
-                    Err(_) => {
-                        thread::sleep(Duration::from_millis(100));
                     }
                 }
+                TickAction::Idle => true,
             }
-        })
-        .context("spawning the replacement acceptor thread")?;
-    shared.threads.lock().unwrap().push(h);
-    Ok(())
+        });
+    }
+}
+
+/// Drain the listener's accept backlog into the handshake table.
+fn accept_pending(
+    shared: &Shared,
+    poller: &mut Poller,
+    listener: &TcpListener,
+    handshakes: &mut HashMap<u64, HsState>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let peer = peer.to_string();
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let token =
+                    shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if poller.register_stream(&stream, token).is_err() {
+                    continue;
+                }
+                handshakes.insert(
+                    token,
+                    HsState {
+                        stream,
+                        peer,
+                        fr: FrameReader::new(),
+                        started: Instant::now(),
+                    },
+                );
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Pump one pending handshake: parse as much Hello as has arrived;
+/// on a complete frame, validate + ack + promote to a live
+/// connection.
+fn drive_handshake(
+    shared: &Arc<Shared>,
+    poller: &mut Poller,
+    handshakes: &mut HashMap<u64, HsState>,
+    conns: &mut HashMap<u64, ConnState>,
+    token: u64,
+) {
+    enum Ev {
+        Pending,
+        Frame(Frame),
+        Fail(WireError),
+    }
+    let ev = {
+        let Some(hs) = handshakes.get_mut(&token) else { return };
+        match hs.fr.poll(&mut hs.stream) {
+            Ok(None) => Ev::Pending,
+            Ok(Some(f)) => Ev::Frame(f),
+            Err(e) => Ev::Fail(e),
+        }
+    };
+    match ev {
+        Ev::Pending => {}
+        Ev::Fail(e) => {
+            let hs = handshakes.remove(&token).unwrap();
+            let _ = poller.deregister_stream(&hs.stream, token);
+            eprintln!(
+                "[server] rejected replacement worker {}: {e:#}",
+                hs.peer
+            );
+        }
+        Ev::Frame(f) => {
+            let hs = handshakes.remove(&token).unwrap();
+            finish_handshake(shared, poller, conns, token, hs, f);
+        }
+    }
+}
+
+/// A replacement's Hello arrived: validate, ack, and install the
+/// connection into the pool + poll state.
+fn finish_handshake(
+    shared: &Arc<Shared>,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, ConnState>,
+    token: u64,
+    mut hs: HsState,
+    f: Frame,
+) {
+    let peer = hs.peer.clone();
+    if let Err(e) = check_hello_frame(&f, &peer, &shared.hello) {
+        let _ = poller.deregister_stream(&hs.stream, token);
+        eprintln!("[server] rejected replacement worker {peer}: {e:#}");
+        return;
+    }
+    let mut ack = Vec::new();
+    codec::encode_hello_ack(
+        shared.hello.fingerprint,
+        shared.hello.auth,
+        &mut ack,
+    );
+    let ack_deadline = Instant::now()
+        + shared.cfg.io_timeout.min(Duration::from_secs(1));
+    if let Err(e) = frame::write_frame_nb(
+        &mut hs.stream,
+        FrameKind::HelloAck,
+        &ack,
+        ack_deadline,
+    ) {
+        let _ = poller.deregister_stream(&hs.stream, token);
+        eprintln!(
+            "[server] rejected replacement worker {peer}: acking \
+             failed: {e}"
+        );
+        return;
+    }
+    let writer = match hs.stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = poller.deregister_stream(&hs.stream, token);
+            eprintln!(
+                "[server] rejected replacement worker {peer}: cloning \
+                 its stream failed: {e}"
+            );
+            return;
+        }
+    };
+    let conn = Arc::new(new_conn(shared, token, hs.peer, writer));
+    {
+        let mut pool = shared.conns.lock().unwrap();
+        // a replacement racing shutdown() must not be registered into
+        // the already-drained pool (it would never get a Shutdown
+        // frame)
+        if shared.closed.load(Ordering::SeqCst) {
+            drop(pool);
+            let _ = poller.deregister_stream(&hs.stream, token);
+            return;
+        }
+        pool.push(conn.clone());
+    }
+    shared.slots.notify_all();
+    conns.insert(
+        token,
+        ConnState {
+            conn,
+            stream: hs.stream,
+            fr: hs.fr,
+            live: Liveness::new(
+                shared.cfg.heartbeat,
+                shared.cfg.io_timeout,
+            ),
+        },
+    );
+    eprintln!("[server] replacement worker {peer} joined");
+}
+
+/// Drop handshakes that outlived `io_timeout` without completing —
+/// the half-open-connector bound.
+fn expire_handshakes(
+    shared: &Shared,
+    poller: &mut Poller,
+    handshakes: &mut HashMap<u64, HsState>,
+) {
+    let deadline = shared.cfg.io_timeout;
+    handshakes.retain(|&token, hs| {
+        if hs.started.elapsed() < deadline {
+            return true;
+        }
+        let _ = poller.deregister_stream(&hs.stream, token);
+        eprintln!(
+            "[server] rejected replacement worker {}: handshake timed \
+             out after {}ms",
+            hs.peer,
+            deadline.as_millis()
+        );
+        false
+    });
+}
+
+/// Read frames off one ready connection until it would block (or the
+/// per-wakeup cap).
+fn drain_frames(shared: &Shared, st: &mut ConnState, hb_body: &mut Vec<u8>) {
+    for _ in 0..MAX_FRAMES_PER_WAKE {
+        if !st.conn.alive.load(Ordering::SeqCst) {
+            return;
+        }
+        match st.fr.poll(&mut st.stream) {
+            Ok(Some(f)) => process_frame(shared, &st.conn, f, hb_body),
+            Ok(None) => return,
+            Err(e) => {
+                kill_conn(shared, &st.conn, e);
+                return;
+            }
+        }
+    }
+}
+
+/// Handle one complete inbound frame: demultiplex an Outcome to its
+/// dispatcher, answer a worker's Heartbeat, validate an ack.
+fn process_frame(
+    shared: &Shared,
+    conn: &Arc<Conn>,
+    f: Frame,
+    hb_body: &mut Vec<u8>,
+) {
+    match f.kind {
+        FrameKind::Outcome => {
+            let out = match codec::decode_outcome(&f.body) {
+                Ok(o) => o,
+                Err(e) => {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            };
+            let key: PendingKey = (out.round, out.client, out.job_id);
+            let entry = conn.pending.lock().unwrap().remove(&key);
+            match entry {
+                Some(entry)
+                    if !entry.claimed.swap(true, Ordering::SeqCst) =>
+                {
+                    // only the job's FIRST matched outcome counts
+                    // toward the reported uplink — a duplicate's (or
+                    // hedge loser's) bytes must not inflate the
+                    // paper's headline communication metric
+                    shared
+                        .bytes_received
+                        .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                    if shared.cfg.inflight == Inflight::Adaptive {
+                        adapt_window(
+                            &conn.window,
+                            &conn.lat_ewma_us,
+                            &conn.grown,
+                            entry.sent_at.elapsed(),
+                        );
+                    }
+                    shared.release_slot(conn);
+                    let _ = entry.tx.send(Ok(out));
+                }
+                entry => {
+                    // duplicated frame, a hedge loser (its own entry,
+                    // but another route already claimed the job), or
+                    // the answer to a job that was re-dispatched:
+                    // bit-identical by the determinism contract, safe
+                    // to drop — but its bytes are tracked
+                    if entry.is_some() {
+                        shared.release_slot(conn);
+                    }
+                    shared
+                        .duplicate_outcomes
+                        .fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .duplicate_outcome_bytes
+                        .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                }
+            }
+        }
+        FrameKind::Heartbeat => {
+            let nonce = match codec::decode_heartbeat(&f.body) {
+                Ok(n) => n,
+                Err(e) => {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            };
+            codec::encode_heartbeat(nonce, hb_body);
+            let res = {
+                let mut w = conn.writer.lock().unwrap();
+                frame::write_frame_nb(
+                    &mut *w,
+                    FrameKind::HeartbeatAck,
+                    hb_body,
+                    Instant::now() + CONTROL_WRITE_DEADLINE,
+                )
+            };
+            if let Err(e) = res {
+                kill_conn(shared, conn, e);
+            }
+        }
+        FrameKind::HeartbeatAck => {
+            // liveness already refreshed via bytes_consumed
+            if let Err(e) = codec::decode_heartbeat(&f.body) {
+                kill_conn(shared, conn, e);
+            }
+        }
+        k => {
+            kill_conn(
+                shared,
+                conn,
+                WireError::Malformed {
+                    what: format!("unexpected {k:?} frame from a worker"),
+                },
+            );
+        }
+    }
+}
+
+/// AIMD window update from one observed outcome latency: grow by one
+/// slot per window-full of completions, halve on a ≥4x spike against
+/// the connection's own EWMA. Free function over the atomics so the
+/// policy is unit-testable without sockets.
+fn adapt_window(
+    window: &AtomicUsize,
+    lat_ewma_us: &AtomicU64,
+    grown: &AtomicU64,
+    latency: Duration,
+) {
+    let us = latency.as_micros().clamp(1, u64::MAX as u128) as u64;
+    let prior = lat_ewma_us.load(Ordering::Relaxed);
+    let ewma = if prior == 0 {
+        us
+    } else {
+        (prior - prior / 8 + us / 8).max(1)
+    };
+    lat_ewma_us.store(ewma, Ordering::Relaxed);
+    if prior != 0 && us > prior.saturating_mul(4) {
+        // latency spike: halve (floor 1) and restart the growth ladder
+        let w = window.load(Ordering::SeqCst);
+        window.store((w / 2).max(1), Ordering::SeqCst);
+        grown.store(0, Ordering::Relaxed);
+        return;
+    }
+    let w = window.load(Ordering::SeqCst);
+    if w >= ADAPTIVE_MAX_WINDOW {
+        return;
+    }
+    let g = grown.fetch_add(1, Ordering::Relaxed) + 1;
+    if g as usize >= w {
+        window.store(w + 1, Ordering::SeqCst);
+        grown.store(0, Ordering::Relaxed);
+    }
 }
 
 /// Declare a connection dead: remove it from the pool, fail over its
@@ -395,6 +989,12 @@ fn kill_conn(shared: &Shared, conn: &Arc<Conn>, error: WireError) {
     {
         let mut conns = shared.conns.lock().unwrap();
         conns.retain(|c| c.id != conn.id);
+        // zero the slot count under the pool lock: a concurrent
+        // releaser holds the same lock across its alive-check +
+        // decrement, so it either ran before this store (fine — the
+        // store wins) or observes alive == false and skips. Underflow
+        // is impossible.
+        conn.in_flight.store(0, Ordering::SeqCst);
     }
     let died = ConnDied {
         peer: conn.peer.clone(),
@@ -402,174 +1002,13 @@ fn kill_conn(shared: &Shared, conn: &Arc<Conn>, error: WireError) {
     };
     let victims: Vec<PendingTx> = {
         let mut pending = conn.pending.lock().unwrap();
-        pending.drain().map(|(_, tx)| tx).collect()
+        pending.drain().map(|(_, e)| e.tx).collect()
     };
     for tx in victims {
         let _ = tx.send(Err(died.clone()));
     }
-    conn.in_flight.store(0, Ordering::SeqCst);
     let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
     shared.slots.notify_all();
-}
-
-/// Per-connection reader: demultiplex Outcome frames to their waiting
-/// dispatchers, answer worker heartbeats, probe on silence, and kill
-/// the connection past the idle deadline.
-fn reader_loop(shared: &Shared, conn: &Arc<Conn>, mut stream: TcpStream) {
-    let hb = shared.cfg.heartbeat;
-    let mut live = Liveness::new(hb, shared.cfg.io_timeout);
-    if stream.set_read_timeout(Some(live.tick())).is_err() {
-        kill_conn(
-            shared,
-            conn,
-            WireError::Io(std::io::Error::other(
-                "failed to set the reader tick",
-            )),
-        );
-        return;
-    }
-    let mut fr = FrameReader::new();
-    let mut hb_body = Vec::new();
-    while conn.alive.load(Ordering::SeqCst)
-        && !shared.closed.load(Ordering::SeqCst)
-    {
-        let polled = match fr.poll(&mut stream) {
-            Ok(p) => p,
-            Err(e) => {
-                kill_conn(shared, conn, e);
-                return;
-            }
-        };
-        live.on_progress(fr.bytes_consumed());
-        let Some(f) = polled else {
-            // idle deadline: always while jobs are pending; only with
-            // probing on for idle connections (a silent idle peer is
-            // indistinguishable from a partitioned one without probes)
-            let has_pending = !conn.pending.lock().unwrap().is_empty();
-            match live.on_idle(has_pending || !hb.is_zero()) {
-                TickAction::Dead { idle_ms, deadline_ms } => {
-                    kill_conn(
-                        shared,
-                        conn,
-                        WireError::HeartbeatLost {
-                            idle_ms,
-                            deadline_ms,
-                        },
-                    );
-                    return;
-                }
-                TickAction::Probe => {
-                    let nonce = shared
-                        .next_nonce
-                        .fetch_add(1, Ordering::Relaxed);
-                    codec::encode_heartbeat(nonce, &mut hb_body);
-                    let res = {
-                        let mut w = conn.writer.lock().unwrap();
-                        frame::write_frame(
-                            &mut *w,
-                            FrameKind::Heartbeat,
-                            &hb_body,
-                        )
-                    };
-                    match res {
-                        Ok(_) => {
-                            shared
-                                .heartbeats_sent
-                                .fetch_add(1, Ordering::Relaxed);
-                        }
-                        Err(e) => {
-                            kill_conn(shared, conn, e);
-                            return;
-                        }
-                    }
-                }
-                TickAction::Idle => {}
-            }
-            continue;
-        };
-        match f.kind {
-            FrameKind::Outcome => {
-                shared
-                    .bytes_received
-                    .fetch_add(f.total_bytes(), Ordering::Relaxed);
-                let out = match codec::decode_outcome(&f.body) {
-                    Ok(o) => o,
-                    Err(e) => {
-                        kill_conn(shared, conn, e);
-                        return;
-                    }
-                };
-                let key: PendingKey =
-                    (out.round, out.client, out.job_id);
-                let tx = conn.pending.lock().unwrap().remove(&key);
-                match tx {
-                    Some(tx) => {
-                        // free the slot under the pool lock so slot
-                        // waiters can't miss the wakeup
-                        {
-                            let _pool = shared.conns.lock().unwrap();
-                            conn.in_flight
-                                .fetch_sub(1, Ordering::SeqCst);
-                        }
-                        shared.slots.notify_all();
-                        let _ = tx.send(Ok(out));
-                    }
-                    None => {
-                        // duplicated frame, or the answer to a job
-                        // that was already re-dispatched: bit-identical
-                        // by the determinism contract, safe to drop
-                        shared
-                            .duplicate_outcomes
-                            .fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-            }
-            FrameKind::Heartbeat => {
-                let nonce = match codec::decode_heartbeat(&f.body) {
-                    Ok(n) => n,
-                    Err(e) => {
-                        kill_conn(shared, conn, e);
-                        return;
-                    }
-                };
-                codec::encode_heartbeat(nonce, &mut hb_body);
-                let res = {
-                    let mut w = conn.writer.lock().unwrap();
-                    frame::write_frame(
-                        &mut *w,
-                        FrameKind::HeartbeatAck,
-                        &hb_body,
-                    )
-                };
-                if let Err(e) = res {
-                    kill_conn(shared, conn, e);
-                    return;
-                }
-            }
-            FrameKind::HeartbeatAck => {
-                // liveness already refreshed via bytes_consumed
-                if let Err(e) = codec::decode_heartbeat(&f.body) {
-                    kill_conn(shared, conn, e);
-                    return;
-                }
-            }
-            k => {
-                kill_conn(
-                    shared,
-                    conn,
-                    WireError::Malformed {
-                        what: format!(
-                            "unexpected {k:?} frame from a worker"
-                        ),
-                    },
-                );
-                return;
-            }
-        }
-    }
-    // transport shut down (or the conn was killed elsewhere): make
-    // sure nobody is left waiting on this connection
-    kill_conn(shared, conn, WireError::CleanClose);
 }
 
 impl Shared {
@@ -588,31 +1027,83 @@ impl Shared {
                 "no live worker connections left (all were discarded \
                  after errors)"
             );
-            let best = conns
-                .iter()
-                .filter(|c| {
-                    c.in_flight.load(Ordering::SeqCst)
-                        < self.cfg.inflight
-                })
-                .min_by_key(|c| c.in_flight.load(Ordering::SeqCst))
-                .cloned();
-            if let Some(c) = best {
+            if let Some(c) = Self::pick_least_loaded(&conns, &[]) {
                 c.in_flight.fetch_add(1, Ordering::SeqCst);
                 return Ok(c);
             }
             conns = self.slots.wait(conns).unwrap();
         }
     }
+
+    /// Non-blocking acquire for hedged dispatch, skipping connections
+    /// the job already rides on.
+    fn try_acquire_excluding(
+        &self,
+        exclude: &[Arc<Conn>],
+    ) -> Option<Arc<Conn>> {
+        let conns = self.conns.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return None;
+        }
+        let c = Self::pick_least_loaded(&conns, exclude)?;
+        c.in_flight.fetch_add(1, Ordering::SeqCst);
+        Some(c)
+    }
+
+    /// Least-loaded scan, reading each connection's `(in_flight,
+    /// window)` exactly once. The old `filter(...).min_by_key(...)`
+    /// double-load raced a concurrent free/acquire into picking a
+    /// connection already at its window.
+    fn pick_least_loaded(
+        conns: &[Arc<Conn>],
+        exclude: &[Arc<Conn>],
+    ) -> Option<Arc<Conn>> {
+        let mut best: Option<(Arc<Conn>, usize)> = None;
+        for c in conns {
+            if exclude.iter().any(|e| e.id == c.id) {
+                continue;
+            }
+            let load = c.in_flight.load(Ordering::SeqCst);
+            let cap = c.window.load(Ordering::SeqCst);
+            if load >= cap {
+                continue;
+            }
+            let better = match &best {
+                Some((_, b)) => load < *b,
+                None => true,
+            };
+            if better {
+                best = Some((c.clone(), load));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+
+    /// Release one previously-acquired slot. The alive check and the
+    /// decrement happen under the pool lock — the same lock
+    /// `kill_conn` holds for its `in_flight` zeroing — so a release
+    /// racing a kill can never underflow the counter.
+    fn release_slot(&self, conn: &Conn) {
+        {
+            let _pool = self.conns.lock().unwrap();
+            if conn.alive.load(Ordering::SeqCst) {
+                conn.in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        self.slots.notify_all();
+    }
 }
 
 impl SocketTransport {
     /// Total Job-frame bytes sent to workers so far (re-dispatched
-    /// frames included).
+    /// and hedged frames included).
     pub fn bytes_sent(&self) -> u64 {
         self.shared.bytes_sent.load(Ordering::Relaxed)
     }
 
-    /// Total Outcome-frame bytes received from workers so far.
+    /// Total matched Outcome-frame bytes received from workers so far
+    /// (each client's outcome exactly once; duplicates are tracked
+    /// separately).
     pub fn bytes_received(&self) -> u64 {
         self.shared.bytes_received.load(Ordering::Relaxed)
     }
@@ -627,6 +1118,11 @@ impl SocketTransport {
         self.shared.duplicate_outcomes.load(Ordering::Relaxed)
     }
 
+    /// Total frame bytes of those ignored outcomes.
+    pub fn duplicate_outcome_bytes(&self) -> u64 {
+        self.shared.duplicate_outcome_bytes.load(Ordering::Relaxed)
+    }
+
     /// Heartbeat probes this side has sent.
     pub fn heartbeats_sent(&self) -> u64 {
         self.shared.heartbeats_sent.load(Ordering::Relaxed)
@@ -638,9 +1134,26 @@ impl SocketTransport {
         self.shared.requeues.load(Ordering::Relaxed)
     }
 
+    /// Jobs duplicated onto a second worker by the hedge timer.
+    pub fn hedges(&self) -> u64 {
+        self.shared.hedges.load(Ordering::Relaxed)
+    }
+
+    /// Job-frame bytes those hedges added (subset of `bytes_sent`).
+    pub fn hedge_bytes(&self) -> u64 {
+        self.shared.hedge_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Threads the transport runs — exactly one (the poll loop),
+    /// independent of how many workers are connected. Asserted in
+    /// tests as the O(1)-threads guarantee.
+    pub fn transport_threads(&self) -> usize {
+        self.shared.threads.lock().unwrap().len()
+    }
+
     /// Politely close every connection (Shutdown frame + socket
-    /// close) so workers exit their serve loops, then stop the
-    /// acceptor and reader threads. Idempotent; also runs on Drop.
+    /// close) so workers exit their serve loops, then stop the poll
+    /// thread. Idempotent; also runs on Drop.
     pub fn shutdown(&self) {
         let shared = &self.shared;
         if shared.closed.swap(true, Ordering::SeqCst) {
@@ -653,8 +1166,12 @@ impl SocketTransport {
         for conn in conns {
             {
                 let mut w = conn.writer.lock().unwrap();
-                let _ =
-                    frame::write_frame(&mut *w, FrameKind::Shutdown, &[]);
+                let _ = frame::write_frame_nb(
+                    &mut *w,
+                    FrameKind::Shutdown,
+                    &[],
+                    Instant::now() + CONTROL_WRITE_DEADLINE,
+                );
                 let _ = w.shutdown(Shutdown::Both);
             }
             conn.alive.store(false, Ordering::SeqCst);
@@ -665,7 +1182,7 @@ impl SocketTransport {
                 .lock()
                 .unwrap()
                 .drain()
-                .map(|(_, tx)| tx)
+                .map(|(_, e)| e.tx)
                 .collect();
             let died = ConnDied {
                 peer: conn.peer.clone(),
@@ -676,10 +1193,7 @@ impl SocketTransport {
             }
         }
         shared.slots.notify_all();
-        // join until the list drains: the acceptor may push one last
-        // reader handle while we join (a replacement racing shutdown
-        // — add_conn refuses to register it, but its spawn may have
-        // landed in the list already)
+        // the poll thread observes `closed` within one tick and exits
         loop {
             let threads: Vec<JoinHandle<()>> = {
                 let mut t = shared.threads.lock().unwrap();
@@ -701,6 +1215,61 @@ impl Drop for SocketTransport {
     }
 }
 
+/// Register `key` on `conn` and write its Job frame. Returns whether
+/// this route can still produce a message on `tx` (false means the
+/// connection died around the dispatch *and* we reclaimed the entry
+/// ourselves, so nothing will ever arrive for it).
+fn dispatch_on(
+    shared: &Shared,
+    conn: &Arc<Conn>,
+    key: PendingKey,
+    tx: &PendingTx,
+    claimed: &Arc<AtomicBool>,
+    body: &[u8],
+    is_hedge: bool,
+) -> bool {
+    conn.pending.lock().unwrap().insert(
+        key,
+        PendingEntry {
+            tx: tx.clone(),
+            sent_at: Instant::now(),
+            claimed: claimed.clone(),
+        },
+    );
+    let write_res = {
+        let mut w = conn.writer.lock().unwrap();
+        frame::write_frame_nb(
+            &mut *w,
+            FrameKind::Job,
+            body,
+            Instant::now() + shared.cfg.io_timeout,
+        )
+    };
+    match write_res {
+        Ok(n) => {
+            shared.bytes_sent.fetch_add(n, Ordering::Relaxed);
+            if is_hedge {
+                shared.hedge_bytes.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        Err(e) => {
+            // kill_conn drains pending (including ours), so the
+            // dispatcher's recv resolves immediately
+            kill_conn(shared, conn, e);
+        }
+    }
+    // race guard: if the connection died *around* our insert
+    // (kill_conn may already have drained pending before the entry
+    // landed), reclaim the entry ourselves — no drain will ever send
+    // for it
+    if !conn.alive.load(Ordering::SeqCst)
+        && conn.pending.lock().unwrap().remove(&key).is_some()
+    {
+        return false;
+    }
+    true
+}
+
 impl Transport for SocketTransport {
     fn run_client(
         &self,
@@ -716,6 +1285,7 @@ impl Transport for SocketTransport {
         // not one per message (encode_job_from clears it first)
         let body = &mut buffers.wire;
         codec::encode_job_from(&job, body);
+        let hedge = shared.cfg.hedge;
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..MAX_DISPATCH_ATTEMPTS {
             let conn = match shared.acquire() {
@@ -736,94 +1306,151 @@ impl Transport for SocketTransport {
                 shared.requeues.fetch_add(1, Ordering::Relaxed);
             }
             let (tx, rx) = mpsc::channel();
-            conn.pending.lock().unwrap().insert(key, tx);
-            let write_res = {
-                let mut w = conn.writer.lock().unwrap();
-                frame::write_frame(&mut *w, FrameKind::Job, body)
-            };
-            match write_res {
-                Ok(n) => {
-                    shared.bytes_sent.fetch_add(n, Ordering::Relaxed);
-                }
-                Err(e) => {
-                    // kill_conn drains pending (including ours), so
-                    // rx below resolves immediately
-                    kill_conn(shared, &conn, e);
-                }
+            let claimed = Arc::new(AtomicBool::new(false));
+            // every connection this job currently rides on; [0] is
+            // the primary, a hedge may add a second
+            let mut routes: Vec<Arc<Conn>> = Vec::with_capacity(2);
+            let mut live_routes = 0usize;
+            if dispatch_on(shared, &conn, key, &tx, &claimed, body, false)
+            {
+                live_routes += 1;
             }
-            // race guard: if the connection died *around* our insert
-            // (kill_conn may already have drained pending before the
-            // entry landed), reclaim the entry ourselves so rx can't
-            // wait on a sender nobody will ever drain — dropping our
-            // tx turns the recv below into an immediate disconnect.
-            if !conn.alive.load(Ordering::SeqCst) {
-                conn.pending.lock().unwrap().remove(&key);
-            }
-            // wait for the outcome, re-checking connection health on
+            routes.push(conn.clone());
+            let started = Instant::now();
+            let mut hedged = false;
+            let mut winner: Option<WireOutcome> = None;
+            // wait for the first answer, re-checking route health on
             // every io_timeout tick. Legitimate long computations are
             // unbounded by design — the worker's reader acks probes
-            // while executing — but if the connection dies without
-            // our entry being drained (a reader failure mode this
-            // guards against), we reclaim it instead of parking
-            // forever.
-            let received = loop {
-                match rx.recv_timeout(shared.cfg.io_timeout) {
-                    Ok(r) => break Some(r),
+            // while executing — but if every route dies without our
+            // entry being drained (a failure mode this guards
+            // against), we reclaim it instead of parking forever.
+            'wait: while live_routes > 0 {
+                if !hedged
+                    && !hedge.is_zero()
+                    && started.elapsed() >= hedge
+                {
+                    // straggler: duplicate the job onto a second
+                    // worker before any deadline — first answer wins
+                    hedged = true;
+                    if let Some(h) = shared.try_acquire_excluding(&routes)
+                    {
+                        shared.hedges.fetch_add(1, Ordering::Relaxed);
+                        if dispatch_on(
+                            shared, &h, key, &tx, &claimed, body, true,
+                        ) {
+                            live_routes += 1;
+                        }
+                        routes.push(h);
+                    }
+                }
+                let wait = if hedged || hedge.is_zero() {
+                    shared.cfg.io_timeout
+                } else {
+                    // wake exactly at the hedge point
+                    hedge
+                        .saturating_sub(started.elapsed())
+                        .max(Duration::from_millis(1))
+                        .min(shared.cfg.io_timeout)
+                };
+                match rx.recv_timeout(wait) {
+                    Ok(Ok(out)) => {
+                        winner = Some(out);
+                        break 'wait;
+                    }
+                    Ok(Err(died)) => {
+                        live_routes -= 1;
+                        let peer = died.peer.clone();
+                        last_err = Some(
+                            anyhow::Error::from(died).context(format!(
+                                "client {client} round {round} via \
+                                 worker {peer}"
+                            )),
+                        );
+                    }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if conn.alive.load(Ordering::SeqCst) {
+                        if routes
+                            .iter()
+                            .any(|c| c.alive.load(Ordering::SeqCst))
+                        {
                             continue;
                         }
-                        conn.pending.lock().unwrap().remove(&key);
-                        break None;
+                        // every route is dead: reclaim entries a
+                        // drain race may have orphaned, then pick up
+                        // any message already sent
+                        for c in &routes {
+                            if c.pending
+                                .lock()
+                                .unwrap()
+                                .remove(&key)
+                                .is_some()
+                            {
+                                live_routes =
+                                    live_routes.saturating_sub(1);
+                            }
+                        }
+                        while let Ok(msg) = rx.try_recv() {
+                            match msg {
+                                Ok(out) => {
+                                    winner = Some(out);
+                                    break 'wait;
+                                }
+                                Err(_) => {
+                                    live_routes =
+                                        live_routes.saturating_sub(1);
+                                }
+                            }
+                        }
+                        break 'wait;
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        break None;
+                        // unreachable — we hold a tx — but never park
+                        break 'wait;
                     }
                 }
-            };
-            match received {
-                Some(Ok(out)) => {
-                    ensure!(
-                        out.client as usize == client
-                            && out.round as usize == round,
-                        "worker answered for client {} round {}, \
-                         expected client {client} round {round}",
-                        out.client,
-                        out.round,
-                    );
-                    ensure!(
-                        out.n_k == job.n_k,
-                        "worker reported n_k {} for client {client}, \
-                         server expected {} — worlds out of sync \
-                         despite matching fingerprints?",
-                        out.n_k,
-                        job.n_k
-                    );
-                    return Ok(ClientOutcome {
-                        uplink: Uplink {
-                            payload: out.payload,
-                            client,
-                            n_k: out.n_k,
-                            mean_loss: out.mean_loss,
-                        },
-                        ef: out.ef,
-                    });
+            }
+            // release every slot the job still holds: on success this
+            // frees the hedge loser immediately (its late answer then
+            // counts as a duplicate); on failure it cleans the routes
+            // up for the next attempt
+            for c in &routes {
+                if c.pending.lock().unwrap().remove(&key).is_some() {
+                    shared.release_slot(c);
                 }
-                Some(Err(died)) => {
-                    let peer = died.peer.clone();
-                    last_err =
-                        Some(anyhow::Error::from(died).context(format!(
-                            "client {client} round {round} via worker \
-                             {peer}"
-                        )));
-                }
-                None => {
-                    last_err = Some(anyhow!(
-                        "client {client} round {round} via worker {}: \
-                         connection reader exited without a result",
-                        conn.peer
-                    ));
-                }
+            }
+            if let Some(out) = winner {
+                ensure!(
+                    out.client as usize == client
+                        && out.round as usize == round,
+                    "worker answered for client {} round {}, \
+                     expected client {client} round {round}",
+                    out.client,
+                    out.round,
+                );
+                ensure!(
+                    out.n_k == job.n_k,
+                    "worker reported n_k {} for client {client}, \
+                     server expected {} — worlds out of sync \
+                     despite matching fingerprints?",
+                    out.n_k,
+                    job.n_k
+                );
+                return Ok(ClientOutcome {
+                    uplink: Uplink {
+                        payload: out.payload,
+                        client,
+                        n_k: out.n_k,
+                        mean_loss: out.mean_loss,
+                    },
+                    ef: out.ef,
+                });
+            }
+            if last_err.is_none() {
+                last_err = Some(anyhow!(
+                    "client {client} round {round} via worker {}: \
+                     connection reader exited without a result",
+                    conn.peer
+                ));
             }
         }
         Err(last_err
@@ -832,5 +1459,156 @@ impl Transport for SocketTransport {
                 "client {client} round {round}: re-dispatch budget \
                  ({MAX_DISPATCH_ATTEMPTS} attempts) exhausted"
             )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn socket_cfg_derives_heartbeat_from_timeout() {
+        // the satellite-4 regression: small --net-timeout-ms values
+        // must yield a probe interval below the deadline, not a
+        // startup failure
+        let cfg = SocketCfg::new(Duration::from_millis(800));
+        assert_eq!(cfg.heartbeat, Duration::from_millis(200));
+        let cfg = SocketCfg::new(Duration::from_millis(1000));
+        assert_eq!(cfg.heartbeat, Duration::from_millis(250));
+        // large timeouts keep the historical 1 s probe cadence
+        let cfg = SocketCfg::new(Duration::from_secs(30));
+        assert_eq!(cfg.heartbeat, Duration::from_millis(1000));
+        // every derived config satisfies the accept_workers invariant
+        for ms in [1u64, 2, 500, 999, 1000, 1001, 30_000] {
+            let cfg = SocketCfg::new(Duration::from_millis(ms));
+            assert!(
+                cfg.heartbeat.is_zero() || cfg.heartbeat < cfg.io_timeout,
+                "invariant violated at {ms}ms"
+            );
+        }
+    }
+
+    #[test]
+    fn inflight_parses_fixed_and_adaptive() {
+        assert_eq!(Inflight::from_str("4"), Ok(Inflight::Fixed(4)));
+        assert_eq!(Inflight::from_str("1"), Ok(Inflight::Fixed(1)));
+        assert_eq!(
+            Inflight::from_str("adaptive"),
+            Ok(Inflight::Adaptive)
+        );
+        assert_eq!(Inflight::from_str("auto"), Ok(Inflight::Adaptive));
+        assert!(Inflight::from_str("0").is_err());
+        assert!(Inflight::from_str("-1").is_err());
+        assert!(Inflight::from_str("fast").is_err());
+        assert_eq!(Inflight::Fixed(7).to_string(), "7");
+        assert_eq!(Inflight::Adaptive.to_string(), "adaptive");
+        assert_eq!(Inflight::Adaptive.initial_window(), 1);
+        assert_eq!(Inflight::Fixed(3).exec_threads(), 3);
+    }
+
+    #[test]
+    fn adaptive_window_grows_and_halves() {
+        let window = AtomicUsize::new(1);
+        let ewma = AtomicU64::new(0);
+        let grown = AtomicU64::new(0);
+        // steady latency: additive growth, one slot per window-full
+        for _ in 0..200 {
+            adapt_window(
+                &window,
+                &ewma,
+                &grown,
+                Duration::from_millis(10),
+            );
+        }
+        let grown_to = window.load(Ordering::SeqCst);
+        assert!(
+            grown_to > 1,
+            "steady outcomes never grew the window"
+        );
+        assert!(grown_to <= ADAPTIVE_MAX_WINDOW);
+        // a big spike halves it
+        adapt_window(&window, &ewma, &grown, Duration::from_secs(5));
+        let after = window.load(Ordering::SeqCst);
+        assert_eq!(after, (grown_to / 2).max(1));
+        // and the cap holds under unbounded steady traffic
+        for _ in 0..10_000 {
+            adapt_window(
+                &window,
+                &ewma,
+                &grown,
+                Duration::from_millis(10),
+            );
+        }
+        assert!(window.load(Ordering::SeqCst) <= ADAPTIVE_MAX_WINDOW);
+    }
+
+    /// The satellite-3 regression: hammer acquire/release from many
+    /// threads and assert a returned connection is never over its
+    /// window. The old double-load pick could exceed it under a
+    /// racing free/acquire.
+    #[test]
+    fn acquire_never_exceeds_window_under_contention() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let window = 2usize;
+        let cfg = SocketCfg {
+            io_timeout: Duration::from_secs(5),
+            heartbeat: Duration::ZERO,
+            inflight: Inflight::Fixed(window),
+            hedge: Duration::ZERO,
+        };
+        let shared = Arc::new(Shared {
+            cfg,
+            hello: Hello {
+                fingerprint: 1,
+                dim: 1,
+                model: "hammer".into(),
+                auth: 0,
+            },
+            conns: Mutex::new(Vec::new()),
+            slots: Condvar::new(),
+            next_conn_id: AtomicU64::new(0),
+            next_nonce: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            bytes_sent: AtomicU64::new(0),
+            bytes_received: AtomicU64::new(0),
+            duplicate_outcomes: AtomicU64::new(0),
+            duplicate_outcome_bytes: AtomicU64::new(0),
+            heartbeats_sent: AtomicU64::new(0),
+            requeues: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_bytes: AtomicU64::new(0),
+            threads: Mutex::new(Vec::new()),
+        });
+        let mut keep = Vec::new(); // client halves keep sockets open
+        for id in 0..3u64 {
+            keep.push(TcpStream::connect(addr).unwrap());
+            let (s, peer) = listener.accept().unwrap();
+            let conn =
+                Arc::new(new_conn(&shared, id, peer.to_string(), s));
+            shared.conns.lock().unwrap().push(conn);
+        }
+        let violations = AtomicU64::new(0);
+        thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..2_000 {
+                        let c = shared.acquire().unwrap();
+                        let load = c.in_flight.load(Ordering::SeqCst);
+                        let cap = c.window.load(Ordering::SeqCst);
+                        if load > cap {
+                            violations.fetch_add(1, Ordering::Relaxed);
+                        }
+                        shared.release_slot(&c);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            violations.load(Ordering::Relaxed),
+            0,
+            "acquire handed out slots past the window"
+        );
     }
 }

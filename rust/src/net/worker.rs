@@ -95,9 +95,13 @@ pub struct ServeOpts {
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
+        let idle_deadline = Duration::from_secs(30);
         ServeOpts {
-            heartbeat: Duration::from_millis(1000),
-            idle_deadline: Duration::from_secs(30),
+            // derived (min(1 s, deadline/4)) like the server side, so
+            // the probe-before-deadline invariant holds for any
+            // deadline override
+            heartbeat: Liveness::default_heartbeat(idle_deadline),
+            idle_deadline,
             exec_threads: 1,
         }
     }

@@ -53,8 +53,8 @@ use fedfp8::fp8::rng::Pcg32;
 use fedfp8::net::frame::FrameKind;
 use fedfp8::net::worker::WorkerCtx;
 use fedfp8::net::{
-    self, codec, frame, Hello, OutcomeCache, ServeOpts, SocketCfg,
-    WireJob,
+    self, codec, frame, Hello, Inflight, OutcomeCache, ServeOpts,
+    SocketCfg, WireJob,
 };
 use fedfp8::runtime::Engine;
 
@@ -169,6 +169,9 @@ fn spawn_proxy<'s>(
 struct ChaosStats {
     requeues: u64,
     duplicates: u64,
+    duplicate_bytes: u64,
+    hedges: u64,
+    bytes_received: u64,
     live_at_end: usize,
 }
 
@@ -183,6 +186,22 @@ fn run_chaos(
     faults: &[Fault],
     hb_ms: u64,
     io_ms: u64,
+) -> (Trace, ChaosStats) {
+    run_chaos_hedged(tag, parallelism, inflight, faults, hb_ms, io_ms, 0)
+}
+
+/// `run_chaos` with the server's hedge timer armed (`hedge_ms > 0`
+/// duplicates a straggler's job onto a second worker after that long
+/// unanswered).
+#[allow(clippy::too_many_arguments)]
+fn run_chaos_hedged(
+    tag: &str,
+    parallelism: usize,
+    inflight: usize,
+    faults: &[Fault],
+    hb_ms: u64,
+    io_ms: u64,
+    hedge_ms: u64,
 ) -> (Trace, ChaosStats) {
     let (dir, manifest) = mock_manifest(tag);
     let engine = Engine::new(&dir).unwrap();
@@ -256,7 +275,8 @@ fn run_chaos(
             SocketCfg {
                 io_timeout: Duration::from_millis(io_ms),
                 heartbeat: Duration::from_millis(hb_ms),
-                inflight,
+                inflight: Inflight::Fixed(inflight),
+                hedge: Duration::from_millis(hedge_ms),
             },
         )
         .expect("server handshake");
@@ -272,9 +292,23 @@ fn run_chaos(
             losses.push(server.round(t).unwrap().to_bits());
         }
         let trace = Trace::capture(&server, losses);
+        if hedge_ms > 0 {
+            // give the last round's hedge losers time to land, so the
+            // duplicate counters below are settled before capture
+            let wait = Instant::now() + Duration::from_secs(5);
+            while transport.hedges() > 0
+                && transport.duplicate_outcomes() == 0
+                && Instant::now() < wait
+            {
+                thread::sleep(Duration::from_millis(20));
+            }
+        }
         let stats = ChaosStats {
             requeues: transport.requeues(),
             duplicates: transport.duplicate_outcomes(),
+            duplicate_bytes: transport.duplicate_outcome_bytes(),
+            hedges: transport.hedges(),
+            bytes_received: transport.bytes_received(),
             live_at_end: transport.live_workers(),
         };
         drop(server);
@@ -303,6 +337,13 @@ fn mid_round_disconnect_requeues_and_stays_bit_identical() {
     assert!(
         stats.requeues >= 1,
         "the swallowed job was never re-dispatched"
+    );
+    // reported-vs-framed uplink identity under faults: only matched
+    // outcomes count, so re-dispatch must not skew the headline
+    // communication metric
+    assert_eq!(
+        stats.bytes_received, trace.comm.up_bytes,
+        "re-dispatch skewed the reported uplink bytes"
     );
 }
 
@@ -339,6 +380,54 @@ fn duplicated_outcomes_are_ignored_and_counted() {
     assert!(
         stats.duplicates >= 1,
         "duplicated outcome frames were not detected"
+    );
+    // the satellite fix: duplicate frames land in their OWN byte
+    // counter, and the reported uplink stays identical to the frames
+    // that were actually aggregated — duplication must not inflate
+    // the paper's headline communication metric
+    assert!(
+        stats.duplicate_bytes > 0,
+        "dropped duplicates were not byte-accounted"
+    );
+    assert_eq!(
+        stats.bytes_received, trace.comm.up_bytes,
+        "duplicate outcomes inflated the reported uplink bytes"
+    );
+}
+
+#[test]
+fn hedged_dispatch_races_a_straggler_and_aggregates_once() {
+    // worker 0's link delays every frame 400 ms; with a 150 ms hedge
+    // timer the server must duplicate the straggling job onto the
+    // healthy worker BEFORE any deadline. Both answers eventually
+    // arrive (they are bit-identical by the determinism contract);
+    // exactly one is aggregated, the loser is counted a duplicate,
+    // and the trajectory matches in-process exactly.
+    let base = run_mock(4, false);
+    let (trace, stats) = run_chaos_hedged(
+        "hedge",
+        4,
+        2,
+        &[Fault::Delay(400), Fault::Direct],
+        500,
+        8_000,
+        150,
+    );
+    assert_eq!(trace, base, "hedging changed the trajectory");
+    assert!(
+        stats.hedges >= 1,
+        "the straggler was never hedged (hedge timer never fired)"
+    );
+    assert!(
+        stats.duplicates >= 1,
+        "the hedge loser's answer was never observed as a duplicate"
+    );
+    assert_eq!(stats.requeues, 0, "hedging is not failure re-dispatch");
+    // matched-exactly-once: however the two answers race, the
+    // reported uplink equals the aggregated outcomes alone
+    assert_eq!(
+        stats.bytes_received, trace.comm.up_bytes,
+        "hedge duplicates leaked into the reported uplink bytes"
     );
 }
 
@@ -452,7 +541,8 @@ fn stalled_worker_is_detected_and_work_requeued() {
             SocketCfg {
                 io_timeout: Duration::from_millis(700),
                 heartbeat: Duration::from_millis(150),
-                inflight: 2,
+                inflight: Inflight::Fixed(2),
+                hedge: Duration::ZERO,
             },
         )
         .expect("server handshake");
@@ -499,7 +589,8 @@ fn lone_stalled_worker_fails_typed_with_client_named() {
             SocketCfg {
                 io_timeout: Duration::from_millis(500),
                 heartbeat: Duration::from_millis(100),
-                inflight: 2,
+                inflight: Inflight::Fixed(2),
+                hedge: Duration::ZERO,
             },
         )
         .expect("handshake");
@@ -521,6 +612,78 @@ fn lone_stalled_worker_fails_typed_with_client_named() {
         msg.contains("heartbeat lost") && msg.contains("timed out"),
         "not a typed heartbeat-loss error: {msg}"
     );
+}
+
+#[test]
+fn stalled_half_connector_does_not_delay_a_healthy_replacement() {
+    // the acceptor head-of-line regression: a connector that opens a
+    // socket but never sends its Hello used to pin the acceptor in a
+    // blocking handshake for up to io_timeout, stalling every other
+    // rejoin behind it. Under the poll loop, half-open handshakes
+    // just sit in a table — a healthy replacement arriving AFTER the
+    // stall must still join immediately.
+    let cfg = mock_cfg(1, false);
+    let hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let io_timeout = Duration::from_secs(4);
+    thread::scope(|s| {
+        // initial worker: handshake, then idle holding the socket
+        let (addr_ref, hello_ref) = (&addr, &hello);
+        s.spawn(move || {
+            let stream = net::connect(
+                addr_ref,
+                hello_ref,
+                Duration::from_secs(10),
+            )
+            .expect("initial worker handshake");
+            thread::sleep(Duration::from_secs(6));
+            drop(stream);
+        });
+        let transport = net::accept_workers(
+            listener,
+            1,
+            &hello,
+            SocketCfg {
+                io_timeout,
+                heartbeat: Duration::ZERO,
+                inflight: Inflight::Fixed(1),
+                hedge: Duration::ZERO,
+            },
+        )
+        .expect("server handshake");
+        // the stall: a raw socket that never sends its Hello
+        let half_open = TcpStream::connect(&addr).unwrap();
+        thread::sleep(Duration::from_millis(200));
+        // the healthy replacement, arriving BEHIND the stall
+        let started = Instant::now();
+        let replacement = net::connect(
+            &addr,
+            &hello,
+            Duration::from_secs(10),
+        )
+        .expect("healthy replacement handshake");
+        let join_latency = started.elapsed();
+        assert!(
+            join_latency < Duration::from_secs(2),
+            "healthy replacement was stalled {join_latency:?} behind \
+             a half-open connector (io_timeout {io_timeout:?})"
+        );
+        // and it really is in the pool
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while transport.live_workers() < 2 && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(
+            transport.live_workers(),
+            2,
+            "replacement never joined the pool"
+        );
+        drop(replacement);
+        drop(half_open);
+        transport.shutdown();
+    });
 }
 
 // ---- worker-side partition detection -------------------------------
@@ -548,7 +711,7 @@ fn worker_detects_a_silent_server_partition() {
             let f = frame::read_frame(&mut conn).expect("hello");
             assert_eq!(f.kind, FrameKind::Hello);
             let mut ack = Vec::new();
-            codec::encode_hello_ack(hello.fingerprint, &mut ack);
+            codec::encode_hello_ack(hello.fingerprint, hello.auth, &mut ack);
             frame::write_frame(&mut conn, FrameKind::HelloAck, &ack)
                 .unwrap();
             // hold the socket open, say nothing
@@ -698,7 +861,7 @@ fn reconnect_serves_cached_bit_identical_outcome() {
             let h = codec::decode_hello(&f.body).unwrap();
             assert_eq!(h.fingerprint, fingerprint);
             let mut ack = Vec::new();
-            codec::encode_hello_ack(fingerprint, &mut ack);
+            codec::encode_hello_ack(fingerprint, 0, &mut ack);
             frame::write_frame(&mut conn, FrameKind::HelloAck, &ack)
                 .unwrap();
             frame::write_frame(&mut conn, FrameKind::Job, &job_body)
@@ -750,32 +913,42 @@ fn soak_multi_worker_forced_kills() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(60);
+    // nightly runs the soak with hedging armed (FEDFP8_SOAK_HEDGE_MS)
+    // so the kill/rejoin schedule also races the hedge timer against
+    // connection failures; 0 keeps the historical no-hedge soak
+    let hedge_ms: u64 = std::env::var("FEDFP8_SOAK_HEDGE_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
     let deadline = Instant::now() + Duration::from_secs(secs);
     let base = run_mock(4, false);
     let mut iters = 0u64;
     let mut requeues = 0u64;
+    let mut hedges = 0u64;
     while Instant::now() < deadline {
         let cut = (iters as usize % 3) + 1;
         let window = [1usize, 2, 4][iters as usize % 3];
-        let (trace, stats) = run_chaos(
+        let (trace, stats) = run_chaos_hedged(
             &format!("soak{iters}"),
             4,
             window,
             &[Fault::CutAtJob(cut), Fault::Direct, Fault::Direct],
             250,
             5_000,
+            hedge_ms,
         );
         assert_eq!(
             trace, base,
-            "soak iteration {iters} (cut={cut}, window={window}) \
-             diverged"
+            "soak iteration {iters} (cut={cut}, window={window}, \
+             hedge={hedge_ms}ms) diverged"
         );
         requeues += stats.requeues;
+        hedges += stats.hedges;
         iters += 1;
     }
     println!(
-        "soak: {iters} iterations, {requeues} re-dispatches, all \
-         bit-identical"
+        "soak: {iters} iterations, {requeues} re-dispatches, \
+         {hedges} hedges, all bit-identical"
     );
     assert!(iters >= 1, "soak never completed an iteration");
     // sanity: the schedule actually exercised the failover path

@@ -36,7 +36,9 @@ use fedfp8::config::ExperimentConfig;
 use fedfp8::coordinator::{build_world, Server};
 use fedfp8::net::frame::FrameKind;
 use fedfp8::net::worker::WorkerCtx;
-use fedfp8::net::{self, frame, Hello, OutcomeCache, ServeOpts, SocketCfg};
+use fedfp8::net::{
+    self, frame, Hello, Inflight, OutcomeCache, ServeOpts, SocketCfg,
+};
 use fedfp8::runtime::Engine;
 
 fn hello_for(cfg: &ExperimentConfig) -> Hello {
@@ -51,17 +53,18 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
 /// Loopback tuning: long deadlines (nothing should ever hit them)
 /// and probing off on both sides, so a clean run carries zero
 /// heartbeat traffic to race the shutdown.
-fn quiet_cfg(inflight: usize) -> (SocketCfg, ServeOpts) {
+fn quiet_cfg(inflight: Inflight) -> (SocketCfg, ServeOpts) {
     (
         SocketCfg {
             io_timeout: Duration::from_secs(20),
             heartbeat: Duration::ZERO,
             inflight,
+            hedge: Duration::ZERO,
         },
         ServeOpts {
             heartbeat: Duration::ZERO,
             idle_deadline: Duration::ZERO,
-            exec_threads: inflight,
+            exec_threads: inflight.exec_threads(),
         },
     )
 }
@@ -71,7 +74,7 @@ fn quiet_cfg(inflight: usize) -> (SocketCfg, ServeOpts) {
 fn run_socket(
     parallelism: usize,
     workers: usize,
-    inflight: usize,
+    inflight: Inflight,
     error_feedback: bool,
 ) -> Trace {
     let tag = format!(
@@ -159,6 +162,14 @@ fn run_socket(
             0,
             "clean run saw duplicate outcomes"
         );
+        // the O(1)-threads guarantee: one poll loop serves every
+        // worker connection — the transport's thread count must not
+        // scale with `workers`
+        assert_eq!(
+            transport.transport_threads(),
+            1,
+            "transport spawned per-connection threads"
+        );
         drop(server);
         transport.shutdown();
         trace
@@ -168,10 +179,10 @@ fn run_socket(
 #[test]
 fn loopback_equals_in_process_at_parallelism_1_and_4() {
     let base1 = run_mock(1, false);
-    let net1 = run_socket(1, 1, 1, false);
+    let net1 = run_socket(1, 1, Inflight::Fixed(1), false);
     assert_eq!(net1, base1, "socket run diverged at parallelism 1");
     let base4 = run_mock(4, false);
-    let net4 = run_socket(4, 4, 1, false);
+    let net4 = run_socket(4, 4, Inflight::Fixed(1), false);
     assert_eq!(net4, base4, "socket run diverged at parallelism 4");
     // and parallelism itself is invisible either way
     assert_eq!(base1.w, base4.w);
@@ -183,7 +194,7 @@ fn loopback_is_deterministic_with_oversubscribed_pool() {
     // 4-way cohort fan-out over only 2 worker connections: checkout
     // contention changes scheduling, never results
     let base = run_mock(4, false);
-    let net = run_socket(4, 2, 1, false);
+    let net = run_socket(4, 2, Inflight::Fixed(1), false);
     assert_eq!(net, base, "oversubscribed pool changed results");
 }
 
@@ -194,11 +205,33 @@ fn loopback_is_deterministic_with_multiplexed_window() {
     // (the mock sleeps later clients less) and the job_id demux +
     // reorder buffer must still deliver bit-identical results
     let base = run_mock(4, false);
-    let net = run_socket(4, 1, 4, false);
+    let net = run_socket(4, 1, Inflight::Fixed(4), false);
     assert_eq!(net, base, "multiplexed window changed results");
     // mixed shape: window 2 over 2 workers
-    let net = run_socket(4, 2, 2, false);
+    let net = run_socket(4, 2, Inflight::Fixed(2), false);
     assert_eq!(net, base, "window-2 x 2-workers changed results");
+}
+
+#[test]
+fn poll_core_is_deterministic_across_window_policies() {
+    // the poll-core determinism matrix: inflight {1, 2, adaptive} x
+    // parallelism {1, 4} over two connections must all be
+    // bit-identical to the in-process run — the adaptive window
+    // changes *scheduling* (it grows per-connection from observed
+    // latency), never results
+    for parallelism in [1usize, 4] {
+        let base = run_mock(parallelism, false);
+        for inflight in
+            [Inflight::Fixed(1), Inflight::Fixed(2), Inflight::Adaptive]
+        {
+            let net = run_socket(parallelism, 2, inflight, false);
+            assert_eq!(
+                net, base,
+                "p={parallelism} inflight={inflight} diverged \
+                 from in-process"
+            );
+        }
+    }
 }
 
 #[test]
@@ -207,12 +240,12 @@ fn loopback_round_trips_error_feedback_residuals() {
     // must still be bit-identical to the in-process run — including
     // through a multiplexed window
     let base = run_mock(4, true);
-    let net = run_socket(4, 4, 1, true);
+    let net = run_socket(4, 4, Inflight::Fixed(1), true);
     assert_eq!(net.w, base.w);
     assert_eq!(net.alpha, base.alpha);
     assert_eq!(net.losses, base.losses);
     assert_eq!(net.comm, base.comm);
-    let net = run_socket(4, 1, 4, true);
+    let net = run_socket(4, 1, Inflight::Fixed(4), true);
     assert_eq!(net.w, base.w, "EF diverged through the window");
     assert_eq!(net.comm, base.comm);
 }
@@ -407,7 +440,8 @@ fn round_error_with_fake_worker(
                 // "silence while a job is pending" deadline
                 io_timeout: timeout,
                 heartbeat: Duration::ZERO,
-                inflight: 1,
+                inflight: Inflight::Fixed(1),
+                hedge: Duration::ZERO,
             },
         )
         .expect("handshake");

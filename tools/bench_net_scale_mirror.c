@@ -1,0 +1,384 @@
+/* C mirror of rust/benches/net_scale.rs — seeds BENCH_net_scale.json
+ * when no Rust toolchain is available.
+ *
+ * Replicates the transport-scaling bench op-for-op: for each fleet
+ * size N, stand up N loopback TCP connections each primed with 64
+ * Outcome-sized frames (16-byte FP8W header — magic, version=2 LE,
+ * kind=4, body len LE, IEEE crc32 of the body LE — plus a 64-byte
+ * body), then drain every frame two ways:
+ *
+ *   - poll:    ONE thread, one epoll instance, N non-blocking
+ *              sockets, a resumable per-connection frame parser
+ *              (header -> body with magic/version/crc validation) —
+ *              the server's event-driven poll-loop data path.
+ *   - threads: N spawned pthreads, each blocking-reading its own
+ *              socket through the same frame walk — the
+ *              thread-per-connection architecture the poll loop
+ *              replaces. Spawn/teardown is inside the timed region,
+ *              exactly as the Rust arm times thread::scope.
+ *
+ * Both arms pay identical setup (connect + prime inside the timed
+ * closure), mirroring the Rust bench, so the delta isolates reader
+ * threads vs one readiness loop. Timing harness is a twin of
+ * rust/src/util/bench.rs::bench (warmup max(budget/5, 10) ms, one
+ * sample per call until the budget elapses with >= 5 samples,
+ * median/p10/p90 at index (len-1)*p).
+ *
+ * Build & run (repo root):
+ *   gcc -O3 -pthread -o /tmp/net_scale_mirror \
+ *       tools/bench_net_scale_mirror.c
+ *   /tmp/net_scale_mirror      # writes BENCH_net_scale.json
+ *
+ * `cargo bench --bench net_scale` overwrites the JSON with native
+ * Rust numbers whenever a Rust toolchain is present.
+ */
+
+#include <arpa/inet.h>
+#include <errno.h>
+#include <fcntl.h>
+#include <netinet/in.h>
+#include <netinet/tcp.h>
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <sys/epoll.h>
+#include <sys/socket.h>
+#include <time.h>
+#include <unistd.h>
+
+#define HDR_BYTES 16
+#define BODY_BYTES 64
+#define FRAME_BYTES (HDR_BYTES + BODY_BYTES)
+#define KIND_OUTCOME 4
+#define WIRE_VERSION 2
+#define MAX_FLEET 128
+
+static const uint8_t MAGIC[4] = {'F', 'P', '8', 'W'};
+
+/* ---- IEEE crc32 (twin of rust/src/net/frame.rs) ------------------- */
+
+static uint32_t CRC_TAB[256];
+
+static void crc_init(void) {
+    for (uint32_t i = 0; i < 256; i++) {
+        uint32_t c = i;
+        for (int k = 0; k < 8; k++)
+            c = (c & 1) ? 0xEDB88320u ^ (c >> 1) : c >> 1;
+        CRC_TAB[i] = c;
+    }
+}
+
+static uint32_t crc32_of(const uint8_t *buf, size_t len) {
+    uint32_t c = 0xFFFFFFFFu;
+    for (size_t i = 0; i < len; i++)
+        c = CRC_TAB[(c ^ buf[i]) & 0xFF] ^ (c >> 8);
+    return ~c;
+}
+
+/* ---- frame priming ------------------------------------------------ */
+
+static uint8_t FRAME[FRAME_BYTES]; /* one encoded Outcome frame */
+
+static void frame_init(void) {
+    uint8_t body[BODY_BYTES];
+    memset(body, 7, sizeof body);
+    memcpy(FRAME, MAGIC, 4);
+    FRAME[4] = WIRE_VERSION & 0xFF;
+    FRAME[5] = (WIRE_VERSION >> 8) & 0xFF;
+    FRAME[6] = KIND_OUTCOME;
+    FRAME[7] = 0;
+    uint32_t len = BODY_BYTES;
+    memcpy(FRAME + 8, &len, 4); /* x86_64: LE, same as to_le_bytes */
+    uint32_t crc = crc32_of(body, BODY_BYTES);
+    memcpy(FRAME + 12, &crc, 4);
+    memcpy(FRAME + HDR_BYTES, body, BODY_BYTES);
+}
+
+static void die(const char *what) {
+    perror(what);
+    exit(1);
+}
+
+/* N primed loopback connections; write ends in wfd[], read ends in
+ * rfd[]. Every read end already holds `frames` complete frames. */
+static void primed_pairs(int n, int frames, int *wfd, int *rfd) {
+    int lfd = socket(AF_INET, SOCK_STREAM, 0);
+    if (lfd < 0) die("socket");
+    struct sockaddr_in addr;
+    memset(&addr, 0, sizeof addr);
+    addr.sin_family = AF_INET;
+    addr.sin_addr.s_addr = htonl(INADDR_LOOPBACK);
+    addr.sin_port = 0;
+    if (bind(lfd, (struct sockaddr *)&addr, sizeof addr) < 0) die("bind");
+    if (listen(lfd, MAX_FLEET) < 0) die("listen");
+    socklen_t alen = sizeof addr;
+    if (getsockname(lfd, (struct sockaddr *)&addr, &alen) < 0)
+        die("getsockname");
+    for (int i = 0; i < n; i++) {
+        int w = socket(AF_INET, SOCK_STREAM, 0);
+        if (w < 0) die("socket");
+        if (connect(w, (struct sockaddr *)&addr, sizeof addr) < 0)
+            die("connect");
+        int one = 1;
+        setsockopt(w, IPPROTO_TCP, TCP_NODELAY, &one, sizeof one);
+        int r = accept(lfd, NULL, NULL);
+        if (r < 0) die("accept");
+        for (int fidx = 0; fidx < frames; fidx++) {
+            size_t off = 0;
+            while (off < FRAME_BYTES) {
+                ssize_t k = write(w, FRAME + off, FRAME_BYTES - off);
+                if (k <= 0) die("prime write");
+                off += (size_t)k;
+            }
+        }
+        wfd[i] = w;
+        rfd[i] = r;
+    }
+    close(lfd);
+}
+
+static void close_pairs(int n, const int *wfd, const int *rfd) {
+    for (int i = 0; i < n; i++) {
+        close(wfd[i]);
+        close(rfd[i]);
+    }
+}
+
+/* Resumable per-connection parser — twin of FrameReader::poll. */
+typedef struct {
+    uint8_t buf[FRAME_BYTES];
+    size_t have;   /* bytes of the current frame accumulated */
+    int got;       /* complete frames consumed */
+} Parser;
+
+static void check_frame(const uint8_t *f) {
+    if (memcmp(f, MAGIC, 4) != 0) {
+        fprintf(stderr, "bad magic\n");
+        exit(1);
+    }
+    uint16_t ver;
+    uint32_t len, crc;
+    memcpy(&ver, f + 4, 2);
+    memcpy(&len, f + 8, 4);
+    memcpy(&crc, f + 12, 4);
+    if (ver != WIRE_VERSION || f[6] != KIND_OUTCOME ||
+        len != BODY_BYTES || crc != crc32_of(f + HDR_BYTES, len)) {
+        fprintf(stderr, "bad frame\n");
+        exit(1);
+    }
+}
+
+/* ---- poll arm: one thread, one epoll, N parsers ------------------- */
+
+static void drain_poll(int n, int frames) {
+    int wfd[MAX_FLEET], rfd[MAX_FLEET];
+    primed_pairs(n, frames, wfd, rfd);
+    int ep = epoll_create1(EPOLL_CLOEXEC);
+    if (ep < 0) die("epoll_create1");
+    Parser ps[MAX_FLEET];
+    memset(ps, 0, sizeof(Parser) * (size_t)n);
+    for (int i = 0; i < n; i++) {
+        int fl = fcntl(rfd[i], F_GETFL, 0);
+        fcntl(rfd[i], F_SETFL, fl | O_NONBLOCK);
+        struct epoll_event ev;
+        ev.events = EPOLLIN | EPOLLRDHUP;
+        ev.data.u64 = (uint64_t)i;
+        if (epoll_ctl(ep, EPOLL_CTL_ADD, rfd[i], &ev) < 0)
+            die("epoll_ctl");
+    }
+    int remaining = n * frames;
+    struct epoll_event evs[64];
+    while (remaining > 0) {
+        int nr = epoll_wait(ep, evs, 64, 10);
+        if (nr < 0) {
+            if (errno == EINTR) continue;
+            die("epoll_wait");
+        }
+        for (int e = 0; e < nr; e++) {
+            int i = (int)evs[e].data.u64;
+            Parser *p = &ps[i];
+            while (p->got < frames) {
+                ssize_t k = read(rfd[i], p->buf + p->have,
+                                 FRAME_BYTES - p->have);
+                if (k < 0) {
+                    if (errno == EAGAIN || errno == EWOULDBLOCK)
+                        break;
+                    die("poll read");
+                }
+                if (k == 0) die("poll eof");
+                p->have += (size_t)k;
+                if (p->have == FRAME_BYTES) {
+                    check_frame(p->buf);
+                    p->have = 0;
+                    p->got++;
+                    remaining--;
+                }
+            }
+        }
+    }
+    close(ep);
+    close_pairs(n, wfd, rfd);
+}
+
+/* ---- thread arm: N blocking readers ------------------------------- */
+
+typedef struct {
+    int fd;
+    int frames;
+} ThreadJob;
+
+static void *reader_main(void *arg) {
+    ThreadJob *job = (ThreadJob *)arg;
+    uint8_t buf[FRAME_BYTES];
+    for (int fidx = 0; fidx < job->frames; fidx++) {
+        size_t off = 0;
+        while (off < FRAME_BYTES) {
+            ssize_t k = read(job->fd, buf + off, FRAME_BYTES - off);
+            if (k <= 0) die("thread read");
+            off += (size_t)k;
+        }
+        check_frame(buf);
+    }
+    return NULL;
+}
+
+static void drain_threads(int n, int frames) {
+    int wfd[MAX_FLEET], rfd[MAX_FLEET];
+    primed_pairs(n, frames, wfd, rfd);
+    pthread_t tids[MAX_FLEET];
+    ThreadJob jobs[MAX_FLEET];
+    for (int i = 0; i < n; i++) {
+        jobs[i].fd = rfd[i];
+        jobs[i].frames = frames;
+        if (pthread_create(&tids[i], NULL, reader_main, &jobs[i]) != 0)
+            die("pthread_create");
+    }
+    for (int i = 0; i < n; i++)
+        pthread_join(tids[i], NULL);
+    close_pairs(n, wfd, rfd);
+}
+
+/* ---- timing harness (twin of rust/src/util/bench.rs) -------------- */
+
+typedef struct {
+    const char *name;
+    uint64_t iters;
+    double median_ns, p10_ns, p90_ns;
+} BenchResult;
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec * 1e9 + (double)ts.tv_nsec;
+}
+
+static int cmp_f64(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static BenchResult run_bench(const char *name, uint64_t budget_ms,
+                             void (*f)(int, int), int n, int frames) {
+    double warm_until =
+        now_ns() + (double)(budget_ms / 5 > 10 ? budget_ms / 5 : 10) * 1e6;
+    while (now_ns() < warm_until)
+        f(n, frames);
+    static double samples[100000];
+    size_t cnt = 0;
+    double run_until = now_ns() + (double)budget_ms * 1e6;
+    while (now_ns() < run_until || cnt < 5) {
+        double t = now_ns();
+        f(n, frames);
+        samples[cnt++] = now_ns() - t;
+        if (cnt >= 100000) break;
+    }
+    qsort(samples, cnt, sizeof(double), cmp_f64);
+    BenchResult r;
+    r.name = name;
+    r.iters = cnt;
+    r.median_ns = samples[(size_t)((double)(cnt - 1) * 0.5)];
+    r.p10_ns = samples[(size_t)((double)(cnt - 1) * 0.1)];
+    r.p90_ns = samples[(size_t)((double)(cnt - 1) * 0.9)];
+    printf("%-44s %10.0f ns %10.0f ns %10.0f ns  (%llu iters)\n",
+           name, r.median_ns, r.p10_ns, r.p90_ns,
+           (unsigned long long)r.iters);
+    return r;
+}
+
+static void emit_result(FILE *f, const BenchResult *r, double items,
+                        int first) {
+    fprintf(f,
+            "%s\n    {\"name\": \"%s\", \"iters\": %llu, "
+            "\"median_ns\": %.1f, \"p10_ns\": %.1f, \"p90_ns\": %.1f, "
+            "\"throughput_per_s\": %.1f}",
+            first ? "" : ",", r->name, (unsigned long long)r->iters,
+            r->median_ns, r->p10_ns, r->p90_ns,
+            items / (r->median_ns * 1e-9));
+}
+
+int main(void) {
+    crc_init();
+    frame_init();
+    const int fleet[] = {8, 32, 128};
+    const int n_fleet = 3;
+    const int frames = 64;
+    const uint64_t budget_ms = 400;
+    char poll_names[3][48], thr_names[3][48];
+    BenchResult poll_r[3], thr_r[3];
+    printf("readiness backend: epoll; %d frames x %d B bodies per "
+           "connection\n\n",
+           frames, BODY_BYTES);
+    for (int i = 0; i < n_fleet; i++) {
+        int n = fleet[i];
+        snprintf(poll_names[i], sizeof poll_names[i],
+                 "net_scale/poll_1thread_n%d", n);
+        snprintf(thr_names[i], sizeof thr_names[i],
+                 "net_scale/threads_n%d", n);
+        poll_r[i] =
+            run_bench(poll_names[i], budget_ms, drain_poll, n, frames);
+        thr_r[i] = run_bench(thr_names[i], budget_ms, drain_threads, n,
+                             frames);
+    }
+
+    FILE *f = fopen("BENCH_net_scale.json", "w");
+    if (!f) die("BENCH_net_scale.json");
+    fprintf(f, "{\n  \"bench\": \"net_scale\",\n");
+    fprintf(f,
+            "  \"provenance\": \"tools/bench_net_scale_mirror.c (gcc "
+            "-O3 -pthread C mirror of rust/benches/net_scale.rs, "
+            "op-for-op: same FP8W frame walk — 16-byte header with "
+            "IEEE crc32 of each 64-byte body — over N primed loopback "
+            "TCP connections, drained by one epoll readiness loop vs "
+            "one blocking reader thread per connection, with "
+            "connection setup and thread spawn inside the timed "
+            "region on both arms exactly as the Rust bench times "
+            "them; build container lacks a Rust toolchain). The C "
+            "parser resumes partial frames like FrameReader but skips "
+            "Rust's enum/Vec materialization, so absolute latencies "
+            "understate both arms equally while the poll-vs-threads "
+            "scaling ratio transfers. Regenerate natively with `cargo "
+            "bench --bench net_scale`.\",\n");
+    fprintf(f,
+            "  \"config\": {\"backend\": \"epoll\", "
+            "\"frames_per_conn\": \"%d\", \"body_bytes\": \"%d\", "
+            "\"fleet_sizes\": \"[%d, %d, %d]\"},\n",
+            frames, BODY_BYTES, fleet[0], fleet[1], fleet[2]);
+    fprintf(f, "  \"results\": [");
+    for (int i = 0; i < n_fleet; i++) {
+        double items = (double)fleet[i] * frames;
+        emit_result(f, &poll_r[i], items, i == 0);
+        emit_result(f, &thr_r[i], items, 0);
+    }
+    fprintf(f, "\n  ],\n  \"speedups\": {\n");
+    for (int i = 0; i < n_fleet; i++) {
+        fprintf(f, "    \"poll_over_threads_n%d\": %.3f%s\n", fleet[i],
+                thr_r[i].median_ns / poll_r[i].median_ns,
+                i + 1 < n_fleet ? "," : "");
+    }
+    fprintf(f, "  }\n}\n");
+    fclose(f);
+    printf("\nwrote BENCH_net_scale.json\n");
+    return 0;
+}
