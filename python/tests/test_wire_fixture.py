@@ -28,6 +28,9 @@ FIXTURE_V1 = os.path.join(
 EDGE_FIXTURE = os.path.join(
     REPO, "rust", "tests", "fixtures", "fp8_edges_v1.json"
 )
+SNAP_FIXTURE_V2 = os.path.join(
+    REPO, "rust", "tests", "fixtures", "snapshot_v2.bin"
+)
 SNAP_FIXTURE_V1 = os.path.join(
     REPO, "rust", "tests", "fixtures", "snapshot_v1.bin"
 )
@@ -164,16 +167,16 @@ def test_overhead_constants(mirror):
 
 @pytest.fixture(scope="module")
 def snap_bytes():
-    with open(SNAP_FIXTURE_V1, "rb") as f:
+    with open(SNAP_FIXTURE_V2, "rb") as f:
         return f.read()
 
 
 def test_snapshot_fixture_matches_mirror(mirror, snap_bytes):
-    """snapshot_v1.bin must equal a fresh mirror encode of the
+    """snapshot_v2.bin must equal a fresh mirror encode of the
     canonical state (the Rust side pins the same bytes against its
     encoder/decoder in rust/tests/golden_snapshot.rs)."""
     assert snap_bytes == mirror.golden_snapshot(), (
-        "snapshot_v1.bin no longer matches the spec mirror — "
+        "snapshot_v2.bin no longer matches the spec mirror — "
         "regenerate with tools/gen_wire_fixture.py ONLY alongside a "
         "SNAPSHOT_VERSION bump (as snapshot_v<N>.bin, keeping older "
         "fixtures committed)"
@@ -185,28 +188,46 @@ def test_snapshot_fixture_envelope_is_well_formed(mirror, snap_bytes):
         "<4sHHII", snap_bytes
     )
     assert magic == mirror.SNAP_MAGIC == b"FP8S"
-    assert version == mirror.SNAP_VERSION == 1
+    assert version == mirror.SNAP_VERSION == 2
     assert reserved == 0
     body = snap_bytes[mirror.SNAP_HEADER_BYTES:]
     assert len(body) == body_len
     assert zlib.crc32(body) & 0xFFFFFFFF == crc
-    # body opens with the fingerprint gate and the resume round
+    # body opens with the fingerprint gate and the resume round, and
+    # (since v2) closes with the cumulative wall clock
     fp, next_round = struct.unpack_from("<QQ", body)
     assert fp == mirror.CANON_SNAP["fingerprint"]
     assert next_round == mirror.CANON_SNAP["next_round"]
+    wall = struct.unpack("<Q", body[-8:])[0]
+    assert wall == mirror.CANON_SNAP["wall_millis"]
+
+
+def test_snapshot_frozen_v1_fixture_matches_frozen_mirror(mirror):
+    """snapshot_v1.bin is a version-skew probe now: a v2 build must
+    reject it with the typed VersionMismatch (pinned on the Rust
+    side), so its bytes must never drift."""
+    with open(SNAP_FIXTURE_V1, "rb") as f:
+        v1 = f.read()
+    assert v1 == mirror.golden_snapshot_v1(), (
+        "snapshot_v1.bin drifted — the frozen v1 fixture must stay "
+        "byte-identical forever"
+    )
+    assert struct.unpack_from("<H", v1, 4)[0] == 1
+    # the v2 body is the v1 body plus a trailing wall_millis u64
+    assert len(mirror.golden_snapshot()) == len(v1) + 8
 
 
 def test_snapshot_v0_fixture_is_the_must_fail_version_skew(
     mirror,
 ):
-    """snapshot_v0.bin differs from v1 ONLY in the version field (the
-    body and its crc are valid), so the only way a reader can reject
-    it is the version gate itself."""
+    """snapshot_v0.bin differs from the frozen v1 ONLY in the version
+    field (the body and its crc are valid), so the only way a reader
+    can reject it is the version gate itself."""
     with open(SNAP_FIXTURE_V0, "rb") as f:
         v0 = f.read()
     assert v0 == mirror.golden_snapshot_v0()
     assert struct.unpack_from("<H", v0, 4)[0] == 0
-    v1 = mirror.golden_snapshot()
+    v1 = mirror.golden_snapshot_v1()
     assert v0[:4] == v1[:4] and v0[6:] == v1[6:]
 
 

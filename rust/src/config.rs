@@ -14,6 +14,7 @@ use crate::fp8::simd::KernelKind;
 use crate::fp8::Rounding;
 use crate::net::Inflight;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum SplitCfg {
@@ -161,6 +162,20 @@ pub enum ConfigError {
     /// durable round state (workers are stateless between jobs save
     /// for their reconnect outcome cache).
     SnapshotOnWorker { flag: &'static str },
+    /// A daemon knob (`--queue-dir`, `--daemon-slots`) without
+    /// `--role daemon`: a forgotten role must not silently degrade a
+    /// daemon launch into a plain local run.
+    DaemonFlagWithoutRole { flag: &'static str },
+    /// `--role daemon` without `--queue-dir`: a scheduler with no
+    /// queue directory has nothing to run.
+    DaemonWithoutQueueDir,
+    /// `--daemon-slots 0` would never start a job; asking for a
+    /// scheduler that never schedules must not parse.
+    DaemonSlotsZero,
+    /// `--telemetry-listen` on `--role worker`: only processes that
+    /// drive the round loop (local runs, the coordinator, the daemon)
+    /// emit round/run events.
+    TelemetryOnWorker,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -223,6 +238,34 @@ impl std::fmt::Display for ConfigError {
                     f,
                     "--{flag} only applies to the coordinator; \
                      --role worker holds no durable round state"
+                )
+            }
+            ConfigError::DaemonFlagWithoutRole { flag } => {
+                write!(
+                    f,
+                    "--{flag} only makes sense with --role daemon"
+                )
+            }
+            ConfigError::DaemonWithoutQueueDir => {
+                write!(
+                    f,
+                    "--role daemon requires --queue-dir DIR (no job \
+                     queue to schedule)"
+                )
+            }
+            ConfigError::DaemonSlotsZero => {
+                write!(
+                    f,
+                    "--daemon-slots must be at least 1 (0 would \
+                     never start a job)"
+                )
+            }
+            ConfigError::TelemetryOnWorker => {
+                write!(
+                    f,
+                    "--telemetry-listen only applies to processes \
+                     that drive the round loop; --role worker never \
+                     emits telemetry"
                 )
             }
         }
@@ -586,6 +629,266 @@ impl ExperimentConfig {
         }
         h
     }
+
+    /// Serialize to the canonical JSON object the daemon job queue
+    /// consumes (`daemon::queue`). Exhaustive destructure, mirroring
+    /// [`fingerprint`](Self::fingerprint): adding a config field
+    /// without deciding its JSON encoding is a compile error.
+    ///
+    /// f32 fields survive the trip bit-exactly: the serializer prints
+    /// the shortest f64 roundtrip, and every f32 widens to f64
+    /// losslessly. The seed is a JSON number while it is exactly
+    /// representable as an f64 integer (< 2^53) and a decimal string
+    /// beyond that; [`from_json`](Self::from_json) accepts both.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+
+        let ExperimentConfig {
+            name,
+            model,
+            split,
+            clients,
+            participation,
+            rounds,
+            lr,
+            weight_decay,
+            schedule,
+            qat,
+            comm,
+            server_opt,
+            eval_every,
+            seed,
+            n_train,
+            n_test,
+            speakers,
+            flip_aug,
+            error_feedback,
+            fp32_client_frac,
+            parallelism,
+            fp8_kernel,
+            agg,
+        } = self;
+        let num = |n: usize| Json::Num(n as f64);
+        let split = match split {
+            SplitCfg::Iid => Json::Str("iid".into()),
+            SplitCfg::Speaker => Json::Str("speaker".into()),
+            SplitCfg::Dirichlet(c) => Json::Obj(BTreeMap::from([(
+                "dirichlet".to_string(),
+                Json::Num(*c),
+            )])),
+        };
+        let schedule = match schedule {
+            LrSchedule::Const => Json::Str("const".into()),
+            LrSchedule::Cosine { final_frac } => {
+                Json::Obj(BTreeMap::from([(
+                    "cosine_final_frac".to_string(),
+                    Json::Num(*final_frac as f64),
+                )]))
+            }
+        };
+        let qat = Json::Str(qat.artifact_suffix().into());
+        let comm = Json::Str(
+            match comm {
+                Rounding::Stochastic => "stochastic",
+                Rounding::Deterministic => "deterministic",
+                Rounding::None => "none",
+            }
+            .into(),
+        );
+        let server_opt = match server_opt {
+            None => Json::Null,
+            Some(s) => Json::Obj(BTreeMap::from([
+                ("gd_steps".to_string(), num(s.gd_steps)),
+                ("gd_lr".to_string(), Json::Num(s.gd_lr as f64)),
+                ("grid_points".to_string(), num(s.grid_points)),
+            ])),
+        };
+        let seed = if *seed < (1u64 << 53) {
+            Json::Num(*seed as f64)
+        } else {
+            Json::Str(seed.to_string())
+        };
+        let mut m = BTreeMap::new();
+        for (k, v) in [
+            ("name", Json::Str(name.clone())),
+            ("model", Json::Str(model.clone())),
+            ("split", split),
+            ("clients", num(*clients)),
+            ("participation", num(*participation)),
+            ("rounds", num(*rounds)),
+            ("lr", Json::Num(*lr as f64)),
+            ("weight_decay", Json::Num(*weight_decay as f64)),
+            ("schedule", schedule),
+            ("qat", qat),
+            ("comm", comm),
+            ("server_opt", server_opt),
+            ("eval_every", num(*eval_every)),
+            ("seed", seed),
+            ("n_train", num(*n_train)),
+            ("n_test", num(*n_test)),
+            ("speakers", num(*speakers)),
+            ("flip_aug", Json::Bool(*flip_aug)),
+            ("error_feedback", Json::Bool(*error_feedback)),
+            (
+                "fp32_client_frac",
+                Json::Num(*fp32_client_frac as f64),
+            ),
+            ("parallelism", num(*parallelism)),
+            ("fp8_kernel", Json::Str(fp8_kernel.to_string())),
+            ("agg", Json::Str(agg.to_string())),
+        ] {
+            m.insert(k.to_string(), v);
+        }
+        Json::Obj(m)
+    }
+
+    /// Build a config from a JSON job spec. Only `model` is required:
+    /// the spec starts from [`base`](Self::base) (optionally routed
+    /// through [`with_method`](Self::with_method) when a `method` key
+    /// is present), then every present field overrides the default —
+    /// so a hand-written three-line spec and a full
+    /// [`to_json`](Self::to_json) dump both parse, and the result is
+    /// always [`validate`](Self::validate)d.
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let model = v
+            .get("model")
+            .context("job spec: missing 'model'")?
+            .as_str()?;
+        let mut c = ExperimentConfig::base(model)?;
+        if let Some(m) = v.opt("method") {
+            c = c.with_method(m.as_str()?)?;
+        }
+        if let Some(s) = v.opt("split") {
+            c.split = match s {
+                Json::Str(t) if t == "iid" => SplitCfg::Iid,
+                Json::Str(t) if t == "speaker" => SplitCfg::Speaker,
+                Json::Obj(_) => SplitCfg::Dirichlet(
+                    s.get("dirichlet")?.as_f64()?,
+                ),
+                _ => bail!(
+                    "bad 'split' (\"iid\" | \"speaker\" | \
+                     {{\"dirichlet\": c}})"
+                ),
+            };
+        }
+        for (key, slot) in [
+            ("clients", &mut c.clients),
+            ("participation", &mut c.participation),
+            ("rounds", &mut c.rounds),
+            ("eval_every", &mut c.eval_every),
+            ("n_train", &mut c.n_train),
+            ("n_test", &mut c.n_test),
+            ("speakers", &mut c.speakers),
+            ("parallelism", &mut c.parallelism),
+        ] {
+            if let Some(n) = v.opt(key) {
+                *slot = n
+                    .as_usize()
+                    .with_context(|| format!("job spec: '{key}'"))?;
+            }
+        }
+        for (key, slot) in [
+            ("lr", &mut c.lr),
+            ("weight_decay", &mut c.weight_decay),
+            ("fp32_client_frac", &mut c.fp32_client_frac),
+        ] {
+            if let Some(n) = v.opt(key) {
+                *slot = n
+                    .as_f64()
+                    .with_context(|| format!("job spec: '{key}'"))?
+                    as f32;
+            }
+        }
+        for (key, slot) in [
+            ("flip_aug", &mut c.flip_aug),
+            ("error_feedback", &mut c.error_feedback),
+        ] {
+            if let Some(b) = v.opt(key) {
+                *slot = b
+                    .as_bool()
+                    .with_context(|| format!("job spec: '{key}'"))?;
+            }
+        }
+        if let Some(s) = v.opt("schedule") {
+            c.schedule = match s {
+                Json::Str(t) if t == "const" => LrSchedule::Const,
+                Json::Obj(_) => LrSchedule::Cosine {
+                    final_frac: s.get("cosine_final_frac")?.as_f64()?
+                        as f32,
+                },
+                _ => bail!(
+                    "bad 'schedule' (\"const\" | \
+                     {{\"cosine_final_frac\": f}})"
+                ),
+            };
+        }
+        if let Some(q) = v.opt("qat") {
+            c.qat = match q.as_str()? {
+                "det" => QatMode::Det,
+                "rand" => QatMode::Rand,
+                "none" => QatMode::None,
+                other => {
+                    bail!("bad 'qat' '{other}' (det|rand|none)")
+                }
+            };
+        }
+        if let Some(q) = v.opt("comm") {
+            c.comm = match q.as_str()? {
+                "stochastic" => Rounding::Stochastic,
+                "deterministic" => Rounding::Deterministic,
+                "none" => Rounding::None,
+                other => bail!(
+                    "bad 'comm' '{other}' \
+                     (stochastic|deterministic|none)"
+                ),
+            };
+        }
+        // `opt` filters Null, so an explicit `"server_opt": null`
+        // keeps the default (None unless a method arm set it)
+        if let Some(s) = v.opt("server_opt") {
+            c.server_opt = Some(ServerOptCfg {
+                gd_steps: s.get("gd_steps")?.as_usize()?,
+                gd_lr: s.get("gd_lr")?.as_f64()? as f32,
+                grid_points: s.get("grid_points")?.as_usize()?,
+            });
+        }
+        if let Some(s) = v.opt("seed") {
+            c.seed = match s {
+                Json::Num(n)
+                    if *n >= 0.0
+                        && n.fract() == 0.0
+                        && *n < (1u64 << 53) as f64 =>
+                {
+                    *n as u64
+                }
+                Json::Str(t) => t
+                    .parse::<u64>()
+                    .context("job spec: 'seed' string")?,
+                _ => bail!(
+                    "bad 'seed' (non-negative integer, or a decimal \
+                     string for values at or above 2^53)"
+                ),
+            };
+        }
+        if let Some(k) = v.opt("fp8_kernel") {
+            c.fp8_kernel = k
+                .as_str()?
+                .parse::<KernelKind>()
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(a) = v.opt("agg") {
+            c.agg = a.as_str()?.parse::<AggMode>()?;
+        }
+        if let Some(n) = v.opt("name") {
+            c.name = n.as_str()?.to_string();
+        } else if c.name.is_empty() {
+            // hand-written specs without a method arm still need a
+            // job label for telemetry events
+            c.name = model.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
 }
 
 /// Which end of the networked transport this process plays.
@@ -824,6 +1127,107 @@ impl SnapshotCfg {
         }
         Ok(SnapshotCfg { dir, every, resume })
     }
+}
+
+/// Run-scheduler daemon settings (`--role daemon --queue-dir D
+/// [--daemon-slots N]`).
+///
+/// Like [`SnapshotCfg`], deliberately *not* part of
+/// [`ExperimentConfig`]: where job specs live and how many run at
+/// once are operational knobs that must never move the config
+/// fingerprint of the jobs being scheduled.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DaemonCfg {
+    /// Directory scanned for `*.job.json` specs; per-job state files
+    /// live next to them.
+    pub queue_dir: PathBuf,
+    /// Concurrent job slots (default 1 = strictly sequential, in
+    /// filename order).
+    pub slots: usize,
+}
+
+impl DaemonCfg {
+    /// Parse the daemon flags; `Ok(None)` means no daemon role was
+    /// requested. Daemon knobs without `--role daemon` are typed
+    /// [`ConfigError`]s (the snapshot-flag orphan-guard idiom), so a
+    /// forgotten role cannot silently degrade a daemon launch into a
+    /// plain local run.
+    pub fn from_args(args: &Args) -> Result<Option<DaemonCfg>> {
+        if args.get("role") != Some("daemon") {
+            for flag in ["queue-dir", "daemon-slots"] {
+                if args.get(flag).is_some() {
+                    return Err(
+                        ConfigError::DaemonFlagWithoutRole { flag }
+                            .into(),
+                    );
+                }
+            }
+            return Ok(None);
+        }
+        // the daemon schedules *local* runs; the networked-transport
+        // flags belong to --role server|worker launches, and silently
+        // ignoring them here would mask a mis-pasted command line
+        for flag in [
+            "listen",
+            "connect",
+            "workers",
+            "net-timeout-ms",
+            "net-inflight",
+            "heartbeat-ms",
+            "net-hedge-ms",
+            "net-token",
+        ] {
+            ensure!(
+                args.get(flag).is_none(),
+                "--{flag} only makes sense with --role \
+                 server|worker, not --role daemon"
+            );
+        }
+        // per-job snapshots live under --queue-dir (<id>.snaps/) and
+        // every job is implicitly resumable; the global snapshot
+        // flags would be silently ignored, so reject them
+        for flag in ["snapshot-dir", "snapshot-every"] {
+            ensure!(
+                args.get(flag).is_none(),
+                "--{flag} does not apply to --role daemon: each job \
+                 snapshots under <queue-dir>/<id>.snaps/ and resumes \
+                 automatically"
+            );
+        }
+        let Some(dir) = args.get("queue-dir") else {
+            return Err(ConfigError::DaemonWithoutQueueDir.into());
+        };
+        let slots = args.parse_or("daemon-slots", 1usize)?;
+        if slots == 0 {
+            return Err(ConfigError::DaemonSlotsZero.into());
+        }
+        Ok(Some(DaemonCfg {
+            queue_dir: PathBuf::from(dir),
+            slots,
+        }))
+    }
+}
+
+/// Parse `--telemetry-listen ADDR` — the NDJSON event feed socket.
+///
+/// Valid on a plain local run, a `--role server` coordinator and the
+/// daemon (everything that drives `Server::run`); a worker never runs
+/// the round loop, so the flag there is a typed [`ConfigError`].
+pub fn telemetry_listen_from_args(
+    args: &Args,
+    net: Option<&NetCfg>,
+) -> Result<Option<String>> {
+    let Some(addr) = args.get("telemetry-listen") else {
+        return Ok(None);
+    };
+    if matches!(net, Some(n) if n.role == NetRole::Worker) {
+        return Err(ConfigError::TelemetryOnWorker.into());
+    }
+    ensure!(
+        !addr.is_empty(),
+        "--telemetry-listen needs an ADDR (e.g. 127.0.0.1:7979)"
+    );
+    Ok(Some(addr.to_string()))
 }
 
 #[cfg(test)]
@@ -1264,5 +1668,215 @@ mod tests {
         assert_eq!(a.qat, QatMode::Det);
         assert_eq!(b.qat, QatMode::Rand);
         assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn daemon_flags_parse_and_guard() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        // off by default, and on server/worker launches
+        assert!(DaemonCfg::from_args(&args("run --preset x"))
+            .unwrap()
+            .is_none());
+        assert!(DaemonCfg::from_args(&args(
+            "run --role server --listen a:1"
+        ))
+        .unwrap()
+        .is_none());
+        // full spelling
+        let d = DaemonCfg::from_args(&args(
+            "run --role daemon --queue-dir /tmp/q --daemon-slots 3",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(d.queue_dir, Path::new("/tmp/q"));
+        assert_eq!(d.slots, 3);
+        // slots default to strictly sequential
+        let d = DaemonCfg::from_args(&args(
+            "run --role daemon --queue-dir q",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(d.slots, 1);
+
+        // typed guards, Display strings pinned: orphan knobs...
+        let typed = |a: &str| {
+            DaemonCfg::from_args(&args(a))
+                .unwrap_err()
+                .downcast::<ConfigError>()
+                .expect("typed ConfigError")
+        };
+        let e = typed("run --queue-dir q");
+        assert_eq!(
+            e,
+            ConfigError::DaemonFlagWithoutRole { flag: "queue-dir" }
+        );
+        assert_eq!(
+            e.to_string(),
+            "--queue-dir only makes sense with --role daemon"
+        );
+        let e = typed("run --role server --listen a:1 --daemon-slots 2");
+        assert_eq!(
+            e,
+            ConfigError::DaemonFlagWithoutRole {
+                flag: "daemon-slots"
+            }
+        );
+        // ...a missing queue...
+        let e = typed("run --role daemon");
+        assert_eq!(e, ConfigError::DaemonWithoutQueueDir);
+        assert_eq!(
+            e.to_string(),
+            "--role daemon requires --queue-dir DIR (no job queue \
+             to schedule)"
+        );
+        // ...a zero slot count...
+        let e = typed("run --role daemon --queue-dir q --daemon-slots 0");
+        assert_eq!(e, ConfigError::DaemonSlotsZero);
+        assert_eq!(
+            e.to_string(),
+            "--daemon-slots must be at least 1 (0 would never start \
+             a job)"
+        );
+        // ...and net flags leaking onto a daemon launch
+        assert!(DaemonCfg::from_args(&args(
+            "run --role daemon --queue-dir q --listen a:1"
+        ))
+        .is_err());
+        assert!(DaemonCfg::from_args(&args(
+            "run --role daemon --queue-dir q --net-hedge-ms 50"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn telemetry_flag_parses_and_guards() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        assert!(telemetry_listen_from_args(&args("run"), None)
+            .unwrap()
+            .is_none());
+        let t = telemetry_listen_from_args(
+            &args("run --telemetry-listen 127.0.0.1:7979"),
+            None,
+        )
+        .unwrap();
+        assert_eq!(t.as_deref(), Some("127.0.0.1:7979"));
+        // fine on the coordinator role...
+        let server = NetCfg::from_args(&args(
+            "run --role server --listen a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        assert!(telemetry_listen_from_args(
+            &args("run --telemetry-listen b:2"),
+            Some(&server)
+        )
+        .is_ok());
+        // ...typed error on a worker, Display pinned
+        let worker = NetCfg::from_args(&args(
+            "run --role worker --connect a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        let e = telemetry_listen_from_args(
+            &args("run --telemetry-listen b:2"),
+            Some(&worker),
+        )
+        .unwrap_err()
+        .downcast::<ConfigError>()
+        .expect("typed ConfigError");
+        assert_eq!(e, ConfigError::TelemetryOnWorker);
+        assert_eq!(
+            e.to_string(),
+            "--telemetry-listen only applies to processes that \
+             drive the round loop; --role worker never emits \
+             telemetry"
+        );
+        // an empty address is a config error, not "telemetry off"
+        assert!(telemetry_listen_from_args(
+            &args("run --telemetry-listen="),
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrip_is_lossless() {
+        // exercise every non-default encoding arm at once
+        let mut c = ExperimentConfig::preset("kwt:uq+:speaker").unwrap();
+        c.split = SplitCfg::Dirichlet(0.3);
+        c.seed = 0xDEAD_BEEF;
+        c.lr = 0.007; // not exactly representable: bit-exactness test
+        c.fp32_client_frac = 0.125;
+        c.error_feedback = true;
+        c.fp8_kernel = KernelKind::Scalar;
+        c.participation = 4; // tree + server_opt is invalid; keep flat
+        let text = c.to_json().to_string();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        // Debug covers every field; the fingerprint re-checks the
+        // trajectory ones through the bit-pattern lens
+        assert_eq!(format!("{c:?}"), format!("{back:?}"));
+        assert_eq!(c.fingerprint(), back.fingerprint());
+
+        // a big seed travels as a decimal string, losslessly
+        c.seed = u64::MAX - 7;
+        let text = c.to_json().to_string();
+        assert!(text.contains(&format!("\"{}\"", u64::MAX - 7)));
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.seed, u64::MAX - 7);
+    }
+
+    #[test]
+    fn config_from_json_accepts_sparse_specs_and_rejects_bad_ones() {
+        // three-line hand-written spec: base + method + one override
+        let v = Json::parse(
+            r#"{"model": "lenet_c10", "method": "bq_ef",
+                "rounds": 7}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c.name, "lenet_c10_bq_ef");
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.comm, Rounding::Deterministic);
+        assert!(c.error_feedback);
+        // model-only spec gets the model as its job label
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"model": "mlp_c10"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.name, "mlp_c10");
+        // missing model, unknown model, and invalid scale knobs all
+        // fail (the last one through validate(), typed)
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"rounds": 3}"#).unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"model": "nope"}"#).unwrap()
+        )
+        .is_err());
+        let e = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"model": "mlp_c10", "participation": 99}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err()
+        .downcast::<ConfigError>()
+        .expect("typed ConfigError");
+        assert_eq!(
+            e,
+            ConfigError::CohortExceedsPopulation {
+                cohort: 99,
+                clients: 40
+            }
+        );
     }
 }

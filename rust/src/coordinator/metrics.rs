@@ -1,5 +1,6 @@
-//! Run metrics: per-round records, CSV export, and the paper's
-//! communication-gain metric.
+//! Run metrics: per-round records, CSV export, the paper's
+//! communication-gain metric, and the structured telemetry events
+//! the run-scheduler daemon streams as NDJSON.
 //!
 //! Table 1 reports "final accuracy / communication gain vs FP32",
 //! where the gain is computed *per method* as the ratio of cumulative
@@ -7,11 +8,21 @@
 //! best accuracy reached by BOTH the FP32 baseline and the method
 //! (§4 "Results"). Figure 2 plots accuracy against cumulative bytes;
 //! `to_csv` emits exactly that series.
+//!
+//! The [`Telemetry`] sink trait is the observation seam of
+//! `Server::run`: every round emits a [`RoundEvent`] (the structured
+//! twin of [`RoundRecord`]) and the run boundaries emit
+//! [`RunEvent`]s. The default sink is a no-op, so a plain run pays
+//! nothing and nothing here can move a config fingerprint — events
+//! are derived *from* the trajectory, never an input to it.
 
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
 use anyhow::Result;
+
+use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug)]
 pub struct RoundRecord {
@@ -104,6 +115,154 @@ pub fn comm_gain(fp32: &RunResult, method: &RunResult) -> (f64, f64) {
     }
 }
 
+// ---- structured telemetry (the daemon's NDJSON feed) -----------------
+
+/// JSON number with the NaN/infinity hole closed: JSON has no NaN
+/// literal, so an unevaluated accuracy serializes as `null` (the
+/// same contract `RoundRecord` expresses with NaN in memory).
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    )
+}
+
+/// One round of one run, as a structured event — the telemetry twin
+/// of [`RoundRecord`], plus the identity (`job`) and cumulative
+/// wall-clock context a feed consumer needs to plot
+/// accuracy-vs-bytes-vs-time across resumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundEvent {
+    /// Run name (`ExperimentConfig::name`; the daemon's job id maps
+    /// onto it in the `/status` frame).
+    pub job: String,
+    pub round: u64,
+    pub rounds_total: u64,
+    /// NaN when this round did not evaluate (serialized as `null`).
+    pub accuracy: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+    pub cum_bytes: u64,
+    pub round_ms: f64,
+    /// Cumulative wall-clock millis including resumed segments — the
+    /// snapshot-v2 counter, so the feed's time axis is continuous
+    /// across a crash/resume.
+    pub wall_millis: u64,
+}
+
+impl RoundEvent {
+    /// One NDJSON object (no trailing newline; the feed adds it).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", Json::Str("round".into())),
+            ("job", Json::Str(self.job.clone())),
+            ("round", Json::Num(self.round as f64)),
+            ("rounds_total", Json::Num(self.rounds_total as f64)),
+            ("accuracy", num_or_null(self.accuracy)),
+            ("test_loss", num_or_null(self.test_loss)),
+            ("train_loss", num_or_null(self.train_loss)),
+            ("cum_bytes", Json::Num(self.cum_bytes as f64)),
+            ("round_ms", num_or_null(self.round_ms)),
+            ("wall_millis", Json::Num(self.wall_millis as f64)),
+        ])
+    }
+}
+
+/// Run-boundary transitions on the feed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunPhase {
+    /// The round loop is about to enter its first (possibly resumed)
+    /// round.
+    Started,
+    /// The loop completed every round.
+    Finished,
+    /// The loop aborted with an error (carried in
+    /// [`RunEvent::error`]).
+    Failed,
+}
+
+impl RunPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunPhase::Started => "started",
+            RunPhase::Finished => "finished",
+            RunPhase::Failed => "failed",
+        }
+    }
+}
+
+/// A run-boundary event: emitted once when `Server::run` enters the
+/// loop and once when it leaves (finished or failed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunEvent {
+    pub job: String,
+    pub phase: RunPhase,
+    /// First round the loop executes — nonzero exactly when resuming.
+    pub start_round: u64,
+    pub rounds_total: u64,
+    /// NaN (→ `null`) until a round has evaluated.
+    pub final_accuracy: f64,
+    pub total_bytes: u64,
+    /// Cumulative across resumes, like the comm totals.
+    pub wall_secs: f64,
+    /// The abort reason when `phase == Failed`.
+    pub error: Option<String>,
+}
+
+impl RunEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", Json::Str("run".into())),
+            ("job", Json::Str(self.job.clone())),
+            ("phase", Json::Str(self.phase.as_str().into())),
+            ("start_round", Json::Num(self.start_round as f64)),
+            ("rounds_total", Json::Num(self.rounds_total as f64)),
+            ("final_accuracy", num_or_null(self.final_accuracy)),
+            ("total_bytes", Json::Num(self.total_bytes as f64)),
+            ("wall_secs", num_or_null(self.wall_secs)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Observation seam of `Server::run`: implementors receive every
+/// round/run event of the trajectory. Contract:
+///
+/// * **Read-only.** A sink observes; it must never feed anything
+///   back into the round loop (events cannot move the trajectory or
+///   the config fingerprint).
+/// * **Cheap and non-blocking.** Called on the round loop's thread
+///   between rounds; do buffered writes or hand off to a channel —
+///   never block on a slow consumer.
+/// * **Infallible.** Telemetry loss must not fail a run; swallow
+///   (and count, if you care) your own I/O errors.
+///
+/// Both methods default to no-ops so the trait doubles as its own
+/// null object ([`NoTelemetry`]).
+pub trait Telemetry: Send + Sync {
+    fn on_round(&self, _ev: &RoundEvent) {}
+    fn on_run(&self, _ev: &RunEvent) {}
+}
+
+/// The default sink: drops everything (a plain `fedfp8 run` carries
+/// no telemetry cost beyond two `Option` checks per round).
+pub struct NoTelemetry;
+
+impl Telemetry for NoTelemetry {}
+
 /// Mean and sample standard deviation over seeds (table cells report
 /// "mean ± std / gain" across 3 seeds).
 pub fn mean_std(vals: &[f64]) -> (f64, f64) {
@@ -185,13 +344,94 @@ mod tests {
     }
 
     #[test]
-    fn csv_writes(){
+    fn gain_is_nan_nan_when_a_run_never_evaluated() {
+        // one run whose records are ALL unevaluated (accuracy NaN,
+        // e.g. eval_every > rounds): best_accuracy is NaN, so acc*
+        // is NaN and the contract is a (NaN, NaN) pair — never a
+        // panic, a zero, or a one-sided number
+        let f = run("fp32", &[0.2, 0.5, 0.7], 400);
+        let never = run(
+            "uq",
+            &[f64::NAN, f64::NAN, f64::NAN],
+            100,
+        );
+        let (acc, gain) = comm_gain(&f, &never);
+        assert!(acc.is_nan() && gain.is_nan());
+        // symmetric: the baseline never evaluating is the same hole
+        let (acc, gain) = comm_gain(&never, &f);
+        assert!(acc.is_nan() && gain.is_nan());
+        // and both-NaN too
+        let (acc, gain) = comm_gain(&never, &never);
+        assert!(acc.is_nan() && gain.is_nan());
+    }
+
+    #[test]
+    fn csv_writes() {
+        // unique per-test path: the old fixed name
+        // (fedfp8_metrics_test.csv) raced concurrent cargo test
+        // invocations sharing one temp dir
         let r = run("t", &[0.5], 10);
-        let p = std::env::temp_dir().join("fedfp8_metrics_test.csv");
+        let p = std::env::temp_dir().join(format!(
+            "fedfp8_metrics_test_{}_{:p}.csv",
+            std::process::id(),
+            &r as *const _
+        ));
         r.to_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("round,accuracy"));
         assert!(s.lines().count() == 2);
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn events_serialize_to_valid_json_with_null_nans() {
+        use crate::util::json::Json;
+
+        let ev = RoundEvent {
+            job: "lenet_c10_uq_iid".into(),
+            round: 3,
+            rounds_total: 8,
+            accuracy: f64::NAN, // not evaluated this round
+            test_loss: f64::NAN,
+            train_loss: 0.25,
+            cum_bytes: 4096,
+            round_ms: 12.5,
+            wall_millis: 77,
+        };
+        let line = ev.to_json().to_string();
+        let back = Json::parse(&line).expect("round event is JSON");
+        assert_eq!(back.get("type").unwrap().as_str().unwrap(), "round");
+        assert_eq!(back.get("round").unwrap().as_usize().unwrap(), 3);
+        // NaN serializes as null (JSON has no NaN literal); `opt`
+        // filters nulls, so an absent-or-null read is uniform
+        assert!(back.opt("accuracy").is_none());
+        assert_eq!(
+            back.get("cum_bytes").unwrap().as_usize().unwrap(),
+            4096
+        );
+        assert_eq!(
+            back.get("wall_millis").unwrap().as_usize().unwrap(),
+            77
+        );
+
+        let ev = RunEvent {
+            job: "j".into(),
+            phase: RunPhase::Failed,
+            start_round: 2,
+            rounds_total: 8,
+            final_accuracy: 0.5,
+            total_bytes: 10,
+            wall_secs: 1.25,
+            error: Some("worker died".into()),
+        };
+        let back = Json::parse(&ev.to_json().to_string()).unwrap();
+        assert_eq!(back.get("phase").unwrap().as_str().unwrap(), "failed");
+        assert_eq!(
+            back.get("error").unwrap().as_str().unwrap(),
+            "worker died"
+        );
+        let ok = RunEvent { error: None, phase: RunPhase::Finished, ..ev };
+        let back = Json::parse(&ok.to_json().to_string()).unwrap();
+        assert!(back.opt("error").is_none());
     }
 }

@@ -43,7 +43,9 @@ use super::aggregate::{self, Weighting};
 use super::client::ClientRunner;
 use super::cohort::{ClientShards, VIRTUALIZE_AT};
 use super::comm::CommStats;
-use super::metrics::{RoundRecord, RunResult};
+use super::metrics::{
+    RoundEvent, RoundRecord, RunEvent, RunPhase, RunResult, Telemetry,
+};
 use super::server_opt;
 use super::snapshot::{self, SnapshotState};
 use super::transport::{
@@ -171,6 +173,14 @@ pub struct Server<'a> {
     /// First round `run` will execute — 0 unless a snapshot was
     /// restored ([`Server::resume_from`]).
     start_round: usize,
+    /// Cumulative wall-clock millis of all completed rounds,
+    /// including prior resumed segments (restored from snapshot v2,
+    /// advanced by [`Server::run`]) — so resumed runs report
+    /// continuous time next to their cumulative byte totals.
+    wall_millis: u64,
+    /// Structured event sink ([`Telemetry`]); `None` (the default)
+    /// costs the round loop nothing.
+    telemetry: Option<std::sync::Arc<dyn Telemetry>>,
 }
 
 /// Write back a client's error-feedback residual, evicting
@@ -271,6 +281,8 @@ impl<'a> Server<'a> {
             snap_dir: None,
             snap_every: 1,
             start_round: 0,
+            wall_millis: 0,
+            telemetry: None,
         })
     }
 
@@ -308,6 +320,22 @@ impl<'a> Server<'a> {
         self.snap_every = every.max(1);
     }
 
+    /// Install a structured-event sink ([`Telemetry`]); the daemon's
+    /// NDJSON feed rides this. Purely observational — events are
+    /// derived from the trajectory and can never move it.
+    pub fn set_telemetry(
+        &mut self,
+        sink: std::sync::Arc<dyn Telemetry>,
+    ) {
+        self.telemetry = Some(sink);
+    }
+
+    /// Cumulative wall-clock millis of all completed rounds,
+    /// including resumed prior segments (the snapshot-v2 counter).
+    pub fn wall_millis(&self) -> u64 {
+        self.wall_millis
+    }
+
     /// The durable round state as of "rounds `0..next_round` are
     /// complete" — everything [`SnapshotState`] documents as
     /// non-derivable.
@@ -325,6 +353,7 @@ impl<'a> Server<'a> {
                 .map(|(&k, v)| (k as u64, v.clone()))
                 .collect(),
             comm: self.comm,
+            wall_millis: self.wall_millis,
         }
     }
 
@@ -378,6 +407,7 @@ impl<'a> Server<'a> {
             .map(|(&k, v)| (k as usize, v.clone()))
             .collect();
         self.comm = s.comm;
+        self.wall_millis = s.wall_millis;
         self.start_round = s.next_round as usize;
         Ok(())
     }
@@ -406,10 +436,71 @@ impl<'a> Server<'a> {
         }
     }
 
+    /// Emit a run-boundary event to the installed sink, if any.
+    fn emit_run(
+        &self,
+        phase: RunPhase,
+        final_accuracy: f64,
+        wall_secs: f64,
+        error: Option<String>,
+    ) {
+        if let Some(sink) = &self.telemetry {
+            sink.on_run(&RunEvent {
+                job: self.cfg.name.clone(),
+                phase,
+                start_round: self.start_round as u64,
+                rounds_total: self.cfg.rounds as u64,
+                final_accuracy,
+                total_bytes: self.comm.total_bytes(),
+                wall_secs,
+                error,
+            });
+        }
+    }
+
     /// Run the full experiment; returns the per-round record series
     /// (starting at the resumed round, if any).
+    ///
+    /// `wall_secs` (and the snapshot's `wall_millis`) are cumulative
+    /// across resumes: the clock restarts per process, but the
+    /// restored base from snapshot v2 is added back, so
+    /// bytes-vs-time comparisons stay continuous exactly like the
+    /// cumulative `cum_bytes` column (the pre-v2 counter restarted
+    /// at every resume boundary).
     pub fn run(&mut self) -> Result<RunResult> {
         let t0 = Instant::now();
+        let wall_base = self.wall_millis;
+        self.emit_run(
+            RunPhase::Started,
+            f64::NAN,
+            wall_base as f64 / 1e3,
+            None,
+        );
+        let res = self.run_rounds(t0, wall_base);
+        let wall_secs =
+            wall_base as f64 / 1e3 + t0.elapsed().as_secs_f64();
+        match &res {
+            Ok(r) => self.emit_run(
+                RunPhase::Finished,
+                r.final_accuracy,
+                wall_secs,
+                None,
+            ),
+            Err(e) => self.emit_run(
+                RunPhase::Failed,
+                f64::NAN,
+                wall_secs,
+                Some(format!("{e:#}")),
+            ),
+        }
+        res
+    }
+
+    fn run_rounds(
+        &mut self,
+        t0: Instant,
+        wall_base: u64,
+    ) -> Result<RunResult> {
         let mut records = Vec::with_capacity(
             self.cfg.rounds.saturating_sub(self.start_round),
         );
@@ -445,6 +536,24 @@ impl<'a> Server<'a> {
                 );
             }
             records.push(rec);
+            // advance the cumulative wall clock BEFORE the snapshot
+            // below persists it: state will say "rounds 0..=t are
+            // complete and cost this much wall time so far"
+            self.wall_millis =
+                wall_base + t0.elapsed().as_millis() as u64;
+            if let Some(sink) = &self.telemetry {
+                sink.on_round(&RoundEvent {
+                    job: self.cfg.name.clone(),
+                    round: t as u64,
+                    rounds_total: self.cfg.rounds as u64,
+                    accuracy: rec.accuracy,
+                    test_loss: rec.test_loss,
+                    train_loss: rec.train_loss,
+                    cum_bytes: rec.cum_bytes,
+                    round_ms: rec.round_ms,
+                    wall_millis: self.wall_millis,
+                });
+            }
             // snapshot at the round boundary: state now says "rounds
             // 0..=t are complete", so a resume re-enters at t + 1
             if let Some(dir) = self.snap_dir.clone() {
@@ -459,7 +568,8 @@ impl<'a> Server<'a> {
             name: self.cfg.name.clone(),
             final_accuracy: last_acc,
             total_bytes: self.comm.total_bytes(),
-            wall_secs: t0.elapsed().as_secs_f64(),
+            wall_secs: wall_base as f64 / 1e3
+                + t0.elapsed().as_secs_f64(),
             records,
         })
     }

@@ -38,6 +38,9 @@
 //!                  client u64, len u32, len x f32
 //!   comm         6 x u64 (up_bytes, down_bytes, up_msgs,
 //!                 down_msgs, partial_bytes, partial_msgs)
+//!   wall_millis  u64   cumulative wall-clock of all completed
+//!                      rounds (v2; keeps resumed bytes-vs-time
+//!                      curves continuous, like the comm totals)
 //! ```
 //!
 //! Durability discipline: [`write_atomic`] writes a temp file in the
@@ -65,7 +68,9 @@ use super::comm::CommStats;
 pub const SNAPSHOT_MAGIC: [u8; 4] = *b"FP8S";
 
 /// Bump on any layout change; readers hard-reject other versions.
-pub const SNAPSHOT_VERSION: u16 = 1;
+/// v2 appended `wall_millis` to the body (cumulative wall clock, so
+/// resumed runs report continuous time next to cumulative bytes).
+pub const SNAPSHOT_VERSION: u16 = 2;
 
 /// Fixed header size: magic + version + reserved + body_len + crc32.
 pub const SNAPSHOT_HEADER_BYTES: usize = 16;
@@ -99,6 +104,12 @@ pub struct SnapshotState {
     /// Communication totals so resumed byte curves continue, not
     /// restart.
     pub comm: CommStats,
+    /// Cumulative wall-clock milliseconds spent across all completed
+    /// rounds, including prior resumed segments — the time twin of
+    /// the cumulative `comm` totals, so a resumed run's
+    /// bytes-vs-time curve continues instead of restarting at the
+    /// resume boundary.
+    pub wall_millis: u64,
 }
 
 /// Typed snapshot failures. Every variant names the offending file,
@@ -255,6 +266,7 @@ pub fn encode(s: &SnapshotState) -> Vec<u8> {
     put_u64(&mut body, s.comm.down_msgs);
     put_u64(&mut body, s.comm.partial_bytes);
     put_u64(&mut body, s.comm.partial_msgs);
+    put_u64(&mut body, s.wall_millis);
 
     let mut out =
         Vec::with_capacity(SNAPSHOT_HEADER_BYTES + body.len());
@@ -324,7 +336,7 @@ impl<'a> Rd<'a> {
             return Err(SnapshotError::Malformed {
                 path: self.path.to_path_buf(),
                 what: format!(
-                    "{} trailing bytes after comm totals",
+                    "{} trailing bytes after wall_millis",
                     self.buf.len() - self.pos
                 ),
             });
@@ -424,6 +436,7 @@ pub fn decode(
         partial_bytes: r.u64("comm.partial_bytes")?,
         partial_msgs: r.u64("comm.partial_msgs")?,
     };
+    let wall_millis = r.u64("wall_millis")?;
     r.finish()?;
     Ok(SnapshotState {
         fingerprint,
@@ -434,6 +447,7 @@ pub fn decode(
         ef_server,
         ef_clients,
         comm,
+        wall_millis,
     })
 }
 
@@ -457,6 +471,31 @@ fn parse_generation(name: &str) -> Option<u64> {
         .strip_prefix("snap-")?
         .strip_suffix(".fp8s")?;
     digits.parse::<u64>().ok()
+}
+
+/// True for the temp-file names [`write_atomic`] creates
+/// (`.tmp-snap-<round:08>.fp8s`). A crash between `File::create` and
+/// the commit rename strands one of these; nothing ever reads them,
+/// so they are safe to delete whenever no write is in progress.
+fn is_stale_tmp(name: &str) -> bool {
+    name.strip_prefix(".tmp-")
+        .and_then(parse_generation)
+        .is_some()
+}
+
+/// Best-effort removal of orphaned temp files left by a crash
+/// mid-[`write_atomic`]. Only our own `.tmp-snap-*.fp8s` names are
+/// touched — committed generations (and foreign files) never match
+/// [`is_stale_tmp`] — and removal failures are ignored: a surviving
+/// orphan costs disk space, not correctness.
+fn prune_stale_tmps(dir: &Path) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        if name.to_str().is_some_and(is_stale_tmp) {
+            let _ = fs::remove_file(entry.path());
+        }
+    }
 }
 
 /// Snapshot generations in `dir`, newest (highest round) first.
@@ -511,6 +550,11 @@ pub fn write_atomic(
     {
         fs::remove_file(&old).map_err(|e| io_err(&old, e))?;
     }
+    // Our temp file was consumed by the rename above, so anything
+    // still matching the temp pattern is an orphan from a crashed
+    // earlier write — clean it up now that this generation is
+    // committed.
+    prune_stale_tmps(dir);
     Ok(final_path)
 }
 
@@ -536,6 +580,10 @@ pub fn load_resume(
     if !dir.exists() {
         return Ok(None);
     }
+    // A crash mid-write_atomic can strand a `.tmp-snap-*` orphan
+    // (the exact state a resume starts from); sweep them before
+    // walking generations so the directory never accumulates them.
+    prune_stale_tmps(dir);
     let generations = list_generations(dir)?;
     if generations.is_empty() {
         return Ok(None);
@@ -593,6 +641,7 @@ mod tests {
                 partial_bytes: 55,
                 partial_msgs: 6,
             },
+            wall_millis: 987_654,
         }
     }
 
@@ -672,5 +721,44 @@ mod tests {
         // empty / missing dir is a cold start, not an error
         let _ = fs::remove_dir_all(&dir);
         assert!(load_resume(&dir, 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn stale_tmp_files_are_pruned_but_generations_survive() {
+        let dir = std::env::temp_dir().join(format!(
+            "fedfp8_snap_tmp_unit_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let mut s = state();
+        for round in [7u64, 8] {
+            s.next_round = round;
+            write_atomic(&dir, &s).unwrap();
+        }
+        // plant a crashed write's orphan plus a foreign dotfile that
+        // must NOT be swept
+        let orphan = dir.join(".tmp-snap-00000009.fp8s");
+        fs::write(&orphan, b"torn").unwrap();
+        let foreign = dir.join(".tmp-notes.txt");
+        fs::write(&foreign, b"keep me").unwrap();
+
+        // load_resume sweeps the orphan and still resumes newest
+        let (loaded, _) =
+            load_resume(&dir, s.fingerprint).unwrap().unwrap();
+        assert_eq!(loaded.next_round, 8);
+        assert!(!orphan.exists(), "orphan tmp survived load_resume");
+        assert!(foreign.exists(), "foreign dotfile was swept");
+
+        // write_atomic also sweeps orphans after committing
+        fs::write(&orphan, b"torn again").unwrap();
+        s.next_round = 9;
+        write_atomic(&dir, &s).unwrap();
+        assert!(!orphan.exists(), "orphan tmp survived write_atomic");
+        let gens = list_generations(&dir).unwrap();
+        assert_eq!(
+            gens.iter().map(|g| g.0).collect::<Vec<_>>(),
+            vec![9, 8]
+        );
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,24 @@
+//! Run-scheduler daemon + structured telemetry feed.
+//!
+//! `fedfp8 run --role daemon --queue-dir D [--daemon-slots N]
+//! [--telemetry-listen ADDR]` turns the launcher into a small batch
+//! scheduler: job specs (`<id>.job.json`, a serialized
+//! [`ExperimentConfig`](crate::config::ExperimentConfig) plus
+//! operational knobs) are executed in filename order, per-job state
+//! is persisted atomically, and an interrupted daemon resumes killed
+//! jobs bit-identically through the existing snapshot layer.
+//!
+//! Three parts, deliberately decoupled:
+//! - [`queue`]: the on-disk contract (specs, states, snapshots).
+//! - [`scheduler`]: the execution loop, generic over the runner.
+//! - [`telemetry`]: the NDJSON event feed + `/status` socket.
+//!
+//! See ARCHITECTURE.md §Run scheduler & telemetry feed.
+
+pub mod queue;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use queue::{Job, JobState, Queue, JOB_SUFFIX};
+pub use scheduler::{run_queue, Report};
+pub use telemetry::TelemetryHub;

@@ -1,0 +1,331 @@
+//! Directory-backed job queue for the run-scheduler daemon.
+//!
+//! A queue is a plain directory. Each job is one `<id>.job.json` file
+//! holding a `config` object ([`ExperimentConfig::from_json`]) plus
+//! optional operational knobs; the scheduler executes jobs in
+//! filename order, so operators control ordering the way they control
+//! logrotate: by naming (`00-warmup.job.json`, `10-main.job.json`).
+//!
+//! Per-job lifecycle state lives next to the spec as
+//! `<id>.state.json`, written with the snapshot layer's tmp+rename
+//! idiom so a crash can never leave a torn state file: after `kill
+//! -9` the file still reads as the last state that was fully durable
+//! (`running` for the interrupted job), which is exactly what the
+//! restart path keys on. Snapshots for job `<id>` live under
+//! `<id>.snaps/`, so `--resume` semantics come from the existing
+//! durability layer unchanged.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::util::json::Json;
+
+/// Job specs are `<id>.job.json`; everything else in the directory
+/// (state files, snapshot subdirs, stray notes) is not a job.
+pub const JOB_SUFFIX: &str = ".job.json";
+
+/// Lifecycle of one queued job. Only the scheduler writes
+/// transitions; the states on disk are the crash-recovery contract:
+/// a process killed mid-job leaves `Running` behind, and the next
+/// daemon launch re-runs exactly those jobs through snapshot resume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            _ => return None,
+        })
+    }
+}
+
+/// One parsed job spec.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// File stem (`foo` for `foo.job.json`) — the queue-unique id,
+    /// and the `/status` key. The run itself is labelled by
+    /// `cfg.name` on the telemetry feed.
+    pub id: String,
+    pub path: PathBuf,
+    pub cfg: ExperimentConfig,
+    /// Snapshot cadence for this job (rounds per generation;
+    /// default 1 = every round boundary is durable/resumable).
+    pub snapshot_every: usize,
+}
+
+/// Handle on a queue directory.
+pub struct Queue {
+    dir: PathBuf,
+}
+
+impl Queue {
+    /// Open (creating if needed) a queue directory.
+    pub fn open(dir: &Path) -> Result<Queue> {
+        fs::create_dir_all(dir).with_context(|| {
+            format!("creating queue dir {}", dir.display())
+        })?;
+        Ok(Queue {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All job specs, sorted by filename (the execution order
+    /// contract). A malformed spec is an error, not a skip: silently
+    /// dropping a typo'd job would look like the daemon "lost" it.
+    pub fn scan(&self) -> Result<Vec<Job>> {
+        let mut paths = Vec::new();
+        for entry in fs::read_dir(&self.dir).with_context(|| {
+            format!("reading queue dir {}", self.dir.display())
+        })? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str())
+            else {
+                continue;
+            };
+            if name.ends_with(JOB_SUFFIX) {
+                paths.push(path);
+            }
+        }
+        paths.sort();
+        paths.iter().map(|p| self.load(p)).collect()
+    }
+
+    /// Parse one `<id>.job.json` spec.
+    pub fn load(&self, path: &Path) -> Result<Job> {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or_default();
+        let Some(id) = name.strip_suffix(JOB_SUFFIX) else {
+            bail!(
+                "job spec {} must be named <id>{JOB_SUFFIX}",
+                path.display()
+            );
+        };
+        ensure!(
+            !id.is_empty(),
+            "job spec {} has an empty id",
+            path.display()
+        );
+        let text = fs::read_to_string(path).with_context(|| {
+            format!("reading job spec {}", path.display())
+        })?;
+        let v = Json::parse(&text).with_context(|| {
+            format!("parsing job spec {}", path.display())
+        })?;
+        let cfg = ExperimentConfig::from_json(
+            v.get("config").with_context(|| {
+                format!("job spec {}: missing 'config'", path.display())
+            })?,
+        )
+        .with_context(|| {
+            format!("job spec {}: 'config'", path.display())
+        })?;
+        let snapshot_every = match v.opt("snapshot_every") {
+            Some(n) => n.as_usize().with_context(|| {
+                format!(
+                    "job spec {}: 'snapshot_every'",
+                    path.display()
+                )
+            })?,
+            None => 1,
+        };
+        ensure!(
+            snapshot_every >= 1,
+            "job spec {}: 'snapshot_every' must be at least 1",
+            path.display()
+        );
+        Ok(Job {
+            id: id.to_string(),
+            path: path.to_path_buf(),
+            cfg,
+            snapshot_every,
+        })
+    }
+
+    pub fn state_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.state.json"))
+    }
+
+    /// Snapshot directory for job `id` — handed to the existing
+    /// durability layer (`Server::set_snapshot` / `resume_from`).
+    pub fn snaps_dir(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.snaps"))
+    }
+
+    /// Read a job's persisted state; `None` means never started
+    /// (equivalent to [`JobState::Queued`]).
+    pub fn read_state(
+        &self,
+        id: &str,
+    ) -> Result<Option<(JobState, Option<String>)>> {
+        let path = self.state_path(id);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading job state {}", path.display())
+                });
+            }
+        };
+        let v = Json::parse(&text).with_context(|| {
+            format!("parsing job state {}", path.display())
+        })?;
+        let state_str = v.get("state")?.as_str()?;
+        let Some(state) = JobState::parse(state_str) else {
+            bail!(
+                "job state {}: unknown state '{state_str}'",
+                path.display()
+            );
+        };
+        let error = v
+            .opt("error")
+            .map(|e| e.as_str().map(String::from))
+            .transpose()?;
+        Ok(Some((state, error)))
+    }
+
+    /// Persist a job-state transition with the snapshot layer's
+    /// tmp+rename idiom: write `.tmp-<id>.state.json`, fsync, rename
+    /// over the final name. A crash at any instruction leaves either
+    /// the previous state file or the new one — never a torn mix.
+    pub fn set_state(
+        &self,
+        id: &str,
+        state: JobState,
+        error: Option<&str>,
+    ) -> Result<()> {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("job".to_string(), Json::Str(id.to_string()));
+        m.insert(
+            "state".to_string(),
+            Json::Str(state.as_str().to_string()),
+        );
+        m.insert(
+            "error".to_string(),
+            match error {
+                Some(e) => Json::Str(e.to_string()),
+                None => Json::Null,
+            },
+        );
+        let body = Json::Obj(m).to_string() + "\n";
+        let path = self.state_path(id);
+        let tmp = self.dir.join(format!(".tmp-{id}.state.json"));
+        let mut f = fs::File::create(&tmp).with_context(|| {
+            format!("creating {}", tmp.display())
+        })?;
+        f.write_all(body.as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, &path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), path.display())
+        })?;
+        // directory entry durability (same best-effort as snapshots:
+        // some filesystems reject dir fsync — the rename alone already
+        // guarantees atomicity, just not power-fail ordering)
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fedfp8-queue-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec(model: &str) -> String {
+        format!(r#"{{"config": {{"model": "{model}"}}}}"#)
+    }
+
+    #[test]
+    fn scan_orders_by_filename_and_ignores_non_jobs() {
+        let dir = tmpdir("scan");
+        let q = Queue::open(&dir).unwrap();
+        for name in ["20-b.job.json", "10-a.job.json", "30-c.job.json"]
+        {
+            fs::write(dir.join(name), spec("mlp_c10")).unwrap();
+        }
+        // non-jobs must not parse as jobs
+        fs::write(dir.join("notes.txt"), "hi").unwrap();
+        fs::write(dir.join("10-a.state.json"), "{}").unwrap();
+        let jobs = q.scan().unwrap();
+        let ids: Vec<&str> =
+            jobs.iter().map(|j| j.id.as_str()).collect();
+        assert_eq!(ids, ["10-a", "20-b", "30-c"]);
+        assert_eq!(jobs[0].cfg.model, "mlp_c10");
+        assert_eq!(jobs[0].snapshot_every, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn state_roundtrips_atomically() {
+        let dir = tmpdir("state");
+        let q = Queue::open(&dir).unwrap();
+        assert!(q.read_state("j").unwrap().is_none());
+        q.set_state("j", JobState::Running, None).unwrap();
+        assert_eq!(
+            q.read_state("j").unwrap(),
+            Some((JobState::Running, None))
+        );
+        q.set_state("j", JobState::Failed, Some("boom")).unwrap();
+        assert_eq!(
+            q.read_state("j").unwrap(),
+            Some((JobState::Failed, Some("boom".to_string())))
+        );
+        // no tmp residue after a completed transition
+        assert!(!dir.join(".tmp-j.state.json").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_spec_is_an_error_not_a_skip() {
+        let dir = tmpdir("bad");
+        let q = Queue::open(&dir).unwrap();
+        fs::write(dir.join("x.job.json"), "{nope").unwrap();
+        assert!(q.scan().is_err());
+        fs::write(dir.join("x.job.json"), r#"{"config": {}}"#)
+            .unwrap();
+        assert!(q.scan().is_err(), "config without model must fail");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

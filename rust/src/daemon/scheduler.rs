@@ -1,0 +1,141 @@
+//! Job execution loop of the run-scheduler daemon.
+//!
+//! [`run_queue`] scans the queue once, then executes every runnable
+//! job — sequentially by default, or `slots`-wide over scoped worker
+//! threads. The scheduler is generic over the actual runner so tests
+//! can inject a mock (and the production runner in `main.rs` can
+//! build a full `Engine`/`Server` per job without this module
+//! depending on the runtime layer).
+//!
+//! Restart contract (the crash-recovery half of the tentpole): a job
+//! whose persisted state is `running` was interrupted — the previous
+//! daemon died mid-job — and is re-run. The production runner always
+//! arms snapshots with resume, so the re-run continues bit-identically
+//! from the last durable round boundary instead of starting over.
+//! `done`/`failed` jobs are skipped; removing a job's state file
+//! re-queues it.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::queue::{Job, JobState, Queue};
+
+/// What one [`run_queue`] pass did, in terms of job ids.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Ids in the order execution *started* (with `slots == 1` this
+    /// is exactly the filename order).
+    pub started: Vec<String>,
+    pub done: Vec<String>,
+    /// `(id, error)` for jobs whose runner returned an error. A
+    /// failed job never fails the pass — the rest of the queue still
+    /// runs; the caller decides what a non-empty list means.
+    pub failed: Vec<(String, String)>,
+    /// Jobs already `done`/`failed` from a previous pass.
+    pub skipped: Vec<String>,
+}
+
+/// Scan `queue` and execute every runnable job through `runner`,
+/// `slots` at a time. `on_state` observes every lifecycle transition
+/// (the telemetry hub's `/status` map rides this); it must be cheap
+/// and must not fail.
+pub fn run_queue<F, S>(
+    queue: &Queue,
+    slots: usize,
+    on_state: S,
+    runner: F,
+) -> Result<Report>
+where
+    F: Fn(&Job) -> Result<()> + Send + Sync,
+    S: Fn(&Job, JobState) + Send + Sync,
+{
+    let mut runnable = Vec::new();
+    let mut report = Report::default();
+    for job in queue.scan()? {
+        match queue.read_state(&job.id)? {
+            Some((JobState::Done, _)) => {
+                on_state(&job, JobState::Done);
+                report.skipped.push(job.id);
+            }
+            Some((JobState::Failed, _)) => {
+                on_state(&job, JobState::Failed);
+                report.skipped.push(job.id);
+            }
+            // no state file, explicit `queued`, or `running` (= a
+            // previous daemon was killed mid-job; the runner's
+            // snapshot resume continues it bit-identically)
+            _ => runnable.push(job),
+        }
+    }
+    // persist the full backlog as `queued` before starting anything,
+    // so `/status` (and a post-crash inspection) sees every job the
+    // pass owns — except interrupted ones, which stay `running` on
+    // disk until their slot picks them up
+    for job in &runnable {
+        if queue.read_state(&job.id)?.is_none() {
+            queue.set_state(&job.id, JobState::Queued, None)?;
+        }
+        on_state(job, JobState::Queued);
+    }
+
+    let next = Mutex::new(0usize);
+    let started = Mutex::new(Vec::new());
+    let done = Mutex::new(Vec::new());
+    let failed = Mutex::new(Vec::new());
+    let work = || -> Result<()> {
+        loop {
+            let i = {
+                let mut n = next.lock().unwrap();
+                if *n >= runnable.len() {
+                    break;
+                }
+                let i = *n;
+                *n += 1;
+                i
+            };
+            let job = &runnable[i];
+            started.lock().unwrap().push(job.id.clone());
+            queue.set_state(&job.id, JobState::Running, None)?;
+            on_state(job, JobState::Running);
+            match runner(job) {
+                Ok(()) => {
+                    queue.set_state(&job.id, JobState::Done, None)?;
+                    on_state(job, JobState::Done);
+                    done.lock().unwrap().push(job.id.clone());
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    queue.set_state(
+                        &job.id,
+                        JobState::Failed,
+                        Some(&msg),
+                    )?;
+                    on_state(job, JobState::Failed);
+                    failed
+                        .lock()
+                        .unwrap()
+                        .push((job.id.clone(), msg));
+                }
+            }
+        }
+        Ok(())
+    };
+    let slots = slots.max(1).min(runnable.len().max(1));
+    if slots == 1 {
+        work()?;
+    } else {
+        std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> =
+                (0..slots).map(|_| s.spawn(&work)).collect();
+            for h in handles {
+                h.join().expect("scheduler slot panicked")?;
+            }
+            Ok(())
+        })?;
+    }
+    report.started = started.into_inner().unwrap();
+    report.done = done.into_inner().unwrap();
+    report.failed = failed.into_inner().unwrap();
+    Ok(report)
+}

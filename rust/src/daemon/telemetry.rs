@@ -1,0 +1,431 @@
+//! NDJSON telemetry feed over a local TCP socket.
+//!
+//! [`TelemetryHub`] is a [`Telemetry`] sink that broadcasts every
+//! round/run event as one JSON object per line to all connected
+//! clients, and answers the literal request line `/status` with a
+//! summary frame (job lifecycle map + latest round metrics). One
+//! background thread owns the listener and the read side of every
+//! client, multiplexed through the transport's [`Poller`]; event
+//! writes happen on the emitting thread (the round loop), so the
+//! feed adds no polling latency to event delivery.
+//!
+//! Contract notes:
+//! - The feed is observational: a client connecting mid-run starts
+//!   receiving from the next event; `/status` is the catch-up.
+//! - A client that stops reading is dropped once its socket buffer
+//!   fills (a `WouldBlock`/error on write) — a stalled consumer must
+//!   never stall the round loop.
+//! - Events serialize through `util::json`, so non-finite metrics
+//!   (unevaluated rounds' NaN accuracy) arrive as `null`, matching
+//!   the comm_gain NaN contract.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::queue::JobState;
+use crate::coordinator::metrics::{
+    RoundEvent, RunEvent, RunPhase, Telemetry,
+};
+use crate::net::Poller;
+use crate::util::json::Json;
+
+/// Latest known facts about one job, for the `/status` frame.
+#[derive(Clone, Debug)]
+struct JobEntry {
+    state: &'static str,
+    round: Option<u64>,
+    rounds_total: u64,
+    accuracy: f64,
+}
+
+struct Inner {
+    /// Write side of every connected client, keyed by poll token.
+    clients: Mutex<Vec<(u64, TcpStream)>>,
+    jobs: Mutex<BTreeMap<String, JobEntry>>,
+    closed: AtomicBool,
+}
+
+impl Inner {
+    /// Send one NDJSON line to every client; drop the ones that fail
+    /// (closed, or stalled past their socket buffer).
+    fn broadcast(&self, line: &str) {
+        let mut clients = self.clients.lock().unwrap();
+        clients.retain_mut(|(_, stream)| {
+            stream
+                .write_all(line.as_bytes())
+                .and_then(|_| stream.write_all(b"\n"))
+                .is_ok()
+        });
+    }
+
+    fn update_job(
+        &self,
+        job: &str,
+        state: Option<&'static str>,
+        round: Option<u64>,
+        rounds_total: u64,
+        accuracy: f64,
+    ) {
+        let mut jobs = self.jobs.lock().unwrap();
+        let e = jobs.entry(job.to_string()).or_insert(JobEntry {
+            state: "running",
+            round: None,
+            rounds_total,
+            accuracy: f64::NAN,
+        });
+        if let Some(s) = state {
+            e.state = s;
+        }
+        if round.is_some() {
+            e.round = round;
+        }
+        if rounds_total > 0 {
+            e.rounds_total = rounds_total;
+        }
+        if !accuracy.is_nan() {
+            e.accuracy = accuracy;
+        }
+    }
+
+    /// The `/status` summary frame (one line, like every event).
+    fn status_json(&self) -> Json {
+        let jobs = self.jobs.lock().unwrap();
+        let mut m = BTreeMap::new();
+        for (id, e) in jobs.iter() {
+            let mut j = BTreeMap::new();
+            j.insert(
+                "state".to_string(),
+                Json::Str(e.state.to_string()),
+            );
+            j.insert(
+                "round".to_string(),
+                match e.round {
+                    Some(r) => Json::Num(r as f64),
+                    None => Json::Null,
+                },
+            );
+            j.insert(
+                "rounds_total".to_string(),
+                Json::Num(e.rounds_total as f64),
+            );
+            j.insert(
+                "accuracy".to_string(),
+                if e.accuracy.is_nan() {
+                    Json::Null
+                } else {
+                    Json::Num(e.accuracy)
+                },
+            );
+            m.insert(id.clone(), Json::Obj(j));
+        }
+        let mut top = BTreeMap::new();
+        top.insert(
+            "type".to_string(),
+            Json::Str("status".to_string()),
+        );
+        top.insert("jobs".to_string(), Json::Obj(m));
+        Json::Obj(top)
+    }
+}
+
+/// The telemetry feed server. Construct with [`TelemetryHub::bind`],
+/// hand the `Arc` to `Server::set_telemetry` (and the scheduler's
+/// `on_state` callback), and [`shutdown`](Self::shutdown) when done.
+pub struct TelemetryHub {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl TelemetryHub {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start the acceptor
+    /// thread.
+    pub fn bind(addr: &str) -> Result<Arc<TelemetryHub>> {
+        let listener = TcpListener::bind(addr).with_context(|| {
+            format!("binding telemetry listener {addr}")
+        })?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let inner = Arc::new(Inner {
+            clients: Mutex::new(Vec::new()),
+            jobs: Mutex::new(BTreeMap::new()),
+            closed: AtomicBool::new(false),
+        });
+        let thread_inner = inner.clone();
+        let thread = std::thread::Builder::new()
+            .name("telemetry-hub".to_string())
+            .spawn(move || serve(listener, thread_inner))
+            .context("spawning telemetry thread")?;
+        Ok(Arc::new(TelemetryHub {
+            inner,
+            addr: local,
+            thread: Mutex::new(Some(thread)),
+        }))
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connected feed clients right now (emitters can use this to
+    /// wait for a subscriber before a short-lived run).
+    pub fn client_count(&self) -> usize {
+        self.inner.clients.lock().unwrap().len()
+    }
+
+    /// Record a scheduler lifecycle transition for the `/status`
+    /// frame.
+    pub fn job_state(&self, job: &str, state: JobState) {
+        self.inner
+            .update_job(job, Some(state.as_str()), None, 0, f64::NAN);
+    }
+
+    /// Stop the acceptor thread and close every client.
+    pub fn shutdown(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        self.inner.clients.lock().unwrap().clear();
+    }
+}
+
+impl Drop for TelemetryHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Telemetry for TelemetryHub {
+    fn on_round(&self, ev: &RoundEvent) {
+        self.inner.update_job(
+            &ev.job,
+            Some("running"),
+            Some(ev.round),
+            ev.rounds_total,
+            ev.accuracy,
+        );
+        self.inner.broadcast(&ev.to_json().to_string());
+    }
+
+    fn on_run(&self, ev: &RunEvent) {
+        let state = match ev.phase {
+            RunPhase::Started => "running",
+            RunPhase::Finished => "done",
+            RunPhase::Failed => "failed",
+        };
+        self.inner.update_job(
+            &ev.job,
+            Some(state),
+            None,
+            ev.rounds_total,
+            ev.final_accuracy,
+        );
+        self.inner.broadcast(&ev.to_json().to_string());
+    }
+}
+
+/// Acceptor/reader loop: owns the listener and the read side of
+/// every client. Reuses the transport's readiness layer
+/// ([`Poller`]), so on Linux this is one epoll set, and elsewhere
+/// the portable scan fallback — either way a single thread.
+fn serve(listener: TcpListener, inner: Arc<Inner>) {
+    const LISTENER_TOKEN: u64 = 0;
+    let mut poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("[telemetry] poller init failed: {e}");
+            return;
+        }
+    };
+    if let Err(e) =
+        poller.register_listener(&listener, LISTENER_TOKEN)
+    {
+        eprintln!("[telemetry] listener register failed: {e}");
+        return;
+    }
+    // read halves: token -> (stream, partial request line)
+    let mut readers: Vec<(u64, TcpStream, Vec<u8>)> = Vec::new();
+    let mut next_token = 1u64;
+    let mut ready = Vec::new();
+    while !inner.closed.load(Ordering::SeqCst) {
+        if poller
+            .wait(Duration::from_millis(50), &mut ready)
+            .is_err()
+        {
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        }
+        for &token in &ready {
+            if token == LISTENER_TOKEN {
+                while let Ok((stream, _)) = listener.accept() {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let Ok(write_half) = stream.try_clone() else {
+                        continue;
+                    };
+                    let token = next_token;
+                    next_token += 1;
+                    if poller
+                        .register_stream(&stream, token)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    inner
+                        .clients
+                        .lock()
+                        .unwrap()
+                        .push((token, write_half));
+                    readers.push((token, stream, Vec::new()));
+                }
+                continue;
+            }
+            let Some(idx) =
+                readers.iter().position(|(t, _, _)| *t == token)
+            else {
+                continue; // stale token
+            };
+            let mut gone = false;
+            let mut buf = [0u8; 1024];
+            loop {
+                match readers[idx].1.read(&mut buf) {
+                    Ok(0) => {
+                        gone = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        readers[idx].2.extend_from_slice(&buf[..n])
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break;
+                    }
+                    Err(_) => {
+                        gone = true;
+                        break;
+                    }
+                }
+            }
+            // answer every complete `/status` request line
+            while let Some(pos) =
+                readers[idx].2.iter().position(|&b| b == b'\n')
+            {
+                let line: Vec<u8> =
+                    readers[idx].2.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&line);
+                if line.trim() == "/status" {
+                    let frame =
+                        inner.status_json().to_string() + "\n";
+                    if readers[idx]
+                        .1
+                        .write_all(frame.as_bytes())
+                        .is_err()
+                    {
+                        gone = true;
+                    }
+                }
+            }
+            if gone {
+                let (token, stream, _) = readers.remove(idx);
+                let _ = poller.deregister_stream(&stream, token);
+                inner
+                    .clients
+                    .lock()
+                    .unwrap()
+                    .retain(|(t, _)| *t != token);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    fn read_line(
+        reader: &mut std::io::BufReader<TcpStream>,
+    ) -> String {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    }
+
+    #[test]
+    fn broadcasts_events_and_answers_status() {
+        let hub = TelemetryHub::bind("127.0.0.1:0").unwrap();
+        let stream =
+            TcpStream::connect(hub.local_addr()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut reader =
+            std::io::BufReader::new(stream.try_clone().unwrap());
+        // wait until the acceptor registered us
+        for _ in 0..200 {
+            if !hub.inner.clients.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let ev = RoundEvent {
+            job: "j1".to_string(),
+            round: 2,
+            rounds_total: 4,
+            accuracy: f64::NAN,
+            test_loss: f64::NAN,
+            train_loss: 0.5,
+            cum_bytes: 1000,
+            round_ms: 1.5,
+            wall_millis: 77,
+        };
+        hub.on_round(&ev);
+        let line = read_line(&mut reader);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("type").unwrap().as_str().unwrap(), "round");
+        assert_eq!(v.get("round").unwrap().as_usize().unwrap(), 2);
+        // NaN accuracy arrives as null (opt filters Null)
+        assert!(v.opt("accuracy").is_none());
+        // /status reflects the round and the scheduler state
+        hub.job_state("j2", JobState::Queued);
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(b"/status\n").unwrap();
+        let line = read_line(&mut reader);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(
+            v.get("type").unwrap().as_str().unwrap(),
+            "status"
+        );
+        let jobs = v.get("jobs").unwrap();
+        assert_eq!(
+            jobs.get("j1")
+                .unwrap()
+                .get("round")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            2
+        );
+        assert_eq!(
+            jobs.get("j2")
+                .unwrap()
+                .get("state")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "queued"
+        );
+        hub.shutdown();
+    }
+}

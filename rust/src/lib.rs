@@ -21,6 +21,7 @@
 pub mod bench_tables;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod fp8;
 pub mod net;

@@ -27,6 +27,16 @@
 //!            # must be launched with the identical preset/overrides
 //!            # (enforced by the config-fingerprint handshake).
 //!            # Reconnects with its outcome cache intact after drops.
+//! fedfp8 run --role daemon --queue-dir D [--daemon-slots N]
+//!            # run-scheduler daemon: execute every <id>.job.json in
+//!            # D (filename order; N jobs at a time), persisting
+//!            # per-job state atomically. A daemon killed mid-job
+//!            # resumes it bit-identically on the next launch via
+//!            # the snapshot layer.
+//!            [--telemetry-listen ADDR]  # NDJSON event feed (also
+//!            # valid on plain/server runs); clients get one JSON
+//!            # object per round/run event, and "/status\n" answers
+//!            # with a job-summary frame
 //! fedfp8 table1 [--rounds N] [--seeds 3] [--models lenet_c10,...]
 //! fedfp8 table2 [--rounds N] [--seeds 3]
 //! fedfp8 fig2   [--rounds N] [--model lenet_c10]
@@ -41,9 +51,13 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use fedfp8::config::{ExperimentConfig, NetCfg, NetRole, SnapshotCfg};
+use fedfp8::config::{
+    telemetry_listen_from_args, DaemonCfg, ExperimentConfig, NetCfg,
+    NetRole, SnapshotCfg,
+};
 use fedfp8::coordinator::transport::InProcessTransport;
 use fedfp8::coordinator::{build_world, RunResult, Server, World};
+use fedfp8::daemon::{run_queue, Queue, TelemetryHub};
 use fedfp8::net::{self, Hello};
 use fedfp8::runtime::{default_dir, Engine, Manifest};
 use fedfp8::util::cli::Args;
@@ -102,6 +116,11 @@ fn report_run(
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    // --role daemon first: it takes no preset (jobs carry their own
+    // configs) and NetCfg rejects roles it doesn't know
+    if let Some(d) = DaemonCfg::from_args(args)? {
+        return cmd_daemon(args, d);
+    }
     let preset = args
         .get("preset")
         .unwrap_or("lenet_c10:uq:iid")
@@ -109,13 +128,92 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = apply_overrides(ExperimentConfig::preset(&preset)?, args)?;
     let net = NetCfg::from_args(args)?;
     let snap = SnapshotCfg::from_args(args, net.as_ref())?;
+    let telemetry = telemetry_listen_from_args(args, net.as_ref())?;
     match net {
-        None => run_local(&preset, cfg, snap),
+        None => run_local(&preset, cfg, snap, telemetry),
         Some(n) if n.role == NetRole::Server => {
-            run_net_server(&preset, cfg, n, snap)
+            run_net_server(&preset, cfg, n, snap, telemetry)
         }
         Some(n) => run_net_worker(cfg, n),
     }
+}
+
+/// Bind the NDJSON feed when `--telemetry-listen` was given.
+fn bind_telemetry(
+    addr: Option<String>,
+) -> Result<Option<std::sync::Arc<TelemetryHub>>> {
+    let Some(addr) = addr else {
+        return Ok(None);
+    };
+    let hub = TelemetryHub::bind(&addr)?;
+    println!("[telemetry] listening on {}", hub.local_addr());
+    Ok(Some(hub))
+}
+
+/// `--role daemon`: execute every job spec in `--queue-dir`,
+/// `--daemon-slots` at a time. Each job gets its own `Engine` (slots
+/// may run concurrently), snapshots under `<id>.snaps/`, and is
+/// always armed with resume — so a daemon killed mid-job continues
+/// that job bit-identically on the next launch.
+fn cmd_daemon(args: &Args, d: DaemonCfg) -> Result<()> {
+    let telemetry = telemetry_listen_from_args(args, None)?;
+    let hub = bind_telemetry(telemetry)?;
+    let queue = Queue::open(&d.queue_dir)?;
+    println!(
+        "[daemon] queue={} slots={}",
+        queue.dir().display(),
+        d.slots
+    );
+    let report = run_queue(
+        &queue,
+        d.slots,
+        |job, state| {
+            if let Some(h) = &hub {
+                h.job_state(&job.id, state);
+            }
+            println!("[daemon] {} -> {}", job.id, state.as_str());
+        },
+        |job| {
+            let dir = default_dir();
+            let engine = Engine::new(&dir)?;
+            let manifest = Manifest::load(&dir)?;
+            let mut server =
+                Server::new(&engine, &manifest, job.cfg.clone())?;
+            server.set_verbose(true);
+            if let Some(h) = &hub {
+                server.set_telemetry(h.clone());
+            }
+            let snaps = queue.snaps_dir(&job.id);
+            server.set_snapshot(snaps.clone(), job.snapshot_every);
+            server.resume_from(&snaps).with_context(|| {
+                format!("resuming job '{}'", job.id)
+            })?;
+            let result = server.run()?;
+            report_run(&engine, &result)
+        },
+    )?;
+    println!(
+        "[daemon] done={} failed={} skipped={}",
+        report.done.len(),
+        report.failed.len(),
+        report.skipped.len()
+    );
+    if let Some(h) = &hub {
+        h.shutdown();
+    }
+    if !report.failed.is_empty() {
+        bail!(
+            "{} job(s) failed: {}",
+            report.failed.len(),
+            report
+                .failed
+                .iter()
+                .map(|(id, _)| id.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    Ok(())
 }
 
 /// Arm the durability layer on a built server: install the write
@@ -144,6 +242,7 @@ fn run_local(
     preset: &str,
     cfg: ExperimentConfig,
     snap: SnapshotCfg,
+    telemetry: Option<String>,
 ) -> Result<()> {
     let dir = default_dir();
     let engine = Engine::new(&dir)?;
@@ -160,8 +259,12 @@ fn run_local(
         cfg.fp8_kernel,
         cfg.fp8_kernel.resolve().name(),
     );
+    let hub = bind_telemetry(telemetry)?;
     let mut server = Server::new(&engine, &manifest, cfg)?;
     server.set_verbose(true);
+    if let Some(h) = &hub {
+        server.set_telemetry(h.clone());
+    }
     arm_snapshots(&mut server, &snap)?;
     let result = server.run()?;
     report_run(&engine, &result)
@@ -174,6 +277,7 @@ fn run_net_server(
     cfg: ExperimentConfig,
     net: NetCfg,
     snap: SnapshotCfg,
+    telemetry: Option<String>,
 ) -> Result<()> {
     let dir = default_dir();
     let engine = Engine::new(&dir)?;
@@ -214,9 +318,13 @@ fn run_net_server(
         },
     )?;
     println!("[server] {} workers handshaken; starting", net.workers);
+    let hub = bind_telemetry(telemetry)?;
     let mut server =
         Server::with_transport(&engine, &manifest, cfg, Box::new(&transport))?;
     server.set_verbose(true);
+    if let Some(h) = &hub {
+        server.set_telemetry(h.clone());
+    }
     arm_snapshots(&mut server, &snap)?;
     let result = server.run();
     drop(server);

@@ -1318,6 +1318,12 @@ impl Transport for SocketTransport {
             routes.push(conn.clone());
             let started = Instant::now();
             let mut hedged = false;
+            // one re-hedge budget per dispatch attempt: if a route
+            // dies while a hedge is outstanding, the hedge may be
+            // re-armed once — without this, losing the hedge
+            // connection silently demotes the job back to a single
+            // route racing the very straggler the hedge was for
+            let mut rehedges_left = 1usize;
             let mut winner: Option<WireOutcome> = None;
             // wait for the first answer, re-checking route health on
             // every io_timeout tick. Legitimate long computations are
@@ -1367,6 +1373,23 @@ impl Transport for SocketTransport {
                                  worker {peer}"
                             )),
                         );
+                        // a route died after the hedge fired (either
+                        // side of the race): re-arm the hedge once so
+                        // the job keeps two horses. The next loop
+                        // iteration re-fires immediately — the hedge
+                        // deadline already elapsed — and the dead
+                        // conn stays in `routes`, so
+                        // try_acquire_excluding picks a third
+                        // connection. The loser of the new race
+                        // lands in the existing duplicate
+                        // accounting, exactly like a first hedge.
+                        if hedged
+                            && rehedges_left > 0
+                            && live_routes > 0
+                        {
+                            rehedges_left -= 1;
+                            hedged = false;
+                        }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         if routes

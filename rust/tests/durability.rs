@@ -19,7 +19,9 @@ use std::path::{Path, PathBuf};
 
 use common::{mock_cfg, mock_manifest, MockTransport, Trace};
 use fedfp8::config::{AggMode, ExperimentConfig};
-use fedfp8::coordinator::snapshot::SnapshotError;
+use fedfp8::coordinator::snapshot::{
+    decode, write_atomic, SnapshotError,
+};
 use fedfp8::coordinator::Server;
 use fedfp8::runtime::Engine;
 
@@ -263,6 +265,122 @@ fn all_generations_corrupt_is_a_typed_error_naming_each_file() {
         }
         other => panic!("expected NoValidSnapshot, got {other:?}"),
     }
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+// ---- regression: a crashed write_atomic cannot strand tmp files ----
+
+#[test]
+fn stale_tmp_from_crashed_write_is_pruned_on_resume() {
+    // crash model: the process died between creating the temp file
+    // and the rename commit point — exactly the state a resume
+    // starts from. The orphan must be swept, the kept generations
+    // must survive, and the resumed run must stay bit-identical.
+    let cfg = mock_cfg(1, true);
+    let base = run_full("tmp_base", cfg.clone());
+
+    let snaps = snap_dir("tmp");
+    let cut = 2;
+    let first = run_until_crash("tmp_a", cfg.clone(), cut, &snaps);
+    let orphan = snaps.join(".tmp-snap-00000003.fp8s");
+    fs::write(&orphan, b"torn half-written garbage").unwrap();
+    // a dotfile that does NOT match the temp pattern is not ours to
+    // delete
+    let foreign = snaps.join(".tmp-notes.txt");
+    fs::write(&foreign, b"operator scratch").unwrap();
+
+    let (start, resumed) = resume_and_finish("tmp_b", cfg, &snaps);
+    assert_eq!(start, cut);
+    assert!(
+        !orphan.exists(),
+        "stale .tmp-snap-* orphan survived resume"
+    );
+    assert!(
+        foreign.exists(),
+        "resume deleted a foreign dotfile it does not own"
+    );
+    for gen in ["snap-00000001.fp8s", "snap-00000002.fp8s"] {
+        assert!(snaps.join(gen).exists(), "pruned a kept generation");
+    }
+
+    let mut losses = first;
+    losses.extend_from_slice(&resumed.losses);
+    let stitched = Trace { losses, ..resumed };
+    assert_eq!(
+        stitched, base,
+        "tmp-prune changed the resumed trajectory"
+    );
+    let _ = fs::remove_dir_all(&snaps);
+}
+
+// ---- regression: wall clock is cumulative across resumes -----------
+
+#[test]
+fn wall_clock_is_cumulative_across_resume() {
+    // pre-v2 snapshots had no wall_millis, so every resume restarted
+    // the clock at zero while cum_bytes kept counting — skewing
+    // bytes-vs-time comparisons. The counter must now ride the
+    // snapshot: restore it on resume, persist it back out, and never
+    // perturb the model trajectory.
+    let cfg = mock_cfg(1, true);
+    let base = run_full("wall_base", cfg.clone());
+
+    let snaps = snap_dir("wall");
+    let cut = 2;
+    let first = run_until_crash("wall_a", cfg.clone(), cut, &snaps);
+
+    // stamp the newest generation with 5s of pre-crash wall clock
+    // (the manual-round harness never advances it, so plant a known
+    // value the way a real `Server::run` segment would have)
+    let newest = snaps.join("snap-00000002.fp8s");
+    let mut s =
+        decode(&fs::read(&newest).unwrap(), &newest).unwrap();
+    assert_eq!(s.next_round, 2);
+    s.wall_millis = 5_000;
+    write_atomic(&snaps, &s).unwrap();
+
+    let (dir, manifest) = mock_manifest("wall_b");
+    let engine = Engine::new(&dir).unwrap();
+    let transport = MockTransport::new(false);
+    let rounds = cfg.rounds;
+    let mut server = Server::with_transport(
+        &engine,
+        &manifest,
+        cfg,
+        Box::new(&transport),
+    )
+    .unwrap();
+    let start = server.resume_from(&snaps).unwrap();
+    assert_eq!(start, cut);
+    assert_eq!(
+        server.wall_millis(),
+        5_000,
+        "resume did not restore the cumulative wall clock"
+    );
+
+    let mut losses = first;
+    for t in start..rounds {
+        losses.push(server.round(t).unwrap().to_bits());
+    }
+    // the restored base must flow back out through save_snapshot —
+    // a later resume of THIS segment starts from >= 5s, not zero
+    server.save_snapshot(&snaps, rounds).unwrap();
+    let last = snaps.join(format!("snap-{rounds:08}.fp8s"));
+    let persisted =
+        decode(&fs::read(&last).unwrap(), &last).unwrap();
+    assert!(
+        persisted.wall_millis >= 5_000,
+        "cumulative wall clock reset at the resume boundary: {}",
+        persisted.wall_millis
+    );
+
+    // and the clock is bookkeeping only: trajectory still identical
+    let stitched =
+        Trace { losses, ..Trace::capture(&server, Vec::new()) };
+    assert_eq!(
+        stitched, base,
+        "wall-clock persistence changed the trajectory"
+    );
     let _ = fs::remove_dir_all(&snaps);
 }
 

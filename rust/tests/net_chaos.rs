@@ -187,12 +187,17 @@ fn run_chaos(
     hb_ms: u64,
     io_ms: u64,
 ) -> (Trace, ChaosStats) {
-    run_chaos_hedged(tag, parallelism, inflight, faults, hb_ms, io_ms, 0)
+    run_chaos_hedged(
+        tag, parallelism, inflight, faults, hb_ms, io_ms, 0, 0,
+    )
 }
 
 /// `run_chaos` with the server's hedge timer armed (`hedge_ms > 0`
 /// duplicates a straggler's job onto a second worker after that long
-/// unanswered).
+/// unanswered). `stagger_ms > 0` delays worker `w`'s first connect by
+/// `w * stagger_ms`, making the server's connection-pool order — and
+/// therefore the least-loaded tie-break — deterministic, so a test
+/// can pin WHICH worker a primary or hedge dispatch lands on.
 #[allow(clippy::too_many_arguments)]
 fn run_chaos_hedged(
     tag: &str,
@@ -202,6 +207,7 @@ fn run_chaos_hedged(
     hb_ms: u64,
     io_ms: u64,
     hedge_ms: u64,
+    stagger_ms: u64,
 ) -> (Trace, ChaosStats) {
     let (dir, manifest) = mock_manifest(tag);
     let engine = Engine::new(&dir).unwrap();
@@ -234,6 +240,9 @@ fn run_chaos_hedged(
             let (server_addr, hello, exec, ctx, opts) =
                 (&server_addr, &hello, &exec, &ctx, &opts);
             s.spawn(move || {
+                thread::sleep(Duration::from_millis(
+                    w as u64 * stagger_ms,
+                ));
                 let cache = OutcomeCache::new(64);
                 let mut target = first_addr;
                 for attempt in 0..4u32 {
@@ -412,6 +421,7 @@ fn hedged_dispatch_races_a_straggler_and_aggregates_once() {
         500,
         8_000,
         150,
+        0,
     );
     assert_eq!(trace, base, "hedging changed the trajectory");
     assert!(
@@ -428,6 +438,68 @@ fn hedged_dispatch_races_a_straggler_and_aggregates_once() {
     assert_eq!(
         stats.bytes_received, trace.comm.up_bytes,
         "hedge duplicates leaked into the reported uplink bytes"
+    );
+}
+
+#[test]
+fn dead_hedge_route_is_rearmed_once() {
+    // The regression: a hedged job whose hedge CONNECTION dies used
+    // to fall back to a single route for the rest of the wait — the
+    // set-once `hedged` latch never re-fired, leaving the job alone
+    // with the very straggler the hedge existed to beat. Now one
+    // re-hedge is allowed per dispatch attempt.
+    //
+    // Deterministic schedule (staggered connects pin the pool order,
+    // and the least-loaded tie-break picks the earliest pool entry):
+    //
+    //   worker 0: Delay(600)  — pooled first, so with parallelism 1
+    //                           every primary dispatch lands here
+    //                           and straggles past the 150 ms hedge
+    //   worker 1: CutAtJob(1) — pooled second, so the FIRST hedge
+    //                           lands here; the proxy swallows that
+    //                           job and kills the link (a dead hedge
+    //                           route with the job un-acked)
+    //   worker 2: Direct      — the only place a re-hedge can go
+    //
+    // The proof is in the counters: without the fix, each of the 16
+    // dispatch attempts can fire at most ONE hedge, so
+    // hedges <= attempts; the re-hedge pushes it past that bound.
+    let base = run_mock(1, false);
+    let (trace, stats) = run_chaos_hedged(
+        "rehedge",
+        1,
+        2,
+        &[Fault::Delay(600), Fault::CutAtJob(1), Fault::Direct],
+        2_000,
+        8_000,
+        150,
+        1_500,
+    );
+    assert_eq!(
+        trace, base,
+        "a dying hedge route changed the trajectory"
+    );
+    assert_eq!(
+        stats.requeues, 0,
+        "a dead hedge route must not trigger failure re-dispatch \
+         while the primary is alive"
+    );
+    let attempts = 16; // 4 rounds x 4 clients, no requeues
+    assert!(
+        stats.hedges > attempts,
+        "no re-hedge after the hedge route died: {} hedge dispatches \
+         across {attempts} attempts (set-once latch is back?)",
+        stats.hedges
+    );
+    assert!(
+        stats.duplicates >= 1,
+        "the straggler's late answers were never seen as duplicates"
+    );
+    // re-hedge losers land in duplicate accounting like any hedge
+    // loser: the reported uplink still equals aggregated frames only
+    assert_eq!(
+        stats.bytes_received, trace.comm.up_bytes,
+        "re-hedge duplicates leaked into the reported uplink bytes"
     );
 }
 
@@ -936,6 +1008,7 @@ fn soak_multi_worker_forced_kills() {
             250,
             5_000,
             hedge_ms,
+            0,
         );
         assert_eq!(
             trace, base,

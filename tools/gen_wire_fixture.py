@@ -72,11 +72,12 @@ for mutual verification; likewise optional on decode).  Shutdown
 (kind=5): empty.  Heartbeat / HeartbeatAck bodies (kinds 6/7):
 ``nonce u64`` (the ack echoes the probe's nonce).
 
-Snapshot file format v1 (``rust/src/coordinator/snapshot.rs``) is
+Snapshot file format v2 (``rust/src/coordinator/snapshot.rs``) is
 mirrored at the bottom of this file and pinned by
 ``rust/tests/golden_snapshot.rs`` against
-``rust/tests/fixtures/snapshot_v1.bin`` (plus the must-fail
-``snapshot_v0.bin`` version-skew fixture).
+``rust/tests/fixtures/snapshot_v2.bin`` (plus the must-fail
+``snapshot_v1.bin`` / ``snapshot_v0.bin`` version-skew fixtures,
+both frozen byte-for-byte).
 
 Accounting identities (mirrored by ``coordinator/comm.rs``)::
 
@@ -388,7 +389,7 @@ def fp8_edge_fixture():
 #
 #     header (16 bytes):
 #       magic      4  = b"FP8S"
-#       version    u16 = 1
+#       version    u16 = 2
 #       reserved   u16 = 0
 #       body_len   u32
 #       crc32      u32 (IEEE CRC-32 of body)
@@ -400,10 +401,13 @@ def fp8_edge_fixture():
 #       ef_clients_count u32, then per entry (ascending client id):
 #         client u64, len u32, residual [f32 x len],
 #       comm 6 x u64 (up_bytes, down_bytes, up_msgs, down_msgs,
-#                     partial_bytes, partial_msgs)
+#                     partial_bytes, partial_msgs),
+#       wall_millis u64   # v2: cumulative wall clock across resumes
+#
+# v1 is v2 without the trailing wall_millis field.
 
 SNAP_MAGIC = b"FP8S"
-SNAP_VERSION = 1
+SNAP_VERSION = 2
 SNAP_HEADER_BYTES = 16
 
 
@@ -415,8 +419,9 @@ def snapshot_frame(body, version=SNAP_VERSION):
     return hdr + body
 
 
-def snapshot_body(fingerprint, next_round, w, alpha, beta, ef_server,
-                  ef_clients, comm):
+def snapshot_body_v1(fingerprint, next_round, w, alpha, beta,
+                     ef_server, ef_clients, comm):
+    """Frozen v1 body (no wall_millis) — keep byte-stable forever."""
     body = struct.pack(
         "<QQIII", fingerprint, next_round, len(w), len(alpha), len(beta)
     )
@@ -430,9 +435,13 @@ def snapshot_body(fingerprint, next_round, w, alpha, beta, ef_server,
     return body
 
 
+def snapshot_body(wall_millis=0, **kw):
+    return snapshot_body_v1(**kw) + struct.pack("<Q", wall_millis)
+
+
 # Mirrors canon() in rust/tests/golden_snapshot.rs: every f32 is an
 # exactly-representable short binary fraction.
-CANON_SNAP = dict(
+CANON_SNAP_V1 = dict(
     fingerprint=0xDEADBEEF01234567,
     next_round=42,
     w=[1.0, -2.0, 0.5],
@@ -444,17 +453,26 @@ CANON_SNAP = dict(
     #  partial_bytes, partial_msgs)
     comm=(111, 222, 3, 4, 55, 6),
 )
+CANON_SNAP = dict(CANON_SNAP_V1, wall_millis=987654)
 
 
 def golden_snapshot():
     return snapshot_frame(snapshot_body(**CANON_SNAP))
 
 
+def golden_snapshot_v1():
+    """Frozen v1 fixture (must reproduce the committed
+    snapshot_v1.bin byte-for-byte, forever): a v2 reader must reject
+    it with the typed VersionMismatch, never fall through to the body
+    decoder."""
+    return snapshot_frame(snapshot_body_v1(**CANON_SNAP_V1), version=1)
+
+
 def golden_snapshot_v0():
-    """Version-skew fixture: a v0 header over the same (valid,
-    correctly crc'd) body — a v1 reader must reject it with the typed
-    VersionMismatch, never fall through to the body decoder."""
-    return snapshot_frame(snapshot_body(**CANON_SNAP), version=0)
+    """Version-skew fixture: a v0 header over the frozen v1 body
+    (valid, correctly crc'd) — likewise rejected with the typed
+    VersionMismatch."""
+    return snapshot_frame(snapshot_body_v1(**CANON_SNAP_V1), version=0)
 
 
 # ---- canonical golden messages (mirrored in rust/tests/golden_wire.rs)
@@ -544,11 +562,17 @@ def main():
     print(f"wrote {out}: {len(job1) + len(outcome1)} B (frozen v1)")
 
     snap = golden_snapshot()
-    out = os.path.join(fixtures, "snapshot_v1.bin")
+    out = os.path.join(fixtures, "snapshot_v2.bin")
     with open(out, "wb") as f:
         f.write(snap)
     print(f"wrote {out}: {len(snap)} B")
     print("snapshot :", snap.hex())
+
+    snap1 = golden_snapshot_v1()
+    out = os.path.join(fixtures, "snapshot_v1.bin")
+    with open(out, "wb") as f:
+        f.write(snap1)
+    print(f"wrote {out}: {len(snap1)} B (frozen v1, must-fail skew)")
 
     snap0 = golden_snapshot_v0()
     out = os.path.join(fixtures, "snapshot_v0.bin")
