@@ -67,8 +67,11 @@ def fixture_v1_bytes():
 
 
 def test_fixture_matches_mirror(mirror, fixture_bytes):
-    job, outcome, heartbeat, heartbeat_ack = mirror.golden_frames()
-    assert fixture_bytes == job + outcome + heartbeat + heartbeat_ack, (
+    job, outcome, heartbeat, heartbeat_ack, partial = (
+        mirror.golden_frames()
+    )
+    stream = job + outcome + heartbeat + heartbeat_ack + partial
+    assert fixture_bytes == stream, (
         "wire_v2.bin no longer matches the spec mirror — regenerate "
         "with tools/gen_wire_fixture.py ONLY alongside a WIRE_VERSION "
         "bump"
@@ -111,6 +114,7 @@ def test_frame_envelopes_are_well_formed(mirror, fixture_bytes):
         mirror.KIND_OUTCOME,
         mirror.KIND_HEARTBEAT,
         mirror.KIND_HEARTBEAT_ACK,
+        mirror.KIND_PARTIAL,
     ]
 
 
@@ -153,13 +157,54 @@ def test_overhead_constants(mirror):
     exactly these overheads; if the layout grows, both must move."""
     assert mirror.JOB_FRAME_OVERHEAD == 72
     assert mirror.OUTCOME_FRAME_OVERHEAD == 57
-    job, outcome, _, _ = mirror.golden_frames()
+    assert mirror.PARTIAL_FRAME_OVERHEAD == 44
+    job, outcome, _, _, partial = mirror.golden_frames()
     assert len(job) == mirror.wire_bytes(*mirror.CANON_DOWN) + 72
     # the outcome golden carries a 2-element EF block: 4 (len) + 8 (f32s)
     assert len(outcome) == mirror.wire_bytes(*mirror.CANON_UP) + 57 + 12
+    # the backbone identity record_partial charges by
+    p = mirror.CANON_PARTIAL
+    assert len(partial) == (
+        mirror.partial_wire_bytes(p["width"], len(p["fragments"])) + 44
+    )
     # v1 constants are frozen alongside the v1 fixture
     assert mirror.V1_JOB_FRAME_OVERHEAD == 68
     assert mirror.V1_OUTCOME_FRAME_OVERHEAD == 53
+
+
+def test_partial_frame_pins_the_backbone_layout(mirror, fixture_bytes):
+    """Regression (PR 6 gap): FrameKind::Partial was absent from the
+    golden fixture, so a silent partial-frame layout drift would have
+    passed the golden suite. The last fixture frame must be a Partial
+    whose body decodes field-for-field to CANON_PARTIAL, f64 sum bit
+    patterns included."""
+    buf = fixture_bytes
+    frames = []
+    while buf:
+        _, _, kind, _, body_len, _ = struct.unpack_from("<4sHBBII", buf)
+        frames.append((kind, buf[16:16 + body_len]))
+        buf = buf[16 + body_len:]
+    kind, body = frames[-1]
+    assert kind == mirror.KIND_PARTIAL == 8
+    p = mirror.CANON_PARTIAL
+    round_, start, end, width, n_frag = struct.unpack_from(
+        "<IQQII", body
+    )
+    assert (round_, start, end, width) == (
+        p["round_"], p["start"], p["end"], p["width"],
+    )
+    assert n_frag == len(p["fragments"])
+    off = mirror.PARTIAL_META_BYTES
+    for fs, fl, sums in p["fragments"]:
+        got_s, got_l = struct.unpack_from("<QQ", body, off)
+        assert (got_s, got_l) == (fs, fl)
+        off += 16
+        got_sums = struct.unpack_from(f"<{width}d", body, off)
+        # bit-exact, not approx: the tree contract ships raw f64 bits
+        for a, b in zip(got_sums, sums):
+            assert struct.pack("<d", a) == struct.pack("<d", b)
+        off += 8 * width
+    assert off == len(body)
 
 
 # ---- snapshot fixture (coordinator durable state, not the wire) ------

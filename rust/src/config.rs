@@ -176,6 +176,16 @@ pub enum ConfigError {
     /// drive the round loop (local runs, the coordinator, the daemon)
     /// emit round/run events.
     TelemetryOnWorker,
+    /// `--net-aimd-spike` below 2: a spike multiplier under 2x would
+    /// halve the adaptive window on ordinary latency jitter.
+    AimdSpikeTooSmall { got: u32 },
+    /// `--net-aimd-cap 0` would never let a connection carry a job.
+    AimdCapZero,
+    /// Unparseable `--shard` spec (wants `i/G` with 0 <= i < G).
+    BadShardSpec { spec: String },
+    /// `--shard` on a role that never executes a cohort shard: only
+    /// mid-tier aggregators pin their shard index.
+    ShardWithoutAggregator,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -237,7 +247,8 @@ impl std::fmt::Display for ConfigError {
                 write!(
                     f,
                     "--{flag} only applies to the coordinator; \
-                     --role worker holds no durable round state"
+                     worker and aggregator roles hold no durable \
+                     round state"
                 )
             }
             ConfigError::DaemonFlagWithoutRole { flag } => {
@@ -264,8 +275,37 @@ impl std::fmt::Display for ConfigError {
                 write!(
                     f,
                     "--telemetry-listen only applies to processes \
-                     that drive the round loop; --role worker never \
-                     emits telemetry"
+                     that drive the round loop; worker and \
+                     aggregator roles never emit telemetry"
+                )
+            }
+            ConfigError::AimdSpikeTooSmall { got } => {
+                write!(
+                    f,
+                    "--net-aimd-spike must be at least 2 (got \
+                     {got}): a spike threshold under 2x would halve \
+                     the window on ordinary latency jitter"
+                )
+            }
+            ConfigError::AimdCapZero => {
+                write!(
+                    f,
+                    "--net-aimd-cap must be at least 1 (a zero cap \
+                     would never let a connection carry a job)"
+                )
+            }
+            ConfigError::BadShardSpec { spec } => {
+                write!(
+                    f,
+                    "bad --shard '{spec}' (expected i/G with \
+                     0 <= i < G, e.g. --shard 0/2)"
+                )
+            }
+            ConfigError::ShardWithoutAggregator => {
+                write!(
+                    f,
+                    "--shard only applies to --role aggregator \
+                     (the mid-tier role that owns a cohort shard)"
                 )
             }
         }
@@ -898,6 +938,10 @@ pub enum NetRole {
     Server,
     /// Client executor: connects and serves jobs until shutdown.
     Worker,
+    /// Mid-tier tree node: connects upstream to the root, listens
+    /// downstream for its own workers, executes cohort shards and
+    /// forwards one `FrameKind::Partial` per round.
+    Aggregator,
 }
 
 /// Networked-run settings parsed from the CLI
@@ -905,8 +949,16 @@ pub enum NetRole {
 #[derive(Clone, Debug)]
 pub struct NetCfg {
     pub role: NetRole,
-    /// Listen address (server) or server address (worker).
+    /// Listen address (server) or upstream address (worker and
+    /// aggregator `--connect`).
     pub addr: String,
+    /// Downstream listen address — aggregator only (`--listen` on
+    /// `--role aggregator`); the server's listen address is `addr`.
+    pub listen: Option<String>,
+    /// `--shard i/G` (aggregator only): pin this process to cohort
+    /// shard `i` of a `tree:G` root. `None` lets the root assign
+    /// shards in connection order.
+    pub shard: Option<(u32, u32)>,
     /// Worker connections the server waits for before round 0.
     pub workers: usize,
     /// Socket read/write deadline (and handshake deadline), plus the
@@ -938,6 +990,29 @@ pub struct NetCfg {
     /// cryptographic transport security; TLS is the ROADMAP item
     /// for hostile networks.
     pub token: Option<String>,
+    /// `--net-aimd-spike S` (dispatching roles): an outcome whose
+    /// latency exceeds S times the connection's EWMA halves the
+    /// adaptive window (multiplicative decrease). Must be >= 2;
+    /// default 4 — the historical hard-coded constant.
+    pub aimd_spike: u32,
+    /// `--net-aimd-cap N` (dispatching roles): upper bound on the
+    /// adaptive window's additive growth. Must be >= 1; default 32 —
+    /// the historical hard-coded constant.
+    pub aimd_cap: usize,
+}
+
+/// Parse a `--shard i/G` spec into `(i, G)` with `0 <= i < G`.
+fn parse_shard(spec: &str) -> Result<(u32, u32), ConfigError> {
+    let bad = || ConfigError::BadShardSpec {
+        spec: spec.to_string(),
+    };
+    let (i, g) = spec.split_once('/').ok_or_else(bad)?;
+    let i: u32 = i.parse().map_err(|_| bad())?;
+    let g: u32 = g.parse().map_err(|_| bad())?;
+    if g == 0 || i >= g {
+        return Err(bad());
+    }
+    Ok((i, g))
 }
 
 impl NetCfg {
@@ -956,11 +1031,14 @@ impl NetCfg {
                 "heartbeat-ms",
                 "net-hedge-ms",
                 "net-token",
+                "net-aimd-spike",
+                "net-aimd-cap",
+                "shard",
             ] {
                 ensure!(
                     args.get(flag).is_none(),
                     "--{flag} only makes sense with \
-                     --role server|worker"
+                     --role server|worker|aggregator"
                 );
             }
             return Ok(None);
@@ -980,6 +1058,19 @@ impl NetCfg {
             "--net-hedge-ms ({hedge_ms}) must be less than \
              --net-timeout-ms ({timeout_ms}), or 0 to disable hedging"
         );
+        // AIMD knobs of the adaptive window (defaults unchanged from
+        // the historical hard-coded constants: 4x spike, cap 32)
+        let aimd_spike = args.parse_or("net-aimd-spike", 4u32)?;
+        if aimd_spike < 2 {
+            return Err(ConfigError::AimdSpikeTooSmall {
+                got: aimd_spike,
+            }
+            .into());
+        }
+        let aimd_cap = args.parse_or("net-aimd-cap", 32usize)?;
+        if aimd_cap == 0 {
+            return Err(ConfigError::AimdCapZero.into());
+        }
         let token = args.get("net-token").map(String::from);
         if let Some(t) = &token {
             ensure!(
@@ -995,12 +1086,19 @@ impl NetCfg {
             "--heartbeat-ms ({heartbeat_ms}) must be less than \
              --net-timeout-ms ({timeout_ms}), or 0 to disable probing"
         );
+        let shard = match args.get("shard") {
+            Some(_) if role != "aggregator" => {
+                return Err(ConfigError::ShardWithoutAggregator.into());
+            }
+            Some(spec) => Some(parse_shard(spec)?),
+            None => None,
+        };
         let cfg = match role {
             "server" => {
                 ensure!(
                     args.get("connect").is_none(),
-                    "--connect is a worker flag; --role server \
-                     listens (--listen ADDR)"
+                    "--connect is a worker/aggregator flag; --role \
+                     server listens (--listen ADDR)"
                 );
                 let addr = args
                     .required("listen", "--role server")
@@ -1010,45 +1108,95 @@ impl NetCfg {
                 NetCfg {
                     role: NetRole::Server,
                     addr: addr.to_string(),
+                    listen: None,
+                    shard: None,
                     workers,
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
                     hedge_ms,
                     token,
+                    aimd_spike,
+                    aimd_cap,
                 }
             }
             "worker" => {
                 ensure!(
                     args.get("listen").is_none(),
-                    "--listen is a server flag; --role worker \
-                     connects (--connect ADDR)"
+                    "--listen is a server/aggregator flag; --role \
+                     worker connects (--connect ADDR)"
                 );
                 ensure!(
                     args.get("workers").is_none(),
-                    "--workers only applies to --role server"
+                    "--workers only applies to roles that accept \
+                     downstream connections (server, aggregator)"
                 );
                 ensure!(
                     args.get("net-hedge-ms").is_none(),
-                    "--net-hedge-ms only applies to --role server \
-                     (the server decides when to hedge)"
+                    "--net-hedge-ms only applies to dispatching \
+                     roles (the dispatcher decides when to hedge)"
                 );
+                for flag in ["net-aimd-spike", "net-aimd-cap"] {
+                    ensure!(
+                        args.get(flag).is_none(),
+                        "--{flag} only applies to dispatching roles \
+                         (server, aggregator): the window is the \
+                         dispatcher's"
+                    );
+                }
                 let addr = args
                     .required("connect", "--role worker")
                     .context("e.g. --connect 127.0.0.1:7878")?;
                 NetCfg {
                     role: NetRole::Worker,
                     addr: addr.to_string(),
+                    listen: None,
+                    shard: None,
                     workers: 1,
                     timeout_ms,
                     inflight,
                     heartbeat_ms,
                     hedge_ms: 0,
                     token,
+                    aimd_spike,
+                    aimd_cap,
+                }
+            }
+            "aggregator" => {
+                let addr = args
+                    .required("connect", "--role aggregator")
+                    .context(
+                        "the upstream root, e.g. \
+                         --connect 127.0.0.1:7878",
+                    )?;
+                let listen = args
+                    .required("listen", "--role aggregator")
+                    .context(
+                        "the downstream worker listener, e.g. \
+                         --listen 127.0.0.1:7879",
+                    )?;
+                let workers = args.parse_or("workers", 1usize)?;
+                ensure!(workers >= 1, "--workers must be at least 1");
+                NetCfg {
+                    role: NetRole::Aggregator,
+                    addr: addr.to_string(),
+                    listen: Some(listen.to_string()),
+                    shard,
+                    workers,
+                    timeout_ms,
+                    inflight,
+                    heartbeat_ms,
+                    hedge_ms,
+                    token,
+                    aimd_spike,
+                    aimd_cap,
                 }
             }
             other => {
-                bail!("unknown --role '{other}' (server|worker)")
+                bail!(
+                    "unknown --role '{other}' \
+                     (server|worker|aggregator)"
+                )
             }
         };
         Ok(Some(cfg))
@@ -1096,7 +1244,13 @@ impl SnapshotCfg {
         // `--resume x` as an option — accept both spellings
         let resume =
             args.flag("resume") || args.get("resume").is_some();
-        if matches!(net, Some(n) if n.role == NetRole::Worker) {
+        if matches!(
+            net,
+            Some(n) if matches!(
+                n.role,
+                NetRole::Worker | NetRole::Aggregator
+            )
+        ) {
             for (present, flag) in [
                 (dir.is_some(), "snapshot-dir"),
                 (every_present, "snapshot-every"),
@@ -1176,11 +1330,14 @@ impl DaemonCfg {
             "heartbeat-ms",
             "net-hedge-ms",
             "net-token",
+            "net-aimd-spike",
+            "net-aimd-cap",
+            "shard",
         ] {
             ensure!(
                 args.get(flag).is_none(),
                 "--{flag} only makes sense with --role \
-                 server|worker, not --role daemon"
+                 server|worker|aggregator, not --role daemon"
             );
         }
         // per-job snapshots live under --queue-dir (<id>.snaps/) and
@@ -1220,7 +1377,13 @@ pub fn telemetry_listen_from_args(
     let Some(addr) = args.get("telemetry-listen") else {
         return Ok(None);
     };
-    if matches!(net, Some(n) if n.role == NetRole::Worker) {
+    if matches!(
+        net,
+        Some(n) if matches!(
+            n.role,
+            NetRole::Worker | NetRole::Aggregator
+        )
+    ) {
         return Err(ConfigError::TelemetryOnWorker.into());
     }
     ensure!(
@@ -1467,6 +1630,156 @@ mod tests {
     }
 
     #[test]
+    fn aggregator_role_parses_and_guards() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        // full spelling: upstream --connect, downstream --listen,
+        // a shard pin, and a downstream worker count
+        let n = NetCfg::from_args(&args(
+            "run --role aggregator --connect 127.0.0.1:7878 \
+             --listen 127.0.0.1:7879 --shard 1/4 --workers 2",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.role, NetRole::Aggregator);
+        assert_eq!(n.addr, "127.0.0.1:7878");
+        assert_eq!(n.listen.as_deref(), Some("127.0.0.1:7879"));
+        assert_eq!(n.shard, Some((1, 4)));
+        assert_eq!(n.workers, 2);
+        // the pin is optional: the root assigns shards in
+        // connection order when absent
+        let n = NetCfg::from_args(&args(
+            "run --role aggregator --connect a:1 --listen b:2",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n.shard, None);
+        assert_eq!(n.workers, 1);
+        // both endpoints are required — a mid-tier with only one
+        // side is a misconfiguration, not a default
+        assert!(NetCfg::from_args(&args(
+            "run --role aggregator --connect a:1"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args(
+            "run --role aggregator --listen b:2"
+        ))
+        .is_err());
+        // bad shard specs are typed errors with a pinned message
+        let typed = |a: &str| {
+            NetCfg::from_args(&args(a))
+                .unwrap_err()
+                .downcast::<ConfigError>()
+                .expect("typed ConfigError")
+        };
+        for bad in ["4/4", "5/4", "x/4", "2/x", "2", "2/0", "-1/4"] {
+            let e = typed(&format!(
+                "run --role aggregator --connect a:1 --listen b:2 \
+                 --shard {bad}"
+            ));
+            assert_eq!(
+                e,
+                ConfigError::BadShardSpec {
+                    spec: bad.to_string()
+                },
+                "{bad}"
+            );
+        }
+        assert_eq!(
+            typed(
+                "run --role aggregator --connect a:1 --listen b:2 \
+                 --shard 7"
+            )
+            .to_string(),
+            "bad --shard '7' (expected i/G with 0 <= i < G, e.g. \
+             --shard 0/2)"
+        );
+        // --shard on any other role is its own typed error
+        let e = typed("run --role server --listen a:1 --shard 0/2");
+        assert_eq!(e, ConfigError::ShardWithoutAggregator);
+        assert_eq!(
+            e.to_string(),
+            "--shard only applies to --role aggregator (the \
+             mid-tier role that owns a cohort shard)"
+        );
+        let e = typed("run --role worker --connect a:1 --shard 0/2");
+        assert_eq!(e, ConfigError::ShardWithoutAggregator);
+        // ...and without any role it is an orphan like the rest
+        assert!(NetCfg::from_args(&args("run --shard 0/2")).is_err());
+    }
+
+    #[test]
+    fn aimd_flags_parse_and_guard() {
+        let args = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        // defaults match the historical hard-coded constants, so
+        // existing launches see identical window behavior
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!((n.aimd_spike, n.aimd_cap), (4, 32));
+        // explicit values parse on dispatching roles
+        let n = NetCfg::from_args(&args(
+            "run --role server --listen a:1 --net-aimd-spike 8 \
+             --net-aimd-cap 64",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!((n.aimd_spike, n.aimd_cap), (8, 64));
+        let n = NetCfg::from_args(&args(
+            "run --role aggregator --connect a:1 --listen b:2 \
+             --net-aimd-spike 2 --net-aimd-cap 1",
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!((n.aimd_spike, n.aimd_cap), (2, 1));
+        // bounds are typed errors with pinned Display strings
+        let typed = |a: &str| {
+            NetCfg::from_args(&args(a))
+                .unwrap_err()
+                .downcast::<ConfigError>()
+                .expect("typed ConfigError")
+        };
+        let e =
+            typed("run --role server --listen a:1 --net-aimd-spike 1");
+        assert_eq!(e, ConfigError::AimdSpikeTooSmall { got: 1 });
+        assert_eq!(
+            e.to_string(),
+            "--net-aimd-spike must be at least 2 (got 1): a spike \
+             threshold under 2x would halve the window on ordinary \
+             latency jitter"
+        );
+        let e =
+            typed("run --role server --listen a:1 --net-aimd-cap 0");
+        assert_eq!(e, ConfigError::AimdCapZero);
+        assert_eq!(
+            e.to_string(),
+            "--net-aimd-cap must be at least 1 (a zero cap would \
+             never let a connection carry a job)"
+        );
+        // workers never own a dispatch window
+        assert!(NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-aimd-spike 8"
+        ))
+        .is_err());
+        assert!(NetCfg::from_args(&args(
+            "run --role worker --connect a:1 --net-aimd-cap 16"
+        ))
+        .is_err());
+        // and without a role both flags are orphans
+        assert!(
+            NetCfg::from_args(&args("run --net-aimd-spike 8")).is_err()
+        );
+        assert!(
+            NetCfg::from_args(&args("run --net-aimd-cap 16")).is_err()
+        );
+    }
+
+    #[test]
     fn snapshot_flags_parse_and_guard() {
         let args = |s: &str| {
             Args::parse(s.split_whitespace().map(String::from))
@@ -1539,8 +1852,8 @@ mod tests {
         );
         assert_eq!(
             e.to_string(),
-            "--snapshot-dir only applies to the coordinator; --role \
-             worker holds no durable round state"
+            "--snapshot-dir only applies to the coordinator; worker \
+             and aggregator roles hold no durable round state"
         );
         let e = typed("run --resume", Some(&worker));
         assert_eq!(
@@ -1792,8 +2105,8 @@ mod tests {
         assert_eq!(
             e.to_string(),
             "--telemetry-listen only applies to processes that \
-             drive the round loop; --role worker never emits \
-             telemetry"
+             drive the round loop; worker and aggregator roles \
+             never emit telemetry"
         );
         // an empty address is a config error, not "telemetry off"
         assert!(telemetry_listen_from_args(

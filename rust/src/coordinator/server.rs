@@ -745,26 +745,48 @@ impl<'a> Server<'a> {
             }
             AggMode::Tree { nodes } => {
                 let ef_clients = &mut self.ef_clients;
-                tree::run_tree(
-                    self.transport.as_ref(),
-                    jobs,
-                    cfg.parallelism,
-                    cfg.fp8_kernel,
-                    nodes,
-                    t as u32,
-                    &m.segments,
-                    m.dim,
-                    m.alpha_dim,
-                    m.n_act,
-                    weighting,
-                    &mut self.comm,
-                    |pos, out| {
-                        if let Some(e) = out.ef.take() {
-                            store_ef(ef_clients, participants[pos], e);
-                        }
-                        Ok(())
-                    },
-                )?
+                // a transport fronting networked mid-tier aggregators
+                // dispatches whole shards; everything else runs the
+                // shards in-process. Same shard geometry, same
+                // canonical accumulation — bit-identical either way.
+                match self.transport.shard_dispatcher() {
+                    Some(dispatch) => tree::run_tree_net(
+                        dispatch,
+                        jobs,
+                        nodes,
+                        t as u32,
+                        &m.segments,
+                        m.dim,
+                        m.alpha_dim,
+                        m.n_act,
+                        weighting,
+                        &mut self.comm,
+                        |client, e| {
+                            store_ef(ef_clients, client as usize, e);
+                            Ok(())
+                        },
+                    )?,
+                    None => tree::run_tree(
+                        self.transport.as_ref(),
+                        jobs,
+                        cfg.parallelism,
+                        cfg.fp8_kernel,
+                        nodes,
+                        t as u32,
+                        &m.segments,
+                        m.dim,
+                        m.alpha_dim,
+                        m.n_act,
+                        weighting,
+                        &mut self.comm,
+                        |pos, out| {
+                            if let Some(e) = out.ef.take() {
+                                store_ef(ef_clients, participants[pos], e);
+                            }
+                            Ok(())
+                        },
+                    )?,
+                }
             }
         };
 

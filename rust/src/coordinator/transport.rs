@@ -141,6 +141,55 @@ impl WorkBuffers {
     }
 }
 
+/// Work order for one contiguous cohort shard, dispatched whole to a
+/// networked mid-tier aggregator (`--role aggregator`). Everything a
+/// deterministic peer cannot derive from its own config copy rides
+/// here: the *encoded* downlink broadcast and the server-held EF
+/// residuals of the shard's clients. The cohort itself is a pure
+/// function of `(seed, round)`, so only the position range travels.
+pub struct ShardSpec<'r> {
+    pub round: u32,
+    /// Cohort position range `[lo, hi)` this shard owns.
+    pub lo: u64,
+    pub hi: u64,
+    /// Shard index within the configured `tree:G` fan-out.
+    pub index: u32,
+    /// Configured fan-out G (shard geometry is derived from this,
+    /// never from the live connection count — re-dispatch after a
+    /// death must not change the tree shape).
+    pub nodes: u32,
+    /// The encoded downlink broadcast (shared by every shard).
+    pub down: &'r WirePayload,
+    /// `(client id, residual)` for the shard's participants that have
+    /// a stored EF residual; empty when EF is off.
+    pub efs: Vec<(u32, &'r [f32])>,
+}
+
+/// What a mid-tier aggregator answers a [`ShardSpec`] with: the folded
+/// [`TreePartial`] plus the client-edge uplink accounting and returned
+/// EF residuals the root needs to keep `CommStats` and the EF store
+/// bit-identical to an in-process tree.
+///
+/// [`TreePartial`]: super::aggregate::TreePartial
+pub struct ShardReply {
+    pub partial: super::aggregate::TreePartial,
+    /// Sum of the shard's client uplink wire bytes (payload bytes +
+    /// `UPLINK_HEADER_BYTES` each), as `CommStats::record_up` charges.
+    pub up_bytes: u64,
+    pub up_msgs: u64,
+    /// Updated `(client id, residual)` pairs, ascending by client id.
+    pub efs: Vec<(u32, Vec<f32>)>,
+}
+
+/// Shard-level dispatch: the seam [`run_tree_net`] drives when the
+/// transport fronts a pool of networked aggregators instead of
+/// workers. Implementations must be `Sync` — shards run concurrently.
+///
+/// [`run_tree_net`]: super::tree::run_tree_net
+pub trait ShardDispatch: Sync {
+    fn run_shard(&self, spec: &ShardSpec<'_>) -> Result<ShardReply>;
+}
+
 /// Where a client's local round executes. Implementations must be
 /// `Sync`: one transport instance serves the whole worker pool.
 pub trait Transport: Sync {
@@ -149,6 +198,14 @@ pub trait Transport: Sync {
         job: ClientJob<'_>,
         buffers: &mut WorkBuffers,
     ) -> Result<ClientOutcome>;
+
+    /// Non-`None` when this transport fronts mid-tier aggregators
+    /// and rounds should fan out whole shards ([`ShardSpec`]) instead
+    /// of individual client jobs. The default — every in-process and
+    /// plain worker-pool transport — dispatches per client.
+    fn shard_dispatcher(&self) -> Option<&dyn ShardDispatch> {
+        None
+    }
 }
 
 /// Transports pass through references, so callers can keep ownership
@@ -160,6 +217,10 @@ impl<T: Transport + ?Sized> Transport for &T {
         buffers: &mut WorkBuffers,
     ) -> Result<ClientOutcome> {
         (**self).run_client(job, buffers)
+    }
+
+    fn shard_dispatcher(&self) -> Option<&dyn ShardDispatch> {
+        (**self).shard_dispatcher()
     }
 }
 

@@ -17,7 +17,9 @@
 //!
 //! [`net::codec::encode_partial`]: crate::net::codec::encode_partial
 
-use anyhow::{ensure, Result};
+use std::thread;
+
+use anyhow::{ensure, Context, Result};
 
 use crate::fp8::codec::Segment;
 use crate::fp8::simd::KernelKind;
@@ -26,7 +28,10 @@ use crate::net::frame::FRAME_HEADER_BYTES;
 
 use super::aggregate::{Aggregate, FedAvgStream, TreePartial, Weighting};
 use super::comm::{CommStats, PARTIAL_HEADER_BYTES};
-use super::transport::{run_cohort, ClientJob, ClientOutcome, Transport};
+use super::transport::{
+    run_cohort, ClientJob, ClientOutcome, ShardDispatch, ShardSpec,
+    Transport,
+};
 
 /// Contiguous near-equal split of the cohort positions `[0, p)` into
 /// `min(nodes, p)` shards (the first `p % nodes` shards get one extra
@@ -141,6 +146,103 @@ where
             comm,
         )?;
         root.absorb(&partial)?;
+    }
+    let mut agg = root.finish()?;
+    agg.kweights =
+        n_ks.iter().map(|&n| weighting.kw(n) as f32).collect();
+    Ok(agg)
+}
+
+/// Run one round through *networked* mid-tier aggregators: fan whole
+/// shards out over `dispatch` (one [`ShardSpec`] per shard, executed
+/// concurrently), absorb the returned partials in shard order, and
+/// rebuild the flat path's accounting from the replies.
+///
+/// Shard geometry comes from the **configured** fan-out `nodes`, never
+/// from the live connection count: a dead aggregator's shard is
+/// re-dispatched to a survivor by the transport, so the tree shape —
+/// and therefore the canonical accumulation — is identical under any
+/// completable fault schedule.
+///
+/// `ef_sink` receives every returned `(client id, residual)` pair, in
+/// ascending client order within each shard and shard order across
+/// shards — the same client set the in-process sink would have taken
+/// out of the outcomes, so the server's EF store ends bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tree_net<F>(
+    dispatch: &dyn ShardDispatch,
+    jobs: Vec<ClientJob<'_>>,
+    nodes: usize,
+    round: u32,
+    segments: &[Segment],
+    dim: usize,
+    alpha_dim: usize,
+    beta_dim: usize,
+    weighting: Weighting,
+    comm: &mut CommStats,
+    mut ef_sink: F,
+) -> Result<Aggregate>
+where
+    F: FnMut(u32, Vec<f32>) -> Result<()>,
+{
+    ensure!(nodes > 0, "tree with zero aggregator nodes");
+    let n_ks: Vec<u64> = jobs.iter().map(|j| j.n_k).collect();
+    let mut root = FedAvgStream::with_weighting(
+        segments, dim, alpha_dim, beta_dim, weighting, false, 0,
+    )?;
+    let bounds = shard_bounds(jobs.len(), nodes);
+    let replies: Vec<_> = thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .enumerate()
+            .map(|(i, &(lo, hi))| {
+                let shard = &jobs[lo..hi];
+                s.spawn(move || {
+                    let spec = ShardSpec {
+                        round,
+                        lo: lo as u64,
+                        hi: hi as u64,
+                        index: i as u32,
+                        nodes: nodes as u32,
+                        // every job carries the same broadcast
+                        down: shard[0].down,
+                        efs: shard
+                            .iter()
+                            .filter_map(|j| {
+                                let e = j.ef.as_deref()?;
+                                Some((j.client as u32, e))
+                            })
+                            .collect(),
+                    };
+                    dispatch.run_shard(&spec)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard dispatcher panicked"))
+            .collect()
+    });
+    for ((lo, hi), reply) in bounds.into_iter().zip(replies) {
+        let reply = reply
+            .with_context(|| format!("shard [{lo}, {hi})"))?;
+        ensure!(
+            reply.partial.start == lo as u64
+                && reply.partial.end == hi as u64,
+            "aggregator answered for cohort range [{}, {}), \
+             expected [{lo}, {hi})",
+            reply.partial.start,
+            reply.partial.end,
+        );
+        // client-edge accounting, exactly as the in-process shard
+        // would have charged it outcome by outcome
+        comm.up_bytes += reply.up_bytes;
+        comm.up_msgs += reply.up_msgs;
+        comm.record_partial(&reply.partial);
+        for (client, ef) in reply.efs {
+            ef_sink(client, ef)?;
+        }
+        root.absorb(&reply.partial)?;
     }
     let mut agg = root.finish()?;
     agg.kweights =

@@ -1,11 +1,15 @@
 //! Job execution loop of the run-scheduler daemon.
 //!
-//! [`run_queue`] scans the queue once, then executes every runnable
-//! job — sequentially by default, or `slots`-wide over scoped worker
-//! threads. The scheduler is generic over the actual runner so tests
-//! can inject a mock (and the production runner in `main.rs` can
-//! build a full `Engine`/`Server` per job without this module
-//! depending on the runtime layer).
+//! [`run_queue`] drains the queue in passes: scan, execute every
+//! runnable job — sequentially by default, or `slots`-wide over
+//! scoped worker threads — then **re-scan**. Specs dropped into the
+//! queue directory while a pass was running are picked up by the next
+//! pass, so `fedfp8 daemon` drains a growing sweep without a restart;
+//! the loop exits once a re-scan discovers nothing new. The scheduler
+//! is generic over the actual runner so tests can inject a mock (and
+//! the production runner in `main.rs` can build a full
+//! `Engine`/`Server` per job without this module depending on the
+//! runtime layer).
 //!
 //! Restart contract (the crash-recovery half of the tentpole): a job
 //! whose persisted state is `running` was interrupted — the previous
@@ -14,32 +18,42 @@
 //! from the last durable round boundary instead of starting over.
 //! `done`/`failed` jobs are skipped; removing a job's state file
 //! re-queues it.
+//!
+//! Failure isolation: *nothing about one job can fail the pass*. A
+//! runner error is that job's `failed` entry; so is an IO error from
+//! persisting the job's own state transition (`queue.set_state`) —
+//! the disk may be full or the state path clobbered, but the other
+//! jobs in the queue still deserve their turn.
 
+use std::collections::HashSet;
 use std::sync::Mutex;
 
 use anyhow::Result;
 
 use super::queue::{Job, JobState, Queue};
 
-/// What one [`run_queue`] pass did, in terms of job ids.
+/// What one [`run_queue`] invocation did, in terms of job ids —
+/// accumulated across every drain pass (including jobs that arrived
+/// mid-run and were picked up by a re-scan).
 #[derive(Clone, Debug, Default)]
 pub struct Report {
     /// Ids in the order execution *started* (with `slots == 1` this
-    /// is exactly the filename order).
+    /// is exactly the filename order within each pass).
     pub started: Vec<String>,
     pub done: Vec<String>,
-    /// `(id, error)` for jobs whose runner returned an error. A
-    /// failed job never fails the pass — the rest of the queue still
-    /// runs; the caller decides what a non-empty list means.
+    /// `(id, error)` for jobs whose runner returned an error — or
+    /// whose state could not be persisted. A failed job never fails
+    /// the pass — the rest of the queue still runs; the caller
+    /// decides what a non-empty list means.
     pub failed: Vec<(String, String)>,
     /// Jobs already `done`/`failed` from a previous pass.
     pub skipped: Vec<String>,
 }
 
-/// Scan `queue` and execute every runnable job through `runner`,
-/// `slots` at a time. `on_state` observes every lifecycle transition
-/// (the telemetry hub's `/status` map rides this); it must be cheap
-/// and must not fail.
+/// Drain `queue` through `runner`, `slots` jobs at a time, re-scanning
+/// after each pass until no new runnable specs appear. `on_state`
+/// observes every lifecycle transition (the telemetry hub's `/status`
+/// map rides this); it must be cheap and must not fail.
 pub fn run_queue<F, S>(
     queue: &Queue,
     slots: usize,
@@ -50,31 +64,64 @@ where
     F: Fn(&Job) -> Result<()> + Send + Sync,
     S: Fn(&Job, JobState) + Send + Sync,
 {
-    let mut runnable = Vec::new();
     let mut report = Report::default();
-    for job in queue.scan()? {
-        match queue.read_state(&job.id)? {
-            Some((JobState::Done, _)) => {
-                on_state(&job, JobState::Done);
-                report.skipped.push(job.id);
+    // ids this invocation has already claimed (run, failed, or
+    // skipped) — a re-scan only surfaces jobs we have not seen
+    let mut seen: HashSet<String> = HashSet::new();
+    loop {
+        let mut runnable = Vec::new();
+        for job in queue.scan()? {
+            if seen.contains(&job.id) {
+                continue;
             }
-            Some((JobState::Failed, _)) => {
-                on_state(&job, JobState::Failed);
-                report.skipped.push(job.id);
+            seen.insert(job.id.clone());
+            match queue.read_state(&job.id)? {
+                Some((JobState::Done, _)) => {
+                    on_state(&job, JobState::Done);
+                    report.skipped.push(job.id);
+                }
+                Some((JobState::Failed, _)) => {
+                    on_state(&job, JobState::Failed);
+                    report.skipped.push(job.id);
+                }
+                // no state file, explicit `queued`, or `running` (= a
+                // previous daemon was killed mid-job; the runner's
+                // snapshot resume continues it bit-identically)
+                _ => runnable.push(job),
             }
-            // no state file, explicit `queued`, or `running` (= a
-            // previous daemon was killed mid-job; the runner's
-            // snapshot resume continues it bit-identically)
-            _ => runnable.push(job),
         }
+        if runnable.is_empty() {
+            // a full scan surfaced nothing new: the queue is drained
+            break;
+        }
+        run_pass(queue, slots, &on_state, &runner, &runnable, &mut report);
     }
+    Ok(report)
+}
+
+/// Execute one pass over `runnable`, appending into `report`.
+fn run_pass<F, S>(
+    queue: &Queue,
+    slots: usize,
+    on_state: &S,
+    runner: &F,
+    runnable: &[Job],
+    report: &mut Report,
+) where
+    F: Fn(&Job) -> Result<()> + Send + Sync,
+    S: Fn(&Job, JobState) + Send + Sync,
+{
     // persist the full backlog as `queued` before starting anything,
     // so `/status` (and a post-crash inspection) sees every job the
     // pass owns — except interrupted ones, which stay `running` on
-    // disk until their slot picks them up
-    for job in &runnable {
-        if queue.read_state(&job.id)?.is_none() {
-            queue.set_state(&job.id, JobState::Queued, None)?;
+    // disk until their slot picks them up. A persist failure here is
+    // observational only (the job still runs): noted, not fatal.
+    for job in runnable {
+        match queue.read_state(&job.id) {
+            Ok(None) => {
+                let _ = queue.set_state(&job.id, JobState::Queued, None);
+            }
+            Ok(Some(_)) | Err(_) => {}
         }
         on_state(job, JobState::Queued);
     }
@@ -82,8 +129,8 @@ where
     let next = Mutex::new(0usize);
     let started = Mutex::new(Vec::new());
     let done = Mutex::new(Vec::new());
-    let failed = Mutex::new(Vec::new());
-    let work = || -> Result<()> {
+    let failed = Mutex::new(Vec::<(String, String)>::new());
+    let work = || {
         loop {
             let i = {
                 let mut n = next.lock().unwrap();
@@ -96,21 +143,56 @@ where
             };
             let job = &runnable[i];
             started.lock().unwrap().push(job.id.clone());
-            queue.set_state(&job.id, JobState::Running, None)?;
+            // state-persist IO errors are demoted to this job's
+            // `failed` entry — "a failed job never fails the pass"
+            // holds even when the failure is the state file itself
+            if let Err(e) =
+                queue.set_state(&job.id, JobState::Running, None)
+            {
+                let msg =
+                    format!("persisting 'running' state: {e:#}");
+                on_state(job, JobState::Failed);
+                failed.lock().unwrap().push((job.id.clone(), msg));
+                continue;
+            }
             on_state(job, JobState::Running);
             match runner(job) {
-                Ok(()) => {
-                    queue.set_state(&job.id, JobState::Done, None)?;
-                    on_state(job, JobState::Done);
-                    done.lock().unwrap().push(job.id.clone());
-                }
+                Ok(()) => match queue.set_state(
+                    &job.id,
+                    JobState::Done,
+                    None,
+                ) {
+                    Ok(()) => {
+                        on_state(job, JobState::Done);
+                        done.lock().unwrap().push(job.id.clone());
+                    }
+                    Err(e) => {
+                        // the job itself succeeded, but without a
+                        // durable `done` a restart would re-run it —
+                        // surface that as a failure, not silence
+                        let msg = format!(
+                            "job succeeded but persisting 'done' \
+                             state failed: {e:#}"
+                        );
+                        on_state(job, JobState::Failed);
+                        failed
+                            .lock()
+                            .unwrap()
+                            .push((job.id.clone(), msg));
+                    }
+                },
                 Err(e) => {
-                    let msg = format!("{e:#}");
-                    queue.set_state(
+                    let mut msg = format!("{e:#}");
+                    if let Err(pe) = queue.set_state(
                         &job.id,
                         JobState::Failed,
                         Some(&msg),
-                    )?;
+                    ) {
+                        msg = format!(
+                            "{msg}; additionally, persisting \
+                             'failed' state failed: {pe:#}"
+                        );
+                    }
                     on_state(job, JobState::Failed);
                     failed
                         .lock()
@@ -119,23 +201,20 @@ where
                 }
             }
         }
-        Ok(())
     };
     let slots = slots.max(1).min(runnable.len().max(1));
     if slots == 1 {
-        work()?;
+        work();
     } else {
-        std::thread::scope(|s| -> Result<()> {
+        std::thread::scope(|s| {
             let handles: Vec<_> =
                 (0..slots).map(|_| s.spawn(&work)).collect();
             for h in handles {
-                h.join().expect("scheduler slot panicked")?;
+                h.join().expect("scheduler slot panicked");
             }
-            Ok(())
-        })?;
+        });
     }
-    report.started = started.into_inner().unwrap();
-    report.done = done.into_inner().unwrap();
-    report.failed = failed.into_inner().unwrap();
-    Ok(report)
+    report.started.append(&mut started.into_inner().unwrap());
+    report.done.append(&mut done.into_inner().unwrap());
+    report.failed.append(&mut failed.into_inner().unwrap());
 }

@@ -27,6 +27,17 @@
 //!            # must be launched with the identical preset/overrides
 //!            # (enforced by the config-fingerprint handshake).
 //!            # Reconnects with its outcome cache intact after drops.
+//! fedfp8 run --preset ... --agg tree:G --role server --listen ADDR
+//!            # networked tree root: accepts G --role aggregator
+//!            # connections and dispatches whole cohort shards;
+//!            # bit-identical to in-process tree:G and to flat
+//! fedfp8 run --preset ... --agg tree:G --role aggregator \
+//!            --connect ROOT --listen ADDR [--workers N] [--shard i/G]
+//!            # mid-tier tree node: serves its cohort shard on N
+//!            # downstream workers, folds their uplinks and forwards
+//!            # one Partial frame per round upstream. --shard pins
+//!            # the preferred shard index (the root falls back to
+//!            # any live aggregator on a death — still bit-identical)
 //! fedfp8 run --role daemon --queue-dir D [--daemon-slots N]
 //!            # run-scheduler daemon: execute every <id>.job.json in
 //!            # D (filename order; N jobs at a time), persisting
@@ -52,13 +63,13 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use fedfp8::config::{
-    telemetry_listen_from_args, DaemonCfg, ExperimentConfig, NetCfg,
-    NetRole, SnapshotCfg,
+    telemetry_listen_from_args, AggMode, DaemonCfg, ExperimentConfig,
+    NetCfg, NetRole, SnapshotCfg,
 };
 use fedfp8::coordinator::transport::InProcessTransport;
 use fedfp8::coordinator::{build_world, RunResult, Server, World};
 use fedfp8::daemon::{run_queue, Queue, TelemetryHub};
-use fedfp8::net::{self, Hello};
+use fedfp8::net::{self, Hello, PeerRole};
 use fedfp8::runtime::{default_dir, Engine, Manifest};
 use fedfp8::util::cli::Args;
 
@@ -133,6 +144,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => run_local(&preset, cfg, snap, telemetry),
         Some(n) if n.role == NetRole::Server => {
             run_net_server(&preset, cfg, n, snap, telemetry)
+        }
+        Some(n) if n.role == NetRole::Aggregator => {
+            run_net_aggregator(cfg, n)
         }
         Some(n) => run_net_worker(cfg, n),
     }
@@ -270,7 +284,11 @@ fn run_local(
     report_run(&engine, &result)
 }
 
-/// `--role server`: accept `--workers` handshaken connections, then
+/// `--role server`: accept the handshaken downstream pool —
+/// `--workers` worker connections under `--agg flat`, or G `--role
+/// aggregator` connections under `--agg tree:G` (the networked tree:
+/// the root dispatches whole cohort shards and absorbs their Partial
+/// frames; bit-identical to the in-process tree and to flat) — then
 /// drive the ordinary round loop through a `SocketTransport`.
 fn run_net_server(
     preset: &str,
@@ -288,36 +306,50 @@ fn run_net_server(
         dim: model.dim as u64,
         model: cfg.model.clone(),
         auth: net::token_digest(net.token.as_deref()),
+        role: PeerRole::Worker,
+        shard: None,
     };
     let listener = TcpListener::bind(&net.addr)
         .with_context(|| format!("binding {}", net.addr))?;
+    // the downstream pool's shape follows the aggregation topology:
+    // a tree root fronts G mid-tier aggregators, a flat root fronts
+    // --workers workers
+    let (peers, noun) = match cfg.agg {
+        AggMode::Tree { nodes } => (nodes, "aggregators"),
+        AggMode::Flat => (net.workers, "workers"),
+    };
     println!(
         "platform={}  preset={preset}  rounds={}  K={}  P={}  \
-         role=server listen={}  workers={}  inflight={}  \
+         role=server listen={}  agg={}  {noun}={peers}  inflight={}  \
          heartbeat={}ms  hedge={}ms  fingerprint={:#018x}",
         engine.platform(),
         cfg.rounds,
         cfg.clients,
         cfg.participation,
         listener.local_addr()?,
-        net.workers,
+        cfg.agg,
         net.inflight,
         net.heartbeat_ms,
         net.hedge_ms,
         hello.fingerprint,
     );
-    let transport = net::accept_workers(
-        listener,
-        net.workers,
-        &hello,
-        net::SocketCfg {
-            io_timeout: Duration::from_millis(net.timeout_ms),
-            heartbeat: Duration::from_millis(net.heartbeat_ms),
-            inflight: net.inflight,
-            hedge: Duration::from_millis(net.hedge_ms),
-        },
-    )?;
-    println!("[server] {} workers handshaken; starting", net.workers);
+    let sock_cfg = net::SocketCfg {
+        io_timeout: Duration::from_millis(net.timeout_ms),
+        heartbeat: Duration::from_millis(net.heartbeat_ms),
+        inflight: net.inflight,
+        hedge: Duration::from_millis(net.hedge_ms),
+        aimd_spike: net.aimd_spike,
+        aimd_cap: net.aimd_cap,
+    };
+    let transport = match cfg.agg {
+        AggMode::Tree { .. } => {
+            net::accept_aggregators(listener, peers, &hello, sock_cfg)?
+        }
+        AggMode::Flat => {
+            net::accept_workers(listener, peers, &hello, sock_cfg)?
+        }
+    };
+    println!("[server] {peers} {noun} handshaken; starting");
     let hub = bind_telemetry(telemetry)?;
     let mut server =
         Server::with_transport(&engine, &manifest, cfg, Box::new(&transport))?;
@@ -351,6 +383,8 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
         dim: model.dim as u64,
         model: cfg.model.clone(),
         auth: net::token_digest(net.token.as_deref()),
+        role: PeerRole::Worker,
+        shard: None,
     };
     let World { train, shards, .. } = build_world(&cfg, model)?;
     let ctx = net::WorkerCtx {
@@ -434,6 +468,135 @@ fn run_net_worker(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
     }
 }
 
+/// `--role aggregator`: mid-tier node of the networked tree. Accepts
+/// `--workers` downstream worker connections (this process is a
+/// server to its own workers), connects upstream to the `tree:G`
+/// root announcing the aggregator role (and the `--shard i/G` pin,
+/// if any), then serves whole cohort shards: each `FrameKind::Shard`
+/// executes through the downstream `SocketTransport` and answers
+/// with a ShardDone + Partial pair. A dropped upstream link is
+/// retried with backoff; re-dispatched shards recompute
+/// bit-identically from counter-derived streams.
+fn run_net_aggregator(cfg: ExperimentConfig, net: NetCfg) -> Result<()> {
+    let dir = default_dir();
+    let engine = Engine::new(&dir)?;
+    let manifest = Manifest::load(&dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let up_hello = Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: model.dim as u64,
+        model: cfg.model.clone(),
+        auth: net::token_digest(net.token.as_deref()),
+        role: PeerRole::Aggregator,
+        shard: net.shard,
+    };
+    // downstream, this process plays the server role
+    let down_hello = Hello {
+        role: PeerRole::Worker,
+        shard: None,
+        ..up_hello.clone()
+    };
+    let listen = net
+        .listen
+        .as_deref()
+        .expect("--role aggregator requires --listen");
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!(
+        "[aggregator] platform={}  model={}  workers={}  shard={}  \
+         fingerprint={:#018x}  listen={}  upstream={}",
+        engine.platform(),
+        cfg.model,
+        net.workers,
+        net.shard
+            .map(|(i, g)| format!("{i}/{g}"))
+            .unwrap_or_else(|| "auto".into()),
+        up_hello.fingerprint,
+        listener.local_addr()?,
+        net.addr,
+    );
+    let transport = net::accept_workers(
+        listener,
+        net.workers,
+        &down_hello,
+        net::SocketCfg {
+            io_timeout: Duration::from_millis(net.timeout_ms),
+            heartbeat: Duration::from_millis(net.heartbeat_ms),
+            inflight: net.inflight,
+            hedge: Duration::from_millis(net.hedge_ms),
+            aimd_spike: net.aimd_spike,
+            aimd_cap: net.aimd_cap,
+        },
+    )?;
+    println!(
+        "[aggregator] {} workers handshaken; connecting upstream",
+        net.workers
+    );
+    let World { train, shards, .. } = build_world(&cfg, model)?;
+    let ctx = net::AggregatorCtx {
+        cfg: &cfg,
+        train: &train,
+        shards: &shards,
+        segments: &model.segments,
+        dim: model.dim,
+        alpha_dim: model.alpha_dim,
+        beta_dim: model.n_act,
+    };
+    let opts = net::ServeOpts {
+        heartbeat: Duration::from_millis(net.heartbeat_ms),
+        idle_deadline: if net.heartbeat_ms == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_millis(net.timeout_ms)
+        },
+        exec_threads: 1,
+    };
+    // same lifetime-scoped budget as the worker reconnect loop
+    let mut attempt = 0u32;
+    let result = loop {
+        match net::connect(
+            &net.addr,
+            &up_hello,
+            Duration::from_millis(net.timeout_ms),
+        ) {
+            Ok(mut stream) => {
+                println!("[aggregator] upstream handshake ok; serving");
+                match net::serve_upstream(
+                    &mut stream,
+                    &transport,
+                    &ctx,
+                    &opts,
+                ) {
+                    Ok(()) => {
+                        println!(
+                            "[aggregator] root closed the connection; \
+                             exiting"
+                        );
+                        break Ok(());
+                    }
+                    Err(e) => eprintln!(
+                        "[aggregator] upstream lost: {e:#}; \
+                         reconnecting"
+                    ),
+                }
+            }
+            Err(e) => eprintln!("[aggregator] connect failed: {e:#}"),
+        }
+        attempt += 1;
+        if attempt > WORKER_RECONNECT_ATTEMPTS {
+            break Err(anyhow::anyhow!(
+                "giving up after {WORKER_RECONNECT_ATTEMPTS} \
+                 reconnect attempts"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(
+            300 * u64::from(attempt),
+        ));
+    };
+    transport.shutdown();
+    result
+}
+
 fn cmd_info() -> Result<()> {
     let dir = default_dir();
     let manifest = Manifest::load(&dir)?;
@@ -482,6 +645,14 @@ fn cmd_presets() {
     println!("  fedfp8 run --preset P --role server --listen ADDR \
               --workers N");
     println!("  fedfp8 run --preset P --role worker --connect ADDR");
+    println!();
+    println!("networked tree (root + G mid-tier aggregators):");
+    println!("  fedfp8 run --preset P --agg tree:G --role server \
+              --listen ROOT");
+    println!("  fedfp8 run --preset P --agg tree:G --role aggregator \
+              --connect ROOT --listen ADDR --workers N [--shard i/G]");
+    println!("  fedfp8 run --preset P --agg tree:G --role worker \
+              --connect ADDR");
 }
 
 fn main() -> Result<()> {

@@ -1,0 +1,477 @@
+//! Mid-tier aggregator side of the networked tree (`--role
+//! aggregator`): the upstream serve loop that turns one
+//! [`FrameKind::Shard`] work order per round into a `ShardDone` +
+//! [`FrameKind::Partial`] reply pair.
+//!
+//! An aggregator is a worker whose unit of work is a whole cohort
+//! shard: it rebuilds the round context locally (the cohort is a pure
+//! function of `(seed, round)`, the broadcast decodes bit-exactly
+//! from the shard's packed payload), constructs the same
+//! [`ClientJob`]s the root's in-process tree would have built —
+//! identical job ids, learning rate, QAT prefix rule and EF residuals
+//! — executes them through any [`Transport`] (its own downstream
+//! `SocketTransport` pool in the CLI, deterministic mocks in the
+//! loopback tests), folds the uplinks into a [`FedAvgStream`] starting
+//! at the shard's global cohort offset, and ships the resulting
+//! [`TreePartial`] upstream through the real wire codec. Because the
+//! stream's pairwise accumulator is canonical over global positions,
+//! the root's absorb is bit-identical to the in-process tree and to
+//! flat — pinned by tests/tree_net.rs.
+//!
+//! Liveness mirrors the worker serve loop: the reader keeps servicing
+//! the socket (acking root heartbeats) while the executor thread
+//! computes the shard, so a busy aggregator is never declared dead;
+//! total silence past [`ServeOpts::idle_deadline`] exits with the
+//! typed [`WireError::HeartbeatLost`].
+//!
+//! [`FrameKind::Shard`]: super::frame::FrameKind::Shard
+//! [`FrameKind::Partial`]: super::frame::FrameKind::Partial
+//! [`WireError::HeartbeatLost`]: super::frame::WireError::HeartbeatLost
+
+use std::collections::{HashMap, VecDeque};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{ExperimentConfig, QatMode};
+use crate::coordinator::aggregate::{
+    FedAvgStream, TreePartial, Weighting,
+};
+use crate::coordinator::cohort::ClientShards;
+use crate::coordinator::comm::UPLINK_HEADER_BYTES;
+use crate::coordinator::transport::{
+    run_cohort, streams, ClientJob, Transport,
+};
+use crate::coordinator::tree::shard_bounds;
+use crate::data::Dataset;
+use crate::fp8::codec::{self as fp8codec, DecodeLutCache, Segment};
+use crate::fp8::rng::Pcg32;
+
+use super::codec::{self, WireShard, WireShardDone};
+use super::frame::{
+    self, FrameKind, FrameReader, Liveness, TickAction, WireError,
+};
+use super::worker::ServeOpts;
+
+/// Everything an aggregator derives locally instead of receiving on
+/// the wire — the same pure-function world a worker rebuilds, plus
+/// the model geometry its [`FedAvgStream`] needs. Pinned to the
+/// root's copy by the handshake fingerprint.
+pub struct AggregatorCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub train: &'a Dataset,
+    pub shards: &'a ClientShards,
+    pub segments: &'a [Segment],
+    pub dim: usize,
+    pub alpha_dim: usize,
+    pub beta_dim: usize,
+}
+
+/// Queue + shutdown plumbing shared between the upstream reader and
+/// the shard executor thread (the aggregator-side mirror of the
+/// worker's serve plumbing; shards are strictly heavier than jobs, so
+/// one executor thread suffices — downstream parallelism lives in
+/// `run_cohort` and the worker pool, not here).
+struct UpstreamShared<'a> {
+    queue: Mutex<VecDeque<WireShard>>,
+    ready: Condvar,
+    stop: AtomicBool,
+    /// First executor failure; the reader surfaces it.
+    failure: Mutex<Option<anyhow::Error>>,
+    /// ShardDone + Partial pairs and heartbeat traffic serialize here.
+    writer: Mutex<&'a mut TcpStream>,
+}
+
+impl UpstreamShared<'_> {
+    fn halt(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+
+    fn fail(&self, e: anyhow::Error) {
+        let mut f = self.failure.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+        drop(f);
+        self.halt();
+    }
+}
+
+/// Drop guard: a panicking executor halts the serve loop instead of
+/// leaving the reader acking heartbeats for a shard that will never
+/// complete (the root cannot tell a wedged aggregator from a slow
+/// one, so the aggregator takes itself down).
+struct HaltOnPanic<'a, 'b>(&'a UpstreamShared<'b>);
+
+impl Drop for HaltOnPanic<'_, '_> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.halt();
+        }
+    }
+}
+
+/// Serve the root connection until it shuts the link down (an
+/// explicit Shutdown frame → `Ok`), the connection drops (bare EOF →
+/// typed error, so callers reconnect), the idle deadline expires, or
+/// a shard fails. Each decoded [`FrameKind::Shard`] is executed on
+/// `executor` (the aggregator's downstream transport) and answered
+/// with a ShardDone frame immediately followed by the shard's Partial
+/// frame on the same connection.
+///
+/// `opts.exec_threads` is ignored: shard-level concurrency is the
+/// root's window, and within a shard `cfg.parallelism` governs the
+/// cohort fan-out.
+///
+/// [`FrameKind::Shard`]: super::frame::FrameKind::Shard
+pub fn serve_upstream(
+    stream: &mut TcpStream,
+    executor: &dyn Transport,
+    ctx: &AggregatorCtx<'_>,
+    opts: &ServeOpts,
+) -> Result<()> {
+    ensure!(
+        opts.heartbeat.is_zero()
+            || opts.idle_deadline.is_zero()
+            || opts.heartbeat < opts.idle_deadline,
+        "heartbeat interval ({:?}) must be shorter than the idle \
+         deadline ({:?}), or zero to disable probing",
+        opts.heartbeat,
+        opts.idle_deadline
+    );
+    let live = Liveness::new(opts.heartbeat, opts.idle_deadline);
+    let mut reader_stream = stream
+        .try_clone()
+        .context("cloning the upstream connection for the reader")?;
+    reader_stream
+        .set_read_timeout(Some(live.tick()))
+        .context("setting the upstream read tick")?;
+    let shared = UpstreamShared {
+        queue: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+        stop: AtomicBool::new(false),
+        failure: Mutex::new(None),
+        writer: Mutex::new(stream),
+    };
+    let result = thread::scope(|s| -> Result<()> {
+        {
+            let shared = &shared;
+            s.spawn(move || {
+                let _halt_on_panic = HaltOnPanic(shared);
+                shard_executor_loop(shared, executor, ctx);
+            });
+        }
+        let r = reader_loop(&mut reader_stream, &shared, live);
+        shared.halt();
+        r
+    });
+    if let Some(e) = shared.failure.lock().unwrap().take() {
+        return Err(e);
+    }
+    result
+}
+
+/// The reader side: decode upstream frames, answer heartbeats, queue
+/// shards, and run the liveness deadline.
+fn reader_loop(
+    stream: &mut TcpStream,
+    shared: &UpstreamShared<'_>,
+    mut live: Liveness,
+) -> Result<()> {
+    let mut fr = FrameReader::new();
+    let mut hb_body = Vec::new();
+    let mut nonce = 0u64;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            // the executor failed; its error is surfaced by
+            // serve_upstream
+            return Ok(());
+        }
+        let polled = match fr.poll(stream) {
+            Ok(p) => p,
+            Err(e) if e.is_clean_close() => {
+                return Err(e).context(
+                    "upstream connection dropped without a Shutdown \
+                     frame",
+                );
+            }
+            Err(e) => {
+                return Err(e).context("reading the next upstream frame")
+            }
+        };
+        live.on_progress(fr.bytes_consumed());
+        let Some(f) = polled else {
+            match live.on_idle(true) {
+                TickAction::Dead { idle_ms, deadline_ms } => {
+                    return Err(WireError::HeartbeatLost {
+                        idle_ms,
+                        deadline_ms,
+                    })
+                    .context("root went silent");
+                }
+                TickAction::Probe => {
+                    nonce = nonce.wrapping_add(1);
+                    codec::encode_heartbeat(nonce, &mut hb_body);
+                    let mut w = shared.writer.lock().unwrap();
+                    frame::write_frame(
+                        &mut **w,
+                        FrameKind::Heartbeat,
+                        &hb_body,
+                    )
+                    .context("probing the root")?;
+                }
+                TickAction::Idle => {}
+            }
+            continue;
+        };
+        match f.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Heartbeat => {
+                let n = codec::decode_heartbeat(&f.body)?;
+                codec::encode_heartbeat(n, &mut hb_body);
+                let mut w = shared.writer.lock().unwrap();
+                frame::write_frame(
+                    &mut **w,
+                    FrameKind::HeartbeatAck,
+                    &hb_body,
+                )
+                .context("acking a root heartbeat")?;
+            }
+            FrameKind::HeartbeatAck => {
+                codec::decode_heartbeat(&f.body)?;
+            }
+            FrameKind::Shard => {
+                let shard = codec::decode_shard(&f.body)
+                    .context("decoding shard frame")?;
+                let mut q = shared.queue.lock().unwrap();
+                q.push_back(shard);
+                drop(q);
+                shared.ready.notify_one();
+            }
+            k => bail!(
+                "unexpected {k:?} frame on the aggregator's upstream \
+                 link"
+            ),
+        }
+    }
+}
+
+/// The executor thread: drain the shard queue, run each shard's
+/// sub-round, reply ShardDone then Partial.
+fn shard_executor_loop(
+    shared: &UpstreamShared<'_>,
+    executor: &dyn Transport,
+    ctx: &AggregatorCtx<'_>,
+) {
+    let mut lut = DecodeLutCache::default();
+    let mut w_start: Vec<f32> = Vec::new();
+    let mut done_body = Vec::new();
+    let mut partial_body = Vec::new();
+    loop {
+        let shard = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        let Some(shard) = shard else { return };
+        // ids survive the move of `shard` into run_shard (context)
+        let (round, lo, hi) = (shard.round, shard.lo, shard.hi);
+        match run_shard(shard, executor, ctx, &mut lut, &mut w_start) {
+            Ok((done, partial)) => {
+                codec::encode_shard_done(&done, &mut done_body);
+                codec::encode_partial(round, &partial, &mut partial_body);
+                // ShardDone strictly precedes the Partial on the wire
+                // (the root treats the reverse order as malformed):
+                // one writer lock spans the pair
+                let mut w = shared.writer.lock().unwrap();
+                let r = frame::write_frame(
+                    &mut **w,
+                    FrameKind::ShardDone,
+                    &done_body,
+                )
+                .and_then(|()| {
+                    frame::write_frame(
+                        &mut **w,
+                        FrameKind::Partial,
+                        &partial_body,
+                    )
+                });
+                if let Err(e) = r {
+                    drop(w);
+                    shared.fail(anyhow::Error::from(e).context(
+                        format!(
+                            "returning shard [{lo}, {hi}) round {round}"
+                        ),
+                    ));
+                    return;
+                }
+            }
+            Err(e) => {
+                shared.fail(e.context(format!(
+                    "executing shard [{lo}, {hi}) round {round}"
+                )));
+                return;
+            }
+        }
+    }
+}
+
+/// Rebuild the round context and execute one shard: the networked
+/// twin of the shard body of `tree::run_tree`, constructing jobs
+/// exactly as `Server::round` does so every byte downstream — and the
+/// folded partial upstream — is bit-identical to the in-process tree.
+fn run_shard(
+    shard: WireShard,
+    executor: &dyn Transport,
+    ctx: &AggregatorCtx<'_>,
+    lut: &mut DecodeLutCache,
+    w_start: &mut Vec<f32>,
+) -> Result<(WireShardDone, TreePartial)> {
+    let cfg = ctx.cfg;
+    let t = shard.round as usize;
+    // the cohort is a pure function of (seed, round) — only the
+    // position range travelled
+    let participants =
+        Pcg32::derive(cfg.seed, t as u64, 0, streams::COHORT)
+            .sample_distinct_sparse(
+                ctx.shards.n_clients(),
+                cfg.participation,
+            );
+    let (lo, hi) = (shard.lo as usize, shard.hi as usize);
+    // the locally derived geometry must agree with the root's, or the
+    // worlds diverged despite matching fingerprints
+    let expect = shard_bounds(participants.len(), shard.nodes as usize)
+        .get(shard.index as usize)
+        .copied();
+    ensure!(
+        expect == Some((lo, hi)),
+        "shard {}/{} claims positions [{lo}, {hi}), local round-{t} \
+         geometry says {expect:?} — worlds diverged",
+        shard.index,
+        shard.nodes,
+    );
+    // hard reset: decode the broadcast exactly as the root did (a
+    // pure LUT function of the payload bytes)
+    fp8codec::decode_into_pooled(
+        &shard.down,
+        ctx.segments,
+        lut,
+        cfg.parallelism,
+        w_start,
+    );
+    let w_start: &[f32] = w_start;
+    let lr = cfg.schedule.lr_at(cfg.lr, t, cfg.rounds);
+    // m_t spans the FULL cohort (weights are global, not per-shard)
+    let m_t: u64 = participants
+        .iter()
+        .map(|&k| ctx.shards.n_k(k))
+        .sum();
+    let weighting = Weighting::for_cohort(m_t, participants.len());
+    let n_clients = ctx.shards.n_clients();
+    let mut efs: HashMap<u32, Vec<f32>> =
+        shard.efs.into_iter().collect();
+    let members = &participants[lo..hi];
+    let cohort_shards: Vec<_> =
+        members.iter().map(|&k| ctx.shards.shard(k)).collect();
+    let mut jobs = Vec::with_capacity(members.len());
+    for (rel, &k) in members.iter().enumerate() {
+        // the same FP32-prefix heterogeneity rule as Server::round
+        let qat = if (k as f32)
+            < cfg.fp32_client_frac * n_clients as f32
+        {
+            QatMode::None
+        } else {
+            cfg.qat
+        };
+        // under EF the root ships every member's residual (zeros
+        // included); the fallback covers nothing in practice but
+        // keeps a missing entry from being a panic
+        let ef = if cfg.error_feedback {
+            Some(
+                efs.remove(&(k as u32))
+                    .unwrap_or_else(|| vec![0.0f32; ctx.dim]),
+            )
+        } else {
+            None
+        };
+        jobs.push(ClientJob {
+            round: t,
+            client: k,
+            // the dispatch tag is the GLOBAL cohort position
+            job_id: (lo + rel) as u32,
+            seed: cfg.seed,
+            qat,
+            lr,
+            weight_decay: cfg.weight_decay,
+            flip_aug: cfg.flip_aug,
+            comm: cfg.comm,
+            w_start,
+            alpha_start: &shard.down.alphas,
+            beta_start: &shard.down.betas,
+            train: ctx.train,
+            shard: cohort_shards[rel].as_ref(),
+            segments: ctx.segments,
+            n_k: cohort_shards[rel].len() as u64,
+            ef,
+            down: &shard.down,
+        });
+    }
+    // the mid stream starts at the shard's global offset, so its
+    // partial slots into the root's canonical accumulator
+    let mut mid = FedAvgStream::with_weighting(
+        ctx.segments,
+        ctx.dim,
+        ctx.alpha_dim,
+        ctx.beta_dim,
+        weighting,
+        false,
+        shard.lo,
+    )?;
+    let mut up_bytes = 0u64;
+    let mut up_msgs = 0u64;
+    let mut ret_efs: Vec<(u32, Vec<f32>)> = Vec::new();
+    run_cohort(
+        executor,
+        jobs,
+        cfg.parallelism,
+        cfg.fp8_kernel,
+        |_rel, mut out| {
+            // client-edge accounting, mirroring CommStats::record_up
+            // charge for charge — summed here, added raw at the root
+            up_bytes +=
+                out.uplink.payload.wire_bytes() + UPLINK_HEADER_BYTES;
+            up_msgs += 1;
+            // EVERY residual returns, all-zero ones included — the
+            // root's store_ef eviction depends on seeing them
+            if let Some(e) = out.ef.take() {
+                ret_efs.push((out.uplink.client as u32, e));
+            }
+            mid.push(&out.uplink);
+            Ok(())
+        },
+    )?;
+    ret_efs.sort_unstable_by_key(|&(c, _)| c);
+    let partial = mid.into_partial()?;
+    Ok((
+        WireShardDone {
+            round: shard.round,
+            lo: shard.lo,
+            hi: shard.hi,
+            up_bytes,
+            up_msgs,
+            efs: ret_efs,
+        },
+        partial,
+    ))
+}

@@ -116,6 +116,25 @@ pub struct WireOutcome {
     pub ef: Option<Vec<f32>>,
 }
 
+/// What kind of downstream peer a connection's [`Hello`] announces.
+///
+/// A server pool is homogeneous: it either executes client jobs
+/// (worker peers) or cohort shards (aggregator peers); mixing the two
+/// in one pool is a handshake-time error in `net::socket`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PeerRole {
+    /// Executes [`FrameKind::Job`] work orders.
+    ///
+    /// [`FrameKind::Job`]: super::frame::FrameKind::Job
+    #[default]
+    Worker,
+    /// Mid-tier tree node: executes [`FrameKind::Shard`] work orders
+    /// and answers with ShardDone + Partial.
+    ///
+    /// [`FrameKind::Shard`]: super::frame::FrameKind::Shard
+    Aggregator,
+}
+
 /// Connection handshake: proves both processes derived their world
 /// from the same experiment config and model before any job flows.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -131,6 +150,14 @@ pub struct Hello {
     /// constant time ([`digest_eq`]) — mismatch is a typed
     /// [`WireError::AuthRejected`] before any job flows.
     pub auth: u64,
+    /// What this peer executes. Absent on the wire (pre-aggregator
+    /// builds) decodes as [`PeerRole::Worker`], the only role that
+    /// existed then.
+    pub role: PeerRole,
+    /// `--shard i/G` pin of an aggregator peer: `(i, G)` with
+    /// `i < G`. `None` lets the root assign shards in connection
+    /// order. Always `None` for workers.
+    pub shard: Option<(u32, u32)>,
 }
 
 /// FNV-1a 64 digest of the shared handshake secret; `None` (no
@@ -522,12 +549,23 @@ pub fn encode_hello(h: &Hello, out: &mut Vec<u8>) {
     put_u16(out, h.model.len() as u16);
     out.extend_from_slice(h.model.as_bytes());
     put_u64(out, h.auth);
+    // role + shard pin trail the auth digest with the same
+    // optional-on-read rule; G = 0 encodes "no pin"
+    out.push(match h.role {
+        PeerRole::Worker => 0,
+        PeerRole::Aggregator => 1,
+    });
+    let (i, g) = h.shard.unwrap_or((0, 0));
+    put_u32(out, i);
+    put_u32(out, g);
 }
 
 /// Decode a [`Hello`] body. The trailing auth digest is optional on
 /// read (absent decodes as 0 = "no token"), so a tokenless build one
 /// PR older still handshakes against a tokenless launch of this one
-/// — and is rejected, not confused, the moment a token is set.
+/// — and is rejected, not confused, the moment a token is set. The
+/// role + shard trailer that follows is optional the same way
+/// (absent decodes as a worker, the only role that existed then).
 pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
     let mut r = Reader::new(body);
     let fingerprint = r.u64("fingerprint")?;
@@ -542,12 +580,40 @@ pub fn decode_hello(body: &[u8]) -> Result<Hello, WireError> {
     } else {
         0
     };
+    let (role, shard) = if r.remaining() > 0 {
+        let role = match r.u8("peer role")? {
+            0 => PeerRole::Worker,
+            1 => PeerRole::Aggregator,
+            v => {
+                return Err(WireError::Malformed {
+                    what: format!("invalid peer role byte {v}"),
+                })
+            }
+        };
+        let i = r.u32("shard index")?;
+        let g = r.u32("shard count")?;
+        let shard = if g == 0 {
+            None
+        } else {
+            if i >= g {
+                return Err(WireError::Malformed {
+                    what: format!("shard pin {i}/{g} out of range"),
+                });
+            }
+            Some((i, g))
+        };
+        (role, shard)
+    } else {
+        (PeerRole::Worker, None)
+    };
     r.finish()?;
     Ok(Hello {
         fingerprint,
         dim,
         model,
         auth,
+        role,
+        shard,
     })
 }
 
@@ -683,6 +749,182 @@ pub fn decode_partial(
     ))
 }
 
+// ---- tree shard dispatch (root <-> networked aggregator) -----------
+
+/// Fixed scalar metadata of a Shard body: round u32 + shard index u32
+/// + configured fan-out u32 + cohort lo u64 + cohort hi u64.
+pub const SHARD_META_BYTES: u64 = 28;
+/// Fixed scalar metadata of a ShardDone body: round u32 + lo u64 +
+/// hi u64 + up_bytes u64 + up_msgs u64 + ef count u32.
+pub const SHARD_DONE_META_BYTES: u64 = 40;
+
+/// One round's work order for a networked mid-tier aggregator
+/// ([`FrameKind::Shard`]): execute cohort positions `[lo, hi)` of the
+/// round's cohort (which the aggregator derives locally — the cohort
+/// draw is a pure function of the config) against the broadcast
+/// `down`, and answer with a ShardDone + Partial pair.
+///
+/// `index`/`nodes` name the shard's place in the configured `tree:G`
+/// topology so the aggregator can sanity-check a pin mismatch;
+/// `efs` carries the EF residuals of exactly the shard's clients
+/// (simulation-only state migration, like the per-job `ef` field).
+///
+/// [`FrameKind::Shard`]: super::frame::FrameKind::Shard
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireShard {
+    pub round: u32,
+    pub index: u32,
+    pub nodes: u32,
+    pub lo: u64,
+    pub hi: u64,
+    pub down: WirePayload,
+    /// `(client id, residual)` pairs, ascending by client id.
+    pub efs: Vec<(u32, Vec<f32>)>,
+}
+
+/// A networked aggregator's per-shard completion report
+/// ([`FrameKind::ShardDone`]), sent immediately *before* the shard's
+/// Partial frame: downstream uplink accounting (so the root's
+/// client-edge `CommStats` stays identical to an in-process tree) and
+/// the returned EF residuals. The Partial itself is the completion
+/// signal — a ShardDone without its Partial is an unfinished shard.
+///
+/// [`FrameKind::ShardDone`]: super::frame::FrameKind::ShardDone
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireShardDone {
+    pub round: u32,
+    pub lo: u64,
+    pub hi: u64,
+    /// Client-edge uplink bytes the shard's outcomes were charged
+    /// (`payload.wire_bytes() + UPLINK_HEADER_BYTES` per member).
+    pub up_bytes: u64,
+    pub up_msgs: u64,
+    /// `(client id, residual)` pairs, ascending by client id.
+    pub efs: Vec<(u32, Vec<f32>)>,
+}
+
+fn put_ef_map(out: &mut Vec<u8>, efs: &[(u32, &[f32])]) {
+    put_u32(out, efs.len() as u32);
+    for &(client, e) in efs {
+        put_u32(out, client);
+        put_u32(out, e.len() as u32);
+        put_f32s(out, e);
+    }
+}
+
+fn get_ef_map(
+    r: &mut Reader<'_>,
+) -> Result<Vec<(u32, Vec<f32>)>, WireError> {
+    let n = r.u32("ef map count")? as usize;
+    // bounds like decode_partial: cap pre-reservation by what the
+    // body could possibly hold
+    let mut efs = Vec::with_capacity(n.min(r.remaining() / 8));
+    for _ in 0..n {
+        let client = r.u32("ef map client")?;
+        let len = r.u32("ef map length")? as usize;
+        efs.push((client, r.f32s(len, "ef map residual")?));
+    }
+    Ok(efs)
+}
+
+/// Encode a Shard body straight from borrowed parts (the dispatch
+/// path holds the payload and residuals by reference).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_shard_parts(
+    round: u32,
+    index: u32,
+    nodes: u32,
+    lo: u64,
+    hi: u64,
+    down: &WirePayload,
+    efs: &[(u32, &[f32])],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    put_u32(out, round);
+    put_u32(out, index);
+    put_u32(out, nodes);
+    put_u64(out, lo);
+    put_u64(out, hi);
+    debug_assert_eq!(out.len() as u64, SHARD_META_BYTES);
+    put_payload(out, down);
+    put_ef_map(out, efs);
+}
+
+/// Encode a Shard body from an owned [`WireShard`] (tests, tools).
+pub fn encode_shard(s: &WireShard, out: &mut Vec<u8>) {
+    let efs: Vec<(u32, &[f32])> =
+        s.efs.iter().map(|(c, e)| (*c, e.as_slice())).collect();
+    encode_shard_parts(
+        s.round, s.index, s.nodes, s.lo, s.hi, &s.down, &efs, out,
+    );
+}
+
+/// Decode a Shard body. Rejects trailing bytes and inverted bounds.
+pub fn decode_shard(body: &[u8]) -> Result<WireShard, WireError> {
+    let mut r = Reader::new(body);
+    let round = r.u32("shard round")?;
+    let index = r.u32("shard index")?;
+    let nodes = r.u32("shard nodes")?;
+    let lo = r.u64("shard lo")?;
+    let hi = r.u64("shard hi")?;
+    if lo >= hi || index >= nodes {
+        return Err(WireError::Malformed {
+            what: format!(
+                "shard {index}/{nodes} bounds [{lo}, {hi}) invalid"
+            ),
+        });
+    }
+    let down = get_payload(&mut r)?;
+    let efs = get_ef_map(&mut r)?;
+    r.finish()?;
+    Ok(WireShard {
+        round,
+        index,
+        nodes,
+        lo,
+        hi,
+        down,
+        efs,
+    })
+}
+
+/// Encode a ShardDone body.
+pub fn encode_shard_done(d: &WireShardDone, out: &mut Vec<u8>) {
+    out.clear();
+    put_u32(out, d.round);
+    put_u64(out, d.lo);
+    put_u64(out, d.hi);
+    put_u64(out, d.up_bytes);
+    put_u64(out, d.up_msgs);
+    let efs: Vec<(u32, &[f32])> =
+        d.efs.iter().map(|(c, e)| (*c, e.as_slice())).collect();
+    put_ef_map(out, &efs);
+    debug_assert!(out.len() as u64 >= SHARD_DONE_META_BYTES);
+}
+
+/// Decode a ShardDone body. Rejects trailing bytes.
+pub fn decode_shard_done(
+    body: &[u8],
+) -> Result<WireShardDone, WireError> {
+    let mut r = Reader::new(body);
+    let round = r.u32("shard-done round")?;
+    let lo = r.u64("shard-done lo")?;
+    let hi = r.u64("shard-done hi")?;
+    let up_bytes = r.u64("shard-done up_bytes")?;
+    let up_msgs = r.u64("shard-done up_msgs")?;
+    let efs = get_ef_map(&mut r)?;
+    r.finish()?;
+    Ok(WireShardDone {
+        round,
+        lo,
+        hi,
+        up_bytes,
+        up_msgs,
+        efs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -748,6 +990,8 @@ mod tests {
             dim: 4096,
             model: "lenet_c10".into(),
             auth: token_digest(Some("hunter2")),
+            role: PeerRole::Worker,
+            shard: None,
         };
         let mut body = Vec::new();
         encode_hello(&h, &mut body);
@@ -757,11 +1001,35 @@ mod tests {
             decode_hello_ack(&body).unwrap(),
             (h.fingerprint, h.auth)
         );
-        // pre-token peers omit the trailing digest: decodes as 0,
-        // not as an error
+        // an aggregator announces itself and may pin a shard
+        let a = Hello {
+            role: PeerRole::Aggregator,
+            shard: Some((1, 4)),
+            ..h.clone()
+        };
+        encode_hello(&a, &mut body);
+        assert_eq!(decode_hello(&body).unwrap(), a);
+        // a pin outside its group is rejected, not clamped
+        let mut bad = Vec::new();
+        encode_hello(&a, &mut bad);
+        let n = bad.len();
+        bad[n - 8..n - 4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_hello(&bad).is_err());
+        // pre-role peers omit the trailing role + pin (9 bytes):
+        // decodes as an unpinned worker, not as an error
         encode_hello(&h, &mut body);
-        body.truncate(body.len() - 8);
-        assert_eq!(decode_hello(&body).unwrap().auth, 0);
+        body.truncate(body.len() - 9);
+        let d = decode_hello(&body).unwrap();
+        assert_eq!(d.auth, h.auth);
+        assert_eq!(d.role, PeerRole::Worker);
+        assert_eq!(d.shard, None);
+        // pre-token peers also omit the digest (17 bytes total):
+        // auth decodes as 0, not as an error
+        encode_hello(&h, &mut body);
+        body.truncate(body.len() - 17);
+        let d = decode_hello(&body).unwrap();
+        assert_eq!(d.auth, 0);
+        assert_eq!(d.role, PeerRole::Worker);
         encode_hello_ack(h.fingerprint, h.auth, &mut body);
         body.truncate(8);
         assert_eq!(
@@ -949,6 +1217,97 @@ mod tests {
         // fragment count lives at meta offset 24..28: forge u32::MAX
         body[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = decode_partial(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed { .. }), "{err}");
+    }
+
+    fn sample_shard() -> WireShard {
+        WireShard {
+            round: 3,
+            index: 1,
+            nodes: 4,
+            lo: 6,
+            hi: 11,
+            down: sample_payload(),
+            efs: vec![
+                (7, vec![0.5, -1.25, f32::MIN_POSITIVE]),
+                (9, vec![]),
+                (10, vec![2.0; 5]),
+            ],
+        }
+    }
+
+    #[test]
+    fn shard_roundtrips() {
+        let s = sample_shard();
+        let mut body = Vec::new();
+        encode_shard(&s, &mut body);
+        assert_eq!(decode_shard(&body).unwrap(), s);
+        // the borrowed-parts encoder produces the identical body
+        let efs: Vec<(u32, &[f32])> =
+            s.efs.iter().map(|(c, e)| (*c, e.as_slice())).collect();
+        let mut parts = Vec::new();
+        encode_shard_parts(
+            s.round, s.index, s.nodes, s.lo, s.hi, &s.down, &efs,
+            &mut parts,
+        );
+        assert_eq!(parts, body);
+        // no residuals in flight is a plain empty map
+        let bare = WireShard {
+            efs: Vec::new(),
+            ..sample_shard()
+        };
+        encode_shard(&bare, &mut body);
+        assert_eq!(decode_shard(&body).unwrap(), bare);
+    }
+
+    #[test]
+    fn shard_rejects_bad_bounds_truncation_and_trailing() {
+        let mut body = Vec::new();
+        for (index, nodes, lo, hi) in
+            [(1, 4, 6, 6), (1, 4, 8, 6), (4, 4, 6, 11), (0, 0, 6, 11)]
+        {
+            let s = WireShard {
+                index,
+                nodes,
+                lo,
+                hi,
+                ..sample_shard()
+            };
+            encode_shard(&s, &mut body);
+            let err = decode_shard(&body).unwrap_err();
+            assert!(
+                matches!(err, WireError::Malformed { .. }),
+                "{index}/{nodes} [{lo},{hi}): {err}"
+            );
+        }
+        encode_shard(&sample_shard(), &mut body);
+        assert!(decode_shard(&body[..body.len() - 2]).is_err());
+        body.push(0);
+        assert!(decode_shard(&body).is_err());
+    }
+
+    #[test]
+    fn shard_done_roundtrips_and_rejects_damage() {
+        let d = WireShardDone {
+            round: 3,
+            lo: 6,
+            hi: 11,
+            up_bytes: 12_345,
+            up_msgs: 5,
+            efs: vec![(7, vec![1.0, -2.0]), (10, vec![0.0; 4])],
+        };
+        let mut body = Vec::new();
+        encode_shard_done(&d, &mut body);
+        assert!(body.len() as u64 > SHARD_DONE_META_BYTES);
+        assert_eq!(decode_shard_done(&body).unwrap(), d);
+        assert!(decode_shard_done(&body[..body.len() - 1]).is_err());
+        body.push(0);
+        assert!(decode_shard_done(&body).is_err());
+        // a forged EF count cannot trigger a giant allocation: the
+        // reservation is capped by the body length
+        encode_shard_done(&d, &mut body);
+        body[36..40].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_shard_done(&body).unwrap_err();
         assert!(matches!(err, WireError::Malformed { .. }), "{err}");
     }
 }

@@ -83,6 +83,15 @@ pub enum FrameKind {
     /// over a contiguous cohort shard (tree aggregation; body layout
     /// in `net::codec::encode_partial`).
     Partial = 8,
+    /// Root -> mid-tier aggregator: one round's shard work order
+    /// (shard bounds + downlink payload + EF residuals; body layout
+    /// in `net::codec::encode_shard`).
+    Shard = 9,
+    /// Mid-tier aggregator -> root: shard execution stats + returned
+    /// EF residuals, sent immediately before the shard's
+    /// [`FrameKind::Partial`] (body layout in
+    /// `net::codec::encode_shard_done`).
+    ShardDone = 10,
 }
 
 impl FrameKind {
@@ -96,6 +105,8 @@ impl FrameKind {
             6 => FrameKind::Heartbeat,
             7 => FrameKind::HeartbeatAck,
             8 => FrameKind::Partial,
+            9 => FrameKind::Shard,
+            10 => FrameKind::ShardDone,
             got => return Err(WireError::UnknownKind { got }),
         })
     }

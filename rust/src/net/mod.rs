@@ -26,6 +26,11 @@
 //!   local executor: a frame reader feeding an executor pool, plus
 //!   the [`worker::OutcomeCache`] that makes reconnects answer
 //!   re-dispatched jobs bit-identically without recomputing.
+//! * [`aggregator`] — the mid-tier serve loop of the networked tree
+//!   (`--role aggregator`): whole cohort shards arrive as
+//!   `FrameKind::Shard` work orders, execute through the aggregator's
+//!   own downstream transport, and return as a `ShardDone` +
+//!   `FrameKind::Partial` pair the root absorbs in cohort order.
 //!
 //! Determinism: a networked round is bit-identical to
 //! `InProcessTransport` at any parallelism, window size, and under
@@ -40,17 +45,22 @@
 //! (v1 frames must fail with the typed version mismatch, pinned
 //! against the retained `wire_v1.bin`).
 
+pub mod aggregator;
 pub mod codec;
 pub mod frame;
 pub mod poll;
 pub mod socket;
 pub mod worker;
 
-pub use codec::{digest_eq, token_digest, Hello, WireJob, WireOutcome};
+pub use aggregator::{serve_upstream, AggregatorCtx};
+pub use codec::{
+    digest_eq, token_digest, Hello, PeerRole, WireJob, WireOutcome,
+};
 pub use frame::{FrameReader, WireError, WIRE_VERSION};
 pub use poll::Poller;
 pub use socket::{
-    accept_workers, ConnDied, Inflight, SocketCfg, SocketTransport,
+    accept_aggregators, accept_workers, ConnDied, Inflight, SocketCfg,
+    SocketTransport,
 };
 pub use worker::{
     connect, serve_conn, OutcomeCache, ServeOpts, WorkerCtx,

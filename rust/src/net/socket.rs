@@ -87,19 +87,24 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::comm::Uplink;
 use crate::coordinator::transport::{
-    ClientJob, ClientOutcome, Transport, WorkBuffers,
+    ClientJob, ClientOutcome, ShardDispatch, ShardReply, ShardSpec,
+    Transport, WorkBuffers,
 };
 
-use super::codec::{self, Hello, WireOutcome};
+use super::codec::{self, Hello, PeerRole, WireOutcome, WireShardDone};
 use super::frame::{
     self, Frame, FrameKind, FrameReader, Liveness, TickAction, WireError,
 };
 use super::poll::Poller;
 
-/// Adaptive windows stop growing here — deep enough to hide wire
-/// latency on any realistic link, shallow enough that one slow worker
-/// can't strand a whole cohort behind it.
-const ADAPTIVE_MAX_WINDOW: usize = 32;
+/// Default adaptive-window growth cap (`--net-aimd-cap`) — deep
+/// enough to hide wire latency on any realistic link, shallow enough
+/// that one slow worker can't strand a whole cohort behind it.
+pub const ADAPTIVE_MAX_WINDOW: usize = 32;
+
+/// Default latency-spike multiplier (`--net-aimd-spike`): an outcome
+/// slower than `spike x` the connection's own EWMA halves its window.
+pub const AIMD_SPIKE_DEFAULT: u32 = 4;
 
 /// Worker-side executor-thread hint when the server window is
 /// adaptive (the worker can't know how far the window will grow).
@@ -182,6 +187,13 @@ pub struct SocketCfg {
     /// duplicated onto a second worker (first answer wins).
     /// `Duration::ZERO` disables hedging.
     pub hedge: Duration,
+    /// AIMD spike multiplier for the adaptive window
+    /// (`--net-aimd-spike`, >= 2): an outcome slower than this many
+    /// times the connection's latency EWMA halves its window.
+    pub aimd_spike: u32,
+    /// AIMD growth cap for the adaptive window (`--net-aimd-cap`,
+    /// >= 1): windows never grow past this many in-flight jobs.
+    pub aimd_cap: usize,
 }
 
 impl SocketCfg {
@@ -196,6 +208,8 @@ impl SocketCfg {
             heartbeat: Liveness::default_heartbeat(io_timeout),
             inflight: Inflight::Fixed(4),
             hedge: Duration::ZERO,
+            aimd_spike: AIMD_SPIKE_DEFAULT,
+            aimd_cap: ADAPTIVE_MAX_WINDOW,
         }
     }
 }
@@ -248,6 +262,19 @@ impl std::error::Error for ConnDied {
 type PendingKey = (u32, u32, u32); // (round, client, job_id)
 type PendingTx = mpsc::Sender<Result<WireOutcome, ConnDied>>;
 
+type ShardKey = (u32, u64); // (round, shard lo)
+type ShardTx = mpsc::Sender<Result<ShardReply, ConnDied>>;
+
+/// One registered in-flight shard on an aggregator connection. The
+/// protocol answers with a ShardDone (stats + EF) *then* the Partial;
+/// the ShardDone is stashed here until the Partial completes the
+/// pair. Same claim semantics as [`PendingEntry`].
+struct ShardEntry {
+    tx: ShardTx,
+    claimed: Arc<AtomicBool>,
+    done: Option<WireShardDone>,
+}
+
 /// One registered in-flight job: where to deliver the outcome, when
 /// the Job frame went out (feeds the adaptive window), and the
 /// claim flag shared by every route a hedged job rides on — the
@@ -268,6 +295,12 @@ struct Conn {
     writer: Mutex<TcpStream>,
     /// In-flight jobs awaiting their Outcome frames.
     pending: Mutex<HashMap<PendingKey, PendingEntry>>,
+    /// In-flight shards awaiting their ShardDone + Partial pairs
+    /// (aggregator pools only).
+    shard_pending: Mutex<HashMap<ShardKey, ShardEntry>>,
+    /// The shard the peer asked to own (`--shard i/G`); dispatch
+    /// prefers the pinned connection but re-dispatches anywhere.
+    shard_pin: Option<(u32, u32)>,
     /// Slots taken. Only mutated under the pool lock (see
     /// [`Shared::release_slot`] for why that makes the kill-race
     /// underflow impossible).
@@ -285,6 +318,10 @@ struct Conn {
 struct Shared {
     cfg: SocketCfg,
     hello: Hello,
+    /// Role every peer of this pool must announce — a homogeneous
+    /// pool (all workers, or all mid-tier aggregators), validated at
+    /// every handshake including replacements.
+    expect: PeerRole,
     /// Live connections (a dead one is removed before its pending
     /// jobs are failed over).
     conns: Mutex<Vec<Arc<Conn>>>,
@@ -312,6 +349,11 @@ struct Shared {
     /// Heartbeat probes sent (liveness traffic, excluded from the
     /// CommStats byte identity).
     heartbeats_sent: AtomicU64,
+    /// Matched Partial frame bytes received from aggregators — each
+    /// shard's partial exactly once (duplicates land in the duplicate
+    /// counters). Equals `CommStats.partial_bytes` for the run: the
+    /// backbone reported-vs-framed identity.
+    partial_bytes_received: AtomicU64,
     /// Jobs re-dispatched to a surviving worker after a failure.
     requeues: AtomicU64,
     /// Jobs duplicated onto a second worker by the hedge timer.
@@ -329,72 +371,102 @@ pub struct SocketTransport {
     shared: Arc<Shared>,
 }
 
-/// Validate a peer's opening frame against our Hello. Pure — shared
-/// by the blocking initial handshake and the poll loop's non-blocking
+/// Human noun for a pool's peers, for error and log text.
+fn peer_noun(expect: PeerRole) -> &'static str {
+    match expect {
+        PeerRole::Worker => "worker",
+        PeerRole::Aggregator => "aggregator",
+    }
+}
+
+/// Validate a peer's opening frame against our Hello, returning its
+/// decoded handshake (the shard pin rides in it). Pure — shared by
+/// the blocking initial handshake and the poll loop's non-blocking
 /// replacement handshake.
-fn check_hello_frame(f: &Frame, peer: &str, hello: &Hello) -> Result<()> {
+fn check_hello_frame(
+    f: &Frame,
+    peer: &str,
+    hello: &Hello,
+    expect: PeerRole,
+) -> Result<codec::Hello> {
+    let noun = peer_noun(expect);
     ensure!(
         f.kind == FrameKind::Hello,
-        "worker {peer} opened with a {:?} frame, expected Hello",
+        "{noun} {peer} opened with a {:?} frame, expected Hello",
         f.kind
     );
     let h = codec::decode_hello(&f.body)
-        .with_context(|| format!("handshake with worker {peer}"))?;
+        .with_context(|| format!("handshake with {noun} {peer}"))?;
     // auth gates everything else: an unauthenticated peer learns
     // nothing about our config beyond "the digest didn't match"
     if !codec::digest_eq(h.auth, hello.auth) {
         return Err(WireError::AuthRejected)
-            .with_context(|| format!("handshake with worker {peer}"));
+            .with_context(|| format!("handshake with {noun} {peer}"));
     }
     ensure!(
         h.fingerprint == hello.fingerprint,
-        "config fingerprint mismatch with worker {peer}: server \
-         {:#018x}, worker {:#018x} — launch every worker with the \
+        "config fingerprint mismatch with {noun} {peer}: server \
+         {:#018x}, peer {:#018x} — launch every peer with the \
          identical preset and overrides",
         hello.fingerprint,
         h.fingerprint
     );
     ensure!(
         h.model == hello.model,
-        "model mismatch with worker {peer}: server runs '{}', \
-         worker runs '{}'",
+        "model mismatch with {noun} {peer}: server runs '{}', \
+         peer runs '{}'",
         hello.model,
         h.model
     );
     ensure!(
         h.dim == hello.dim,
-        "model dim mismatch with worker {peer}: server {}, worker {}",
+        "model dim mismatch with {noun} {peer}: server {}, peer {}",
         hello.dim,
         h.dim
     );
-    Ok(())
+    // homogeneous pools: a worker must not handshake into an
+    // aggregator backbone (or vice versa) — the frame protocols differ
+    ensure!(
+        h.role == expect,
+        "peer {peer} connected as {:?}, but this listener accepts \
+         {noun}s only",
+        h.role
+    );
+    ensure!(
+        h.shard.is_none() || h.role == PeerRole::Aggregator,
+        "worker {peer} sent a shard pin — --shard only applies to \
+         aggregators"
+    );
+    Ok(h)
 }
 
-/// Handshake one inbound worker stream in place — blocking I/O, used
+/// Handshake one inbound peer stream in place — blocking I/O, used
 /// only for the initial fleet (replacements handshake non-blocking
 /// under the poll loop): validate its Hello against ours, ack it, and
-/// install the socket deadlines.
+/// install the socket deadlines. Returns the peer's decoded Hello.
 fn handshake(
     stream: &mut TcpStream,
     peer: &str,
     hello: &Hello,
     io_timeout: Duration,
-) -> Result<()> {
+    expect: PeerRole,
+) -> Result<codec::Hello> {
+    let noun = peer_noun(expect);
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(io_timeout))
-        .context("setting worker read timeout")?;
+        .with_context(|| format!("setting {noun} read timeout"))?;
     stream
         .set_write_timeout(Some(io_timeout))
-        .context("setting worker write timeout")?;
+        .with_context(|| format!("setting {noun} write timeout"))?;
     let f = frame::read_frame(stream)
-        .with_context(|| format!("handshake with worker {peer}"))?;
-    check_hello_frame(&f, peer, hello)?;
+        .with_context(|| format!("handshake with {noun} {peer}"))?;
+    let h = check_hello_frame(&f, peer, hello, expect)?;
     let mut ack = Vec::new();
     codec::encode_hello_ack(hello.fingerprint, hello.auth, &mut ack);
     frame::write_frame(stream, FrameKind::HelloAck, &ack)
-        .with_context(|| format!("acking worker {peer}"))?;
-    Ok(())
+        .with_context(|| format!("acking {noun} {peer}"))?;
+    Ok(h)
 }
 
 /// Accept `n` initial worker connections from `listener`, handshake
@@ -410,7 +482,35 @@ pub fn accept_workers(
     hello: &Hello,
     cfg: SocketCfg,
 ) -> Result<SocketTransport> {
-    ensure!(n >= 1, "need at least one worker connection");
+    accept_peers(listener, n, hello, cfg, PeerRole::Worker)
+}
+
+/// Accept `n` mid-tier aggregator connections (`--role aggregator`
+/// peers) and build the root's backbone transport: rounds fan out
+/// whole cohort shards ([`ShardSpec`]) instead of client jobs, and
+/// the pool answers with ShardDone + Partial pairs. Same poll-loop
+/// core, liveness and re-dispatch machinery as a worker pool.
+pub fn accept_aggregators(
+    listener: TcpListener,
+    n: usize,
+    hello: &Hello,
+    cfg: SocketCfg,
+) -> Result<SocketTransport> {
+    accept_peers(listener, n, hello, cfg, PeerRole::Aggregator)
+}
+
+fn accept_peers(
+    listener: TcpListener,
+    n: usize,
+    hello: &Hello,
+    cfg: SocketCfg,
+    expect: PeerRole,
+) -> Result<SocketTransport> {
+    ensure!(
+        n >= 1,
+        "need at least one {} connection",
+        peer_noun(expect)
+    );
     ensure!(
         !cfg.io_timeout.is_zero(),
         "worker io timeout must be non-zero"
@@ -438,12 +538,13 @@ pub fn accept_workers(
     );
     let mut initial = Vec::with_capacity(n);
     for _ in 0..n {
-        let (mut stream, peer) = listener
-            .accept()
-            .context("accepting a worker connection")?;
+        let (mut stream, peer) = listener.accept().with_context(|| {
+            format!("accepting a {} connection", peer_noun(expect))
+        })?;
         let peer = peer.to_string();
-        handshake(&mut stream, &peer, hello, cfg.io_timeout)?;
-        initial.push((stream, peer));
+        let h =
+            handshake(&mut stream, &peer, hello, cfg.io_timeout, expect)?;
+        initial.push((stream, peer, h.shard));
     }
     let mut poller =
         Poller::new().context("creating the readiness poller")?;
@@ -456,6 +557,7 @@ pub fn accept_workers(
     let shared = Arc::new(Shared {
         cfg,
         hello: hello.clone(),
+        expect,
         conns: Mutex::new(Vec::new()),
         slots: Condvar::new(),
         next_conn_id: AtomicU64::new(0),
@@ -466,21 +568,22 @@ pub fn accept_workers(
         duplicate_outcomes: AtomicU64::new(0),
         duplicate_outcome_bytes: AtomicU64::new(0),
         heartbeats_sent: AtomicU64::new(0),
+        partial_bytes_received: AtomicU64::new(0),
         requeues: AtomicU64::new(0),
         hedges: AtomicU64::new(0),
         hedge_bytes: AtomicU64::new(0),
         threads: Mutex::new(Vec::new()),
     });
     let mut states: HashMap<u64, ConnState> = HashMap::new();
-    for (stream, peer) in initial {
+    for (stream, peer, pin) in initial {
         stream
             .set_nonblocking(true)
-            .context("switching a worker connection to non-blocking")?;
+            .context("switching a peer connection to non-blocking")?;
         let reader = stream
             .try_clone()
-            .context("cloning a worker connection for its reader")?;
+            .context("cloning a peer connection for its reader")?;
         let token = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
-        let conn = Arc::new(new_conn(&shared, token, peer, stream));
+        let conn = Arc::new(new_conn(&shared, token, peer, stream, pin));
         poller
             .register_stream(&reader, token)
             .context("registering a worker connection with the poller")?;
@@ -509,12 +612,15 @@ fn new_conn(
     id: u64,
     peer: String,
     writer: TcpStream,
+    shard_pin: Option<(u32, u32)>,
 ) -> Conn {
     Conn {
         id,
         peer,
         writer: Mutex::new(writer),
         pending: Mutex::new(HashMap::new()),
+        shard_pending: Mutex::new(HashMap::new()),
+        shard_pin,
         in_flight: AtomicUsize::new(0),
         window: AtomicUsize::new(shared.cfg.inflight.initial_window()),
         lat_ewma_us: AtomicU64::new(0),
@@ -598,8 +704,8 @@ fn poll_loop(
                 return false;
             }
             st.live.on_progress(st.fr.bytes_consumed());
-            let has_pending =
-                !st.conn.pending.lock().unwrap().is_empty();
+            let has_pending = !st.conn.pending.lock().unwrap().is_empty()
+                || !st.conn.shard_pending.lock().unwrap().is_empty();
             let probing = !shared.cfg.heartbeat.is_zero();
             match st.live.on_idle(has_pending || probing) {
                 TickAction::Dead { idle_ms, deadline_ms } => {
@@ -716,7 +822,8 @@ fn drive_handshake(
             let hs = handshakes.remove(&token).unwrap();
             let _ = poller.deregister_stream(&hs.stream, token);
             eprintln!(
-                "[server] rejected replacement worker {}: {e:#}",
+                "[server] rejected replacement {} {}: {e:#}",
+                peer_noun(shared.expect),
                 hs.peer
             );
         }
@@ -738,11 +845,18 @@ fn finish_handshake(
     f: Frame,
 ) {
     let peer = hs.peer.clone();
-    if let Err(e) = check_hello_frame(&f, &peer, &shared.hello) {
-        let _ = poller.deregister_stream(&hs.stream, token);
-        eprintln!("[server] rejected replacement worker {peer}: {e:#}");
-        return;
-    }
+    let noun = peer_noun(shared.expect);
+    let h = match check_hello_frame(&f, &peer, &shared.hello, shared.expect)
+    {
+        Ok(h) => h,
+        Err(e) => {
+            let _ = poller.deregister_stream(&hs.stream, token);
+            eprintln!(
+                "[server] rejected replacement {noun} {peer}: {e:#}"
+            );
+            return;
+        }
+    };
     let mut ack = Vec::new();
     codec::encode_hello_ack(
         shared.hello.fingerprint,
@@ -759,7 +873,7 @@ fn finish_handshake(
     ) {
         let _ = poller.deregister_stream(&hs.stream, token);
         eprintln!(
-            "[server] rejected replacement worker {peer}: acking \
+            "[server] rejected replacement {noun} {peer}: acking \
              failed: {e}"
         );
         return;
@@ -769,13 +883,14 @@ fn finish_handshake(
         Err(e) => {
             let _ = poller.deregister_stream(&hs.stream, token);
             eprintln!(
-                "[server] rejected replacement worker {peer}: cloning \
+                "[server] rejected replacement {noun} {peer}: cloning \
                  its stream failed: {e}"
             );
             return;
         }
     };
-    let conn = Arc::new(new_conn(shared, token, hs.peer, writer));
+    let conn =
+        Arc::new(new_conn(shared, token, hs.peer, writer, h.shard));
     {
         let mut pool = shared.conns.lock().unwrap();
         // a replacement racing shutdown() must not be registered into
@@ -801,7 +916,7 @@ fn finish_handshake(
             ),
         },
     );
-    eprintln!("[server] replacement worker {peer} joined");
+    eprintln!("[server] replacement {noun} {peer} joined");
 }
 
 /// Drop handshakes that outlived `io_timeout` without completing —
@@ -818,8 +933,9 @@ fn expire_handshakes(
         }
         let _ = poller.deregister_stream(&hs.stream, token);
         eprintln!(
-            "[server] rejected replacement worker {}: handshake timed \
+            "[server] rejected replacement {} {}: handshake timed \
              out after {}ms",
+            peer_noun(shared.expect),
             hs.peer,
             deadline.as_millis()
         );
@@ -881,6 +997,8 @@ fn process_frame(
                             &conn.lat_ewma_us,
                             &conn.grown,
                             entry.sent_at.elapsed(),
+                            shared.cfg.aimd_spike,
+                            shared.cfg.aimd_cap,
                         );
                     }
                     shared.release_slot(conn);
@@ -932,12 +1050,97 @@ fn process_frame(
                 kill_conn(shared, conn, e);
             }
         }
+        FrameKind::ShardDone => {
+            let d = match codec::decode_shard_done(&f.body) {
+                Ok(d) => d,
+                Err(e) => {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            };
+            let key: ShardKey = (d.round, d.lo);
+            let mut sp = conn.shard_pending.lock().unwrap();
+            match sp.get_mut(&key) {
+                // stash the stats half; the Partial completes the pair
+                Some(entry) => entry.done = Some(d),
+                None => {
+                    // the answer to a shard that was re-dispatched
+                    // elsewhere: bit-identical by construction, drop
+                    drop(sp);
+                    shared
+                        .duplicate_outcomes
+                        .fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .duplicate_outcome_bytes
+                        .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                }
+            }
+        }
+        FrameKind::Partial => {
+            let (round, partial) = match codec::decode_partial(&f.body) {
+                Ok(p) => p,
+                Err(e) => {
+                    kill_conn(shared, conn, e);
+                    return;
+                }
+            };
+            let key: ShardKey = (round, partial.start);
+            let entry = conn.shard_pending.lock().unwrap().remove(&key);
+            match entry {
+                Some(entry)
+                    if !entry.claimed.swap(true, Ordering::SeqCst) =>
+                {
+                    // protocol order: the ShardDone (stats + EF) must
+                    // precede its Partial on the same connection
+                    let Some(done) = entry.done else {
+                        kill_conn(
+                            shared,
+                            conn,
+                            WireError::Malformed {
+                                what: format!(
+                                    "Partial for shard [{}, {}) arrived \
+                                     before its ShardDone",
+                                    partial.start, partial.end
+                                ),
+                            },
+                        );
+                        return;
+                    };
+                    // each shard's partial exactly once — the backbone
+                    // byte identity mirror of `bytes_received`
+                    shared
+                        .partial_bytes_received
+                        .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                    shared.release_slot(conn);
+                    let _ = entry.tx.send(Ok(ShardReply {
+                        partial,
+                        up_bytes: done.up_bytes,
+                        up_msgs: done.up_msgs,
+                        efs: done.efs,
+                    }));
+                }
+                entry => {
+                    if entry.is_some() {
+                        shared.release_slot(conn);
+                    }
+                    shared
+                        .duplicate_outcomes
+                        .fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .duplicate_outcome_bytes
+                        .fetch_add(f.total_bytes(), Ordering::Relaxed);
+                }
+            }
+        }
         k => {
             kill_conn(
                 shared,
                 conn,
                 WireError::Malformed {
-                    what: format!("unexpected {k:?} frame from a worker"),
+                    what: format!(
+                        "unexpected {k:?} frame from a {}",
+                        peer_noun(shared.expect)
+                    ),
                 },
             );
         }
@@ -945,14 +1148,18 @@ fn process_frame(
 }
 
 /// AIMD window update from one observed outcome latency: grow by one
-/// slot per window-full of completions, halve on a ≥4x spike against
-/// the connection's own EWMA. Free function over the atomics so the
-/// policy is unit-testable without sockets.
+/// slot per window-full of completions, halve on a `>= spike`x jump
+/// against the connection's own EWMA, never grow past `cap`
+/// (`--net-aimd-spike` / `--net-aimd-cap`; defaults
+/// [`AIMD_SPIKE_DEFAULT`] / [`ADAPTIVE_MAX_WINDOW`]). Free function
+/// over the atomics so the policy is unit-testable without sockets.
 fn adapt_window(
     window: &AtomicUsize,
     lat_ewma_us: &AtomicU64,
     grown: &AtomicU64,
     latency: Duration,
+    spike: u32,
+    cap: usize,
 ) {
     let us = latency.as_micros().clamp(1, u64::MAX as u128) as u64;
     let prior = lat_ewma_us.load(Ordering::Relaxed);
@@ -962,7 +1169,7 @@ fn adapt_window(
         (prior - prior / 8 + us / 8).max(1)
     };
     lat_ewma_us.store(ewma, Ordering::Relaxed);
-    if prior != 0 && us > prior.saturating_mul(4) {
+    if prior != 0 && us > prior.saturating_mul(spike as u64) {
         // latency spike: halve (floor 1) and restart the growth ladder
         let w = window.load(Ordering::SeqCst);
         window.store((w / 2).max(1), Ordering::SeqCst);
@@ -970,7 +1177,7 @@ fn adapt_window(
         return;
     }
     let w = window.load(Ordering::SeqCst);
-    if w >= ADAPTIVE_MAX_WINDOW {
+    if w >= cap {
         return;
     }
     let g = grown.fetch_add(1, Ordering::Relaxed) + 1;
@@ -1007,6 +1214,13 @@ fn kill_conn(shared: &Shared, conn: &Arc<Conn>, error: WireError) {
     for tx in victims {
         let _ = tx.send(Err(died.clone()));
     }
+    let shard_victims: Vec<ShardTx> = {
+        let mut sp = conn.shard_pending.lock().unwrap();
+        sp.drain().map(|(_, e)| e.tx).collect()
+    };
+    for tx in shard_victims {
+        let _ = tx.send(Err(died.clone()));
+    }
     let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
     shared.slots.notify_all();
 }
@@ -1027,6 +1241,40 @@ impl Shared {
                 "no live worker connections left (all were discarded \
                  after errors)"
             );
+            if let Some(c) = Self::pick_least_loaded(&conns, &[]) {
+                c.in_flight.fetch_add(1, Ordering::SeqCst);
+                return Ok(c);
+            }
+            conns = self.slots.wait(conns).unwrap();
+        }
+    }
+
+    /// Acquire a dispatch slot for a shard: the connection that
+    /// *pinned* this shard (`--shard i/G`) if it is live and has a
+    /// free window position, else the least-loaded live connection —
+    /// so a dead pinned aggregator's shard re-dispatches to any
+    /// survivor. Blocks while the pool is saturated.
+    fn acquire_shard(&self, pin: (u32, u32)) -> Result<Arc<Conn>> {
+        let mut conns = self.conns.lock().unwrap();
+        loop {
+            ensure!(
+                !self.closed.load(Ordering::SeqCst),
+                "transport is shut down"
+            );
+            ensure!(
+                !conns.is_empty(),
+                "no live aggregator connections left (all were \
+                 discarded after errors)"
+            );
+            let pinned = conns.iter().find(|c| {
+                c.shard_pin == Some(pin)
+                    && c.in_flight.load(Ordering::SeqCst)
+                        < c.window.load(Ordering::SeqCst)
+            });
+            if let Some(c) = pinned.cloned() {
+                c.in_flight.fetch_add(1, Ordering::SeqCst);
+                return Ok(c);
+            }
             if let Some(c) = Self::pick_least_loaded(&conns, &[]) {
                 c.in_flight.fetch_add(1, Ordering::SeqCst);
                 return Ok(c);
@@ -1128,6 +1376,14 @@ impl SocketTransport {
         self.shared.heartbeats_sent.load(Ordering::Relaxed)
     }
 
+    /// Matched Partial frame bytes received over the aggregator
+    /// backbone — each shard's partial exactly once. Equals the run's
+    /// `CommStats.partial_bytes` (the reported-vs-framed identity,
+    /// asserted by tests/tree_net.rs).
+    pub fn partial_bytes_received(&self) -> u64 {
+        self.shared.partial_bytes_received.load(Ordering::Relaxed)
+    }
+
     /// Jobs re-dispatched to a surviving worker after a connection
     /// failure.
     pub fn requeues(&self) -> u64 {
@@ -1184,11 +1440,21 @@ impl SocketTransport {
                 .drain()
                 .map(|(_, e)| e.tx)
                 .collect();
+            let shard_victims: Vec<ShardTx> = conn
+                .shard_pending
+                .lock()
+                .unwrap()
+                .drain()
+                .map(|(_, e)| e.tx)
+                .collect();
             let died = ConnDied {
                 peer: conn.peer.clone(),
                 error: Arc::new(WireError::CleanClose),
             };
             for tx in victims {
+                let _ = tx.send(Err(died.clone()));
+            }
+            for tx in shard_victims {
                 let _ = tx.send(Err(died.clone()));
             }
         }
@@ -1270,6 +1536,176 @@ fn dispatch_on(
     true
 }
 
+/// Register `key` on an aggregator connection and write its Shard
+/// frame. Same contract and race guard as [`dispatch_on`].
+fn dispatch_shard_on(
+    shared: &Shared,
+    conn: &Arc<Conn>,
+    key: ShardKey,
+    tx: &ShardTx,
+    claimed: &Arc<AtomicBool>,
+    body: &[u8],
+) -> bool {
+    conn.shard_pending.lock().unwrap().insert(
+        key,
+        ShardEntry {
+            tx: tx.clone(),
+            claimed: claimed.clone(),
+            done: None,
+        },
+    );
+    let write_res = {
+        let mut w = conn.writer.lock().unwrap();
+        frame::write_frame_nb(
+            &mut *w,
+            FrameKind::Shard,
+            body,
+            Instant::now() + shared.cfg.io_timeout,
+        )
+    };
+    match write_res {
+        Ok(n) => {
+            shared.bytes_sent.fetch_add(n, Ordering::Relaxed);
+        }
+        Err(e) => {
+            kill_conn(shared, conn, e);
+        }
+    }
+    if !conn.alive.load(Ordering::SeqCst)
+        && conn.shard_pending.lock().unwrap().remove(&key).is_some()
+    {
+        return false;
+    }
+    true
+}
+
+impl ShardDispatch for SocketTransport {
+    /// Dispatch one cohort shard to an aggregator connection and wait
+    /// for its ShardDone + Partial pair. No hedging: a shard is a
+    /// whole sub-round, so duplicating it doubles real work — faults
+    /// are handled by the same re-dispatch budget as client jobs (the
+    /// shard geometry is configured, so a survivor executing a dead
+    /// peer's shard produces bit-identical sums).
+    fn run_shard(&self, spec: &ShardSpec<'_>) -> Result<ShardReply> {
+        let shared = &self.shared;
+        let (round, lo, hi) = (spec.round, spec.lo, spec.hi);
+        let key: ShardKey = (round, lo);
+        let mut body = Vec::new();
+        codec::encode_shard_parts(
+            round, spec.index, spec.nodes, lo, hi, spec.down, &spec.efs,
+            &mut body,
+        );
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..MAX_DISPATCH_ATTEMPTS {
+            let conn = match shared.acquire_shard((spec.index, spec.nodes))
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    let e = match last_err.take() {
+                        Some(prior) => prior.context(e.to_string()),
+                        None => e,
+                    };
+                    return Err(e.context(format!(
+                        "shard [{lo}, {hi}) round {round}: dispatch \
+                         failed"
+                    )));
+                }
+            };
+            if attempt > 0 {
+                shared.requeues.fetch_add(1, Ordering::Relaxed);
+            }
+            let (tx, rx) = mpsc::channel();
+            let claimed = Arc::new(AtomicBool::new(false));
+            let mut live =
+                usize::from(dispatch_shard_on(
+                    shared, &conn, key, &tx, &claimed, &body,
+                ));
+            let mut winner: Option<ShardReply> = None;
+            while live > 0 {
+                match rx.recv_timeout(shared.cfg.io_timeout) {
+                    Ok(Ok(reply)) => {
+                        winner = Some(reply);
+                        break;
+                    }
+                    Ok(Err(died)) => {
+                        live -= 1;
+                        let peer = died.peer.clone();
+                        last_err = Some(
+                            anyhow::Error::from(died).context(format!(
+                                "shard [{lo}, {hi}) round {round} via \
+                                 aggregator {peer}"
+                            )),
+                        );
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if conn.alive.load(Ordering::SeqCst) {
+                            // a shard is a whole sub-round: legitimate
+                            // long execution, bounded by the liveness
+                            // machinery (probes + idle deadline), not
+                            // by this wait
+                            continue;
+                        }
+                        // the connection died without our entry being
+                        // drained: reclaim it, then pick up any
+                        // message already sent
+                        if conn
+                            .shard_pending
+                            .lock()
+                            .unwrap()
+                            .remove(&key)
+                            .is_some()
+                        {
+                            live = live.saturating_sub(1);
+                        }
+                        while let Ok(msg) = rx.try_recv() {
+                            match msg {
+                                Ok(reply) => {
+                                    winner = Some(reply);
+                                    break;
+                                }
+                                Err(_) => {
+                                    live = live.saturating_sub(1);
+                                }
+                            }
+                        }
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // release the slot if the entry is still registered (on
+            // success process_frame already released it)
+            if conn.shard_pending.lock().unwrap().remove(&key).is_some() {
+                shared.release_slot(&conn);
+            }
+            if let Some(reply) = winner {
+                ensure!(
+                    reply.partial.start == lo && reply.partial.end == hi,
+                    "aggregator {} answered for cohort range [{}, {}), \
+                     expected [{lo}, {hi})",
+                    conn.peer,
+                    reply.partial.start,
+                    reply.partial.end,
+                );
+                return Ok(reply);
+            }
+            if last_err.is_none() {
+                last_err = Some(anyhow!(
+                    "shard [{lo}, {hi}) round {round} via aggregator \
+                     {}: connection reader exited without a result",
+                    conn.peer
+                ));
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("shard dispatch failed"))
+            .context(format!(
+                "shard [{lo}, {hi}) round {round}: re-dispatch budget \
+                 ({MAX_DISPATCH_ATTEMPTS} attempts) exhausted"
+            )))
+    }
+}
+
 impl Transport for SocketTransport {
     fn run_client(
         &self,
@@ -1277,6 +1713,11 @@ impl Transport for SocketTransport {
         buffers: &mut WorkBuffers,
     ) -> Result<ClientOutcome> {
         let shared = &self.shared;
+        ensure!(
+            shared.expect == PeerRole::Worker,
+            "this transport fronts mid-tier aggregators; client jobs \
+             are dispatched as whole shards, never individually"
+        );
         let (client, round) = (job.client, job.round);
         let key: PendingKey =
             (round as u32, client as u32, job.job_id);
@@ -1483,6 +1924,19 @@ impl Transport for SocketTransport {
                  ({MAX_DISPATCH_ATTEMPTS} attempts) exhausted"
             )))
     }
+
+    /// An aggregator pool dispatches whole shards — the round loop
+    /// routes through [`ShardDispatch::run_shard`] instead of
+    /// per-client jobs.
+    fn shard_dispatcher(
+        &self,
+    ) -> Option<&dyn crate::coordinator::transport::ShardDispatch> {
+        if self.shared.expect == PeerRole::Aggregator {
+            Some(self)
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1542,6 +1996,8 @@ mod tests {
                 &ewma,
                 &grown,
                 Duration::from_millis(10),
+                AIMD_SPIKE_DEFAULT,
+                ADAPTIVE_MAX_WINDOW,
             );
         }
         let grown_to = window.load(Ordering::SeqCst);
@@ -1551,7 +2007,14 @@ mod tests {
         );
         assert!(grown_to <= ADAPTIVE_MAX_WINDOW);
         // a big spike halves it
-        adapt_window(&window, &ewma, &grown, Duration::from_secs(5));
+        adapt_window(
+            &window,
+            &ewma,
+            &grown,
+            Duration::from_secs(5),
+            AIMD_SPIKE_DEFAULT,
+            ADAPTIVE_MAX_WINDOW,
+        );
         let after = window.load(Ordering::SeqCst);
         assert_eq!(after, (grown_to / 2).max(1));
         // and the cap holds under unbounded steady traffic
@@ -1561,9 +2024,65 @@ mod tests {
                 &ewma,
                 &grown,
                 Duration::from_millis(10),
+                AIMD_SPIKE_DEFAULT,
+                ADAPTIVE_MAX_WINDOW,
             );
         }
         assert!(window.load(Ordering::SeqCst) <= ADAPTIVE_MAX_WINDOW);
+    }
+
+    /// The satellite-4 regression: AIMD spike/cap are configuration,
+    /// not constants. A lower cap bounds growth below the historical
+    /// 32, and a larger spike multiplier tolerates latency the
+    /// default would halve on.
+    #[test]
+    fn aimd_spike_and_cap_are_tunable() {
+        // cap: steady traffic never grows past a custom bound
+        let window = AtomicUsize::new(1);
+        let ewma = AtomicU64::new(0);
+        let grown = AtomicU64::new(0);
+        for _ in 0..10_000 {
+            adapt_window(
+                &window,
+                &ewma,
+                &grown,
+                Duration::from_millis(10),
+                AIMD_SPIKE_DEFAULT,
+                3,
+            );
+        }
+        assert_eq!(window.load(Ordering::SeqCst), 3);
+        // spike: a 5x latency jump halves under the default (4x)
+        // threshold but survives a spike setting of 8
+        let seed = |spike: u32| {
+            let window = AtomicUsize::new(4);
+            let ewma = AtomicU64::new(0);
+            let grown = AtomicU64::new(0);
+            for _ in 0..50 {
+                adapt_window(
+                    &window,
+                    &ewma,
+                    &grown,
+                    Duration::from_millis(10),
+                    spike,
+                    4,
+                );
+            }
+            let before = window.load(Ordering::SeqCst);
+            adapt_window(
+                &window,
+                &ewma,
+                &grown,
+                Duration::from_millis(50),
+                spike,
+                4,
+            );
+            (before, window.load(Ordering::SeqCst))
+        };
+        let (before, after) = seed(AIMD_SPIKE_DEFAULT);
+        assert_eq!(after, (before / 2).max(1), "default spike halves");
+        let (before, after) = seed(8);
+        assert_eq!(after, before, "a looser spike tolerates the jump");
     }
 
     /// The satellite-3 regression: hammer acquire/release from many
@@ -1576,10 +2095,9 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let window = 2usize;
         let cfg = SocketCfg {
-            io_timeout: Duration::from_secs(5),
             heartbeat: Duration::ZERO,
             inflight: Inflight::Fixed(window),
-            hedge: Duration::ZERO,
+            ..SocketCfg::new(Duration::from_secs(5))
         };
         let shared = Arc::new(Shared {
             cfg,
@@ -1588,7 +2106,10 @@ mod tests {
                 dim: 1,
                 model: "hammer".into(),
                 auth: 0,
+                role: PeerRole::Worker,
+                shard: None,
             },
+            expect: PeerRole::Worker,
             conns: Mutex::new(Vec::new()),
             slots: Condvar::new(),
             next_conn_id: AtomicU64::new(0),
@@ -1599,6 +2120,7 @@ mod tests {
             duplicate_outcomes: AtomicU64::new(0),
             duplicate_outcome_bytes: AtomicU64::new(0),
             heartbeats_sent: AtomicU64::new(0),
+            partial_bytes_received: AtomicU64::new(0),
             requeues: AtomicU64::new(0),
             hedges: AtomicU64::new(0),
             hedge_bytes: AtomicU64::new(0),
@@ -1608,8 +2130,13 @@ mod tests {
         for id in 0..3u64 {
             keep.push(TcpStream::connect(addr).unwrap());
             let (s, peer) = listener.accept().unwrap();
-            let conn =
-                Arc::new(new_conn(&shared, id, peer.to_string(), s));
+            let conn = Arc::new(new_conn(
+                &shared,
+                id,
+                peer.to_string(),
+                s,
+                None,
+            ));
             shared.conns.lock().unwrap().push(conn);
         }
         let violations = AtomicU64::new(0);

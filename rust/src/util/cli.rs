@@ -122,4 +122,19 @@ mod tests {
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("v"));
     }
+
+    #[test]
+    fn shard_specs_bind_as_values() {
+        // `--shard 1/4` specs and `host:port` addresses contain no
+        // leading dashes, so they must bind as the preceding option's
+        // value — the aggregator role's flags depend on this
+        let a = args(
+            "run --role aggregator --shard 1/4 \
+             --connect 127.0.0.1:7878 --listen 127.0.0.1:7879",
+        );
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("shard"), Some("1/4"));
+        assert_eq!(a.get("connect"), Some("127.0.0.1:7878"));
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7879"));
+    }
 }

@@ -146,6 +146,95 @@ fn failed_job_does_not_block_the_queue() {
     let _ = fs::remove_dir_all(&dir);
 }
 
+/// Regression (PR 10): an IO error from `queue.set_state` inside the
+/// work loop used to propagate via `?` and abort the whole pass —
+/// with `--daemon-slots > 1` it tore down the entire scope — so one
+/// job's unwritable state file starved every job behind it. The
+/// injection clobbers the job's state path with a directory while the
+/// job runs, so the post-run `done` rename fails exactly mid-pass.
+#[test]
+fn state_persist_io_error_fails_the_job_not_the_pass() {
+    let dir = queue_dir("statefail");
+    let q = Queue::open(&dir).unwrap();
+    write_job(&dir, "10-clobbered", 2);
+    write_job(&dir, "20-after", 2);
+    let report = run_queue(
+        &q,
+        1,
+        |_, _| {},
+        |job| {
+            if job.id == "10-clobbered" {
+                // simulate the state file going unwritable mid-job: a
+                // directory at the state path makes the atomic-rename
+                // in set_state fail with a real fs error
+                let p = q.state_path(&job.id);
+                fs::remove_file(&p).unwrap();
+                fs::create_dir(&p).unwrap();
+            }
+            Ok(())
+        },
+    )
+    .expect("a per-job persist failure must not fail the pass");
+    assert_eq!(
+        report.started,
+        ["10-clobbered", "20-after"],
+        "both jobs must get their turn"
+    );
+    assert_eq!(report.done, ["20-after"]);
+    assert_eq!(report.failed.len(), 1, "{:?}", report.failed);
+    assert_eq!(report.failed[0].0, "10-clobbered");
+    assert!(
+        report.failed[0].1.contains("persisting 'done' state"),
+        "failure must say what could not be persisted: {}",
+        report.failed[0].1
+    );
+    assert_eq!(
+        q.read_state("20-after").unwrap(),
+        Some((JobState::Done, None)),
+        "the job behind the failure must still reach done"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Regression (PR 10): the queue used to be scanned exactly once at
+/// startup, so a spec dropped into the directory after launch
+/// silently never ran until a daemon restart (ROADMAP item 3a). The
+/// scheduler now re-scans after each drained pass: a job enqueued
+/// *while the first job is running* executes in the same
+/// `run_queue` invocation.
+#[test]
+fn job_enqueued_mid_run_executes_without_restart() {
+    let dir = queue_dir("midrun");
+    let q = Queue::open(&dir).unwrap();
+    write_job(&dir, "10-first", 2);
+    let report = run_queue(
+        &q,
+        1,
+        |_, _| {},
+        |job| {
+            if job.id == "10-first" {
+                // a sweep driver drops another spec in mid-run
+                write_job(&dir, "20-late", 2);
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        report.started,
+        ["10-first", "20-late"],
+        "the late spec must run in the same invocation"
+    );
+    assert_eq!(report.done, ["10-first", "20-late"]);
+    for id in ["10-first", "20-late"] {
+        assert_eq!(
+            q.read_state(id).unwrap(),
+            Some((JobState::Done, None))
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn two_slots_drain_the_queue() {
     let dir = queue_dir("slots");

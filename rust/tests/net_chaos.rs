@@ -30,6 +30,14 @@
 //! * **reconnect cache** — a worker whose connection drops after one
 //!   outcome must answer the re-sent job on a fresh connection with
 //!   byte-identical cached bytes and *zero* recomputation.
+//! * **killed mid-tier aggregator** — under `--agg tree:G` over
+//!   networked aggregators, a peer that swallows its shard and dies
+//!   mid-round: the shard re-dispatches to a survivor (configured
+//!   geometry, so the canonical accumulation — and the whole run —
+//!   stays bit-identical).
+//! * **corrupt Partial frame** — an aggregator answering with a
+//!   checksum-corrupted Partial on a held-open socket must produce
+//!   the typed checksum fault naming the aggregator, never a hang.
 //!
 //! The `soak_` test (ignored by default; nightly CI runs it with
 //! `--ignored`) loops kill/rejoin schedules for
@@ -42,8 +50,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use common::{mock_cfg, mock_manifest, run_mock, MockTransport, Trace};
-use fedfp8::config::ExperimentConfig;
+use common::{
+    mock_cfg, mock_manifest, run_mock, run_mock_agg, MockTransport,
+    Trace,
+};
+use fedfp8::config::{AggMode, ExperimentConfig};
 use fedfp8::coordinator::transport::{
     ClientJob, ClientOutcome, Transport, WorkBuffers,
 };
@@ -64,6 +75,8 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
         dim: common::DIM as u64,
         model: "mock".into(),
         auth: 0,
+        role: net::PeerRole::Worker,
+        shard: None,
     }
 }
 
@@ -79,6 +92,10 @@ enum Fault {
     /// Swallow the `n`-th Job frame and kill both legs — a mid-round
     /// disconnect with a job un-acked on the wire.
     CutAtJob(usize),
+    /// Swallow the `n`-th Shard frame and kill both legs — a
+    /// mid-round kill on the root -> aggregator backbone with a whole
+    /// shard un-acked.
+    CutAtShard(usize),
 }
 
 /// Frame-aware one-connection proxy. Listens on an ephemeral port;
@@ -146,6 +163,17 @@ fn spawn_proxy<'s>(
                         {
                             // swallow the job and drop the link:
                             // the server holds an un-acked dispatch
+                            break;
+                        }
+                    }
+                    if f.kind == FrameKind::Shard {
+                        let n =
+                            jobs.fetch_add(1, Ordering::SeqCst) + 1;
+                        if matches!(fault, Fault::CutAtShard(cut)
+                                    if cut == n)
+                        {
+                            // swallow the whole shard work order and
+                            // drop the backbone link
                             break;
                         }
                     }
@@ -282,10 +310,10 @@ fn run_chaos_hedged(
             faults.len(),
             &hello,
             SocketCfg {
-                io_timeout: Duration::from_millis(io_ms),
                 heartbeat: Duration::from_millis(hb_ms),
                 inflight: Inflight::Fixed(inflight),
                 hedge: Duration::from_millis(hedge_ms),
+                ..SocketCfg::new(Duration::from_millis(io_ms))
             },
         )
         .expect("server handshake");
@@ -611,10 +639,9 @@ fn stalled_worker_is_detected_and_work_requeued() {
             3,
             &hello,
             SocketCfg {
-                io_timeout: Duration::from_millis(700),
                 heartbeat: Duration::from_millis(150),
                 inflight: Inflight::Fixed(2),
-                hedge: Duration::ZERO,
+                ..SocketCfg::new(Duration::from_millis(700))
             },
         )
         .expect("server handshake");
@@ -659,10 +686,9 @@ fn lone_stalled_worker_fails_typed_with_client_named() {
             1,
             &hello,
             SocketCfg {
-                io_timeout: Duration::from_millis(500),
                 heartbeat: Duration::from_millis(100),
                 inflight: Inflight::Fixed(2),
-                hedge: Duration::ZERO,
+                ..SocketCfg::new(Duration::from_millis(500))
             },
         )
         .expect("handshake");
@@ -717,10 +743,9 @@ fn stalled_half_connector_does_not_delay_a_healthy_replacement() {
             1,
             &hello,
             SocketCfg {
-                io_timeout,
                 heartbeat: Duration::ZERO,
                 inflight: Inflight::Fixed(1),
-                hedge: Duration::ZERO,
+                ..SocketCfg::new(io_timeout)
             },
         )
         .expect("server handshake");
@@ -1026,4 +1051,439 @@ fn soak_multi_worker_forced_kills() {
     assert!(iters >= 1, "soak never completed an iteration");
     // sanity: the schedule actually exercised the failover path
     assert!(requeues >= iters, "kills did not force re-dispatches");
+}
+
+// ---- aggregator backbone faults ------------------------------------
+
+/// Hello for a mid-tier aggregator connection pinning shard `i/g`.
+fn agg_hello(
+    cfg: &ExperimentConfig,
+    pin: Option<(u32, u32)>,
+) -> Hello {
+    Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: common::DIM as u64,
+        model: "mock".into(),
+        auth: 0,
+        role: net::PeerRole::Aggregator,
+        shard: pin,
+    }
+}
+
+#[test]
+fn killed_aggregator_shard_redispatches_bit_identical() {
+    // --agg tree:2 with two networked aggregators; aggregator 0
+    // handshakes, swallows its round-0 shard and dies. The shard
+    // geometry is configured (not live), so the survivor executes the
+    // dead peer's shard and every round — including the rest of the
+    // run on a single aggregator — must stay bit-identical to the
+    // in-process tree.
+    let base = run_mock_agg(4, false, AggMode::Tree { nodes: 2 });
+    let (dir, manifest) = mock_manifest("aggkill");
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(4, false);
+    cfg.agg = AggMode::Tree { nodes: 2 };
+    let model = manifest.model("mock").unwrap();
+    let agg_cfg = cfg.clone();
+    let world = build_world(&agg_cfg, model).unwrap();
+    let ctx = net::AggregatorCtx {
+        cfg: &agg_cfg,
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        dim: model.dim,
+        alpha_dim: model.alpha_dim,
+        beta_dim: model.n_act,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let root_hello = hello_for(&cfg);
+    let rounds = cfg.rounds;
+    let trace = thread::scope(|s| {
+        // aggregator 0: the mid-round kill
+        {
+            let (addr, agg_cfg) = (&addr, &agg_cfg);
+            s.spawn(move || {
+                let hello = agg_hello(agg_cfg, Some((0, 2)));
+                let mut stream = net::connect(
+                    addr,
+                    &hello,
+                    Duration::from_secs(10),
+                )
+                .expect("treacherous handshake");
+                let f = frame::read_frame(&mut stream)
+                    .expect("first shard");
+                assert_eq!(f.kind, FrameKind::Shard);
+                // die with the shard un-answered
+                stream.shutdown(Shutdown::Both).ok();
+            });
+        }
+        // aggregator 1: healthy; inherits the dead peer's shard
+        {
+            let (addr, ctx, agg_cfg) = (&addr, &ctx, &agg_cfg);
+            s.spawn(move || {
+                let exec = MockTransport::new(true);
+                let hello = agg_hello(agg_cfg, Some((1, 2)));
+                let mut stream = net::connect(
+                    addr,
+                    &hello,
+                    Duration::from_secs(10),
+                )
+                .expect("healthy handshake");
+                let opts = ServeOpts {
+                    heartbeat: Duration::ZERO,
+                    idle_deadline: Duration::ZERO,
+                    exec_threads: 1,
+                };
+                net::serve_upstream(&mut stream, &exec, ctx, &opts)
+                    .expect("healthy aggregator serve loop");
+            });
+        }
+        let transport = net::accept_aggregators(
+            listener,
+            2,
+            &root_hello,
+            SocketCfg {
+                heartbeat: Duration::ZERO,
+                ..SocketCfg::new(Duration::from_secs(10))
+            },
+        )
+        .expect("root handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        assert!(
+            transport.requeues() >= 1,
+            "the kill never forced a shard re-dispatch"
+        );
+        drop(server);
+        transport.shutdown();
+        trace
+    });
+    assert_eq!(
+        trace, base,
+        "re-dispatched shard diverged from the in-process tree"
+    );
+}
+
+#[test]
+fn corrupt_partial_frame_fails_typed_naming_the_aggregator() {
+    // a lone aggregator answers its shard with a valid ShardDone and
+    // a Partial whose envelope lies about the body checksum, then
+    // keeps the socket open: the round must fail *fast* with the
+    // typed checksum fault, the shard context and the aggregator
+    // named — never hang on the held-open link
+    let (dir, manifest) = mock_manifest("aggcrc");
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(1, false);
+    cfg.agg = AggMode::Tree { nodes: 1 };
+    let agg_cfg = cfg.clone();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let root_hello = hello_for(&cfg);
+    let err = thread::scope(|s| {
+        {
+            let (addr, agg_cfg) = (&addr, &agg_cfg);
+            s.spawn(move || {
+                use std::io::Write;
+                let hello = agg_hello(agg_cfg, Some((0, 1)));
+                let mut stream = net::connect(
+                    addr,
+                    &hello,
+                    Duration::from_secs(10),
+                )
+                .expect("malicious handshake");
+                let f = frame::read_frame(&mut stream).expect("shard");
+                assert_eq!(f.kind, FrameKind::Shard);
+                let shard =
+                    codec::decode_shard(&f.body).expect("shard body");
+                // a perfectly valid ShardDone first — the fault must
+                // be pinned on the Partial, not the protocol order
+                let done = codec::WireShardDone {
+                    round: shard.round,
+                    lo: shard.lo,
+                    hi: shard.hi,
+                    up_bytes: 0,
+                    up_msgs: 0,
+                    efs: vec![],
+                };
+                let mut body = Vec::new();
+                codec::encode_shard_done(&done, &mut body);
+                frame::write_frame(
+                    &mut stream,
+                    FrameKind::ShardDone,
+                    &body,
+                )
+                .expect("shard done");
+                // ... then a Partial with a corrupted checksum
+                let junk = vec![0u8; 28];
+                let mut envelope = Vec::new();
+                envelope.extend_from_slice(&frame::MAGIC);
+                envelope.extend_from_slice(
+                    &frame::WIRE_VERSION.to_le_bytes(),
+                );
+                envelope.push(FrameKind::Partial as u8);
+                envelope.push(0);
+                envelope.extend_from_slice(
+                    &(junk.len() as u32).to_le_bytes(),
+                );
+                envelope.extend_from_slice(
+                    &(frame::crc32(&junk) ^ 1).to_le_bytes(),
+                );
+                envelope.extend_from_slice(&junk);
+                stream.write_all(&envelope).expect("corrupt partial");
+                stream.flush().ok();
+                // hold the link open: the checksum, not an EOF, is
+                // what must kill the connection
+                thread::sleep(Duration::from_millis(1500));
+            });
+        }
+        let transport = net::accept_aggregators(
+            listener,
+            1,
+            &root_hello,
+            SocketCfg {
+                heartbeat: Duration::ZERO,
+                ..SocketCfg::new(Duration::from_secs(5))
+            },
+        )
+        .expect("root handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let started = Instant::now();
+        let err = server.round(0).unwrap_err();
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "corrupt partial stalled the round for {:?}",
+            started.elapsed()
+        );
+        drop(server);
+        transport.shutdown();
+        err
+    });
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("aggregator"),
+        "error does not name the aggregator: {msg}"
+    );
+    assert!(
+        msg.contains("checksum"),
+        "not the typed checksum fault: {msg}"
+    );
+    assert!(
+        msg.contains("shard"),
+        "error lost the shard context: {msg}"
+    );
+}
+
+// ---- three-tier soak (nightly) --------------------------------------
+
+/// Run the full mock experiment as a THREE-tier deployment — root +
+/// two networked aggregators, each fronting two socket workers — with
+/// the root -> aggregator-0 link riding the frame proxy, which cuts
+/// it at the `cut`-th Shard frame. Aggregator 0 then rejoins the root
+/// directly (the replacement-acceptor path) and serves the rest of
+/// the run. Returns the bit-exact trace plus the root's re-dispatch
+/// count.
+fn run_tree_chaos(tag: &str, cut: usize) -> (Trace, u64) {
+    let (dir, manifest) = mock_manifest(tag);
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(4, false);
+    cfg.agg = AggMode::Tree { nodes: 2 };
+    let model = manifest.model("mock").unwrap();
+    let agg_cfg = cfg.clone();
+    let world = build_world(&agg_cfg, model).unwrap();
+    let ctx = net::AggregatorCtx {
+        cfg: &agg_cfg,
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        dim: model.dim,
+        alpha_dim: model.alpha_dim,
+        beta_dim: model.n_act,
+    };
+    let worker_ctx = WorkerCtx {
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        kernel: cfg.fp8_kernel,
+    };
+    let fingerprint = cfg.fingerprint();
+    let root_hello = hello_for(&cfg);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let root_addr = listener.local_addr().unwrap().to_string();
+    let rounds = cfg.rounds;
+    thread::scope(|s| {
+        let proxy_addr =
+            spawn_proxy(s, root_addr.clone(), Fault::CutAtShard(cut));
+        for i in 0..2usize {
+            let down_listener =
+                TcpListener::bind("127.0.0.1:0").unwrap();
+            let down_addr =
+                down_listener.local_addr().unwrap().to_string();
+            // the aggregator's own two-worker fleet
+            for _ in 0..2 {
+                let (worker_ctx, agg_cfg) = (&worker_ctx, &agg_cfg);
+                let down_addr = down_addr.clone();
+                s.spawn(move || {
+                    let exec = MockTransport::new(true);
+                    let cache = OutcomeCache::new(64);
+                    let opts = ServeOpts {
+                        heartbeat: Duration::ZERO,
+                        idle_deadline: Duration::ZERO,
+                        exec_threads: 1,
+                    };
+                    let mut stream = net::connect(
+                        &down_addr,
+                        &hello_for(agg_cfg),
+                        Duration::from_secs(20),
+                    )
+                    .expect("worker handshake");
+                    net::serve_conn(
+                        &mut stream,
+                        &exec,
+                        worker_ctx,
+                        &opts,
+                        fingerprint,
+                        &cache,
+                    )
+                    .expect("worker serve loop");
+                });
+            }
+            // the aggregator itself: downstream SocketTransport as
+            // its executor, upstream serve loop to the root
+            let (ctx, agg_cfg) = (&ctx, &agg_cfg);
+            let (root_addr, proxy_addr) =
+                (root_addr.clone(), proxy_addr.clone());
+            s.spawn(move || {
+                let transport = net::accept_workers(
+                    down_listener,
+                    2,
+                    &hello_for(agg_cfg),
+                    SocketCfg {
+                        heartbeat: Duration::ZERO,
+                        ..SocketCfg::new(Duration::from_secs(20))
+                    },
+                )
+                .expect("aggregator worker fleet");
+                let opts = ServeOpts {
+                    heartbeat: Duration::ZERO,
+                    idle_deadline: Duration::ZERO,
+                    exec_threads: 1,
+                };
+                let hello = agg_hello(agg_cfg, Some((i as u32, 2)));
+                let first =
+                    if i == 0 { &proxy_addr } else { &root_addr };
+                let mut stream = net::connect(
+                    first,
+                    &hello,
+                    Duration::from_secs(20),
+                )
+                .expect("aggregator handshake");
+                let mut r = net::serve_upstream(
+                    &mut stream,
+                    &transport,
+                    ctx,
+                    &opts,
+                );
+                // rejoin directly after the proxy cut (bounded)
+                let mut attempts = 0;
+                while r.is_err() && attempts < 100 {
+                    attempts += 1;
+                    thread::sleep(Duration::from_millis(50));
+                    let Ok(mut stream) = net::connect(
+                        &root_addr,
+                        &hello,
+                        Duration::from_secs(20),
+                    ) else {
+                        continue;
+                    };
+                    r = net::serve_upstream(
+                        &mut stream,
+                        &transport,
+                        ctx,
+                        &opts,
+                    );
+                }
+                transport.shutdown();
+                r.expect("aggregator never finished cleanly");
+            });
+        }
+        let transport = net::accept_aggregators(
+            listener,
+            2,
+            &root_hello,
+            SocketCfg {
+                heartbeat: Duration::ZERO,
+                ..SocketCfg::new(Duration::from_secs(20))
+            },
+        )
+        .expect("root handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        let requeues = transport.requeues();
+        drop(server);
+        transport.shutdown();
+        (trace, requeues)
+    })
+}
+
+/// 60-second (configurable) three-tier kill/rejoin soak: root + two
+/// networked aggregators + four workers, a forced backbone cut at a
+/// rotating Shard frame every iteration, every iteration checked
+/// bit-identical to the in-process tree. Heavy for per-PR CI, so
+/// `#[ignore]`d; the nightly workflow runs it with `--ignored`.
+#[test]
+#[ignore = "nightly soak — run with --ignored (FEDFP8_SOAK_SECS)"]
+fn soak_networked_tree_kill_rejoin() {
+    let secs: u64 = std::env::var("FEDFP8_SOAK_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    let base = run_mock_agg(4, false, AggMode::Tree { nodes: 2 });
+    let mut iters = 0u64;
+    let mut requeues = 0u64;
+    while Instant::now() < deadline {
+        // rotate the cut across the first three backbone dispatches
+        let cut = (iters as usize % 3) + 1;
+        let (trace, rq) =
+            run_tree_chaos(&format!("tsoak{iters}"), cut);
+        assert_eq!(
+            trace, base,
+            "tree soak iteration {iters} (cut={cut}) diverged"
+        );
+        requeues += rq;
+        iters += 1;
+    }
+    println!(
+        "tree soak: {iters} iterations, {requeues} shard \
+         re-dispatches, all bit-identical"
+    );
+    assert!(iters >= 1, "tree soak never completed an iteration");
+    assert!(requeues >= iters, "cuts did not force re-dispatches");
 }

@@ -47,6 +47,8 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
         dim: common::DIM as u64,
         model: "mock".into(),
         auth: 0,
+        role: net::PeerRole::Worker,
+        shard: None,
     }
 }
 
@@ -56,10 +58,9 @@ fn hello_for(cfg: &ExperimentConfig) -> Hello {
 fn quiet_cfg(inflight: Inflight) -> (SocketCfg, ServeOpts) {
     (
         SocketCfg {
-            io_timeout: Duration::from_secs(20),
-            heartbeat: Duration::ZERO,
             inflight,
-            hedge: Duration::ZERO,
+            heartbeat: Duration::ZERO,
+            ..SocketCfg::new(Duration::from_secs(20))
         },
         ServeOpts {
             heartbeat: Duration::ZERO,
@@ -438,10 +439,9 @@ fn round_error_with_fake_worker(
             SocketCfg {
                 // probing off: these tests exercise the v1-style
                 // "silence while a job is pending" deadline
-                io_timeout: timeout,
                 heartbeat: Duration::ZERO,
                 inflight: Inflight::Fixed(1),
-                hedge: Duration::ZERO,
+                ..SocketCfg::new(timeout)
             },
         )
         .expect("handshake");

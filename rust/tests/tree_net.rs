@@ -1,0 +1,252 @@
+//! Networked-tree suite: the tree backbone over real sockets.
+//!
+//! **Equivalence** — a full multi-round experiment whose `--agg
+//! tree:G` shards execute on *networked* mid-tier aggregators
+//! (loopback `serve_upstream` loops fed by `accept_aggregators` +
+//! `ShardDispatch::run_shard`) must be **bit-identical** to the same
+//! experiment on the in-process tree AND to the flat stream: final
+//! weights, alphas, betas, per-round losses and CommStats, across
+//! fan-outs {1, 2, 4} × parallelism {1, 4} × error feedback
+//! {off, on}. The aggregators rebuild the round context from their
+//! own copy of the config (cohort, lr, weighting, QAT prefix, EF
+//! residuals) — exactly the production `--role aggregator` flow — and
+//! run the same deterministic mock executor as every other
+//! determinism suite.
+//!
+//! **Accounting** — the backbone identity: the Partial-frame bytes
+//! the root's transport physically received must equal the
+//! `CommStats.partial_bytes` the trace reports (`record_partial`
+//! charges `partial_wire_bytes + PARTIAL_HEADER_BYTES`, and the
+//! golden-wire suite pins that constant to the real frame envelope).
+//! Client-edge up/down accounting must also be byte-identical to the
+//! in-process runs, because the aggregators re-sum it charge for
+//! charge from their own uplinks.
+//!
+//! **Topology** — fewer live aggregators than configured shards
+//! (W < G) must still complete bit-exactly: shard geometry comes from
+//! the configured fan-out, never the connection count, so unpinned
+//! shards ride the least-loaded survivor. Fault schedules (killing an
+//! aggregator mid-round, malformed Partial frames) live in
+//! `tests/net_chaos.rs`.
+
+mod common;
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use common::{
+    mock_cfg, mock_manifest, run_mock, run_mock_agg, MockTransport,
+    Trace,
+};
+use fedfp8::config::{AggMode, ExperimentConfig};
+use fedfp8::coordinator::{build_world, Server};
+use fedfp8::net::{
+    self, AggregatorCtx, Hello, Inflight, PeerRole, ServeOpts,
+    SocketCfg,
+};
+use fedfp8::runtime::Engine;
+
+fn hello_for(
+    cfg: &ExperimentConfig,
+    role: PeerRole,
+    shard: Option<(u32, u32)>,
+) -> Hello {
+    Hello {
+        fingerprint: cfg.fingerprint(),
+        dim: common::DIM as u64,
+        model: "mock".into(),
+        auth: 0,
+        role,
+        shard,
+    }
+}
+
+/// Loopback tuning: long deadlines, probing off on both sides — a
+/// clean run carries zero heartbeat traffic to race the shutdown.
+fn quiet_cfg() -> (SocketCfg, ServeOpts) {
+    (
+        SocketCfg {
+            inflight: Inflight::Fixed(1),
+            heartbeat: Duration::ZERO,
+            ..SocketCfg::new(Duration::from_secs(20))
+        },
+        ServeOpts {
+            heartbeat: Duration::ZERO,
+            idle_deadline: Duration::ZERO,
+            exec_threads: 1,
+        },
+    )
+}
+
+/// Run the full mock experiment with `--agg tree:nodes` where the
+/// shards execute on `aggs` in-thread aggregator serve loops over
+/// loopback TCP; returns the bit-exact trace. Each aggregator rebuilds
+/// its world from its own copy of the config and pins shard `i/nodes`
+/// in its Hello (pins beyond `nodes` are simply never preferred).
+fn run_tree_socket(
+    parallelism: usize,
+    nodes: usize,
+    aggs: usize,
+    error_feedback: bool,
+) -> Trace {
+    let tag = format!(
+        "treenet_p{parallelism}_g{nodes}_a{aggs}_ef{error_feedback}"
+    );
+    let (dir, manifest) = mock_manifest(&tag);
+    let engine = Engine::new(&dir).unwrap();
+    let mut cfg = mock_cfg(parallelism, error_feedback);
+    cfg.agg = AggMode::Tree { nodes };
+    let model = manifest.model("mock").unwrap();
+    // the aggregators' own copy of the world — same pure functions,
+    // separately evaluated, as a real `--role aggregator` process
+    let agg_cfg = cfg.clone();
+    let world = build_world(&agg_cfg, model).unwrap();
+    let ctx = AggregatorCtx {
+        cfg: &agg_cfg,
+        train: &world.train,
+        shards: &world.shards,
+        segments: &model.segments,
+        dim: model.dim,
+        alpha_dim: model.alpha_dim,
+        beta_dim: model.n_act,
+    };
+    let root_hello = hello_for(&cfg, PeerRole::Worker, None);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let rounds = cfg.rounds;
+    let (socket_cfg, opts) = quiet_cfg();
+    thread::scope(|s| {
+        for i in 0..aggs {
+            let (addr, ctx, opts, agg_cfg) =
+                (&addr, &ctx, &opts, &agg_cfg);
+            s.spawn(move || {
+                let exec = MockTransport::new(true);
+                let hello = hello_for(
+                    agg_cfg,
+                    PeerRole::Aggregator,
+                    Some((i as u32, nodes as u32)),
+                );
+                let mut stream = net::connect(
+                    addr,
+                    &hello,
+                    Duration::from_secs(20),
+                )
+                .expect("aggregator handshake");
+                net::serve_upstream(&mut stream, &exec, ctx, opts)
+                    .expect("aggregator serve loop");
+            });
+        }
+        let transport = net::accept_aggregators(
+            listener,
+            aggs,
+            &root_hello,
+            socket_cfg,
+        )
+        .expect("root handshake");
+        let mut server = Server::with_transport(
+            &engine,
+            &manifest,
+            cfg,
+            Box::new(&transport),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for t in 0..rounds {
+            losses.push(server.round(t).unwrap().to_bits());
+        }
+        let trace = Trace::capture(&server, losses);
+        // the backbone byte identity: reported partial accounting ==
+        // the Partial-frame bytes that physically crossed the root's
+        // sockets (exactly once per shard in a clean run)
+        assert_eq!(
+            transport.partial_bytes_received(),
+            trace.comm.partial_bytes,
+            "partial_bytes accounting != actual backbone frame bytes"
+        );
+        assert!(
+            trace.comm.grand_total_bytes()
+                == trace.comm.total_bytes() + trace.comm.partial_bytes,
+            "grand total must layer the backbone on the paper metric"
+        );
+        assert_eq!(transport.requeues(), 0, "clean run re-dispatched");
+        assert_eq!(
+            transport.duplicate_outcomes(),
+            0,
+            "clean run saw duplicate shard replies"
+        );
+        // one poll loop serves the whole backbone, same as workers
+        assert_eq!(
+            transport.transport_threads(),
+            1,
+            "transport spawned per-aggregator threads"
+        );
+        drop(server);
+        transport.shutdown();
+        trace
+    })
+}
+
+/// Strip the backbone-only counters so a networked-tree trace can be
+/// compared against a *flat* run (flat never ships partials; the
+/// paper metric `total_bytes` must still be identical).
+fn flatten(mut t: Trace) -> Trace {
+    t.comm.partial_bytes = 0;
+    t.comm.partial_msgs = 0;
+    t
+}
+
+#[test]
+fn networked_tree_equals_in_process_tree_and_flat() {
+    // the acceptance grid: fan-out {1, 2, 4} x parallelism {1, 4} x
+    // EF {off, on} — networked tree == in-process tree, bitwise, and
+    // (modulo the backbone's own partial_bytes) == flat
+    for ef in [false, true] {
+        for parallelism in [1usize, 4] {
+            let flat = run_mock(parallelism, ef);
+            for nodes in [1usize, 2, 4] {
+                let agg = AggMode::Tree { nodes };
+                let base = run_mock_agg(parallelism, ef, agg);
+                let netd =
+                    run_tree_socket(parallelism, nodes, nodes, ef);
+                assert_eq!(
+                    netd, base,
+                    "networked tree diverged from in-process tree \
+                     at G={nodes} p={parallelism} ef={ef}"
+                );
+                assert_eq!(
+                    flatten(netd),
+                    flat,
+                    "tree backbone changed the model trajectory at \
+                     G={nodes} p={parallelism} ef={ef}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oversubscribed_aggregator_pool_is_bit_identical() {
+    // W < G: four configured shards over two (then one) live
+    // aggregator connections — geometry is configured, not live, so
+    // the unpinned shards ride the least-loaded survivor and the
+    // canonical accumulation is unchanged
+    let base = run_mock_agg(4, false, AggMode::Tree { nodes: 4 });
+    let two = run_tree_socket(4, 4, 2, false);
+    assert_eq!(two, base, "2 aggregators serving 4 shards diverged");
+    let one = run_tree_socket(4, 4, 1, false);
+    assert_eq!(one, base, "1 aggregator serving 4 shards diverged");
+}
+
+#[test]
+fn networked_tree_round_trips_error_feedback_residuals() {
+    // EF residuals ship inside Shard frames and return inside
+    // ShardDone frames; the server's residual store — and therefore
+    // every later round — must end bit-identical to in-process,
+    // including when shards share one connection
+    let base = run_mock_agg(4, true, AggMode::Tree { nodes: 2 });
+    let netd = run_tree_socket(4, 2, 2, true);
+    assert_eq!(netd, base, "EF diverged over the backbone");
+    let shared_conn = run_tree_socket(4, 2, 1, true);
+    assert_eq!(shared_conn, base, "EF diverged on a shared link");
+}

@@ -27,7 +27,8 @@ Frame envelope (16 bytes), followed by ``body``::
     0   magic     4  = b"FP8W"
     4   version   u16 = 2
     6   kind      u8  (1=Hello 2=HelloAck 3=Job 4=Outcome 5=Shutdown
-                       6=Heartbeat 7=HeartbeatAck)
+                       6=Heartbeat 7=HeartbeatAck 8=Partial 9=Shard
+                       10=ShardDone)
     7   flags     u8  = 0 (reserved)
     8   body_len  u32
     12  crc32     u32 (IEEE CRC-32 of body)
@@ -59,6 +60,16 @@ Outcome body (kind=4)::
     round u32, client u32, job_id u32, n_k u64, mean_loss f32,
     has_ef u8, payload block,
     [ef_len u32, ef f32 x ef_len]   # iff has_ef
+
+Partial body (kind=8, the tree-aggregation backbone)::
+
+    round u32, start u64, end u64, width u32, n_fragments u32,
+    then per fragment:
+      frag_start u64, frag_len u64, sums [f64 x width]
+
+The f64 sums travel as raw little-endian bit patterns — a decoded
+partial is bit-identical to the sender's accumulator state, the
+property the tree-vs-flat contract rests on.
 
 Hello body (kind=1)::
 
@@ -107,16 +118,22 @@ VERSION = 2
     KIND_SHUTDOWN,
     KIND_HEARTBEAT,
     KIND_HEARTBEAT_ACK,
-) = 1, 2, 3, 4, 5, 6, 7
+    KIND_PARTIAL,
+    KIND_SHARD,
+    KIND_SHARD_DONE,
+) = 1, 2, 3, 4, 5, 6, 7, 8, 9, 10
 
 FRAME_HEADER_BYTES = 16
 PAYLOAD_TABLE_BYTES = 16
 JOB_META_BYTES = 40
 OUTCOME_META_BYTES = 25
+PARTIAL_META_BYTES = 28
+PARTIAL_RANGE_HEADER_BYTES = 16
 JOB_FRAME_OVERHEAD = FRAME_HEADER_BYTES + JOB_META_BYTES + PAYLOAD_TABLE_BYTES
 OUTCOME_FRAME_OVERHEAD = (
     FRAME_HEADER_BYTES + OUTCOME_META_BYTES + PAYLOAD_TABLE_BYTES
 )
+PARTIAL_FRAME_OVERHEAD = FRAME_HEADER_BYTES + PARTIAL_META_BYTES
 
 
 def f32s(vals):
@@ -175,6 +192,27 @@ def outcome_body(round_, client, job_id, n_k, mean_loss, payload,
 
 def heartbeat_body(nonce):
     return struct.pack("<Q", nonce)
+
+
+def f64s(vals):
+    return b"".join(struct.pack("<d", v) for v in vals)
+
+
+def partial_body(round_, start, end, width, fragments):
+    """``fragments`` is a list of (frag_start, frag_len, sums) with
+    ``len(sums) == width``; sums are f64 bit patterns on the wire."""
+    body = struct.pack(
+        "<IQQII", round_, start, end, width, len(fragments)
+    )
+    assert len(body) == PARTIAL_META_BYTES
+    for s, l, sums in fragments:
+        assert len(sums) == width
+        body += struct.pack("<QQ", s, l) + f64s(sums)
+    return body
+
+
+def partial_wire_bytes(width, n_fragments):
+    return n_fragments * (PARTIAL_RANGE_HEADER_BYTES + 8 * width)
 
 
 # ---- frozen v1 mirror (version-skew fixture) -------------------------
@@ -481,10 +519,21 @@ CANON_DOWN = (range(16), [1.0, -2.5, 0.375], [1.0, 0.5], [2.0])
 CANON_UP = ([0xFF, 0x80, 0x07], [], [1.5], [])
 CANON_JOB_ID = 2
 CANON_NONCE = 0x0000BEA7_0000BEA7
+# canonical mid-tier partial: cohort positions [2, 4), width-3
+# accumulator, two fragments; every sum is an exactly-representable
+# short binary fraction, so the f64 bit patterns are parser-stable
+CANON_PARTIAL = dict(
+    round_=3, start=2, end=4, width=3,
+    fragments=[
+        (0, 2, [1.5, -0.25, 8.0]),
+        (2, 1, [0.0625, -2.0, 128.0]),
+    ],
+)
 
 
 def golden_frames():
-    """The v2 golden stream: Job, Outcome, Heartbeat, HeartbeatAck."""
+    """The v2 golden stream: Job, Outcome, Heartbeat, HeartbeatAck,
+    Partial."""
     job = frame(
         KIND_JOB,
         job_body(
@@ -504,7 +553,8 @@ def golden_frames():
     heartbeat_ack = frame(
         KIND_HEARTBEAT_ACK, heartbeat_body(CANON_NONCE)
     )
-    return job, outcome, heartbeat, heartbeat_ack
+    partial = frame(KIND_PARTIAL, partial_body(**CANON_PARTIAL))
+    return job, outcome, heartbeat, heartbeat_ack, partial
 
 
 def golden_frames_v1():
@@ -536,7 +586,7 @@ def main():
     )
     os.makedirs(fixtures, exist_ok=True)
 
-    job, outcome, heartbeat, heartbeat_ack = golden_frames()
+    job, outcome, heartbeat, heartbeat_ack, partial = golden_frames()
     # overhead identities the Rust accounting constants rely on
     assert len(job) == wire_bytes(*CANON_DOWN) + JOB_FRAME_OVERHEAD
     assert (
@@ -544,15 +594,24 @@ def main():
         == wire_bytes(*CANON_UP) + OUTCOME_FRAME_OVERHEAD + 4 + 4 * 2
     )
     assert len(heartbeat) == FRAME_HEADER_BYTES + 8
+    # the backbone identity CommStats::record_partial charges by
+    assert len(partial) == (
+        partial_wire_bytes(
+            CANON_PARTIAL["width"], len(CANON_PARTIAL["fragments"])
+        )
+        + PARTIAL_FRAME_OVERHEAD
+    )
     out = os.path.join(fixtures, "wire_v2.bin")
-    stream = job + outcome + heartbeat + heartbeat_ack
+    stream = job + outcome + heartbeat + heartbeat_ack + partial
     with open(out, "wb") as f:
         f.write(stream)
     print(f"wrote {out}: job {len(job)} B + outcome {len(outcome)} B "
-          f"+ 2 heartbeat frames = {len(stream)} B")
+          f"+ 2 heartbeat frames + partial {len(partial)} B "
+          f"= {len(stream)} B")
     print("job      :", job.hex())
     print("outcome  :", outcome.hex())
     print("heartbeat:", heartbeat.hex())
+    print("partial  :", partial.hex())
 
     job1, outcome1 = golden_frames_v1()
     assert len(job1) == wire_bytes(*CANON_DOWN) + V1_JOB_FRAME_OVERHEAD
